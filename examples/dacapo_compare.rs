@@ -1,0 +1,80 @@
+//! Ours vs Dacapo, side by side: the paper's headline comparison as a
+//! runnable program — iso-peak-throughput latency, energy, and memory
+//! for the pusher training loop, plus budgeted-training outcomes.
+//!
+//! ```bash
+//! cargo run --release --example dacapo_compare
+//! ```
+
+use mxscale::energy::{calib, EnergyModel};
+use mxscale::gemmcore::memory::{footprint_dacapo, footprint_ours, MlpShape};
+use mxscale::gemmcore::schedule::{train_step_cycles, PUSHER_DIMS};
+use mxscale::mx::dacapo::DacapoFormat;
+use mxscale::mx::element::ElementFormat;
+use mxscale::pearray::SystolicArray;
+use mxscale::trainer::budget::{train_with_budget, Budget};
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::TrainConfig;
+use mxscale::workloads::{by_name, Dataset};
+
+fn main() {
+    let shape = MlpShape::pusher();
+    let model = EnergyModel::proposed();
+    let arr = SystolicArray::dacapo();
+
+    println!("ours (4x16 square-block GeMM core) vs Dacapo (64x64 systolic), 4096 MACs @500MHz\n");
+    println!("  area: {:.2} vs {:.2} mm2 ({:.1}% reduction)",
+        calib::CORE_AREA_MM2, calib::DACAPO_AREA_MM2,
+        100.0 * (1.0 - calib::CORE_AREA_MM2 / calib::DACAPO_AREA_MM2));
+    let ours_mem = footprint_ours(&shape, 32, ElementFormat::Int8).total();
+    let dac_mem = footprint_dacapo(&shape, 32, DacapoFormat::Mx9).total();
+    println!("  memory: {ours_mem:.1} vs {dac_mem:.1} KB ({:.0}% reduction)",
+        100.0 * (1.0 - ours_mem / dac_mem));
+
+    println!("\n  pusher train step (batch 32):");
+    println!("  {:<24} {:>10} {:>10} {:>9}", "mode pair", "ours [us]", "dacapo", "speedup");
+    for (fmt, dfmt) in [
+        (ElementFormat::Int8, DacapoFormat::Mx9),
+        (ElementFormat::E4M3, DacapoFormat::Mx6),
+        (ElementFormat::E2M1, DacapoFormat::Mx4),
+    ] {
+        let ours = train_step_cycles(32, &PUSHER_DIMS, fmt).micros(500.0);
+        let dac = arr.train_step_cycles(32, &PUSHER_DIMS, dfmt).micros(500.0);
+        println!(
+            "  {:<24} {:>10.2} {:>10.2} {:>8.1}x",
+            format!("{} vs {}", fmt.name(), dfmt.name()),
+            ours,
+            dac,
+            dac / ours
+        );
+        let e_ours = model.core_pj_per_op(fmt);
+        let e_dac = calib::dacapo_pj_per_op(dfmt);
+        println!(
+            "  {:<24} {:>10.2} {:>10.2} {:>8.2}x   (pJ/OP)",
+            "", e_ours, e_dac, e_ours / e_dac
+        );
+    }
+
+    println!("\n  1000 us budget on pusher (who learns more?):");
+    let env = by_name("pusher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 20, 80, 0xC0);
+    for scheme in [
+        QuantScheme::MxSquare(ElementFormat::E4M3),
+        QuantScheme::Dacapo(DacapoFormat::Mx6),
+    ] {
+        let curve = train_with_budget(
+            ds.clone(),
+            scheme,
+            Budget::TimeMicros(1000.0),
+            4,
+            TrainConfig { eval_every: usize::MAX, ..Default::default() },
+        );
+        let last = curve.last().unwrap();
+        println!(
+            "    {:<12} {:>4} steps -> val loss {:.5}",
+            scheme.name(),
+            last.steps,
+            last.val_loss
+        );
+    }
+}

@@ -1,0 +1,56 @@
+//! Precision sweep: train one workload under every MX format (and FP32)
+//! on the native golden path, reporting the accuracy/energy tradeoff —
+//! the per-workload slice of the paper's Fig. 2 finding that different
+//! robotics tasks prefer different MX precisions.
+//!
+//! ```bash
+//! cargo run --release --example precision_sweep -- [workload] [steps]
+//! ```
+
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::trainer::budget::step_cost;
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::{TrainConfig, TrainSession};
+use mxscale::workloads::{by_name, Dataset};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workload = args.first().map(|s| s.as_str()).unwrap_or("reacher").to_string();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+
+    let env = by_name(&workload).unwrap_or_else(|| {
+        eprintln!("unknown workload {workload}; using reacher");
+        by_name("reacher").unwrap()
+    });
+    let ds = Dataset::collect(env.as_ref(), 30, 100, 0x5EEE);
+    println!("precision sweep on {workload} ({} steps, batch 32):\n", steps);
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>14}",
+        "scheme", "val loss", "us/step", "uJ/step", "uJ to finish"
+    );
+    let schemes: Vec<QuantScheme> = std::iter::once(QuantScheme::Fp32)
+        .chain(ALL_ELEMENT_FORMATS.into_iter().map(QuantScheme::MxSquare))
+        .collect();
+    let mut best = (String::new(), f64::INFINITY);
+    for scheme in schemes {
+        let mut s = TrainSession::new(
+            ds.clone(),
+            TrainConfig { scheme, steps, eval_every: steps, ..Default::default() },
+        );
+        s.run();
+        let v = s.val_loss();
+        let cost = step_cost(scheme, 32);
+        println!(
+            "{:<10} {:>12.5} {:>12.2} {:>12.2} {:>14.1}",
+            scheme.name(),
+            v,
+            cost.micros,
+            cost.microjoules,
+            cost.microjoules * steps as f64
+        );
+        if scheme != QuantScheme::Fp32 && v < best.1 {
+            best = (scheme.name(), v);
+        }
+    }
+    println!("\nbest MX format for {workload}: {} (val {:.5})", best.0, best.1);
+}

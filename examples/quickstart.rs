@@ -1,0 +1,64 @@
+//! Quickstart: quantize a matrix into MX formats, run a GeMM through the
+//! bit-exact PE-array simulator, and inspect accuracy/cost tradeoffs.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use mxscale::arith::MacVariant;
+use mxscale::energy::EnergyModel;
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::pearray::PeArray;
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+
+fn main() {
+    let mut rng = Pcg64::new(42);
+    let a = Mat::randn(32, 64, 1.0, &mut rng);
+    let b = Mat::randn(64, 32, 1.0, &mut rng);
+    let exact = a.matmul(&b);
+    let model = EnergyModel::proposed();
+
+    println!("GeMM 32x64x32 through the square-block PE array, all six MX formats:\n");
+    println!(
+        "{:<14} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "format", "bits/elem", "rel-rms-err", "cycles", "pJ (model)", "pJ/OP"
+    );
+    for fmt in ALL_ELEMENT_FORMATS {
+        let mut pe = PeArray::new(fmt, MacVariant::ExtMantissaBypass);
+        let out = pe.gemm(&a, &b);
+        let err = out.mse(&exact).sqrt() / (exact.fro_norm() as f64 / (exact.data.len() as f64).sqrt());
+        let ev = pe.events();
+        let pj = model.run_pj(fmt, &ev);
+        println!(
+            "{:<14} {:>10.3} {:>12.5} {:>12} {:>12.1} {:>12.3}",
+            fmt.display(),
+            mxscale::mx::MxFormat::square(fmt).bits_per_element(),
+            err,
+            pe.cycles,
+            pj,
+            pj / ev.mul_ops as f64,
+        );
+    }
+
+    // The storage trick: a quantized weight and its transpose share bits.
+    println!("\nSquare-block transpose reuse (the paper's storage contribution):");
+    let w = Mat::randn(16, 16, 1.0, &mut rng);
+    let qw = MxTensor::quantize(&w, ElementFormat::Int8, Layout::Square8x8);
+    let qwt = qw.transpose().unwrap();
+    let roundtrip = qwt.dequantize().transpose();
+    assert_eq!(roundtrip.data, qw.dequantize().data);
+    println!(
+        "  quantize(W) stores {:.2} KiB; transpose needs 0 extra bytes (bit-identical: {})",
+        qw.storage_kib(),
+        roundtrip.data == qw.dequantize().data
+    );
+    let qv = MxTensor::quantize(&w, ElementFormat::Int8, Layout::Vector32);
+    println!(
+        "  vector-grouped layout would store {:.2} KiB twice (W and Wt) = {:.2} KiB",
+        qv.storage_kib(),
+        2.0 * qv.storage_kib()
+    );
+}

@@ -1,0 +1,103 @@
+"""AOT compilation: lower the L2 train/eval graphs to HLO text artifacts.
+
+Emits, for every scheme in ``model.SCHEMES``::
+
+    artifacts/train_step_<scheme>_b<B>.hlo.txt
+    artifacts/eval_<scheme>_b<B>.hlo.txt
+
+plus ``artifacts/manifest.txt`` describing shapes and the state layout
+for the Rust runtime (a simple ``key value`` line format — no JSON
+dependency on the Rust side).
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md).
+
+Python runs only here, at build time (`make artifacts`); the emitted
+artifacts are all the Rust binary needs.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def state_specs():
+    key = jax.random.PRNGKey(0)
+    return tuple(
+        jax.ShapeDtypeStruct(s.shape, s.dtype) for s in model.init_state(key)
+    )
+
+
+def lower_train(fmt: str, batch: int, lr: float):
+    fn = functools.partial(model.train_step, fmt=fmt, lr=lr)
+    x = jax.ShapeDtypeStruct((batch, model.DIMS[0]), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch, model.DIMS[-1]), jnp.float32)
+    return jax.jit(lambda s, xx, yy: fn(s, xx, yy)).lower(state_specs(), x, y)
+
+
+def lower_eval(fmt: str, batch: int):
+    fn = functools.partial(model.eval_loss, fmt=fmt)
+    x = jax.ShapeDtypeStruct((batch, model.DIMS[0]), jnp.float32)
+    y = jax.ShapeDtypeStruct((batch, model.DIMS[-1]), jnp.float32)
+    # keep_unused: the eval graph ignores the Adam moments, but the Rust
+    # runtime passes the full state tuple — keep the parameters in place
+    return jax.jit(lambda s, xx, yy: fn(s, xx, yy), keep_unused=True).lower(
+        state_specs(), x, y
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--eval-batch", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--schemes", nargs="*", default=list(model.SCHEMES))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = [
+        f"dims {' '.join(str(d) for d in model.DIMS)}",
+        f"batch {args.batch}",
+        f"eval_batch {args.eval_batch}",
+        f"lr {args.lr}",
+        f"state_len {model.STATE_LEN}",
+        "state_layout step then per-layer w,b,mw,vw,mb,vb",
+        "train_io inputs=state,x,y outputs=loss,state",
+        "eval_io inputs=state,x,y outputs=loss",
+    ]
+    for fmt in args.schemes:
+        t = to_hlo_text(lower_train(fmt, args.batch, args.lr))
+        path = os.path.join(args.out_dir, f"train_step_{fmt}_b{args.batch}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(t)
+        e = to_hlo_text(lower_eval(fmt, args.eval_batch))
+        epath = os.path.join(args.out_dir, f"eval_{fmt}_b{args.eval_batch}.hlo.txt")
+        with open(epath, "w") as f:
+            f.write(e)
+        manifest.append(f"train {fmt} {os.path.basename(path)}")
+        manifest.append(f"eval {fmt} {os.path.basename(epath)}")
+        print(f"{fmt}: {len(t)} + {len(e)} chars")
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {2 * len(args.schemes)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Layer-1 Pallas kernels: MX square-block quantization and blocked GeMM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's 8x8
+square shared-exponent blocks map directly onto Pallas ``BlockSpec``
+tiles — the per-tile max-reduce is the hardware's "largest power of two
+in the block" scan, the power-of-two scale keeps the MXU fed with plain
+f32/bf16 mantissa math, and the GeMM kernel's K-loop accumulates into the
+output tile pinned in VMEM before a single writeback (the GeMM core's
+output-stationary schedule with requantization on the way out).
+
+All kernels run with ``interpret=True``: on this CPU PJRT stack a real
+TPU lowering would emit Mosaic custom-calls the runtime cannot execute
+(see /opt/xla-example/README.md); interpret mode lowers to plain HLO so
+the AOT artifacts are executable anywhere, numerics identical.
+
+TPU sizing estimate (for DESIGN.md §Perf): the quantize kernel holds one
+(8 x n) f32 band in VMEM (n=256: 8 KiB) plus per-block maxima; the GeMM
+kernel holds (bm, bk) + (bk, bn) + (bm, bn) f32 tiles (default 32x32 +
+32x128 + 32x128 = 36 KiB) — far inside a TensorCore's VMEM, leaving room
+for double-buffered HBM prefetch across the K loop.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+SQ = 8  # square-block edge
+
+
+def _quant_kernel(x_ref, o_ref, *, fmt: str):
+    """Quantize-dequantize one row-band of 8x8 blocks.
+
+    The tile is (8, n): a horizontal band of square blocks. Each 8x8
+    block derives its own shared exponent (two OCP 32-groups worth).
+    """
+    x = x_ref[...]
+    n = x.shape[1]
+    blocks = x.reshape(SQ, n // SQ, SQ).swapaxes(0, 1)  # [nb, 8, 8]
+    bmax = jnp.max(jnp.abs(blocks), axis=(1, 2), keepdims=True)
+    scale = ref._pow2(ref.shared_exponent(bmax, fmt))
+    q = ref.quant_element(blocks / scale, fmt) * scale
+    o_ref[...] = q.swapaxes(0, 1).reshape(SQ, n)
+
+
+def mx_quant_square(x, fmt: str):
+    """Pallas square-block fake-quantization of an [m, n] f32 matrix."""
+    m, n = x.shape
+    assert m % SQ == 0 and n % SQ == 0, (m, n)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, fmt=fmt),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // SQ,),
+        in_specs=[pl.BlockSpec((SQ, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((SQ, n), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """Output-stationary blocked GeMM.
+
+    The output tile stays pinned across the sequential K grid dimension
+    (output-stationary, like the PE array's accumulators); each step adds
+    one (bm, bk) x (bk, bn) product with f32 accumulation.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    del k_steps  # shape bookkeeping only
+
+
+def gemm_f32(x, w, bm: int = 32, bn: int = 128, bk: int = 32):
+    """Blocked f32 GeMM through the Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    k_steps = k // bk
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+def mx_gemm(x, w, fmt: str):
+    """Quantized GeMM: square-quantize operands (Pallas), then the blocked
+    matmul with f32 accumulation (the PE-array semantics)."""
+    return gemm_f32(mx_quant_square(x, fmt), mx_quant_square(w, fmt))

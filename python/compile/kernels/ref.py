@@ -1,0 +1,116 @@
+"""Pure-jnp oracle for MX quantization (the L1 correctness reference).
+
+Semantics mirror the Rust codecs in ``rust/src/mx`` bit-for-bit on the
+values they produce:
+
+* shared exponent ``X = 2^(floor(log2(max|block|)) - emax_elem)``,
+  clamped to E8M0's [-127, 127]; all-zero blocks take the minimum scale;
+* elements encode with round-to-nearest-even on the mantissa grid,
+  saturating at the format's max magnitude, subnormals included;
+* MXINT8 elements are 1/64-step fixed point saturating at +-127/64.
+
+Block groupings: 8x8 squares (ours) or 32-wide row vectors (OCP).
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+SCALE_EMIN = -127.0
+SCALE_EMAX = 127.0
+
+
+@dataclass(frozen=True)
+class FpFormat:
+    name: str
+    exp_bits: int
+    mant_bits: int
+    bias: int
+    emax: int          # largest power-of-two exponent (OCP emax)
+    max_value: float   # saturation magnitude
+
+
+E5M2 = FpFormat("e5m2", 5, 2, 15, 15, 57344.0)
+E4M3 = FpFormat("e4m3", 4, 3, 7, 8, 448.0)
+E3M2 = FpFormat("e3m2", 3, 2, 3, 4, 28.0)
+E2M3 = FpFormat("e2m3", 2, 3, 1, 2, 7.5)
+E2M1 = FpFormat("e2m1", 2, 1, 1, 2, 6.0)
+
+FP_FORMATS = {f.name: f for f in (E5M2, E4M3, E3M2, E2M3, E2M1)}
+ALL_FORMATS = ("int8",) + tuple(FP_FORMATS)
+
+
+def format_emax(fmt: str) -> int:
+    return 0 if fmt == "int8" else FP_FORMATS[fmt].emax
+
+
+def _pow2(e):
+    """Exact 2^e for integer-valued float exponents (XLA's exp2 lowers
+    through exp() and is off by ulps — ldexp is exact). Floored at -126:
+    XLA's ldexp flushes subnormal results to 0, and a zero scale would
+    turn empty blocks into NaN (0/0). 2^-126 is the smallest *normal*
+    f32 scale; blocks that tiny quantize to zero either way."""
+    e = jnp.maximum(e, -126.0)
+    return jnp.ldexp(jnp.ones_like(e, dtype=jnp.float32), e.astype(jnp.int32))
+
+
+def _floor_log2(x):
+    # floor(log2 x) for x > 0, exact on powers of two (frexp-based)
+    _, e = jnp.frexp(x)
+    return e.astype(jnp.float32) - 1.0
+
+
+def shared_exponent(block_max, fmt: str):
+    """Shared scale exponent for a block max (array ok). Zero-max -> min."""
+    safe = jnp.where(block_max > 0, block_max, 1.0)
+    e = _floor_log2(safe) - format_emax(fmt)
+    e = jnp.clip(e, SCALE_EMIN, SCALE_EMAX)
+    return jnp.where(block_max > 0, e, SCALE_EMIN)
+
+
+def quant_element(v, fmt: str):
+    """Fake-quantize scale-divided values onto the element grid (RNE)."""
+    if fmt == "int8":
+        q = jnp.round(v * 64.0)  # jnp.round is round-half-to-even
+        return jnp.clip(q, -127.0, 127.0) / 64.0
+    f = FP_FORMATS[fmt]
+    emin = 1 - f.bias
+    a = jnp.abs(v)
+    sign = jnp.sign(v)
+    # exponent of the quantization step; subnormals clamp to emin
+    e = jnp.maximum(_floor_log2(jnp.where(a > 0, a, 1.0)), float(emin))
+    step = _pow2(e - f.mant_bits)
+    q = jnp.round(a / step) * step
+    q = jnp.minimum(q, f.max_value)
+    return jnp.where(a > 0, sign * q, 0.0 * v)
+
+
+def fake_quant_square(x, fmt: str):
+    """Fake-quantize [m, n] through 8x8 square shared-exponent blocks.
+
+    m and n must be multiples of 8 (the model pads its dims already).
+    """
+    m, n = x.shape
+    assert m % 8 == 0 and n % 8 == 0, (m, n)
+    blocks = x.reshape(m // 8, 8, n // 8, 8)
+    bmax = jnp.max(jnp.abs(blocks), axis=(1, 3), keepdims=True)
+    scale = _pow2(shared_exponent(bmax, fmt))
+    q = quant_element(blocks / scale, fmt) * scale
+    return q.reshape(m, n)
+
+
+def fake_quant_vector(x, fmt: str, block: int = 32):
+    """Fake-quantize [m, n] through `block`-wide row-vector groups."""
+    m, n = x.shape
+    assert n % block == 0, (n, block)
+    rows = x.reshape(m, n // block, block)
+    bmax = jnp.max(jnp.abs(rows), axis=2, keepdims=True)
+    scale = _pow2(shared_exponent(bmax, fmt))
+    q = quant_element(rows / scale, fmt) * scale
+    return q.reshape(m, n)
+
+
+def mx_matmul_ref(x, w, fmt: str):
+    """Reference quantized GeMM: square-quantize both operands, matmul
+    with f32 accumulation (what the PE array computes)."""
+    return fake_quant_square(x, fmt) @ fake_quant_square(w, fmt)

@@ -1,0 +1,159 @@
+"""Layer-2 JAX model: the dynamics MLP's quantization-aware train step.
+
+The paper's 4-layer MLP (32-256-256-256-32, ReLU, MSE on delta-states)
+with MX fake-quantization at the Fig. 5 cut points:
+
+* weights and activations quantize (through the L1 Pallas kernel) before
+  every GeMM, with straight-through gradient estimation;
+* backprop errors quantize on the way down via a custom-VJP hook placed
+  on each layer's pre-activation (the cotangent is what the paper's E
+  tensors are).
+
+Adam runs on FP32 master weights. ``train_step``/``eval_loss`` are pure
+functions over a flat state tuple so ``aot.py`` can lower them once per
+format and the Rust runtime can thread the state through PJRT without
+any Python at training time.
+
+State layout (all f32):
+    state = (step[1],
+             w0, b0, mw0, vw0, mb0, vb0,
+             ...                      (one group of 6 per layer)
+             w3, b3, mw3, vw3, mb3, vb3)
+train_step(state, x, y) -> (loss[1], new_state...)
+eval_loss(state, x, y) -> loss[1]
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mx_kernels, ref
+
+DIMS = (32, 256, 256, 256, 32)
+N_LAYERS = len(DIMS) - 1
+GROUP = 6  # w, b, mw, vw, mb, vb per layer
+STATE_LEN = 1 + GROUP * N_LAYERS
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+SCHEMES = ("fp32", "int8", "e5m2", "e4m3", "e3m2", "e2m3", "e2m1")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _fq(x, fmt):
+    """Forward fake-quantization (Pallas kernel) with a straight-through
+    gradient (custom VJP hides the pallas_call from autodiff)."""
+    if fmt == "fp32":
+        return x
+    return mx_kernels.mx_quant_square(x, fmt)
+
+
+def _fq_fwd(x, fmt):
+    return _fq(x, fmt), None
+
+
+def _fq_bwd(fmt, _res, g):
+    return (g,)  # straight-through estimator
+
+
+_fq.defvjp(_fq_fwd, _fq_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _quant_cotangent(x, fmt):
+    """Identity in the forward pass; quantizes the *gradient* flowing
+    back through it (the paper's quantized error tensors E)."""
+    return x
+
+
+def _qc_fwd(x, fmt):
+    return x, None
+
+
+def _qc_bwd(fmt, _res, g):
+    if fmt == "fp32":
+        return (g,)
+    # errors are (B, dout) with dout in {256, 32}: square-block quantize
+    return (ref.fake_quant_square(g, fmt),)
+
+
+_quant_cotangent.defvjp(_qc_fwd, _qc_bwd)
+
+
+def init_params(key):
+    """He-initialized parameter pytree (list of (w, b))."""
+    params = []
+    for i in range(N_LAYERS):
+        key, sub = jax.random.split(key)
+        sigma = (2.0 / DIMS[i]) ** 0.5
+        w = jax.random.normal(sub, (DIMS[i], DIMS[i + 1]), jnp.float32) * sigma
+        params.append((w, jnp.zeros((DIMS[i + 1],), jnp.float32)))
+    return params
+
+
+def init_state(key):
+    """Flat state tuple for step 0."""
+    state = [jnp.zeros((1,), jnp.float32)]
+    for w, b in init_params(key):
+        state += [w, b, jnp.zeros_like(w), jnp.zeros_like(w), jnp.zeros_like(b), jnp.zeros_like(b)]
+    return tuple(state)
+
+
+def forward(params, x, fmt):
+    """Quantized forward pass; returns the network output."""
+    a = x
+    for i, (w, b) in enumerate(params):
+        aq = _fq(a, fmt)
+        wq = _fq(w, fmt)
+        z = aq @ wq + b
+        z = _quant_cotangent(z, fmt)  # quantize the backprop error here
+        a = jax.nn.relu(z) if i + 1 < N_LAYERS else z
+    return a
+
+
+def mse(out, y):
+    return jnp.mean((out - y) ** 2)
+
+
+def _unpack(state):
+    step = state[0]
+    layers = []
+    for i in range(N_LAYERS):
+        g = state[1 + GROUP * i : 1 + GROUP * (i + 1)]
+        layers.append(g)
+    return step, layers
+
+
+def train_step(state, x, y, *, fmt: str, lr: float = 1e-3):
+    """One QAT train step. Returns (loss[1], *new_state)."""
+    step, layers = _unpack(state)
+    params = [(g[0], g[1]) for g in layers]
+
+    def loss_fn(params):
+        return mse(forward(params, x, fmt), y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    t = step[0] + 1.0
+    bc1 = 1.0 - ADAM_B1**t
+    bc2 = 1.0 - ADAM_B2**t
+    new_state = [step + 1.0]
+    for (w, b), (gw, gb), g in zip(params, grads, layers):
+        _, _, mw, vw, mb, vb = g
+        mw = ADAM_B1 * mw + (1 - ADAM_B1) * gw
+        vw = ADAM_B2 * vw + (1 - ADAM_B2) * gw * gw
+        mb = ADAM_B1 * mb + (1 - ADAM_B1) * gb
+        vb = ADAM_B2 * vb + (1 - ADAM_B2) * gb * gb
+        w = w - lr * (mw / bc1) / (jnp.sqrt(vw / bc2) + ADAM_EPS)
+        b = b - lr * (mb / bc1) / (jnp.sqrt(vb / bc2) + ADAM_EPS)
+        new_state += [w, b, mw, vw, mb, vb]
+    return (jnp.reshape(loss, (1,)), *new_state)
+
+
+def eval_loss(state, x, y, *, fmt: str):
+    """Quantized validation loss. Returns loss[1]."""
+    _, layers = _unpack(state)
+    params = [(g[0], g[1]) for g in layers]
+    return (jnp.reshape(mse(forward(params, x, fmt), y), (1,)),)

@@ -1,0 +1,122 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle, and the
+oracle vs hand-computed MX semantics. Hypothesis sweeps shapes and
+formats (the prompt-level contract for this layer)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import mx_kernels as mk
+from compile.kernels import ref
+
+FORMATS = list(ref.ALL_FORMATS)
+
+
+# ---------- oracle semantics ----------
+
+
+def test_shared_exponent_matches_spec_examples():
+    # max 1.0 under e4m3 (emax 8) -> 2^-8
+    assert float(ref.shared_exponent(jnp.asarray(1.0), "e4m3")) == -8.0
+    # int8: emax 0 -> floor(log2 max)
+    assert float(ref.shared_exponent(jnp.asarray(3.9), "int8")) == 1.0
+    # zero block -> min scale
+    assert float(ref.shared_exponent(jnp.asarray(0.0), "e2m1")) == ref.SCALE_EMIN
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_powers_of_two_roundtrip(fmt):
+    x = jnp.asarray([[1.0, 0.5, -0.25, 0.125] * 8] * 8, jnp.float32)
+    q = ref.fake_quant_square(x, fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(x))
+
+
+@pytest.mark.parametrize(
+    "fmt,maxv",
+    [("e5m2", 57344.0), ("e4m3", 448.0), ("e3m2", 28.0), ("e2m3", 7.5), ("e2m1", 6.0)],
+)
+def test_element_saturation(fmt, maxv):
+    # values >> max saturate at max (relative to the block scale of 1.0
+    # when the block max is exactly at the format boundary)
+    v = jnp.full((8, 8), maxv, jnp.float32)
+    q = ref.fake_quant_square(v, fmt)
+    np.testing.assert_allclose(np.asarray(q), maxv)
+
+
+def test_e2m1_grid_values():
+    # E2M1 representables (pos): 0, .5, 1, 1.5, 2, 3, 4, 6 — a block with
+    # max 6 has scale 1 and must quantize exactly onto that grid
+    x = np.zeros((8, 8), np.float32)
+    vals = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    x[0, :] = vals
+    q = np.asarray(ref.fake_quant_square(jnp.asarray(x), "e2m1"))
+    np.testing.assert_array_equal(q[0, :], vals)
+    # midpoint 2.5 ties to even (2.0 mantissa code is even -> 2.0)
+    x[0, 0] = 2.5
+    q = np.asarray(ref.fake_quant_square(jnp.asarray(x), "e2m1"))
+    assert q[0, 0] in (2.0, 3.0)
+
+
+# ---------- pallas kernel vs oracle ----------
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_pallas_quant_matches_oracle(fmt):
+    rng = np.random.default_rng(hash(fmt) % 2**32)
+    x = (rng.normal(size=(32, 64)) * 4.0).astype(np.float32)
+    a = np.asarray(mk.mx_quant_square(jnp.asarray(x), fmt))
+    b = np.asarray(ref.fake_quant_square(jnp.asarray(x), fmt))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    fmt=st.sampled_from(FORMATS),
+    mb=st.integers(1, 6),
+    nb=st.integers(1, 6),
+    scale_pow=st.integers(-20, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_quant_matches_oracle_hypothesis(fmt, mb, nb, scale_pow, seed):
+    """Shape x format x dynamic-range sweep: kernel == oracle exactly."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(8 * mb, 8 * nb)) * 2.0**scale_pow).astype(np.float32)
+    a = np.asarray(mk.mx_quant_square(jnp.asarray(x), fmt))
+    b = np.asarray(ref.fake_quant_square(jnp.asarray(x), fmt))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    fmt=st.sampled_from(["int8", "e4m3", "e2m1"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pallas_gemm_matches_reference(fmt, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(32, 64)).astype(np.float32)
+    w = rng.normal(size=(64, 128)).astype(np.float32)
+    g = np.asarray(mk.mx_gemm(jnp.asarray(x), jnp.asarray(w), fmt))
+    r = np.asarray(ref.mx_matmul_ref(jnp.asarray(x), jnp.asarray(w), fmt))
+    np.testing.assert_allclose(g, r, rtol=1e-6, atol=1e-6)
+
+
+def test_gemm_f32_is_exact_blocked_matmul():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(64, 96)).astype(np.float32)
+    w = rng.normal(size=(96, 128)).astype(np.float32)
+    g = np.asarray(mk.gemm_f32(jnp.asarray(x), jnp.asarray(w), bm=32, bn=128, bk=32))
+    np.testing.assert_allclose(g, x @ w, rtol=1e-5, atol=1e-5)
+
+
+def test_quant_error_ordering():
+    # finer formats quantize a gaussian matrix strictly better
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    errs = {}
+    for fmt in FORMATS:
+        q = ref.fake_quant_square(x, fmt)
+        errs[fmt] = float(jnp.mean((q - x) ** 2))
+    assert errs["int8"] < errs["e2m3"] < errs["e2m1"]
+    assert errs["e4m3"] < errs["e5m2"]  # more mantissa on same data
+    assert errs["e2m1"] < 1.0

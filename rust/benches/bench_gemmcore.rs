@@ -1,0 +1,46 @@
+//! Bench: GeMM-core schedule + training-step simulation (Table IV
+//! substrate) and the golden QAT step (Fig. 2 substrate).
+
+use mxscale::gemmcore::schedule::{train_step_cycles, PUSHER_DIMS};
+use mxscale::mx::element::ElementFormat;
+use mxscale::trainer::mlp::{Mlp, MLP_DIMS};
+use mxscale::trainer::qat::{qat_step, QuantScheme};
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    // schedule computation itself (pure arithmetic, should be ~ns)
+    let t = Instant::now();
+    let reps = 100_000;
+    for _ in 0..reps {
+        std::hint::black_box(train_step_cycles(32, &PUSHER_DIMS, ElementFormat::Int8));
+    }
+    println!(
+        "schedule/train_step_cycles  {:>10.0} evals/s",
+        reps as f64 / t.elapsed().as_secs_f64()
+    );
+
+    // golden QAT step (native Fig. 2 path)
+    let mut rng = Pcg64::new(4);
+    let mut mlp = Mlp::new(&MLP_DIMS, &mut rng);
+    let x = Mat::randn(32, 32, 1.0, &mut rng);
+    let y = Mat::randn(32, 32, 0.5, &mut rng);
+    for scheme in [
+        QuantScheme::Fp32,
+        QuantScheme::MxSquare(ElementFormat::Int8),
+        QuantScheme::MxSquare(ElementFormat::E4M3),
+    ] {
+        qat_step(&mut mlp, &x, &y, scheme, 1e-3); // warm
+        let reps = 20;
+        let t = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(qat_step(&mut mlp, &x, &y, scheme, 1e-3));
+        }
+        println!(
+            "qat_step/{:<10} {:>8.2} ms/step",
+            scheme.name(),
+            t.elapsed().as_secs_f64() * 1e3 / reps as f64
+        );
+    }
+}

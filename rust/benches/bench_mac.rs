@@ -1,0 +1,59 @@
+//! Bench: MAC-unit simulation throughput per mode (Table II substrate).
+//! Hand-rolled harness (criterion unavailable offline).
+
+use mxscale::arith::{MacUnit, MacVariant, Mode};
+use mxscale::util::rng::Pcg64;
+use std::time::Instant;
+
+fn bench(name: &str, mut f: impl FnMut() -> u64) {
+    // warmup + 3 timed reps, report best
+    f();
+    let mut best = f64::INFINITY;
+    let mut ops = 0;
+    for _ in 0..3 {
+        let t = Instant::now();
+        ops = f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    println!(
+        "{name:<28} {:>12.0} ops/s   ({ops} ops in {best:.4}s)",
+        ops as f64 / best
+    );
+}
+
+fn main() {
+    let n = 200_000usize;
+    let mut rng = Pcg64::new(1);
+    let a: Vec<i8> = (0..n).map(|_| rng.int_range(-127, 127) as i8).collect();
+    let b: Vec<i8> = (0..n).map(|_| rng.int_range(-127, 127) as i8).collect();
+    bench("mac/int8 cycle", || {
+        let mut mac = MacUnit::new(Mode::Int8, MacVariant::ExtMantissaBypass);
+        for i in 0..n {
+            mac.cycle_int8(a[i], b[i], -12);
+        }
+        std::hint::black_box(mac.acc());
+        n as u64
+    });
+    let codes: Vec<(u8, u8)> = (0..n).map(|_| (rng.bits(8) as u8 & 0x7b, rng.bits(8) as u8 & 0x7b)).collect();
+    bench("mac/fp8 cycle (4 ops)", || {
+        let mut mac = MacUnit::new(Mode::Fp8Fp6, MacVariant::ExtMantissaBypass);
+        for c in codes.chunks_exact(4) {
+            mac.cycle_fp86(
+                mxscale::mx::element::ElementFormat::E4M3,
+                &[c[0], c[1], c[2], c[3]],
+                0,
+            );
+        }
+        std::hint::black_box(mac.acc());
+        n as u64
+    });
+    let codes4: Vec<(u8, u8)> = (0..n).map(|_| (rng.bits(4) as u8, rng.bits(4) as u8)).collect();
+    bench("mac/fp4 cycle (8 ops)", || {
+        let mut mac = MacUnit::new(Mode::Fp4, MacVariant::ExtMantissaBypass);
+        for c in codes4.chunks_exact(8) {
+            mac.cycle_fp4(&[c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]], 0);
+        }
+        std::hint::black_box(mac.acc());
+        n as u64
+    });
+}

@@ -1,0 +1,34 @@
+//! Bench: PE-array block-product simulation rate (Fig. 7 substrate).
+
+use mxscale::arith::MacVariant;
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::pearray::PeArray;
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Pcg64::new(2);
+    let a = Mat::randn(8, 8, 1.0, &mut rng);
+    let b = Mat::randn(8, 8, 1.0, &mut rng);
+    for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
+        let qa = MxTensor::quantize(&a, fmt, Layout::Square8x8);
+        let qb = MxTensor::quantize(&b, fmt, Layout::Square8x8);
+        let mut pe = PeArray::new(fmt, MacVariant::ExtMantissaBypass);
+        let reps = 2_000;
+        pe.mul_block(qa.square_block(0, 0), qb.square_block(0, 0)); // warm
+        let t = Instant::now();
+        for _ in 0..reps {
+            pe.mul_block(qa.square_block(0, 0), qb.square_block(0, 0));
+        }
+        let dt = t.elapsed().as_secs_f64();
+        let macs = reps as f64 * 512.0; // 64 outputs x 8-deep dot
+        println!(
+            "pearray/{:<6} {:>10.0} block-mults/s  {:>12.2e} sim MAC-ops/s",
+            fmt.name(),
+            reps as f64 / dt,
+            macs / dt
+        );
+    }
+}

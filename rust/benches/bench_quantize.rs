@@ -1,0 +1,31 @@
+//! Bench: MX quantization throughput (the trainer's QAT hot path).
+
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    let mut rng = Pcg64::new(3);
+    let m = Mat::randn(256, 256, 1.0, &mut rng);
+    for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
+        for layout in [Layout::Square8x8, Layout::Vector32] {
+            let reps = 50;
+            let _ = MxTensor::fake_quant(&m, fmt, layout); // warm
+            let t = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(MxTensor::fake_quant(&m, fmt, layout));
+            }
+            let dt = t.elapsed().as_secs_f64();
+            let elems = reps as f64 * 65536.0;
+            println!(
+                "quantize/{:<6}/{:<10} {:>10.2e} elems/s  ({:.3} ms per 256x256)",
+                fmt.name(),
+                layout.name(),
+                elems / dt,
+                dt * 1e3 / reps as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: PJRT train-step execution rate (the production path).
+//! Requires `make artifacts`. Skips gracefully if artifacts are missing.
+
+use mxscale::runtime::{artifact_dir, Manifest, TrainExecutable};
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use std::time::Instant;
+
+fn main() {
+    let dir = artifact_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        println!("runtime bench skipped: no artifacts (run `make artifacts`)");
+        return;
+    };
+    let client = match mxscale::runtime::executor::cpu_client() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("runtime bench skipped: {e}");
+            return;
+        }
+    };
+    let mut rng = Pcg64::new(5);
+    let x = Mat::randn(manifest.batch, 32, 1.0, &mut rng);
+    let y = Mat::randn(manifest.batch, 32, 0.5, &mut rng);
+    for scheme in ["fp32", "int8", "e4m3"] {
+        let Some(path) = manifest.train_path(&dir, scheme) else { continue };
+        let mut exe = match TrainExecutable::load(&client, &path, 1) {
+            Ok(e) => e,
+            Err(e) => {
+                println!("runtime/{scheme} skipped: {e}");
+                continue;
+            }
+        };
+        let _ = exe.step(&x, &y); // warm (compile-adjacent costs)
+        let reps = 30;
+        let t = Instant::now();
+        for _ in 0..reps {
+            exe.step(&x, &y).unwrap();
+        }
+        println!(
+            "runtime/train_step/{:<6} {:>8.2} ms/step (PJRT CPU)",
+            scheme,
+            t.elapsed().as_secs_f64() * 1e3 / reps as f64
+        );
+    }
+}

@@ -1,0 +1,231 @@
+//! The hierarchical L1/L2 accumulator (paper §III-B, Fig. 4).
+//!
+//! **L1** is a plain integer compressor: in INT8/FP8/FP6 mode it sums the
+//! shifted 4-bit partial products of one multiplication; in FP4 mode it
+//! sums four *completed* products ("E3M4": 4-bit mantissa, exponent 0..4)
+//! by direct mantissa shifting — no max-exponent search, exploiting the
+//! tiny exponent range. The same adder serves all modes (+2 bits in FP4).
+//!
+//! **L2** adds the per-cycle terms in an FP32-grade datapath: align each
+//! term to the largest exponent within a 26-bit mantissa window extended
+//! by 2 guard bits (so non-normalized inputs from subnormal-heavy narrow
+//! formats never lose accuracy vs. FP32), then one wide add. INT8 and FP4
+//! terms arrive pre-aligned (single exponent) and **bypass** the alignment
+//! stage — the paper's critical-path balancing optimization.
+
+use crate::arith::Events;
+
+/// Mantissa window of the L2 alignment datapath: 26-bit adder + 2-bit
+/// extension for non-normalized inputs (paper §III-B "L2 Adder").
+pub const L2_WINDOW: i32 = 28;
+
+/// Which L2 path a term set takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum L2Path {
+    /// FP8/FP6: full alignment network.
+    Aligned,
+    /// INT8: single pre-aligned integer term — alignment bypassed.
+    BypassInt,
+    /// FP4: L1 already shift-summed — alignment bypassed.
+    BypassFp4,
+}
+
+/// L1 compressor: exact sum of pre-shifted partial products.
+///
+/// Counts one `l1_add` activation per partial (compressor cell energy
+/// scales with the number of terms squeezed).
+pub fn l1_sum_partials(partials: &[u32], ev: &mut Events) -> u32 {
+    ev.l1_add += partials.len() as u64;
+    partials.iter().sum()
+}
+
+/// L1 FP4 path: sum up to four completed FP4 products by shifting each
+/// 4-bit mantissa left by its 0..4 exponent (no alignment search).
+///
+/// `products`: (sign, exponent-sum in 0..=4, mantissa product < 16).
+/// Returns the exact signed sum at exponent 0, i.e. value = sum * 2^0
+/// in mantissa-product units.
+pub fn l1_fp4_shift_sum(products: &[(i32, u32, u32)], ev: &mut Events) -> i64 {
+    let mut acc = 0i64;
+    for &(s, e, m) in products {
+        debug_assert!(e <= 4, "E3M4 exponent range is 0..4");
+        debug_assert!(m < 16, "M4 mantissa");
+        ev.l1_shift += 1;
+        ev.l1_add += 1;
+        acc += s as i64 * ((m as i64) << e);
+    }
+    acc
+}
+
+/// L2 add: combine terms `value_i = mant_i * 2^(exp_i)` (signed mantissas)
+/// into one real value through the chosen path.
+///
+/// `Aligned` models the hardware window: terms more than [`L2_WINDOW`]
+/// binades below the largest exponent contribute only a sticky bit (which
+/// nudges the LSB, preserving FP32-grade rounding behaviour). Bypass paths
+/// are exact integer adds at a common exponent.
+pub fn l2_add(terms: &[(i64, i32)], path: L2Path, ev: &mut Events) -> f64 {
+    match path {
+        L2Path::BypassInt | L2Path::BypassFp4 => {
+            ev.l2_bypass += 1;
+            ev.l2_add += 1;
+            let e = terms.first().map(|t| t.1).unwrap_or(0);
+            debug_assert!(terms.iter().all(|t| t.1 == e), "bypass terms must share exponent");
+            let sum: i64 = terms.iter().map(|t| t.0).sum();
+            sum as f64 * exp2(e)
+        }
+        L2Path::Aligned => {
+            ev.l2_add += 1;
+            if terms.is_empty() {
+                return 0.0;
+            }
+            // The window anchors on the MSB of the largest term *value*,
+            // not its scale exponent: inputs are non-normalized (mantissa
+            // products span 1..8 significant bits), which is exactly why
+            // the adder is extended instead of normalizing each input
+            // (paper §III-B "L2 Adder").
+            let msb = |m: i64, e: i32| e + 63 - (m.unsigned_abs().leading_zeros() as i32);
+            let anchor = terms
+                .iter()
+                .filter(|t| t.0 != 0)
+                .map(|&(m, e)| msb(m, e))
+                .max();
+            let Some(anchor) = anchor else { return 0.0 };
+            let floor_e = anchor - L2_WINDOW + 1; // lowest kept bit weight
+            let mut acc: i128 = 0;
+            let mut sticky = false;
+            for &(m, e) in terms {
+                ev.l2_align += 1;
+                if m == 0 {
+                    continue;
+                }
+                if e >= floor_e {
+                    acc += (m as i128) << (e - floor_e);
+                } else {
+                    let drop = (floor_e - e) as u32;
+                    if drop < 64 {
+                        // sign-magnitude alignment truncates the dropped
+                        // bits toward zero; they fold into the sticky bit
+                        let q = m / (1i64 << drop);
+                        acc += q as i128;
+                        sticky |= m != q << drop;
+                    } else {
+                        sticky = true;
+                    }
+                }
+            }
+            if sticky && acc & 1 == 0 {
+                // sticky nudge keeps round-to-nearest behaviour downstream
+                acc |= 1;
+            }
+            acc as f64 * exp2(floor_e)
+        }
+    }
+}
+
+#[inline]
+fn exp2(e: i32) -> f64 {
+    (e as f64).exp2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::testing::forall;
+
+    #[test]
+    fn l1_sums_exactly() {
+        let mut ev = Events::default();
+        assert_eq!(l1_sum_partials(&[1, 2 << 2, 3 << 4], &mut ev), 1 + 8 + 48);
+        assert_eq!(ev.l1_add, 3);
+    }
+
+    #[test]
+    fn l1_fp4_matches_direct_evaluation() {
+        let mut ev = Events::default();
+        // products: +-m*2^e
+        let ps = [(1, 0, 9), (-1, 4, 15), (1, 2, 3), (-1, 1, 1)];
+        let want: i64 = ps.iter().map(|&(s, e, m): &(i32, u32, u32)| s as i64 * ((m as i64) << e)).sum();
+        assert_eq!(l1_fp4_shift_sum(&ps, &mut ev), want);
+        assert_eq!(ev.l1_shift, 4);
+    }
+
+    #[test]
+    fn l2_bypass_exact() {
+        let mut ev = Events::default();
+        let v = l2_add(&[(100, -3), (-37, -3)], L2Path::BypassInt, &mut ev);
+        assert_eq!(v, 63.0 / 8.0);
+        assert_eq!(ev.l2_bypass, 1);
+        assert_eq!(ev.l2_align, 0);
+    }
+
+    #[test]
+    fn l2_aligned_exact_within_window() {
+        let mut ev = Events::default();
+        // all bits fall inside the 28-bit value-anchored window -> exact
+        // (anchor = msb(225 * 2^10) = 2^17, floor = 2^-10)
+        let terms = [(225i64, 10), (-37, 3), (9, -5), (1, -8)];
+        let want: f64 = terms.iter().map(|&(m, e)| m as f64 * (e as f64).exp2()).sum();
+        assert_eq!(l2_add(&terms, L2Path::Aligned, &mut ev), want);
+        assert_eq!(ev.l2_align, 4);
+    }
+
+    #[test]
+    fn l2_aligned_far_terms_only_sticky() {
+        let mut ev = Events::default();
+        // term 2^-40 below the max: outside the 28-bit window
+        let terms = [(1i64 << 7, 20), (1, -40)];
+        let v = l2_add(&terms, L2Path::Aligned, &mut ev);
+        let exact = 128.0 * (20f64).exp2() + (-40f64).exp2();
+        // error far below f32 resolution of the result
+        let ulp32 = (exact as f32).to_bits();
+        let got32 = (v as f32).to_bits();
+        assert!(ulp32.abs_diff(got32) <= 1, "{v} vs {exact}");
+    }
+
+    #[test]
+    fn l2_aligned_close_to_f64_for_random_fp_products() {
+        // random FP8-like products: |mant| < 256, exp in [-40, 40]
+        forall(
+            0x12,
+            2000,
+            |r: &mut Pcg64| {
+                let n = 4;
+                (0..n)
+                    .map(|_| {
+                        let m = r.int_range(-255, 255);
+                        let e = r.int_range(-40, 40) as i32;
+                        (m, e)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |terms| {
+                let mut ev = Events::default();
+                let got = l2_add(terms, L2Path::Aligned, &mut ev);
+                let exact: f64 = terms.iter().map(|&(m, e)| m as f64 * (e as f64).exp2()).sum();
+                // FP32-grade accuracy relative to the largest *term*: the
+                // window keeps 28 bits below the max-term MSB; each
+                // dropped term truncates by < 1 window-LSB and the sticky
+                // nudge adds <= 1 more, so the error is bounded by
+                // (n+1) * 2^(anchor-27) — far below one FP32 ulp of the
+                // dominant term even under catastrophic cancellation.
+                let anchor = terms
+                    .iter()
+                    .map(|&(m, e)| m.abs() as f64 * (e as f64).exp2())
+                    .fold(0.0f64, f64::max);
+                let tol = (terms.len() + 1) as f64 * anchor * (-27f64).exp2() + 1e-300;
+                if (got - exact).abs() > tol {
+                    return Err(format!("{got} vs {exact} (tol {tol})"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn l2_all_zero_terms() {
+        let mut ev = Events::default();
+        assert_eq!(l2_add(&[(0, 5), (0, -3)], L2Path::Aligned, &mut ev), 0.0);
+    }
+}

@@ -1,0 +1,415 @@
+//! The precision-scalable MX MAC unit (paper §III-A, Fig. 3).
+//!
+//! One [`MacUnit`] models one MAC lane of the PE array: per cycle it
+//! consumes 1 / 4 / 8 element pairs (INT8 / FP8-FP6 / FP4), produces one
+//! Sum-Together result through the L1/L2 hierarchy, applies the combined
+//! shared exponent of the input blocks, and accumulates output-stationary
+//! into an FP32 register. Numerics are bit-faithful to the datapath;
+//! every micro-op increments [`Events`] for the energy model.
+
+use crate::arith::adders::{l1_fp4_shift_sum, l1_sum_partials, l2_add, L2Path};
+use crate::arith::mult2::mul_mag;
+use crate::arith::{Events, Mode};
+use crate::mx::element::ElementFormat;
+
+/// Implementation variants compared in the paper's Table II.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MacVariant {
+    /// Proposed: +2-bit mantissa extension at L2 and mode-specific
+    /// bypasses. Meets 500 MHz. (Table II row 3.)
+    ExtMantissaBypass,
+    /// Mantissa extension but no bypass network: the unbalanced critical
+    /// path only closes timing at 417 MHz. (Table II row 2.)
+    ExtMantissaNoBypass,
+    /// Normalize every L2 input instead of extending the adder: meets
+    /// 500 MHz but pays normalization area/energy. (Table II row 1.)
+    NormalizeL2,
+}
+
+impl MacVariant {
+    /// Achievable clock in MHz (synthesis result the model reproduces).
+    pub fn freq_mhz(&self) -> f64 {
+        match self {
+            MacVariant::ExtMantissaNoBypass => 417.0,
+            _ => 500.0,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MacVariant::ExtMantissaBypass => "ext+bypass",
+            MacVariant::ExtMantissaNoBypass => "ext-no-bypass",
+            MacVariant::NormalizeL2 => "normalize-l2",
+        }
+    }
+}
+
+/// One precision-scalable MAC lane.
+#[derive(Debug, Clone)]
+pub struct MacUnit {
+    pub mode: Mode,
+    pub variant: MacVariant,
+    acc: f32,
+    /// Previous operand-register contents, for switching-activity counts.
+    prev_operands: u64,
+    pub events: Events,
+}
+
+impl MacUnit {
+    pub fn new(mode: Mode, variant: MacVariant) -> Self {
+        Self { mode, variant, acc: 0.0, prev_operands: 0, events: Events::default() }
+    }
+
+    /// Current accumulator value.
+    pub fn acc(&self) -> f32 {
+        self.acc
+    }
+
+    /// Clear the accumulator (new output tile).
+    pub fn reset_acc(&mut self) {
+        self.acc = 0.0;
+    }
+
+    /// Drain counters (e.g. between benchmark phases).
+    pub fn take_events(&mut self) -> Events {
+        std::mem::take(&mut self.events)
+    }
+
+    /// INT8 cycle (Fig. 3a): one INT8 x INT8 product through all sixteen
+    /// 2-bit multipliers; exponent adders inactive. `scale_exp` is the
+    /// combined shared exponent of the two blocks **including** MXINT8's
+    /// implied 2^-6 per element (i.e. `sxA + sxB - 12`).
+    pub fn cycle_int8(&mut self, a: i8, b: i8, scale_exp: i32) {
+        debug_assert_eq!(self.mode, Mode::Int8);
+        self.touch_operands((a as u8 as u64) | ((b as u8 as u64) << 8));
+        // sign-magnitude conversion (the INT8-mode L1 critical path)
+        let (sa, ma) = sign_mag(a);
+        let (sb, mb) = sign_mag(b);
+        let (_, partials) = mul_mag(ma, mb, 4, &mut self.events);
+        let mag = l1_sum_partials(partials.as_slice(), &mut self.events);
+        let prod = sa * sb * mag as i64;
+        // single pre-aligned term: bypasses L2 alignment
+        let v = l2_add(&[(prod, 0)], L2Path::BypassInt, &mut self.events);
+        self.accumulate(v, scale_exp);
+        self.events.cycles += 1;
+        self.events.mul_ops += 1;
+    }
+
+    /// FP8/FP6 cycle (Fig. 3b): four parallel products, each four 2-bit
+    /// multipliers (mantissa) + one 5-bit exponent adder, aligned and
+    /// added at L2. `scale_exp = sxA + sxB` (element mantissa scaling is
+    /// handled internally from the format).
+    pub fn cycle_fp86(&mut self, fmt: ElementFormat, pairs: &[(u8, u8); 4], scale_exp: i32) {
+        debug_assert_eq!(self.mode, Mode::Fp8Fp6);
+        debug_assert!(matches!(
+            fmt,
+            ElementFormat::E5M2 | ElementFormat::E4M3 | ElementFormat::E3M2 | ElementFormat::E2M3
+        ));
+        let mut packed = 0u64;
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            packed |= (a as u64) << (16 * i) | (b as u64) << (16 * i + 8);
+        }
+        self.touch_operands(packed);
+        let mb = fmt.mant_bits() as i32;
+        let mut terms = [(0i64, 0i32); 4];
+        for (i, &(ca, cb)) in pairs.iter().enumerate() {
+            let (sa, ea, ma) = fmt.fp_parts(ca);
+            let (sb, eb, mbm) = fmt.fp_parts(cb);
+            self.events.exp_add5 += 1;
+            let (_, partials) = mul_mag(ma, mbm, 2, &mut self.events);
+            let mant_prod = l1_sum_partials(partials.as_slice(), &mut self.events);
+            // value = s * mant_prod * 2^(ea+eb-2*mb); keep -2mb in the term
+            terms[i] = ((sa * sb) as i64 * mant_prod as i64, ea + eb - 2 * mb);
+        }
+        let v = l2_add(&terms, L2Path::Aligned, &mut self.events);
+        self.accumulate(v, scale_exp);
+        self.events.cycles += 1;
+        self.events.mul_ops += 4;
+    }
+
+    /// FP4 cycle (Fig. 3c): eight parallel E2M1 x E2M1 products, each one
+    /// 2-bit multiplier + one 2-bit exponent adder; two L1 shift-sum
+    /// groups of four; L2 alignment bypassed. `scale_exp = sxA + sxB`.
+    pub fn cycle_fp4(&mut self, pairs: &[(u8, u8); 8], scale_exp: i32) {
+        debug_assert_eq!(self.mode, Mode::Fp4);
+        let fmt = ElementFormat::E2M1;
+        let mut packed = 0u64;
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            packed |= (a as u64) << (8 * i) | (b as u64) << (8 * i + 4);
+        }
+        self.touch_operands(packed);
+        let mb = fmt.mant_bits() as i32; // 1
+        let mut products = [(0i32, 0u32, 0u32); 8];
+        for (i, &(ca, cb)) in pairs.iter().enumerate() {
+            let (sa, ea, ma) = fmt.fp_parts(ca);
+            let (sb, eb, mbm) = fmt.fp_parts(cb);
+            self.events.exp_add2 += 1;
+            let (mant_prod, _) = mul_mag(ma, mbm, 1, &mut self.events);
+            // E2M1 exponents are >= emin = 0, so ea+eb in 0..=4 ("E3M4")
+            products[i] = (sa * sb, (ea + eb) as u32, mant_prod);
+        }
+        let s0 = l1_fp4_shift_sum(&products[..4], &mut self.events);
+        let s1 = l1_fp4_shift_sum(&products[4..], &mut self.events);
+        // both L1 sums share exponent scale 2^(-2*mb): bypass L2 alignment
+        let v = l2_add(&[(s0, -2 * mb), (s1, -2 * mb)], L2Path::BypassFp4, &mut self.events);
+        self.accumulate(v, scale_exp);
+        self.events.cycles += 1;
+        self.events.mul_ops += 8;
+    }
+
+    /// FP32 accumulation (the "orange" adder + green register in Fig. 3):
+    /// shared exponent applied to the L2 output, then one FP32 RNE add.
+    fn accumulate(&mut self, l2_out: f64, scale_exp: i32) {
+        self.events.shared_exp_add += 1;
+        self.events.acc_add += 1;
+        let scaled = l2_out * (scale_exp as f64).exp2();
+        let new = (self.acc as f64 + scaled) as f32;
+        self.events.acc_reg_toggles += (self.acc.to_bits() ^ new.to_bits()).count_ones() as u64;
+        self.acc = new;
+    }
+
+    /// Operand-register switching activity.
+    fn touch_operands(&mut self, packed: u64) {
+        self.events.input_toggles += (self.prev_operands ^ packed).count_ones() as u64;
+        self.prev_operands = packed;
+    }
+}
+
+#[inline]
+fn sign_mag(x: i8) -> (i64, u32) {
+    if x < 0 {
+        (-1, (-(x as i32)) as u32)
+    } else {
+        (1, x as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::block::quantize_block;
+    use crate::util::rng::Pcg64;
+    use crate::util::testing::{assert_ulps, forall};
+
+    #[test]
+    fn int8_dot_product_bit_exact() {
+        // 8-cycle INT8 dot product == i32 golden, scaled by 2^scale
+        forall(
+            0x17,
+            500,
+            |r| {
+                let a: Vec<i8> = (0..8).map(|_| r.int_range(-127, 127) as i8).collect();
+                let b: Vec<i8> = (0..8).map(|_| r.int_range(-127, 127) as i8).collect();
+                let scale = r.int_range(-20, 8) as i32;
+                (a, b, scale)
+            },
+            |(a, b, scale)| {
+                let mut mac = MacUnit::new(Mode::Int8, MacVariant::ExtMantissaBypass);
+                for i in 0..8 {
+                    mac.cycle_int8(a[i], b[i], *scale);
+                }
+                let golden: i64 = (0..8).map(|i| a[i] as i64 * b[i] as i64).sum();
+                let want = (golden as f64 * (*scale as f64).exp2()) as f32;
+                if mac.acc() != want {
+                    return Err(format!("{} != {}", mac.acc(), want));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn int8_event_counts_per_cycle() {
+        let mut mac = MacUnit::new(Mode::Int8, MacVariant::ExtMantissaBypass);
+        mac.cycle_int8(-77, 33, 0);
+        let e = mac.events;
+        assert_eq!(e.mult2, 16, "all sixteen 2-bit multipliers work together");
+        assert_eq!(e.exp_add5 + e.exp_add2, 0, "exponent adders inactive");
+        assert_eq!(e.l2_bypass, 1, "INT8 bypasses L2 alignment");
+        assert_eq!(e.l2_align, 0);
+        assert_eq!(e.acc_add, 1);
+        assert_eq!(e.mul_ops, 1);
+    }
+
+    fn fp_dot_golden(fmt: ElementFormat, codes: &[(u8, u8)], scale_exp: i32) -> f64 {
+        codes
+            .iter()
+            .map(|&(a, b)| fmt.decode(a) * fmt.decode(b))
+            .sum::<f64>()
+            * (scale_exp as f64).exp2()
+    }
+
+    #[test]
+    fn fp86_dot_product_matches_decoded_golden() {
+        for fmt in [ElementFormat::E5M2, ElementFormat::E4M3, ElementFormat::E3M2, ElementFormat::E2M3] {
+            forall(
+                0xF8 + fmt.bits() as u64,
+                400,
+                |r| {
+                    let n_codes = fmt.code_count() as u64;
+                    let pairs: Vec<(u8, u8)> = (0..8)
+                        .map(|_| {
+                            let mut pick = || loop {
+                                let c = r.below(n_codes) as u8;
+                                if !fmt.is_special(c) {
+                                    break c;
+                                }
+                            };
+                            (pick(), pick())
+                        })
+                        .collect();
+                    let scale = r.int_range(-10, 10) as i32;
+                    (pairs, scale)
+                },
+                |(pairs, scale)| {
+                    let mut mac = MacUnit::new(Mode::Fp8Fp6, MacVariant::ExtMantissaBypass);
+                    mac.cycle_fp86(fmt, &pairs[0..4].try_into().unwrap(), *scale);
+                    mac.cycle_fp86(fmt, &pairs[4..8].try_into().unwrap(), *scale);
+                    let golden = fp_dot_golden(fmt, pairs, *scale);
+                    // error budget: per-cycle window truncation is bounded
+                    // by 2^-27 of the cycle's largest product, plus two
+                    // FP32 accumulation roundings.
+                    let max_prod = pairs
+                        .iter()
+                        .map(|&(a, b)| (fmt.decode(a) * fmt.decode(b)).abs())
+                        .fold(0.0f64, f64::max)
+                        * (*scale as f64).exp2();
+                    let tol = 2.0 * 5.0 * max_prod * (-27f64).exp2()
+                        + 2.0 * (golden.abs() + max_prod) * (-24f64).exp2()
+                        + 1e-300;
+                    if (mac.acc() as f64 - golden).abs() > tol {
+                        return Err(format!(
+                            "{fmt:?}: {} vs {golden} (tol {tol})",
+                            mac.acc()
+                        ));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn fp86_event_counts_per_cycle() {
+        let mut mac = MacUnit::new(Mode::Fp8Fp6, MacVariant::ExtMantissaBypass);
+        let pairs = [(0x3c, 0x3c), (0x44, 0xbc), (0x01, 0x7b), (0x00, 0x3c)];
+        mac.cycle_fp86(ElementFormat::E5M2, &pairs, 0);
+        let e = mac.events;
+        assert_eq!(e.mult2, 16, "4 products x 4 mult2 each");
+        assert_eq!(e.exp_add5, 4, "one 5-bit exponent adder per product");
+        assert_eq!(e.l2_align, 4, "all four terms aligned");
+        assert_eq!(e.l2_bypass, 0);
+        assert_eq!(e.mul_ops, 4);
+    }
+
+    #[test]
+    fn fp4_dot_product_exact() {
+        // FP4 products and the shift-sum are exact integers; the single
+        // FP32 accumulation rounds once -> exactly representable sums
+        // must match the f64 golden bit-for-bit.
+        forall(
+            0xF4,
+            500,
+            |r| {
+                let pairs: Vec<(u8, u8)> =
+                    (0..8).map(|_| (r.bits(4) as u8, r.bits(4) as u8)).collect();
+                let scale = r.int_range(-8, 8) as i32;
+                (pairs, scale)
+            },
+            |(pairs, scale)| {
+                let mut mac = MacUnit::new(Mode::Fp4, MacVariant::ExtMantissaBypass);
+                mac.cycle_fp4(pairs.as_slice().try_into().unwrap(), *scale);
+                let golden = fp_dot_golden(ElementFormat::E2M1, pairs, *scale);
+                if mac.acc() != golden as f32 {
+                    return Err(format!("{} != {golden}", mac.acc()));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fp4_event_counts_half_parallelism() {
+        let mut mac = MacUnit::new(Mode::Fp4, MacVariant::ExtMantissaBypass);
+        let pairs = [(1u8, 2u8); 8];
+        mac.cycle_fp4(&pairs, 0);
+        let e = mac.events;
+        assert_eq!(e.mult2, 8, "FP4 uses only 8 of 16 multipliers (BW limit)");
+        assert_eq!(e.exp_add2, 8, "one 2-bit exponent adder per product");
+        assert_eq!(e.l1_shift, 8, "direct mantissa shifting");
+        assert_eq!(e.l2_bypass, 1, "FP4 bypasses L2 alignment");
+        assert_eq!(e.mul_ops, 8);
+    }
+
+    #[test]
+    fn block_dot_with_shared_exponents_matches_dequantized_math() {
+        // end-to-end over real quantized blocks: MAC result over one
+        // 8-element lane == dot(dequantized) within FP32 rounding
+        let mut rng = Pcg64::new(0xB10C);
+        for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
+            for _ in 0..50 {
+                let xs: Vec<f32> = (0..8).map(|_| rng.normal_f32() * 3.0).collect();
+                let ys: Vec<f32> = (0..8).map(|_| rng.normal_f32() * 3.0).collect();
+                let bx = quantize_block(&xs, fmt);
+                let by = quantize_block(&ys, fmt);
+                let golden: f64 =
+                    (0..8).map(|i| bx.decode(i) * by.decode(i)).sum();
+
+                let acc = match fmt {
+                    ElementFormat::Int8 => {
+                        let mut mac = MacUnit::new(Mode::Int8, MacVariant::ExtMantissaBypass);
+                        let se = bx.scale_exp + by.scale_exp - 12;
+                        for i in 0..8 {
+                            mac.cycle_int8(bx.codes[i] as i8, by.codes[i] as i8, se);
+                        }
+                        mac.acc()
+                    }
+                    ElementFormat::E2M1 => {
+                        let mut mac = MacUnit::new(Mode::Fp4, MacVariant::ExtMantissaBypass);
+                        let pairs: Vec<(u8, u8)> =
+                            (0..8).map(|i| (bx.codes[i], by.codes[i])).collect();
+                        mac.cycle_fp4(
+                            pairs.as_slice().try_into().unwrap(),
+                            bx.scale_exp + by.scale_exp,
+                        );
+                        mac.acc()
+                    }
+                    _ => {
+                        let mut mac = MacUnit::new(Mode::Fp8Fp6, MacVariant::ExtMantissaBypass);
+                        let se = bx.scale_exp + by.scale_exp;
+                        for c in 0..2 {
+                            let pairs: Vec<(u8, u8)> =
+                                (4 * c..4 * c + 4).map(|i| (bx.codes[i], by.codes[i])).collect();
+                            mac.cycle_fp86(fmt, pairs.as_slice().try_into().unwrap(), se);
+                        }
+                        mac.acc()
+                    }
+                };
+                assert_ulps(acc, golden as f32, 2, &format!("{fmt:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn mode_cycle_counts_match_paper() {
+        assert_eq!(Mode::Int8.cycles_per_block(), 8);
+        assert_eq!(Mode::Fp8Fp6.cycles_per_block(), 2);
+        assert_eq!(Mode::Fp4.cycles_per_block(), 1);
+    }
+
+    #[test]
+    fn variant_frequencies_match_table2() {
+        assert_eq!(MacVariant::ExtMantissaBypass.freq_mhz(), 500.0);
+        assert_eq!(MacVariant::ExtMantissaNoBypass.freq_mhz(), 417.0);
+        assert_eq!(MacVariant::NormalizeL2.freq_mhz(), 500.0);
+    }
+
+    #[test]
+    fn accumulator_resets() {
+        let mut mac = MacUnit::new(Mode::Int8, MacVariant::ExtMantissaBypass);
+        mac.cycle_int8(10, 10, 0);
+        assert!(mac.acc() != 0.0);
+        mac.reset_acc();
+        assert_eq!(mac.acc(), 0.0);
+    }
+}

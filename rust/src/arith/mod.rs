@@ -1,0 +1,118 @@
+//! Bit-exact model of the paper's precision-scalable MX MAC unit (§III).
+//!
+//! The unit is built from **sixteen elementary 2-bit multipliers** plus a
+//! **hierarchical two-level accumulator** and operates in three modes:
+//!
+//! | mode     | products/cycle | mult2 used | exponent adders |
+//! |----------|----------------|------------|-----------------|
+//! | INT8     | 1 (INT8xINT8)  | 16         | — (inactive)    |
+//! | FP8/FP6  | 4              | 4 x 4      | 4 x 5-bit       |
+//! | FP4      | 8 (BW-limited) | 8 x 1      | 8 x 2-bit       |
+//!
+//! The **L1 adder** assembles partial products (INT8/FP8/FP6) or
+//! shift-sums completed FP4 products ("E3M4", exponent range 0..4); the
+//! **L2 adder** aligns and adds in an FP32 datapath with a 26-bit mantissa
+//! adder extended by 2 bits to absorb non-normalized (subnormal-sourced)
+//! inputs, with INT8/FP4 **bypassing** the alignment stage (the paper's
+//! critical-path balancing trick). A Sum-Together scheme yields one output
+//! per MAC per cycle in every mode, accumulated output-stationary in FP32.
+//!
+//! Every micro-operation increments an [`Events`] counter; the energy
+//! model (`crate::energy`) converts event counts into pJ, which is how
+//! Tables II/IV and Fig. 7 are regenerated without synthesis.
+
+pub mod adders;
+pub mod mac;
+pub mod mult2;
+
+pub use adders::{l1_fp4_shift_sum, l1_sum_partials, l2_add, L2Path};
+pub use mac::{MacUnit, MacVariant};
+pub use mult2::{mul2, mul_mag};
+
+/// MAC operating mode (paper Fig. 3 a/b/c).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    Int8,
+    Fp8Fp6,
+    Fp4,
+}
+
+impl Mode {
+    /// Element pairs consumed per cycle (the Sum-Together width).
+    pub const fn pairs_per_cycle(&self) -> usize {
+        match self {
+            Mode::Int8 => 1,
+            Mode::Fp8Fp6 => 4,
+            Mode::Fp4 => 8,
+        }
+    }
+
+    /// Cycles for one 8-deep dot product (one 8x8 block-pair per MAC lane).
+    pub const fn cycles_per_block(&self) -> usize {
+        8 / self.pairs_per_cycle()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Int8 => "int8",
+            Mode::Fp8Fp6 => "fp8fp6",
+            Mode::Fp4 => "fp4",
+        }
+    }
+}
+
+/// Micro-operation counters — the currency of the energy model.
+///
+/// One `Events` instance accumulates over a run; the energy model prices
+/// each field (pJ/event) and sums. Fields mirror the paper's Fig. 7
+/// component breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Events {
+    /// Elementary 2-bit x 2-bit multiplications.
+    pub mult2: u64,
+    /// 5-bit exponent additions (FP8/FP6 mode).
+    pub exp_add5: u64,
+    /// 2-bit exponent additions (FP4 mode).
+    pub exp_add2: u64,
+    /// L1 partial-product compressor activations (per 4-term group).
+    pub l1_add: u64,
+    /// L1 variable-shift operations (FP4 path).
+    pub l1_shift: u64,
+    /// L2 alignment (shift to common exponent) operations.
+    pub l2_align: u64,
+    /// L2 wide-mantissa additions.
+    pub l2_add: u64,
+    /// L2 alignment stages skipped via the bypass network.
+    pub l2_bypass: u64,
+    /// FP32 accumulation additions (the "orange" adder).
+    pub acc_add: u64,
+    /// Accumulation-register bit toggles (switching activity).
+    pub acc_reg_toggles: u64,
+    /// Shared-exponent additions at PE level.
+    pub shared_exp_add: u64,
+    /// Input operand register-bank bit toggles.
+    pub input_toggles: u64,
+    /// Total MAC cycles executed.
+    pub cycles: u64,
+    /// Multiplication OPs completed (element products).
+    pub mul_ops: u64,
+}
+
+impl Events {
+    pub fn add(&mut self, o: &Events) {
+        self.mult2 += o.mult2;
+        self.exp_add5 += o.exp_add5;
+        self.exp_add2 += o.exp_add2;
+        self.l1_add += o.l1_add;
+        self.l1_shift += o.l1_shift;
+        self.l2_align += o.l2_align;
+        self.l2_add += o.l2_add;
+        self.l2_bypass += o.l2_bypass;
+        self.acc_add += o.acc_add;
+        self.acc_reg_toggles += o.acc_reg_toggles;
+        self.shared_exp_add += o.shared_exp_add;
+        self.input_toggles += o.input_toggles;
+        self.cycles += o.cycles;
+        self.mul_ops += o.mul_ops;
+    }
+}

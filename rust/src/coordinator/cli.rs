@@ -1,0 +1,240 @@
+//! Hand-rolled CLI (clap is unavailable in the offline environment).
+//!
+//! ```text
+//! mxscale repro <table2|table3|table4|fig2|fig7|fig8|ablation|all> [--steps N]
+//! mxscale train --workload pusher --scheme e4m3 [--steps N] [--runtime]
+//! mxscale quantize --format e4m3 [--rows N --cols N]
+//! mxscale info
+//! ```
+
+use crate::coordinator::experiments;
+use crate::coordinator::report::{save_csv, Table};
+use crate::mx::element::ElementFormat;
+use crate::mx::tensor::{Layout, MxTensor};
+use crate::trainer::qat::QuantScheme;
+use crate::trainer::session::{TrainConfig, TrainSession};
+use crate::util::mat::Mat;
+use crate::util::rng::Pcg64;
+use crate::workloads::{by_name, Dataset};
+
+/// Parsed flag set: positionals + `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                let val = if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                a.flags.insert(key.to_string(), val);
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+const USAGE: &str = "\
+mxscale - precision-scalable MX processing for robotics learning (ISLPED'25 reproduction)
+
+USAGE:
+  mxscale repro <table2|table3|table4|fig2|fig7|fig8|ablation|all> [--steps N] [--eval-every N]
+  mxscale train --workload <cartpole|reacher|pusher|halfcheetah> --scheme <fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mx9|mx6|mx4>
+                [--steps N] [--lr F] [--batch N]
+  mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
+  mxscale info                                            # architecture summary
+";
+
+/// Entry point used by `main.rs`. Returns a process exit code.
+pub fn run_cli(argv: &[String]) -> i32 {
+    let args = Args::parse(argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("repro") => cmd_repro(&args),
+        Some("train") => cmd_train(&args),
+        Some("quantize") => cmd_quantize(&args),
+        Some("info") => {
+            print!("{}", info_text());
+            0
+        }
+        _ => {
+            print!("{USAGE}");
+            1
+        }
+    }
+}
+
+fn emit(t: &Table, name: &str) {
+    print!("{}", t.render());
+    match save_csv(t, name) {
+        Ok(p) => println!("[saved {}]\n", p.display()),
+        Err(e) => println!("[csv save failed: {e}]\n"),
+    }
+}
+
+fn cmd_repro(args: &Args) -> i32 {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let steps = args.usize_or("steps", 300);
+    let eval_every = args.usize_or("eval-every", 25);
+    let run = |id: &str| match id {
+        "table2" => emit(&experiments::table2(), "table2"),
+        "table3" => emit(&experiments::table3(), "table3"),
+        "table4" => emit(&experiments::table4(), "table4"),
+        "fig7" => {
+            let (e, a) = experiments::fig7();
+            emit(&e, "fig7_energy");
+            emit(&a, "fig7_area");
+        }
+        "fig2" => emit(&experiments::fig2(steps, eval_every), "fig2_final"),
+        "ablation" => emit(&experiments::ablation(), "ablation_blocksize"),
+        "fig8" => emit(
+            &experiments::fig8(args.f64_or("time-budget", 1000.0), args.f64_or("energy-budget", 120.0)),
+            "fig8_final",
+        ),
+        other => println!("unknown experiment: {other}"),
+    };
+    if which == "all" {
+        for id in ["table2", "table3", "table4", "fig7", "fig2", "fig8", "ablation"] {
+            run(id);
+        }
+    } else {
+        run(which);
+    }
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let workload = args.get("workload").unwrap_or("pusher");
+    let scheme_name = args.get("scheme").unwrap_or("fp32");
+    let Some(scheme) = QuantScheme::parse(scheme_name) else {
+        eprintln!("unknown scheme: {scheme_name}");
+        return 1;
+    };
+    let Some(env) = by_name(workload) else {
+        eprintln!("unknown workload: {workload}");
+        return 1;
+    };
+    let steps = args.usize_or("steps", 400);
+    let ds = Dataset::collect(env.as_ref(), 30, 100, 0x7EA1);
+    let mut session = TrainSession::new(
+        ds,
+        TrainConfig {
+            scheme,
+            steps,
+            lr: args.f64_or("lr", 1e-3) as f32,
+            batch_size: args.usize_or("batch", 32),
+            eval_every: args.usize_or("eval-every", 25),
+            ..Default::default()
+        },
+    );
+    println!("training {workload} under {} for {steps} steps...", scheme.name());
+    session.run();
+    let mut t = Table::new(
+        &format!("{workload} / {}", scheme.name()),
+        &["step", "val_loss"],
+    );
+    for (s, v) in &session.val_curve {
+        t.row(vec![s.to_string(), format!("{v:.6}")]);
+    }
+    emit(&t, &format!("train_{workload}_{}", scheme.name()));
+    0
+}
+
+fn cmd_quantize(args: &Args) -> i32 {
+    let fmt_name = args.get("format").unwrap_or("e4m3");
+    let Some(fmt) = ElementFormat::parse(fmt_name) else {
+        eprintln!("unknown format: {fmt_name}");
+        return 1;
+    };
+    let rows = args.usize_or("rows", 64);
+    let cols = args.usize_or("cols", 64);
+    let mut rng = Pcg64::new(args.usize_or("seed", 7) as u64);
+    let m = Mat::randn(rows, cols, 1.0, &mut rng);
+    let mut t = Table::new(
+        &format!("quantization stats: {} {}x{}", fmt.display(), rows, cols),
+        &["layout", "bits/elem", "storage[KiB]", "rms-error"],
+    );
+    for layout in [Layout::Square8x8, Layout::Vector32] {
+        let q = MxTensor::quantize(&m, fmt, layout);
+        let deq = q.dequantize();
+        t.row(vec![
+            layout.name().to_string(),
+            format!("{:.3}", crate::mx::MxFormat { element: fmt, layout }.bits_per_element()),
+            format!("{:.2}", q.storage_kib()),
+            format!("{:.6}", deq.mse(&m).sqrt()),
+        ]);
+    }
+    print!("{}", t.render());
+    0
+}
+
+fn info_text() -> String {
+    format!(
+        "mxscale: {} MACs ({}x{} PE arrays of 64), {} b/cycle interface @500 MHz\n\
+         modes: INT8 (8 cyc/block), FP8/FP6 (2), FP4 (1); square 8x8 shared-exponent blocks\n\
+         artifacts: {}\n",
+        crate::gemmcore::TOTAL_MACS,
+        crate::gemmcore::GRID_ROWS,
+        crate::gemmcore::GRID_COLS,
+        crate::gemmcore::BW_BITS_PER_CYCLE,
+        crate::runtime::artifact_dir().display(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|t| t.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = Args::parse(&argv("repro fig2 --steps 100 --quick"));
+        assert_eq!(a.positional, vec!["repro", "fig2"]);
+        assert_eq!(a.get("steps"), Some("100"));
+        assert_eq!(a.get("quick"), Some("true"));
+        assert_eq!(a.usize_or("steps", 5), 100);
+        assert_eq!(a.usize_or("missing", 5), 5);
+    }
+
+    #[test]
+    fn unknown_command_prints_usage() {
+        assert_eq!(run_cli(&argv("bogus")), 1);
+    }
+
+    #[test]
+    fn quantize_command_runs() {
+        assert_eq!(run_cli(&argv("quantize --format int8 --rows 16 --cols 16")), 0);
+    }
+
+    #[test]
+    fn info_mentions_grid() {
+        assert!(info_text().contains("4096"));
+    }
+}

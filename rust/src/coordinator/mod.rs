@@ -1,0 +1,20 @@
+//! Coordinator: CLI, experiment configs, and the per-table / per-figure
+//! reproduction harnesses.
+//!
+//! `mxscale repro <id>` regenerates every quantitative artefact of the
+//! paper's evaluation section (see DESIGN.md §5):
+//!
+//! | id     | paper artefact                                      |
+//! |--------|-----------------------------------------------------|
+//! | table2 | MAC variant area / pJ-per-OP comparison             |
+//! | table3 | memory footprint: FP32 / Dacapo / ours, 3 batches   |
+//! | table4 | core comparison: area, BW, mem, E/op, train latency |
+//! | fig2   | validation-loss curves, 6 MX formats x 4 workloads  |
+//! | fig7   | PE-array area & energy breakdown per component      |
+//! | fig8   | pusher loss under time / energy budgets vs Dacapo   |
+
+pub mod cli;
+pub mod experiments;
+pub mod report;
+
+pub use cli::run_cli;

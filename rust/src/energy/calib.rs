@@ -1,0 +1,190 @@
+//! Calibration constants for the area/energy model.
+//!
+//! ## How these were derived
+//!
+//! The per-cycle energy of a MAC in mode m decomposes as
+//!
+//! ```text
+//!   E_cycle(f, v) = g(v) * [ core(f) + n_align(f, v) * a(mode(f), v) ]
+//! ```
+//!
+//! * `core(f)` — the mode-intrinsic datapath energy (multipliers, L1
+//!   compressor, FP32 accumulation add, accumulation register, operand
+//!   registers). Calibrated from Table II row 3 (the proposed
+//!   ext-mantissa + bypass variant at 500 MHz), which *is* the paper's
+//!   measurement of exactly this quantity.
+//! * `n_align(f, v)` — how many terms traverse the L2 alignment stage:
+//!   4 for FP8/FP6 always; 1 (INT8) / 2 (FP4) only in variants without
+//!   the bypass network (the "initial version" of §III-B).
+//! * `a(mode, v)` — alignment/normalization energy per term.
+//!   `NormalizeL2` pays input normalization; `ExtMantissaNoBypass` pays
+//!   oversized drive strength on the unbalanced critical path, with the
+//!   whole unit inflated by `g = 1.2` (it also only closes 417 MHz).
+//!
+//! Fit residuals against all 18 Table II entries are <= ~4% (asserted in
+//! `model::tests::table2_reproduction`).
+//!
+//! Core-level (Table IV) constants add SRAM traffic and array-level
+//! switching effects, calibrated on the paper's three core E/op figures;
+//! Dacapo-side constants come from the paper's Table IV Dacapo column
+//! and the ISCA'24 paper. Fig. 7 component proportions follow the
+//! paper's qualitative findings (FP accumulation dominates energy; L1+L2
+//! adders dominate area).
+
+use crate::arith::{MacVariant, Mode};
+use crate::mx::dacapo::DacapoFormat;
+use crate::mx::element::ElementFormat;
+
+/// Mode-intrinsic per-cycle core energy [pJ] (bypass variant, 500 MHz).
+/// From Table II row 3: pJ/OP x OPs-per-cycle.
+pub fn core_cycle_pj(fmt: ElementFormat) -> f64 {
+    match fmt {
+        ElementFormat::Int8 => 4.41,  // 1 op/cycle
+        ElementFormat::E5M2 => 4.44,  // 4 ops/cycle x 1.11
+        ElementFormat::E4M3 => 4.676, // 4 x 1.169
+        ElementFormat::E3M2 => 4.20,  // 4 x 1.05
+        ElementFormat::E2M3 => 4.52,  // 4 x 1.13
+        ElementFormat::E2M1 => 3.12,  // 8 x 0.39
+    }
+}
+
+/// Terms traversing L2 alignment per cycle for a format under a variant.
+pub fn aligned_terms(fmt: ElementFormat, variant: MacVariant) -> u32 {
+    let bypassed = variant == MacVariant::ExtMantissaBypass;
+    match fmt.mac_mode() {
+        Mode::Fp8Fp6 => 4,
+        Mode::Int8 => {
+            if bypassed {
+                0
+            } else {
+                1
+            }
+        }
+        Mode::Fp4 => {
+            if bypassed {
+                0
+            } else {
+                2
+            }
+        }
+    }
+}
+
+/// Alignment / normalization energy per aligned term [pJ].
+pub fn align_term_pj(mode: Mode, variant: MacVariant) -> f64 {
+    match (variant, mode) {
+        (MacVariant::ExtMantissaBypass, Mode::Fp8Fp6) => 0.0, // folded in core
+        (MacVariant::ExtMantissaBypass, _) => 0.0,            // bypassed
+        // NormalizeL2: per-input normalizer (find-MSB + shift)
+        (MacVariant::NormalizeL2, Mode::Fp8Fp6) => 1.30,
+        (MacVariant::NormalizeL2, Mode::Int8) => 0.67,
+        (MacVariant::NormalizeL2, Mode::Fp4) => 0.16,
+        // NoBypass: unbalanced critical path -> oversized drive strength
+        (MacVariant::ExtMantissaNoBypass, Mode::Fp8Fp6) => 1.63,
+        (MacVariant::ExtMantissaNoBypass, Mode::Int8) => 0.88,
+        (MacVariant::ExtMantissaNoBypass, Mode::Fp4) => 0.63,
+    }
+}
+
+/// Global inflation factor of a variant (drive strength / buffering).
+pub fn variant_global_factor(variant: MacVariant) -> f64 {
+    match variant {
+        MacVariant::ExtMantissaBypass => 1.0,
+        MacVariant::NormalizeL2 => 1.0,
+        MacVariant::ExtMantissaNoBypass => 1.2,
+    }
+}
+
+/// Standalone-MAC area [um^2] per variant (Table II column 2).
+pub fn mac_area_um2(variant: MacVariant) -> f64 {
+    match variant {
+        MacVariant::NormalizeL2 => 3281.63,
+        MacVariant::ExtMantissaNoBypass => 3395.00,
+        MacVariant::ExtMantissaBypass => 1589.05,
+    }
+}
+
+/// Component share of the proposed MAC's area (sums to 1).
+/// Qualitative constraint from Fig. 7: L1 + L2 adders dominate area
+/// (mode-specific datapaths), multipliers are small.
+pub const AREA_SHARE: [(&str, f64); 7] = [
+    ("multipliers", 0.145),
+    ("l1_adder", 0.265),
+    ("l2_adder", 0.275),
+    ("fp_acc_adder", 0.165),
+    ("acc_register", 0.085),
+    ("exp_adders", 0.025),
+    ("shared_exp", 0.040),
+];
+
+/// Component share of per-cycle energy by mode (sums to 1 each).
+/// Qualitative constraints from Fig. 7: FP accumulation addition is the
+/// most energy-intensive component; the accumulation register switches
+/// *more* in INT8 mode (8 aligned partial accumulations per output vs.
+/// exponent-misaligned FP adds); shared-exponent logic is negligible.
+pub fn energy_share(mode: Mode) -> [(&'static str, f64); 7] {
+    match mode {
+        Mode::Int8 => [
+            ("multipliers", 0.190),
+            ("l1_adder", 0.150),
+            ("l2_adder", 0.075),
+            ("fp_acc_adder", 0.330),
+            ("acc_register", 0.215),
+            ("exp_adders", 0.000),
+            ("shared_exp", 0.040),
+        ],
+        Mode::Fp8Fp6 => [
+            ("multipliers", 0.165),
+            ("l1_adder", 0.135),
+            ("l2_adder", 0.200),
+            ("fp_acc_adder", 0.330),
+            ("acc_register", 0.105),
+            ("exp_adders", 0.030),
+            ("shared_exp", 0.035),
+        ],
+        Mode::Fp4 => [
+            ("multipliers", 0.110),
+            ("l1_adder", 0.190),
+            ("l2_adder", 0.090),
+            ("fp_acc_adder", 0.400),
+            ("acc_register", 0.130),
+            ("exp_adders", 0.045),
+            ("shared_exp", 0.035),
+        ],
+    }
+}
+
+/// Core-level (4x16 grid) energy per multiplication OP [pJ]:
+/// `E_core/op = mac_pj_per_op * array_factor(mode) + sram_pj_per_op`.
+/// Calibrated on Table IV "ours" column: 3.20 / 1.87-1.88 / 0.43.
+/// INT8's factor < 1 reflects in-array operand reuse and a constant
+/// shared exponent over the 8-cycle block (less switching); FP modes
+/// pay exponent-diverse alignment toggling and denser SRAM traffic.
+pub fn array_factor(mode: Mode) -> f64 {
+    match mode {
+        Mode::Int8 => 0.669,
+        Mode::Fp8Fp6 => 1.438,
+        Mode::Fp4 => 0.462,
+    }
+}
+
+/// SRAM / interface energy per multiplication OP at core level [pJ].
+pub const SRAM_PJ_PER_OP: f64 = 0.25;
+
+/// Our core area [mm^2] (Table IV).
+pub const CORE_AREA_MM2: f64 = 6.44;
+/// Dacapo core area [mm^2] (Table IV).
+pub const DACAPO_AREA_MM2: f64 = 8.66;
+/// Peak bandwidths [GB/s] (Table IV).
+pub const CORE_BW_GBS: f64 = 330.0;
+pub const DACAPO_BW_GBS: f64 = 640.0;
+
+/// Dacapo core energy per OP [pJ] (Table IV Dacapo column; from their
+/// ISCA'24 synthesis, same 16nm node).
+pub fn dacapo_pj_per_op(fmt: DacapoFormat) -> f64 {
+    match fmt {
+        DacapoFormat::Mx9 => 3.08,
+        DacapoFormat::Mx6 => 1.80,
+        DacapoFormat::Mx4 => 0.48,
+    }
+}

@@ -1,0 +1,180 @@
+//! On-chip memory-footprint accounting (regenerates Table III).
+//!
+//! The paper compares, for the pusher MLP (32-256-256-256-32), what each
+//! design must keep resident for inference and training:
+//!
+//! * **FP32**: full weights; training adds stored activations (for all
+//!   layer inputs) and one layer's error buffer.
+//! * **Dacapo** (vector blocks): quantized W **and** a second quantized
+//!   Wᵀ copy (row grouping differs after transposition), a single-layer
+//!   activation ping-pong buffer for inference, all stored activations
+//!   Aᵀ for training, and a column-grouped error copy; the row-grouped
+//!   error reuses the activation buffer.
+//! * **Ours** (square blocks): one W copy serves both passes (transpose
+//!   is a block permutation), activations are stored once, and the error
+//!   buffer needs no second grouping. Inference buffers stream (0 KB
+//!   resident beyond W), matching the paper's accounting convention.
+
+use crate::mx::dacapo::DacapoFormat;
+use crate::mx::element::ElementFormat;
+use crate::mx::tensor::Layout;
+use crate::mx::MxFormat;
+
+/// An MLP shape: `dims[0]` inputs, `dims.last()` outputs.
+#[derive(Debug, Clone)]
+pub struct MlpShape {
+    pub dims: Vec<usize>,
+}
+
+impl MlpShape {
+    pub fn pusher() -> Self {
+        Self { dims: vec![32, 256, 256, 256, 32] }
+    }
+
+    /// Total weight parameters.
+    pub fn weight_params(&self) -> usize {
+        self.dims.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+
+    /// Activation elements stored for backprop: every layer *input*
+    /// (including the network input), per sample.
+    pub fn activation_elems_per_sample(&self) -> usize {
+        self.dims[..self.dims.len() - 1].iter().sum()
+    }
+
+    /// Widest layer (error-buffer sizing).
+    pub fn max_dim(&self) -> usize {
+        *self.dims.iter().max().unwrap()
+    }
+}
+
+/// One row of Table III, in KB (1 KB = 1024 bytes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Footprint {
+    pub w: f64,
+    pub a_inference: f64,
+    pub w_t: f64,
+    pub a_t_training: f64,
+    pub e_row: f64,
+    pub e_col: f64,
+}
+
+impl Footprint {
+    pub fn total(&self) -> f64 {
+        self.w + self.a_inference + self.w_t + self.a_t_training + self.e_row + self.e_col
+    }
+}
+
+fn kb(elems: usize, bits_per_elem: f64) -> f64 {
+    elems as f64 * bits_per_elem / 8.0 / 1024.0
+}
+
+/// FP32 baseline row.
+pub fn footprint_fp32(shape: &MlpShape, batch: usize) -> Footprint {
+    Footprint {
+        w: kb(shape.weight_params(), 32.0),
+        a_inference: 0.0,
+        w_t: 0.0, // FP32 transposes on the fly (no quantization grouping)
+        a_t_training: kb(shape.activation_elems_per_sample() * batch, 32.0),
+        e_row: kb(shape.max_dim() * batch, 32.0),
+        e_col: 0.0,
+    }
+}
+
+/// Dacapo row: MX9 vector blocks, two weight copies, col-grouped E copy.
+pub fn footprint_dacapo(shape: &MlpShape, batch: usize, fmt: DacapoFormat) -> Footprint {
+    let bpe = fmt.bits_per_element();
+    Footprint {
+        w: kb(shape.weight_params(), bpe),
+        a_inference: kb(shape.max_dim() * batch, bpe), // ping-pong buffer
+        w_t: kb(shape.weight_params(), bpe),           // second quantized copy
+        a_t_training: kb(shape.activation_elems_per_sample() * batch, bpe),
+        e_row: 0.0, // reuses the inference activation buffer
+        e_col: kb(shape.max_dim() * batch, bpe), // column-grouped copy
+    }
+}
+
+/// Our row: square blocks — single W, single A, single E grouping.
+pub fn footprint_ours(shape: &MlpShape, batch: usize, fmt: ElementFormat) -> Footprint {
+    let bpe = MxFormat { element: fmt, layout: Layout::Square8x8 }.bits_per_element();
+    Footprint {
+        w: kb(shape.weight_params(), bpe),
+        a_inference: 0.0, // streamed; no second grouping needed
+        w_t: 0.0,         // transpose is free (block permutation)
+        a_t_training: kb(shape.activation_elems_per_sample() * batch, bpe),
+        e_row: kb(shape.max_dim() * batch, bpe),
+        e_col: 0.0, // same storage serves both dot-product directions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn near(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol
+    }
+
+    #[test]
+    fn pusher_weight_count() {
+        let s = MlpShape::pusher();
+        assert_eq!(s.weight_params(), 32 * 256 + 256 * 256 + 256 * 256 + 256 * 32);
+        assert_eq!(s.activation_elems_per_sample(), 32 + 256 + 256 + 256);
+    }
+
+    #[test]
+    fn table3_fp32_rows() {
+        let s = MlpShape::pusher();
+        for (batch, a_t, e) in [(16, 50.0, 16.0), (32, 100.0, 32.0), (64, 200.0, 64.0)] {
+            let f = footprint_fp32(&s, batch);
+            assert!(near(f.w, 576.0, 0.1), "W {}", f.w);
+            assert!(near(f.a_t_training, a_t, 0.1), "A^T {}", f.a_t_training);
+            assert!(near(f.e_row, e, 0.1), "E {}", f.e_row);
+        }
+        assert!(near(footprint_fp32(&s, 32).total(), 708.0, 0.5));
+    }
+
+    #[test]
+    fn table3_dacapo_rows() {
+        let s = MlpShape::pusher();
+        let f16 = footprint_dacapo(&s, 16, DacapoFormat::Mx9);
+        assert!(near(f16.w, 162.0, 0.5), "W {}", f16.w);
+        assert!(near(f16.w_t, 162.0, 0.5));
+        assert!(near(f16.a_inference, 4.5, 0.1), "A {}", f16.a_inference);
+        assert!(near(f16.a_t_training, 14.1, 0.2), "A^T {}", f16.a_t_training);
+        assert!(near(f16.e_col, 4.5, 0.1));
+        assert!(near(f16.total(), 347.1, 1.0), "total {}", f16.total());
+        let f32b = footprint_dacapo(&s, 32, DacapoFormat::Mx9);
+        assert!(near(f32b.total(), 370.1, 1.0), "total {}", f32b.total());
+        let f64b = footprint_dacapo(&s, 64, DacapoFormat::Mx9);
+        assert!(near(f64b.total(), 416.3, 1.0), "total {}", f64b.total());
+    }
+
+    #[test]
+    fn table3_ours_rows() {
+        let s = MlpShape::pusher();
+        let f16 = footprint_ours(&s, 16, ElementFormat::Int8);
+        assert!(near(f16.w, 146.3, 0.5), "W {}", f16.w);
+        assert_eq!(f16.w_t, 0.0);
+        assert!(near(f16.a_t_training, 12.7, 0.2), "A^T {}", f16.a_t_training);
+        assert!(near(f16.e_row, 4.1, 0.1), "E {}", f16.e_row);
+        assert!(near(f16.total(), 163.1, 1.0), "total {}", f16.total());
+        let f32b = footprint_ours(&s, 32, ElementFormat::Int8);
+        assert!(near(f32b.total(), 179.8, 1.0), "total {}", f32b.total());
+        let f64b = footprint_ours(&s, 64, ElementFormat::Int8);
+        assert!(near(f64b.total(), 213.4, 1.0), "total {}", f64b.total());
+    }
+
+    #[test]
+    fn headline_ratios() {
+        // Dacapo needs 2.06x our memory; we are 3.94x below FP32 (B=32).
+        let s = MlpShape::pusher();
+        let ours = footprint_ours(&s, 32, ElementFormat::Int8).total();
+        let dacapo = footprint_dacapo(&s, 32, DacapoFormat::Mx9).total();
+        let fp32 = footprint_fp32(&s, 32).total();
+        assert!(near(dacapo / ours, 2.06, 0.03), "{}", dacapo / ours);
+        assert!(near(fp32 / ours, 3.94, 0.03), "{}", fp32 / ours);
+        // 51% memory-footprint reduction headline
+        assert!(near(1.0 - ours / dacapo, 0.51, 0.02), "{}", 1.0 - ours / dacapo);
+    }
+}

@@ -1,0 +1,31 @@
+//! The learning-enabled MX GeMM core (paper §IV-B, Fig. 6).
+//!
+//! A 4x16 grid of square-block PE arrays (4096 MACs total), output-
+//! stationary, fed through a 5280 bit/cycle memory interface (~330 GB/s
+//! at 500 MHz). The grid height of 4 matches a batch of 32 (32/8 square
+//! rows); the width of 16 balances bandwidth and parallelism.
+//!
+//! * [`core::GemmCore`] — functional GeMM + cycle/event accounting.
+//! * [`schedule`] — the cycle-accurate pass schedule: per-GeMM latency
+//!   with input-bandwidth stalls and FP32 writeback stalls (the wgrad
+//!   utilization collapse the paper describes), plus whole-training-step
+//!   costing for MLP workloads.
+//! * [`quantizer::Quantizer`] — the output requantization unit.
+//! * [`memory`] — on-chip footprint accounting (regenerates Table III).
+
+pub mod core;
+pub mod memory;
+pub mod quantizer;
+pub mod schedule;
+
+pub use self::core::GemmCore;
+pub use memory::{footprint_dacapo, footprint_fp32, footprint_ours, MlpShape};
+pub use schedule::{gemm_cycles, train_step_cycles, CycleCost, Stage};
+
+/// Grid geometry and interface width (paper §IV-B).
+pub const GRID_ROWS: usize = 4;
+pub const GRID_COLS: usize = 16;
+/// Peak memory bandwidth in bits per cycle (~330 GB/s @ 500 MHz).
+pub const BW_BITS_PER_CYCLE: u64 = 5280;
+/// Total MACs (iso-peak-throughput comparison point with Dacapo).
+pub const TOTAL_MACS: usize = GRID_ROWS * GRID_COLS * 64;

@@ -1,0 +1,75 @@
+//! The output quantizer unit (paper Fig. 6, right).
+//!
+//! FP32 partial results written back from the PE grid pass through this
+//! unit to be re-encoded as square MX blocks before they re-enter memory
+//! (activations feeding the next layer, or errors feeding backprop).
+//! Event counts (max-scan + encode per element) feed the energy model.
+
+use crate::mx::element::ElementFormat;
+use crate::mx::tensor::{Layout, MxTensor};
+use crate::util::mat::Mat;
+
+/// Quantizer event counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QuantEvents {
+    /// Per-element max-magnitude scan compares.
+    pub max_scans: u64,
+    /// Per-element encodes (round + pack).
+    pub encodes: u64,
+    /// Blocks produced (one shared-exponent derivation each).
+    pub blocks: u64,
+}
+
+/// The requantization unit.
+#[derive(Debug, Default)]
+pub struct Quantizer {
+    pub events: QuantEvents,
+}
+
+impl Quantizer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quantize an FP32 result matrix into square MX blocks.
+    pub fn quantize(&mut self, m: &Mat, fmt: ElementFormat) -> MxTensor {
+        let t = MxTensor::quantize(m, fmt, Layout::Square8x8);
+        let n_elems = (t.brows * t.bcols * 64) as u64;
+        self.events.max_scans += n_elems;
+        self.events.encodes += n_elems;
+        self.events.blocks += t.blocks.len() as u64;
+        t
+    }
+
+    /// Cycles to quantize one 4x16-tile writeback burst: the unit is
+    /// pipelined one block per cycle (64 parallel encoders).
+    pub fn burst_cycles(&self) -> u64 {
+        64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn quantize_counts_events() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::randn(16, 16, 1.0, &mut rng);
+        let mut q = Quantizer::new();
+        let t = q.quantize(&m, ElementFormat::E4M3);
+        assert_eq!(t.blocks.len(), 4);
+        assert_eq!(q.events.blocks, 4);
+        assert_eq!(q.events.encodes, 256);
+    }
+
+    #[test]
+    fn quantize_roundtrip_reasonable() {
+        let mut rng = Pcg64::new(2);
+        let m = Mat::randn(32, 32, 1.0, &mut rng);
+        let mut q = Quantizer::new();
+        let t = q.quantize(&m, ElementFormat::Int8);
+        assert!(t.dequantize().mse(&m) < 1e-3);
+    }
+}

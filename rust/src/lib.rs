@@ -1,0 +1,51 @@
+//! # mxscale
+//!
+//! Reproduction of *"Efficient Precision-Scalable Hardware for Microscaling
+//! (MX) Processing in Robotics Learning"* (ISLPED 2025, Cuyckens et al.).
+//!
+//! The crate implements, in software, every system the paper describes:
+//!
+//! * [`mx`] — bit-exact codecs for all six OCP MX formats (MXINT8,
+//!   MXFP8 E5M2/E4M3, MXFP6 E3M2/E2M3, MXFP4 E2M1), vector (32-element)
+//!   and square (8x8, 64-element) shared-exponent block quantizers, and
+//!   the Dacapo MX9/MX6/MX4 two-level shared-microexponent baseline.
+//! * [`arith`] — a bit-exact, cycle-annotated model of the paper's
+//!   precision-scalable MAC unit: sixteen 2-bit multipliers, the
+//!   hierarchical L1/L2 adders, FP32 accumulation with a 26(+2)-bit
+//!   mantissa datapath, and the mode-specific bypass network.
+//! * [`pearray`] — the 64-MAC square-block PE array (8/2/1 cycles per
+//!   block product in INT8/FP8-FP6/FP4 mode) plus a cycle-accurate
+//!   Dacapo-style weight-stationary systolic array baseline.
+//! * [`gemmcore`] — the learning-enabled 4x16 GeMM core: output-stationary
+//!   dataflow, 5280 bit/cycle bandwidth model, quantizer unit, and the
+//!   forward / backward / weight-gradient execution schedules.
+//! * [`energy`] — component-level area/energy models for both designs,
+//!   calibrated per the paper's synthesis data (TSMC 16nm, 500 MHz);
+//!   regenerates Tables II-IV and Fig. 7.
+//! * [`workloads`] — the four robotics dynamics-learning workloads
+//!   (cartpole, pusher, reacher, halfcheetah) as deterministic physics
+//!   simulators producing (state, action) -> next-state datasets.
+//! * [`trainer`] — the continual-learning loop: MX quantization-aware
+//!   training of the 4-layer dynamics MLP, with per-step latency/energy
+//!   accounting on the simulated hardware; regenerates Figs. 2 and 8.
+//! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX train/eval
+//!   graphs (`artifacts/*.hlo.txt`); Python never runs at training time.
+//! * [`coordinator`] — experiment configs, the CLI, and the per-table /
+//!   per-figure reproduction harnesses.
+//!
+//! See `DESIGN.md` for the system inventory and the paper-to-module map,
+//! and `EXPERIMENTS.md` for measured-vs-paper results.
+
+pub mod arith;
+pub mod coordinator;
+pub mod energy;
+pub mod gemmcore;
+pub mod mx;
+pub mod pearray;
+pub mod runtime;
+pub mod sim;
+pub mod trainer;
+pub mod util;
+pub mod workloads;
+
+pub use mx::{ElementFormat, MxFormat};

@@ -1,0 +1,6 @@
+//! mxscale CLI entrypoint (L3 leader).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(mxscale::coordinator::run_cli(&argv));
+}

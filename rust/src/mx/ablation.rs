@@ -1,0 +1,99 @@
+//! Block-granularity ablation (the paper's §IV-A design choice).
+//!
+//! The paper selects 8x8 (64-element) squares "to balance granularity
+//! and efficiency while maintaining compatibility with the MX standard"
+//! (groups must be multiples of 32). This module quantizes through
+//! arbitrary k x k squares so `mxscale repro ablation` can show the
+//! tradeoff the authors navigated: smaller squares track local dynamic
+//! range better (lower error) but pay more shared-exponent storage and
+//! break MX-standard compatibility below 32 elements.
+
+use crate::mx::block::{fake_quant_block_fast, shared_exponent};
+use crate::mx::element::ElementFormat;
+use crate::util::mat::Mat;
+
+/// Fake-quantize through k x k square blocks (k need not be 8).
+pub fn fake_quant_square_k(m: &Mat, format: ElementFormat, k: usize) -> Mat {
+    assert!(k > 0);
+    let mut out = m.clone();
+    let mut buf = vec![0.0f32; k * k];
+    for br in 0..m.rows.div_ceil(k) {
+        for bc in 0..m.cols.div_ceil(k) {
+            for i in 0..k {
+                for j in 0..k {
+                    let (r, c) = (br * k + i, bc * k + j);
+                    buf[i * k + j] = if r < m.rows && c < m.cols { m.at(r, c) } else { 0.0 };
+                }
+            }
+            fake_quant_block_fast(&mut buf, format);
+            for i in 0..k {
+                for j in 0..k {
+                    let (r, c) = (br * k + i, bc * k + j);
+                    if r < m.rows && c < m.cols {
+                        *out.at_mut(r, c) = buf[i * k + j];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Storage bits/element for k x k squares (8-bit shared exponent each).
+pub fn bits_per_element_k(format: ElementFormat, k: usize) -> f64 {
+    format.bits() as f64 + 8.0 / (k * k) as f64
+}
+
+/// Whether a k x k square satisfies the MX standard's "groups are
+/// multiples of 32 elements" constraint.
+pub fn mx_standard_compatible(k: usize) -> bool {
+    (k * k) % 32 == 0
+}
+
+/// One ablation row: block edge, bits/elem, MSE on the given data.
+pub fn ablate(m: &Mat, format: ElementFormat, ks: &[usize]) -> Vec<(usize, f64, f64, bool)> {
+    ks.iter()
+        .map(|&k| {
+            let q = fake_quant_square_k(m, format, k);
+            (k, bits_per_element_k(format, k), q.mse(m), mx_standard_compatible(k))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::tensor::{fake_quant_mat_fast, Layout};
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn k8_matches_production_path() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::randn(32, 32, 1.0, &mut rng);
+        let a = fake_quant_square_k(&m, ElementFormat::E4M3, 8);
+        let b = fake_quant_mat_fast(&m, ElementFormat::E4M3, Layout::Square8x8);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn smaller_blocks_quantize_better_but_cost_more() {
+        // data with per-4x4-tile scale variation
+        let mut rng = Pcg64::new(2);
+        let m = Mat::from_fn(32, 32, |r, c| {
+            rng.normal_f32() * (((r / 4 + c / 4) % 5) as f32 * 2.0).exp2()
+        });
+        let rows = ablate(&m, ElementFormat::Int8, &[4, 8, 16]);
+        // error grows with block size on locally-scaled data
+        assert!(rows[0].2 <= rows[1].2 && rows[1].2 <= rows[2].2, "{rows:?}");
+        // storage shrinks with block size
+        assert!(rows[0].1 > rows[1].1 && rows[1].1 > rows[2].1);
+    }
+
+    #[test]
+    fn standard_compatibility() {
+        assert!(mx_standard_compatible(8)); // 64 = 2x32
+        assert!(!mx_standard_compatible(4)); // 16 < 32
+        assert!(mx_standard_compatible(16)); // 256 = 8x32
+        assert!(!mx_standard_compatible(6)); // 36
+    }
+}

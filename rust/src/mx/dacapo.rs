@@ -1,0 +1,297 @@
+//! Dacapo's MX9 / MX6 / MX4 baseline formats (shared microexponents).
+//!
+//! Dacapo (ISCA'24) implements the precursor MX format of Rouhani et al.,
+//! "With Shared Microexponents, a Little Shifting Goes a Long Way"
+//! (ISCA'23), *not* the OCP standard (paper §V-C):
+//!
+//! * 16-element vector blocks with an 8-bit shared exponent (level 1);
+//! * a 1-bit micro-exponent per 2-element subgroup (level 2), giving
+//!   subgroups whose local max is small one extra binade of precision;
+//! * sign-magnitude element payloads of 1+7 / 1+4 / 1+2 bits for
+//!   MX9 / MX6 / MX4 (9/6/4 bits per element average incl. the shared
+//!   fields: 8/16 + 1/2 + payload).
+//!
+//! Value of element `i`: `(-1)^s * m / 2^mant_bits * 2^(E - D_i)` where
+//! `E` is the block's shared exponent and `D_i ∈ {0,1}` its subgroup's
+//! micro-exponent.
+
+use crate::mx::block::{SCALE_EMAX, SCALE_EMIN};
+use crate::mx::element::{exp2i, rne};
+use crate::util::mat::Mat;
+
+/// Dacapo block size and subgroup size (ISCA'23 BDR paper, Dacapo config).
+pub const DACAPO_BLOCK: usize = 16;
+pub const DACAPO_SUBGROUP: usize = 2;
+
+/// MX9 / MX6 / MX4.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DacapoFormat {
+    Mx9,
+    Mx6,
+    Mx4,
+}
+
+impl DacapoFormat {
+    /// Sign-magnitude mantissa bits of the element payload.
+    pub const fn mant_bits(&self) -> u32 {
+        match self {
+            DacapoFormat::Mx9 => 7,
+            DacapoFormat::Mx6 => 4,
+            DacapoFormat::Mx4 => 2,
+        }
+    }
+
+    /// Average bits per element: payload + 1/2 (micro-exp) + 8/16 (shared).
+    pub fn bits_per_element(&self) -> f64 {
+        (1 + self.mant_bits()) as f64 + 0.5 + 8.0 / DACAPO_BLOCK as f64
+    }
+
+    /// Bits per element counting only the payload (sign + mantissa).
+    pub const fn payload_bits(&self) -> u32 {
+        1 + self.mant_bits()
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DacapoFormat::Mx9 => "mx9",
+            DacapoFormat::Mx6 => "mx6",
+            DacapoFormat::Mx4 => "mx4",
+        }
+    }
+
+    /// The corresponding format of ours under iso-bit comparison
+    /// (paper Table IV rows: MXINT8 vs MX9, MXFP8/6 vs MX6, MXFP4 vs MX4).
+    pub fn ours_equivalent(&self) -> crate::mx::ElementFormat {
+        use crate::mx::ElementFormat as E;
+        match self {
+            DacapoFormat::Mx9 => E::Int8,
+            DacapoFormat::Mx6 => E::E4M3,
+            DacapoFormat::Mx4 => E::E2M1,
+        }
+    }
+}
+
+/// One quantized Dacapo block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DacapoBlock {
+    /// Shared exponent E (power of two of the block max's binade).
+    pub shared_exp: i32,
+    /// Per-subgroup 1-bit micro-exponents D_i (len = 8 for block of 16).
+    pub micro: Vec<u8>,
+    /// Sign-magnitude payloads: (sign, magnitude).
+    pub codes: Vec<(u8, u8)>,
+    pub format: DacapoFormat,
+}
+
+impl DacapoBlock {
+    pub fn decode(&self, i: usize) -> f64 {
+        let (s, m) = self.codes[i];
+        let d = self.micro[i / DACAPO_SUBGROUP] as i32;
+        let sign = if s == 1 { -1.0 } else { 1.0 };
+        let frac = m as f64 / exp2i(self.format.mant_bits() as i32);
+        sign * frac * exp2i(self.shared_exp - d)
+    }
+
+    pub fn dequantize(&self) -> Vec<f64> {
+        (0..self.codes.len()).map(|i| self.decode(i)).collect()
+    }
+
+    /// Stored bits: 8 shared + 1/subgroup + payload/element.
+    pub fn storage_bits(&self) -> usize {
+        8 + self.micro.len() + self.codes.len() * self.format.payload_bits() as usize
+    }
+}
+
+/// Quantize 16 values into a Dacapo block.
+///
+/// Shared exponent: binade *above* the block max so that all fractions are
+/// in [-1, 1) (BFP convention: `E = floor(log2(max)) + 1`). Each 2-element
+/// subgroup sets `D=1` (one extra precision bit) iff its own max fits in
+/// half the block range.
+pub fn quantize_dacapo_block(values: &[f32], format: DacapoFormat) -> DacapoBlock {
+    assert_eq!(values.len(), DACAPO_BLOCK);
+    let max_abs = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let shared_exp = if max_abs == 0.0 {
+        SCALE_EMIN
+    } else {
+        ((max_abs as f64).log2().floor() as i32 + 1).clamp(SCALE_EMIN, SCALE_EMAX)
+    };
+    let mant = format.mant_bits() as i32;
+    let grid = exp2i(mant); // 2^mant steps per unit fraction
+    let n_sub = DACAPO_BLOCK / DACAPO_SUBGROUP;
+    let mut micro = vec![0u8; n_sub];
+    for (g, m) in micro.iter_mut().enumerate() {
+        let sub = &values[g * DACAPO_SUBGROUP..(g + 1) * DACAPO_SUBGROUP];
+        let sub_max = sub.iter().fold(0.0f32, |mm, &v| mm.max(v.abs()));
+        // subgroup fits in the lower binade -> shift up one bit
+        if sub_max as f64 <= exp2i(shared_exp - 1) * (1.0 - 0.5 / grid) {
+            *m = 1;
+        }
+    }
+    let max_mag = (grid - 1.0) as u8 as f64; // saturate at 2^mant - 1
+    let codes = values
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let d = micro[i / DACAPO_SUBGROUP] as i32;
+            let frac = v as f64 / exp2i(shared_exp - d);
+            let q = rne(frac.abs() * grid).min(max_mag);
+            ((v < 0.0) as u8, q as u8)
+        })
+        .collect();
+    DacapoBlock { shared_exp, micro, codes, format }
+}
+
+/// A Dacapo-quantized matrix: row-vector 16-element blocks.
+#[derive(Debug, Clone)]
+pub struct DacapoTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub format: DacapoFormat,
+    pub blocks: Vec<DacapoBlock>,
+    pub bcols: usize,
+}
+
+impl DacapoTensor {
+    pub fn quantize(m: &Mat, format: DacapoFormat) -> DacapoTensor {
+        let bcols = m.cols.div_ceil(DACAPO_BLOCK);
+        let mut blocks = Vec::with_capacity(m.rows * bcols);
+        for r in 0..m.rows {
+            for bc in 0..bcols {
+                let mut vals = [0.0f32; DACAPO_BLOCK];
+                for i in 0..DACAPO_BLOCK {
+                    let c = bc * DACAPO_BLOCK + i;
+                    if c < m.cols {
+                        vals[i] = m.at(r, c);
+                    }
+                }
+                blocks.push(quantize_dacapo_block(&vals, format));
+            }
+        }
+        DacapoTensor { rows: m.rows, cols: m.cols, format, blocks, bcols }
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            for bc in 0..self.bcols {
+                let b = &self.blocks[r * self.bcols + bc];
+                for i in 0..DACAPO_BLOCK {
+                    let c = bc * DACAPO_BLOCK + i;
+                    if c < self.cols {
+                        *m.at_mut(r, c) = b.decode(i) as f32;
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    pub fn storage_bits(&self) -> usize {
+        self.blocks.iter().map(|b| b.storage_bits()).sum()
+    }
+
+    pub fn storage_kib(&self) -> f64 {
+        self.storage_bits() as f64 / 8.0 / 1024.0
+    }
+
+    /// Fake-quantize through Dacapo's format (for training comparisons).
+    pub fn fake_quant(m: &Mat, format: DacapoFormat) -> Mat {
+        DacapoTensor::quantize(m, format).dequantize()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+    use crate::util::testing::forall;
+
+    #[test]
+    fn bits_per_element_match_names() {
+        assert_eq!(DacapoFormat::Mx9.bits_per_element(), 9.0);
+        assert_eq!(DacapoFormat::Mx6.bits_per_element(), 6.0);
+        assert_eq!(DacapoFormat::Mx4.bits_per_element(), 4.0);
+    }
+
+    #[test]
+    fn decode_respects_micro_exponent() {
+        // construct data where one subgroup is far smaller than the max
+        let mut v = [0.0f32; 16];
+        v[0] = 1.0;
+        v[8] = 0.01;
+        v[9] = 0.02;
+        let b = quantize_dacapo_block(&v, DacapoFormat::Mx9);
+        assert_eq!(b.micro[0], 0, "max subgroup has D=0");
+        assert_eq!(b.micro[4], 1, "small subgroup gets the extra bit");
+        // the small values are represented more precisely than without micro
+        let err_with = (b.decode(8) - 0.01).abs();
+        assert!(err_with <= exp2i(b.shared_exp - 1) / 128.0);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        forall(
+            0xDAC,
+            256,
+            |r| {
+                let mut v = [0.0f32; 16];
+                for x in v.iter_mut() {
+                    *x = r.normal_f32() * 2.0;
+                }
+                v
+            },
+            |v| {
+                let b = quantize_dacapo_block(v, DacapoFormat::Mx9);
+                let scale = exp2i(b.shared_exp);
+                for i in 0..16 {
+                    let err = (b.decode(i) - v[i] as f64).abs();
+                    // half a step at the element's effective grid, plus
+                    // saturation slack of one step
+                    let tol = scale / 128.0 * 1.5;
+                    if err > tol {
+                        return Err(format!("elem {i}: {} err {err} > {tol}", v[i]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mx4_coarser_than_mx9() {
+        let mut rng = Pcg64::new(5);
+        let m = Mat::randn(32, 32, 1.0, &mut rng);
+        let e9 = DacapoTensor::fake_quant(&m, DacapoFormat::Mx9).mse(&m);
+        let e4 = DacapoTensor::fake_quant(&m, DacapoFormat::Mx4).mse(&m);
+        assert!(e9 < e4);
+        assert!(e9 < 1e-4);
+    }
+
+    #[test]
+    fn storage_bits_9_per_element() {
+        let m = Mat::zeros(16, 256);
+        let t = DacapoTensor::quantize(&m, DacapoFormat::Mx9);
+        // 16 rows * 16 blocks * (8 + 8 + 16*8) bits = exactly 9 bits/elem
+        assert_eq!(t.storage_bits(), 16 * 16 * (8 + 8 + 16 * 8));
+        assert_eq!(t.storage_bits() as f64 / (16.0 * 256.0), 9.0);
+    }
+
+    #[test]
+    fn transposed_quantization_differs_vector_grouping() {
+        // Dacapo's vector grouping: W and Wᵀ quantize differently -> the
+        // two-copies problem (Table III). Needs data whose dynamic range
+        // varies within rows.
+        let mut rng = Pcg64::new(6);
+        let m = Mat::from_fn(32, 32, |r, _| rng.normal_f32() * ((r % 7) as f32 - 3.0).exp2());
+        let w = DacapoTensor::fake_quant(&m, DacapoFormat::Mx9);
+        let wt = DacapoTensor::fake_quant(&m.transpose(), DacapoFormat::Mx9).transpose();
+        assert_ne!(w.data, wt.data);
+    }
+
+    #[test]
+    fn zero_block_roundtrips() {
+        let b = quantize_dacapo_block(&[0.0; 16], DacapoFormat::Mx6);
+        assert!(b.dequantize().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,547 @@
+//! Bit-exact element-format codecs for the six MX element types.
+//!
+//! Encoding follows OCP MX spec v1.0 semantics: round-to-nearest-even on
+//! the mantissa grid, saturate to the format's largest magnitude, flush
+//! magnitudes below half the smallest subnormal to (signed) zero. None of
+//! the sub-FP8 formats carry Inf/NaN; E5M2's IEEE specials are excluded by
+//! saturation (as in MX dot-product hardware, which never emits them).
+//!
+//! Codes are stored as the format's natural bit pattern in a `u8`:
+//! sign-magnitude `s | e | m` for the FP formats, two's-complement for
+//! INT8 (the OCP MXINT8 element: implied scale 2^-6, i.e. 1 sign bit,
+//! 1 integer bit, 6 fraction bits).
+
+/// One of the six MX element formats from the paper's Table I.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ElementFormat {
+    /// MXINT8 element: 8-bit two's complement, implied scale 2^-6.
+    Int8,
+    /// MXFP8 E5M2: 1s + 5e + 2m, bias 15.
+    E5M2,
+    /// MXFP8 E4M3: 1s + 4e + 3m, bias 7.
+    E4M3,
+    /// MXFP6 E3M2: 1s + 3e + 2m, bias 3.
+    E3M2,
+    /// MXFP6 E2M3: 1s + 2e + 3m, bias 1.
+    E2M3,
+    /// MXFP4 E2M1: 1s + 2e + 1m, bias 1.
+    E2M1,
+}
+
+impl ElementFormat {
+    /// Total storage bits per element.
+    pub const fn bits(&self) -> u32 {
+        match self {
+            ElementFormat::Int8 | ElementFormat::E5M2 | ElementFormat::E4M3 => 8,
+            ElementFormat::E3M2 | ElementFormat::E2M3 => 6,
+            ElementFormat::E2M1 => 4,
+        }
+    }
+
+    /// Exponent field width (0 for INT8).
+    pub const fn exp_bits(&self) -> u32 {
+        match self {
+            ElementFormat::Int8 => 0,
+            ElementFormat::E5M2 => 5,
+            ElementFormat::E4M3 => 4,
+            ElementFormat::E3M2 => 3,
+            ElementFormat::E2M3 | ElementFormat::E2M1 => 2,
+        }
+    }
+
+    /// Mantissa (fraction) field width.
+    pub const fn mant_bits(&self) -> u32 {
+        match self {
+            ElementFormat::Int8 => 6, // fraction bits of the 2^-6 fixed point
+            ElementFormat::E5M2 => 2,
+            ElementFormat::E4M3 => 3,
+            ElementFormat::E3M2 => 2,
+            ElementFormat::E2M3 => 3,
+            ElementFormat::E2M1 => 1,
+        }
+    }
+
+    /// IEEE-style exponent bias.
+    pub const fn bias(&self) -> i32 {
+        match self {
+            ElementFormat::Int8 => 0,
+            ElementFormat::E5M2 => 15,
+            ElementFormat::E4M3 => 7,
+            ElementFormat::E3M2 => 3,
+            ElementFormat::E2M3 => 1,
+            ElementFormat::E2M1 => 1,
+        }
+    }
+
+    /// Exponent of the largest power of two representable (OCP `emax`).
+    /// This is what divides the block max when deriving the shared scale.
+    pub const fn emax(&self) -> i32 {
+        match self {
+            ElementFormat::Int8 => 0, // largest power of two in [-2,2) grid is 1
+            ElementFormat::E5M2 => 15,
+            ElementFormat::E4M3 => 8, // E4M3 reclaims the top exponent (no Inf)
+            ElementFormat::E3M2 => 4,
+            ElementFormat::E2M3 => 2,
+            ElementFormat::E2M1 => 2,
+        }
+    }
+
+    /// Smallest normal exponent (1 - bias).
+    pub const fn emin(&self) -> i32 {
+        1 - self.bias()
+    }
+
+    /// Largest representable magnitude (the saturation value).
+    pub fn max_value(&self) -> f64 {
+        match self {
+            ElementFormat::Int8 => 127.0 / 64.0, // 1.984375
+            // (2 - 2^-m) * 2^emax, except E4M3 which loses its top
+            // mantissa code to NaN: max = 1.75 * 2^8 = 448.
+            ElementFormat::E5M2 => (2.0 - 0.25) * (1u64 << 15) as f64, // 57344
+            ElementFormat::E4M3 => 448.0,
+            ElementFormat::E3M2 => (2.0 - 0.25) * 16.0, // 28
+            ElementFormat::E2M3 => (2.0 - 0.125) * 4.0, // 7.5
+            ElementFormat::E2M1 => (2.0 - 0.5) * 4.0,   // 6
+        }
+    }
+
+    /// Smallest positive (subnormal) magnitude.
+    pub fn min_subnormal(&self) -> f64 {
+        match self {
+            ElementFormat::Int8 => 1.0 / 64.0,
+            _ => exp2i(self.emin() - self.mant_bits() as i32),
+        }
+    }
+
+    /// Short lowercase name used in CLI flags and artifact filenames.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElementFormat::Int8 => "int8",
+            ElementFormat::E5M2 => "e5m2",
+            ElementFormat::E4M3 => "e4m3",
+            ElementFormat::E3M2 => "e3m2",
+            ElementFormat::E2M3 => "e2m3",
+            ElementFormat::E2M1 => "e2m1",
+        }
+    }
+
+    /// Paper-style display name ("MXFP8 (E4M3)" etc.).
+    pub fn display(&self) -> &'static str {
+        match self {
+            ElementFormat::Int8 => "MXINT8",
+            ElementFormat::E5M2 => "MXFP8 (E5M2)",
+            ElementFormat::E4M3 => "MXFP8 (E4M3)",
+            ElementFormat::E3M2 => "MXFP6 (E3M2)",
+            ElementFormat::E2M3 => "MXFP6 (E2M3)",
+            ElementFormat::E2M1 => "MXFP4 (E2M1)",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<ElementFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "int8" | "mxint8" => Some(ElementFormat::Int8),
+            "e5m2" => Some(ElementFormat::E5M2),
+            "e4m3" => Some(ElementFormat::E4M3),
+            "e3m2" => Some(ElementFormat::E3M2),
+            "e2m3" => Some(ElementFormat::E2M3),
+            "e2m1" => Some(ElementFormat::E2M1),
+            _ => None,
+        }
+    }
+
+    /// The MAC operating mode this element format selects (paper §III-A).
+    pub fn mac_mode(&self) -> crate::arith::Mode {
+        use crate::arith::Mode;
+        match self {
+            ElementFormat::Int8 => Mode::Int8,
+            ElementFormat::E5M2 | ElementFormat::E4M3 | ElementFormat::E3M2 | ElementFormat::E2M3 => Mode::Fp8Fp6,
+            ElementFormat::E2M1 => Mode::Fp4,
+        }
+    }
+
+    /// Encode a (already scale-divided) value into this format's bit code.
+    ///
+    /// Round-to-nearest-even, saturating. Returns the natural bit pattern.
+    pub fn encode(&self, v: f64) -> u8 {
+        match self {
+            ElementFormat::Int8 => {
+                // fixed-point grid of 1/64, two's complement, saturating at
+                // +127/-128 ... the OCP spec saturates symmetric at ±127/64?
+                // Hardware (and the paper's INT8 MAC) uses the full two's
+                // complement range; we keep -128 representable on decode but
+                // saturate encodes at ±127 (symmetric), matching common MX
+                // quantizer implementations (e.g. microxcaling reference).
+                let q = rne(v * 64.0);
+                let q = q.clamp(-127.0, 127.0);
+                (q as i32 as i8) as u8
+            }
+            _ => self.encode_fp(v),
+        }
+    }
+
+    /// Decode a bit code into its exact real value (no shared scale).
+    pub fn decode(&self, code: u8) -> f64 {
+        match self {
+            ElementFormat::Int8 => (code as i8) as f64 / 64.0,
+            _ => self.decode_fp(code),
+        }
+    }
+
+    fn encode_fp(&self, v: f64) -> u8 {
+        let (eb, mb, bias) = (self.exp_bits(), self.mant_bits(), self.bias());
+        let sign = if v.is_sign_negative() { 1u8 } else { 0u8 };
+        let a = v.abs();
+        if a.is_nan() {
+            // never produced by the datapath; map to max magnitude
+            return (sign << (eb + mb)) | self.max_code();
+        }
+        let max = self.max_value();
+        if a >= max {
+            // saturate (covers +/-inf too)
+            return (sign << (eb + mb)) | self.max_code();
+        }
+        let emin = self.emin();
+        // quantize onto the grid: for exponent e, step = 2^(e - mb)
+        // subnormals use e = emin.
+        let e_real = if a == 0.0 { emin } else { a.log2().floor() as i32 };
+        let e = e_real.max(emin);
+        let step = exp2i(e - mb as i32);
+        let q = rne(a / step); // integer number of steps
+        let (mut exp_field, mut mant_field): (u32, u32);
+        let m_ones = (1u64 << mb) as f64;
+        if q >= 2.0 * m_ones {
+            // rounded up across the binade: mantissa overflow -> e+1, m=0
+            let e2 = e + 1;
+            if e2 > self.emax() {
+                return (sign << (eb + mb)) | self.max_code();
+            }
+            exp_field = (e2 + bias) as u32;
+            mant_field = 0;
+        } else if q >= m_ones {
+            // normal: implicit leading one
+            exp_field = (e + bias) as u32;
+            mant_field = (q - m_ones) as u32;
+        } else {
+            // subnormal (only reachable when e == emin)
+            exp_field = 0;
+            mant_field = q as u32;
+        }
+        // E4M3: code s.1111.111 is NaN; saturation above already avoided
+        // emitting it because max_value() == decode of s.1111.110.
+        if *self == ElementFormat::E4M3 && exp_field == 0xf && mant_field == 0x7 {
+            exp_field = 0xf;
+            mant_field = 0x6;
+        }
+        (sign << (eb + mb)) | ((exp_field as u8) << mb) | (mant_field as u8)
+    }
+
+    fn decode_fp(&self, code: u8) -> f64 {
+        let (eb, mb, bias) = (self.exp_bits(), self.mant_bits(), self.bias());
+        let total = 1 + eb + mb;
+        let code = code & ((1u16 << total) - 1) as u8;
+        let sign = if (code >> (eb + mb)) & 1 == 1 { -1.0 } else { 1.0 };
+        if self.is_special(code) {
+            // E5M2 Inf/NaN (never produced by the saturating datapath)
+            return if *self == ElementFormat::E5M2 && (code & 0x03) == 0 {
+                sign * f64::INFINITY
+            } else {
+                f64::NAN
+            };
+        }
+        let exp_field = ((code >> mb) & ((1 << eb) - 1) as u8) as i32;
+        let mant_field = (code & ((1 << mb) - 1) as u8) as f64;
+        let m_ones = (1u64 << mb) as f64;
+        if exp_field == 0 {
+            // subnormal
+            sign * mant_field / m_ones * exp2i(self.emin())
+        } else {
+            sign * (1.0 + mant_field / m_ones) * exp2i(exp_field - bias)
+        }
+    }
+
+    /// Bit code (without sign) of the maximum magnitude.
+    fn max_code(&self) -> u8 {
+        match self {
+            ElementFormat::Int8 => 127,
+            ElementFormat::E4M3 => 0x7e, // 1111.110 (1111.111 is NaN)
+            ElementFormat::E5M2 => 0x7b, // 11110.11 (11111.xx are Inf/NaN)
+            _ => {
+                // E3M2 / E2M3 / E2M1 have no specials: all-ones is max
+                let (eb, mb) = (self.exp_bits(), self.mant_bits());
+                let e = ((1u8 << eb) - 1) << mb;
+                let m = (1u8 << mb) - 1;
+                e | m
+            }
+        }
+    }
+
+    /// True if `code` is an IEEE special (E5M2 Inf/NaN, E4M3 NaN) that
+    /// the MX datapath never produces (saturating arithmetic).
+    pub fn is_special(&self, code: u8) -> bool {
+        match self {
+            ElementFormat::E5M2 => (code & 0x7c) == 0x7c,
+            ElementFormat::E4M3 => (code & 0x7f) == 0x7f,
+            _ => false,
+        }
+    }
+
+    /// Number of distinct codes (for exhaustive tests).
+    pub fn code_count(&self) -> usize {
+        1usize << self.bits()
+    }
+
+    /// Fake-quantize: decode(encode(v)) — the QAT primitive.
+    pub fn fake_quant(&self, v: f64) -> f64 {
+        self.decode(self.encode(v))
+    }
+
+    /// Decompose an FP code into (sign, unbiased exponent, mantissa with
+    /// implicit bit) — the representation the MAC datapath consumes.
+    /// For subnormals the implicit bit is 0 and the exponent is emin.
+    /// INT8 is not an FP format; panics.
+    pub fn fp_parts(&self, code: u8) -> (i32, i32, u32) {
+        assert!(*self != ElementFormat::Int8, "fp_parts on INT8");
+        let (eb, mb) = (self.exp_bits(), self.mant_bits());
+        let sign = if (code >> (eb + mb)) & 1 == 1 { -1 } else { 1 };
+        let exp_field = ((code >> mb) & ((1 << eb) - 1) as u8) as i32;
+        let mant_field = (code & ((1 << mb) - 1) as u8) as u32;
+        if exp_field == 0 {
+            (sign, self.emin(), mant_field) // subnormal: no implicit bit
+        } else {
+            (sign, exp_field - self.bias(), mant_field | (1 << mb))
+        }
+    }
+}
+
+/// 2^e as f64, exact for the exponent ranges involved here.
+pub fn exp2i(e: i32) -> f64 {
+    (e as f64).exp2()
+}
+
+/// Round half to even on an f64 that is an exact multiple count.
+pub fn rne(x: f64) -> f64 {
+    let f = x.floor();
+    let d = x - f;
+    if d > 0.5 {
+        f + 1.0
+    } else if d < 0.5 {
+        f
+    } else if (f as i64) % 2 == 0 {
+        f
+    } else {
+        f + 1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testing::forall;
+
+    const FP_FORMATS: [ElementFormat; 5] = [
+        ElementFormat::E5M2,
+        ElementFormat::E4M3,
+        ElementFormat::E3M2,
+        ElementFormat::E2M3,
+        ElementFormat::E2M1,
+    ];
+
+    /// Exhaustive-search encoder used as the oracle: nearest representable
+    /// value, ties to even mantissa code.
+    fn oracle_encode(fmt: ElementFormat, v: f64) -> f64 {
+        let mut best = f64::INFINITY;
+        let mut best_v = 0.0f64;
+        for code in 0..fmt.code_count() as u16 {
+            let code = code as u8;
+            if fmt.is_special(code) {
+                continue; // Inf/NaN code
+            }
+            let x = fmt.decode(code);
+            let d = (x - v).abs();
+            // tie-break toward even mantissa code (RNE)
+            let better = d < best || (d == best && (code & 1) == 0);
+            if better {
+                best = d;
+                best_v = x;
+            }
+        }
+        best_v
+    }
+
+    #[test]
+    fn table1_static_properties() {
+        // Matches the paper's Table I.
+        assert_eq!(ElementFormat::Int8.bits(), 8);
+        assert_eq!(ElementFormat::E5M2.bits(), 8);
+        assert_eq!(ElementFormat::E4M3.bits(), 8);
+        assert_eq!(ElementFormat::E3M2.bits(), 6);
+        assert_eq!(ElementFormat::E2M3.bits(), 6);
+        assert_eq!(ElementFormat::E2M1.bits(), 4);
+        assert_eq!(ElementFormat::E5M2.max_value(), 57344.0);
+        assert_eq!(ElementFormat::E4M3.max_value(), 448.0);
+        assert_eq!(ElementFormat::E3M2.max_value(), 28.0);
+        assert_eq!(ElementFormat::E2M3.max_value(), 7.5);
+        assert_eq!(ElementFormat::E2M1.max_value(), 6.0);
+    }
+
+    #[test]
+    fn decode_known_e2m1_codes() {
+        // E2M1 values: 0, 0.5, 1, 1.5, 2, 3, 4, 6 (positive half)
+        let f = ElementFormat::E2M1;
+        let vals: Vec<f64> = (0u8..8).map(|c| f.decode(c)).collect();
+        assert_eq!(vals, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+        assert_eq!(f.decode(0b1001), -0.5);
+    }
+
+    #[test]
+    fn decode_known_e4m3_codes() {
+        let f = ElementFormat::E4M3;
+        assert_eq!(f.decode(0x00), 0.0);
+        assert_eq!(f.decode(0x01), exp2i(-9)); // smallest subnormal 2^-9
+        assert_eq!(f.decode(0x08), exp2i(-6)); // smallest normal 2^-6
+        assert_eq!(f.decode(0x7e), 448.0); // max
+        assert_eq!(f.decode(0x38), 1.0);
+    }
+
+    #[test]
+    fn decode_known_e5m2_codes() {
+        let f = ElementFormat::E5M2;
+        assert_eq!(f.decode(0x3c), 1.0);
+        assert_eq!(f.decode(0x7b), 57344.0); // 1.75 * 2^15
+        assert_eq!(f.decode(0x01), exp2i(-16)); // 2^-14 * 0.25
+    }
+
+    #[test]
+    fn int8_codec_roundtrip_exact() {
+        let f = ElementFormat::Int8;
+        for code in 0..=255u8 {
+            let v = f.decode(code);
+            if (code as i8) == -128 {
+                continue; // encoder saturates symmetric, decode-only code
+            }
+            assert_eq!(f.encode(v), code, "code {code} value {v}");
+        }
+    }
+
+    #[test]
+    fn fp_codec_roundtrip_exact_all_formats() {
+        for fmt in FP_FORMATS {
+            for code in 0..fmt.code_count() as u16 {
+                let code = code as u8;
+                if fmt.is_special(code) {
+                    continue; // Inf/NaN
+                }
+                let v = fmt.decode(code);
+                let re = fmt.encode(v);
+                // -0.0 encodes to sign bit set; compare decoded values
+                assert_eq!(
+                    fmt.decode(re),
+                    v,
+                    "{fmt:?} code {code:#x} -> {v} -> {re:#x}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn encode_matches_exhaustive_oracle() {
+        for fmt in FP_FORMATS {
+            forall(
+                0xE1 ^ fmt.bits() as u64,
+                2000,
+                |r| {
+                    // span the format's full range including boundaries
+                    let m = fmt.max_value();
+                    match r.below(4) {
+                        0 => r.range_f64(-2.0 * m, 2.0 * m),
+                        1 => r.range_f64(-1.0, 1.0) * fmt.min_subnormal() * 4.0,
+                        2 => {
+                            // exact midpoints between representables
+                            let c = r.below(fmt.code_count() as u64 / 2) as u8;
+                            let c2 = c.wrapping_add(1);
+                            if fmt.is_special(c) || fmt.is_special(c2) {
+                                1.0
+                            } else {
+                                let a = fmt.decode(c);
+                                let b = fmt.decode(c2);
+                                if b > a {
+                                    (a + b) / 2.0
+                                } else {
+                                    a
+                                }
+                            }
+                        }
+                        _ => r.wide_f32() as f64,
+                    }
+                },
+                |&v| {
+                    let got = fmt.decode(fmt.encode(v));
+                    let want = oracle_encode(fmt, v);
+                    if (got - want).abs() > 0.0 && got.abs() != want.abs() {
+                        return Err(format!("{fmt:?}: encode({v}) = {got}, oracle {want}"));
+                    }
+                    // distance must be minimal even if tie-break differs
+                    if (got - v).abs() > (want - v).abs() + 1e-300 {
+                        return Err(format!("{fmt:?}: encode({v}) = {got} not nearest ({want})"));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_at_max() {
+        for fmt in FP_FORMATS {
+            let m = fmt.max_value();
+            assert_eq!(fmt.fake_quant(m * 8.0), m);
+            assert_eq!(fmt.fake_quant(-m * 8.0), -m);
+            assert_eq!(fmt.fake_quant(f64::INFINITY), m);
+        }
+        assert_eq!(ElementFormat::Int8.fake_quant(5.0), 127.0 / 64.0);
+    }
+
+    #[test]
+    fn tiny_values_flush_to_zero() {
+        for fmt in FP_FORMATS {
+            let eps = fmt.min_subnormal();
+            assert_eq!(fmt.fake_quant(eps * 0.49), 0.0, "{fmt:?}");
+            assert_eq!(fmt.fake_quant(eps), eps, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even() {
+        assert_eq!(rne(0.5), 0.0);
+        assert_eq!(rne(1.5), 2.0);
+        assert_eq!(rne(2.5), 2.0);
+        assert_eq!(rne(-0.5), 0.0);
+        assert_eq!(rne(2.4), 2.0);
+        assert_eq!(rne(2.6), 3.0);
+    }
+
+    #[test]
+    fn fp_parts_reconstruct_value() {
+        for fmt in FP_FORMATS {
+            for code in 0..fmt.code_count() as u16 {
+                let code = code as u8;
+                if fmt.is_special(code) {
+                    continue;
+                }
+                let (s, e, m) = fmt.fp_parts(code);
+                let v = s as f64 * m as f64 * exp2i(e - fmt.mant_bits() as i32);
+                assert_eq!(v, fmt.decode(code), "{fmt:?} code {code:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn e4m3_never_encodes_nan_pattern() {
+        // values right at/above max must hit 0x7e not 0x7f
+        let f = ElementFormat::E4M3;
+        for v in [447.9, 448.0, 449.0, 1e9] {
+            assert_ne!(f.encode(v) & 0x7f, 0x7f);
+        }
+    }
+}

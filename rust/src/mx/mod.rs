@@ -1,0 +1,60 @@
+//! Microscaling (MX) data formats — bit-exact codecs.
+//!
+//! Implements the six concrete formats of the OCP MX v1.0 standard used by
+//! the paper (Table I): MXINT8, MXFP8 E5M2, MXFP8 E4M3, MXFP6 E3M2,
+//! MXFP6 E2M3, MXFP4 E2M1 — plus the paper's two block-grouping schemes
+//! (32-element vectors per the standard, 64-element 8x8 squares per the
+//! paper's §IV-A contribution) and the Dacapo MX9/MX6/MX4 baseline format
+//! (shared microexponents, ISCA'23) used for every comparison.
+
+pub mod ablation;
+pub mod block;
+pub mod dacapo;
+pub mod element;
+pub mod tensor;
+
+pub use block::{quantize_block, ScaledBlock, SCALE_EMIN, SCALE_EMAX};
+pub use dacapo::{DacapoFormat, DacapoTensor};
+pub use element::ElementFormat;
+pub use tensor::{Layout, MxTensor};
+
+/// A complete MX configuration: element format + block grouping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MxFormat {
+    pub element: ElementFormat,
+    pub layout: Layout,
+}
+
+impl MxFormat {
+    /// The paper's configuration: the given element format over 8x8
+    /// square shared-exponent blocks.
+    pub const fn square(element: ElementFormat) -> Self {
+        Self { element, layout: Layout::Square8x8 }
+    }
+
+    /// The OCP-standard configuration: 32-element row-vector blocks.
+    pub const fn vector(element: ElementFormat) -> Self {
+        Self { element, layout: Layout::Vector32 }
+    }
+
+    /// Average storage bits per element including the amortized shared
+    /// exponent (8 bits over the block size).
+    pub fn bits_per_element(&self) -> f64 {
+        let shared = 8.0
+            / match self.layout {
+                Layout::Vector32 => 32.0,
+                Layout::Square8x8 => 64.0,
+            };
+        self.element.bits() as f64 + shared
+    }
+}
+
+/// All six standard element formats, in the paper's Table I order.
+pub const ALL_ELEMENT_FORMATS: [ElementFormat; 6] = [
+    ElementFormat::Int8,
+    ElementFormat::E5M2,
+    ElementFormat::E4M3,
+    ElementFormat::E3M2,
+    ElementFormat::E2M3,
+    ElementFormat::E2M1,
+];

@@ -1,0 +1,403 @@
+//! Block-quantized matrices: vector (OCP standard) vs square (the paper).
+//!
+//! The architectural point of the paper (§IV-A, Fig. 5): with row-vector
+//! 32-element groups, quantizing `W` and `Wᵀ` yields *different* shared
+//! exponents, so training hardware must either store two quantized copies
+//! or requantize between passes. With 8×8 square groups the transpose of a
+//! quantized tensor is a pure index permutation of the same blocks —
+//! one stored copy serves forward (`x Wᵀ`-style) and backward (`e W`)
+//! passes bit-identically. `MxTensor::transpose` implements exactly that,
+//! and the test suite asserts the bit-identity claim.
+
+use crate::mx::block::{quantize_block, ScaledBlock};
+use crate::mx::element::ElementFormat;
+use crate::util::mat::Mat;
+
+/// Block grouping scheme.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Layout {
+    /// OCP-standard 32-element row-vector blocks (Dacapo-style grouping).
+    Vector32,
+    /// The paper's 64-element (8×8) square blocks: two 32-element MX
+    /// groups sharing one exponent — MX-standard compatible.
+    Square8x8,
+}
+
+impl Layout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Layout::Vector32 => "vector32",
+            Layout::Square8x8 => "square8x8",
+        }
+    }
+}
+
+/// Square block edge (8) and element count (64).
+pub const SQ: usize = 8;
+pub const SQ_ELEMS: usize = SQ * SQ;
+/// Vector block length (32).
+pub const VEC: usize = 32;
+
+/// A block-quantized matrix.
+#[derive(Debug, Clone)]
+pub struct MxTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub format: ElementFormat,
+    pub layout: Layout,
+    /// Blocks in row-major block order. For `Square8x8`, block (br, bc)
+    /// holds the 8×8 tile at (8br, 8bc) in row-major element order; for
+    /// `Vector32`, block i holds 32 consecutive elements of a row
+    /// (rows are padded up to a multiple of 32).
+    pub blocks: Vec<ScaledBlock>,
+    /// Block-grid dims.
+    pub brows: usize,
+    pub bcols: usize,
+}
+
+impl MxTensor {
+    /// Quantize a dense matrix.
+    pub fn quantize(m: &Mat, format: ElementFormat, layout: Layout) -> MxTensor {
+        match layout {
+            Layout::Square8x8 => {
+                let brows = m.rows.div_ceil(SQ);
+                let bcols = m.cols.div_ceil(SQ);
+                let mut blocks = Vec::with_capacity(brows * bcols);
+                for br in 0..brows {
+                    for bc in 0..bcols {
+                        let tile = m.block(br * SQ, bc * SQ, SQ, SQ);
+                        blocks.push(quantize_block(&tile.data, format));
+                    }
+                }
+                MxTensor { rows: m.rows, cols: m.cols, format, layout, blocks, brows, bcols }
+            }
+            Layout::Vector32 => {
+                let bcols = m.cols.div_ceil(VEC);
+                let brows = m.rows;
+                let mut blocks = Vec::with_capacity(brows * bcols);
+                for r in 0..m.rows {
+                    for bc in 0..bcols {
+                        let mut vals = [0.0f32; VEC];
+                        for i in 0..VEC {
+                            let c = bc * VEC + i;
+                            if c < m.cols {
+                                vals[i] = m.at(r, c);
+                            }
+                        }
+                        blocks.push(quantize_block(&vals, format));
+                    }
+                }
+                MxTensor { rows: m.rows, cols: m.cols, format, layout, blocks, brows, bcols }
+            }
+        }
+    }
+
+    /// Dequantize back to a dense matrix.
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        match self.layout {
+            Layout::Square8x8 => {
+                for br in 0..self.brows {
+                    for bc in 0..self.bcols {
+                        let b = &self.blocks[br * self.bcols + bc];
+                        for i in 0..SQ {
+                            for j in 0..SQ {
+                                let (r, c) = (br * SQ + i, bc * SQ + j);
+                                if r < self.rows && c < self.cols {
+                                    *m.at_mut(r, c) = b.decode(i * SQ + j) as f32;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Layout::Vector32 => {
+                for r in 0..self.rows {
+                    for bc in 0..self.bcols {
+                        let b = &self.blocks[r * self.bcols + bc];
+                        for i in 0..VEC {
+                            let c = bc * VEC + i;
+                            if c < self.cols {
+                                *m.at_mut(r, c) = b.decode(i) as f32;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        m
+    }
+
+    /// Transpose **without requantization** — only possible for square
+    /// layout (the paper's storage contribution). Pure permutation: block
+    /// (br,bc) moves to (bc,br) and each 8×8 tile is transposed in place;
+    /// shared exponents are untouched, so dequantized values are
+    /// bit-identical to transposing the dequantized matrix.
+    ///
+    /// Returns `None` for vector layout, where the transposed grouping
+    /// crosses block boundaries and a requantization (or second stored
+    /// copy) is unavoidable — exactly the Dacapo inefficiency.
+    pub fn transpose(&self) -> Option<MxTensor> {
+        if self.layout != Layout::Square8x8 {
+            return None;
+        }
+        let mut blocks = Vec::with_capacity(self.blocks.len());
+        for bc in 0..self.bcols {
+            for br in 0..self.brows {
+                let b = &self.blocks[br * self.bcols + bc];
+                let mut codes = vec![0u8; SQ_ELEMS];
+                for i in 0..SQ {
+                    for j in 0..SQ {
+                        codes[j * SQ + i] = b.codes[i * SQ + j];
+                    }
+                }
+                blocks.push(ScaledBlock { scale_exp: b.scale_exp, format: b.format, codes });
+            }
+        }
+        Some(MxTensor {
+            rows: self.cols,
+            cols: self.rows,
+            format: self.format,
+            layout: self.layout,
+            blocks,
+            brows: self.bcols,
+            bcols: self.brows,
+        })
+    }
+
+    /// Total storage in bits (elements + shared exponents), counting the
+    /// padded block grid exactly as the hardware stores it.
+    pub fn storage_bits(&self) -> usize {
+        self.blocks.iter().map(|b| b.storage_bits()).sum()
+    }
+
+    /// Storage in KiB.
+    pub fn storage_kib(&self) -> f64 {
+        self.storage_bits() as f64 / 8.0 / 1024.0
+    }
+
+    /// Fake-quantize a dense matrix through this layout/format (QAT).
+    pub fn fake_quant(m: &Mat, format: ElementFormat, layout: Layout) -> Mat {
+        MxTensor::quantize(m, format, layout).dequantize()
+    }
+
+    /// Fetch the 8×8 tile (block) at block coords — square layout only.
+    pub fn square_block(&self, br: usize, bc: usize) -> &ScaledBlock {
+        assert_eq!(self.layout, Layout::Square8x8);
+        &self.blocks[br * self.bcols + bc]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::ALL_ELEMENT_FORMATS;
+    use crate::util::rng::Pcg64;
+
+    fn wide_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.wide_f32().clamp(-1e6, 1e6))
+    }
+
+    #[test]
+    fn square_transpose_is_bit_identical() {
+        // THE paper claim: quantize-then-transpose == transpose-then-quantize
+        // for square blocks (no requantization needed).
+        for fmt in ALL_ELEMENT_FORMATS {
+            let m = wide_mat(24, 16, 7 + fmt.bits() as u64);
+            let q = MxTensor::quantize(&m, fmt, Layout::Square8x8);
+            let qt = q.transpose().unwrap();
+            let direct = MxTensor::quantize(&m.transpose(), fmt, Layout::Square8x8);
+            assert_eq!(qt.dequantize(), direct.dequantize(), "{fmt:?}");
+            // and it equals the transpose of the dequantized original
+            assert_eq!(qt.dequantize(), q.dequantize().transpose(), "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn vector_transpose_requires_requantization() {
+        // The Dacapo problem: row-vector grouping of Wᵀ differs from W.
+        // Rows with distinct per-row scales quantize well row-wise, but
+        // transposed rows (original columns) mix all scales.
+        let mut rng = Pcg64::new(99);
+        let m = Mat::from_fn(32, 32, |r, _| rng.normal_f32() * ((r % 7) as f32 - 3.0).exp2());
+        let q = MxTensor::quantize(&m, ElementFormat::Int8, Layout::Vector32);
+        assert!(q.transpose().is_none());
+        let qt = MxTensor::quantize(&m.transpose(), ElementFormat::Int8, Layout::Vector32);
+        // quantizing the transpose gives *different* values than
+        // transposing the quantized matrix (different shared exponents)
+        let a = q.dequantize().transpose();
+        let b = qt.dequantize();
+        assert_ne!(a.data, b.data, "wide-dynamic-range matrix must quantize differently");
+    }
+
+    #[test]
+    fn roundtrip_error_small_for_gaussian_data() {
+        let mut rng = Pcg64::new(3);
+        let m = Mat::randn(64, 64, 1.0, &mut rng);
+        for fmt in ALL_ELEMENT_FORMATS {
+            for layout in [Layout::Vector32, Layout::Square8x8] {
+                let deq = MxTensor::fake_quant(&m, fmt, layout);
+                let rel = (deq.mse(&m).sqrt()) / (m.fro_norm() as f64 / 64.0);
+                // coarsest format (E2M1) should still be within ~25% RMS
+                assert!(rel < 0.25, "{fmt:?} {layout:?}: rel RMS {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn square_beats_vector_on_locally_scaled_data() {
+        // Data whose magnitude varies per 8x8 tile: square grouping tracks
+        // it; 32-wide row vectors straddle tiles and lose precision.
+        let mut rng = Pcg64::new(4);
+        let m = Mat::from_fn(32, 32, |r, c| {
+            let tile_scale = ((r / 8 + c / 8) as f32 * 4.0).exp2();
+            rng.normal_f32() * tile_scale
+        });
+        let sq = MxTensor::fake_quant(&m, ElementFormat::Int8, Layout::Square8x8);
+        let vec = MxTensor::fake_quant(&m, ElementFormat::Int8, Layout::Vector32);
+        // compare per-tile *relative* error (absolute MSE is dominated by
+        // the largest-scale tiles, where both groupings coincide)
+        let rel_err = |q: &Mat| -> f64 {
+            let mut total = 0.0;
+            for br in 0..4 {
+                for bc in 0..4 {
+                    let t = m.block(br * 8, bc * 8, 8, 8);
+                    let tq = q.block(br * 8, bc * 8, 8, 8);
+                    let scale = t.max_abs().max(1e-30) as f64;
+                    total += tq.mse(&t) / (scale * scale);
+                }
+            }
+            total
+        };
+        assert!(rel_err(&sq) < rel_err(&vec), "square {} vs vector {}", rel_err(&sq), rel_err(&vec));
+    }
+
+    #[test]
+    fn storage_accounting_8x8_vs_vector() {
+        // 256x256 INT8: square = 1024 blocks * (8 + 64*8) bits;
+        // vector = 256 rows * 8 blocks * (8 + 32*8) bits.
+        let m = Mat::zeros(256, 256);
+        let sq = MxTensor::quantize(&m, ElementFormat::Int8, Layout::Square8x8);
+        let vec = MxTensor::quantize(&m, ElementFormat::Int8, Layout::Vector32);
+        assert_eq!(sq.storage_bits(), 1024 * (8 + 64 * 8));
+        assert_eq!(vec.storage_bits(), 256 * 8 * (8 + 32 * 8));
+        assert!(sq.storage_bits() < vec.storage_bits());
+    }
+
+    #[test]
+    fn padding_tiles_roundtrip() {
+        // Non-multiple-of-8 dims: padded region must not corrupt values.
+        let m = wide_mat(13, 21, 11);
+        for layout in [Layout::Vector32, Layout::Square8x8] {
+            let q = MxTensor::quantize(&m, ElementFormat::E4M3, layout);
+            let d = q.dequantize();
+            assert_eq!((d.rows, d.cols), (13, 21));
+            // error bounded by format resolution relative to tile max
+            assert!(d.mse(&m) < m.max_abs() as f64 * m.max_abs() as f64 * 0.01);
+        }
+    }
+
+    #[test]
+    fn square_block_is_two_mx_groups() {
+        // MX-standard compatibility: 64 elements = 2 x 32-element groups
+        // sharing one exponent (paper §IV-A).
+        assert_eq!(SQ_ELEMS, 2 * VEC);
+    }
+}
+
+/// Fast in-place fake-quantization of a dense matrix (QAT hot path) —
+/// same values as `MxTensor::fake_quant`, no tensor materialization.
+pub fn fake_quant_mat_fast(m: &Mat, format: ElementFormat, layout: Layout) -> Mat {
+    use crate::mx::block::fake_quant_block_fast;
+    let mut out = m.clone();
+    match layout {
+        Layout::Square8x8 => {
+            let brows = m.rows.div_ceil(SQ);
+            let bcols = m.cols.div_ceil(SQ);
+            let mut buf = [0.0f32; SQ_ELEMS];
+            for br in 0..brows {
+                for bc in 0..bcols {
+                    let (r0, c0) = (br * SQ, bc * SQ);
+                    for i in 0..SQ {
+                        for j in 0..SQ {
+                            let (r, c) = (r0 + i, c0 + j);
+                            buf[i * SQ + j] = if r < m.rows && c < m.cols { m.at(r, c) } else { 0.0 };
+                        }
+                    }
+                    fake_quant_block_fast(&mut buf, format);
+                    for i in 0..SQ {
+                        for j in 0..SQ {
+                            let (r, c) = (r0 + i, c0 + j);
+                            if r < m.rows && c < m.cols {
+                                *out.at_mut(r, c) = buf[i * SQ + j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Layout::Vector32 => {
+            let bcols = m.cols.div_ceil(VEC);
+            let mut buf = [0.0f32; VEC];
+            for r in 0..m.rows {
+                for bc in 0..bcols {
+                    let c0 = bc * VEC;
+                    for i in 0..VEC {
+                        let c = c0 + i;
+                        buf[i] = if c < m.cols { m.at(r, c) } else { 0.0 };
+                    }
+                    fake_quant_block_fast(&mut buf, format);
+                    for i in 0..VEC {
+                        let c = c0 + i;
+                        if c < m.cols {
+                            *out.at_mut(r, c) = buf[i];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod fast_path_tests {
+    use super::*;
+    use crate::mx::ALL_ELEMENT_FORMATS;
+    use crate::util::rng::Pcg64;
+    use crate::util::testing::forall;
+
+    #[test]
+    fn fast_fake_quant_matches_codec_path() {
+        // the perf-pass contract: bit-identical to quantize->dequantize
+        forall(
+            0xFA57,
+            64,
+            |r: &mut Pcg64| {
+                let fmt = ALL_ELEMENT_FORMATS[r.below(6) as usize];
+                let rows = 8 + r.below(25) as usize;
+                let cols = 8 + r.below(25) as usize;
+                let mut m = Mat::zeros(rows, cols);
+                for v in m.data.iter_mut() {
+                    *v = r.wide_f32().clamp(-1e20, 1e20);
+                }
+                (fmt, m)
+            },
+            |(fmt, m)| {
+                for layout in [Layout::Square8x8, Layout::Vector32] {
+                    let slow = MxTensor::fake_quant(m, *fmt, layout);
+                    let fast = fake_quant_mat_fast(m, *fmt, layout);
+                    if slow.data != fast.data {
+                        let idx = slow.data.iter().zip(&fast.data).position(|(a, b)| a != b).unwrap();
+                        return Err(format!(
+                            "{fmt:?} {layout:?} elem {idx}: slow {} fast {} (input {})",
+                            slow.data[idx], fast.data[idx], m.data[idx]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! PE arrays: the paper's square-block array and the Dacapo baseline.
+//!
+//! [`array::PeArray`] is the paper's §IV-A contribution: 64 precision-
+//! scalable MACs multiplying two 8x8 shared-exponent square blocks in
+//! 8 / 2 / 1 cycles (INT8 / FP8-FP6 / FP4), output-stationary.
+//!
+//! [`systolic::SystolicArray`] is the Dacapo (ISCA'24) reference point: a
+//! weight-stationary systolic array with MX9/6/4 vector blocks, whose
+//! fill/drain overhead is what Table IV's latency comparison measures.
+
+pub mod array;
+pub mod systolic;
+
+pub use array::PeArray;
+pub use systolic::SystolicArray;

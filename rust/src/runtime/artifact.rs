@@ -1,0 +1,99 @@
+//! Artifact locations and the build manifest.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$MXSCALE_ARTIFACTS` or `./artifacts`.
+pub fn artifact_dir() -> PathBuf {
+    std::env::var_os("MXSCALE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Parsed `manifest.txt` (simple `key value...` lines from aot.py).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dims: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub lr: f64,
+    pub state_len: usize,
+    /// scheme -> train artifact filename
+    pub train: HashMap<String, String>,
+    /// scheme -> eval artifact filename
+    pub eval: HashMap<String, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let mut m = Manifest {
+            dims: Vec::new(),
+            batch: 0,
+            eval_batch: 0,
+            lr: 0.0,
+            state_len: 0,
+            train: HashMap::new(),
+            eval: HashMap::new(),
+        };
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("dims") => m.dims = it.map(|t| t.parse().unwrap_or(0)).collect(),
+                Some("batch") => m.batch = it.next().unwrap_or("0").parse()?,
+                Some("eval_batch") => m.eval_batch = it.next().unwrap_or("0").parse()?,
+                Some("lr") => m.lr = it.next().unwrap_or("0").parse()?,
+                Some("state_len") => m.state_len = it.next().unwrap_or("0").parse()?,
+                Some("train") => {
+                    if let (Some(s), Some(f)) = (it.next(), it.next()) {
+                        m.train.insert(s.to_string(), f.to_string());
+                    }
+                }
+                Some("eval") => {
+                    if let (Some(s), Some(f)) = (it.next(), it.next()) {
+                        m.eval.insert(s.to_string(), f.to_string());
+                    }
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(!m.dims.is_empty(), "manifest missing dims");
+        anyhow::ensure!(m.state_len > 0, "manifest missing state_len");
+        Ok(m)
+    }
+
+    pub fn train_path(&self, dir: &Path, scheme: &str) -> Option<PathBuf> {
+        self.train.get(scheme).map(|f| dir.join(f))
+    }
+
+    pub fn eval_path(&self, dir: &Path, scheme: &str) -> Option<PathBuf> {
+        self.eval.get(scheme).map(|f| dir.join(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "dims 32 256 256 256 32\nbatch 32\neval_batch 256\nlr 0.001\n\
+                    state_len 25\nstate_layout step then per-layer w,b,mw,vw,mb,vb\n\
+                    train fp32 train_step_fp32_b32.hlo.txt\neval fp32 eval_fp32_b256.hlo.txt\n";
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.dims, vec![32, 256, 256, 256, 32]);
+        assert_eq!(m.batch, 32);
+        assert_eq!(m.state_len, 25);
+        assert_eq!(m.train["fp32"], "train_step_fp32_b32.hlo.txt");
+        assert!(m.eval_path(Path::new("/a"), "fp32").unwrap().ends_with("eval_fp32_b256.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_empty_manifest() {
+        assert!(Manifest::parse("").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT/XLA runtime: load and execute the AOT-compiled JAX graphs.
+//!
+//! Python runs once at build time (`make artifacts`); this module is the
+//! request-path side: it loads `artifacts/*.hlo.txt` (HLO **text** — the
+//! xla_extension 0.5.1 in the `xla` crate rejects jax>=0.5 serialized
+//! protos), compiles them on the PJRT CPU client, and threads the flat
+//! training state through repeated executions with zero Python.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{artifact_dir, Manifest};
+pub use executor::{EvalExecutable, TrainExecutable};

@@ -1,0 +1,3 @@
+//! Cycle bookkeeping and run statistics shared by the simulators.
+
+pub mod stats;

@@ -1,0 +1,294 @@
+//! The dynamics-model MLP: f32 golden forward/backward + Adam.
+//!
+//! Architecture per the paper §V-C: 4 fully-connected layers, input and
+//! output width 32, hidden width 256, ReLU activations, MSE loss on
+//! normalized delta-state targets.
+
+use crate::util::mat::Mat;
+use crate::util::rng::Pcg64;
+
+/// Layer dims of the paper's MLP.
+pub const MLP_DIMS: [usize; 5] = [32, 256, 256, 256, 32];
+
+/// A fully-connected network (weights `[din, dout]`, row-major).
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub weights: Vec<Mat>,
+    pub biases: Vec<Vec<f32>>,
+    // Adam state
+    m_w: Vec<Mat>,
+    v_w: Vec<Mat>,
+    m_b: Vec<Vec<f32>>,
+    v_b: Vec<Vec<f32>>,
+    pub step: u64,
+}
+
+/// Gradients matching an [`Mlp`]'s parameters.
+#[derive(Debug, Clone)]
+pub struct MlpGrads {
+    pub d_weights: Vec<Mat>,
+    pub d_biases: Vec<Vec<f32>>,
+}
+
+/// Forward-pass tape for backprop.
+#[derive(Debug, Clone)]
+pub struct Tape {
+    /// Layer inputs: activations[0] = X, activations[i] = input of layer i.
+    pub activations: Vec<Mat>,
+    /// Pre-activation values of each layer (for the ReLU mask).
+    pub pre_acts: Vec<Mat>,
+    /// Network output.
+    pub output: Mat,
+}
+
+impl Mlp {
+    /// He-initialized network.
+    pub fn new(dims: &[usize], rng: &mut Pcg64) -> Self {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for w in dims.windows(2) {
+            let sigma = (2.0 / w[0] as f32).sqrt();
+            weights.push(Mat::randn(w[0], w[1], sigma, rng));
+            biases.push(vec![0.0; w[1]]);
+        }
+        let m_w = weights.iter().map(|w| Mat::zeros(w.rows, w.cols)).collect();
+        let v_w = weights.iter().map(|w| Mat::zeros(w.rows, w.cols)).collect();
+        let m_b = biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        let v_b = biases.iter().map(|b| vec![0.0; b.len()]).collect();
+        Self { weights, biases, m_w, v_w, m_b, v_b, step: 0 }
+    }
+
+    pub fn paper_mlp(rng: &mut Pcg64) -> Self {
+        Self::new(&MLP_DIMS, rng)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Forward pass through possibly-transformed weights/activations.
+    ///
+    /// `w_hook(i, W)` returns the weight used by layer i (e.g. its MX
+    /// fake-quantization); `a_hook(i, A)` transforms the layer input.
+    /// Identity hooks give the plain f32 forward.
+    pub fn forward_with(
+        &self,
+        x: &Mat,
+        mut w_hook: impl FnMut(usize, &Mat) -> Mat,
+        mut a_hook: impl FnMut(usize, &Mat) -> Mat,
+    ) -> Tape {
+        let n = self.n_layers();
+        let mut activations = Vec::with_capacity(n);
+        let mut pre_acts = Vec::with_capacity(n);
+        let mut a = x.clone();
+        for i in 0..n {
+            let aq = a_hook(i, &a);
+            activations.push(aq.clone());
+            let wq = w_hook(i, &self.weights[i]);
+            let z = aq.matmul(&wq).add_bias(&self.biases[i]);
+            pre_acts.push(z.clone());
+            a = if i + 1 < n { z.map(|v| v.max(0.0)) } else { z };
+        }
+        Tape { output: pre_acts.last().unwrap().clone(), activations, pre_acts }
+    }
+
+    /// Plain forward (identity hooks).
+    pub fn forward(&self, x: &Mat) -> Tape {
+        self.forward_with(x, |_, w| w.clone(), |_, a| a.clone())
+    }
+
+    /// MSE loss (mean over batch and output dims).
+    pub fn mse_loss(output: &Mat, target: &Mat) -> f64 {
+        output.mse(target)
+    }
+
+    /// Backward pass from an MSE loss, with transform hooks mirroring
+    /// the forward: `w_hook` for the weights used in the error GeMM
+    /// (`E @ Wᵀ`), `e_hook(i, E)` for the backprop error fed to layer i's
+    /// weight-gradient GeMM (`Aᵀ @ E`).
+    pub fn backward_with(
+        &self,
+        tape: &Tape,
+        target: &Mat,
+        mut w_hook: impl FnMut(usize, &Mat) -> Mat,
+        mut e_hook: impl FnMut(usize, &Mat) -> Mat,
+    ) -> MlpGrads {
+        let n = self.n_layers();
+        let batch = tape.output.rows as f32;
+        let scale = 2.0 / (batch * tape.output.cols as f32);
+        // dL/d(output)
+        let mut err = tape.output.zip(target, |o, t| scale * (o - t));
+        let mut d_weights = vec![Mat::zeros(0, 0); n];
+        let mut d_biases = vec![Vec::new(); n];
+        for i in (0..n).rev() {
+            let eq = e_hook(i, &err);
+            // weight grad: Aᵀ @ E
+            d_weights[i] = tape.activations[i].transpose().matmul(&eq);
+            d_biases[i] = eq.col_sums();
+            if i > 0 {
+                // error backprop: E @ Wᵀ, masked by ReLU derivative
+                let wq = w_hook(i, &self.weights[i]);
+                let back = eq.matmul(&wq.transpose());
+                err = back.zip(&tape.pre_acts[i - 1], |e, z| if z > 0.0 { e } else { 0.0 });
+            }
+        }
+        MlpGrads { d_weights, d_biases }
+    }
+
+    /// Plain backward.
+    pub fn backward(&self, tape: &Tape, target: &Mat) -> MlpGrads {
+        self.backward_with(tape, target, |_, w| w.clone(), |_, e| e.clone())
+    }
+
+    /// Adam update (beta1 0.9, beta2 0.999, eps 1e-8) on f32 masters.
+    pub fn adam_step(&mut self, grads: &MlpGrads, lr: f32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - B1.powf(t);
+        let bc2 = 1.0 - B2.powf(t);
+        for i in 0..self.n_layers() {
+            for j in 0..self.weights[i].data.len() {
+                let g = grads.d_weights[i].data[j];
+                let m = &mut self.m_w[i].data[j];
+                *m = B1 * *m + (1.0 - B1) * g;
+                let v = &mut self.v_w[i].data[j];
+                *v = B2 * *v + (1.0 - B2) * g * g;
+                self.weights[i].data[j] -= lr * (*m / bc1) / ((*v / bc2).sqrt() + EPS);
+            }
+            for j in 0..self.biases[i].len() {
+                let g = grads.d_biases[i][j];
+                let m = &mut self.m_b[i][j];
+                *m = B1 * *m + (1.0 - B1) * g;
+                let v = &mut self.v_b[i][j];
+                *v = B2 * *v + (1.0 - B2) * g * g;
+                self.biases[i][j] -= lr * (*m / bc1) / ((*v / bc2).sqrt() + EPS);
+            }
+        }
+    }
+
+    /// Flatten all parameters (for runtime interchange and tests).
+    pub fn flat_params(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for (w, b) in self.weights.iter().zip(&self.biases) {
+            out.extend_from_slice(&w.data);
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    /// Load parameters from a flat buffer (inverse of `flat_params`).
+    pub fn load_flat_params(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for i in 0..self.n_layers() {
+            let wn = self.weights[i].data.len();
+            self.weights[i].data.copy_from_slice(&flat[off..off + wn]);
+            off += wn;
+            let bn = self.biases[i].len();
+            self.biases[i].copy_from_slice(&flat[off..off + bn]);
+            off += bn;
+        }
+        assert_eq!(off, flat.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_mlp(rng: &mut Pcg64) -> Mlp {
+        Mlp::new(&[4, 8, 8, 2], rng)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Pcg64::new(1);
+        let mlp = Mlp::paper_mlp(&mut rng);
+        let x = Mat::randn(32, 32, 1.0, &mut rng);
+        let tape = mlp.forward(&x);
+        assert_eq!((tape.output.rows, tape.output.cols), (32, 32));
+        assert_eq!(tape.activations.len(), 4);
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let mut rng = Pcg64::new(2);
+        let mut mlp = tiny_mlp(&mut rng);
+        let x = Mat::randn(6, 4, 1.0, &mut rng);
+        let y = Mat::randn(6, 2, 1.0, &mut rng);
+        let tape = mlp.forward(&x);
+        let grads = mlp.backward(&tape, &y);
+        let eps = 1e-3f32;
+        // check a scatter of weight entries in every layer
+        for layer in 0..3 {
+            for &j in &[0usize, 3, 7] {
+                let orig = mlp.weights[layer].data[j];
+                mlp.weights[layer].data[j] = orig + eps;
+                let lp = Mlp::mse_loss(&mlp.forward(&x).output, &y);
+                mlp.weights[layer].data[j] = orig - eps;
+                let lm = Mlp::mse_loss(&mlp.forward(&x).output, &y);
+                mlp.weights[layer].data[j] = orig;
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grads.d_weights[layer].data[j];
+                assert!(
+                    (fd - an).abs() < 2e-3 + 0.05 * an.abs(),
+                    "layer {layer} w[{j}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bias_gradients_match_finite_differences() {
+        let mut rng = Pcg64::new(3);
+        let mut mlp = tiny_mlp(&mut rng);
+        let x = Mat::randn(5, 4, 1.0, &mut rng);
+        let y = Mat::randn(5, 2, 1.0, &mut rng);
+        let tape = mlp.forward(&x);
+        let grads = mlp.backward(&tape, &y);
+        let eps = 1e-3f32;
+        for layer in 0..3 {
+            let orig = mlp.biases[layer][0];
+            mlp.biases[layer][0] = orig + eps;
+            let lp = Mlp::mse_loss(&mlp.forward(&x).output, &y);
+            mlp.biases[layer][0] = orig - eps;
+            let lm = Mlp::mse_loss(&mlp.forward(&x).output, &y);
+            mlp.biases[layer][0] = orig;
+            let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let an = grads.d_biases[layer][0];
+            assert!((fd - an).abs() < 2e-3 + 0.05 * an.abs(), "layer {layer}: {fd} vs {an}");
+        }
+    }
+
+    #[test]
+    fn adam_reduces_loss_on_regression() {
+        let mut rng = Pcg64::new(4);
+        let mut mlp = tiny_mlp(&mut rng);
+        let x = Mat::randn(64, 4, 1.0, &mut rng);
+        // learn a smooth target function
+        let y = Mat::from_fn(64, 2, |r, c| {
+            let v = x.at(r, 0) * 0.5 + x.at(r, (c + 1) % 4).sin();
+            v * 0.5
+        });
+        let l0 = Mlp::mse_loss(&mlp.forward(&x).output, &y);
+        for _ in 0..300 {
+            let tape = mlp.forward(&x);
+            let grads = mlp.backward(&tape, &y);
+            mlp.adam_step(&grads, 3e-3);
+        }
+        let l1 = Mlp::mse_loss(&mlp.forward(&x).output, &y);
+        assert!(l1 < l0 * 0.1, "loss {l0} -> {l1}");
+    }
+
+    #[test]
+    fn flat_params_roundtrip() {
+        let mut rng = Pcg64::new(5);
+        let mlp = tiny_mlp(&mut rng);
+        let flat = mlp.flat_params();
+        let mut mlp2 = tiny_mlp(&mut rng); // different init
+        mlp2.load_flat_params(&flat);
+        assert_eq!(mlp2.flat_params(), flat);
+    }
+}

@@ -1,0 +1,24 @@
+//! Training: the dynamics MLP, MX quantization-aware training, and
+//! budgeted (time / energy) training runs.
+//!
+//! Two interchangeable backends execute the train step:
+//!
+//! * the **native golden path** ([`mlp`], [`qat`]): f32 forward/backward
+//!   with MX fake-quantization at the Fig. 5 cut points — fast, pure
+//!   Rust, used by the Fig. 2 / Fig. 8 experiment harnesses;
+//! * the **XLA runtime path** (`crate::runtime`): the same step AOT-
+//!   lowered from JAX (`python/compile/`) and executed through PJRT —
+//!   the production path proving the three-layer stack composes
+//!   (`examples/train_pusher.rs`).
+//!
+//! Both backends implement the same quantization semantics; a pytest on
+//! the Python side and `session::tests` on this side pin them together.
+
+pub mod budget;
+pub mod mlp;
+pub mod qat;
+pub mod session;
+
+pub use mlp::{Mlp, MlpGrads};
+pub use qat::QuantScheme;
+pub use session::{TrainConfig, TrainSession};

@@ -1,0 +1,216 @@
+//! Quantization-aware training step (paper Fig. 5).
+//!
+//! One [`QuantScheme`] selects what the training graph quantizes and
+//! how: the FP32 baseline, an MX format over square (ours) or vector
+//! (OCP/Dacapo-style) blocks, or Dacapo's MX9/6/4. Quantization is
+//! applied at the Fig. 5 cut points — weights entering each GeMM,
+//! activations entering each GeMM, and backprop errors entering the
+//! error/weight-gradient GeMMs — with FP32 master weights (standard QAT).
+
+use crate::mx::dacapo::{DacapoFormat, DacapoTensor};
+use crate::mx::element::ElementFormat;
+use crate::mx::tensor::{fake_quant_mat_fast, Layout, MxTensor};
+use crate::trainer::mlp::{Mlp, MlpGrads};
+use crate::util::mat::Mat;
+
+/// What numeric scheme the training step runs under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantScheme {
+    /// Unquantized FP32 baseline.
+    Fp32,
+    /// Our design: MX element format over 8x8 square blocks.
+    MxSquare(ElementFormat),
+    /// OCP-standard 32-element vector blocks (requantizes transposes).
+    MxVector(ElementFormat),
+    /// Dacapo baseline: MX9/6/4 vector blocks.
+    Dacapo(DacapoFormat),
+}
+
+impl QuantScheme {
+    pub fn name(&self) -> String {
+        match self {
+            QuantScheme::Fp32 => "fp32".into(),
+            QuantScheme::MxSquare(f) => format!("mx-{}", f.name()),
+            QuantScheme::MxVector(f) => format!("mxvec-{}", f.name()),
+            QuantScheme::Dacapo(f) => f.name().into(),
+        }
+    }
+
+    /// Parse CLI names like `fp32`, `e4m3`, `int8`, `mx9`.
+    pub fn parse(s: &str) -> Option<QuantScheme> {
+        match s {
+            "fp32" => Some(QuantScheme::Fp32),
+            "mx9" => Some(QuantScheme::Dacapo(DacapoFormat::Mx9)),
+            "mx6" => Some(QuantScheme::Dacapo(DacapoFormat::Mx6)),
+            "mx4" => Some(QuantScheme::Dacapo(DacapoFormat::Mx4)),
+            _ => ElementFormat::parse(s).map(QuantScheme::MxSquare),
+        }
+    }
+
+    /// Fake-quantize a tensor under this scheme.
+    pub fn quant(&self, m: &Mat) -> Mat {
+        match self {
+            QuantScheme::Fp32 => m.clone(),
+            QuantScheme::MxSquare(f) => fake_quant_mat_fast(m, *f, Layout::Square8x8),
+            QuantScheme::MxVector(f) => fake_quant_mat_fast(m, *f, Layout::Vector32),
+            QuantScheme::Dacapo(f) => DacapoTensor::fake_quant(m, *f),
+        }
+    }
+
+    /// Fake-quantize a tensor that is consumed *transposed*. Square
+    /// blocks quantize once and permute (free); vector-grouped schemes
+    /// must requantize along the other direction — the Fig. 5(a) cost.
+    pub fn quant_for_transpose(&self, m: &Mat) -> Mat {
+        match self {
+            QuantScheme::Fp32 => m.clone(),
+            QuantScheme::MxSquare(f) => {
+                // square blocks: the block-permute transpose is value-
+                // identical to the forward quantization (asserted in
+                // tests), so the fast path applies directly
+                fake_quant_mat_fast(m, *f, Layout::Square8x8)
+            }
+            QuantScheme::MxVector(f) => {
+                // requantize the transposed matrix (second grouping)
+                fake_quant_mat_fast(&m.transpose(), *f, Layout::Vector32).transpose()
+            }
+            QuantScheme::Dacapo(f) => DacapoTensor::fake_quant(&m.transpose(), *f).transpose(),
+        }
+    }
+
+    /// Element format for hardware cost accounting (None for FP32 and
+    /// Dacapo, which use their own models).
+    pub fn element(&self) -> Option<ElementFormat> {
+        match self {
+            QuantScheme::MxSquare(f) | QuantScheme::MxVector(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+/// One quantization-aware training step: quantized forward + backward,
+/// Adam on FP32 masters. Returns the (quantized-forward) training loss.
+pub fn qat_step(mlp: &mut Mlp, x: &Mat, y: &Mat, scheme: QuantScheme, lr: f32) -> f64 {
+    let (tape, grads) = qat_forward_backward(mlp, x, y, scheme);
+    let loss = Mlp::mse_loss(&tape.output, y);
+    mlp.adam_step(&grads, lr);
+    loss
+}
+
+/// Forward + backward without the update (shared with tests/session).
+pub fn qat_forward_backward(
+    mlp: &Mlp,
+    x: &Mat,
+    y: &Mat,
+    scheme: QuantScheme,
+) -> (crate::trainer::mlp::Tape, MlpGrads) {
+    let tape = mlp.forward_with(x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
+    let grads = mlp.backward_with(
+        &tape,
+        y,
+        // error GeMM consumes Wᵀ: square blocks reuse the fwd copy,
+        // vector schemes requantize (exactly the paper's Fig. 5 point)
+        |_, w| scheme.quant_for_transpose(w),
+        |_, e| scheme.quant(e),
+    );
+    (tape, grads)
+}
+
+/// Quantized validation loss (quantized weights + activations, as the
+/// deployed accelerator would run inference).
+pub fn qat_eval(mlp: &Mlp, x: &Mat, y: &Mat, scheme: QuantScheme) -> f64 {
+    let tape = mlp.forward_with(x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
+    Mlp::mse_loss(&tape.output, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn toy_problem(rng: &mut Pcg64) -> (Mat, Mat) {
+        let x = Mat::randn(64, 32, 1.0, rng);
+        let y = Mat::from_fn(64, 32, |r, c| {
+            if c < 8 {
+                (x.at(r, c) * 0.8 + x.at(r, c + 1)).tanh() * 0.5
+            } else {
+                0.0
+            }
+        });
+        (x, y)
+    }
+
+    #[test]
+    fn fp32_scheme_is_identity() {
+        let mut rng = Pcg64::new(1);
+        let m = Mat::randn(16, 16, 1.0, &mut rng);
+        assert_eq!(QuantScheme::Fp32.quant(&m), m);
+    }
+
+    #[test]
+    fn square_transpose_quant_is_consistent() {
+        // quant_for_transpose == quant for square blocks (free transpose)
+        let mut rng = Pcg64::new(2);
+        let m = Mat::randn(32, 32, 1.0, &mut rng);
+        let s = QuantScheme::MxSquare(ElementFormat::Int8);
+        assert_eq!(s.quant(&m).data, s.quant_for_transpose(&m).data);
+    }
+
+    #[test]
+    fn vector_transpose_quant_differs() {
+        let mut rng = Pcg64::new(3);
+        let m = Mat::from_fn(32, 32, |r, _| rng.normal_f32() * ((r % 5) as f32 - 2.0).exp2());
+        let s = QuantScheme::MxVector(ElementFormat::Int8);
+        assert_ne!(s.quant(&m).data, s.quant_for_transpose(&m).data);
+    }
+
+    #[test]
+    fn all_schemes_train_toy_problem() {
+        let mut rng = Pcg64::new(4);
+        let (x, y) = toy_problem(&mut rng);
+        for scheme in [
+            QuantScheme::Fp32,
+            QuantScheme::MxSquare(ElementFormat::Int8),
+            QuantScheme::MxSquare(ElementFormat::E4M3),
+            QuantScheme::MxSquare(ElementFormat::E5M2),
+            QuantScheme::Dacapo(DacapoFormat::Mx9),
+        ] {
+            let mut mlp = Mlp::new(&[32, 64, 64, 32], &mut rng);
+            let l0 = qat_eval(&mlp, &x, &y, scheme);
+            for _ in 0..200 {
+                qat_step(&mut mlp, &x, &y, scheme, 2e-3);
+            }
+            let l1 = qat_eval(&mlp, &x, &y, scheme);
+            assert!(l1 < l0 * 0.5, "{}: {l0} -> {l1}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn coarser_formats_train_worse() {
+        // E2M1 (4-bit) should converge to a worse loss than FP32 on the
+        // same problem/seed — the precision-accuracy tradeoff of Fig. 2.
+        let mut rng = Pcg64::new(5);
+        let (x, y) = toy_problem(&mut rng);
+        let run = |scheme: QuantScheme| {
+            let mut r2 = Pcg64::new(99);
+            let mut mlp = Mlp::new(&[32, 64, 64, 32], &mut r2);
+            for _ in 0..300 {
+                qat_step(&mut mlp, &x, &y, scheme, 2e-3);
+            }
+            qat_eval(&mlp, &x, &y, QuantScheme::Fp32)
+        };
+        let l_fp32 = run(QuantScheme::Fp32);
+        let l_fp4 = run(QuantScheme::MxSquare(ElementFormat::E2M1));
+        assert!(l_fp4 > l_fp32, "fp32 {l_fp32} vs fp4 {l_fp4}");
+    }
+
+    #[test]
+    fn scheme_parsing() {
+        assert_eq!(QuantScheme::parse("fp32"), Some(QuantScheme::Fp32));
+        assert_eq!(
+            QuantScheme::parse("e4m3"),
+            Some(QuantScheme::MxSquare(ElementFormat::E4M3))
+        );
+        assert_eq!(QuantScheme::parse("mx9"), Some(QuantScheme::Dacapo(DacapoFormat::Mx9)));
+        assert_eq!(QuantScheme::parse("nope"), None);
+    }
+}

@@ -1,0 +1,136 @@
+//! Training sessions: dataset + model + scheme -> loss curves.
+
+use crate::trainer::mlp::{Mlp, MLP_DIMS};
+use crate::trainer::qat::{qat_eval, qat_step, QuantScheme};
+use crate::util::rng::Pcg64;
+use crate::workloads::Dataset;
+
+/// Configuration of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub scheme: QuantScheme,
+    pub batch_size: usize,
+    pub lr: f32,
+    pub steps: usize,
+    /// Evaluate validation loss every `eval_every` steps.
+    pub eval_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            scheme: QuantScheme::Fp32,
+            batch_size: 32,
+            lr: 1e-3,
+            steps: 400,
+            eval_every: 20,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// A running (or finished) training session.
+pub struct TrainSession {
+    pub config: TrainConfig,
+    pub mlp: Mlp,
+    pub dataset: Dataset,
+    /// (step, train_loss) samples.
+    pub train_curve: Vec<(usize, f64)>,
+    /// (step, val_loss) samples.
+    pub val_curve: Vec<(usize, f64)>,
+    step: usize,
+}
+
+impl TrainSession {
+    pub fn new(dataset: Dataset, config: TrainConfig) -> Self {
+        let mut rng = Pcg64::with_stream(config.seed, 0x11F);
+        let mlp = Mlp::new(&MLP_DIMS, &mut rng);
+        Self { config, mlp, dataset, train_curve: Vec::new(), val_curve: Vec::new(), step: 0 }
+    }
+
+    /// Current step count.
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// Run one training step; returns the train loss.
+    pub fn step_once(&mut self) -> f64 {
+        let batch = self.dataset.batch(self.step, self.config.batch_size);
+        let loss = qat_step(&mut self.mlp, &batch.x, &batch.y, self.config.scheme, self.config.lr);
+        if self.step % self.config.eval_every == 0 {
+            self.train_curve.push((self.step, loss));
+            self.val_curve.push((self.step, self.val_loss()));
+        }
+        self.step += 1;
+        loss
+    }
+
+    /// Run to the configured step budget.
+    pub fn run(&mut self) {
+        while self.step < self.config.steps {
+            self.step_once();
+        }
+        let v = self.val_loss();
+        self.val_curve.push((self.step, v));
+    }
+
+    /// Quantized validation loss over the held-out split.
+    pub fn val_loss(&self) -> f64 {
+        qat_eval(&self.mlp, &self.dataset.val_x, &self.dataset.val_y, self.config.scheme)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::element::ElementFormat;
+    use crate::workloads::by_name;
+
+    fn quick_dataset(name: &str) -> Dataset {
+        let env = by_name(name).unwrap();
+        Dataset::collect(env.as_ref(), 6, 60, 0xDD)
+    }
+
+    #[test]
+    fn fp32_session_learns_cartpole_dynamics() {
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig { steps: 300, lr: 2e-3, ..Default::default() },
+        );
+        let v0 = s.val_loss();
+        s.run();
+        let v1 = s.val_loss();
+        assert!(v1 < v0 * 0.5, "val {v0} -> {v1}");
+        assert!(!s.val_curve.is_empty());
+    }
+
+    #[test]
+    fn mxint8_session_learns_too() {
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+                steps: 300,
+                lr: 2e-3,
+                ..Default::default()
+            },
+        );
+        let v0 = s.val_loss();
+        s.run();
+        assert!(s.val_loss() < v0 * 0.7, "{v0} -> {}", s.val_loss());
+    }
+
+    #[test]
+    fn sessions_are_reproducible() {
+        let run = || {
+            let mut s = TrainSession::new(
+                quick_dataset("reacher"),
+                TrainConfig { steps: 50, ..Default::default() },
+            );
+            s.run();
+            s.val_loss()
+        };
+        assert_eq!(run(), run());
+    }
+}

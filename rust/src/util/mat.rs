@@ -1,0 +1,251 @@
+//! Dense row-major f32 matrix.
+//!
+//! The shared currency between the workload generators, the golden f32
+//! trainer, the MX quantizers, and the hardware simulators. Deliberately
+//! minimal — just what GeMM-shaped training needs.
+
+use crate::util::rng::Pcg64;
+
+/// Dense row-major `rows x cols` f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from a row-major vec (length must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Matrix with entries from `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Gaussian random matrix, N(0, sigma).
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Pcg64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// `self @ other` — naive triple loop with a k-blocked inner order
+    /// (row-major friendly). Good enough as the golden reference; the
+    /// performance path is the simulator / XLA, not this.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for r in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.data[r * self.cols + k];
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[r * other.cols..(r + 1) * other.cols];
+                for (d, &b) in dst.iter_mut().zip(orow) {
+                    *d += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise binary zip.
+    pub fn zip(&self, other: &Mat, f: impl Fn(f32, f32) -> f32) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (d, &s) in self.data.iter_mut().zip(&other.data) {
+            *d += alpha * s;
+        }
+    }
+
+    /// Add a row-vector bias to every row.
+    pub fn add_bias(&self, bias: &[f32]) -> Mat {
+        assert_eq!(bias.len(), self.cols);
+        Mat::from_fn(self.rows, self.cols, |r, c| self.at(r, c) + bias[c])
+    }
+
+    /// Column sums (used for bias gradients).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut s = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                s[c] += self.at(r, c);
+            }
+        }
+        s
+    }
+
+    /// Maximum absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt() as f32
+    }
+
+    /// Mean squared difference against another matrix.
+    pub fn mse(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+
+    /// Extract an `h x w` sub-block starting at `(r0, c0)`, zero-padded
+    /// past the matrix edge (hardware tiles always read full blocks).
+    pub fn block(&self, r0: usize, c0: usize, h: usize, w: usize) -> Mat {
+        Mat::from_fn(h, w, |r, c| {
+            let (rr, cc) = (r0 + r, c0 + c);
+            if rr < self.rows && cc < self.cols {
+                self.at(rr, cc)
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Write `blk` into `self` at `(r0, c0)`, clipping at the edge.
+    pub fn set_block(&mut self, r0: usize, c0: usize, blk: &Mat) {
+        for r in 0..blk.rows {
+            for c in 0..blk.cols {
+                let (rr, cc) = (r0 + r, c0 + c);
+                if rr < self.rows && cc < self.cols {
+                    *self.at_mut(rr, cc) = blk.at(r, c);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(1);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        let i = Mat::from_fn(7, 7, |r, c| if r == c { 1.0 } else { 0.0 });
+        assert_eq!(a.matmul(&i).data, a.data);
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(a.matmul(&b).data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(2);
+        let a = Mat::randn(3, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn transpose_matmul_agrees() {
+        // (A B)^T == B^T A^T
+        let mut rng = Pcg64::new(3);
+        let a = Mat::randn(4, 6, 1.0, &mut rng);
+        let b = Mat::randn(6, 5, 1.0, &mut rng);
+        let lhs = a.matmul(&b).transpose();
+        let rhs = b.transpose().matmul(&a.transpose());
+        assert!(lhs.mse(&rhs) < 1e-12);
+    }
+
+    #[test]
+    fn block_roundtrip_and_padding() {
+        let a = Mat::from_fn(10, 10, |r, c| (r * 10 + c) as f32);
+        let blk = a.block(8, 8, 8, 8);
+        assert_eq!(blk.at(0, 0), 88.0);
+        assert_eq!(blk.at(1, 1), 99.0);
+        assert_eq!(blk.at(2, 2), 0.0); // padded
+        let mut b = Mat::zeros(10, 10);
+        b.set_block(8, 8, &blk);
+        assert_eq!(b.at(9, 9), 99.0);
+    }
+
+    #[test]
+    fn col_sums_match_manual() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.col_sums(), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn axpy_adds_scaled() {
+        let mut a = Mat::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Mat::from_vec(1, 3, vec![10.0, 10.0, 10.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data, vec![6.0, 7.0, 8.0]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so this module replaces the usual ecosystem crates:
+//! [`rng`] stands in for `rand` (PCG64), [`json`] for `serde_json`
+//! (emission only), [`mat`] provides the dense f32 matrix the simulators
+//! and the golden trainer share, and [`testing`] provides the hand-rolled
+//! property-test loop used across the test suite.
+
+pub mod json;
+pub mod mat;
+pub mod rng;
+pub mod testing;
+
+pub use mat::Mat;
+pub use rng::Pcg64;

@@ -1,0 +1,228 @@
+//! PCG64 pseudo-random number generator.
+//!
+//! Deterministic, seedable, and identical across platforms — every
+//! experiment in the repo derives its streams from explicit seeds so the
+//! tables/figures regenerate bit-identically. Implements the PCG XSL-RR
+//! 128/64 variant (O'Neill 2014), the same generator `rand_pcg::Pcg64`
+//! uses, without depending on the `rand` ecosystem (unavailable offline).
+
+/// PCG XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a 64-bit seed (stream fixed).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xa02b_df95_3769_fde2)
+    }
+
+    /// Create a generator from a seed and an explicit stream id, so
+    /// experiments can split independent substreams deterministically.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let inc = ((stream as u128) << 1) | 1;
+        let mut rng = Self { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(inc);
+        rng
+    }
+
+    /// Derive an independent child generator (for parallel substreams).
+    pub fn split(&mut self, tag: u64) -> Pcg64 {
+        let s = self.next_u64();
+        Pcg64::with_stream(s ^ tag.wrapping_mul(0x9e37_79b9_7f4a_7c15), tag)
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Next 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1) as f32.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform in [lo, hi) as f32.
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's multiply-shift rejection.
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(n as u128);
+            let lo = m as u64;
+            if lo >= n || lo >= n.wrapping_neg() % n {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Uniform integer in [lo, hi].
+    pub fn int_range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal via Box-Muller (caches nothing; fine for our use).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Standard normal as f32.
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Fill a slice with N(0, sigma) samples.
+    pub fn fill_normal(&mut self, buf: &mut [f32], sigma: f32) {
+        for v in buf.iter_mut() {
+            *v = self.normal_f32() * sigma;
+        }
+    }
+
+    /// Fill a slice with U[lo, hi) samples.
+    pub fn fill_uniform(&mut self, buf: &mut [f32], lo: f32, hi: f32) {
+        for v in buf.iter_mut() {
+            *v = self.range_f32(lo, hi);
+        }
+    }
+
+    /// Random sign-extended `bits`-bit integer (for format fuzzing).
+    pub fn bits(&mut self, bits: u32) -> u64 {
+        debug_assert!(bits >= 1 && bits <= 64);
+        if bits == 64 {
+            self.next_u64()
+        } else {
+            self.next_u64() & ((1u64 << bits) - 1)
+        }
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// A random f32 whose magnitude spans many binades — exercises
+    /// shared-exponent extraction far better than uniform samples.
+    pub fn wide_f32(&mut self) -> f32 {
+        let exp = self.int_range(-40, 40) as i32;
+        let mant = self.range_f32(-1.0, 1.0);
+        mant * (exp as f32).exp2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_bounded_and_covers() {
+        let mut r = Pcg64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..10_000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments_roughly_standard() {
+        let mut r = Pcg64::new(11);
+        let n = 100_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Pcg64::new(3);
+        let mut a = root.split(1);
+        let mut b = root.split(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut r = Pcg64::new(5);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+}

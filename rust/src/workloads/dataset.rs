@@ -1,0 +1,222 @@
+//! Dataset collection for dynamics-model learning.
+//!
+//! Rolls out a random policy in an [`Env`], recording `(state, action) ->
+//! next_state - state` transitions (PETS-style delta prediction), then
+//! normalizes and packs them into the 32-wide input / 32-wide output
+//! layout of the paper's 4-layer MLP (extra dimensions zero-padded).
+
+use crate::util::mat::Mat;
+use crate::util::rng::Pcg64;
+use crate::workloads::env::Env;
+
+/// Input/output width of the paper's dynamics MLP.
+pub const IO_DIM: usize = 32;
+
+/// One minibatch view.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// `[batch, 32]` normalized (state, action) rows.
+    pub x: Mat,
+    /// `[batch, 32]` normalized delta-state targets.
+    pub y: Mat,
+}
+
+/// A collected, normalized dynamics dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub state_dim: usize,
+    pub action_dim: usize,
+    /// Train inputs `[n, 32]` / targets `[n, 32]`.
+    pub train_x: Mat,
+    pub train_y: Mat,
+    /// Held-out validation split.
+    pub val_x: Mat,
+    pub val_y: Mat,
+    /// Per-column input means/stds used for normalization.
+    pub x_mean: Vec<f32>,
+    pub x_std: Vec<f32>,
+    pub y_mean: Vec<f32>,
+    pub y_std: Vec<f32>,
+}
+
+impl Dataset {
+    /// Roll out `episodes` episodes of `horizon` random-policy steps.
+    pub fn collect(env: &dyn Env, episodes: usize, horizon: usize, seed: u64) -> Dataset {
+        let mut rng = Pcg64::with_stream(seed, 0xDA7A);
+        let n = episodes * horizon;
+        let (sd, ad) = (env.state_dim(), env.action_dim());
+        assert!(sd + ad <= IO_DIM, "state+action must fit the 32-wide MLP input");
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        for _ in 0..episodes {
+            let mut s = env.reset(&mut rng);
+            for _ in 0..horizon {
+                let a: Vec<f32> = (0..ad)
+                    .map(|_| rng.range_f32(-env.action_limit(), env.action_limit()))
+                    .collect();
+                let s2 = env.step(&s, &a);
+                let mut row_x = vec![0.0f32; IO_DIM];
+                row_x[..sd].copy_from_slice(&s);
+                row_x[sd..sd + ad].copy_from_slice(&a);
+                let mut row_y = vec![0.0f32; IO_DIM];
+                for i in 0..sd {
+                    row_y[i] = s2[i] - s[i];
+                }
+                xs.push(row_x);
+                ys.push(row_y);
+                s = s2;
+            }
+        }
+        // shuffle before splitting (episodes are temporally correlated)
+        let mut idx: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut idx);
+        let n_val = (n / 8).max(1);
+        let flat = |rows: &[usize], src: &[Vec<f32>]| {
+            let mut m = Mat::zeros(rows.len(), IO_DIM);
+            for (r, &i) in rows.iter().enumerate() {
+                m.data[r * IO_DIM..(r + 1) * IO_DIM].copy_from_slice(&src[i]);
+            }
+            m
+        };
+        let val_idx = &idx[..n_val];
+        let train_idx = &idx[n_val..];
+        let mut ds = Dataset {
+            name: env.name(),
+            state_dim: sd,
+            action_dim: ad,
+            train_x: flat(train_idx, &xs),
+            train_y: flat(train_idx, &ys),
+            val_x: flat(val_idx, &xs),
+            val_y: flat(val_idx, &ys),
+            x_mean: vec![0.0; IO_DIM],
+            x_std: vec![1.0; IO_DIM],
+            y_mean: vec![0.0; IO_DIM],
+            y_std: vec![1.0; IO_DIM],
+        };
+        ds.normalize();
+        ds
+    }
+
+    /// Column-wise standardization fit on train, applied to both splits.
+    /// Padded (all-zero) columns keep std 1 so they stay exactly zero.
+    fn normalize(&mut self) {
+        let fit = |m: &Mat| -> (Vec<f32>, Vec<f32>) {
+            let n = m.rows.max(1) as f32;
+            let mut mean = vec![0.0f32; m.cols];
+            let mut var = vec![0.0f32; m.cols];
+            for r in 0..m.rows {
+                for c in 0..m.cols {
+                    mean[c] += m.at(r, c);
+                }
+            }
+            for v in mean.iter_mut() {
+                *v /= n;
+            }
+            for r in 0..m.rows {
+                for c in 0..m.cols {
+                    let d = m.at(r, c) - mean[c];
+                    var[c] += d * d;
+                }
+            }
+            let std: Vec<f32> =
+                var.iter().map(|&v| (v / n).sqrt()).map(|s| if s < 1e-6 { 1.0 } else { s }).collect();
+            (mean, std)
+        };
+        let (xm, xs) = fit(&self.train_x);
+        let (ym, ys) = fit(&self.train_y);
+        let apply = |m: &mut Mat, mean: &[f32], std: &[f32]| {
+            for r in 0..m.rows {
+                for c in 0..m.cols {
+                    *m.at_mut(r, c) = (m.at(r, c) - mean[c]) / std[c];
+                }
+            }
+        };
+        apply(&mut self.train_x, &xm, &xs);
+        apply(&mut self.val_x, &xm, &xs);
+        apply(&mut self.train_y, &ym, &ys);
+        apply(&mut self.val_y, &ym, &ys);
+        self.x_mean = xm;
+        self.x_std = xs;
+        self.y_mean = ym;
+        self.y_std = ys;
+    }
+
+    /// Number of training rows.
+    pub fn len(&self) -> usize {
+        self.train_x.rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fetch minibatch `i` of size `bs` (wraps around; deterministic).
+    pub fn batch(&self, i: usize, bs: usize) -> Batch {
+        let n = self.len();
+        let mut x = Mat::zeros(bs, IO_DIM);
+        let mut y = Mat::zeros(bs, IO_DIM);
+        for r in 0..bs {
+            let src = (i * bs + r) % n;
+            x.data[r * IO_DIM..(r + 1) * IO_DIM]
+                .copy_from_slice(self.train_x.row(src));
+            y.data[r * IO_DIM..(r + 1) * IO_DIM]
+                .copy_from_slice(self.train_y.row(src));
+        }
+        Batch { x, y }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::by_name;
+
+    #[test]
+    fn collects_normalized_padded_data() {
+        let env = by_name("cartpole").unwrap();
+        let ds = Dataset::collect(env.as_ref(), 8, 50, 1);
+        assert_eq!(ds.train_x.cols, 32);
+        assert_eq!(ds.len() + ds.val_x.rows, 400);
+        // padded columns are exactly zero
+        for r in 0..ds.train_x.rows {
+            for c in (ds.state_dim + ds.action_dim)..32 {
+                assert_eq!(ds.train_x.at(r, c), 0.0);
+            }
+        }
+        // live columns are standardized
+        let col_std = |m: &Mat, c: usize| {
+            let mean: f32 = (0..m.rows).map(|r| m.at(r, c)).sum::<f32>() / m.rows as f32;
+            ((0..m.rows).map(|r| (m.at(r, c) - mean).powi(2)).sum::<f32>() / m.rows as f32).sqrt()
+        };
+        let s = col_std(&ds.train_x, 0);
+        assert!((s - 1.0).abs() < 0.05, "std {s}");
+    }
+
+    #[test]
+    fn batches_cycle_deterministically() {
+        let env = by_name("reacher").unwrap();
+        let ds = Dataset::collect(env.as_ref(), 4, 30, 2);
+        let b0 = ds.batch(0, 32);
+        let b0b = ds.batch(0, 32);
+        assert_eq!(b0.x.data, b0b.x.data);
+        let b1 = ds.batch(1, 32);
+        assert_ne!(b0.x.data, b1.x.data);
+    }
+
+    #[test]
+    fn same_seed_same_dataset() {
+        let env = by_name("pusher").unwrap();
+        let a = Dataset::collect(env.as_ref(), 2, 20, 7);
+        let b = Dataset::collect(env.as_ref(), 2, 20, 7);
+        assert_eq!(a.train_x.data, b.train_x.data);
+    }
+
+    #[test]
+    fn all_envs_fit_io_layout() {
+        for name in crate::workloads::ALL_WORKLOADS {
+            let env = by_name(name).unwrap();
+            assert!(env.state_dim() + env.action_dim() <= IO_DIM, "{name}");
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! The dynamics-environment trait.
+
+use crate::util::rng::Pcg64;
+
+/// A continuous-control environment whose dynamics an MLP learns to
+/// predict: given (state, action), produce the next state.
+pub trait Env {
+    /// Name used in CLIs and artifact files.
+    fn name(&self) -> &'static str;
+    /// State vector length.
+    fn state_dim(&self) -> usize;
+    /// Action vector length.
+    fn action_dim(&self) -> usize;
+    /// Sample an initial state.
+    fn reset(&self, rng: &mut Pcg64) -> Vec<f32>;
+    /// Advance one control step (typically several integrator substeps).
+    fn step(&self, state: &[f32], action: &[f32]) -> Vec<f32>;
+    /// Per-dimension action magnitude bound (exploration noise scale).
+    fn action_limit(&self) -> f32 {
+        1.0
+    }
+}
+
+/// Semi-implicit Euler substepping helper shared by the physics sims.
+pub fn substep(n: usize, dt: f32, state: &mut [f32], mut deriv: impl FnMut(&[f32], &mut [f32])) {
+    let mut d = vec![0.0f32; state.len()];
+    for _ in 0..n {
+        deriv(state, &mut d);
+        for (s, dd) in state.iter_mut().zip(&d) {
+            *s += dt * dd;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::{by_name, ALL_WORKLOADS};
+
+    #[test]
+    fn all_workloads_constructible_and_deterministic() {
+        for name in ALL_WORKLOADS {
+            let env = by_name(name).unwrap();
+            assert_eq!(env.name(), name);
+            let mut rng = Pcg64::new(42);
+            let s0 = env.reset(&mut rng);
+            assert_eq!(s0.len(), env.state_dim());
+            let a = vec![0.1; env.action_dim()];
+            let s1 = env.step(&s0, &a);
+            let s1b = env.step(&s0, &a);
+            assert_eq!(s1, s1b, "{name} must be deterministic");
+            assert_eq!(s1.len(), env.state_dim());
+            assert!(s1.iter().all(|x| x.is_finite()), "{name} produced non-finite state");
+        }
+    }
+
+    #[test]
+    fn dynamics_respond_to_actions() {
+        for name in ALL_WORKLOADS {
+            let env = by_name(name).unwrap();
+            let mut rng = Pcg64::new(7);
+            let s0 = env.reset(&mut rng);
+            let a0 = vec![0.0; env.action_dim()];
+            let a1 = vec![env.action_limit(); env.action_dim()];
+            let n0 = env.step(&s0, &a0);
+            let n1 = env.step(&s0, &a1);
+            assert_ne!(n0, n1, "{name} ignores its action input");
+        }
+    }
+
+    #[test]
+    fn trajectories_stay_bounded() {
+        // run 500 random-policy steps; states must not blow up
+        for name in ALL_WORKLOADS {
+            let env = by_name(name).unwrap();
+            let mut rng = Pcg64::new(9);
+            let mut s = env.reset(&mut rng);
+            for _ in 0..500 {
+                let a: Vec<f32> = (0..env.action_dim())
+                    .map(|_| rng.range_f32(-env.action_limit(), env.action_limit()))
+                    .collect();
+                s = env.step(&s, &a);
+                let m = s.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                assert!(m < 1e4 && m.is_finite(), "{name} diverged: max |s| = {m}");
+            }
+        }
+    }
+}

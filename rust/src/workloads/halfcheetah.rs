@@ -1,0 +1,154 @@
+//! HalfCheetah surrogate (balancing/locomotion class).
+//!
+//! MuJoCo's halfcheetah is a 17-dim-state, 6-action articulated body.
+//! Without MuJoCo we substitute a dynamically similar system: a chain of
+//! six actuated, damped, nonlinearly coupled rotational joints riding on
+//! a body with forward velocity driven by "ground reaction" terms from
+//! the joint motion (a standard locomotion caricature). Dimensions match
+//! the original (17 states, 6 actions), dynamics are smooth but strongly
+//! coupled — the property that makes halfcheetah the heaviest of the four
+//! fits. Substitution documented in DESIGN.md §2.
+
+use crate::util::rng::Pcg64;
+use crate::workloads::env::{substep, Env};
+
+#[derive(Debug, Clone)]
+pub struct HalfCheetah {
+    pub dt: f32,
+    pub substeps: usize,
+    pub damping: f32,
+    pub coupling: f32,
+    pub gear: f32,
+}
+
+impl Default for HalfCheetah {
+    fn default() -> Self {
+        Self { dt: 0.05, substeps: 5, damping: 1.5, coupling: 0.8, gear: 6.0 }
+    }
+}
+
+// state layout: [z, pitch, vx, vz, vpitch, th1..th6, w1..w6] = 17 dims
+const NJ: usize = 6;
+
+impl Env for HalfCheetah {
+    fn name(&self) -> &'static str {
+        "halfcheetah"
+    }
+
+    fn state_dim(&self) -> usize {
+        17
+    }
+
+    fn action_dim(&self) -> usize {
+        NJ
+    }
+
+    fn action_limit(&self) -> f32 {
+        1.0
+    }
+
+    fn reset(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut s = vec![0.0f32; 17];
+        s[0] = rng.range_f32(-0.1, 0.1); // z
+        s[1] = rng.range_f32(-0.2, 0.2); // pitch
+        for i in 5..5 + NJ {
+            s[i] = rng.range_f32(-0.5, 0.5); // joint angles
+        }
+        for i in 11..11 + NJ {
+            s[i] = rng.range_f32(-0.3, 0.3); // joint velocities
+        }
+        s
+    }
+
+    fn step(&self, state: &[f32], action: &[f32]) -> Vec<f32> {
+        let mut s = state.to_vec();
+        let (damping, coupling, gear) = (self.damping, self.coupling, self.gear);
+        substep(self.substeps, self.dt / self.substeps as f32, &mut s, |s, d| {
+            let (z, pitch, vx, vz, vpitch) = (s[0], s[1], s[2], s[3], s[4]);
+            let th = &s[5..5 + NJ];
+            let w = &s[11..11 + NJ];
+            // joint dynamics: actuated, damped, chain-coupled
+            let mut wdot = [0.0f32; NJ];
+            let mut ground_fx = 0.0;
+            let mut ground_fz = 0.0;
+            for j in 0..NJ {
+                let left = if j > 0 { th[j - 1] - th[j] } else { -th[j] };
+                let right = if j < NJ - 1 { th[j + 1] - th[j] } else { -th[j] };
+                let a = action[j].clamp(-1.0, 1.0);
+                wdot[j] = gear * a + coupling * (left + right) * 3.0 - damping * w[j]
+                    - 2.0 * th[j]            // joint spring to rest pose
+                    - 0.5 * pitch;           // body attitude couples in
+                // "ground reaction": leg motion propels the body
+                ground_fx += 0.35 * w[j] * th[j].cos();
+                ground_fz += 0.15 * w[j] * th[j].sin();
+            }
+            d[0] = vz;
+            d[1] = vpitch;
+            d[2] = ground_fx - 0.8 * vx;
+            d[3] = ground_fz - 4.0 * z - 1.2 * vz; // suspension
+            d[4] = 0.3 * (th[0] - th[NJ - 1]) - 1.0 * vpitch - 2.0 * pitch;
+            for j in 0..NJ {
+                d[5 + j] = w[j];
+                d[11 + j] = wdot[j];
+            }
+        });
+        // soft clamps (joint stops, body limits)
+        for (i, lim) in [(0usize, 1.0f32), (1, 1.5), (2, 8.0), (3, 5.0), (4, 8.0)] {
+            s[i] = s[i].clamp(-lim, lim);
+        }
+        for i in 5..5 + NJ {
+            s[i] = s[i].clamp(-2.5, 2.5);
+        }
+        for i in 11..11 + NJ {
+            s[i] = s[i].clamp(-15.0, 15.0);
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_mujoco_halfcheetah() {
+        let env = HalfCheetah::default();
+        assert_eq!(env.state_dim(), 17);
+        assert_eq!(env.action_dim(), 6);
+    }
+
+    #[test]
+    fn actuation_drives_joints() {
+        let env = HalfCheetah::default();
+        let s = vec![0.0; 17];
+        let mut a = vec![0.0; 6];
+        a[2] = 1.0;
+        let n = env.step(&s, &a);
+        assert!(n[11 + 2] > 0.0, "actuated joint must accelerate: {n:?}");
+    }
+
+    #[test]
+    fn leg_motion_propels_body() {
+        let env = HalfCheetah::default();
+        let mut s = vec![0.0; 17];
+        // legs extended forward, swinging
+        for j in 0..6 {
+            s[5 + j] = 0.3;
+            s[11 + j] = 2.0;
+        }
+        let n = env.step(&s, &[0.0; 6]);
+        assert!(n[2] > 0.0, "forward velocity should build: {}", n[2]);
+    }
+
+    #[test]
+    fn damping_settles_passive_system() {
+        let env = HalfCheetah::default();
+        let mut rng = Pcg64::new(5);
+        let mut s = env.reset(&mut rng);
+        for _ in 0..400 {
+            s = env.step(&s, &[0.0; 6]);
+        }
+        let energy: f32 = s[11..17].iter().map(|w| w * w).sum();
+        assert!(energy < 0.1, "joint velocities should decay: {energy}");
+    }
+}

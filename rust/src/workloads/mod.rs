@@ -1,0 +1,39 @@
+//! The four robotics dynamics-learning workloads (paper Fig. 2).
+//!
+//! The paper trains NNs to predict system dynamics for the continuous-
+//! control tasks of Chua et al. (PETS, NeurIPS'18): **cartpole**,
+//! **reacher**, **pusher**, **halfcheetah**. MuJoCo is not available in
+//! this environment, so each task is a deterministic Rust physics
+//! simulator with matching state/action dimensionality and qualitatively
+//! similar dynamics (see DESIGN.md §2 — what matters for Fig. 2 is the
+//! *relative trainability of a dynamics-model MLP under MX quantization*,
+//! which any smooth nonlinear dynamical system of comparable conditioning
+//! exercises through the identical code path).
+//!
+//! All workloads expose the [`env::Env`] trait and feed
+//! [`dataset::Dataset`], which packs `(state, action) -> delta-state`
+//! pairs into the 32-wide input/output layout of the paper's 4-layer MLP.
+
+pub mod cartpole;
+pub mod dataset;
+pub mod env;
+pub mod halfcheetah;
+pub mod pusher;
+pub mod reacher;
+
+pub use dataset::{Batch, Dataset};
+pub use env::Env;
+
+/// Construct a workload by name.
+pub fn by_name(name: &str) -> Option<Box<dyn Env>> {
+    match name {
+        "cartpole" => Some(Box::new(cartpole::Cartpole::default())),
+        "reacher" => Some(Box::new(reacher::Reacher::default())),
+        "pusher" => Some(Box::new(pusher::Pusher::default())),
+        "halfcheetah" => Some(Box::new(halfcheetah::HalfCheetah::default())),
+        _ => None,
+    }
+}
+
+/// The four workload names in the paper's Fig. 2 order.
+pub const ALL_WORKLOADS: [&str; 4] = ["cartpole", "halfcheetah", "pusher", "reacher"];

@@ -1,0 +1,160 @@
+//! Planar pusher: 2-link arm pushing a sliding object to a goal.
+//!
+//! The paper's flagship workload (Tables III/IV and Fig. 8 all use the
+//! pusher MLP). State: `[th1, th2, w1, w2, ox, oy, ovx, ovy, gx, gy]`
+//! (arm joints + velocities, object pose + velocity, goal), action: two
+//! joint torques. The fingertip pushes the object on contact; the object
+//! slides with Coulomb-like friction. Contact switching makes this the
+//! hardest of the four dynamics to fit — mirroring the paper's finding
+//! that pusher benefits from FP precision (MXFP8 E4M3 wins on it).
+
+use crate::util::rng::Pcg64;
+use crate::workloads::env::{substep, Env};
+use crate::workloads::reacher::Reacher;
+
+#[derive(Debug, Clone)]
+pub struct Pusher {
+    pub arm: Reacher,
+    pub obj_mass: f32,
+    pub friction: f32,
+    pub contact_radius: f32,
+    pub contact_stiffness: f32,
+}
+
+impl Default for Pusher {
+    fn default() -> Self {
+        Self {
+            arm: Reacher::default(),
+            obj_mass: 0.3,
+            friction: 1.2,
+            contact_radius: 0.12,
+            contact_stiffness: 30.0,
+        }
+    }
+}
+
+impl Env for Pusher {
+    fn name(&self) -> &'static str {
+        "pusher"
+    }
+
+    fn state_dim(&self) -> usize {
+        10
+    }
+
+    fn action_dim(&self) -> usize {
+        2
+    }
+
+    fn action_limit(&self) -> f32 {
+        1.0
+    }
+
+    fn reset(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let mut s = vec![
+            rng.range_f32(-1.5, 1.5),
+            rng.range_f32(-1.5, 1.5),
+            rng.range_f32(-0.5, 0.5),
+            rng.range_f32(-0.5, 0.5),
+            rng.range_f32(-0.6, 0.6),
+            rng.range_f32(-0.6, 0.6),
+            0.0,
+            0.0,
+            rng.range_f32(-0.8, 0.8),
+            rng.range_f32(-0.8, 0.8),
+        ];
+        // keep object within the arm's annulus so contact happens
+        let r = (s[4] * s[4] + s[5] * s[5]).sqrt();
+        if r < 0.2 {
+            s[4] += 0.3;
+        }
+        s
+    }
+
+    fn step(&self, state: &[f32], action: &[f32]) -> Vec<f32> {
+        // 1. arm dynamics through the reacher model
+        let arm_state = [state[0], state[1], state[2], state[3], 0.0, 0.0];
+        let (tip_x0, tip_y0) = self.arm.fingertip(state[0], state[1]);
+        let arm_next = self.arm.step(&arm_state, action);
+        let (tip_x1, tip_y1) = self.arm.fingertip(arm_next[0], arm_next[1]);
+        let tip_vx = (tip_x1 - tip_x0) / self.arm.dt;
+        let tip_vy = (tip_y1 - tip_y0) / self.arm.dt;
+
+        // 2. object dynamics: penalty contact with the fingertip + friction
+        let mut obj = [state[4], state[5], state[6], state[7]];
+        let (stiff, radius, mass, fric) = (
+            self.contact_stiffness,
+            self.contact_radius,
+            self.obj_mass,
+            self.friction,
+        );
+        substep(self.arm.substeps, self.arm.dt / self.arm.substeps as f32, &mut obj, |o, d| {
+            let dx = o[0] - tip_x1;
+            let dy = o[1] - tip_y1;
+            let dist = (dx * dx + dy * dy).sqrt().max(1e-6);
+            let (mut fx, mut fy) = (0.0, 0.0);
+            if dist < radius {
+                // penalty spring pushes the object away from the tip and
+                // drags it with the tip's velocity
+                let pen = radius - dist;
+                fx = stiff * pen * dx / dist + 0.5 * tip_vx;
+                fy = stiff * pen * dy / dist + 0.5 * tip_vy;
+            }
+            // Coulomb-like friction (smoothed)
+            let v = (o[2] * o[2] + o[3] * o[3]).sqrt().max(1e-6);
+            fx -= fric * o[2] / v * v.min(1.0);
+            fy -= fric * o[3] / v * v.min(1.0);
+            d[0] = o[2];
+            d[1] = o[3];
+            d[2] = fx / mass;
+            d[3] = fy / mass;
+        });
+
+        vec![
+            arm_next[0], arm_next[1], arm_next[2], arm_next[3],
+            obj[0].clamp(-2.0, 2.0), obj[1].clamp(-2.0, 2.0),
+            obj[2].clamp(-5.0, 5.0), obj[3].clamp(-5.0, 5.0),
+            state[8], state[9],
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn object_rests_without_contact() {
+        let env = Pusher::default();
+        // arm far from object, object at rest
+        let s = vec![0.0, 0.0, 0.0, 0.0, -0.9, -0.9, 0.0, 0.0, 0.5, 0.5];
+        let n = env.step(&s, &[0.0, 0.0]);
+        assert!((n[4] - s[4]).abs() < 1e-4 && (n[5] - s[5]).abs() < 1e-4, "{n:?}");
+    }
+
+    #[test]
+    fn contact_pushes_object() {
+        let env = Pusher::default();
+        // fingertip at (1, 0) when th1=th2=0; object just beside it
+        let s = vec![0.0, 0.0, 0.0, 0.0, 1.05, 0.0, 0.0, 0.0, 0.5, 0.5];
+        let n = env.step(&s, &[0.0, 0.0]);
+        assert!(n[4] > 1.05, "object should be pushed away: {n:?}");
+    }
+
+    #[test]
+    fn friction_damps_object() {
+        let env = Pusher::default();
+        let s = vec![0.0, 0.0, 0.0, 0.0, -0.9, -0.9, 2.0, 0.0, 0.5, 0.5];
+        let n = env.step(&s, &[0.0, 0.0]);
+        assert!(n[6] < 2.0 && n[6] > 0.0, "{n:?}");
+    }
+
+    #[test]
+    fn goal_is_static() {
+        let env = Pusher::default();
+        let mut rng = Pcg64::new(4);
+        let s = env.reset(&mut rng);
+        let n = env.step(&s, &[0.3, -0.3]);
+        assert_eq!(&n[8..10], &s[8..10]);
+    }
+}

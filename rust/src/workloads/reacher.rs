@@ -1,0 +1,130 @@
+//! Planar 2-link reacher (robot-object interaction class).
+//!
+//! A two-joint arm driven by joint torques must reach a target point.
+//! State: `[th1, th2, w1, w2, tx, ty]` (joint angles, joint velocities,
+//! target position), action: two torques. Dynamics use a simplified
+//! decoupled-inertia model with centripetal coupling — smooth, nonlinear,
+//! and representative of the paper's reacher dynamics-learning task.
+
+use crate::util::rng::Pcg64;
+use crate::workloads::env::{substep, Env};
+
+#[derive(Debug, Clone)]
+pub struct Reacher {
+    pub link_len: f32,
+    pub inertia: f32,
+    pub damping: f32,
+    pub dt: f32,
+    pub substeps: usize,
+}
+
+impl Default for Reacher {
+    fn default() -> Self {
+        Self { link_len: 0.5, inertia: 0.05, damping: 0.3, dt: 0.02, substeps: 4 }
+    }
+}
+
+impl Reacher {
+    /// Forward kinematics of the fingertip.
+    pub fn fingertip(&self, th1: f32, th2: f32) -> (f32, f32) {
+        let x = self.link_len * th1.cos() + self.link_len * (th1 + th2).cos();
+        let y = self.link_len * th1.sin() + self.link_len * (th1 + th2).sin();
+        (x, y)
+    }
+}
+
+impl Env for Reacher {
+    fn name(&self) -> &'static str {
+        "reacher"
+    }
+
+    fn state_dim(&self) -> usize {
+        6
+    }
+
+    fn action_dim(&self) -> usize {
+        2
+    }
+
+    fn action_limit(&self) -> f32 {
+        1.0
+    }
+
+    fn reset(&self, rng: &mut Pcg64) -> Vec<f32> {
+        let r = rng.range_f32(0.3, 0.9);
+        let phi = rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI);
+        vec![
+            rng.range_f32(-std::f32::consts::PI, std::f32::consts::PI),
+            rng.range_f32(-2.0, 2.0),
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+            r * phi.cos(),
+            r * phi.sin(),
+        ]
+    }
+
+    fn step(&self, state: &[f32], action: &[f32]) -> Vec<f32> {
+        let mut s = state.to_vec();
+        let t1 = action[0].clamp(-1.0, 1.0);
+        let t2 = action[1].clamp(-1.0, 1.0);
+        let (inertia, damping) = (self.inertia, self.damping);
+        substep(self.substeps, self.dt / self.substeps as f32, &mut s[..4], |s, d| {
+            let (th2, w1, w2) = (s[1], s[2], s[3]);
+            // inertia of joint 1 varies with elbow angle; centripetal
+            // coupling between the links provides the nonlinearity
+            let i1 = inertia * (1.5 + th2.cos());
+            let i2 = inertia;
+            let coriolis = 0.02 * w1 * w2 * th2.sin();
+            d[0] = w1;
+            d[1] = w2;
+            d[2] = (t1 - damping * w1 * inertia / 0.05 * 0.05 - coriolis) / i1;
+            d[3] = (t2 - damping * w2 * inertia / 0.05 * 0.05 + coriolis) / i2;
+        });
+        // wrap joint angles
+        for i in 0..2 {
+            if s[i] > std::f32::consts::PI {
+                s[i] -= std::f32::consts::TAU;
+            } else if s[i] < -std::f32::consts::PI {
+                s[i] += std::f32::consts::TAU;
+            }
+        }
+        // clamp runaway velocities (joint stops)
+        s[2] = s[2].clamp(-20.0, 20.0);
+        s[3] = s[3].clamp(-20.0, 20.0);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn torque_accelerates_joint() {
+        let env = Reacher::default();
+        let s = vec![0.0, 0.0, 0.0, 0.0, 0.5, 0.0];
+        let n = env.step(&s, &[1.0, 0.0]);
+        assert!(n[2] > 0.0);
+        let n2 = env.step(&s, &[0.0, 1.0]);
+        assert!(n2[3] > 0.0);
+    }
+
+    #[test]
+    fn target_is_static() {
+        let env = Reacher::default();
+        let mut rng = Pcg64::new(3);
+        let s = env.reset(&mut rng);
+        let n = env.step(&s, &[0.5, -0.5]);
+        assert_eq!(n[4], s[4]);
+        assert_eq!(n[5], s[5]);
+    }
+
+    #[test]
+    fn fingertip_kinematics() {
+        let env = Reacher::default();
+        let (x, y) = env.fingertip(0.0, 0.0);
+        assert!((x - 1.0).abs() < 1e-6 && y.abs() < 1e-6);
+        let (x, y) = env.fingertip(std::f32::consts::FRAC_PI_2, 0.0);
+        assert!(x.abs() < 1e-6 && (y - 1.0).abs() < 1e-6);
+    }
+}

