@@ -3,14 +3,21 @@
 //! the per-workload slice of the paper's Fig. 2 finding that different
 //! robotics tasks prefer different MX precisions.
 //!
+//! The seven runs are independent, so they execute concurrently through
+//! the batched engine (one worker per core; results are bit-identical
+//! to running them one after another). Set `RAYON_NUM_THREADS=1` to
+//! force the serial schedule.
+//!
 //! ```bash
 //! cargo run --release --example precision_sweep -- [workload] [steps]
 //! ```
 
 use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::trainer::batched::sweep_schemes;
 use mxscale::trainer::budget::step_cost;
 use mxscale::trainer::qat::QuantScheme;
-use mxscale::trainer::session::{TrainConfig, TrainSession};
+use mxscale::trainer::session::TrainConfig;
+use mxscale::util::par;
 use mxscale::workloads::{by_name, Dataset};
 
 fn main() {
@@ -23,7 +30,10 @@ fn main() {
         by_name("reacher").unwrap()
     });
     let ds = Dataset::collect(env.as_ref(), 30, 100, 0x5EEE);
-    println!("precision sweep on {workload} ({} steps, batch 32):\n", steps);
+    println!(
+        "precision sweep on {workload} ({steps} steps, batch 32, {} worker threads):\n",
+        par::threads()
+    );
     println!(
         "{:<10} {:>12} {:>12} {:>12} {:>14}",
         "scheme", "val loss", "us/step", "uJ/step", "uJ to finish"
@@ -31,26 +41,30 @@ fn main() {
     let schemes: Vec<QuantScheme> = std::iter::once(QuantScheme::Fp32)
         .chain(ALL_ELEMENT_FORMATS.into_iter().map(QuantScheme::MxSquare))
         .collect();
+    let base = TrainConfig { steps, eval_every: steps, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let outcomes = sweep_schemes(&ds, &schemes, &base);
+    let wall = t0.elapsed();
     let mut best = (String::new(), f64::INFINITY);
-    for scheme in schemes {
-        let mut s = TrainSession::new(
-            ds.clone(),
-            TrainConfig { scheme, steps, eval_every: steps, ..Default::default() },
-        );
-        s.run();
-        let v = s.val_loss();
-        let cost = step_cost(scheme, 32);
+    for (scheme, o) in schemes.iter().zip(&outcomes) {
+        let v = o.session.val_loss();
+        let cost = step_cost(*scheme, 32);
         println!(
             "{:<10} {:>12.5} {:>12.2} {:>12.2} {:>14.1}",
-            scheme.name(),
+            o.label,
             v,
             cost.micros,
             cost.microjoules,
             cost.microjoules * steps as f64
         );
-        if scheme != QuantScheme::Fp32 && v < best.1 {
-            best = (scheme.name(), v);
+        if *scheme != QuantScheme::Fp32 && v < best.1 {
+            best = (o.label.clone(), v);
         }
     }
     println!("\nbest MX format for {workload}: {} (val {:.5})", best.0, best.1);
+    println!(
+        "sweep wall-clock: {:.2} s for {} runs (batched across cores)",
+        wall.as_secs_f64(),
+        schemes.len()
+    );
 }

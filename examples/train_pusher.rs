@@ -5,6 +5,9 @@
 //! simulated GeMM core accounts per-step latency and energy. No Python
 //! runs during this program.
 //!
+//! Needs `make artifacts` plus a build with the `xla` feature (see
+//! README.md); otherwise it prints what is missing and exits cleanly.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example train_pusher -- [scheme] [steps]
 //! ```
@@ -16,19 +19,27 @@ use mxscale::runtime::{artifact_dir, EvalExecutable, Manifest, TrainExecutable};
 use mxscale::util::mat::Mat;
 use mxscale::workloads::{by_name, Dataset};
 
-fn main() -> anyhow::Result<()> {
+fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let scheme = args.first().map(|s| s.as_str()).unwrap_or("e4m3").to_string();
     let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
 
     let dir = artifact_dir();
-    let manifest = Manifest::load(&dir).map_err(|e| {
-        anyhow::anyhow!("{e}\nrun `make artifacts` first (artifacts dir: {})", dir.display())
-    })?;
-    let train_path = manifest
-        .train_path(&dir, &scheme)
-        .ok_or_else(|| anyhow::anyhow!("no train artifact for scheme {scheme}"))?;
-    let eval_path = manifest.eval_path(&dir, &scheme).unwrap();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}\nrun `make artifacts` first (artifacts dir: {})", dir.display());
+            return;
+        }
+    };
+    let Some(train_path) = manifest.train_path(&dir, &scheme) else {
+        eprintln!("no train artifact for scheme {scheme}");
+        return;
+    };
+    let Some(eval_path) = manifest.eval_path(&dir, &scheme) else {
+        eprintln!("no eval artifact for scheme {scheme}");
+        return;
+    };
 
     println!("[1/4] collecting pusher dynamics data from the physics simulator...");
     let env = by_name("pusher").unwrap();
@@ -36,9 +47,27 @@ fn main() -> anyhow::Result<()> {
     println!("      {} train / {} val transitions", ds.len(), ds.val_x.rows);
 
     println!("[2/4] compiling AOT artifacts on the PJRT CPU client...");
-    let client = mxscale::runtime::executor::cpu_client()?;
-    let mut train = TrainExecutable::load(&client, &train_path, 0x5EED)?;
-    let eval = EvalExecutable::load(&client, &eval_path)?;
+    let client = match mxscale::runtime::executor::cpu_client() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("      skipped: {e}");
+            return;
+        }
+    };
+    let mut train = match TrainExecutable::load(&client, &train_path, 0x5EED) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("      train artifact load failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let eval = match EvalExecutable::load(&client, &eval_path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("      eval artifact load failed: {e}");
+            std::process::exit(1);
+        }
+    };
     println!("      scheme={scheme} state tensors={}", train.state.len());
 
     // hardware cost model for this scheme (per batch-32 step)
@@ -58,16 +87,27 @@ fn main() -> anyhow::Result<()> {
     let mut last_loss = f32::NAN;
     for step in 0..steps {
         let batch = ds.batch(step, manifest.batch);
-        last_loss = train.step(&batch.x, &batch.y)?;
+        last_loss = match train.step(&batch.x, &batch.y) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("      step {step} failed: {e}");
+                std::process::exit(1);
+            }
+        };
         if step % 50 == 0 || step + 1 == steps {
-            let val = eval.loss(&train.state, &vx, &vy)?;
-            println!("      step {step:>4}  train {last_loss:.5}  val {val:.5}");
+            match eval.loss(&train.state, &vx, &vy) {
+                Ok(val) => println!("      step {step:>4}  train {last_loss:.5}  val {val:.5}"),
+                Err(e) => {
+                    eprintln!("      eval failed: {e}");
+                    std::process::exit(1);
+                }
+            }
         }
     }
     let wall = t0.elapsed();
 
     println!("[4/4] results");
-    let val = eval.loss(&train.state, &vx, &vy)?;
+    let val = eval.loss(&train.state, &vx, &vy).unwrap_or(f32::NAN);
     println!("      final val loss: {val:.5} (train {last_loss:.5})");
     println!(
         "      host wall-clock: {:.2} s ({:.2} ms/step on this CPU)",
@@ -85,5 +125,4 @@ fn main() -> anyhow::Result<()> {
             uj * steps as f64 / 1e3
         );
     }
-    Ok(())
 }

@@ -1,11 +1,19 @@
 //! Bench: GeMM-core schedule + training-step simulation (Table IV
-//! substrate) and the golden QAT step (Fig. 2 substrate).
+//! substrate), the golden QAT step (Fig. 2 substrate), the tile-parallel
+//! PE-array walk vs its serial reference, and the batched QAT sweep.
+//! Hand-rolled harness (criterion unavailable offline); vary worker
+//! count with RAYON_NUM_THREADS.
 
 use mxscale::gemmcore::schedule::{train_step_cycles, PUSHER_DIMS};
+use mxscale::gemmcore::GemmCore;
 use mxscale::mx::element::ElementFormat;
+use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::trainer::batched::BatchedTrainer;
 use mxscale::trainer::mlp::{Mlp, MLP_DIMS};
 use mxscale::trainer::qat::{qat_step, QuantScheme};
+use mxscale::trainer::session::{TrainConfig, TrainSession};
 use mxscale::util::mat::Mat;
+use mxscale::util::par;
 use mxscale::util::rng::Pcg64;
 use std::time::Instant;
 
@@ -43,4 +51,70 @@ fn main() {
             t.elapsed().as_secs_f64() * 1e3 / reps as f64
         );
     }
+
+    // §Parallel: the bit-exact PE-array datapath, serial walk vs the
+    // tile-parallel walk (identical outputs/events, see tests/parallel.rs)
+    println!(
+        "\nparallel engine: {} worker threads (set RAYON_NUM_THREADS to vary)",
+        par::threads()
+    );
+    let a = Mat::randn(128, 128, 1.0, &mut rng);
+    let b = Mat::randn(128, 128, 1.0, &mut rng);
+    for fmt in [ElementFormat::Int8, ElementFormat::E2M1] {
+        let qa = MxTensor::quantize(&a, fmt, Layout::Square8x8);
+        let qb = MxTensor::quantize(&b, fmt, Layout::Square8x8);
+        let reps = 5;
+        let mut core = GemmCore::new(fmt);
+        core.gemm_serial(&qa, &qb); // warm
+        let t = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(core.gemm_serial(&qa, &qb));
+        }
+        let ts = t.elapsed().as_secs_f64() / reps as f64;
+        core.gemm(&qa, &qb); // warm
+        let t = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(core.gemm(&qa, &qb));
+        }
+        let tp = t.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "gemmcore/128^3/{:<6} serial {:8.2} ms  parallel {:8.2} ms  speedup {:.2}x",
+            fmt.name(),
+            ts * 1e3,
+            tp * 1e3,
+            ts / tp
+        );
+    }
+
+    // §Batched: a 4-scheme QAT sweep, sequential vs BatchedTrainer
+    // (the Fig. 2 / precision-sweep shape; results are bit-identical)
+    let env = mxscale::workloads::by_name("cartpole").unwrap();
+    let ds = mxscale::workloads::Dataset::collect(env.as_ref(), 6, 60, 0xBE);
+    let schemes = [
+        QuantScheme::Fp32,
+        QuantScheme::MxSquare(ElementFormat::Int8),
+        QuantScheme::MxSquare(ElementFormat::E4M3),
+        QuantScheme::MxSquare(ElementFormat::E2M1),
+    ];
+    let cfg = TrainConfig { steps: 60, eval_every: usize::MAX, ..Default::default() };
+    let t = Instant::now();
+    for scheme in schemes {
+        let mut s = TrainSession::new(ds.clone(), TrainConfig { scheme, ..cfg.clone() });
+        s.run();
+        std::hint::black_box(s.val_loss());
+    }
+    let ts = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let mut batch = BatchedTrainer::new();
+    for scheme in schemes {
+        batch.push(scheme.name(), ds.clone(), TrainConfig { scheme, ..cfg.clone() });
+    }
+    std::hint::black_box(batch.run());
+    let tp = t.elapsed().as_secs_f64();
+    println!(
+        "sweep/4-schemes-x60-steps  sequential {:7.0} ms  batched {:7.0} ms  speedup {:.2}x",
+        ts * 1e3,
+        tp * 1e3,
+        ts / tp
+    );
 }

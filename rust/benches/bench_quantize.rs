@@ -1,31 +1,78 @@
-//! Bench: MX quantization throughput (the trainer's QAT hot path).
+//! Bench: MX quantization throughput (the trainer's QAT hot path),
+//! including the serial-vs-parallel comparison of the batched engine.
+//! Hand-rolled harness (criterion unavailable offline; run with
+//! `cargo bench --bench bench_quantize`, vary RAYON_NUM_THREADS).
 
 use mxscale::mx::element::ElementFormat;
-use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::mx::tensor::{
+    fake_quant_mat_fast, fake_quant_mat_fast_serial, Layout, MxTensor,
+};
 use mxscale::util::mat::Mat;
+use mxscale::util::par;
 use mxscale::util::rng::Pcg64;
 use std::time::Instant;
+
+/// Best-of-3 seconds per call after one warmup call.
+fn time_best<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    std::hint::black_box(f());
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(f());
+        }
+        best = best.min(t.elapsed().as_secs_f64() / reps as f64);
+    }
+    best
+}
 
 fn main() {
     let mut rng = Pcg64::new(3);
     let m = Mat::randn(256, 256, 1.0, &mut rng);
     for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
         for layout in [Layout::Square8x8, Layout::Vector32] {
-            let reps = 50;
-            let _ = MxTensor::fake_quant(&m, fmt, layout); // warm
-            let t = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(MxTensor::fake_quant(&m, fmt, layout));
-            }
-            let dt = t.elapsed().as_secs_f64();
-            let elems = reps as f64 * 65536.0;
+            let dt = time_best(50, || MxTensor::fake_quant(&m, fmt, layout));
+            let elems = 65536.0;
             println!(
                 "quantize/{:<6}/{:<10} {:>10.2e} elems/s  ({:.3} ms per 256x256)",
                 fmt.name(),
                 layout.name(),
                 elems / dt,
-                dt * 1e3 / reps as f64
+                dt * 1e3
             );
         }
+    }
+
+    // §Parallel: the batched engine vs the serial reference on a
+    // training-sized tensor. Both paths are bit-identical (asserted in
+    // tests/parallel.rs); only the wall-clock differs.
+    let big = Mat::randn(1024, 1024, 1.0, &mut rng);
+    println!(
+        "\nparallel engine: {} worker threads (set RAYON_NUM_THREADS to vary)",
+        par::threads()
+    );
+    for fmt in [ElementFormat::Int8, ElementFormat::E4M3] {
+        let ts = time_best(10, || fake_quant_mat_fast_serial(&big, fmt, Layout::Square8x8));
+        let tp = time_best(10, || fake_quant_mat_fast(&big, fmt, Layout::Square8x8));
+        println!(
+            "fake-quant-fast/{:<6} 1024^2  serial {:8.3} ms  parallel {:8.3} ms  speedup {:.2}x",
+            fmt.name(),
+            ts * 1e3,
+            tp * 1e3,
+            ts / tp
+        );
+        let ts = time_best(5, || {
+            MxTensor::quantize_serial(&big, fmt, Layout::Square8x8).dequantize_serial()
+        });
+        let tp = time_best(5, || {
+            MxTensor::quantize(&big, fmt, Layout::Square8x8).dequantize()
+        });
+        println!(
+            "codec-roundtrip/{:<6} 1024^2  serial {:8.3} ms  parallel {:8.3} ms  speedup {:.2}x",
+            fmt.name(),
+            ts * 1e3,
+            tp * 1e3,
+            ts / tp
+        );
     }
 }

@@ -70,6 +70,15 @@ impl MacUnit {
         self.acc = 0.0;
     }
 
+    /// Clear the operand register (tile-context boundary). Toggle
+    /// counting restarts from an all-zeros register, which makes each
+    /// output tile's event counts independent of tile traversal order —
+    /// the property that lets the tile-parallel PE-array walk reproduce
+    /// the serial walk's `Events` exactly.
+    pub fn reset_operand_reg(&mut self) {
+        self.prev_operands = 0;
+    }
+
     /// Drain counters (e.g. between benchmark phases).
     pub fn take_events(&mut self) -> Events {
         std::mem::take(&mut self.events)

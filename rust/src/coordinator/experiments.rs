@@ -13,10 +13,12 @@ use crate::mx::dacapo::DacapoFormat;
 use crate::mx::element::ElementFormat;
 use crate::mx::ALL_ELEMENT_FORMATS;
 use crate::pearray::{PeArray, SystolicArray};
+use crate::trainer::batched::sweep_schemes;
 use crate::trainer::budget::{step_cost, train_with_budget, Budget};
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainSession};
 use crate::util::mat::Mat;
+use crate::util::par;
 use crate::util::rng::Pcg64;
 use crate::workloads::{by_name, Dataset, ALL_WORKLOADS};
 
@@ -49,7 +51,7 @@ pub fn table2() -> Table {
             cells.push(f(m.mac_pj_per_op(fmt), 3));
         }
         t.row(cells);
-        let mut paper_cells = vec![format!("  (paper)"), f(freq, 0), f(area, 2)];
+        let mut paper_cells = vec!["  (paper)".to_string(), f(freq, 0), f(area, 2)];
         for v in paper {
             paper_cells.push(f(v, 3));
         }
@@ -179,6 +181,11 @@ pub fn fig7() -> (Table, Table) {
 
 /// Fig. 2 — validation-loss curves of all formats on the 4 workloads.
 /// Returns one table of the final losses; full curves are saved as CSV.
+///
+/// The 7 schemes of each workload train concurrently through the
+/// batched engine — the sweep is embarrassingly parallel and the
+/// results are bit-identical to the sequential loop (each session is
+/// seeded independently and the parallel kernels are exact).
 pub fn fig2(steps: usize, eval_every: usize) -> Table {
     let schemes: Vec<QuantScheme> = std::iter::once(QuantScheme::Fp32)
         .chain(ALL_ELEMENT_FORMATS.into_iter().map(QuantScheme::MxSquare))
@@ -190,21 +197,18 @@ pub fn fig2(steps: usize, eval_every: usize) -> Table {
     for wl in ALL_WORKLOADS {
         let env = by_name(wl).unwrap();
         let ds = Dataset::collect(env.as_ref(), 30, 100, 0xF16_2);
+        let base = TrainConfig { steps, eval_every, lr: 1e-3, ..Default::default() };
+        let outcomes = sweep_schemes(&ds, &schemes, &base);
         let mut cells = vec![wl.to_string()];
         let mut curves = Table::new(
             &format!("fig2 curves - {wl}"),
             &["scheme", "step", "val_loss"],
         );
         let mut best: Option<(String, f64)> = None;
-        for scheme in &schemes {
-            let mut s = TrainSession::new(
-                ds.clone(),
-                TrainConfig { scheme: *scheme, steps, eval_every, lr: 1e-3, ..Default::default() },
-            );
-            s.run();
-            let v = s.val_loss();
+        for (scheme, o) in schemes.iter().zip(&outcomes) {
+            let v = o.session.val_loss();
             cells.push(f(v, 4));
-            for (step, loss) in &s.val_curve {
+            for (step, loss) in &o.session.val_curve {
                 curves.row(vec![scheme.name(), step.to_string(), format!("{loss:.6}")]);
             }
             if *scheme != QuantScheme::Fp32 && best.as_ref().map(|b| v < b.1).unwrap_or(true) {
@@ -236,21 +240,29 @@ pub fn fig8(time_budget_us: f64, energy_budget_uj: f64) -> Table {
         &["scheme", "us/step", "uJ/step", "steps@time", "loss@time", "steps@energy", "loss@energy"],
     );
     let mut curves = Table::new("fig8 curves", &["scheme", "budget", "consumed", "steps", "val_loss"]);
-    for scheme in contenders {
-        let cost = step_cost(scheme, 32);
+    // every (scheme x budget) run is independent: one batched fan-out
+    let specs: Vec<(QuantScheme, Budget)> = contenders
+        .iter()
+        .flat_map(|&s| {
+            [
+                (s, Budget::TimeMicros(time_budget_us)),
+                (s, Budget::EnergyMicrojoules(energy_budget_uj)),
+            ]
+        })
+        .collect();
+    let runs = par::par_map(specs.len(), 1, |i| {
+        let (scheme, budget) = specs[i];
         let cfg = TrainConfig { eval_every: usize::MAX, ..Default::default() };
-        let tc = train_with_budget(ds.clone(), scheme, Budget::TimeMicros(time_budget_us), 8, cfg.clone());
-        let ec = train_with_budget(
-            ds.clone(),
-            scheme,
-            Budget::EnergyMicrojoules(energy_budget_uj),
-            8,
-            cfg,
-        );
-        for p in &tc {
+        train_with_budget(ds.clone(), scheme, budget, 8, cfg)
+    });
+    for (ci, scheme) in contenders.into_iter().enumerate() {
+        let cost = step_cost(scheme, 32);
+        let tc = &runs[2 * ci];
+        let ec = &runs[2 * ci + 1];
+        for p in tc {
             curves.row(vec![scheme.name(), "time".into(), f(p.consumed, 1), p.steps.to_string(), format!("{:.6}", p.val_loss)]);
         }
-        for p in &ec {
+        for p in ec {
             curves.row(vec![scheme.name(), "energy".into(), f(p.consumed, 2), p.steps.to_string(), format!("{:.6}", p.val_loss)]);
         }
         let lt = tc.last().unwrap();

@@ -42,8 +42,21 @@ impl GemmCore {
 
     /// Bit-exact GeMM of two square-quantized tensors, with schedule
     /// accounting. Returns the FP32 result matrix.
+    ///
+    /// Large GeMMs run tile-parallel inside the PE array (independent
+    /// output tiles, per-worker contexts, `Events` reduction); the
+    /// simulated cycle/cost model is untouched by host parallelism.
     pub fn gemm(&mut self, qa: &MxTensor, qb: &MxTensor) -> Mat {
         let out = self.pe.gemm_quantized(qa, qb);
+        self.cost.add(&schedule::gemm_cycles(qa.rows, qa.cols, qb.cols, self.format));
+        out
+    }
+
+    /// Serial reference GeMM — identical numbers, events, and cost as
+    /// [`GemmCore::gemm`]; kept for identity tests and as the benchmark
+    /// baseline the parallel walk is measured against.
+    pub fn gemm_serial(&mut self, qa: &MxTensor, qb: &MxTensor) -> Mat {
+        let out = self.pe.gemm_quantized_serial(qa, qb);
         self.cost.add(&schedule::gemm_cycles(qa.rows, qa.cols, qb.cols, self.format));
         out
     }

@@ -30,11 +30,20 @@
 //!   accounting on the simulated hardware; regenerates Figs. 2 and 8.
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX train/eval
 //!   graphs (`artifacts/*.hlo.txt`); Python never runs at training time.
+//!   Gated behind the `xla` cargo feature (graceful stubs otherwise).
 //! * [`coordinator`] — experiment configs, the CLI, and the per-table /
 //!   per-figure reproduction harnesses.
 //!
-//! See `DESIGN.md` for the system inventory and the paper-to-module map,
-//! and `EXPERIMENTS.md` for measured-vs-paper results.
+//! The hot path — block quantization, the PE-array walk, the QAT sweep —
+//! runs on a batched parallel engine ([`util::par`], rayon-style
+//! fork-join honoring `RAYON_NUM_THREADS`): MX blocks, output tiles, and
+//! training runs are independent by construction, so every parallel
+//! result is bit-identical to the serial reference (`tests/parallel.rs`
+//! asserts it).
+//!
+//! See `DESIGN.md` (repo root) for the system inventory and the
+//! paper-to-module map, and `EXPERIMENTS.md` for how to regenerate every
+//! table and figure plus the benchmark methodology.
 
 pub mod arith;
 pub mod coordinator;

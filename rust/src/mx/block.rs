@@ -6,7 +6,7 @@
 //! largest power of two representable in the element format — clamped to
 //! E8M0's range. Elements are then encoded as `encode(v / X)`.
 
-use crate::mx::element::{exp2i, ElementFormat};
+use crate::mx::element::{exp2i, floor_log2, ElementFormat};
 
 /// E8M0 scale exponent range. (Code 0xFF is NaN in the spec; we clamp.)
 pub const SCALE_EMIN: i32 = -127;
@@ -54,7 +54,10 @@ pub fn shared_exponent(values: &[f32], format: ElementFormat) -> i32 {
     if max_abs == 0.0 || !max_abs.is_finite() {
         return SCALE_EMIN;
     }
-    let e = (max_abs as f64).log2().floor() as i32;
+    // §Audit: exact exponent-field extraction (shared with the element
+    // encoders and the fast path) — log2().floor() can misround at
+    // binade boundaries and silently shift the whole block's scale.
+    let e = floor_log2(max_abs as f64);
     (e - format.emax()).clamp(SCALE_EMIN, SCALE_EMAX)
 }
 
@@ -223,7 +226,7 @@ pub fn fake_quant_block_fast(values: &mut [f32], format: ElementFormat) {
     }
     // floor(log2(max_abs)) from the f64 exponent field (exact, and
     // correct for f32 subnormals after the widening cast)
-    let e = floor_log2_f64(max_abs as f64);
+    let e = floor_log2(max_abs as f64);
     let scale_exp = (e - format.emax()).clamp(SCALE_EMIN, SCALE_EMAX);
     let scale = exp2i(scale_exp);
     let inv = exp2i(-scale_exp);
@@ -245,25 +248,11 @@ pub fn fake_quant_block_fast(values: &mut [f32], format: ElementFormat) {
                     *v = 0.0;
                     continue;
                 }
-                let e = floor_log2_f64(a).max(emin);
+                let e = floor_log2(a).max(emin);
                 let step = exp2i(e - mb);
                 let q = ((a / step).round_ties_even() * step).min(max);
                 *v = (q.copysign(x) * scale) as f32;
             }
         }
-    }
-}
-
-#[inline]
-fn floor_log2_f64(x: f64) -> i32 {
-    debug_assert!(x > 0.0 && x.is_finite());
-    let bits = x.to_bits();
-    let exp = ((bits >> 52) & 0x7ff) as i32;
-    if exp == 0 {
-        // f64 subnormal (never hit from finite f32 inputs scaled by
-        // 2^<=127, but keep it correct)
-        -1075 + (64 - (bits & 0xf_ffff_ffff_ffff).leading_zeros() as i32)
-    } else {
-        exp - 1023
     }
 }

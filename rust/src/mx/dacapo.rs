@@ -16,7 +16,7 @@
 //! micro-exponent.
 
 use crate::mx::block::{SCALE_EMAX, SCALE_EMIN};
-use crate::mx::element::{exp2i, rne};
+use crate::mx::element::{exp2i, floor_log2, rne};
 use crate::util::mat::Mat;
 
 /// Dacapo block size and subgroup size (ISCA'23 BDR paper, Dacapo config).
@@ -114,7 +114,8 @@ pub fn quantize_dacapo_block(values: &[f32], format: DacapoFormat) -> DacapoBloc
     let shared_exp = if max_abs == 0.0 {
         SCALE_EMIN
     } else {
-        ((max_abs as f64).log2().floor() as i32 + 1).clamp(SCALE_EMIN, SCALE_EMAX)
+        // exact binade extraction (see mx::element::floor_log2 §Audit)
+        (floor_log2(max_abs as f64) + 1).clamp(SCALE_EMIN, SCALE_EMAX)
     };
     let mant = format.mant_bits() as i32;
     let grid = exp2i(mant); // 2^mant steps per unit fraction

@@ -203,8 +203,12 @@ impl ElementFormat {
         }
         let emin = self.emin();
         // quantize onto the grid: for exponent e, step = 2^(e - mb)
-        // subnormals use e = emin.
-        let e_real = if a == 0.0 { emin } else { a.log2().floor() as i32 };
+        // subnormals use e = emin. §Audit: the binade is read from the
+        // f64 exponent field, not log2() — libm rounding at binade
+        // boundaries must never shift the grid (OCP MX v1.0 §6.3 derives
+        // it as an exact bit-field operation, and the fast QAT path in
+        // `mx::block` does the same, so the two stay bit-identical).
+        let e_real = if a == 0.0 { emin } else { floor_log2(a) };
         let e = e_real.max(emin);
         let step = exp2i(e - mb as i32);
         let q = rne(a / step); // integer number of steps
@@ -317,6 +321,24 @@ impl ElementFormat {
 /// 2^e as f64, exact for the exponent ranges involved here.
 pub fn exp2i(e: i32) -> f64 {
     (e as f64).exp2()
+}
+
+/// Exact `floor(log2(x))` for positive finite `x`, read straight from
+/// the f64 exponent field (correct for f64 subnormals too). This is the
+/// shared-exponent primitive of the whole crate: the element encoders,
+/// the block quantizer, and the fast QAT path all derive their binade
+/// through it, so no libm rounding discrepancy can split them.
+#[inline]
+pub fn floor_log2(x: f64) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let exp = ((bits >> 52) & 0x7ff) as i32;
+    if exp == 0 {
+        // f64 subnormal: locate the mantissa's top set bit
+        -1075 + (64 - (bits & 0xf_ffff_ffff_ffff).leading_zeros() as i32)
+    } else {
+        exp - 1023
+    }
 }
 
 /// Round half to even on an f64 that is an exact multiple count.
@@ -532,6 +554,35 @@ mod tests {
                 let (s, e, m) = fmt.fp_parts(code);
                 let v = s as f64 * m as f64 * exp2i(e - fmt.mant_bits() as i32);
                 assert_eq!(v, fmt.decode(code), "{fmt:?} code {code:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn floor_log2_exact_at_binade_boundaries() {
+        for e in -300..300 {
+            let x = exp2i(e);
+            assert_eq!(floor_log2(x), e, "2^{e}");
+            assert_eq!(floor_log2(x * 1.5), e, "1.5 * 2^{e}");
+            // just below a power of two belongs to the lower binade
+            let below = f64::from_bits(x.to_bits() - 1);
+            assert_eq!(floor_log2(below), e - 1, "pred(2^{e})");
+        }
+        // f64 subnormals
+        assert_eq!(floor_log2(f64::MIN_POSITIVE), -1022);
+        assert_eq!(floor_log2(f64::MIN_POSITIVE / 2.0), -1023);
+        assert_eq!(floor_log2(f64::from_bits(1)), -1074);
+    }
+
+    #[test]
+    fn encode_exact_on_binade_boundaries() {
+        // values exactly on a representable power of two must round-trip
+        // exactly in every format (the audit's regression surface)
+        for fmt in FP_FORMATS {
+            for e in fmt.emin()..=fmt.emax() {
+                let v = exp2i(e);
+                assert_eq!(fmt.fake_quant(v), v, "{fmt:?} 2^{e}");
+                assert_eq!(fmt.fake_quant(-v), -v, "{fmt:?} -2^{e}");
             }
         }
     }

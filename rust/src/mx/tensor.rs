@@ -12,6 +12,7 @@
 use crate::mx::block::{quantize_block, ScaledBlock};
 use crate::mx::element::ElementFormat;
 use crate::util::mat::Mat;
+use crate::util::par;
 
 /// Block grouping scheme.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -55,9 +56,69 @@ pub struct MxTensor {
     pub bcols: usize,
 }
 
+/// Block count below which quantization stays serial (fork-join costs
+/// more than the work for small tensors).
+const PAR_MIN_BLOCKS: usize = 256;
+
+/// Element count below which the banded in-place paths stay serial:
+/// band *count* alone is a bad proxy for work (a 64x8 matrix has 8
+/// bands of trivial size), so the fork decision also requires enough
+/// total elements to amortize thread spawn/join (~100us on Linux).
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+/// Minimum parallel chunk count for a banded walk over `elems` total
+/// elements: the caller's band threshold when the matrix is large
+/// enough to amortize forking, effectively-infinite (always serial)
+/// otherwise.
+fn band_min_chunks(elems: usize, bands: usize) -> usize {
+    if elems >= PAR_MIN_ELEMS {
+        bands
+    } else {
+        usize::MAX
+    }
+}
+
 impl MxTensor {
     /// Quantize a dense matrix.
+    ///
+    /// Blocks share nothing but the read-only input (OCP MX §5.2), so
+    /// large matrices fan the per-block work out over the parallel
+    /// engine — bit-identical to [`MxTensor::quantize_serial`], which is
+    /// asserted by `tests/parallel.rs`.
     pub fn quantize(m: &Mat, format: ElementFormat, layout: Layout) -> MxTensor {
+        match layout {
+            Layout::Square8x8 => {
+                let brows = m.rows.div_ceil(SQ);
+                let bcols = m.cols.div_ceil(SQ);
+                let blocks = par::par_map(brows * bcols, PAR_MIN_BLOCKS, |t| {
+                    let (br, bc) = (t / bcols, t % bcols);
+                    let tile = m.block(br * SQ, bc * SQ, SQ, SQ);
+                    quantize_block(&tile.data, format)
+                });
+                MxTensor { rows: m.rows, cols: m.cols, format, layout, blocks, brows, bcols }
+            }
+            Layout::Vector32 => {
+                let bcols = m.cols.div_ceil(VEC);
+                let brows = m.rows;
+                let blocks = par::par_map(brows * bcols, PAR_MIN_BLOCKS, |t| {
+                    let (r, bc) = (t / bcols, t % bcols);
+                    let mut vals = [0.0f32; VEC];
+                    for i in 0..VEC {
+                        let c = bc * VEC + i;
+                        if c < m.cols {
+                            vals[i] = m.at(r, c);
+                        }
+                    }
+                    quantize_block(&vals, format)
+                });
+                MxTensor { rows: m.rows, cols: m.cols, format, layout, blocks, brows, bcols }
+            }
+        }
+    }
+
+    /// Serial reference quantization — the loop the parallel path must
+    /// match bit-for-bit (kept for identity tests and benchmarks).
+    pub fn quantize_serial(m: &Mat, format: ElementFormat, layout: Layout) -> MxTensor {
         match layout {
             Layout::Square8x8 => {
                 let brows = m.rows.div_ceil(SQ);
@@ -93,7 +154,51 @@ impl MxTensor {
     }
 
     /// Dequantize back to a dense matrix.
+    ///
+    /// Parallel over row bands (each band owns a disjoint slice of the
+    /// output), bit-identical to [`MxTensor::dequantize_serial`].
     pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        let cols = self.cols;
+        match self.layout {
+            Layout::Square8x8 => {
+                let min_chunks = band_min_chunks(self.rows * cols, 8);
+                par::par_chunks_mut(&mut m.data, SQ * cols, min_chunks, |br, band| {
+                    let band_rows = if cols == 0 { 0 } else { band.len() / cols };
+                    for bc in 0..self.bcols {
+                        let b = &self.blocks[br * self.bcols + bc];
+                        for i in 0..band_rows {
+                            for j in 0..SQ {
+                                let c = bc * SQ + j;
+                                if c < cols {
+                                    band[i * cols + c] = b.decode(i * SQ + j) as f32;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            Layout::Vector32 => {
+                let min_chunks = band_min_chunks(self.rows * cols, 64);
+                par::par_chunks_mut(&mut m.data, cols, min_chunks, |r, row| {
+                    for bc in 0..self.bcols {
+                        let b = &self.blocks[r * self.bcols + bc];
+                        for i in 0..VEC {
+                            let c = bc * VEC + i;
+                            if c < cols {
+                                row[c] = b.decode(i) as f32;
+                            }
+                        }
+                    }
+                });
+            }
+        }
+        m
+    }
+
+    /// Serial reference dequantization (identity-test twin of
+    /// [`MxTensor::dequantize`]).
+    pub fn dequantize_serial(&self) -> Mat {
         let mut m = Mat::zeros(self.rows, self.cols);
         match self.layout {
             Layout::Square8x8 => {
@@ -308,7 +413,71 @@ mod tests {
 
 /// Fast in-place fake-quantization of a dense matrix (QAT hot path) —
 /// same values as `MxTensor::fake_quant`, no tensor materialization.
+///
+/// §Parallel: blocks are independent, so the work fans out over row
+/// bands (square layout: 8-row bands; vector layout: single rows), each
+/// band owning a disjoint slice of the output. Bit-identical to
+/// [`fake_quant_mat_fast_serial`] (asserted by `tests/parallel.rs`).
 pub fn fake_quant_mat_fast(m: &Mat, format: ElementFormat, layout: Layout) -> Mat {
+    use crate::mx::block::fake_quant_block_fast;
+    let mut out = m.clone();
+    let cols = m.cols;
+    match layout {
+        Layout::Square8x8 => {
+            let bcols = m.cols.div_ceil(SQ);
+            let min_chunks = band_min_chunks(m.rows * cols, 8);
+            par::par_chunks_mut(&mut out.data, SQ * cols, min_chunks, |br, band| {
+                let band_rows = if cols == 0 { 0 } else { band.len() / cols };
+                let r0 = br * SQ;
+                let mut buf = [0.0f32; SQ_ELEMS];
+                for bc in 0..bcols {
+                    let c0 = bc * SQ;
+                    for i in 0..SQ {
+                        for j in 0..SQ {
+                            let (r, c) = (r0 + i, c0 + j);
+                            buf[i * SQ + j] = if r < m.rows && c < m.cols { m.at(r, c) } else { 0.0 };
+                        }
+                    }
+                    fake_quant_block_fast(&mut buf, format);
+                    for i in 0..band_rows {
+                        for j in 0..SQ {
+                            let c = c0 + j;
+                            if c < cols {
+                                band[i * cols + c] = buf[i * SQ + j];
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        Layout::Vector32 => {
+            let bcols = m.cols.div_ceil(VEC);
+            let min_chunks = band_min_chunks(m.rows * cols, 64);
+            par::par_chunks_mut(&mut out.data, cols, min_chunks, |r, row| {
+                let mut buf = [0.0f32; VEC];
+                for bc in 0..bcols {
+                    let c0 = bc * VEC;
+                    for i in 0..VEC {
+                        let c = c0 + i;
+                        buf[i] = if c < m.cols { m.at(r, c) } else { 0.0 };
+                    }
+                    fake_quant_block_fast(&mut buf, format);
+                    for i in 0..VEC {
+                        let c = c0 + i;
+                        if c < cols {
+                            row[c] = buf[i];
+                        }
+                    }
+                }
+            });
+        }
+    }
+    out
+}
+
+/// Serial reference of [`fake_quant_mat_fast`] (identity-test twin and
+/// the benchmark baseline).
+pub fn fake_quant_mat_fast_serial(m: &Mat, format: ElementFormat, layout: Layout) -> Mat {
     use crate::mx::block::fake_quant_block_fast;
     let mut out = m.clone();
     match layout {

@@ -8,33 +8,60 @@
 //! exponents are combined at PE level and applied inside each MAC's
 //! accumulation step, exactly as the paper describes.
 
-use crate::arith::{MacUnit, MacVariant, Mode};
+use crate::arith::{Events, MacUnit, MacVariant, Mode};
 use crate::mx::block::ScaledBlock;
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor, SQ};
 use crate::mx::MxFormat;
 use crate::util::mat::Mat;
+use crate::util::par;
+
+/// Minimum number of 8x8 block products (tiles x K-depth) before the
+/// GeMM walk forks worker contexts; below this the fork-join overhead
+/// exceeds the simulation work.
+const PAR_MIN_BLOCK_PRODUCTS: usize = 32;
 
 /// One 64-MAC square-block PE array.
+///
+/// Also serves as the reusable per-worker datapath context of the
+/// tile-parallel GeMM walk: output tiles are independent (output-
+/// stationary dataflow), so [`PeArray::gemm_quantized`] hands each
+/// worker its own `PeArray` and reduces the per-worker [`Events`] and
+/// cycle counts back into `self` — bit-identical to the serial walk.
 #[derive(Debug, Clone)]
 pub struct PeArray {
     macs: Vec<MacUnit>,
     pub format: ElementFormat,
     pub mode: Mode,
+    pub variant: MacVariant,
     /// Total clock cycles consumed so far.
     pub cycles: u64,
+    /// Events reduced from parallel worker contexts (serial `mul_block`
+    /// activity lives inside the MACs; totals combine in `events()`).
+    merged_events: Events,
 }
 
 impl PeArray {
     pub fn new(format: ElementFormat, variant: MacVariant) -> Self {
         let mode = format.mac_mode();
-        Self { macs: (0..SQ * SQ).map(|_| MacUnit::new(mode, variant)).collect(), format, mode, cycles: 0 }
+        Self {
+            macs: (0..SQ * SQ).map(|_| MacUnit::new(mode, variant)).collect(),
+            format,
+            mode,
+            variant,
+            cycles: 0,
+            merged_events: Events::default(),
+        }
     }
 
-    /// Clear the 64 output accumulators (start of a new output tile).
+    /// Clear the 64 output accumulators and operand registers (start of
+    /// a new output tile). Resetting the operand registers makes each
+    /// tile's event counts traversal-order independent, so the serial
+    /// and tile-parallel walks produce identical `Events`.
     pub fn reset_outputs(&mut self) {
         for m in &mut self.macs {
             m.reset_acc();
+            m.reset_operand_reg();
         }
     }
 
@@ -101,9 +128,10 @@ impl PeArray {
         Mat::from_fn(SQ, SQ, |i, j| self.macs[i * SQ + j].acc())
     }
 
-    /// Aggregate event counters across the 64 MACs.
-    pub fn events(&self) -> crate::arith::Events {
-        let mut total = crate::arith::Events::default();
+    /// Aggregate event counters: the 64 MACs plus events reduced from
+    /// parallel worker contexts.
+    pub fn events(&self) -> Events {
+        let mut total = self.merged_events;
         for m in &self.macs {
             total.add(&m.events);
         }
@@ -111,8 +139,8 @@ impl PeArray {
     }
 
     /// Drain event counters.
-    pub fn take_events(&mut self) -> crate::arith::Events {
-        let mut total = crate::arith::Events::default();
+    pub fn take_events(&mut self) -> Events {
+        let mut total = std::mem::take(&mut self.merged_events);
         for m in &mut self.macs {
             total.add(&m.take_events());
         }
@@ -130,7 +158,47 @@ impl PeArray {
     }
 
     /// GeMM over already-quantized square tensors.
+    ///
+    /// Output tiles are mutually independent (output-stationary), so
+    /// large GeMMs fan the tiles out over per-worker `PeArray` contexts
+    /// and reduce their `Events`/cycles back into `self`. Results,
+    /// events, and cycle counts are bit-identical to
+    /// [`PeArray::gemm_quantized_serial`] (asserted by
+    /// `tests/parallel.rs`): each tile's FP32 accumulation runs the same
+    /// K-order from a cleared context either way, and event totals are
+    /// sums of order-independent per-tile counts.
     pub fn gemm_quantized(&mut self, qa: &MxTensor, qb: &MxTensor) -> Mat {
+        assert_eq!(qa.layout, Layout::Square8x8);
+        assert_eq!(qb.layout, Layout::Square8x8);
+        assert_eq!(qa.cols, qb.rows, "inner dims");
+        let (brows, bcols, kb) = (qa.brows, qb.bcols, qa.bcols);
+        if brows * bcols * kb < PAR_MIN_BLOCK_PRODUCTS {
+            return self.gemm_quantized_serial(qa, qb);
+        }
+        let (format, variant) = (self.format, self.variant);
+        let tiles = par::par_map(brows * bcols, 2, |t| {
+            let (br, bc) = (t / bcols, t % bcols);
+            let mut ctx = PeArray::new(format, variant);
+            ctx.reset_outputs();
+            for bk in 0..kb {
+                ctx.mul_block(qa.square_block(br, bk), qb.square_block(bk, bc));
+            }
+            (ctx.outputs(), ctx.take_events(), ctx.cycles)
+        });
+        let mut out = Mat::zeros(qa.rows, qb.cols);
+        for (t, (tile, ev, cycles)) in tiles.into_iter().enumerate() {
+            let (br, bc) = (t / bcols, t % bcols);
+            out.set_block(br * SQ, bc * SQ, &tile);
+            self.merged_events.add(&ev);
+            self.cycles += cycles;
+        }
+        out
+    }
+
+    /// Serial reference GeMM: one context walks every output tile in
+    /// row-major order — the path the parallel walk must reproduce
+    /// bit-for-bit.
+    pub fn gemm_quantized_serial(&mut self, qa: &MxTensor, qb: &MxTensor) -> Mat {
         assert_eq!(qa.layout, Layout::Square8x8);
         assert_eq!(qb.layout, Layout::Square8x8);
         assert_eq!(qa.cols, qb.rows, "inner dims");

@@ -25,12 +25,12 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+    pub fn load(dir: &Path) -> crate::runtime::Result<Manifest> {
         let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
         Self::parse(&text)
     }
 
-    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+    pub fn parse(text: &str) -> crate::runtime::Result<Manifest> {
         let mut m = Manifest {
             dims: Vec::new(),
             batch: 0,
@@ -61,8 +61,12 @@ impl Manifest {
                 _ => {}
             }
         }
-        anyhow::ensure!(!m.dims.is_empty(), "manifest missing dims");
-        anyhow::ensure!(m.state_len > 0, "manifest missing state_len");
+        if m.dims.is_empty() {
+            return Err(crate::runtime::err("manifest missing dims"));
+        }
+        if m.state_len == 0 {
+            return Err(crate::runtime::err("manifest missing state_len"));
+        }
         Ok(m)
     }
 

@@ -5,128 +5,214 @@
 //! computes the validation loss. State initialization happens on the
 //! Rust side (He init with the deterministic PCG64), so the whole
 //! training loop is Python-free.
+//!
+//! The real implementation needs the git-only `xla` crate and compiles
+//! only with the `xla` cargo feature (plus the dependency added to
+//! Cargo.toml — see README.md). The default build gets API-compatible
+//! stubs whose constructors return errors, so every caller can compile
+//! and skip gracefully when the runtime is unavailable.
 
-use std::path::Path;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::path::Path;
 
-use crate::trainer::mlp::MLP_DIMS;
-use crate::util::mat::Mat;
-use crate::util::rng::Pcg64;
-use anyhow::{Context, Result};
+    use crate::runtime::{err, Result};
+    use crate::trainer::mlp::MLP_DIMS;
+    use crate::util::mat::Mat;
+    use crate::util::rng::Pcg64;
 
-/// Shared PJRT client (compile once, reuse across executables).
-pub fn cpu_client() -> Result<xla::PjRtClient> {
-    Ok(xla::PjRtClient::cpu()?)
-}
-
-fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
-    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("utf8 path")?)?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    Ok(client.compile(&comp)?)
-}
-
-fn literal_2d(m: &Mat) -> Result<xla::Literal> {
-    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
-}
-
-/// Build the flat initial training state (mirrors model.init_state):
-/// `[step, (w, b, mw, vw, mb, vb) x layers]`, He-initialized weights.
-pub fn init_state(seed: u64) -> Result<Vec<xla::Literal>> {
-    let mut rng = Pcg64::with_stream(seed, 0x57A7E);
-    let mut state = vec![xla::Literal::vec1(&[0.0f32]).reshape(&[1])?];
-    for w in MLP_DIMS.windows(2) {
-        let (din, dout) = (w[0], w[1]);
-        let sigma = (2.0 / din as f32).sqrt();
-        let wm = Mat::randn(din, dout, sigma, &mut rng);
-        let zeros_w = Mat::zeros(din, dout);
-        let zeros_b = vec![0.0f32; dout];
-        state.push(literal_2d(&wm)?);
-        state.push(xla::Literal::vec1(&zeros_b).reshape(&[dout as i64])?);
-        state.push(literal_2d(&zeros_w)?);
-        state.push(literal_2d(&zeros_w)?);
-        state.push(xla::Literal::vec1(&zeros_b).reshape(&[dout as i64])?);
-        state.push(xla::Literal::vec1(&zeros_b).reshape(&[dout as i64])?);
-    }
-    Ok(state)
-}
-
-/// A compiled train-step graph plus its threaded state.
-pub struct TrainExecutable {
-    exe: xla::PjRtLoadedExecutable,
-    pub state: Vec<xla::Literal>,
-    pub steps_run: u64,
-}
-
-impl TrainExecutable {
-    /// Load + compile the artifact and initialize fresh state.
-    pub fn load(client: &xla::PjRtClient, path: &Path, seed: u64) -> Result<Self> {
-        Ok(Self { exe: compile(client, path)?, state: init_state(seed)?, steps_run: 0 })
+    /// Shared PJRT client (compile once, reuse across executables).
+    pub fn cpu_client() -> Result<xla::PjRtClient> {
+        Ok(xla::PjRtClient::cpu()?)
     }
 
-    /// Run one training step on a `[B,32]` batch; returns the loss.
-    pub fn step(&mut self, x: &Mat, y: &Mat) -> Result<f32> {
-        let mut args: Vec<&xla::Literal> = self.state.iter().collect();
-        let (xl, yl) = (literal_2d(x)?, literal_2d(y)?);
-        args.push(&xl);
-        args.push(&yl);
-        let result = self.exe.execute(&args)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        anyhow::ensure!(parts.len() == self.state.len() + 1, "unexpected output arity");
-        let mut it = parts.into_iter();
-        let loss = it.next().unwrap().to_vec::<f32>()?[0];
-        self.state = it.collect();
-        self.steps_run += 1;
-        Ok(loss)
+    fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| err("utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(client.compile(&comp)?)
     }
 
-    /// Copy the current parameters (w, b per layer) out of the state.
-    pub fn params(&self) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
-        let mut out = Vec::new();
-        for i in 0..MLP_DIMS.len() - 1 {
-            let w = self.state[1 + 6 * i].to_vec::<f32>()?;
-            let b = self.state[2 + 6 * i].to_vec::<f32>()?;
-            out.push((w, b));
+    fn literal_2d(m: &Mat) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+    }
+
+    /// Build the flat initial training state (mirrors model.init_state):
+    /// `[step, (w, b, mw, vw, mb, vb) x layers]`, He-initialized weights.
+    pub fn init_state(seed: u64) -> Result<Vec<xla::Literal>> {
+        let mut rng = Pcg64::with_stream(seed, 0x57A7E);
+        let mut state = vec![xla::Literal::vec1(&[0.0f32]).reshape(&[1])?];
+        for w in MLP_DIMS.windows(2) {
+            let (din, dout) = (w[0], w[1]);
+            let sigma = (2.0 / din as f32).sqrt();
+            let wm = Mat::randn(din, dout, sigma, &mut rng);
+            let zeros_w = Mat::zeros(din, dout);
+            let zeros_b = vec![0.0f32; dout];
+            state.push(literal_2d(&wm)?);
+            state.push(xla::Literal::vec1(&zeros_b).reshape(&[dout as i64])?);
+            state.push(literal_2d(&zeros_w)?);
+            state.push(literal_2d(&zeros_w)?);
+            state.push(xla::Literal::vec1(&zeros_b).reshape(&[dout as i64])?);
+            state.push(xla::Literal::vec1(&zeros_b).reshape(&[dout as i64])?);
         }
-        Ok(out)
+        Ok(state)
+    }
+
+    /// A compiled train-step graph plus its threaded state.
+    pub struct TrainExecutable {
+        exe: xla::PjRtLoadedExecutable,
+        pub state: Vec<xla::Literal>,
+        pub steps_run: u64,
+    }
+
+    impl TrainExecutable {
+        /// Load + compile the artifact and initialize fresh state.
+        pub fn load(client: &xla::PjRtClient, path: &Path, seed: u64) -> Result<Self> {
+            Ok(Self { exe: compile(client, path)?, state: init_state(seed)?, steps_run: 0 })
+        }
+
+        /// Run one training step on a `[B,32]` batch; returns the loss.
+        pub fn step(&mut self, x: &Mat, y: &Mat) -> Result<f32> {
+            let mut args: Vec<&xla::Literal> = self.state.iter().collect();
+            let (xl, yl) = (literal_2d(x)?, literal_2d(y)?);
+            args.push(&xl);
+            args.push(&yl);
+            let result = self.exe.execute(&args)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            if parts.len() != self.state.len() + 1 {
+                return Err(err("unexpected output arity"));
+            }
+            let mut it = parts.into_iter();
+            let loss = it.next().unwrap().to_vec::<f32>()?[0];
+            self.state = it.collect();
+            self.steps_run += 1;
+            Ok(loss)
+        }
+
+        /// Copy the current parameters (w, b per layer) out of the state.
+        pub fn params(&self) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+            let mut out = Vec::new();
+            for i in 0..MLP_DIMS.len() - 1 {
+                let w = self.state[1 + 6 * i].to_vec::<f32>()?;
+                let b = self.state[2 + 6 * i].to_vec::<f32>()?;
+                out.push((w, b));
+            }
+            Ok(out)
+        }
+    }
+
+    /// A compiled eval graph (quantized validation loss).
+    pub struct EvalExecutable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl EvalExecutable {
+        pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+            Ok(Self { exe: compile(client, path)? })
+        }
+
+        /// Validation loss of `state` on a `[B,32]` eval batch.
+        pub fn loss(&self, state: &[xla::Literal], x: &Mat, y: &Mat) -> Result<f32> {
+            let mut args: Vec<&xla::Literal> = state.iter().collect();
+            let (xl, yl) = (literal_2d(x)?, literal_2d(y)?);
+            args.push(&xl);
+            args.push(&yl);
+            let result = self.exe.execute(&args)?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?[0])
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn init_state_layout() {
+            let s = init_state(1).unwrap();
+            // 1 step scalar + 6 per layer x 4 layers
+            assert_eq!(s.len(), 25);
+            assert_eq!(s[0].to_vec::<f32>().unwrap(), vec![0.0]);
+            // weights are randomized, moments zero
+            let w0 = s[1].to_vec::<f32>().unwrap();
+            assert_eq!(w0.len(), 32 * 256);
+            assert!(w0.iter().any(|&v| v != 0.0));
+            let mw0 = s[3].to_vec::<f32>().unwrap();
+            assert!(mw0.iter().all(|&v| v == 0.0));
+        }
     }
 }
 
-/// A compiled eval graph (quantized validation loss).
-pub struct EvalExecutable {
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(feature = "xla")]
+pub use pjrt::*;
 
-impl EvalExecutable {
-    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
-        Ok(Self { exe: compile(client, path)? })
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::path::Path;
+
+    use crate::runtime::{err, Result};
+    use crate::util::mat::Mat;
+
+    const UNAVAILABLE: &str = "mxscale was built without the `xla` feature; \
+         the PJRT runtime path is unavailable (see README.md, section \
+         'The PJRT runtime path')";
+
+    /// Placeholder for `xla::PjRtClient` in `xla`-less builds.
+    #[derive(Debug, Clone, Copy)]
+    pub struct PjRtClient;
+
+    /// Always errors in `xla`-less builds; callers skip gracefully.
+    pub fn cpu_client() -> Result<PjRtClient> {
+        Err(err(UNAVAILABLE))
     }
 
-    /// Validation loss of `state` on a `[B,32]` eval batch.
-    pub fn loss(&self, state: &[xla::Literal], x: &Mat, y: &Mat) -> Result<f32> {
-        let mut args: Vec<&xla::Literal> = state.iter().collect();
-        let (xl, yl) = (literal_2d(x)?, literal_2d(y)?);
-        args.push(&xl);
-        args.push(&yl);
-        let result = self.exe.execute(&args)?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?[0])
+    /// Stub train executable: same surface as the PJRT-backed one, but
+    /// unconstructible (load errors), so downstream code typechecks.
+    pub struct TrainExecutable {
+        /// Flat state tensors (mirrors the literal layout; always empty).
+        pub state: Vec<Vec<f32>>,
+        pub steps_run: u64,
+    }
+
+    impl TrainExecutable {
+        pub fn load(_client: &PjRtClient, _path: &Path, _seed: u64) -> Result<Self> {
+            Err(err(UNAVAILABLE))
+        }
+
+        pub fn step(&mut self, _x: &Mat, _y: &Mat) -> Result<f32> {
+            Err(err(UNAVAILABLE))
+        }
+
+        pub fn params(&self) -> Result<Vec<(Vec<f32>, Vec<f32>)>> {
+            Err(err(UNAVAILABLE))
+        }
+    }
+
+    /// Stub eval executable.
+    pub struct EvalExecutable;
+
+    impl EvalExecutable {
+        pub fn load(_client: &PjRtClient, _path: &Path) -> Result<Self> {
+            Err(err(UNAVAILABLE))
+        }
+
+        pub fn loss(&self, _state: &[Vec<f32>], _x: &Mat, _y: &Mat) -> Result<f32> {
+            Err(err(UNAVAILABLE))
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn stub_client_reports_missing_feature() {
+            let e = cpu_client().unwrap_err();
+            assert!(e.to_string().contains("xla"));
+        }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn init_state_layout() {
-        let s = init_state(1).unwrap();
-        // 1 step scalar + 6 per layer x 4 layers
-        assert_eq!(s.len(), 25);
-        assert_eq!(s[0].to_vec::<f32>().unwrap(), vec![0.0]);
-        // weights are randomized, moments zero
-        let w0 = s[1].to_vec::<f32>().unwrap();
-        assert_eq!(w0.len(), 32 * 256);
-        assert!(w0.iter().any(|&v| v != 0.0));
-        let mw0 = s[3].to_vec::<f32>().unwrap();
-        assert!(mw0.iter().all(|&v| v == 0.0));
-    }
-}
+#[cfg(not(feature = "xla"))]
+pub use stub::*;

@@ -5,9 +5,29 @@
 //! xla_extension 0.5.1 in the `xla` crate rejects jax>=0.5 serialized
 //! protos), compiles them on the PJRT CPU client, and threads the flat
 //! training state through repeated executions with zero Python.
+//!
+//! The `xla` crate is git-only and cannot be vendored in the offline
+//! dependency closure, so the executors are gated behind the `xla`
+//! cargo feature: with it, the real PJRT path compiles; without it
+//! (the default), API-compatible stubs return descriptive errors and
+//! every caller — `tests/integration.rs`, `benches/bench_runtime.rs`,
+//! `examples/train_pusher.rs` — skips gracefully. `anyhow` is likewise
+//! replaced by the boxed [`Error`] alias below.
 
 pub mod artifact;
 pub mod executor;
 
 pub use artifact::{artifact_dir, Manifest};
 pub use executor::{EvalExecutable, TrainExecutable};
+
+/// Boxed error shared across the runtime layer (stands in for `anyhow`,
+/// which is unavailable offline).
+pub type Error = Box<dyn std::error::Error + Send + Sync + 'static>;
+
+/// Runtime result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Build an [`Error`] from a message.
+pub(crate) fn err(msg: impl Into<String>) -> Error {
+    msg.into().into()
+}

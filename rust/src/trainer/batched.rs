@@ -1,0 +1,165 @@
+//! Batched training: run independent QAT sessions on all cores.
+//!
+//! The experiment harnesses sweep formats x schemes x workloads
+//! (`coordinator::experiments::fig2`, the precision-sweep example,
+//! Fig. 8's budget grid), and every run in such a sweep is completely
+//! independent: its own `TrainSession`, its own deterministic RNG
+//! streams, its own dataset clone. [`BatchedTrainer`] fans those runs
+//! out over the parallel engine (`util::par`) and returns them in
+//! submission order.
+//!
+//! Determinism: each session is seeded by its `TrainConfig` alone, and
+//! the block-level parallel kernels it uses internally are bit-identical
+//! to their serial forms, so a batched sweep produces exactly the same
+//! losses and curves as running the sessions one after another
+//! (asserted by the tests below and `tests/parallel.rs`). Workers never
+//! nest-fork — inside a batched run the per-matrix parallelism degrades
+//! to serial automatically, so the sweep scales by run count without
+//! oversubscription.
+
+use crate::trainer::qat::QuantScheme;
+use crate::trainer::session::{TrainConfig, TrainSession};
+use crate::util::par;
+use crate::workloads::Dataset;
+use std::sync::Mutex;
+
+/// One unit of batched work: a labelled training run.
+#[derive(Debug, Clone)]
+pub struct TrainJob {
+    pub label: String,
+    pub dataset: Dataset,
+    pub config: TrainConfig,
+}
+
+/// A finished run, label preserved.
+pub struct TrainOutcome {
+    pub label: String,
+    pub session: TrainSession,
+}
+
+/// Collects independent training runs and executes them concurrently.
+#[derive(Debug, Default)]
+pub struct BatchedTrainer {
+    jobs: Vec<TrainJob>,
+}
+
+impl BatchedTrainer {
+    pub fn new() -> Self {
+        Self { jobs: Vec::new() }
+    }
+
+    /// Queue one run.
+    pub fn push(&mut self, label: impl Into<String>, dataset: Dataset, config: TrainConfig) {
+        self.jobs.push(TrainJob { label: label.into(), dataset, config });
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Run every queued job to its configured step budget, one worker
+    /// per core, returning outcomes in submission order.
+    pub fn run(self) -> Vec<TrainOutcome> {
+        let slots: Vec<Mutex<Option<TrainJob>>> =
+            self.jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
+        par::par_map(slots.len(), 1, |i| {
+            let job = slots[i].lock().unwrap().take().expect("each job runs exactly once");
+            let mut session = TrainSession::new(job.dataset, job.config);
+            session.run();
+            TrainOutcome { label: job.label, session }
+        })
+    }
+}
+
+/// Sweep convenience: train `schemes` over one dataset concurrently
+/// (the Fig. 2 / precision-sweep shape). `base` supplies everything but
+/// the scheme; outcomes come back in `schemes` order, labelled by
+/// `QuantScheme::name`.
+pub fn sweep_schemes(
+    dataset: &Dataset,
+    schemes: &[QuantScheme],
+    base: &TrainConfig,
+) -> Vec<TrainOutcome> {
+    let mut batch = BatchedTrainer::new();
+    for scheme in schemes {
+        batch.push(
+            scheme.name(),
+            dataset.clone(),
+            TrainConfig { scheme: *scheme, ..base.clone() },
+        );
+    }
+    batch.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::element::ElementFormat;
+    use crate::workloads::by_name;
+
+    fn quick_dataset() -> Dataset {
+        let env = by_name("cartpole").unwrap();
+        Dataset::collect(env.as_ref(), 4, 40, 0xBA7C)
+    }
+
+    #[test]
+    fn batched_matches_sequential_exactly() {
+        let ds = quick_dataset();
+        let schemes = [
+            QuantScheme::Fp32,
+            QuantScheme::MxSquare(ElementFormat::Int8),
+            QuantScheme::MxSquare(ElementFormat::E4M3),
+        ];
+        let cfg = TrainConfig { steps: 40, eval_every: 10, ..Default::default() };
+        // sequential reference
+        let serial: Vec<f64> = schemes
+            .iter()
+            .map(|&scheme| {
+                let mut s =
+                    TrainSession::new(ds.clone(), TrainConfig { scheme, ..cfg.clone() });
+                s.run();
+                s.val_loss()
+            })
+            .collect();
+        // batched
+        let outcomes = sweep_schemes(&ds, &schemes, &cfg);
+        assert_eq!(outcomes.len(), schemes.len());
+        for ((scheme, want), got) in schemes.iter().zip(&serial).zip(&outcomes) {
+            assert_eq!(got.label, scheme.name());
+            assert_eq!(
+                got.session.val_loss(),
+                *want,
+                "{}: batched run must be bit-identical to sequential",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
+    fn outcomes_preserve_submission_order() {
+        let ds = quick_dataset();
+        let mut batch = BatchedTrainer::new();
+        for (i, steps) in [30usize, 5, 20, 10].into_iter().enumerate() {
+            batch.push(
+                format!("job{i}"),
+                ds.clone(),
+                TrainConfig { steps, eval_every: usize::MAX, ..Default::default() },
+            );
+        }
+        assert_eq!(batch.len(), 4);
+        let out = batch.run();
+        let labels: Vec<&str> = out.iter().map(|o| o.label.as_str()).collect();
+        assert_eq!(labels, vec!["job0", "job1", "job2", "job3"]);
+        assert_eq!(out[1].session.step_count(), 5);
+        assert_eq!(out[2].session.step_count(), 20);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        assert!(BatchedTrainer::new().run().is_empty());
+    }
+}

@@ -14,11 +14,13 @@
 //! Both backends implement the same quantization semantics; a pytest on
 //! the Python side and `session::tests` on this side pin them together.
 
+pub mod batched;
 pub mod budget;
 pub mod mlp;
 pub mod qat;
 pub mod session;
 
+pub use batched::{BatchedTrainer, TrainOutcome};
 pub use mlp::{Mlp, MlpGrads};
 pub use qat::QuantScheme;
 pub use session::{TrainConfig, TrainSession};

@@ -75,23 +75,38 @@ impl Mat {
 
     /// `self @ other` — naive triple loop with a k-blocked inner order
     /// (row-major friendly). Good enough as the golden reference; the
-    /// performance path is the simulator / XLA, not this.
+    /// cycle-accurate path is the simulator, not this.
+    ///
+    /// §Parallel: output rows are independent and each row runs the exact
+    /// serial k-loop, so large GeMMs fork over row bands bit-identically
+    /// to the serial loop (asserted by `tests/parallel.rs`). Small
+    /// products stay serial — the fork-join would dominate.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "inner dims mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
-        for r in 0..self.rows {
-            for k in 0..self.cols {
-                let a = self.data[r * self.cols + k];
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
-                let dst = &mut out.data[r * other.cols..(r + 1) * other.cols];
-                for (d, &b) in dst.iter_mut().zip(orow) {
-                    *d += a * b;
+        let (cols, ocols) = (self.cols, other.cols);
+        let nthreads = crate::util::par::threads();
+        let band = if nthreads > 1 && self.rows >= 2 && self.rows * cols * ocols >= 1 << 20 {
+            self.rows.div_ceil(nthreads * 4).max(1)
+        } else {
+            self.rows.max(1) // one chunk -> the helper runs it serially
+        };
+        crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, chunk| {
+            let r0 = ci * band;
+            for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
+                let r = r0 + dr;
+                for k in 0..cols {
+                    let a = self.data[r * cols + k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &other.data[k * ocols..(k + 1) * ocols];
+                    for (d, &b) in dst.iter_mut().zip(orow) {
+                        *d += a * b;
+                    }
                 }
             }
-        }
+        });
         out
     }
 

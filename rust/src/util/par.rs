@@ -1,0 +1,246 @@
+//! The batched parallel engine: rayon-style fork-join over OS threads.
+//!
+//! The OCP MX block structure makes every hot path in this crate
+//! embarrassingly parallel by construction — blocks share nothing but a
+//! read-only input, PE-array output tiles are independent, and QAT runs
+//! in a precision sweep never touch each other's state. `rayon` itself
+//! cannot be vendored in the offline dependency closure, so this module
+//! provides the two primitives the simulators need with identical
+//! semantics on `std::thread::scope`:
+//!
+//! * [`par_map`] — indexed map producing a `Vec` in input order, with
+//!   dynamic (atomic work-counter) load balancing;
+//! * [`par_chunks_mut`] — disjoint in-place chunk processing of a slice
+//!   (row bands of a matrix, tiles of a tensor).
+//!
+//! **Determinism contract:** callers only hand these primitives work
+//! items that are mutually independent and write disjoint outputs, so
+//! every parallel result is *bit-identical* to the serial loop it
+//! replaces (asserted by `tests/parallel.rs`). Worker count comes from
+//! `RAYON_NUM_THREADS` (rayon's knob, honored for familiarity) or
+//! `MXSCALE_THREADS`, defaulting to the machine's available parallelism;
+//! setting it to 1 recovers fully serial execution.
+//!
+//! Nested parallel regions degrade to serial automatically (a worker
+//! thread never forks again), so batch-level parallelism (e.g.
+//! [`crate::trainer::batched::BatchedTrainer`]) composes with
+//! block-level parallelism without oversubscribing the machine.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+static THREADS: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Worker-thread count used by the parallel primitives.
+///
+/// `RAYON_NUM_THREADS` (or `MXSCALE_THREADS`) if set to a positive
+/// integer, else `std::thread::available_parallelism()`. Cached for the
+/// process lifetime, mirroring rayon's global-pool semantics.
+pub fn threads() -> usize {
+    *THREADS.get_or_init(|| {
+        for var in ["RAYON_NUM_THREADS", "MXSCALE_THREADS"] {
+            if let Some(v) = std::env::var_os(var) {
+                if let Ok(n) = v.to_string_lossy().trim().parse::<usize>() {
+                    if n >= 1 {
+                        return n;
+                    }
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// True while executing inside a worker of an enclosing parallel region.
+pub fn in_parallel_region() -> bool {
+    IN_POOL.with(|c| c.get())
+}
+
+fn enter_pool() {
+    IN_POOL.with(|c| c.set(true));
+}
+
+/// Map `f` over `0..n`, returning results in index order.
+///
+/// Runs serially when `n < min_par`, when only one worker thread is
+/// configured, or when already inside a parallel region; otherwise
+/// distributes contiguous index chunks over the worker pool with an
+/// atomic grab counter (dynamic load balancing — uneven items like
+/// training sessions of different step counts still pack well).
+pub fn par_map<T, F>(n: usize, min_par: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let nt = threads();
+    if nt <= 1 || n < min_par.max(2) || in_parallel_region() {
+        return (0..n).map(f).collect();
+    }
+    let workers = nt.min(n);
+    // ~4 chunks per worker: coarse enough to amortize the grab, fine
+    // enough that a slow chunk does not serialize the tail.
+    let chunk = (n / (workers * 4)).max(1);
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<(usize, Vec<T>)> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    enter_pool();
+                    let mut out: Vec<(usize, Vec<T>)> = Vec::new();
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + chunk).min(n);
+                        out.push((start, (start..end).map(&f).collect()));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(mut p) => parts.append(&mut p),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    parts.sort_unstable_by_key(|p| p.0);
+    let mut v = Vec::with_capacity(n);
+    for (_, mut p) in parts {
+        v.append(&mut p);
+    }
+    v
+}
+
+/// Process disjoint `chunk_len`-sized chunks of `data` in parallel.
+///
+/// `f(i, chunk)` receives the chunk index (chunk `i` starts at element
+/// `i * chunk_len`) and the mutable chunk. Runs serially when fewer than
+/// `min_par_chunks` chunks exist, when one worker is configured, or when
+/// nested inside a parallel region. Chunks are handed out through a
+/// mutex-guarded iterator — contention is negligible at matrix-band
+/// granularity and the borrow checker proves disjointness.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, min_par_chunks: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let chunk_len = chunk_len.max(1);
+    let n_chunks = data.len().div_ceil(chunk_len);
+    let nt = threads();
+    if nt <= 1 || n_chunks < min_par_chunks.max(2) || in_parallel_region() {
+        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let workers = nt.min(n_chunks);
+    let work = Mutex::new(data.chunks_mut(chunk_len).enumerate());
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    enter_pool();
+                    loop {
+                        let item = work.lock().unwrap().next();
+                        match item {
+                            Some((i, c)) => f(i, c),
+                            None => break,
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Err(payload) = h.join() {
+                std::panic::resume_unwind(payload);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threads_is_positive() {
+        assert!(threads() >= 1);
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let got = par_map(1000, 1, |i| i * 2);
+        let want: Vec<usize> = (0..1000).map(|i| i * 2).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        assert_eq!(par_map(0, 1, |i| i), Vec::<usize>::new());
+        assert_eq!(par_map(1, 1, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn par_map_serial_below_threshold_matches() {
+        let a = par_map(10, 1000, |i| i * i);
+        let b = par_map(10, 1, |i| i * i);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn par_chunks_mut_covers_every_element_once() {
+        let mut data = vec![0u32; 10_007];
+        par_chunks_mut(&mut data, 97, 2, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + i as u32;
+            }
+        });
+        for (j, &v) in data.iter().enumerate() {
+            assert_eq!(v, 1 + (j / 97) as u32, "element {j}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_empty_slice() {
+        let mut data: Vec<u8> = Vec::new();
+        par_chunks_mut(&mut data, 8, 2, |_, _| panic!("no chunks expected"));
+    }
+
+    #[test]
+    fn nested_regions_degrade_to_serial() {
+        let outer = par_map(8, 2, |i| {
+            // inner call must not fork again; it still computes correctly
+            let inner = par_map(16, 2, |j| i * 100 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..8).map(|i| (0..16).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(outer, want);
+    }
+
+    #[test]
+    fn par_map_with_uneven_work_is_correct() {
+        // items of very different cost still land in order
+        let got = par_map(64, 2, |i| {
+            let mut acc = 0u64;
+            for k in 0..(i % 7) * 10_000 {
+                acc = acc.wrapping_add(k as u64);
+            }
+            (i, acc)
+        });
+        for (i, &(idx, _)) in got.iter().enumerate() {
+            assert_eq!(i, idx);
+        }
+    }
+}

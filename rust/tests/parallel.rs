@@ -1,0 +1,218 @@
+//! The parallel-engine contract: every rayon-style path must be
+//! **bit-identical** to its serial reference — same bytes out of the
+//! quantizers, same FP32 bits out of the PE array, same `Events` and
+//! `CycleCost` — plus the OCP MX v1.0 codec audit (exhaustive
+//! round-trips for all six element formats) and the square-block
+//! transpose property the paper's storage claim rests on.
+
+use mxscale::arith::MacVariant;
+use mxscale::gemmcore::GemmCore;
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::tensor::{
+    fake_quant_mat_fast, fake_quant_mat_fast_serial, Layout, MxTensor,
+};
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::pearray::PeArray;
+use mxscale::trainer::batched::sweep_schemes;
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::{TrainConfig, TrainSession};
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use mxscale::workloads::{by_name, Dataset};
+
+/// A matrix whose magnitudes span many binades — the adversarial input
+/// for shared-exponent extraction.
+fn wide_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.wide_f32().clamp(-1e20, 1e20))
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------- codecs
+
+#[test]
+fn exhaustive_roundtrip_all_six_codecs() {
+    // Satellite: every code point of every format decodes and re-encodes
+    // to itself. Exclusions are exactly the spec's: E5M2/E4M3 Inf/NaN
+    // codes (never produced by the saturating datapath) and INT8 -128
+    // (the encoder saturates symmetric at +-127 per the MX references).
+    for fmt in ALL_ELEMENT_FORMATS {
+        for code in 0..fmt.code_count() {
+            let code = code as u8;
+            if fmt.is_special(code) {
+                continue;
+            }
+            if fmt == ElementFormat::Int8 && code as i8 == -128 {
+                continue;
+            }
+            let v = fmt.decode(code);
+            let re = fmt.encode(v);
+            assert_eq!(re, code, "{fmt:?}: code {code:#04x} -> {v} -> {re:#04x}");
+            assert_eq!(
+                fmt.decode(re).to_bits(),
+                v.to_bits(),
+                "{fmt:?}: decode(encode({v})) drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn codec_constants_match_ocp_mx_v1() {
+    // Satellite audit anchors: E4M3 reclaims the top binade (emax 8,
+    // saturation 448), E5M2 without specials tops at 57344, MXINT8 is a
+    // two's-complement grid of 2^-6.
+    assert_eq!(ElementFormat::E4M3.emax(), 8);
+    assert_eq!(ElementFormat::E4M3.max_value(), 448.0);
+    assert_eq!(ElementFormat::E5M2.emax(), 15);
+    assert_eq!(ElementFormat::E5M2.max_value(), 57344.0);
+    assert_eq!(ElementFormat::Int8.decode(64), 1.0); // 64 * 2^-6
+    assert_eq!(ElementFormat::Int8.decode(1), 1.0 / 64.0);
+    assert_eq!(ElementFormat::E2M1.max_value(), 6.0);
+    assert_eq!(ElementFormat::E2M3.max_value(), 7.5);
+    assert_eq!(ElementFormat::E3M2.max_value(), 28.0);
+}
+
+// ------------------------------------------------- transpose property
+
+#[test]
+fn square_transpose_is_quantize_of_transpose_bitwise() {
+    // Satellite property test: on Square8x8, transposing the quantized
+    // tensor is *block-for-block, code-for-code* identical to quantizing
+    // the transposed matrix — the paper's single-copy storage claim.
+    for fmt in ALL_ELEMENT_FORMATS {
+        for (rows, cols, seed) in [(24, 16, 11u64), (13, 37, 12), (64, 64, 13), (8, 8, 14)] {
+            let m = wide_mat(rows, cols, seed ^ ((fmt.bits() as u64) << 8));
+            let qt = MxTensor::quantize(&m, fmt, Layout::Square8x8).transpose().unwrap();
+            let direct = MxTensor::quantize(&m.transpose(), fmt, Layout::Square8x8);
+            assert_eq!(qt.rows, direct.rows);
+            assert_eq!(qt.cols, direct.cols);
+            assert_eq!(
+                qt.blocks, direct.blocks,
+                "{fmt:?} {rows}x{cols}: transpose must be a pure permutation"
+            );
+        }
+    }
+}
+
+// ------------------------------------------------- quantizer identity
+
+#[test]
+fn parallel_quantize_is_byte_identical_to_serial() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        for layout in [Layout::Square8x8, Layout::Vector32] {
+            let m = wide_mat(200, 168, 21 ^ fmt.bits() as u64);
+            let par = MxTensor::quantize(&m, fmt, layout);
+            let ser = MxTensor::quantize_serial(&m, fmt, layout);
+            assert_eq!(par.blocks, ser.blocks, "{fmt:?} {layout:?} quantize");
+            assert_eq!(
+                bits(&par.dequantize()),
+                bits(&ser.dequantize_serial()),
+                "{fmt:?} {layout:?} dequantize"
+            );
+            assert_eq!(
+                bits(&fake_quant_mat_fast(&m, fmt, layout)),
+                bits(&fake_quant_mat_fast_serial(&m, fmt, layout)),
+                "{fmt:?} {layout:?} fake-quant fast path"
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_quantize_identity_on_awkward_shapes() {
+    // non-multiples of the block edge, single-band, and tall-skinny
+    for (rows, cols) in [(7, 300), (300, 7), (65, 129), (1, 1024), (1024, 1)] {
+        let m = wide_mat(rows, cols, 0x5e3d + rows as u64);
+        for layout in [Layout::Square8x8, Layout::Vector32] {
+            let par = MxTensor::quantize(&m, ElementFormat::E4M3, layout);
+            let ser = MxTensor::quantize_serial(&m, ElementFormat::E4M3, layout);
+            assert_eq!(par.blocks, ser.blocks, "{rows}x{cols} {layout:?}");
+            assert_eq!(bits(&par.dequantize()), bits(&ser.dequantize_serial()));
+        }
+    }
+}
+
+// ------------------------------------------------- PE array identity
+
+#[test]
+fn parallel_gemm_matches_serial_outputs_events_cycles() {
+    let a = wide_mat(64, 96, 31);
+    let b = wide_mat(96, 64, 32);
+    for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
+        let qa = MxTensor::quantize(&a, fmt, Layout::Square8x8);
+        let qb = MxTensor::quantize(&b, fmt, Layout::Square8x8);
+        // 8x8 output tiles x 12 K-blocks: well above the parallel cutover
+        let mut pe_s = PeArray::new(fmt, MacVariant::ExtMantissaBypass);
+        let out_s = pe_s.gemm_quantized_serial(&qa, &qb);
+        let mut pe_p = PeArray::new(fmt, MacVariant::ExtMantissaBypass);
+        let out_p = pe_p.gemm_quantized(&qa, &qb);
+        assert_eq!(bits(&out_p), bits(&out_s), "{fmt:?}: FP32 output bits");
+        assert_eq!(pe_p.cycles, pe_s.cycles, "{fmt:?}: cycle count");
+        assert_eq!(pe_p.events(), pe_s.events(), "{fmt:?}: event counters");
+    }
+}
+
+#[test]
+fn gemmcore_parallel_matches_serial_cost() {
+    let a = wide_mat(64, 64, 41);
+    let b = wide_mat(64, 64, 42);
+    let fmt = ElementFormat::E4M3;
+    let qa = MxTensor::quantize(&a, fmt, Layout::Square8x8);
+    let qb = MxTensor::quantize(&b, fmt, Layout::Square8x8);
+    let mut core_s = GemmCore::new(fmt);
+    let out_s = core_s.gemm_serial(&qa, &qb);
+    let mut core_p = GemmCore::new(fmt);
+    let out_p = core_p.gemm(&qa, &qb);
+    assert_eq!(bits(&out_p), bits(&out_s));
+    assert_eq!(core_p.cost, core_s.cost, "CycleCost must not depend on host threads");
+    assert_eq!(core_p.events(), core_s.events());
+    assert_eq!(core_p.pe_cycles(), core_s.pe_cycles());
+}
+
+// ------------------------------------------------- golden-path identity
+
+#[test]
+fn parallel_matmul_is_bit_identical_to_serial_reference() {
+    // replicate the serial triple loop verbatim and compare against the
+    // (internally banded) Mat::matmul on a size above its fork threshold
+    let a = wide_mat(128, 96, 51);
+    let b = wide_mat(96, 160, 52);
+    let got = a.matmul(&b);
+    let mut want = Mat::zeros(a.rows, b.cols);
+    for r in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.at(r, k);
+            if av == 0.0 {
+                continue;
+            }
+            for c in 0..b.cols {
+                *want.at_mut(r, c) += av * b.at(k, c);
+            }
+        }
+    }
+    assert_eq!(bits(&got), bits(&want));
+}
+
+#[test]
+fn batched_sweep_reproduces_sequential_losses() {
+    // the end-to-end claim: a concurrent format sweep returns exactly
+    // the numbers the one-at-a-time loop produces
+    let env = by_name("pusher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 4, 40, 0x99);
+    let schemes = [
+        QuantScheme::MxSquare(ElementFormat::Int8),
+        QuantScheme::MxSquare(ElementFormat::E2M1),
+    ];
+    let base = TrainConfig { steps: 30, eval_every: 10, ..Default::default() };
+    let batched = sweep_schemes(&ds, &schemes, &base);
+    for (scheme, outcome) in schemes.iter().zip(&batched) {
+        let mut s = TrainSession::new(ds.clone(), TrainConfig { scheme: *scheme, ..base.clone() });
+        s.run();
+        assert_eq!(outcome.session.val_loss(), s.val_loss(), "{}", scheme.name());
+        assert_eq!(outcome.session.val_curve, s.val_curve, "{}", scheme.name());
+    }
+}
