@@ -4,8 +4,17 @@
 //!
 //! ```bash
 //! cargo run --release --example dacapo_compare
+//! # pick the contender scheme and run it on the bit-exact hardware model:
+//! cargo run --release --example dacapo_compare -- --scheme int8 --backend hw
 //! ```
+//!
+//! `--scheme` takes any square MX format (`int8` ... `e2m1`; vector
+//! schemes like `mxvec-int8` work on the fast backend); `--backend hw`
+//! additionally runs a short measured session through the GemmCore
+//! simulation and prints its cost report next to the analytic numbers.
 
+use mxscale::backend::BackendKind;
+use mxscale::coordinator::cli::Args;
 use mxscale::energy::{calib, EnergyModel};
 use mxscale::gemmcore::memory::{footprint_dacapo, footprint_ours, MlpShape};
 use mxscale::gemmcore::schedule::{train_step_cycles, PUSHER_DIMS};
@@ -18,6 +27,33 @@ use mxscale::trainer::session::TrainConfig;
 use mxscale::workloads::{by_name, Dataset};
 
 fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let scheme = match args.get("scheme") {
+        Some(s) => QuantScheme::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown scheme: {s}");
+            std::process::exit(1);
+        }),
+        None => QuantScheme::MxSquare(ElementFormat::E4M3),
+    };
+    // the contender must be an MX element scheme — fp32 and the Dacapo
+    // formats are the fixed baselines of this comparison
+    if scheme.element().is_none() {
+        eprintln!(
+            "--scheme must be an MX element scheme (int8 ... e2m1, mx-<fmt>, mxvec-<fmt>); \
+             got `{}`, which is one of the comparison baselines",
+            scheme.name()
+        );
+        std::process::exit(1);
+    }
+    let backend = match args.get("backend") {
+        Some(b) => BackendKind::parse(b).unwrap_or_else(|| {
+            eprintln!("unknown backend: {b} (use fast|hw)");
+            std::process::exit(1);
+        }),
+        None => BackendKind::Fast,
+    };
+
     let shape = MlpShape::pusher();
     let model = EnergyModel::proposed();
     let arr = SystolicArray::dacapo();
@@ -58,13 +94,10 @@ fn main() {
     println!("\n  1000 us budget on pusher (who learns more?):");
     let env = by_name("pusher").unwrap();
     let ds = Dataset::collect(env.as_ref(), 20, 80, 0xC0);
-    for scheme in [
-        QuantScheme::MxSquare(ElementFormat::E4M3),
-        QuantScheme::Dacapo(DacapoFormat::Mx6),
-    ] {
+    for contender in [scheme, QuantScheme::Dacapo(DacapoFormat::Mx6)] {
         let curve = train_with_budget(
             ds.clone(),
-            scheme,
+            contender,
             Budget::TimeMicros(1000.0),
             4,
             TrainConfig { eval_every: usize::MAX, ..Default::default() },
@@ -72,9 +105,40 @@ fn main() {
         let last = curve.last().unwrap();
         println!(
             "    {:<12} {:>4} steps -> val loss {:.5}",
-            scheme.name(),
+            contender.name(),
             last.steps,
             last.val_loss
         );
+    }
+
+    if backend == BackendKind::Hardware {
+        println!("\n  measured on the bit-exact GemmCore ({} @ 2 training steps):", scheme.name());
+        let session = mxscale::trainer::session::TrainSession::try_new(
+            ds,
+            TrainConfig {
+                scheme,
+                backend,
+                steps: 2,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        match session {
+            Ok(mut s) => {
+                s.run();
+                let r = s.hw_report().expect("hw backend reports cost");
+                println!(
+                    "    {:.2} us/step ({:.0} steps/s) | {:.2} uJ/step | {:.1} KiB/step traffic | \
+                     {:.1} KB resident | datapath dev {:.2e}",
+                    r.us_per_step(),
+                    r.steps_per_sec(),
+                    r.uj_per_step(),
+                    r.traffic_kib_per_step(),
+                    r.resident_kb,
+                    r.datapath_max_rel_err,
+                );
+            }
+            Err(e) => println!("    (skipped: {e})"),
+        }
     }
 }

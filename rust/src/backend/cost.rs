@@ -1,0 +1,146 @@
+//! Per-session hardware cost ledger of the [`super::HardwareBackend`].
+
+use crate::arith::Events;
+use crate::gemmcore::quantizer::QuantEvents;
+use crate::gemmcore::schedule::CycleCost;
+use crate::mx::element::ElementFormat;
+use crate::util::json::Json;
+
+/// What one training session cost on the simulated accelerator.
+///
+/// Cycles come from the grid-pass schedule (per-stage, so weight-
+/// gradient FP32 writeback stalls are charged), events from the bit-
+/// exact MAC/quantizer walk, energy from pricing those events with the
+/// calibrated model (data-dependent register switching included), and
+/// memory traffic from the interface model in `gemmcore::memory`. The
+/// resident footprint is filled in by the session, which knows the MLP
+/// shape and batch size.
+#[derive(Debug, Clone)]
+pub struct HwCostReport {
+    /// Backend identifier ("hw").
+    pub backend: &'static str,
+    /// Scheme name (e.g. "mx-int8").
+    pub scheme: String,
+    /// Element format of the datapath mode.
+    pub element: ElementFormat,
+    /// Core clock in MHz (wall-clock conversions).
+    pub freq_mhz: f64,
+    /// Training steps accounted.
+    pub steps: u64,
+    /// GeMMs executed across those steps.
+    pub gemms: u64,
+    /// Aggregated grid-pass schedule cost.
+    pub cost: CycleCost,
+    /// Aggregated PE-array datapath events.
+    pub events: Events,
+    /// Aggregated output-quantizer events.
+    pub quant: QuantEvents,
+    /// MAC-array energy: events priced by the calibrated model [pJ].
+    pub mac_energy_pj: f64,
+    /// SRAM access energy over executed OPs [pJ].
+    pub sram_energy_pj: f64,
+    /// Bits moved through the memory interface (operands + writebacks).
+    pub mem_traffic_bits: u64,
+    /// Resident on-chip footprint for this MLP shape + batch [KB].
+    pub resident_kb: f64,
+    /// Max per-GeMM deviation of the PE datapath output from the shared
+    /// functional kernel, relative to the output's max magnitude.
+    pub datapath_max_rel_err: f64,
+}
+
+impl HwCostReport {
+    /// Total core energy [pJ].
+    pub fn energy_pj(&self) -> f64 {
+        self.mac_energy_pj + self.sram_energy_pj
+    }
+
+    /// Accumulated accelerator wall-clock [us].
+    pub fn micros(&self) -> f64 {
+        self.cost.micros(self.freq_mhz)
+    }
+
+    /// Mean per-step latency [us] (0 before any step completes).
+    pub fn us_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.micros() / self.steps as f64
+        }
+    }
+
+    /// Mean per-step energy [uJ].
+    pub fn uj_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.energy_pj() * 1e-6 / self.steps as f64
+        }
+    }
+
+    /// Measured-on-model training throughput [steps/s].
+    pub fn steps_per_sec(&self) -> f64 {
+        let us = self.us_per_step();
+        if us > 0.0 {
+            1e6 / us
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean per-step interface traffic [KiB].
+    pub fn traffic_kib_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.mem_traffic_bits as f64 / 8.0 / 1024.0 / self.steps as f64
+        }
+    }
+
+    /// JSON rendering for `results/` reports.
+    pub fn to_json(&self) -> Json {
+        let cycles = Json::obj()
+            .set("compute", self.cost.compute)
+            .set("input_stall", self.cost.input_stall)
+            .set("writeback_stall", self.cost.writeback_stall)
+            .set("overhead", self.cost.overhead)
+            .set("total", self.cost.total())
+            .set("mul_ops", self.cost.mul_ops);
+        let energy = Json::obj()
+            .set("mac_pj", self.mac_energy_pj)
+            .set("sram_pj", self.sram_energy_pj)
+            .set("total_uj", self.energy_pj() * 1e-6)
+            .set("uj_per_step", self.uj_per_step());
+        let mem = Json::obj()
+            .set("traffic_bits", self.mem_traffic_bits)
+            .set("traffic_kib_per_step", self.traffic_kib_per_step())
+            .set("resident_kb", self.resident_kb);
+        let events = Json::obj()
+            .set("mul_ops", self.events.mul_ops)
+            .set("mac_cycles", self.events.cycles)
+            .set("mult2", self.events.mult2)
+            .set("acc_add", self.events.acc_add)
+            .set("acc_reg_toggles", self.events.acc_reg_toggles)
+            .set("input_toggles", self.events.input_toggles);
+        let quant = Json::obj()
+            .set("blocks", self.quant.blocks)
+            .set("encodes", self.quant.encodes)
+            .set("max_scans", self.quant.max_scans);
+        Json::obj()
+            .set("backend", self.backend)
+            .set("scheme", self.scheme.clone())
+            .set("element", self.element.name())
+            .set("freq_mhz", self.freq_mhz)
+            .set("steps", self.steps)
+            .set("gemms", self.gemms)
+            .set("cycles", cycles)
+            .set("utilization", self.cost.utilization(self.element.mac_mode()))
+            .set("us_total", self.micros())
+            .set("us_per_step", self.us_per_step())
+            .set("steps_per_sec", self.steps_per_sec())
+            .set("energy", energy)
+            .set("mem", mem)
+            .set("events", events)
+            .set("quantizer", quant)
+            .set("datapath_max_rel_err", self.datapath_max_rel_err)
+    }
+}

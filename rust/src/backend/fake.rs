@@ -1,0 +1,191 @@
+//! The fast software backend: buffer-reusing MX fake-quantization.
+
+use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, LayerGrads};
+use crate::mx::dacapo::DacapoTensor;
+use crate::mx::tensor::{fake_quant_mat_fast_into, Layout};
+use crate::trainer::qat::QuantScheme;
+use crate::util::mat::Mat;
+
+/// Epoch tag for "not quantized yet".
+const NEVER: u64 = u64::MAX;
+
+/// Software fake-quantization backend (every [`QuantScheme`]).
+///
+/// Per-layer scratch buffers hold the quantized weights and errors: for
+/// FP32 and square MX schemes, after the first step the only per-quant
+/// allocation left is the quantized activation that the tape must own.
+/// Square-block schemes additionally reuse the *forward* quantized
+/// weight for the backward error GeMM (the transpose is value-free —
+/// the paper's single-copy storage property). Vector and Dacapo schemes
+/// requantize along the other grouping, materializing transposed
+/// intermediates on the way — exactly the Fig. 5 cost the paper
+/// attributes to them, so their quant calls still allocate.
+pub struct FakeQuantBackend {
+    scheme: QuantScheme,
+    /// Forward-grouping quantized weights, refreshed once per step.
+    wq: Vec<Mat>,
+    /// Step at which `wq[i]` was refreshed (NEVER = stale).
+    wq_step: Vec<u64>,
+    /// Transpose-grouping quantized weights (vector/Dacapo schemes).
+    wq_t: Vec<Mat>,
+    /// Quantized-error scratch, one per layer.
+    eq: Vec<Mat>,
+    step: u64,
+}
+
+impl FakeQuantBackend {
+    pub fn new(scheme: QuantScheme) -> Self {
+        Self {
+            scheme,
+            wq: Vec::new(),
+            wq_step: Vec::new(),
+            wq_t: Vec::new(),
+            eq: Vec::new(),
+            step: 0,
+        }
+    }
+
+    pub fn scheme(&self) -> QuantScheme {
+        self.scheme
+    }
+
+    fn ensure(&mut self, layer: usize) {
+        while self.wq.len() <= layer {
+            self.wq.push(Mat::zeros(0, 0));
+            self.wq_t.push(Mat::zeros(0, 0));
+            self.eq.push(Mat::zeros(0, 0));
+            self.wq_step.push(NEVER);
+        }
+    }
+
+    /// Quantize `m` under the scheme into a reusable buffer.
+    fn quant_into(scheme: QuantScheme, m: &Mat, out: &mut Mat) {
+        match scheme {
+            QuantScheme::Fp32 => out.copy_from(m),
+            QuantScheme::MxSquare(f) => fake_quant_mat_fast_into(m, f, Layout::Square8x8, out),
+            QuantScheme::MxVector(f) => fake_quant_mat_fast_into(m, f, Layout::Vector32, out),
+            QuantScheme::Dacapo(f) => *out = DacapoTensor::fake_quant(m, f),
+        }
+    }
+
+    /// Quantize a tensor consumed transposed (the backward weight cut)
+    /// into the buffer — delegates to [`QuantScheme::quant_for_transpose`]
+    /// (the single source of truth for the second-grouping semantics);
+    /// only called for schemes whose transposed grouping differs from
+    /// the forward one, which all materialize intermediates anyway.
+    fn quant_transposed_into(scheme: QuantScheme, m: &Mat, out: &mut Mat) {
+        *out = scheme.quant_for_transpose(m);
+    }
+
+    /// Whether the forward-grouping weight serves the backward GeMM too.
+    fn transpose_is_free(scheme: QuantScheme) -> bool {
+        matches!(scheme, QuantScheme::Fp32 | QuantScheme::MxSquare(_))
+    }
+}
+
+impl ExecBackend for FakeQuantBackend {
+    fn name(&self) -> &'static str {
+        "fake-quant"
+    }
+
+    fn begin_step(&mut self) {
+        self.step += 1;
+    }
+
+    fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat) {
+        self.ensure(layer);
+        let aq = self.scheme.quant(a);
+        Self::quant_into(self.scheme, w, &mut self.wq[layer]);
+        self.wq_step[layer] = self.step;
+        let z = gemm_fwd(&aq, &self.wq[layer]);
+        (aq, z)
+    }
+
+    fn backward_layer(&mut self, layer: usize, e: &Mat, aq: &Mat, w: Option<&Mat>) -> LayerGrads {
+        self.ensure(layer);
+        let scheme = self.scheme;
+        Self::quant_into(scheme, e, &mut self.eq[layer]);
+        let use_forward_copy = Self::transpose_is_free(scheme);
+        if let Some(w) = w {
+            if use_forward_copy {
+                if self.wq_step[layer] != self.step {
+                    Self::quant_into(scheme, w, &mut self.wq[layer]);
+                    self.wq_step[layer] = self.step;
+                }
+            } else {
+                Self::quant_transposed_into(scheme, w, &mut self.wq_t[layer]);
+            }
+        }
+        let wq = match (w, use_forward_copy) {
+            (Some(_), true) => Some(&self.wq[layer]),
+            (Some(_), false) => Some(&self.wq_t[layer]),
+            (None, _) => None,
+        };
+        backward_from_quant(&self.eq[layer], aq, wq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::element::ElementFormat;
+    use crate::trainer::mlp::Mlp;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn backend_matches_hook_path_bitwise_for_every_scheme() {
+        // the refactor's no-regression pin: the buffer-reusing backend
+        // must reproduce the hook path (scheme.quant / quant_for_transpose
+        // closures) bit-for-bit for every scheme family.
+        use crate::mx::dacapo::DacapoFormat;
+        let mut rng = Pcg64::new(0xFA4E);
+        let mlp = Mlp::new(&[16, 24, 8], &mut rng);
+        let x = Mat::randn(12, 16, 1.0, &mut rng);
+        let y = Mat::randn(12, 8, 0.5, &mut rng);
+        for scheme in [
+            QuantScheme::Fp32,
+            QuantScheme::MxSquare(ElementFormat::Int8),
+            QuantScheme::MxSquare(ElementFormat::E2M1),
+            QuantScheme::MxVector(ElementFormat::E4M3),
+            QuantScheme::Dacapo(DacapoFormat::Mx9),
+        ] {
+            let tape_h = mlp.forward_with(&x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
+            let grads_h = mlp.backward_with(
+                &tape_h,
+                &y,
+                |_, w| scheme.quant_for_transpose(w),
+                |_, e| scheme.quant(e),
+            );
+            let mut be = FakeQuantBackend::new(scheme);
+            be.begin_step();
+            let tape_b = mlp.forward_exec(&x, &mut be);
+            let grads_b = mlp.backward_exec(&tape_b, &y, &mut be);
+            assert_eq!(tape_h.output.data, tape_b.output.data, "{}", scheme.name());
+            for (a, b) in tape_h.activations.iter().zip(&tape_b.activations) {
+                assert_eq!(a.data, b.data, "{} activations", scheme.name());
+            }
+            for (a, b) in grads_h.d_weights.iter().zip(&grads_b.d_weights) {
+                assert_eq!(a.data, b.data, "{} d_w", scheme.name());
+            }
+            assert_eq!(grads_h.d_biases, grads_b.d_biases, "{} d_b", scheme.name());
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_survive_multiple_steps() {
+        let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+        let mut rng = Pcg64::new(3);
+        let mut mlp = Mlp::new(&[16, 16, 8], &mut rng);
+        let x = Mat::randn(8, 16, 1.0, &mut rng);
+        let y = Mat::randn(8, 8, 0.5, &mut rng);
+        let mut be = FakeQuantBackend::new(scheme);
+        // three steps through the persistent backend vs three fresh ones
+        let mut mlp2 = mlp.clone();
+        for _ in 0..3 {
+            let l1 = crate::trainer::qat::qat_step_with(&mut mlp, &x, &y, &mut be, 1e-3);
+            let l2 = crate::trainer::qat::qat_step(&mut mlp2, &x, &y, scheme, 1e-3);
+            assert_eq!(l1, l2);
+        }
+        assert_eq!(mlp.flat_params(), mlp2.flat_params());
+    }
+}

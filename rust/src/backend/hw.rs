@@ -1,0 +1,188 @@
+//! The hardware backend: bit-exact GemmCore execution + cost ledger.
+
+use crate::backend::cost::HwCostReport;
+use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, LayerGrads};
+use crate::energy::{calib, EnergyModel};
+use crate::gemmcore::memory::gemm_traffic_bits;
+use crate::gemmcore::schedule::Stage;
+use crate::gemmcore::GemmCore;
+use crate::mx::element::ElementFormat;
+use crate::mx::tensor::MxTensor;
+use crate::trainer::qat::QuantScheme;
+use crate::util::mat::Mat;
+
+/// Epoch tag for "not quantized yet".
+const NEVER: u64 = u64::MAX;
+
+/// Executes every training-graph GeMM on the simulated GeMM core.
+///
+/// Operands enter through the output-quantizer unit (event-counted),
+/// weights and activations are stored as square MX tensors — one copy
+/// each, with the backward passes consuming free block-permutation
+/// transposes exactly as the paper's architecture does — and every GeMM
+/// walks the bit-exact PE arrays under the stage-specific grid schedule
+/// (so weight-gradient FP32 writeback stalls are charged). The
+/// training-graph *values* come from the shared backend kernels over the
+/// same quantized codes, keeping this backend bit-identical to
+/// [`super::FakeQuantBackend`]; the PE datapath output is compared
+/// against that value per GeMM and the worst relative deviation lands in
+/// the [`HwCostReport`].
+pub struct HardwareBackend {
+    scheme: QuantScheme,
+    fmt: ElementFormat,
+    core: GemmCore,
+    /// Stored quantized weights (tensor + dequantized form, shared by
+    /// both passes of a step), one per layer, refreshed per step.
+    qw: Vec<Option<(MxTensor, Mat)>>,
+    /// Step at which `qw[i]` was refreshed (NEVER = stale).
+    qw_step: Vec<u64>,
+    /// Stored quantized activations from this step's forward pass.
+    qa: Vec<Option<MxTensor>>,
+    step: u64,
+    steps: u64,
+    gemms: u64,
+    traffic_bits: u64,
+    max_rel_err: f64,
+}
+
+impl HardwareBackend {
+    /// The hardware executes square-block MX schemes only — FP32 and the
+    /// vector-grouped baselines have no datapath on this core.
+    pub fn new(scheme: QuantScheme) -> Result<Self, String> {
+        let QuantScheme::MxSquare(fmt) = scheme else {
+            return Err(format!(
+                "hardware backend executes square-block MX schemes only (mx-int8 ... mx-e2m1); got `{}`",
+                scheme.name()
+            ));
+        };
+        Ok(Self {
+            scheme,
+            fmt,
+            core: GemmCore::new(fmt),
+            qw: Vec::new(),
+            qw_step: Vec::new(),
+            qa: Vec::new(),
+            step: 0,
+            steps: 0,
+            gemms: 0,
+            traffic_bits: 0,
+            max_rel_err: 0.0,
+        })
+    }
+
+    pub fn scheme(&self) -> QuantScheme {
+        self.scheme
+    }
+
+    fn ensure(&mut self, layer: usize) {
+        while self.qw.len() <= layer {
+            self.qw.push(None);
+            self.qw_step.push(NEVER);
+            self.qa.push(None);
+        }
+    }
+
+    /// Refresh the stored quantized weight for this step if stale.
+    /// Quantization events are counted (and the dequantized form
+    /// materialized) once per step per layer — the single-copy storage
+    /// the square layout buys serves forward and backward alike.
+    fn ensure_qw(&mut self, layer: usize, w: &Mat) {
+        if self.qw_step[layer] != self.step {
+            let q = self.core.quantizer.quantize(w, self.fmt);
+            let d = q.dequantize();
+            self.qw[layer] = Some((q, d));
+            self.qw_step[layer] = self.step;
+        }
+    }
+
+    /// Record one executed GeMM: interface traffic and the deviation of
+    /// the datapath output from the functional value.
+    fn observe(&mut self, func: &Mat, hw: &Mat, m: usize, k: usize, n: usize, stage: Stage) {
+        self.gemms += 1;
+        self.traffic_bits += gemm_traffic_bits(m, k, n, self.fmt, stage);
+        let scale = (func.max_abs() as f64).max(1e-30);
+        let mut dev = 0.0f64;
+        for (a, b) in func.data.iter().zip(&hw.data) {
+            dev = dev.max(((a - b) as f64).abs());
+        }
+        self.max_rel_err = self.max_rel_err.max(dev / scale);
+    }
+}
+
+impl ExecBackend for HardwareBackend {
+    fn name(&self) -> &'static str {
+        "hw"
+    }
+
+    fn begin_step(&mut self) {
+        self.step += 1;
+        self.steps += 1;
+    }
+
+    fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat) {
+        self.ensure(layer);
+        let qa = self.core.quantizer.quantize(a, self.fmt);
+        self.ensure_qw(layer, w);
+        let aq = qa.dequantize();
+        let (z, z_hw) = {
+            let (qw, wq_mat) = self.qw[layer].as_ref().expect("just ensured");
+            let z = gemm_fwd(&aq, wq_mat);
+            let z_hw = self.core.gemm_staged(&qa, qw, Stage::Forward);
+            (z, z_hw)
+        };
+        self.observe(&z, &z_hw, a.rows, a.cols, w.cols, Stage::Forward);
+        self.qa[layer] = Some(qa);
+        (aq, z)
+    }
+
+    fn backward_layer(&mut self, layer: usize, e: &Mat, aq: &Mat, w: Option<&Mat>) -> LayerGrads {
+        self.ensure(layer);
+        let qe = self.core.quantizer.quantize(e, self.fmt);
+        let eq = qe.dequantize();
+        // weight-gradient GeMM: the stored quantized activation tensor,
+        // transposed for free (block permutation), against Q(E)
+        let qa = self.qa[layer].take().expect("forward_layer must precede backward_layer");
+        let qat = qa.transpose().expect("square layout");
+        let dw_hw = self.core.gemm_staged(&qat, &qe, Stage::WeightGrad);
+        // error-backprop GeMM: the same stored weight, transposed free
+        let mut back_hw_opt: Option<Mat> = None;
+        if let Some(w) = w {
+            self.ensure_qw(layer, w);
+            let qwt =
+                self.qw[layer].as_ref().expect("just ensured").0.transpose().expect("square");
+            back_hw_opt = Some(self.core.gemm_staged(&qe, &qwt, Stage::Backward));
+        }
+        let wq_ref = match &back_hw_opt {
+            Some(_) => self.qw[layer].as_ref().map(|(_, d)| d),
+            None => None,
+        };
+        let grads = backward_from_quant(&eq, aq, wq_ref);
+        self.observe(&grads.d_w, &dw_hw, aq.cols, aq.rows, eq.cols, Stage::WeightGrad);
+        if let (Some(back), Some(back_hw)) = (grads.back.as_ref(), back_hw_opt.as_ref()) {
+            // back = Q(E)[batch, dout] @ Wᵀ[dout, din]
+            self.observe(back, back_hw, eq.rows, eq.cols, aq.cols, Stage::Backward);
+        }
+        grads
+    }
+
+    fn cost_report(&self) -> Option<HwCostReport> {
+        let events = self.core.events();
+        let model = EnergyModel::new(self.core.variant);
+        Some(HwCostReport {
+            backend: self.name(),
+            scheme: self.scheme.name(),
+            element: self.fmt,
+            freq_mhz: self.core.variant.freq_mhz(),
+            steps: self.steps,
+            gemms: self.gemms,
+            cost: self.core.cost,
+            events,
+            quant: self.core.quantizer.events,
+            mac_energy_pj: model.run_pj(self.fmt, &events),
+            sram_energy_pj: calib::SRAM_PJ_PER_OP * events.mul_ops as f64,
+            mem_traffic_bits: self.traffic_bits,
+            resident_kb: 0.0, // filled by the session (knows shape/batch)
+            datapath_max_rel_err: self.max_rel_err,
+        })
+    }
+}

@@ -1,0 +1,197 @@
+//! Pluggable execution backends for the QAT training graph.
+//!
+//! The Fig. 5 training step is, per layer, three quantize→GeMM cut
+//! points: `Z = Q(A) @ Q(W)` (forward), `E_prev = Q(E) @ Qt(W)ᵀ` (error
+//! backprop), and `dW = Aqᵀ @ Q(E)` (weight gradient). [`ExecBackend`]
+//! abstracts *who executes those cuts*:
+//!
+//! * [`FakeQuantBackend`] — the fast software path: in-place MX
+//!   fake-quantization into per-layer scratch buffers and dense f32
+//!   GeMMs. Handles every [`QuantScheme`]; for FP32 and square MX
+//!   schemes the weight/error quant calls stop allocating after the
+//!   first step (the vector and Dacapo baselines still allocate their
+//!   transposed intermediates — part of the very cost the paper charges
+//!   them).
+//! * [`HardwareBackend`] — drives the bit-exact [`crate::gemmcore`]
+//!   simulation: operands pass through the output-quantizer unit as
+//!   square MX tensors, every GeMM walks the 64-MAC PE arrays, and the
+//!   backend accumulates a per-session [`HwCostReport`] (schedule
+//!   cycles, datapath events, event-priced energy, memory traffic) so
+//!   training throughput is *measured on the model* rather than taken
+//!   from the analytic schedule alone.
+//!
+//! **Equivalence contract** (asserted by `tests/backend.rs` for all six
+//! element formats): both backends produce bit-identical training-graph
+//! values. They quantize through the same MX codecs (`fake_quant_mat_*`
+//! is bit-identical to `quantize`→`dequantize`, the square-block
+//! transpose is a pure permutation) and evaluate GeMMs with the shared
+//! kernels below, so switching backend never changes a loss curve — it
+//! only changes what is accounted. The PE datapath output (FP32
+//! accumulated in hardware order, with the L2 alignment window) deviates
+//! from the shared kernel by at most a few ULP per accumulation chain;
+//! the hardware backend measures that deviation per GeMM and reports the
+//! maximum, rather than silently substituting one rounding for the other
+//! mid-training.
+
+mod cost;
+mod fake;
+mod hw;
+
+pub use cost::HwCostReport;
+pub use fake::FakeQuantBackend;
+pub use hw::HardwareBackend;
+
+use crate::trainer::qat::QuantScheme;
+use crate::util::mat::Mat;
+
+/// Gradients of one layer produced by a backward cut.
+pub struct LayerGrads {
+    /// Weight gradient `Aqᵀ @ Q(E)`.
+    pub d_w: Mat,
+    /// Bias gradient: column sums of `Q(E)`.
+    pub d_b: Vec<f32>,
+    /// Un-masked backprop error `Q(E) @ Qt(W)ᵀ` (None for layer 0,
+    /// which has nothing upstream).
+    pub back: Option<Mat>,
+}
+
+/// Executes the training graph's quantize→GeMM cut points.
+///
+/// Object-safe so sessions can hold `Box<dyn ExecBackend + Send>`;
+/// layer indices let implementations keep per-layer state (scratch
+/// buffers, stored quantized tensors) across calls and steps.
+pub trait ExecBackend {
+    /// Short stable identifier ("fake-quant" / "hw") for reports.
+    fn name(&self) -> &'static str;
+
+    /// Mark a training-step boundary (cost ledgers, weight-cache epochs).
+    fn begin_step(&mut self);
+
+    /// Forward cut of `layer`: returns `(Q(A), Q(A) @ Q(W))`. The
+    /// quantized activation is returned for the tape — backprop's
+    /// weight-gradient GeMM consumes exactly this stored tensor.
+    fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat);
+
+    /// Backward cut of `layer`: quantizes the incoming error once and
+    /// runs the weight-gradient GeMM against the stored quantized
+    /// activation `aq`, plus (when `w` is given) the error-backprop GeMM
+    /// against the transposed quantized weight.
+    ///
+    /// Contract: at most one backward cut per forward cut of the same
+    /// layer — backends that store per-layer state in `forward_layer`
+    /// (the hardware backend's quantized-activation tensors) consume it
+    /// here and panic on a second backward over the same tape.
+    fn backward_layer(&mut self, layer: usize, e: &Mat, aq: &Mat, w: Option<&Mat>) -> LayerGrads;
+
+    /// Accumulated hardware cost, if this backend accounts one.
+    fn cost_report(&self) -> Option<HwCostReport> {
+        None
+    }
+}
+
+/// Which [`ExecBackend`] a session runs (CLI: `--backend fast|hw`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// Software fake-quantization (the default fast path).
+    #[default]
+    Fast,
+    /// Bit-exact GemmCore simulation with cost accounting.
+    Hardware,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "fast" | "sw" | "fake" => Some(BackendKind::Fast),
+            "hw" | "hardware" => Some(BackendKind::Hardware),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Fast => "fast",
+            BackendKind::Hardware => "hw",
+        }
+    }
+}
+
+/// Construct a backend for a scheme. The hardware backend only executes
+/// square-block MX schemes (the datapath the paper builds); other
+/// schemes return an error naming the constraint.
+pub fn make_backend(
+    kind: BackendKind,
+    scheme: QuantScheme,
+) -> Result<Box<dyn ExecBackend + Send>, String> {
+    match kind {
+        BackendKind::Fast => Ok(Box::new(FakeQuantBackend::new(scheme))),
+        BackendKind::Hardware => Ok(Box::new(HardwareBackend::new(scheme)?)),
+    }
+}
+
+/// Shared forward GeMM kernel: both backends evaluate the training-graph
+/// value with this exact call, which is what makes them bit-identical.
+pub(crate) fn gemm_fwd(aq: &Mat, wq: &Mat) -> Mat {
+    aq.matmul(wq)
+}
+
+/// Shared backward kernels over already-quantized operands: weight
+/// gradient `aqᵀ @ eq`, bias gradient, and (optionally) the error
+/// backprop `eq @ wqᵀ` — both transpose-free.
+pub(crate) fn backward_from_quant(eq: &Mat, aq: &Mat, wq: Option<&Mat>) -> LayerGrads {
+    let d_w = aq.matmul_tn(eq);
+    let d_b = eq.col_sums();
+    let back = wq.map(|w| eq.matmul_nt(w));
+    LayerGrads { d_w, d_b, back }
+}
+
+/// Adapter backend over user hooks — keeps `Mlp::forward_with` /
+/// `Mlp::backward_with` (and every test written against them) flowing
+/// through the same trait and GeMM kernels as the real backends.
+pub struct HookBackend<W, A, E>
+where
+    W: FnMut(usize, &Mat) -> Mat,
+    A: FnMut(usize, &Mat) -> Mat,
+    E: FnMut(usize, &Mat) -> Mat,
+{
+    w_hook: W,
+    a_hook: A,
+    e_hook: E,
+}
+
+impl<W, A, E> HookBackend<W, A, E>
+where
+    W: FnMut(usize, &Mat) -> Mat,
+    A: FnMut(usize, &Mat) -> Mat,
+    E: FnMut(usize, &Mat) -> Mat,
+{
+    pub fn new(w_hook: W, a_hook: A, e_hook: E) -> Self {
+        Self { w_hook, a_hook, e_hook }
+    }
+}
+
+impl<W, A, E> ExecBackend for HookBackend<W, A, E>
+where
+    W: FnMut(usize, &Mat) -> Mat,
+    A: FnMut(usize, &Mat) -> Mat,
+    E: FnMut(usize, &Mat) -> Mat,
+{
+    fn name(&self) -> &'static str {
+        "hooks"
+    }
+
+    fn begin_step(&mut self) {}
+
+    fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat) {
+        let aq = (self.a_hook)(layer, a);
+        let wq = (self.w_hook)(layer, w);
+        let z = gemm_fwd(&aq, &wq);
+        (aq, z)
+    }
+
+    fn backward_layer(&mut self, layer: usize, e: &Mat, aq: &Mat, w: Option<&Mat>) -> LayerGrads {
+        let eq = (self.e_hook)(layer, e);
+        let wq = w.map(|w| (self.w_hook)(layer, w));
+        backward_from_quant(&eq, aq, wq.as_ref())
+    }
+}

@@ -1,14 +1,15 @@
 //! Hand-rolled CLI (clap is unavailable in the offline environment).
 //!
 //! ```text
-//! mxscale repro <table2|table3|table4|fig2|fig7|fig8|ablation|all> [--steps N]
-//! mxscale train --workload pusher --scheme e4m3 [--steps N] [--runtime]
+//! mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all> [--steps N]
+//! mxscale train --workload pusher --scheme e4m3 --backend hw [--steps N] [--hidden N]
 //! mxscale quantize --format e4m3 [--rows N --cols N]
 //! mxscale info
 //! ```
 
+use crate::backend::BackendKind;
 use crate::coordinator::experiments;
-use crate::coordinator::report::{save_csv, Table};
+use crate::coordinator::report::{save_csv, save_hw_report, Table};
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
 use crate::trainer::qat::QuantScheme;
@@ -63,11 +64,17 @@ const USAGE: &str = "\
 mxscale - precision-scalable MX processing for robotics learning (ISLPED'25 reproduction)
 
 USAGE:
-  mxscale repro <table2|table3|table4|fig2|fig7|fig8|ablation|all> [--steps N] [--eval-every N]
-  mxscale train --workload <cartpole|reacher|pusher|halfcheetah> --scheme <fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mx9|mx6|mx4>
-                [--steps N] [--lr F] [--batch N]
+  mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all>
+                [--steps N] [--eval-every N] [--hw-steps N]
+  mxscale train --workload <cartpole|reacher|pusher|halfcheetah>
+                --scheme <fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mxvec-<fmt>|mx9|mx6|mx4>
+                [--backend fast|hw] [--steps N] [--lr F] [--batch N] [--hidden N]
   mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
   mxscale info                                            # architecture summary
+
+  --backend hw runs every training GeMM through the bit-exact GemmCore
+  simulation and saves a per-session cycle/energy/memory-traffic report
+  (results/*_hw_report.json). Square MX schemes only.
 ";
 
 /// Entry point used by `main.rs`. Returns a process exit code.
@@ -110,6 +117,10 @@ fn cmd_repro(args: &Args) -> i32 {
             emit(&a, "fig7_area");
         }
         "fig2" => emit(&experiments::fig2(steps, eval_every), "fig2_final"),
+        "throughput" => emit(
+            &experiments::throughput(args.usize_or("hw-steps", 2)),
+            "throughput_measured",
+        ),
         "ablation" => emit(&experiments::ablation(), "ablation_blocksize"),
         "fig8" => emit(
             &experiments::fig8(args.f64_or("time-budget", 1000.0), args.f64_or("energy-budget", 120.0)),
@@ -118,7 +129,7 @@ fn cmd_repro(args: &Args) -> i32 {
         other => println!("unknown experiment: {other}"),
     };
     if which == "all" {
-        for id in ["table2", "table3", "table4", "fig7", "fig2", "fig8", "ablation"] {
+        for id in ["table2", "table3", "table4", "fig7", "fig2", "fig8", "throughput", "ablation"] {
             run(id);
         }
     } else {
@@ -134,16 +145,33 @@ fn cmd_train(args: &Args) -> i32 {
         eprintln!("unknown scheme: {scheme_name}");
         return 1;
     };
+    let backend_name = args.get("backend").unwrap_or("fast");
+    let Some(backend) = BackendKind::parse(backend_name) else {
+        eprintln!("unknown backend: {backend_name} (use fast|hw)");
+        return 1;
+    };
     let Some(env) = by_name(workload) else {
         eprintln!("unknown workload: {workload}");
         return 1;
     };
     let steps = args.usize_or("steps", 400);
+    let dims = match args.get("hidden") {
+        None => None,
+        Some(h) => match h.parse::<usize>() {
+            Ok(h) if h > 0 => Some(vec![32, h, h, h, 32]),
+            _ => {
+                eprintln!("invalid --hidden: {h} (positive integer expected)");
+                return 1;
+            }
+        },
+    };
     let ds = Dataset::collect(env.as_ref(), 30, 100, 0x7EA1);
-    let mut session = TrainSession::new(
+    let session = TrainSession::try_new(
         ds,
         TrainConfig {
             scheme,
+            backend,
+            dims,
             steps,
             lr: args.f64_or("lr", 1e-3) as f32,
             batch_size: args.usize_or("batch", 32),
@@ -151,16 +179,46 @@ fn cmd_train(args: &Args) -> i32 {
             ..Default::default()
         },
     );
-    println!("training {workload} under {} for {steps} steps...", scheme.name());
+    let mut session = match session {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    println!(
+        "training {workload} under {} on the {} backend for {steps} steps...",
+        scheme.name(),
+        backend.name()
+    );
     session.run();
     let mut t = Table::new(
-        &format!("{workload} / {}", scheme.name()),
+        &format!("{workload} / {} / {}", scheme.name(), backend.name()),
         &["step", "val_loss"],
     );
     for (s, v) in &session.val_curve {
         t.row(vec![s.to_string(), format!("{v:.6}")]);
     }
     emit(&t, &format!("train_{workload}_{}", scheme.name()));
+    if let Some(r) = session.hw_report() {
+        println!(
+            "hardware cost: {} steps, {} GeMMs | {:.2} us/step ({:.0} steps/s) | {:.2} uJ/step | \
+             {:.1} KiB/step traffic | {:.1} KB resident | util {:.1}% | datapath dev {:.2e}",
+            r.steps,
+            r.gemms,
+            r.us_per_step(),
+            r.steps_per_sec(),
+            r.uj_per_step(),
+            r.traffic_kib_per_step(),
+            r.resident_kb,
+            100.0 * r.cost.utilization(r.element.mac_mode()),
+            r.datapath_max_rel_err,
+        );
+        match save_hw_report(&r, &format!("train_{workload}_{}", scheme.name())) {
+            Ok(p) => println!("[saved {}]\n", p.display()),
+            Err(e) => println!("[json save failed: {e}]\n"),
+        }
+    }
     0
 }
 
@@ -231,6 +289,31 @@ mod tests {
     #[test]
     fn quantize_command_runs() {
         assert_eq!(run_cli(&argv("quantize --format int8 --rows 16 --cols 16")), 0);
+    }
+
+    #[test]
+    fn train_rejects_bad_scheme_backend_combos() {
+        assert_eq!(run_cli(&argv("train --scheme nope")), 1);
+        assert_eq!(run_cli(&argv("train --backend warp")), 1);
+        // hardware backend can't run the FP32 baseline
+        assert_eq!(run_cli(&argv("train --scheme fp32 --backend hw")), 1);
+    }
+
+    #[test]
+    fn train_mxvec_scheme_reachable_from_cli() {
+        let code = run_cli(&argv(
+            "train --workload cartpole --scheme mxvec-int8 --steps 3 --eval-every 1000000 --hidden 16",
+        ));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn train_hw_backend_emits_report() {
+        // tiny MLP so the bit-exact datapath walk stays fast
+        let code = run_cli(&argv(
+            "train --workload cartpole --scheme e2m1 --backend hw --steps 2 --eval-every 1000000 --hidden 8",
+        ));
+        assert_eq!(code, 0);
     }
 
     #[test]

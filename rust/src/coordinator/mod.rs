@@ -12,6 +12,7 @@
 //! | fig2   | validation-loss curves, 6 MX formats x 4 workloads  |
 //! | fig7   | PE-array area & energy breakdown per component      |
 //! | fig8   | pusher loss under time / energy budgets vs Dacapo   |
+//! | throughput | measured-on-model training cost via `--backend hw` |
 
 pub mod cli;
 pub mod experiments;

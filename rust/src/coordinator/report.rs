@@ -95,6 +95,15 @@ pub fn save_json(value: &Json, name: &str) -> std::io::Result<PathBuf> {
     Ok(path)
 }
 
+/// Persist a session's hardware cost report as
+/// `results/<prefix>_hw_report.json` (the `--backend hw` artifact).
+pub fn save_hw_report(
+    report: &crate::backend::HwCostReport,
+    prefix: &str,
+) -> std::io::Result<PathBuf> {
+    save_json(&report.to_json(), &format!("{prefix}_hw_report"))
+}
+
 /// Format a float with fixed decimals.
 pub fn f(v: f64, decimals: usize) -> String {
     format!("{v:.decimals$}")

@@ -47,8 +47,17 @@ impl GemmCore {
     /// output tiles, per-worker contexts, `Events` reduction); the
     /// simulated cycle/cost model is untouched by host parallelism.
     pub fn gemm(&mut self, qa: &MxTensor, qb: &MxTensor) -> Mat {
+        self.gemm_staged(qa, qb, schedule::Stage::Forward)
+    }
+
+    /// [`GemmCore::gemm`] with an explicit training stage, so the
+    /// schedule charges the stage's writeback path (quantized for
+    /// forward/backward, serialized FP32 for weight gradients — the
+    /// paper's §IV-B utilization collapse). The training backends route
+    /// every GeMM through here.
+    pub fn gemm_staged(&mut self, qa: &MxTensor, qb: &MxTensor, stage: schedule::Stage) -> Mat {
         let out = self.pe.gemm_quantized(qa, qb);
-        self.cost.add(&schedule::gemm_cycles(qa.rows, qa.cols, qb.cols, self.format));
+        self.cost.add(&schedule::gemm_cycles_staged(qa.rows, qa.cols, qb.cols, self.format, stage));
         out
     }
 

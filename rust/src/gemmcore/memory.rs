@@ -107,9 +107,42 @@ pub fn footprint_ours(shape: &MlpShape, batch: usize, fmt: ElementFormat) -> Foo
     }
 }
 
+/// Memory-interface traffic of one scheduled GeMM `[m,k] x [k,n]`, in
+/// bits, consistent with the pass schedule in [`crate::gemmcore::schedule`]:
+/// per block-step the grid reads one quantized tile per row and per
+/// column; per pass it writes back 64 output tiles — quantized (element
+/// width + shared exponent) for forward/backward stages, FP32 for weight
+/// gradients, which leave for the weight-update accelerator. The
+/// hardware training backend accumulates this per GeMM into its
+/// [`crate::backend::HwCostReport`].
+pub fn gemm_traffic_bits(
+    m: usize,
+    k: usize,
+    n: usize,
+    fmt: ElementFormat,
+    stage: crate::gemmcore::schedule::Stage,
+) -> u64 {
+    use crate::gemmcore::schedule::{tile_bits, Stage};
+    use crate::gemmcore::{GRID_COLS, GRID_ROWS};
+    use crate::mx::tensor::SQ;
+    let mb = m.div_ceil(SQ);
+    let kb = k.div_ceil(SQ).max(1) as u64;
+    let nb = n.div_ceil(SQ);
+    let passes = (mb.div_ceil(GRID_ROWS) * nb.div_ceil(GRID_COLS)) as u64;
+    let operand = passes * kb * (GRID_ROWS as u64 + GRID_COLS as u64) * tile_bits(fmt);
+    let tiles = (GRID_ROWS * GRID_COLS) as u64;
+    let writeback = passes
+        * match stage {
+            Stage::Forward | Stage::Backward => tiles * tile_bits(fmt),
+            Stage::WeightGrad => tiles * 64 * 32,
+        };
+    operand + writeback
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gemmcore::schedule::Stage;
 
     fn near(a: f64, b: f64, tol: f64) -> bool {
         (a - b).abs() <= tol
@@ -163,6 +196,23 @@ mod tests {
         assert!(near(f32b.total(), 179.8, 1.0), "total {}", f32b.total());
         let f64b = footprint_ours(&s, 64, ElementFormat::Int8);
         assert!(near(f64b.total(), 213.4, 1.0), "total {}", f64b.total());
+    }
+
+    #[test]
+    fn traffic_model_consistency() {
+        // one 32x32x128 pass grid in INT8: 1 pass (4x16 covers 4x16
+        // block-tiles), 16 K-steps, 20 tiles read per step
+        let fmt = ElementFormat::Int8;
+        let t = gemm_traffic_bits(32, 128, 128, fmt, Stage::Forward);
+        let tile = 64 * 8 + 8;
+        assert_eq!(t, 16 * 20 * tile + 64 * tile);
+        // FP32 weight-gradient writeback dwarfs the quantized one
+        let fwd = gemm_traffic_bits(256, 32, 256, fmt, Stage::Forward);
+        let wg = gemm_traffic_bits(256, 32, 256, fmt, Stage::WeightGrad);
+        assert!(wg > fwd);
+        // narrower elements move fewer bits
+        let t4 = gemm_traffic_bits(32, 128, 128, ElementFormat::E2M1, Stage::Forward);
+        assert!(t4 < t);
     }
 
     #[test]

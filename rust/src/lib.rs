@@ -28,6 +28,11 @@
 //! * [`trainer`] — the continual-learning loop: MX quantization-aware
 //!   training of the 4-layer dynamics MLP, with per-step latency/energy
 //!   accounting on the simulated hardware; regenerates Figs. 2 and 8.
+//! * [`backend`] — the pluggable `ExecBackend` seam between the trainer
+//!   and the hardware model: the fast buffer-reusing fake-quant path and
+//!   the bit-exact `GemmCore` path produce bit-identical training-graph
+//!   values, the latter accumulating a per-session `HwCostReport`
+//!   (cycles, events, energy, memory traffic).
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX train/eval
 //!   graphs (`artifacts/*.hlo.txt`); Python never runs at training time.
 //!   Gated behind the `xla` cargo feature (graceful stubs otherwise).
@@ -46,6 +51,7 @@
 //! table and figure plus the benchmark methodology.
 
 pub mod arith;
+pub mod backend;
 pub mod coordinator;
 pub mod energy;
 pub mod gemmcore;

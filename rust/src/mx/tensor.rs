@@ -419,8 +419,22 @@ mod tests {
 /// band owning a disjoint slice of the output. Bit-identical to
 /// [`fake_quant_mat_fast_serial`] (asserted by `tests/parallel.rs`).
 pub fn fake_quant_mat_fast(m: &Mat, format: ElementFormat, layout: Layout) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    fake_quant_mat_fast_into(m, format, layout, &mut out);
+    out
+}
+
+/// [`fake_quant_mat_fast`] writing into a caller-owned buffer: `out` is
+/// reshaped to `m`'s dims, reusing its allocation when capacity allows.
+/// This is the zero-allocation steady state of the QAT backends' per-
+/// layer scratch buffers (`backend::FakeQuantBackend`) — after the first
+/// training step no quant call allocates.
+pub fn fake_quant_mat_fast_into(m: &Mat, format: ElementFormat, layout: Layout, out: &mut Mat) {
     use crate::mx::block::fake_quant_block_fast;
-    let mut out = m.clone();
+    out.rows = m.rows;
+    out.cols = m.cols;
+    out.data.clear();
+    out.data.resize(m.rows * m.cols, 0.0);
     let cols = m.cols;
     match layout {
         Layout::Square8x8 => {
@@ -472,7 +486,6 @@ pub fn fake_quant_mat_fast(m: &Mat, format: ElementFormat, layout: Layout) -> Ma
             });
         }
     }
-    out
 }
 
 /// Serial reference of [`fake_quant_mat_fast`] (identity-test twin and
@@ -568,5 +581,26 @@ mod fast_path_tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn fake_quant_into_reuses_buffer_bit_identically() {
+        // compare against the untouched *serial* twin, which did not go
+        // through the zero-fill `_into` rewrite — a genuinely
+        // independent reference (the dirty reused buffer must never
+        // leak stale values into any element)
+        let mut rng = Pcg64::new(0x1770);
+        let mut out = Mat::from_fn(64, 64, |_, _| f32::NAN); // poisoned scratch
+        for (rows, cols) in [(16, 16), (13, 21), (8, 40), (5, 5)] {
+            let m = Mat::from_fn(rows, cols, |_, _| rng.wide_f32().clamp(-1e6, 1e6));
+            for layout in [Layout::Square8x8, Layout::Vector32] {
+                for fmt in [ElementFormat::Int8, ElementFormat::E2M1] {
+                    fake_quant_mat_fast_into(&m, fmt, layout, &mut out);
+                    let golden = fake_quant_mat_fast_serial(&m, fmt, layout);
+                    assert_eq!((out.rows, out.cols), (rows, cols));
+                    assert_eq!(out.data, golden.data, "{fmt:?} {layout:?} {rows}x{cols}");
+                }
+            }
+        }
     }
 }

@@ -7,6 +7,12 @@
 //! [`systolic::SystolicArray`] is the Dacapo (ISCA'24) reference point: a
 //! weight-stationary systolic array with MX9/6/4 vector blocks, whose
 //! fill/drain overhead is what Table IV's latency comparison measures.
+//!
+//! Besides the standalone experiments, the array is the execution engine
+//! of the hardware training backend ([`crate::backend::HardwareBackend`]
+//! via [`crate::gemmcore::GemmCore`]): every quantize→GeMM cut of a
+//! `--backend hw` QAT session walks these MACs bit-exactly, and their
+//! [`crate::arith::Events`] feed the per-session cost report.
 
 pub mod array;
 pub mod systolic;

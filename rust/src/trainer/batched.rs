@@ -16,6 +16,12 @@
 //! nest-fork — inside a batched run the per-matrix parallelism degrades
 //! to serial automatically, so the sweep scales by run count without
 //! oversubscription.
+//!
+//! Backends compose transparently: `TrainConfig::backend` selects the
+//! per-session [`crate::backend::ExecBackend`], so a sweep can mix
+//! fast fake-quant runs with hardware-accounted runs — each session
+//! owns its backend (and cost ledger), and the equivalence contract
+//! guarantees the losses don't depend on the choice.
 
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainSession};

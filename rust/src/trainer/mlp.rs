@@ -4,6 +4,7 @@
 //! output width 32, hidden width 256, ReLU activations, MSE loss on
 //! normalized delta-state targets.
 
+use crate::backend::{ExecBackend, HookBackend};
 use crate::util::mat::Mat;
 use crate::util::rng::Pcg64;
 
@@ -66,30 +67,41 @@ impl Mlp {
         self.weights.len()
     }
 
+    /// Forward pass through an execution backend: each layer is one
+    /// quantize→GeMM cut executed by `be` (fake-quant, simulated
+    /// hardware, or hook adapter — see [`crate::backend`]).
+    pub fn forward_exec(&self, x: &Mat, be: &mut dyn ExecBackend) -> Tape {
+        let n = self.n_layers();
+        let mut activations = Vec::with_capacity(n);
+        let mut pre_acts: Vec<Mat> = Vec::with_capacity(n);
+        let mut a = x.clone();
+        for i in 0..n {
+            let (aq, mut z) = be.forward_layer(i, &a, &self.weights[i]);
+            z.add_bias_in_place(&self.biases[i]);
+            if i + 1 < n {
+                a = z.map(|v| v.max(0.0));
+            }
+            activations.push(aq);
+            pre_acts.push(z);
+        }
+        Tape { output: pre_acts.last().unwrap().clone(), activations, pre_acts }
+    }
+
     /// Forward pass through possibly-transformed weights/activations.
     ///
     /// `w_hook(i, W)` returns the weight used by layer i (e.g. its MX
     /// fake-quantization); `a_hook(i, A)` transforms the layer input.
-    /// Identity hooks give the plain f32 forward.
+    /// Identity hooks give the plain f32 forward. Implemented as a hook
+    /// adapter over [`Mlp::forward_exec`], so every forward — hooked or
+    /// backend-driven — runs the same GeMM kernels.
     pub fn forward_with(
         &self,
         x: &Mat,
-        mut w_hook: impl FnMut(usize, &Mat) -> Mat,
-        mut a_hook: impl FnMut(usize, &Mat) -> Mat,
+        w_hook: impl FnMut(usize, &Mat) -> Mat,
+        a_hook: impl FnMut(usize, &Mat) -> Mat,
     ) -> Tape {
-        let n = self.n_layers();
-        let mut activations = Vec::with_capacity(n);
-        let mut pre_acts = Vec::with_capacity(n);
-        let mut a = x.clone();
-        for i in 0..n {
-            let aq = a_hook(i, &a);
-            activations.push(aq.clone());
-            let wq = w_hook(i, &self.weights[i]);
-            let z = aq.matmul(&wq).add_bias(&self.biases[i]);
-            pre_acts.push(z.clone());
-            a = if i + 1 < n { z.map(|v| v.max(0.0)) } else { z };
-        }
-        Tape { output: pre_acts.last().unwrap().clone(), activations, pre_acts }
+        let mut be = HookBackend::new(w_hook, a_hook, |_, e: &Mat| e.clone());
+        self.forward_exec(x, &mut be)
     }
 
     /// Plain forward (identity hooks).
@@ -102,17 +114,11 @@ impl Mlp {
         output.mse(target)
     }
 
-    /// Backward pass from an MSE loss, with transform hooks mirroring
-    /// the forward: `w_hook` for the weights used in the error GeMM
-    /// (`E @ Wᵀ`), `e_hook(i, E)` for the backprop error fed to layer i's
-    /// weight-gradient GeMM (`Aᵀ @ E`).
-    pub fn backward_with(
-        &self,
-        tape: &Tape,
-        target: &Mat,
-        mut w_hook: impl FnMut(usize, &Mat) -> Mat,
-        mut e_hook: impl FnMut(usize, &Mat) -> Mat,
-    ) -> MlpGrads {
+    /// Backward pass through an execution backend: per layer, `be`
+    /// quantizes the error once and runs the weight-gradient GeMM over
+    /// the tape's stored quantized activation, plus (above layer 0) the
+    /// error-backprop GeMM against the transposed quantized weight.
+    pub fn backward_exec(&self, tape: &Tape, target: &Mat, be: &mut dyn ExecBackend) -> MlpGrads {
         let n = self.n_layers();
         let batch = tape.output.rows as f32;
         let scale = 2.0 / (batch * tape.output.cols as f32);
@@ -121,18 +127,32 @@ impl Mlp {
         let mut d_weights = vec![Mat::zeros(0, 0); n];
         let mut d_biases = vec![Vec::new(); n];
         for i in (0..n).rev() {
-            let eq = e_hook(i, &err);
-            // weight grad: Aᵀ @ E
-            d_weights[i] = tape.activations[i].transpose().matmul(&eq);
-            d_biases[i] = eq.col_sums();
-            if i > 0 {
-                // error backprop: E @ Wᵀ, masked by ReLU derivative
-                let wq = w_hook(i, &self.weights[i]);
-                let back = eq.matmul(&wq.transpose());
+            let w = if i > 0 { Some(&self.weights[i]) } else { None };
+            let out = be.backward_layer(i, &err, &tape.activations[i], w);
+            d_weights[i] = out.d_w;
+            d_biases[i] = out.d_b;
+            if let Some(back) = out.back {
+                // mask by the ReLU derivative of the layer below
                 err = back.zip(&tape.pre_acts[i - 1], |e, z| if z > 0.0 { e } else { 0.0 });
             }
         }
         MlpGrads { d_weights, d_biases }
+    }
+
+    /// Backward pass from an MSE loss, with transform hooks mirroring
+    /// the forward: `w_hook` for the weights used in the error GeMM
+    /// (`E @ Wᵀ`), `e_hook(i, E)` for the backprop error fed to layer i's
+    /// weight-gradient GeMM (`Aᵀ @ E`). A hook adapter over
+    /// [`Mlp::backward_exec`].
+    pub fn backward_with(
+        &self,
+        tape: &Tape,
+        target: &Mat,
+        w_hook: impl FnMut(usize, &Mat) -> Mat,
+        e_hook: impl FnMut(usize, &Mat) -> Mat,
+    ) -> MlpGrads {
+        let mut be = HookBackend::new(w_hook, |_, a: &Mat| a.clone(), e_hook);
+        self.backward_exec(tape, target, &mut be)
     }
 
     /// Plain backward.

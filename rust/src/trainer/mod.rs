@@ -1,18 +1,23 @@
 //! Training: the dynamics MLP, MX quantization-aware training, and
 //! budgeted (time / energy) training runs.
 //!
-//! Two interchangeable backends execute the train step:
+//! The train step executes through a pluggable [`crate::backend`]
+//! seam — [`Mlp::forward_exec`]/[`Mlp::backward_exec`] drive an
+//! `ExecBackend` at every Fig. 5 quantize→GeMM cut point:
 //!
-//! * the **native golden path** ([`mlp`], [`qat`]): f32 forward/backward
-//!   with MX fake-quantization at the Fig. 5 cut points — fast, pure
-//!   Rust, used by the Fig. 2 / Fig. 8 experiment harnesses;
-//! * the **XLA runtime path** (`crate::runtime`): the same step AOT-
-//!   lowered from JAX (`python/compile/`) and executed through PJRT —
-//!   the production path proving the three-layer stack composes
+//! * the **fake-quant backend** (default): f32 forward/backward with
+//!   buffer-reusing MX fake-quantization — fast, pure Rust, used by the
+//!   Fig. 2 / Fig. 8 experiment harnesses;
+//! * the **hardware backend** (`--backend hw`): the same values,
+//!   bit-identically, executed through the cycle/event-accounted
+//!   `GemmCore` simulation, yielding a per-session `HwCostReport`;
+//! * the **XLA runtime path** (`crate::runtime`): the step AOT-lowered
+//!   from JAX (`python/compile/`) and executed through PJRT
 //!   (`examples/train_pusher.rs`).
 //!
-//! Both backends implement the same quantization semantics; a pytest on
-//! the Python side and `session::tests` on this side pin them together.
+//! All paths implement the same quantization semantics; a pytest on the
+//! Python side, `session::tests`, and `tests/backend.rs` pin them
+//! together.
 
 pub mod batched;
 pub mod budget;
@@ -24,3 +29,5 @@ pub use batched::{BatchedTrainer, TrainOutcome};
 pub use mlp::{Mlp, MlpGrads};
 pub use qat::QuantScheme;
 pub use session::{TrainConfig, TrainSession};
+
+pub use crate::backend::BackendKind;

@@ -7,9 +7,10 @@
 //! activations entering each GeMM, and backprop errors entering the
 //! error/weight-gradient GeMMs — with FP32 master weights (standard QAT).
 
+use crate::backend::{ExecBackend, FakeQuantBackend};
 use crate::mx::dacapo::{DacapoFormat, DacapoTensor};
 use crate::mx::element::ElementFormat;
-use crate::mx::tensor::{fake_quant_mat_fast, Layout, MxTensor};
+use crate::mx::tensor::{fake_quant_mat_fast, Layout};
 use crate::trainer::mlp::{Mlp, MlpGrads};
 use crate::util::mat::Mat;
 
@@ -36,14 +37,26 @@ impl QuantScheme {
         }
     }
 
-    /// Parse CLI names like `fp32`, `e4m3`, `int8`, `mx9`.
+    /// Parse CLI names: `fp32`, `mx9/mx6/mx4` (Dacapo), `mxvec-<fmt>`
+    /// (OCP vector grouping), `mx-<fmt>` or bare `<fmt>` (square
+    /// grouping) — the exact inverse of [`QuantScheme::name`], so every
+    /// scheme the code can name is reachable from the CLI (round-trip
+    /// asserted below).
     pub fn parse(s: &str) -> Option<QuantScheme> {
         match s {
             "fp32" => Some(QuantScheme::Fp32),
             "mx9" => Some(QuantScheme::Dacapo(DacapoFormat::Mx9)),
             "mx6" => Some(QuantScheme::Dacapo(DacapoFormat::Mx6)),
             "mx4" => Some(QuantScheme::Dacapo(DacapoFormat::Mx4)),
-            _ => ElementFormat::parse(s).map(QuantScheme::MxSquare),
+            _ => {
+                if let Some(rest) = s.strip_prefix("mxvec-") {
+                    ElementFormat::parse(rest).map(QuantScheme::MxVector)
+                } else if let Some(rest) = s.strip_prefix("mx-") {
+                    ElementFormat::parse(rest).map(QuantScheme::MxSquare)
+                } else {
+                    ElementFormat::parse(s).map(QuantScheme::MxSquare)
+                }
+            }
         }
     }
 
@@ -89,8 +102,20 @@ impl QuantScheme {
 
 /// One quantization-aware training step: quantized forward + backward,
 /// Adam on FP32 masters. Returns the (quantized-forward) training loss.
+///
+/// Convenience over [`qat_step_with`] with a transient
+/// [`FakeQuantBackend`]; sessions hold a persistent backend instead so
+/// its scratch buffers (and, for the hardware backend, its cost ledger)
+/// survive across steps.
 pub fn qat_step(mlp: &mut Mlp, x: &Mat, y: &Mat, scheme: QuantScheme, lr: f32) -> f64 {
-    let (tape, grads) = qat_forward_backward(mlp, x, y, scheme);
+    let mut be = FakeQuantBackend::new(scheme);
+    qat_step_with(mlp, x, y, &mut be, lr)
+}
+
+/// One QAT step through an execution backend (fake-quant or hardware).
+pub fn qat_step_with(mlp: &mut Mlp, x: &Mat, y: &Mat, be: &mut dyn ExecBackend, lr: f32) -> f64 {
+    be.begin_step();
+    let (tape, grads) = qat_forward_backward_with(mlp, x, y, be);
     let loss = Mlp::mse_loss(&tape.output, y);
     mlp.adam_step(&grads, lr);
     loss
@@ -103,15 +128,23 @@ pub fn qat_forward_backward(
     y: &Mat,
     scheme: QuantScheme,
 ) -> (crate::trainer::mlp::Tape, MlpGrads) {
-    let tape = mlp.forward_with(x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
-    let grads = mlp.backward_with(
-        &tape,
-        y,
-        // error GeMM consumes Wᵀ: square blocks reuse the fwd copy,
-        // vector schemes requantize (exactly the paper's Fig. 5 point)
-        |_, w| scheme.quant_for_transpose(w),
-        |_, e| scheme.quant(e),
-    );
+    let mut be = FakeQuantBackend::new(scheme);
+    be.begin_step();
+    qat_forward_backward_with(mlp, x, y, &mut be)
+}
+
+/// Forward + backward through an execution backend. The error GeMM
+/// consumes Wᵀ: square blocks reuse the forward quantized copy (free
+/// block-permutation transpose), vector schemes requantize — exactly
+/// the paper's Fig. 5 point, now enforced inside each backend.
+pub fn qat_forward_backward_with(
+    mlp: &Mlp,
+    x: &Mat,
+    y: &Mat,
+    be: &mut dyn ExecBackend,
+) -> (crate::trainer::mlp::Tape, MlpGrads) {
+    let tape = mlp.forward_exec(x, be);
+    let grads = mlp.backward_exec(&tape, y, be);
     (tape, grads)
 }
 
@@ -210,7 +243,31 @@ mod tests {
             QuantScheme::parse("e4m3"),
             Some(QuantScheme::MxSquare(ElementFormat::E4M3))
         );
+        assert_eq!(
+            QuantScheme::parse("mxvec-int8"),
+            Some(QuantScheme::MxVector(ElementFormat::Int8))
+        );
         assert_eq!(QuantScheme::parse("mx9"), Some(QuantScheme::Dacapo(DacapoFormat::Mx9)));
         assert_eq!(QuantScheme::parse("nope"), None);
+        assert_eq!(QuantScheme::parse("mxvec-nope"), None);
+    }
+
+    #[test]
+    fn scheme_name_parse_round_trip_over_all_schemes() {
+        // the name()/parse() asymmetry regression: every nameable scheme
+        // (including the previously unreachable mxvec-* family) must
+        // round-trip through its CLI name.
+        let mut all = vec![QuantScheme::Fp32];
+        for f in crate::mx::ALL_ELEMENT_FORMATS {
+            all.push(QuantScheme::MxSquare(f));
+            all.push(QuantScheme::MxVector(f));
+        }
+        for d in [DacapoFormat::Mx9, DacapoFormat::Mx6, DacapoFormat::Mx4] {
+            all.push(QuantScheme::Dacapo(d));
+        }
+        for scheme in all {
+            let name = scheme.name();
+            assert_eq!(QuantScheme::parse(&name), Some(scheme), "{name}");
+        }
     }
 }

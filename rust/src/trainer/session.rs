@@ -1,7 +1,10 @@
-//! Training sessions: dataset + model + scheme -> loss curves.
+//! Training sessions: dataset + model + scheme + backend -> loss curves
+//! (and, on the hardware backend, a per-session cost report).
 
+use crate::backend::{make_backend, BackendKind, ExecBackend, HwCostReport};
+use crate::gemmcore::memory::{footprint_ours, MlpShape};
 use crate::trainer::mlp::{Mlp, MLP_DIMS};
-use crate::trainer::qat::{qat_eval, qat_step, QuantScheme};
+use crate::trainer::qat::{qat_eval, qat_step_with, QuantScheme};
 use crate::util::rng::Pcg64;
 use crate::workloads::Dataset;
 
@@ -9,6 +12,11 @@ use crate::workloads::Dataset;
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub scheme: QuantScheme,
+    /// Which execution backend runs the quantize→GeMM cut points.
+    pub backend: BackendKind,
+    /// MLP layer dims; `None` = the paper's [`MLP_DIMS`]. Input/output
+    /// widths must match the dataset (32/32 for the bundled workloads).
+    pub dims: Option<Vec<usize>>,
     pub batch_size: usize,
     pub lr: f32,
     pub steps: usize,
@@ -21,6 +29,8 @@ impl Default for TrainConfig {
     fn default() -> Self {
         Self {
             scheme: QuantScheme::Fp32,
+            backend: BackendKind::Fast,
+            dims: None,
             batch_size: 32,
             lr: 1e-3,
             steps: 400,
@@ -39,14 +49,34 @@ pub struct TrainSession {
     pub train_curve: Vec<(usize, f64)>,
     /// (step, val_loss) samples.
     pub val_curve: Vec<(usize, f64)>,
+    backend: Box<dyn ExecBackend + Send>,
+    dims: Vec<usize>,
     step: usize,
 }
 
 impl TrainSession {
-    pub fn new(dataset: Dataset, config: TrainConfig) -> Self {
+    /// Build a session, or explain why the scheme/backend combination is
+    /// invalid (the hardware backend executes square MX schemes only).
+    pub fn try_new(dataset: Dataset, config: TrainConfig) -> Result<Self, String> {
+        let backend = make_backend(config.backend, config.scheme)?;
+        let dims: Vec<usize> = config.dims.clone().unwrap_or_else(|| MLP_DIMS.to_vec());
         let mut rng = Pcg64::with_stream(config.seed, 0x11F);
-        let mlp = Mlp::new(&MLP_DIMS, &mut rng);
-        Self { config, mlp, dataset, train_curve: Vec::new(), val_curve: Vec::new(), step: 0 }
+        let mlp = Mlp::new(&dims, &mut rng);
+        Ok(Self {
+            config,
+            mlp,
+            dataset,
+            train_curve: Vec::new(),
+            val_curve: Vec::new(),
+            backend,
+            dims,
+            step: 0,
+        })
+    }
+
+    /// [`TrainSession::try_new`], panicking on an invalid configuration.
+    pub fn new(dataset: Dataset, config: TrainConfig) -> Self {
+        Self::try_new(dataset, config).expect("invalid train config")
     }
 
     /// Current step count.
@@ -54,10 +84,21 @@ impl TrainSession {
         self.step
     }
 
+    /// MLP layer dims this session trains.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
     /// Run one training step; returns the train loss.
     pub fn step_once(&mut self) -> f64 {
         let batch = self.dataset.batch(self.step, self.config.batch_size);
-        let loss = qat_step(&mut self.mlp, &batch.x, &batch.y, self.config.scheme, self.config.lr);
+        let loss = qat_step_with(
+            &mut self.mlp,
+            &batch.x,
+            &batch.y,
+            self.backend.as_mut(),
+            self.config.lr,
+        );
         if self.step % self.config.eval_every == 0 {
             self.train_curve.push((self.step, loss));
             self.val_curve.push((self.step, self.val_loss()));
@@ -75,9 +116,22 @@ impl TrainSession {
         self.val_curve.push((self.step, v));
     }
 
-    /// Quantized validation loss over the held-out split.
+    /// Quantized validation loss over the held-out split. Evaluation
+    /// runs the fake-quant path — bit-identical values on either backend
+    /// (the equivalence contract), and it keeps validation out of the
+    /// hardware cost ledger, which accounts *training* steps.
     pub fn val_loss(&self) -> f64 {
         qat_eval(&self.mlp, &self.dataset.val_x, &self.dataset.val_y, self.config.scheme)
+    }
+
+    /// The accumulated hardware cost of this session's training steps
+    /// (None on the fast backend), with the resident on-chip footprint
+    /// filled in from the session's MLP shape and batch size.
+    pub fn hw_report(&self) -> Option<HwCostReport> {
+        let mut r = self.backend.cost_report()?;
+        let shape = MlpShape { dims: self.dims.clone() };
+        r.resident_kb = footprint_ours(&shape, self.config.batch_size, r.element).total();
+        Some(r)
     }
 }
 
@@ -103,6 +157,7 @@ mod tests {
         let v1 = s.val_loss();
         assert!(v1 < v0 * 0.5, "val {v0} -> {v1}");
         assert!(!s.val_curve.is_empty());
+        assert!(s.hw_report().is_none(), "fast backend accounts no hardware cost");
     }
 
     #[test]
@@ -132,5 +187,35 @@ mod tests {
             s.val_loss()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn hw_backend_rejects_non_square_schemes() {
+        for scheme in [QuantScheme::Fp32, QuantScheme::MxVector(ElementFormat::Int8)] {
+            let r = TrainSession::try_new(
+                quick_dataset("cartpole"),
+                TrainConfig { scheme, backend: BackendKind::Hardware, ..Default::default() },
+            );
+            assert!(r.is_err(), "{}", scheme.name());
+        }
+    }
+
+    #[test]
+    fn custom_dims_session_trains() {
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::E4M3),
+                dims: Some(vec![32, 24, 32]),
+                steps: 60,
+                lr: 3e-3,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        let v0 = s.val_loss();
+        s.run();
+        assert_eq!(s.dims(), &[32, 24, 32]);
+        assert!(s.val_loss() < v0, "{v0} -> {}", s.val_loss());
     }
 }

@@ -6,6 +6,20 @@
 
 use crate::util::rng::Pcg64;
 
+/// Output-row band size for the parallel GeMM kernels: fork over
+/// ~4 bands per worker when the product is big enough to amortize the
+/// fork-join (`total_work` = m*k*n flops), else one band (the chunk
+/// helper then runs serially). Shared by `matmul`/`matmul_nt`/
+/// `matmul_tn` so the three kernels always make the same fork decision.
+fn par_band_rows(rows: usize, total_work: usize) -> usize {
+    let nthreads = crate::util::par::threads();
+    if nthreads > 1 && rows >= 2 && total_work >= 1 << 20 {
+        rows.div_ceil(nthreads * 4).max(1)
+    } else {
+        rows.max(1)
+    }
+}
+
 /// Dense row-major `rows x cols` f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
@@ -85,18 +99,77 @@ impl Mat {
         assert_eq!(self.cols, other.rows, "inner dims mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
         let (cols, ocols) = (self.cols, other.cols);
-        let nthreads = crate::util::par::threads();
-        let band = if nthreads > 1 && self.rows >= 2 && self.rows * cols * ocols >= 1 << 20 {
-            self.rows.div_ceil(nthreads * 4).max(1)
-        } else {
-            self.rows.max(1) // one chunk -> the helper runs it serially
-        };
+        let band = par_band_rows(self.rows, self.rows * cols * ocols);
         crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, chunk| {
             let r0 = ci * band;
             for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
                 let r = r0 + dr;
                 for k in 0..cols {
                     let a = self.data[r * cols + k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &other.data[k * ocols..(k + 1) * ocols];
+                    for (d, &b) in dst.iter_mut().zip(orow) {
+                        *d += a * b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `self @ otherᵀ` without materializing the transpose.
+    ///
+    /// Bit-identical to `self.matmul(&other.transpose())`: every output
+    /// element accumulates the same products in the same k order, with
+    /// the same zero-skip on the left operand, and the parallel banding
+    /// splits output rows exactly like [`Mat::matmul`]. Used by the
+    /// error-backprop GeMM (`E @ Wᵀ`) so backends never allocate a
+    /// transposed weight copy — the software mirror of the paper's
+    /// free square-block transpose.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "inner dims mismatch");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        let (k_len, ocols) = (self.cols, other.rows);
+        let band = par_band_rows(self.rows, self.rows * k_len * ocols);
+        crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, chunk| {
+            let r0 = ci * band;
+            for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
+                let arow = &self.data[(r0 + dr) * k_len..(r0 + dr + 1) * k_len];
+                for (j, d) in dst.iter_mut().enumerate() {
+                    let brow = &other.data[j * k_len..(j + 1) * k_len];
+                    let mut s = 0.0f32;
+                    for (k, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        s += a * brow[k];
+                    }
+                    *d = s;
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ @ other` without materializing the transpose.
+    ///
+    /// Bit-identical to `self.transpose().matmul(other)` (same per-
+    /// element accumulation order and zero-skip). Used by the weight-
+    /// gradient GeMM (`Aᵀ @ E`) over the stored quantized activations.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "inner dims mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let (k_len, ocols) = (self.rows, other.cols);
+        let orows = self.cols;
+        let band = par_band_rows(orows, orows * k_len * ocols);
+        crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, chunk| {
+            let r0 = ci * band;
+            for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
+                let i = r0 + dr; // output row i = column i of self
+                for k in 0..k_len {
+                    let a = self.data[k * self.cols + i];
                     if a == 0.0 {
                         continue;
                     }
@@ -137,6 +210,26 @@ impl Mat {
     pub fn add_bias(&self, bias: &[f32]) -> Mat {
         assert_eq!(bias.len(), self.cols);
         Mat::from_fn(self.rows, self.cols, |r, c| self.at(r, c) + bias[c])
+    }
+
+    /// In-place row-vector bias add (same values as [`Mat::add_bias`],
+    /// no allocation — the QAT step's per-layer hot path).
+    pub fn add_bias_in_place(&mut self, bias: &[f32]) {
+        assert_eq!(bias.len(), self.cols);
+        for row in self.data.chunks_mut(self.cols.max(1)) {
+            for (d, &b) in row.iter_mut().zip(bias) {
+                *d += b;
+            }
+        }
+    }
+
+    /// Overwrite `self` with a copy of `src`, reusing the existing
+    /// allocation when its capacity suffices (backend scratch buffers).
+    pub fn copy_from(&mut self, src: &Mat) {
+        self.rows = src.rows;
+        self.cols = src.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&src.data);
     }
 
     /// Column sums (used for bias gradients).
@@ -236,6 +329,55 @@ mod tests {
         let lhs = a.matmul(&b).transpose();
         let rhs = b.transpose().matmul(&a.transpose());
         assert!(lhs.mse(&rhs) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_nt_bit_identical_to_materialized_transpose() {
+        let mut rng = Pcg64::new(7);
+        for (m, k, n) in [(4, 6, 5), (1, 1, 1), (13, 21, 9), (32, 64, 32)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            // sprinkle zeros to exercise the skip path
+            let a = a.map(|v| if v.abs() < 0.3 { 0.0 } else { v });
+            let b = Mat::randn(n, k, 1.0, &mut rng);
+            let fast = a.matmul_nt(&b);
+            let slow = a.matmul(&b.transpose());
+            assert_eq!(fast.data, slow.data, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_tn_bit_identical_to_materialized_transpose() {
+        let mut rng = Pcg64::new(8);
+        for (m, k, n) in [(4, 6, 5), (1, 1, 1), (21, 13, 9), (64, 32, 64)] {
+            let a = Mat::randn(k, m, 1.0, &mut rng);
+            let a = a.map(|v| if v.abs() < 0.3 { 0.0 } else { v });
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            let fast = a.matmul_tn(&b);
+            let slow = a.transpose().matmul(&b);
+            assert_eq!(fast.data, slow.data, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn add_bias_in_place_matches_add_bias() {
+        let mut rng = Pcg64::new(9);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        let bias: Vec<f32> = (0..7).map(|i| i as f32 * 0.25 - 1.0).collect();
+        let want = a.add_bias(&bias);
+        let mut got = a.clone();
+        got.add_bias_in_place(&bias);
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn copy_from_reuses_and_reshapes() {
+        let mut dst = Mat::zeros(8, 8);
+        let cap = dst.data.capacity();
+        let src = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        dst.copy_from(&src);
+        assert_eq!((dst.rows, dst.cols), (2, 3));
+        assert_eq!(dst.data, src.data);
+        assert_eq!(dst.data.capacity(), cap, "no realloc when shrinking");
     }
 
     #[test]
