@@ -1,10 +1,17 @@
 //! Bench: PE-array block-product simulation rate (Fig. 7 substrate).
+//!
+//! Besides the human-readable lines, writes the machine-readable
+//! baseline `results/BENCH_pearray.json` (ns/op per scheme) that CI
+//! uploads so the perf trajectory is tracked PR-over-PR.
 
 use mxscale::arith::MacVariant;
+use mxscale::coordinator::report::save_json;
 use mxscale::mx::element::ElementFormat;
 use mxscale::mx::tensor::{Layout, MxTensor};
 use mxscale::pearray::PeArray;
+use mxscale::util::json::Json;
 use mxscale::util::mat::Mat;
+use mxscale::util::par;
 use mxscale::util::rng::Pcg64;
 use std::time::Instant;
 
@@ -12,6 +19,7 @@ fn main() {
     let mut rng = Pcg64::new(2);
     let a = Mat::randn(8, 8, 1.0, &mut rng);
     let b = Mat::randn(8, 8, 1.0, &mut rng);
+    let mut schemes = Json::obj();
     for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
         let qa = MxTensor::quantize(&a, fmt, Layout::Square8x8);
         let qb = MxTensor::quantize(&b, fmt, Layout::Square8x8);
@@ -24,11 +32,27 @@ fn main() {
         }
         let dt = t.elapsed().as_secs_f64();
         let macs = reps as f64 * 512.0; // 64 outputs x 8-deep dot
+        let ns_per_block = dt / reps as f64 * 1e9;
         println!(
             "pearray/{:<6} {:>10.0} block-mults/s  {:>12.2e} sim MAC-ops/s",
             fmt.name(),
             reps as f64 / dt,
             macs / dt
         );
+        schemes = schemes.set(
+            fmt.name(),
+            Json::obj()
+                .set("ns_per_block_mult", ns_per_block)
+                .set("ns_per_mac_op", ns_per_block / 512.0),
+        );
+    }
+    let doc = Json::obj()
+        .set("bench", "pearray")
+        .set("unit", "ns/op")
+        .set("threads", par::threads())
+        .set("schemes", schemes);
+    match save_json(&doc, "BENCH_pearray") {
+        Ok(p) => println!("[saved {}]", p.display()),
+        Err(e) => println!("[json save failed: {e}]"),
     }
 }

@@ -2,11 +2,17 @@
 //! including the serial-vs-parallel comparison of the batched engine.
 //! Hand-rolled harness (criterion unavailable offline; run with
 //! `cargo bench --bench bench_quantize`, vary RAYON_NUM_THREADS).
+//!
+//! Writes the machine-readable baseline `results/BENCH_quantize.json`
+//! (ns/op per scheme x layout + parallel speedups) for the CI perf
+//! trajectory.
 
+use mxscale::coordinator::report::save_json;
 use mxscale::mx::element::ElementFormat;
 use mxscale::mx::tensor::{
     fake_quant_mat_fast, fake_quant_mat_fast_serial, Layout, MxTensor,
 };
+use mxscale::util::json::Json;
 use mxscale::util::mat::Mat;
 use mxscale::util::par;
 use mxscale::util::rng::Pcg64;
@@ -29,6 +35,7 @@ fn time_best<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
 fn main() {
     let mut rng = Pcg64::new(3);
     let m = Mat::randn(256, 256, 1.0, &mut rng);
+    let mut schemes = Json::obj();
     for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
         for layout in [Layout::Square8x8, Layout::Vector32] {
             let dt = time_best(50, || MxTensor::fake_quant(&m, fmt, layout));
@@ -40,6 +47,8 @@ fn main() {
                 elems / dt,
                 dt * 1e3
             );
+            schemes = schemes
+                .set(&format!("{}/{}", fmt.name(), layout.name()), dt / elems * 1e9);
         }
     }
 
@@ -51,6 +60,7 @@ fn main() {
         "\nparallel engine: {} worker threads (set RAYON_NUM_THREADS to vary)",
         par::threads()
     );
+    let mut parallel = Json::obj();
     for fmt in [ElementFormat::Int8, ElementFormat::E4M3] {
         let ts = time_best(10, || fake_quant_mat_fast_serial(&big, fmt, Layout::Square8x8));
         let tp = time_best(10, || fake_quant_mat_fast(&big, fmt, Layout::Square8x8));
@@ -60,6 +70,13 @@ fn main() {
             ts * 1e3,
             tp * 1e3,
             ts / tp
+        );
+        parallel = parallel.set(
+            &format!("fake_quant_fast/{}", fmt.name()),
+            Json::obj()
+                .set("serial_ms", ts * 1e3)
+                .set("parallel_ms", tp * 1e3)
+                .set("speedup", ts / tp),
         );
         let ts = time_best(5, || {
             MxTensor::quantize_serial(&big, fmt, Layout::Square8x8).dequantize_serial()
@@ -74,5 +91,22 @@ fn main() {
             tp * 1e3,
             ts / tp
         );
+        parallel = parallel.set(
+            &format!("codec_roundtrip/{}", fmt.name()),
+            Json::obj()
+                .set("serial_ms", ts * 1e3)
+                .set("parallel_ms", tp * 1e3)
+                .set("speedup", ts / tp),
+        );
+    }
+    let doc = Json::obj()
+        .set("bench", "quantize")
+        .set("unit", "ns/elem")
+        .set("threads", par::threads())
+        .set("schemes", schemes)
+        .set("parallel", parallel);
+    match save_json(&doc, "BENCH_quantize") {
+        Ok(p) => println!("[saved {}]", p.display()),
+        Err(e) => println!("[json save failed: {e}]"),
     }
 }

@@ -54,6 +54,11 @@ impl HwCostReport {
         self.mac_energy_pj + self.sram_energy_pj
     }
 
+    /// Total core energy [uJ] — the unit the fleet scheduler budgets in.
+    pub fn uj_total(&self) -> f64 {
+        self.energy_pj() * 1e-6
+    }
+
     /// Accumulated accelerator wall-clock [us].
     pub fn micros(&self) -> f64 {
         self.cost.micros(self.freq_mhz)

@@ -1,15 +1,17 @@
 //! Hand-rolled CLI (clap is unavailable in the offline environment).
 //!
 //! ```text
-//! mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all> [--steps N]
+//! mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all>... [--steps N]
 //! mxscale train --workload pusher --scheme e4m3 --backend hw [--steps N] [--hidden N]
+//! mxscale fleet --sessions 8 --steps 280 --shift-at 140
 //! mxscale quantize --format e4m3 [--rows N --cols N]
 //! mxscale info
 //! ```
 
 use crate::backend::BackendKind;
 use crate::coordinator::experiments;
-use crate::coordinator::report::{save_csv, save_hw_report, Table};
+use crate::coordinator::report::{save_csv, save_hw_report, save_json, Table};
+use crate::fleet::{run_fleet, FleetSpec};
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
 use crate::trainer::qat::QuantScheme;
@@ -64,17 +66,28 @@ const USAGE: &str = "\
 mxscale - precision-scalable MX processing for robotics learning (ISLPED'25 reproduction)
 
 USAGE:
-  mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all>
-                [--steps N] [--eval-every N] [--hw-steps N]
+  mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all>...
+                [--steps N] [--eval-every N] [--hw-steps N]   # ids may be listed together
   mxscale train --workload <cartpole|reacher|pusher|halfcheetah>
                 --scheme <fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mxvec-<fmt>|mx9|mx6|mx4>
                 [--backend fast|hw] [--steps N] [--lr F] [--batch N] [--hidden N]
+  mxscale fleet [--sessions N] [--steps N] [--quantum N] [--shift-at N]
+                [--scheme <s>[,<s>...]] [--backend fast|hw] [--hidden N]
+                [--energy-budget UJ] [--seed N]             # multi-tenant continual learning
   mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
   mxscale info                                            # architecture summary
 
   --backend hw runs every training GeMM through the bit-exact GemmCore
   simulation and saves a per-session cycle/energy/memory-traffic report
   (results/*_hw_report.json). Square MX schemes only.
+
+  fleet multiplexes N concurrent training sessions (round-robin step
+  quanta over the worker pool) with per-session step/energy budgets and
+  a mid-run domain-shift event per session: each robot checkpoints
+  (MX-native, square groups single-copy) and adapts from the checkpoint
+  on its perturbed environment. Writes results/fleet_report.json with
+  effective throughput, checkpoint bytes (square vs vector grouping),
+  and the adaptation-vs-retrain loss curves.
 ";
 
 /// Entry point used by `main.rs`. Returns a process exit code.
@@ -83,6 +96,7 @@ pub fn run_cli(argv: &[String]) -> i32 {
     match args.positional.first().map(|s| s.as_str()) {
         Some("repro") => cmd_repro(&args),
         Some("train") => cmd_train(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("info") => {
             print!("{}", info_text());
@@ -103,37 +117,175 @@ fn emit(t: &Table, name: &str) {
     }
 }
 
+/// Parse the shared `--hidden` flag (None = paper MLP width).
+fn parse_hidden(args: &Args) -> Result<Option<usize>, String> {
+    match args.get("hidden") {
+        None => Ok(None),
+        Some(h) => match h.parse::<usize>() {
+            Ok(h) if h > 0 => Ok(Some(h)),
+            _ => Err(format!("invalid --hidden: {h} (positive integer expected)")),
+        },
+    }
+}
+
 fn cmd_repro(args: &Args) -> i32 {
-    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let steps = args.usize_or("steps", 300);
     let eval_every = args.usize_or("eval-every", 25);
-    let run = |id: &str| match id {
-        "table2" => emit(&experiments::table2(), "table2"),
-        "table3" => emit(&experiments::table3(), "table3"),
-        "table4" => emit(&experiments::table4(), "table4"),
-        "fig7" => {
-            let (e, a) = experiments::fig7();
-            emit(&e, "fig7_energy");
-            emit(&a, "fig7_area");
+    let run = |id: &str| -> bool {
+        match id {
+            "table2" => emit(&experiments::table2(), "table2"),
+            "table3" => emit(&experiments::table3(), "table3"),
+            "table4" => emit(&experiments::table4(), "table4"),
+            "fig7" => {
+                let (e, a) = experiments::fig7();
+                emit(&e, "fig7_energy");
+                emit(&a, "fig7_area");
+            }
+            "fig2" => emit(&experiments::fig2(steps, eval_every), "fig2_final"),
+            "throughput" => emit(
+                &experiments::throughput(args.usize_or("hw-steps", 2)),
+                "throughput_measured",
+            ),
+            "ablation" => emit(&experiments::ablation(), "ablation_blocksize"),
+            "fig8" => emit(
+                &experiments::fig8(
+                    args.f64_or("time-budget", 1000.0),
+                    args.f64_or("energy-budget", 120.0),
+                ),
+                "fig8_final",
+            ),
+            other => {
+                eprintln!("unknown experiment: {other}");
+                return false;
+            }
         }
-        "fig2" => emit(&experiments::fig2(steps, eval_every), "fig2_final"),
-        "throughput" => emit(
-            &experiments::throughput(args.usize_or("hw-steps", 2)),
-            "throughput_measured",
-        ),
-        "ablation" => emit(&experiments::ablation(), "ablation_blocksize"),
-        "fig8" => emit(
-            &experiments::fig8(args.f64_or("time-budget", 1000.0), args.f64_or("energy-budget", 120.0)),
-            "fig8_final",
-        ),
-        other => println!("unknown experiment: {other}"),
+        true
     };
-    if which == "all" {
-        for id in ["table2", "table3", "table4", "fig7", "fig2", "fig8", "throughput", "ablation"] {
-            run(id);
-        }
+    // any number of experiment ids may be listed in one invocation
+    // (e.g. `repro table2 table3`); no ids means `all`
+    let ids: Vec<&str> = if args.positional.len() > 1 {
+        args.positional[1..].iter().map(|s| s.as_str()).collect()
     } else {
-        run(which);
+        vec!["all"]
+    };
+    let mut ok = true;
+    for which in ids {
+        if which == "all" {
+            let every =
+                ["table2", "table3", "table4", "fig7", "fig2", "fig8", "throughput", "ablation"];
+            for id in every {
+                ok &= run(id);
+            }
+        } else {
+            ok &= run(which);
+        }
+    }
+    i32::from(!ok)
+}
+
+fn cmd_fleet(args: &Args) -> i32 {
+    let d = FleetSpec::default();
+    let mut spec = FleetSpec {
+        sessions: args.usize_or("sessions", d.sessions),
+        steps: args.usize_or("steps", d.steps),
+        quantum: args.usize_or("quantum", d.quantum),
+        shift_at: args.usize_or("shift-at", d.shift_at),
+        eval_every: args.usize_or("eval-every", d.eval_every),
+        batch: args.usize_or("batch", d.batch),
+        lr: args.f64_or("lr", d.lr as f64) as f32,
+        seed: args.usize_or("seed", d.seed as usize) as u64,
+        energy_budget_uj: args.f64_or("energy-budget", f64::INFINITY),
+        ..d
+    };
+    match parse_hidden(args) {
+        Ok(h) => spec.hidden = h,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
+    if let Some(names) = args.get("scheme") {
+        let mut schemes = Vec::new();
+        for name in names.split(',') {
+            match QuantScheme::parse(name.trim()) {
+                Some(s) => schemes.push(s),
+                None => {
+                    eprintln!("unknown scheme: {name}");
+                    return 1;
+                }
+            }
+        }
+        spec.schemes = schemes;
+    }
+    if let Some(b) = args.get("backend") {
+        match BackendKind::parse(b) {
+            Some(b) => spec.backend = b,
+            None => {
+                eprintln!("unknown backend: {b} (use fast|hw)");
+                return 1;
+            }
+        }
+    }
+    println!(
+        "fleet: {} sessions x {} steps (quantum {}, shift at {}) on the {} backend...",
+        spec.sessions,
+        spec.steps,
+        spec.quantum,
+        spec.shift_at,
+        spec.backend.name()
+    );
+    let run = match run_fleet(&spec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let mut t = Table::new(
+        "fleet outcome",
+        &["robot", "workload", "scheme", "steps", "energy[uJ]", "shifts", "ckpt[B]", "final val"],
+    );
+    for s in &run.sessions {
+        t.row(vec![
+            s.id.clone(),
+            s.workload.clone(),
+            s.scheme.clone(),
+            s.steps.to_string(),
+            format!("{:.1}", s.energy_uj),
+            s.shifts.to_string(),
+            s.payload_bytes.to_string(),
+            format!("{:.4}", s.final_val),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\neffective throughput: {} steps over {:.2}s = {:.0} steps/s across the fleet",
+        run.stats.total_steps,
+        run.stats.wall_s,
+        run.stats.steps_per_sec()
+    );
+    if let Some(a) = &run.adapt {
+        let reached = a
+            .adapt_steps_to_target
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "never".to_string());
+        println!(
+            "adaptation ({} / {}): checkpoint-resume reached the {}-step scratch loss \
+             ({:.4}) after {} steps -> {}",
+            a.workload,
+            a.scheme,
+            a.steps,
+            a.target_loss,
+            reached,
+            if a.adapt_beats_scratch { "adaptation wins" } else { "no win" },
+        );
+    }
+    match save_json(&run.report, "fleet_report") {
+        Ok(p) => println!("[saved {}]", p.display()),
+        Err(e) => {
+            eprintln!("[json save failed: {e}]");
+            return 1;
+        }
     }
     0
 }
@@ -155,15 +307,12 @@ fn cmd_train(args: &Args) -> i32 {
         return 1;
     };
     let steps = args.usize_or("steps", 400);
-    let dims = match args.get("hidden") {
-        None => None,
-        Some(h) => match h.parse::<usize>() {
-            Ok(h) if h > 0 => Some(vec![32, h, h, h, 32]),
-            _ => {
-                eprintln!("invalid --hidden: {h} (positive integer expected)");
-                return 1;
-            }
-        },
+    let dims = match parse_hidden(args) {
+        Ok(h) => h.map(crate::trainer::mlp::hidden_dims),
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
     };
     let ds = Dataset::collect(env.as_ref(), 30, 100, 0x7EA1);
     let session = TrainSession::try_new(
@@ -319,5 +468,29 @@ mod tests {
     #[test]
     fn info_mentions_grid() {
         assert!(info_text().contains("4096"));
+    }
+
+    #[test]
+    fn repro_accepts_multiple_ids_and_rejects_unknown() {
+        assert_eq!(run_cli(&argv("repro nope")), 1);
+        assert_eq!(run_cli(&argv("repro table2 nope")), 1, "any unknown id fails the run");
+        // two cheap analytic artefacts in one invocation (the CI
+        // repro-smoke shape: `repro table2 table3`)
+        assert_eq!(run_cli(&argv("repro table2 table3")), 0);
+    }
+
+    #[test]
+    fn fleet_command_runs_small() {
+        let code = run_cli(&argv(
+            "fleet --sessions 2 --steps 8 --quantum 3 --shift-at 4 --hidden 8 --eval-every 4",
+        ));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn fleet_rejects_bad_flags() {
+        assert_eq!(run_cli(&argv("fleet --scheme nope")), 1);
+        assert_eq!(run_cli(&argv("fleet --backend warp")), 1);
+        assert_eq!(run_cli(&argv("fleet --hidden 0")), 1);
     }
 }

@@ -1,0 +1,34 @@
+//! The continual-learning fleet layer: many robots, one machine.
+//!
+//! The paper's premise is *continual* learning at the edge — Dacapo-class
+//! processors retrain on-device as the environment shifts. This module
+//! scales that premise out: a [`FleetScheduler`] multiplexes many
+//! concurrent [`crate::trainer::TrainSession`]s ("robots") over the
+//! [`crate::util::par`] worker pool in round-robin step quanta, each
+//! session carrying its own step/energy budget (priced by
+//! [`crate::trainer::budget::step_cost`], plus the measured
+//! [`crate::backend::HwCostReport`] ledger on the hardware backend) and
+//! its own queue of **domain-shift events**. When a shift fires, the
+//! session checkpoints (MX-native, square groups single-copy —
+//! [`crate::trainer::checkpoint`]), the dataset is swapped for the
+//! perturbed-physics variant ([`crate::workloads::shifted_by_name`]),
+//! and training resumes *from the checkpoint* — demonstrating adaptation
+//! instead of retraining from scratch, which [`report::adapt_vs_retrain`]
+//! quantifies head-to-head.
+//!
+//! Determinism: sessions are mutually independent and internally seeded,
+//! so a fleet run is bit-identical to running its sessions one at a time
+//! (asserted by `scheduler::tests`), and block-level parallelism inside
+//! each session degrades to serial on fleet workers (no nested forks).
+//!
+//! Entry points: `mxscale fleet` (CLI), `examples/fleet_adapt.rs`, and
+//! [`report::run_fleet`] which both share — it writes
+//! `results/fleet_report.json`.
+
+pub mod report;
+pub mod scheduler;
+
+pub use report::{adapt_vs_retrain, run_fleet, AdaptComparison, FleetRun, FleetSpec, SessionSummary};
+pub use scheduler::{
+    DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget, ShiftRecord,
+};

@@ -1,0 +1,409 @@
+//! Fleet experiment runner + `results/fleet_report.json` emission.
+
+use crate::backend::BackendKind;
+use crate::fleet::scheduler::{DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget};
+use crate::mx::element::ElementFormat;
+use crate::trainer::checkpoint::{grouping_footprint, image_bytes, weight_payload, Checkpoint};
+use crate::trainer::qat::QuantScheme;
+use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
+use crate::util::json::Json;
+use crate::util::par;
+use crate::workloads::{by_name, shifted_by_name, Dataset, ALL_WORKLOADS};
+
+/// Parameters of one fleet run (CLI defaults in [`Default`]).
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// Concurrent sessions; session `i` trains workload `i % 4` under
+    /// scheme `(i / 4) % schemes.len()`.
+    pub sessions: usize,
+    pub schemes: Vec<QuantScheme>,
+    pub backend: BackendKind,
+    /// Per-session step budget (includes post-shift adaptation steps).
+    pub steps: usize,
+    /// Round-robin quantum (steps per session per round).
+    pub quantum: usize,
+    /// Step at which every session's environment shifts (0 disables).
+    pub shift_at: usize,
+    /// Hidden width override (`None` = the paper MLP).
+    pub hidden: Option<usize>,
+    /// Dataset size: rollout episodes × horizon.
+    pub episodes: usize,
+    pub horizon: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub eval_every: usize,
+    /// Per-session energy ceiling [uJ] (`INFINITY` = step-bounded only).
+    pub energy_budget_uj: f64,
+    pub seed: u64,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        Self {
+            sessions: 8,
+            schemes: vec![
+                QuantScheme::MxSquare(ElementFormat::Int8),
+                QuantScheme::MxSquare(ElementFormat::E4M3),
+            ],
+            backend: BackendKind::Fast,
+            steps: 280,
+            quantum: 16,
+            shift_at: 140,
+            hidden: None,
+            episodes: 10,
+            horizon: 60,
+            batch: 32,
+            lr: 1e-3,
+            eval_every: 20,
+            energy_budget_uj: f64::INFINITY,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+/// Adaptation-from-checkpoint vs retrain-from-scratch, stepped in
+/// lockstep on the same shifted dataset.
+#[derive(Debug, Clone)]
+pub struct AdaptComparison {
+    pub workload: String,
+    pub scheme: String,
+    /// Steps both contenders were given.
+    pub steps: usize,
+    /// The scratch run's final validation loss — the bar to clear.
+    pub target_loss: f64,
+    /// (steps-since-shift, val-loss) for the checkpoint-resumed session.
+    pub adapt_curve: Vec<(usize, f64)>,
+    /// Same sampling for the from-scratch session.
+    pub scratch_curve: Vec<(usize, f64)>,
+    /// First sampled step at which the adapting session met the target.
+    pub adapt_steps_to_target: Option<usize>,
+    /// Whether adaptation reached the scratch final loss in strictly
+    /// fewer steps — the continual-learning payoff.
+    pub adapt_beats_scratch: bool,
+}
+
+/// Race a checkpoint-resumed session against a from-scratch session on
+/// a shifted dataset for `steps` steps, sampling every `eval_every`.
+pub fn adapt_vs_retrain(
+    ck: &Checkpoint,
+    shifted: &Dataset,
+    steps: usize,
+    eval_every: usize,
+) -> Result<AdaptComparison, TrainError> {
+    let eval_every = eval_every.clamp(1, steps.max(1));
+    let mut adapt = TrainSession::resume(shifted.clone(), ck)?;
+    let mut scratch = TrainSession::try_new(shifted.clone(), ck.config.clone())?;
+    let mut adapt_curve = vec![(0usize, adapt.val_loss())];
+    let mut scratch_curve = vec![(0usize, scratch.val_loss())];
+    for i in 1..=steps {
+        adapt.step_once();
+        scratch.step_once();
+        if i % eval_every == 0 || i == steps {
+            adapt_curve.push((i, adapt.val_loss()));
+            scratch_curve.push((i, scratch.val_loss()));
+        }
+    }
+    let target_loss = scratch_curve.last().map(|&(_, v)| v).unwrap_or(f64::INFINITY);
+    let adapt_steps_to_target =
+        adapt_curve.iter().find(|&&(_, v)| v <= target_loss).map(|&(s, _)| s);
+    let adapt_beats_scratch = adapt_steps_to_target.is_some_and(|s| s < steps);
+    Ok(AdaptComparison {
+        workload: shifted.name.to_string(),
+        scheme: ck.config.scheme.name(),
+        steps,
+        target_loss,
+        adapt_curve,
+        scratch_curve,
+        adapt_steps_to_target,
+        adapt_beats_scratch,
+    })
+}
+
+/// Per-session outcome summary (for tables and JSON).
+#[derive(Debug, Clone)]
+pub struct SessionSummary {
+    pub id: String,
+    pub workload: String,
+    pub scheme: String,
+    pub backend: String,
+    pub steps: usize,
+    pub energy_uj: f64,
+    /// Measured accelerator energy when the hardware backend ran [uJ].
+    pub hw_energy_uj: Option<f64>,
+    pub final_val: f64,
+    pub shifts: usize,
+    /// MX weight-image bytes of this session's checkpoint.
+    pub payload_bytes: usize,
+}
+
+/// Everything a fleet run produced.
+pub struct FleetRun {
+    pub stats: FleetStats,
+    pub sessions: Vec<SessionSummary>,
+    pub adapt: Option<AdaptComparison>,
+    /// The `results/fleet_report.json` document.
+    pub report: Json,
+}
+
+fn curve_json(curve: &[(usize, f64)]) -> Json {
+    let mut arr = Json::arr();
+    for &(s, v) in curve {
+        arr = arr.push(Json::arr().push(s).push(v));
+    }
+    arr
+}
+
+/// Build and run a fleet per `spec`, then analyze adaptation and
+/// assemble the report document. The caller decides where to save it
+/// (the CLI writes `results/fleet_report.json`).
+pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
+    if spec.sessions == 0 || spec.schemes.is_empty() {
+        return Err(TrainError::BadConfig {
+            reason: "fleet needs at least one session and one scheme".into(),
+        });
+    }
+    let dims = spec.hidden.map(crate::trainer::mlp::hidden_dims);
+    let mut sched = FleetScheduler::new(spec.quantum);
+    for i in 0..spec.sessions {
+        let workload = ALL_WORKLOADS[i % ALL_WORKLOADS.len()];
+        let scheme = spec.schemes[(i / ALL_WORKLOADS.len()) % spec.schemes.len()];
+        let env = by_name(workload).expect("known workload");
+        let ds = Dataset::collect(env.as_ref(), spec.episodes, spec.horizon, spec.seed + i as u64);
+        let config = TrainConfig {
+            scheme,
+            backend: spec.backend,
+            dims: dims.clone(),
+            batch_size: spec.batch,
+            lr: spec.lr,
+            steps: spec.steps,
+            eval_every: spec.eval_every,
+            seed: spec.seed ^ ((i as u64 + 1) << 8),
+        };
+        let shifts = if spec.shift_at > 0 && spec.shift_at < spec.steps {
+            let senv = shifted_by_name(workload).expect("known workload");
+            let shift_seed = spec.seed + 104_729 + i as u64;
+            let sds = Dataset::collect(senv.as_ref(), spec.episodes, spec.horizon, shift_seed);
+            vec![DomainShift {
+                at_step: spec.shift_at,
+                label: format!("{workload}-shifted"),
+                dataset: sds,
+            }]
+        } else {
+            Vec::new()
+        };
+        let budget =
+            SessionBudget { max_steps: spec.steps, max_energy_uj: spec.energy_budget_uj };
+        let id = format!("robot-{i:02}");
+        sched.push(FleetSession::new(id, workload, ds, config, budget, shifts)?);
+    }
+
+    let stats = sched.run();
+
+    // adaptation-vs-retrain: replay the first shifted session's
+    // checkpoint against a scratch run on its shifted dataset
+    let adapt = match sched.sessions().iter().find(|s| !s.shift_log.is_empty()) {
+        Some(s) => {
+            let rec = &s.shift_log[0];
+            let window = spec.steps.saturating_sub(rec.at_step).max(1);
+            Some(adapt_vs_retrain(
+                &rec.checkpoint,
+                &s.session().dataset,
+                window,
+                spec.eval_every,
+            )?)
+        }
+        None => None,
+    };
+
+    let sessions: Vec<SessionSummary> = sched
+        .sessions()
+        .iter()
+        .map(|s| {
+            let payload_bytes = s.shift_log.first().map(|r| r.payload_bytes).unwrap_or_else(|| {
+                // quantize the weight image alone — no need to clone the
+                // whole trainer sidecar just to size the MX payload
+                let scheme = s.session().config.scheme;
+                image_bytes(&weight_payload(&s.session().mlp.weights, scheme))
+            });
+            SessionSummary {
+                id: s.id.clone(),
+                workload: s.workload.clone(),
+                scheme: s.session().config.scheme.name(),
+                backend: s.session().config.backend.name().to_string(),
+                steps: s.steps_done(),
+                energy_uj: s.energy_uj,
+                hw_energy_uj: s.hw_measured_uj(),
+                final_val: s.session().val_loss(),
+                shifts: s.shift_log.len(),
+                payload_bytes,
+            }
+        })
+        .collect();
+
+    // checkpoint-footprint comparison on a representative weight stack
+    let rep = &sched.sessions()[0];
+    let rep_fmt = rep.session().config.scheme.element().unwrap_or(ElementFormat::Int8);
+    let (square_bytes, vector_bytes) = grouping_footprint(&rep.session().mlp.weights, rep_fmt);
+
+    let mut spec_json = Json::obj()
+        .set("sessions", spec.sessions)
+        .set("quantum", spec.quantum)
+        .set("steps", spec.steps)
+        .set("shift_at", spec.shift_at)
+        .set("backend", spec.backend.name())
+        .set("workers", par::threads());
+    let mut scheme_arr = Json::arr();
+    for s in &spec.schemes {
+        scheme_arr = scheme_arr.push(s.name());
+    }
+    spec_json = spec_json.set("schemes", scheme_arr);
+
+    let stats_json = Json::obj()
+        .set("rounds", stats.rounds)
+        .set("total_steps", stats.total_steps)
+        .set("wall_s", stats.wall_s)
+        .set("eff_steps_per_sec", stats.steps_per_sec());
+
+    let mut sess_arr = Json::arr();
+    for (s, fs) in sessions.iter().zip(sched.sessions()) {
+        let mut shifts = Json::arr();
+        for r in &fs.shift_log {
+            shifts = shifts.push(
+                Json::obj()
+                    .set("at_step", r.at_step)
+                    .set("label", r.label.clone())
+                    .set("payload_bytes", r.payload_bytes)
+                    .set("total_bytes", r.total_bytes)
+                    .set("val_before", r.val_before),
+            );
+        }
+        let mut o = Json::obj()
+            .set("id", s.id.clone())
+            .set("workload", s.workload.clone())
+            .set("scheme", s.scheme.clone())
+            .set("backend", s.backend.clone())
+            .set("steps", s.steps)
+            .set("energy_uj", s.energy_uj)
+            .set("final_val", s.final_val)
+            .set("ckpt_payload_bytes", s.payload_bytes)
+            .set("shifts", shifts);
+        if let Some(uj) = s.hw_energy_uj {
+            o = o.set("hw_measured_uj", uj);
+        }
+        sess_arr = sess_arr.push(o);
+    }
+
+    let ckpt_json = Json::obj()
+        .set("element", rep_fmt.name())
+        .set("square_single_copy_bytes", square_bytes)
+        .set("vector_two_copy_bytes", vector_bytes)
+        .set("reduction_pct", 100.0 * (1.0 - square_bytes as f64 / vector_bytes as f64));
+
+    let adapt_json = match &adapt {
+        Some(a) => Json::obj()
+            .set("workload", a.workload.clone())
+            .set("scheme", a.scheme.clone())
+            .set("steps", a.steps)
+            .set("target_loss", a.target_loss)
+            .set(
+                "adapt_steps_to_target",
+                a.adapt_steps_to_target.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("adapt_beats_scratch", a.adapt_beats_scratch)
+            .set("adapt_curve", curve_json(&a.adapt_curve))
+            .set("scratch_curve", curve_json(&a.scratch_curve)),
+        None => Json::Null,
+    };
+
+    let report = Json::obj()
+        .set("spec", spec_json)
+        .set("stats", stats_json)
+        .set("sessions", sess_arr)
+        .set("checkpoint_footprint", ckpt_json)
+        .set("adaptation", adapt_json);
+
+    Ok(FleetRun { stats, sessions, adapt, report })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptation_from_checkpoint_beats_retrain_from_scratch() {
+        // phase A: learn nominal cartpole dynamics, then shift the
+        // physics and race checkpoint-adaptation against scratch.
+        let env = by_name("cartpole").unwrap();
+        let ds = Dataset::collect(env.as_ref(), 8, 50, 0xADA17);
+        let mut phase_a = TrainSession::new(
+            ds,
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+                dims: Some(vec![32, 48, 48, 32]),
+                steps: 0,
+                lr: 2e-3,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        for _ in 0..200 {
+            phase_a.step_once();
+        }
+        let ck = phase_a.save_checkpoint();
+        let senv = shifted_by_name("cartpole").unwrap();
+        let shifted = Dataset::collect(senv.as_ref(), 8, 50, 0xADB17);
+        let cmp = adapt_vs_retrain(&ck, &shifted, 120, 10).unwrap();
+        assert_eq!(cmp.adapt_curve.len(), cmp.scratch_curve.len());
+        assert!(
+            cmp.adapt_beats_scratch,
+            "adapt should reach the scratch loss early: target {} adapt_curve {:?}",
+            cmp.target_loss, cmp.adapt_curve
+        );
+        let reached = cmp.adapt_steps_to_target.unwrap();
+        assert!(reached < 120, "reached at {reached}");
+    }
+
+    #[test]
+    fn run_fleet_produces_full_report() {
+        let spec = FleetSpec {
+            sessions: 8,
+            steps: 24,
+            quantum: 7,
+            shift_at: 12,
+            hidden: Some(16),
+            episodes: 3,
+            horizon: 30,
+            eval_every: 6,
+            ..Default::default()
+        };
+        let run = run_fleet(&spec).unwrap();
+        assert_eq!(run.sessions.len(), 8);
+        assert_eq!(run.stats.total_steps, 8 * 24);
+        for s in &run.sessions {
+            assert_eq!(s.steps, 24);
+            assert_eq!(s.shifts, 1, "{}", s.id);
+            assert!(s.payload_bytes > 0);
+            assert!(s.final_val.is_finite());
+        }
+        let adapt = run.adapt.as_ref().expect("shifted fleet must analyze adaptation");
+        assert_eq!(adapt.steps, 12);
+        let text = run.report.pretty();
+        for key in [
+            "\"spec\"",
+            "\"stats\"",
+            "\"sessions\"",
+            "\"checkpoint_footprint\"",
+            "\"adaptation\"",
+            "\"eff_steps_per_sec\"",
+            "\"square_single_copy_bytes\"",
+        ] {
+            assert!(text.contains(key), "missing {key} in report");
+        }
+    }
+
+    #[test]
+    fn run_fleet_rejects_empty_spec() {
+        let spec = FleetSpec { sessions: 0, ..Default::default() };
+        assert!(matches!(run_fleet(&spec), Err(TrainError::BadConfig { .. })));
+    }
+}

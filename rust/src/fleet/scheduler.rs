@@ -1,0 +1,432 @@
+//! Round-robin multiplexing of training sessions over the worker pool.
+
+use crate::trainer::budget::step_cost_for;
+use crate::trainer::checkpoint::Checkpoint;
+use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
+use crate::util::par;
+use crate::workloads::Dataset;
+use std::time::Instant;
+
+/// What a fleet session is allowed to consume before it parks.
+#[derive(Debug, Clone, Copy)]
+pub struct SessionBudget {
+    /// Training-step ceiling.
+    pub max_steps: usize,
+    /// Accelerator-energy ceiling [uJ], priced per step by the analytic
+    /// model ([`step_cost_for`]); `f64::INFINITY` disables it.
+    pub max_energy_uj: f64,
+}
+
+impl SessionBudget {
+    /// Step budget only.
+    pub fn steps(max_steps: usize) -> Self {
+        Self { max_steps, max_energy_uj: f64::INFINITY }
+    }
+}
+
+/// A scheduled environment change: at `at_step`, the session checkpoints
+/// and resumes on `dataset`.
+#[derive(Debug, Clone)]
+pub struct DomainShift {
+    pub at_step: usize,
+    pub label: String,
+    pub dataset: Dataset,
+}
+
+/// What happened at one domain-shift event.
+#[derive(Debug, Clone)]
+pub struct ShiftRecord {
+    pub at_step: usize,
+    pub label: String,
+    /// Bytes of the MX weight image in the shift checkpoint.
+    pub payload_bytes: usize,
+    /// Bytes of the full serialized checkpoint file.
+    pub total_bytes: usize,
+    /// Validation loss of the pre-shift model on the *new* dataset —
+    /// how much the domain shift broke the model.
+    pub val_before: f64,
+    /// The checkpoint taken at the shift (kept for adapt-vs-retrain
+    /// analysis; not serialized into reports).
+    pub checkpoint: Checkpoint,
+}
+
+/// One robot: a training session plus its budget and shift schedule.
+pub struct FleetSession {
+    pub id: String,
+    pub workload: String,
+    session: TrainSession,
+    pub budget: SessionBudget,
+    /// Pending shifts, ascending by `at_step`.
+    shifts: Vec<DomainShift>,
+    /// Analytic energy consumed so far [uJ].
+    pub energy_uj: f64,
+    /// Per-step energy price under this session's scheme [uJ].
+    pub step_uj: f64,
+    pub shift_log: Vec<ShiftRecord>,
+    /// Measured hw-backend energy of completed (pre-shift) segments
+    /// [uJ] — the checkpoint does not carry the cost ledger, so the
+    /// scheduler accumulates it across resumes itself.
+    hw_uj_carried: f64,
+    /// Steps executed in the most recent quantum (scheduler bookkeeping).
+    last_ran: usize,
+}
+
+impl FleetSession {
+    pub fn new(
+        id: impl Into<String>,
+        workload: impl Into<String>,
+        dataset: Dataset,
+        config: TrainConfig,
+        budget: SessionBudget,
+        mut shifts: Vec<DomainShift>,
+    ) -> Result<Self, TrainError> {
+        shifts.sort_by_key(|s| s.at_step);
+        let session = TrainSession::try_new(dataset, config)?;
+        // price steps for the *actual* MLP shape (dims-aware, so a
+        // --hidden override doesn't get billed for the paper MLP)
+        let step_uj = step_cost_for(
+            session.config.scheme,
+            session.config.batch_size,
+            session.dims(),
+        )
+        .microjoules;
+        // shift datasets must fit the session's IO widths — reject now
+        // instead of panicking when the shift fires mid-run
+        let (din, dout) = (session.dims()[0], *session.dims().last().unwrap());
+        for s in &shifts {
+            if s.dataset.train_x.cols != din || s.dataset.train_y.cols != dout {
+                return Err(TrainError::BadConfig {
+                    reason: format!(
+                        "shift `{}` dataset is {}/{} wide, session expects {din}/{dout}",
+                        s.label, s.dataset.train_x.cols, s.dataset.train_y.cols
+                    ),
+                });
+            }
+        }
+        Ok(Self {
+            id: id.into(),
+            workload: workload.into(),
+            session,
+            budget,
+            shifts,
+            energy_uj: 0.0,
+            step_uj,
+            shift_log: Vec::new(),
+            hw_uj_carried: 0.0,
+            last_ran: 0,
+        })
+    }
+
+    /// The wrapped session (read access for reports).
+    pub fn session(&self) -> &TrainSession {
+        &self.session
+    }
+
+    /// Steps completed so far.
+    pub fn steps_done(&self) -> usize {
+        self.session.step_count()
+    }
+
+    /// Whether some budget dimension is exhausted (the session parks).
+    pub fn done(&self) -> bool {
+        self.steps_done() >= self.budget.max_steps || self.energy_uj >= self.budget.max_energy_uj
+    }
+
+    /// Measured accelerator energy across every segment of this session
+    /// [uJ] — resume replaces the backend (and its ledger), so pre-shift
+    /// segments are summed from `hw_uj_carried`. None on the fast
+    /// backend, which measures nothing.
+    pub fn hw_measured_uj(&self) -> Option<f64> {
+        self.session.hw_report().map(|r| r.uj_total() + self.hw_uj_carried)
+    }
+
+    /// Fire a pending shift scheduled at (or before) the current step:
+    /// checkpoint, swap the dataset, resume from the checkpoint.
+    fn fire_shift(&mut self, shift: DomainShift) {
+        // bank the finished segment's measured ledger before the
+        // resumed session starts a fresh one
+        if let Some(r) = self.session.hw_report() {
+            self.hw_uj_carried += r.uj_total();
+        }
+        let ck = self.session.save_checkpoint();
+        let resumed = TrainSession::resume(shift.dataset, &ck)
+            .expect("checkpoint was taken from a valid session");
+        let val_before = resumed.val_loss();
+        self.shift_log.push(ShiftRecord {
+            at_step: shift.at_step,
+            label: shift.label,
+            payload_bytes: ck.payload_bytes(),
+            total_bytes: ck.to_bytes().len(),
+            val_before,
+            checkpoint: ck,
+        });
+        self.session = resumed;
+    }
+
+    /// Run up to `quantum` training steps, honoring budgets and firing
+    /// due shifts. Returns the steps actually executed.
+    pub fn run_quantum(&mut self, quantum: usize) -> usize {
+        let mut ran = 0;
+        while ran < quantum && !self.done() {
+            if self.shifts.first().is_some_and(|s| self.steps_done() >= s.at_step) {
+                let shift = self.shifts.remove(0);
+                self.fire_shift(shift);
+                continue;
+            }
+            self.session.step_once();
+            self.energy_uj += self.step_uj;
+            ran += 1;
+        }
+        self.last_ran = ran;
+        ran
+    }
+}
+
+/// Aggregate outcome of a fleet run.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetStats {
+    /// Round-robin passes that made progress.
+    pub rounds: usize,
+    /// Training steps executed across all sessions.
+    pub total_steps: usize,
+    /// Host wall-clock of the run [s].
+    pub wall_s: f64,
+}
+
+impl FleetStats {
+    /// Effective fleet throughput [training steps / host second].
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_steps as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Multiplexes [`FleetSession`]s over the worker pool: each round hands
+/// every live session one `quantum` of steps, sessions running
+/// concurrently (they share nothing), rounds repeating until every
+/// budget is exhausted.
+pub struct FleetScheduler {
+    pub quantum: usize,
+    sessions: Vec<FleetSession>,
+}
+
+impl FleetScheduler {
+    pub fn new(quantum: usize) -> Self {
+        Self { quantum: quantum.max(1), sessions: Vec::new() }
+    }
+
+    pub fn push(&mut self, session: FleetSession) {
+        self.sessions.push(session);
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn sessions(&self) -> &[FleetSession] {
+        &self.sessions
+    }
+
+    /// One round-robin pass: every live session gets up to `quantum`
+    /// steps, sessions running in parallel. Returns total steps run.
+    pub fn run_round(&mut self) -> usize {
+        let quantum = self.quantum;
+        par::par_chunks_mut(&mut self.sessions, 1, 2, |_, chunk| {
+            chunk[0].run_quantum(quantum);
+        });
+        self.sessions.iter().map(|s| s.last_ran).sum()
+    }
+
+    /// Round-robin until every session's budget is exhausted.
+    pub fn run(&mut self) -> FleetStats {
+        let t0 = Instant::now();
+        let mut rounds = 0;
+        let mut total_steps = 0;
+        loop {
+            let ran = self.run_round();
+            if ran == 0 {
+                break;
+            }
+            rounds += 1;
+            total_steps += ran;
+        }
+        FleetStats { rounds, total_steps, wall_s: t0.elapsed().as_secs_f64() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::mx::element::ElementFormat;
+    use crate::trainer::qat::QuantScheme;
+    use crate::workloads::{by_name, shifted_by_name};
+
+    fn quick_dataset(name: &str, seed: u64) -> Dataset {
+        let env = by_name(name).unwrap();
+        Dataset::collect(env.as_ref(), 4, 40, seed)
+    }
+
+    fn quick_config(scheme: QuantScheme, steps: usize) -> TrainConfig {
+        TrainConfig {
+            scheme,
+            dims: Some(vec![32, 24, 32]),
+            steps,
+            eval_every: 10,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_is_bit_identical_to_standalone_sessions() {
+        let schemes = [
+            QuantScheme::Fp32,
+            QuantScheme::MxSquare(ElementFormat::Int8),
+            QuantScheme::MxSquare(ElementFormat::E4M3),
+        ];
+        // standalone reference runs
+        let reference: Vec<f64> = schemes
+            .iter()
+            .map(|&scheme| {
+                let mut s =
+                    TrainSession::new(quick_dataset("cartpole", 7), quick_config(scheme, 30));
+                for _ in 0..30 {
+                    s.step_once();
+                }
+                s.val_loss()
+            })
+            .collect();
+        // the same runs through the round-robin scheduler
+        let mut sched = FleetScheduler::new(4);
+        for (i, &scheme) in schemes.iter().enumerate() {
+            sched.push(
+                FleetSession::new(
+                    format!("robot-{i}"),
+                    "cartpole",
+                    quick_dataset("cartpole", 7),
+                    quick_config(scheme, 30),
+                    SessionBudget::steps(30),
+                    Vec::new(),
+                )
+                .unwrap(),
+            );
+        }
+        let stats = sched.run();
+        assert_eq!(stats.total_steps, 90);
+        assert_eq!(stats.rounds, 30usize.div_ceil(4));
+        for (s, want) in sched.sessions().iter().zip(&reference) {
+            assert_eq!(s.steps_done(), 30);
+            assert_eq!(s.session().val_loss(), *want, "{}", s.id);
+        }
+    }
+
+    #[test]
+    fn energy_budget_parks_a_session_early() {
+        let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+        // priced for the session's actual dims, not the paper MLP
+        let per_step = step_cost_for(scheme, 32, &[32, 24, 32]).microjoules;
+        let budget = SessionBudget {
+            max_steps: 1000,
+            max_energy_uj: per_step * 7.5, // room for exactly 8 steps
+        };
+        let mut s = FleetSession::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 1),
+            quick_config(scheme, 1000),
+            budget,
+            Vec::new(),
+        )
+        .unwrap();
+        let ran = s.run_quantum(100);
+        assert_eq!(ran, 8, "energy ceiling must stop the quantum");
+        assert!(s.done());
+        assert_eq!(s.run_quantum(100), 0);
+    }
+
+    #[test]
+    fn mismatched_shift_dataset_is_rejected_at_construction() {
+        let mut bad = quick_dataset("cartpole", 3);
+        bad.train_y.cols = 16; // deliberately malformed target width
+        let r = FleetSession::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 3),
+            quick_config(QuantScheme::Fp32, 10),
+            SessionBudget::steps(10),
+            vec![DomainShift { at_step: 5, label: "bad".into(), dataset: bad }],
+        );
+        assert!(matches!(r, Err(TrainError::BadConfig { .. })));
+    }
+
+    #[test]
+    fn domain_shift_checkpoints_and_resumes() {
+        let shifted_env = shifted_by_name("cartpole").unwrap();
+        let shifted = Dataset::collect(shifted_env.as_ref(), 4, 40, 9);
+        let mut s = FleetSession::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 9),
+            quick_config(QuantScheme::MxSquare(ElementFormat::Int8), 40),
+            SessionBudget::steps(40),
+            vec![DomainShift { at_step: 20, label: "heavier-pole".into(), dataset: shifted }],
+        )
+        .unwrap();
+        while s.run_quantum(6) > 0 {}
+        assert_eq!(s.steps_done(), 40);
+        assert_eq!(s.shift_log.len(), 1);
+        let rec = &s.shift_log[0];
+        assert_eq!(rec.at_step, 20);
+        assert_eq!(rec.checkpoint.step, 20);
+        assert!(rec.payload_bytes > 0, "square MX image must be present");
+        assert!(rec.total_bytes > rec.payload_bytes);
+        assert!(rec.val_before.is_finite());
+        // the session now trains the shifted dataset, curves intact
+        assert_eq!(s.session().dataset.name, "cartpole");
+        assert!(s.session().train_curve.iter().any(|&(step, _)| step < 20));
+        assert!(s.session().train_curve.iter().any(|&(step, _)| step >= 20));
+        // fast backend measures nothing
+        assert!(s.hw_measured_uj().is_none());
+    }
+
+    #[test]
+    fn hw_measured_energy_carries_across_a_shift() {
+        // resume replaces the hw backend (fresh cost ledger); the fleet
+        // session must keep accounting the pre-shift segment
+        let shifted_env = shifted_by_name("cartpole").unwrap();
+        let shifted = Dataset::collect(shifted_env.as_ref(), 3, 30, 11);
+        let config = TrainConfig {
+            scheme: QuantScheme::MxSquare(ElementFormat::E2M1),
+            backend: BackendKind::Hardware,
+            dims: Some(vec![32, 8, 32]),
+            batch_size: 8,
+            steps: 8,
+            eval_every: usize::MAX,
+            ..Default::default()
+        };
+        let mut s = FleetSession::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 11),
+            config,
+            SessionBudget::steps(8),
+            vec![DomainShift { at_step: 4, label: "shift".into(), dataset: shifted }],
+        )
+        .unwrap();
+        while s.run_quantum(3) > 0 {}
+        assert_eq!(s.steps_done(), 8);
+        let total = s.hw_measured_uj().unwrap();
+        let post_shift_only = s.session().hw_report().unwrap().uj_total();
+        assert!(
+            total > post_shift_only && post_shift_only > 0.0,
+            "pre-shift ledger must be carried: total {total} vs post-shift {post_shift_only}"
+        );
+    }
+}

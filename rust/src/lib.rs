@@ -28,6 +28,15 @@
 //! * [`trainer`] — the continual-learning loop: MX quantization-aware
 //!   training of the 4-layer dynamics MLP, with per-step latency/energy
 //!   accounting on the simulated hardware; regenerates Figs. 2 and 8.
+//!   Sessions checkpoint MX-natively ([`trainer::checkpoint`]): the
+//!   quantized weight image (square groups single-copy on disk) plus a
+//!   bit-exact FP32 master/optimizer sidecar.
+//! * [`fleet`] — the multi-tenant continual-learning layer: a
+//!   round-robin scheduler multiplexing many concurrent sessions
+//!   ("robots") over the worker pool with per-session step/energy
+//!   budgets and mid-run domain-shift events, where sessions adapt from
+//!   their checkpoint instead of retraining (`mxscale fleet`,
+//!   `results/fleet_report.json`).
 //! * [`backend`] — the pluggable `ExecBackend` seam between the trainer
 //!   and the hardware model: the fast buffer-reusing fake-quant path and
 //!   the bit-exact `GemmCore` path produce bit-identical training-graph
@@ -54,6 +63,7 @@ pub mod arith;
 pub mod backend;
 pub mod coordinator;
 pub mod energy;
+pub mod fleet;
 pub mod gemmcore;
 pub mod mx;
 pub mod pearray;

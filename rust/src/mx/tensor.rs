@@ -11,6 +11,7 @@
 
 use crate::mx::block::{quantize_block, ScaledBlock};
 use crate::mx::element::ElementFormat;
+use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::mat::Mat;
 use crate::util::par;
 
@@ -291,6 +292,86 @@ impl MxTensor {
         assert_eq!(self.layout, Layout::Square8x8);
         &self.blocks[br * self.bcols + bc]
     }
+
+    /// Elements stored per block in this layout (including padding).
+    fn block_elems(layout: Layout) -> usize {
+        match layout {
+            Layout::Square8x8 => SQ_ELEMS,
+            Layout::Vector32 => VEC,
+        }
+    }
+
+    /// Serialize exactly as the hardware stores the tensor: a small
+    /// header, one scale byte per block, then the element codes
+    /// bit-packed at the format's width (8/6/4 bits). This is the MX
+    /// checkpoint payload — square tensors are written **once** and
+    /// serve both passes after load (the transpose stays a free block
+    /// permutation), the paper's single-copy storage on disk.
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        w.put_u8(match self.layout {
+            Layout::Vector32 => 0,
+            Layout::Square8x8 => 1,
+        });
+        let fmt_idx = crate::mx::ALL_ELEMENT_FORMATS
+            .iter()
+            .position(|f| *f == self.format)
+            .expect("format is one of the six");
+        w.put_u8(fmt_idx as u8);
+        w.put_u32(self.rows as u32);
+        w.put_u32(self.cols as u32);
+        for b in &self.blocks {
+            w.put_i8(b.scale_exp as i8);
+        }
+        let bits = self.format.bits();
+        w.put_packed(self.blocks.iter().flat_map(|b| b.codes.iter().copied()), bits);
+    }
+
+    /// Inverse of [`MxTensor::write_bytes`] — bit-exact: scales, codes,
+    /// and the block grid come back identical (`tests/checkpoint.rs`).
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<MxTensor, String> {
+        let layout = match r.get_u8()? {
+            0 => Layout::Vector32,
+            1 => Layout::Square8x8,
+            t => return Err(format!("unknown MxTensor layout tag {t}")),
+        };
+        let fmt_idx = r.get_u8()? as usize;
+        let format = *crate::mx::ALL_ELEMENT_FORMATS
+            .get(fmt_idx)
+            .ok_or_else(|| format!("unknown element-format index {fmt_idx}"))?;
+        let rows = r.get_u32()? as usize;
+        let cols = r.get_u32()? as usize;
+        let (brows, bcols) = match layout {
+            Layout::Square8x8 => (rows.div_ceil(SQ), cols.div_ceil(SQ)),
+            Layout::Vector32 => (rows, cols.div_ceil(VEC)),
+        };
+        let n_blocks = brows
+            .checked_mul(bcols)
+            .ok_or_else(|| format!("block grid overflow ({rows}x{cols})"))?;
+        // every block needs at least its scale byte — reject corrupt
+        // headers before allocating for them
+        if n_blocks > r.remaining() {
+            return Err(format!("{n_blocks} blocks exceed the {} bytes left", r.remaining()));
+        }
+        let mut scales = Vec::with_capacity(n_blocks);
+        for _ in 0..n_blocks {
+            scales.push(r.get_i8()? as i32);
+        }
+        let elems = Self::block_elems(layout);
+        let codes = r.get_packed(n_blocks * elems, format.bits())?;
+        let blocks = scales
+            .into_iter()
+            .zip(codes.chunks_exact(elems))
+            .map(|(scale_exp, c)| ScaledBlock { scale_exp, format, codes: c.to_vec() })
+            .collect();
+        Ok(MxTensor { rows, cols, format, layout, blocks, brows, bcols })
+    }
+
+    /// [`MxTensor::write_bytes`] into a fresh buffer.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        self.write_bytes(&mut w);
+        w.into_bytes()
+    }
 }
 
 #[cfg(test)]
@@ -401,6 +482,51 @@ mod tests {
             // error bounded by format resolution relative to tile max
             assert!(d.mse(&m) < m.max_abs() as f64 * m.max_abs() as f64 * 0.01);
         }
+    }
+
+    #[test]
+    fn byte_serialization_is_bit_exact_and_dense() {
+        for fmt in ALL_ELEMENT_FORMATS {
+            for layout in [Layout::Square8x8, Layout::Vector32] {
+                let m = wide_mat(13, 21, 0x5E1 + fmt.bits() as u64);
+                let q = MxTensor::quantize(&m, fmt, layout);
+                let bytes = q.to_bytes();
+                // header (10) + 1 scale byte/block + packed codes
+                let elems = q.blocks.len()
+                    * match layout {
+                        Layout::Square8x8 => SQ_ELEMS,
+                        Layout::Vector32 => VEC,
+                    };
+                let expect =
+                    10 + q.blocks.len() + (elems * fmt.bits() as usize).div_ceil(8);
+                assert_eq!(bytes.len(), expect, "{fmt:?} {layout:?} density");
+                let mut r = crate::util::bytes::ByteReader::new(&bytes);
+                let q2 = MxTensor::read_bytes(&mut r).unwrap();
+                assert_eq!(r.remaining(), 0);
+                assert_eq!(q2.blocks, q.blocks, "{fmt:?} {layout:?}");
+                let shape = |t: &MxTensor| (t.rows, t.cols, t.brows, t.bcols);
+                assert_eq!(shape(&q2), shape(&q));
+                assert_eq!(q2.dequantize().data, q.dequantize().data);
+            }
+        }
+    }
+
+    #[test]
+    fn byte_deserialization_rejects_garbage() {
+        let m = wide_mat(8, 8, 3);
+        let q = MxTensor::quantize(&m, ElementFormat::Int8, Layout::Square8x8);
+        let bytes = q.to_bytes();
+        // truncation
+        let mut r = crate::util::bytes::ByteReader::new(&bytes[..bytes.len() / 2]);
+        assert!(MxTensor::read_bytes(&mut r).is_err());
+        // bad layout tag
+        let mut bad = bytes.clone();
+        bad[0] = 9;
+        assert!(MxTensor::read_bytes(&mut crate::util::bytes::ByteReader::new(&bad)).is_err());
+        // bad format index
+        let mut bad = bytes;
+        bad[1] = 200;
+        assert!(MxTensor::read_bytes(&mut crate::util::bytes::ByteReader::new(&bad)).is_err());
     }
 
     #[test]

@@ -22,13 +22,15 @@ pub struct StepCost {
     pub microjoules: f64,
 }
 
-/// Hardware cost of one batch-32 training step of the paper MLP.
-pub fn step_cost(scheme: QuantScheme, batch: usize) -> StepCost {
+/// Hardware cost of one training step of an MLP with the given layer
+/// dims on the scheme's native accelerator (both cycle models are
+/// shape-parameterized).
+pub fn step_cost_for(scheme: QuantScheme, batch: usize, dims: &[usize]) -> StepCost {
     match scheme {
         QuantScheme::Fp32 => {
             // FP32 reference runs nowhere on these accelerators; cost it
             // as 4x INT8 time (4 bytes vs 1) on our core for context.
-            let c = train_step_cycles(batch, &PUSHER_DIMS, crate::mx::ElementFormat::Int8);
+            let c = train_step_cycles(batch, dims, crate::mx::ElementFormat::Int8);
             let m = EnergyModel::proposed();
             StepCost {
                 micros: 4.0 * c.micros(500.0),
@@ -36,19 +38,24 @@ pub fn step_cost(scheme: QuantScheme, batch: usize) -> StepCost {
             }
         }
         QuantScheme::MxSquare(f) | QuantScheme::MxVector(f) => {
-            let c = train_step_cycles(batch, &PUSHER_DIMS, f);
+            let c = train_step_cycles(batch, dims, f);
             let m = EnergyModel::proposed();
             StepCost { micros: c.micros(500.0), microjoules: m.core_run_pj(f, c.mul_ops) * 1e-6 }
         }
         QuantScheme::Dacapo(f) => {
             let arr = SystolicArray::dacapo();
-            let c = arr.train_step_cycles(batch, &PUSHER_DIMS, f);
+            let c = arr.train_step_cycles(batch, dims, f);
             StepCost {
                 micros: c.micros(500.0),
                 microjoules: EnergyModel::dacapo_run_pj(f, c.mul_ops) * 1e-6,
             }
         }
     }
+}
+
+/// [`step_cost_for`] on the paper MLP (batch-32 pusher shape).
+pub fn step_cost(scheme: QuantScheme, batch: usize) -> StepCost {
+    step_cost_for(scheme, batch, &PUSHER_DIMS)
 }
 
 /// What a budgeted run is limited by.
@@ -113,6 +120,17 @@ mod tests {
     use crate::mx::dacapo::DacapoFormat;
     use crate::mx::element::ElementFormat;
     use crate::workloads::by_name;
+
+    #[test]
+    fn step_cost_is_dims_aware() {
+        // a narrow MLP must be strictly cheaper per step than the paper
+        // MLP — the fleet prices --hidden sessions with their real shape
+        let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+        let small = step_cost_for(scheme, 32, &[32, 24, 32]);
+        let paper = step_cost(scheme, 32);
+        assert!(small.microjoules < paper.microjoules);
+        assert!(small.micros < paper.micros);
+    }
 
     #[test]
     fn step_costs_follow_table4() {

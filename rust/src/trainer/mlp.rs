@@ -11,6 +11,17 @@ use crate::util::rng::Pcg64;
 /// Layer dims of the paper's MLP.
 pub const MLP_DIMS: [usize; 5] = [32, 256, 256, 256, 32];
 
+/// The paper MLP's shape with a custom hidden width — same depth and IO
+/// widths, `hidden`-wide hidden layers (the CLI `--hidden` override,
+/// shared by `train` and `fleet`).
+pub fn hidden_dims(hidden: usize) -> Vec<usize> {
+    let mut dims = MLP_DIMS.to_vec();
+    for d in &mut dims[1..MLP_DIMS.len() - 1] {
+        *d = hidden;
+    }
+    dims
+}
+
 /// A fully-connected network (weights `[din, dout]`, row-major).
 #[derive(Debug, Clone)]
 pub struct Mlp {
@@ -212,6 +223,39 @@ impl Mlp {
         }
         assert_eq!(off, flat.len());
     }
+
+    /// Flatten the Adam moments (per layer: m_w, v_w, m_b, v_b). With
+    /// [`Mlp::flat_params`] and [`Mlp::step`] this is the complete
+    /// optimizer state — restoring all three makes further `adam_step`
+    /// calls bitwise indistinguishable from never having paused
+    /// (the checkpoint-resume contract, `tests/checkpoint.rs`).
+    pub fn flat_opt_state(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for i in 0..self.n_layers() {
+            out.extend_from_slice(&self.m_w[i].data);
+            out.extend_from_slice(&self.v_w[i].data);
+            out.extend_from_slice(&self.m_b[i]);
+            out.extend_from_slice(&self.v_b[i]);
+        }
+        out
+    }
+
+    /// Load Adam moments from a flat buffer (inverse of
+    /// [`Mlp::flat_opt_state`]).
+    pub fn load_flat_opt_state(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for i in 0..self.n_layers() {
+            let wn = self.m_w[i].data.len();
+            self.m_w[i].data.copy_from_slice(&flat[off..off + wn]);
+            self.v_w[i].data.copy_from_slice(&flat[off + wn..off + 2 * wn]);
+            off += 2 * wn;
+            let bn = self.m_b[i].len();
+            self.m_b[i].copy_from_slice(&flat[off..off + bn]);
+            self.v_b[i].copy_from_slice(&flat[off + bn..off + 2 * bn]);
+            off += 2 * bn;
+        }
+        assert_eq!(off, flat.len());
+    }
 }
 
 #[cfg(test)]
@@ -220,6 +264,11 @@ mod tests {
 
     fn tiny_mlp(rng: &mut Pcg64) -> Mlp {
         Mlp::new(&[4, 8, 8, 2], rng)
+    }
+
+    #[test]
+    fn hidden_dims_keeps_depth_and_io_widths() {
+        assert_eq!(hidden_dims(64), vec![32, 64, 64, 64, 32]);
     }
 
     #[test]
@@ -310,5 +359,34 @@ mod tests {
         let mut mlp2 = tiny_mlp(&mut rng); // different init
         mlp2.load_flat_params(&flat);
         assert_eq!(mlp2.flat_params(), flat);
+    }
+
+    #[test]
+    fn opt_state_roundtrip_restores_adam_trajectory() {
+        let mut rng = Pcg64::new(6);
+        let mut mlp = tiny_mlp(&mut rng);
+        let x = Mat::randn(8, 4, 1.0, &mut rng);
+        let y = Mat::randn(8, 2, 1.0, &mut rng);
+        for _ in 0..5 {
+            let tape = mlp.forward(&x);
+            let grads = mlp.backward(&tape, &y);
+            mlp.adam_step(&grads, 1e-3);
+        }
+        // snapshot, run 3 more steps, then rebuild from the snapshot
+        let (params, opt, step) = (mlp.flat_params(), mlp.flat_opt_state(), mlp.step);
+        let mut cont = mlp.clone();
+        let mut restored = tiny_mlp(&mut rng); // different init + zero moments
+        restored.load_flat_params(&params);
+        restored.load_flat_opt_state(&opt);
+        restored.step = step;
+        for m in [&mut cont, &mut restored] {
+            for _ in 0..3 {
+                let tape = m.forward(&x);
+                let grads = m.backward(&tape, &y);
+                m.adam_step(&grads, 1e-3);
+            }
+        }
+        assert_eq!(cont.flat_params(), restored.flat_params());
+        assert_eq!(cont.flat_opt_state(), restored.flat_opt_state());
     }
 }

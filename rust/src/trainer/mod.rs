@@ -18,16 +18,24 @@
 //! All paths implement the same quantization semantics; a pytest on the
 //! Python side, `session::tests`, and `tests/backend.rs` pin them
 //! together.
+//!
+//! Sessions are checkpointable ([`checkpoint`]): the MX-quantized weight
+//! image (square groups stored single-copy) plus a bit-exact FP32
+//! master/optimizer sidecar, so a resumed session is indistinguishable
+//! from one that never paused — the substrate of the continual-learning
+//! fleet layer ([`crate::fleet`]).
 
 pub mod batched;
 pub mod budget;
+pub mod checkpoint;
 pub mod mlp;
 pub mod qat;
 pub mod session;
 
 pub use batched::{BatchedTrainer, TrainOutcome};
+pub use checkpoint::Checkpoint;
 pub use mlp::{Mlp, MlpGrads};
 pub use qat::QuantScheme;
-pub use session::{TrainConfig, TrainSession};
+pub use session::{TrainConfig, TrainError, TrainSession};
 
 pub use crate::backend::BackendKind;

@@ -3,10 +3,43 @@
 
 use crate::backend::{make_backend, BackendKind, ExecBackend, HwCostReport};
 use crate::gemmcore::memory::{footprint_ours, MlpShape};
+use crate::trainer::checkpoint::{weight_payload, Checkpoint};
 use crate::trainer::mlp::{Mlp, MLP_DIMS};
 use crate::trainer::qat::{qat_eval, qat_step_with, QuantScheme};
 use crate::util::rng::Pcg64;
 use crate::workloads::Dataset;
+
+/// Why a [`TrainSession`] could not be built — structured so callers
+/// (CLI, fleet scheduler, checkpoint restore) can react per cause
+/// instead of string-matching.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrainError {
+    /// The layer dims don't form an MLP that fits the dataset.
+    BadDims { dims: Vec<usize>, reason: String },
+    /// The scheme × backend combination has no implementation.
+    UnsupportedScheme { scheme: String, backend: &'static str, reason: String },
+    /// A non-dims configuration field is out of range.
+    BadConfig { reason: String },
+    /// A checkpoint doesn't match the session it should restore.
+    BadCheckpoint { reason: String },
+}
+
+impl std::fmt::Display for TrainError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TrainError::BadDims { dims, reason } => {
+                write!(f, "invalid MLP dims {dims:?}: {reason}")
+            }
+            TrainError::UnsupportedScheme { scheme, backend, reason } => {
+                write!(f, "scheme `{scheme}` unsupported on the `{backend}` backend: {reason}")
+            }
+            TrainError::BadConfig { reason } => write!(f, "invalid train config: {reason}"),
+            TrainError::BadCheckpoint { reason } => write!(f, "checkpoint mismatch: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for TrainError {}
 
 /// Configuration of a training run.
 #[derive(Debug, Clone)]
@@ -55,11 +88,44 @@ pub struct TrainSession {
 }
 
 impl TrainSession {
-    /// Build a session, or explain why the scheme/backend combination is
-    /// invalid (the hardware backend executes square MX schemes only).
-    pub fn try_new(dataset: Dataset, config: TrainConfig) -> Result<Self, String> {
-        let backend = make_backend(config.backend, config.scheme)?;
+    /// Build a session, or explain why the configuration is invalid:
+    /// bad layer dims (too few, zero-width, or not matching the dataset
+    /// IO widths), a zero batch size, or a scheme the chosen backend
+    /// cannot execute (the hardware backend runs square MX schemes only).
+    pub fn try_new(dataset: Dataset, config: TrainConfig) -> Result<Self, TrainError> {
+        if config.batch_size == 0 {
+            return Err(TrainError::BadConfig { reason: "batch_size must be positive".into() });
+        }
+        if config.eval_every == 0 {
+            // step_once computes `step % eval_every` — reject the
+            // divide-by-zero here, where it is a structured error
+            return Err(TrainError::BadConfig { reason: "eval_every must be positive".into() });
+        }
         let dims: Vec<usize> = config.dims.clone().unwrap_or_else(|| MLP_DIMS.to_vec());
+        if dims.len() < 2 {
+            return Err(TrainError::BadDims {
+                dims,
+                reason: "need at least an input and an output width".into(),
+            });
+        }
+        if dims.contains(&0) {
+            return Err(TrainError::BadDims { dims, reason: "zero-width layer".into() });
+        }
+        let (din, dout) = (dims[0], *dims.last().unwrap());
+        if din != dataset.train_x.cols || dout != dataset.train_y.cols {
+            let reason = format!(
+                "dataset `{}` feeds {}-wide inputs and {}-wide targets",
+                dataset.name, dataset.train_x.cols, dataset.train_y.cols
+            );
+            return Err(TrainError::BadDims { dims, reason });
+        }
+        let backend = make_backend(config.backend, config.scheme).map_err(|reason| {
+            TrainError::UnsupportedScheme {
+                scheme: config.scheme.name(),
+                backend: config.backend.name(),
+                reason,
+            }
+        })?;
         let mut rng = Pcg64::with_stream(config.seed, 0x11F);
         let mlp = Mlp::new(&dims, &mut rng);
         Ok(Self {
@@ -76,7 +142,7 @@ impl TrainSession {
 
     /// [`TrainSession::try_new`], panicking on an invalid configuration.
     pub fn new(dataset: Dataset, config: TrainConfig) -> Self {
-        Self::try_new(dataset, config).expect("invalid train config")
+        Self::try_new(dataset, config).unwrap_or_else(|e| panic!("invalid train config: {e}"))
     }
 
     /// Current step count.
@@ -122,6 +188,58 @@ impl TrainSession {
     /// hardware cost ledger, which accounts *training* steps.
     pub fn val_loss(&self) -> f64 {
         qat_eval(&self.mlp, &self.dataset.val_x, &self.dataset.val_y, self.config.scheme)
+    }
+
+    /// Replace the dataset mid-run (a domain-shift event): training
+    /// continues from the current weights and optimizer state on the new
+    /// data. Curves keep accumulating — the shift shows up as a loss
+    /// jump at the swap step.
+    pub fn swap_dataset(&mut self, dataset: Dataset) {
+        self.dataset = dataset;
+    }
+
+    /// Snapshot the complete training state as an MX-native
+    /// [`Checkpoint`]: the quantized weight image under this session's
+    /// scheme (square groups stored single-copy) plus the bit-exact FP32
+    /// master/optimizer sidecar and the loss curves.
+    pub fn save_checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            config: TrainConfig { dims: Some(self.dims.clone()), ..self.config.clone() },
+            step: self.step,
+            adam_step: self.mlp.step,
+            train_curve: self.train_curve.clone(),
+            val_curve: self.val_curve.clone(),
+            params: self.mlp.flat_params(),
+            opt: self.mlp.flat_opt_state(),
+            payload: weight_payload(&self.mlp.weights, self.config.scheme),
+        }
+    }
+
+    /// Rebuild a session from a [`Checkpoint`] and a dataset (the same
+    /// one to continue, or a shifted one to adapt). Restored training is
+    /// bit-exact: stepping the resumed session reproduces the
+    /// uninterrupted run's tape, Adam moments, and loss curve
+    /// (`tests/checkpoint.rs` asserts this for all six formats on both
+    /// backends).
+    pub fn resume(dataset: Dataset, ck: &Checkpoint) -> Result<Self, TrainError> {
+        let mut s = Self::try_new(dataset, ck.config.clone())?;
+        if ck.params.len() != s.mlp.flat_params().len() {
+            return Err(TrainError::BadCheckpoint {
+                reason: format!("{} parameters for dims {:?}", ck.params.len(), s.dims),
+            });
+        }
+        if ck.opt.len() != 2 * ck.params.len() {
+            let reason =
+                format!("{} optimizer values, expected {}", ck.opt.len(), 2 * ck.params.len());
+            return Err(TrainError::BadCheckpoint { reason });
+        }
+        s.mlp.load_flat_params(&ck.params);
+        s.mlp.load_flat_opt_state(&ck.opt);
+        s.mlp.step = ck.adam_step;
+        s.step = ck.step;
+        s.train_curve = ck.train_curve.clone();
+        s.val_curve = ck.val_curve.clone();
+        Ok(s)
     }
 
     /// The accumulated hardware cost of this session's training steps
@@ -196,8 +314,104 @@ mod tests {
                 quick_dataset("cartpole"),
                 TrainConfig { scheme, backend: BackendKind::Hardware, ..Default::default() },
             );
-            assert!(r.is_err(), "{}", scheme.name());
+            assert!(
+                matches!(r, Err(TrainError::UnsupportedScheme { backend: "hw", .. })),
+                "{}",
+                scheme.name()
+            );
         }
+    }
+
+    #[test]
+    fn bad_dims_and_config_are_structured_errors() {
+        let err = |config| TrainSession::try_new(quick_dataset("cartpole"), config).unwrap_err();
+        // input width not matching the 32-wide dataset
+        let e = err(TrainConfig { dims: Some(vec![16, 8, 32]), ..Default::default() });
+        assert!(matches!(e, TrainError::BadDims { .. }), "{e}");
+        // zero-width hidden layer
+        let e = err(TrainConfig { dims: Some(vec![32, 0, 32]), ..Default::default() });
+        assert!(matches!(e, TrainError::BadDims { .. }), "{e}");
+        // single-entry dims
+        let e = err(TrainConfig { dims: Some(vec![32]), ..Default::default() });
+        assert!(matches!(e, TrainError::BadDims { .. }), "{e}");
+        // zero batch size
+        let e = err(TrainConfig { batch_size: 0, ..Default::default() });
+        assert!(matches!(e, TrainError::BadConfig { .. }), "{e}");
+        // zero eval interval (step_once would divide by it)
+        let e = err(TrainConfig { eval_every: 0, ..Default::default() });
+        assert!(matches!(e, TrainError::BadConfig { .. }), "{e}");
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_bitwise() {
+        let cfg = TrainConfig {
+            scheme: QuantScheme::MxSquare(ElementFormat::E4M3),
+            dims: Some(vec![32, 24, 32]),
+            steps: 0,
+            eval_every: 5,
+            ..Default::default()
+        };
+        let ds = quick_dataset("reacher");
+        let mut full = TrainSession::new(ds.clone(), cfg.clone());
+        let mut half = TrainSession::new(ds.clone(), cfg);
+        for _ in 0..8 {
+            full.step_once();
+            half.step_once();
+        }
+        let ck = half.save_checkpoint();
+        assert_eq!(ck.step, 8);
+        let mut resumed = TrainSession::resume(ds, &ck).unwrap();
+        for _ in 0..6 {
+            full.step_once();
+            resumed.step_once();
+        }
+        assert_eq!(resumed.mlp.flat_params(), full.mlp.flat_params());
+        assert_eq!(resumed.train_curve, full.train_curve);
+        assert_eq!(resumed.val_curve, full.val_curve);
+        assert_eq!(resumed.val_loss(), full.val_loss());
+    }
+
+    #[test]
+    fn swap_dataset_continues_training_in_place() {
+        // the lightweight (no-checkpoint) domain-shift path: weights,
+        // optimizer state, and step counter all survive the swap, and
+        // training keeps improving on the new data
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+                dims: Some(vec![32, 48, 48, 32]),
+                steps: 0,
+                lr: 2e-3,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        for _ in 0..100 {
+            s.step_once();
+        }
+        let params = s.mlp.flat_params();
+        let shifted_env = crate::workloads::shifted_by_name("cartpole").unwrap();
+        s.swap_dataset(Dataset::collect(shifted_env.as_ref(), 6, 60, 0xDE));
+        assert_eq!(s.mlp.flat_params(), params, "swap must not touch the model");
+        assert_eq!(s.step_count(), 100);
+        let v0 = s.val_loss();
+        for _ in 0..100 {
+            s.step_once();
+        }
+        assert!(s.val_loss() < v0, "must keep learning on the swapped data: {v0}");
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_checkpoint() {
+        let mut ck = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig { dims: Some(vec![32, 16, 32]), steps: 0, ..Default::default() },
+        )
+        .save_checkpoint();
+        ck.params.pop();
+        let e = TrainSession::resume(quick_dataset("cartpole"), &ck).unwrap_err();
+        assert!(matches!(e, TrainError::BadCheckpoint { .. }), "{e}");
     }
 
     #[test]

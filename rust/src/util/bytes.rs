@@ -1,0 +1,260 @@
+//! Little-endian binary (de)serialization for checkpoint files.
+//!
+//! The offline dependency closure has no `serde`/`bincode`, so the MX
+//! checkpoint format (`trainer::checkpoint`) is hand-rolled over these
+//! two primitives. [`ByteWriter`] appends fixed-width little-endian
+//! scalars, length-prefixed strings/slices, and bit-packed sub-byte code
+//! streams; [`ByteReader`] is its bounds-checked inverse — every read
+//! returns `Result`, so corrupt or truncated files surface as errors
+//! instead of panics.
+//!
+//! f32/f64 round-trip through `to_le_bytes`/`from_le_bytes`, i.e. the
+//! exact bit pattern: checkpoint restore is bitwise lossless, which is
+//! what makes save/resume training indistinguishable from an
+//! uninterrupted run (asserted by `tests/checkpoint.rs`).
+
+/// Append-only little-endian byte buffer.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_i8(&mut self, v: i8) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// u32-length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// u64-length-prefixed f32 slice (raw bit patterns — lossless).
+    pub fn put_f32s(&mut self, xs: &[f32]) {
+        self.put_u64(xs.len() as u64);
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Bit-pack `codes` at `bits` bits each (MSB-first within the
+    /// stream), padding the final partial byte with zero bits. `bits`
+    /// must be 1..=8 and every code must fit in `bits` bits.
+    pub fn put_packed(&mut self, codes: impl Iterator<Item = u8>, bits: u32) {
+        debug_assert!((1..=8).contains(&bits));
+        let mask = if bits == 8 { 0xFF } else { (1u32 << bits) - 1 };
+        let mut acc: u32 = 0;
+        let mut n: u32 = 0;
+        for c in codes {
+            debug_assert_eq!(c as u32 & mask, c as u32, "code wider than {bits} bits");
+            acc = (acc << bits) | (c as u32 & mask);
+            n += bits;
+            while n >= 8 {
+                n -= 8;
+                self.buf.push((acc >> n) as u8);
+            }
+        }
+        if n > 0 {
+            self.buf.push((acc << (8 - n)) as u8);
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a byte slice.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated input: need {n} bytes at offset {}, {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_i8(&mut self) -> Result<i8, String> {
+        Ok(self.take(1)?[0] as i8)
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32, String> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_str(&mut self) -> Result<String, String> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|e| format!("invalid UTF-8 string: {e}"))
+    }
+
+    pub fn get_f32s(&mut self) -> Result<Vec<f32>, String> {
+        let n = self.get_u64()? as usize;
+        let bytes = self.take(n.checked_mul(4).ok_or("f32 slice length overflow")?)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    /// Inverse of [`ByteWriter::put_packed`]: read `count` codes of
+    /// `bits` bits each.
+    pub fn get_packed(&mut self, count: usize, bits: u32) -> Result<Vec<u8>, String> {
+        debug_assert!((1..=8).contains(&bits));
+        let total_bits = count.checked_mul(bits as usize).ok_or("packed length overflow")?;
+        let nbytes = total_bits.div_ceil(8);
+        let bytes = self.take(nbytes)?;
+        let mask = if bits == 8 { 0xFF } else { (1u32 << bits) - 1 };
+        let mut out = Vec::with_capacity(count);
+        let mut acc: u32 = 0;
+        let mut n: u32 = 0;
+        let mut next = bytes.iter();
+        for _ in 0..count {
+            while n < bits {
+                acc = (acc << 8) | *next.next().expect("sized above") as u32;
+                n += 8;
+            }
+            n -= bits;
+            out.push(((acc >> n) & mask) as u8);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_i8(-3);
+        w.put_u32(0xDEADBEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(-0.0);
+        w.put_f64(f64::MIN_POSITIVE);
+        w.put_str("héllo");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_i8().unwrap(), -3);
+        assert_eq!(r.get_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_f64().unwrap(), f64::MIN_POSITIVE);
+        assert_eq!(r.get_str().unwrap(), "héllo");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn f32_slice_is_bitwise_lossless() {
+        let xs = vec![1.0f32, -1.5e-38, f32::MAX, 3.3333333, 0.1];
+        let mut w = ByteWriter::new();
+        w.put_f32s(&xs);
+        let bytes = w.into_bytes();
+        let got = ByteReader::new(&bytes).get_f32s().unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&got), bits(&xs));
+    }
+
+    #[test]
+    fn packed_codes_round_trip_all_widths() {
+        for bits in [1u32, 4, 6, 8] {
+            let mask = if bits == 8 { 0xFF } else { (1u8 << bits) - 1 };
+            let codes: Vec<u8> = (0..100u32).map(|i| (i * 37 % 251) as u8 & mask).collect();
+            let mut w = ByteWriter::new();
+            w.put_packed(codes.iter().copied(), bits);
+            let expect_bytes = (codes.len() * bits as usize).div_ceil(8);
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len(), expect_bytes, "{bits}-bit packing density");
+            let got = ByteReader::new(&bytes).get_packed(codes.len(), bits).unwrap();
+            assert_eq!(got, codes, "{bits}-bit");
+        }
+    }
+
+    #[test]
+    fn truncated_input_errors_instead_of_panicking() {
+        let mut w = ByteWriter::new();
+        w.put_u64(42);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..5]);
+        assert!(r.get_u64().is_err());
+        // string whose declared length exceeds the buffer
+        let mut w = ByteWriter::new();
+        w.put_u32(1000);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_str().is_err());
+        // packed stream shorter than the requested code count
+        let mut w = ByteWriter::new();
+        w.put_packed([1u8, 2, 3].iter().copied(), 4);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_packed(10, 4).is_err());
+    }
+}

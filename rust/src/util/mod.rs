@@ -3,11 +3,14 @@
 //! The offline build environment only vendors the `xla` crate's dependency
 //! closure, so this module replaces the usual ecosystem crates:
 //! [`rng`] stands in for `rand` (PCG64), [`json`] for `serde_json`
-//! (emission only), [`mat`] provides the dense f32 matrix the simulators
-//! and the golden trainer share, [`testing`] provides the hand-rolled
-//! property-test loop used across the test suite, and [`par`] stands in
-//! for `rayon` (block-parallel fork-join with bit-identical results).
+//! (emission only), [`bytes`] for `bincode` (the bounds-checked binary
+//! codec under the MX checkpoint format), [`mat`] provides the dense f32
+//! matrix the simulators and the golden trainer share, [`testing`]
+//! provides the hand-rolled property-test loop used across the test
+//! suite, and [`par`] stands in for `rayon` (block-parallel fork-join
+//! with bit-identical results).
 
+pub mod bytes;
 pub mod json;
 pub mod mat;
 pub mod par;

@@ -37,3 +37,62 @@ pub fn by_name(name: &str) -> Option<Box<dyn Env>> {
 
 /// The four workload names in the paper's Fig. 2 order.
 pub const ALL_WORKLOADS: [&str; 4] = ["cartpole", "halfcheetah", "pusher", "reacher"];
+
+/// The domain-shifted variant of a workload — same state/action layout,
+/// perturbed physics (the paper's §I continual-learning premise: the
+/// robot's environment changes mid-deployment). Used by the fleet layer
+/// to swap a live session's dataset: a pusher picks up a heavier object
+/// on rougher ground, a reacher's arm grows and stiffens, a cartpole's
+/// pole doubles in mass, a halfcheetah's joints get stiffer with weaker
+/// actuators.
+pub fn shifted_by_name(name: &str) -> Option<Box<dyn Env>> {
+    match name {
+        "cartpole" => {
+            let mut env = cartpole::Cartpole::default();
+            env.pole_mass *= 2.0;
+            env.pole_half_len *= 1.3;
+            Some(Box::new(env))
+        }
+        "reacher" => {
+            let mut env = reacher::Reacher::default();
+            env.link_len *= 1.25;
+            env.damping *= 2.0;
+            Some(Box::new(env))
+        }
+        "pusher" => {
+            let mut env = pusher::Pusher::default();
+            env.obj_mass *= 2.5;
+            env.friction *= 1.8;
+            Some(Box::new(env))
+        }
+        "halfcheetah" => {
+            let mut env = halfcheetah::HalfCheetah::default();
+            env.damping *= 2.0;
+            env.gear *= 0.7;
+            Some(Box::new(env))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod shift_tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn shifted_variants_exist_and_differ_from_nominal() {
+        for name in ALL_WORKLOADS {
+            let nominal = by_name(name).unwrap();
+            let shifted = shifted_by_name(name).unwrap();
+            assert_eq!(nominal.state_dim(), shifted.state_dim(), "{name}");
+            assert_eq!(nominal.action_dim(), shifted.action_dim(), "{name}");
+            // same state + action must evolve differently under the shift
+            let mut rng = Pcg64::new(0x5F1F7);
+            let s = nominal.reset(&mut rng);
+            let a = vec![0.3; nominal.action_dim()];
+            assert_ne!(nominal.step(&s, &a), shifted.step(&s, &a), "{name}");
+        }
+        assert!(shifted_by_name("nope").is_none());
+    }
+}

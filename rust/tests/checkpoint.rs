@@ -1,0 +1,200 @@
+//! Checkpoint round-trip property tests: save/resume at step k must be
+//! bitwise indistinguishable from an uninterrupted run to step k+m —
+//! tape, Adam moments, and loss curves — for all six MX formats, both
+//! execution backends, and with the serialized byte format in the loop
+//! (every resume below goes through `to_bytes` -> `from_bytes`).
+
+use mxscale::backend::BackendKind;
+use mxscale::mx::dacapo::DacapoFormat;
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::trainer::checkpoint::Checkpoint;
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::{TrainConfig, TrainSession};
+use mxscale::workloads::{by_name, Dataset};
+
+fn dataset(seed: u64) -> Dataset {
+    let env = by_name("reacher").unwrap();
+    Dataset::collect(env.as_ref(), 5, 40, seed)
+}
+
+/// Run the save -> serialize -> parse -> resume loop at step `k` and
+/// compare against the uninterrupted run at step `k + m`.
+fn assert_resume_matches(scheme: QuantScheme, backend: BackendKind, k: usize, m: usize) {
+    let label = format!("{}/{}", scheme.name(), backend.name());
+    let config = TrainConfig {
+        scheme,
+        backend,
+        dims: Some(vec![32, 16, 32]),
+        batch_size: 8,
+        steps: 0,
+        eval_every: 3,
+        ..Default::default()
+    };
+    let ds = dataset(0xC4E0);
+
+    let mut full = TrainSession::try_new(ds.clone(), config.clone()).unwrap();
+    let mut half = TrainSession::try_new(ds.clone(), config).unwrap();
+    for _ in 0..k {
+        full.step_once();
+        half.step_once();
+    }
+
+    // serialize through the binary format — corruption-prone path included
+    let ck = half.save_checkpoint();
+    let bytes = ck.to_bytes();
+    let ck2 = Checkpoint::from_bytes(&bytes).unwrap_or_else(|e| panic!("{label}: {e}"));
+    assert_eq!(ck2.to_bytes(), bytes, "{label}: reserialization must be identical");
+    assert_eq!(ck2.step, k, "{label}");
+
+    let mut resumed = TrainSession::resume(ds.clone(), &ck2).unwrap();
+    for _ in 0..m {
+        full.step_once();
+        resumed.step_once();
+    }
+
+    // Adam moments + masters bitwise
+    assert_eq!(resumed.mlp.flat_params(), full.mlp.flat_params(), "{label}: params");
+    assert_eq!(resumed.mlp.flat_opt_state(), full.mlp.flat_opt_state(), "{label}: moments");
+    assert_eq!(resumed.mlp.step, full.mlp.step, "{label}: adam step");
+    // loss curves (pre-checkpoint history restored + post-resume identical)
+    assert_eq!(resumed.train_curve, full.train_curve, "{label}: train curve");
+    assert_eq!(resumed.val_curve, full.val_curve, "{label}: val curve");
+    // tape: one forward over the validation split, bit-equal outputs
+    let tape_full = full.mlp.forward(&ds.val_x);
+    let tape_res = resumed.mlp.forward(&ds.val_x);
+    assert_eq!(tape_res.output.data, tape_full.output.data, "{label}: tape");
+    assert_eq!(resumed.val_loss(), full.val_loss(), "{label}: val loss");
+}
+
+#[test]
+fn resume_is_bit_exact_all_six_formats_fast_backend() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        assert_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Fast, 7, 5);
+    }
+}
+
+#[test]
+fn resume_is_bit_exact_all_six_formats_hw_backend() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        assert_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Hardware, 3, 2);
+    }
+}
+
+#[test]
+fn resume_is_bit_exact_for_baseline_schemes() {
+    for scheme in [
+        QuantScheme::Fp32,
+        QuantScheme::MxVector(mxscale::mx::ElementFormat::E4M3),
+        QuantScheme::Dacapo(DacapoFormat::Mx9),
+    ] {
+        assert_resume_matches(scheme, BackendKind::Fast, 5, 4);
+    }
+}
+
+#[test]
+fn square_image_is_single_copy_vector_is_two_and_smaller_on_disk() {
+    let run = |scheme: QuantScheme| {
+        let mut s = TrainSession::new(
+            dataset(0x51DE),
+            TrainConfig {
+                scheme,
+                dims: Some(vec![32, 64, 32]),
+                steps: 0,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        for _ in 0..3 {
+            s.step_once();
+        }
+        s.save_checkpoint()
+    };
+    let fmt = mxscale::mx::ElementFormat::Int8;
+    let sq = run(QuantScheme::MxSquare(fmt));
+    let vec = run(QuantScheme::MxVector(fmt));
+    assert_eq!(sq.payload.len(), 2, "square: one tensor per layer");
+    assert_eq!(vec.payload.len(), 4, "vector: W and W-transposed groupings per layer");
+    let reduction = 1.0 - sq.payload_bytes() as f64 / vec.payload_bytes() as f64;
+    assert!(
+        (0.45..0.55).contains(&reduction),
+        "square single-copy should store ~51% less: {} vs {} ({reduction})",
+        sq.payload_bytes(),
+        vec.payload_bytes()
+    );
+}
+
+#[test]
+fn checkpoint_file_round_trips_and_rejects_corruption() {
+    let mut s = TrainSession::new(
+        dataset(0xF11E),
+        TrainConfig {
+            scheme: QuantScheme::MxSquare(mxscale::mx::ElementFormat::E5M2),
+            dims: Some(vec![32, 16, 32]),
+            steps: 0,
+            eval_every: 4,
+            ..Default::default()
+        },
+    );
+    for _ in 0..6 {
+        s.step_once();
+    }
+    let ck = s.save_checkpoint();
+    let dir = std::env::temp_dir().join(format!("mxckpt-test-{}", std::process::id()));
+    let path = dir.join("robot.mxckpt");
+    ck.save(&path).unwrap();
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.to_bytes(), ck.to_bytes());
+    assert_eq!(loaded.payload_bytes(), ck.payload_bytes());
+
+    // truncation at every section boundary-ish point must error, not panic
+    let bytes = ck.to_bytes();
+    for cut in [0, 3, 8, bytes.len() / 4, bytes.len() / 2, bytes.len() - 1] {
+        assert!(Checkpoint::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+    }
+    // bad magic
+    let mut bad = bytes.clone();
+    bad[0] = b'Z';
+    assert!(Checkpoint::from_bytes(&bad).is_err());
+    // bad version
+    let mut bad = bytes.clone();
+    bad[4] = 99;
+    assert!(Checkpoint::from_bytes(&bad).is_err());
+    // trailing garbage
+    let mut bad = bytes;
+    bad.push(0);
+    assert!(Checkpoint::from_bytes(&bad).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_onto_a_shifted_dataset_adapts_without_reinit() {
+    // the continual-learning move: checkpoint on nominal physics, resume
+    // on shifted physics — weights carry over (no re-init), and the
+    // session keeps improving on the new dynamics from the first step.
+    let scheme = QuantScheme::MxSquare(mxscale::mx::ElementFormat::Int8);
+    let config = TrainConfig {
+        scheme,
+        dims: Some(vec![32, 48, 48, 32]),
+        steps: 0,
+        lr: 2e-3,
+        eval_every: usize::MAX,
+        ..Default::default()
+    };
+    let env = by_name("pusher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 8, 50, 0xA);
+    let mut s = TrainSession::try_new(ds, config).unwrap();
+    for _ in 0..150 {
+        s.step_once();
+    }
+    let ck = s.save_checkpoint();
+    let senv = mxscale::workloads::shifted_by_name("pusher").unwrap();
+    let sds = Dataset::collect(senv.as_ref(), 8, 50, 0xB);
+    let mut adapted = TrainSession::resume(sds, &ck).unwrap();
+    assert_eq!(adapted.mlp.flat_params(), ck.params, "no re-init on resume");
+    let before = adapted.val_loss();
+    for _ in 0..80 {
+        adapted.step_once();
+    }
+    let after = adapted.val_loss();
+    assert!(after < before, "adaptation must improve on the shift: {before} -> {after}");
+}

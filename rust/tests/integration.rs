@@ -2,6 +2,7 @@
 //! trainer, plus the PJRT runtime path when artifacts exist.
 
 use mxscale::arith::MacVariant;
+use mxscale::backend::BackendKind;
 use mxscale::energy::EnergyModel;
 use mxscale::gemmcore::GemmCore;
 use mxscale::mx::element::ElementFormat;
@@ -9,6 +10,7 @@ use mxscale::mx::tensor::{Layout, MxTensor};
 use mxscale::pearray::PeArray;
 use mxscale::trainer::qat::{qat_eval, qat_step, QuantScheme};
 use mxscale::trainer::mlp::Mlp;
+use mxscale::trainer::session::{TrainConfig, TrainError, TrainSession};
 use mxscale::util::mat::Mat;
 use mxscale::util::rng::Pcg64;
 use mxscale::workloads::{by_name, Dataset};
@@ -76,6 +78,57 @@ fn square_vs_dacapo_training_quality_same_ballpark() {
     let ours = run(QuantScheme::MxSquare(ElementFormat::Int8));
     let dacapo = run(QuantScheme::Dacapo(mxscale::mx::dacapo::DacapoFormat::Mx9));
     assert!(ours / dacapo < 2.0 && dacapo / ours < 2.0, "ours {ours} dacapo {dacapo}");
+}
+
+#[test]
+fn try_new_reports_structured_errors() {
+    let ds = || {
+        let env = by_name("cartpole").unwrap();
+        Dataset::collect(env.as_ref(), 2, 20, 0xE44)
+    };
+    // dims that don't match the 32-wide dataset IO
+    let e = TrainSession::try_new(
+        ds(),
+        TrainConfig { dims: Some(vec![16, 8, 8]), ..Default::default() },
+    )
+    .unwrap_err();
+    match &e {
+        TrainError::BadDims { dims, reason } => {
+            assert_eq!(dims, &vec![16, 8, 8]);
+            assert!(reason.contains("32-wide"), "{reason}");
+        }
+        other => panic!("expected BadDims, got {other}"),
+    }
+    // zero-width layer
+    let e = TrainSession::try_new(
+        ds(),
+        TrainConfig { dims: Some(vec![32, 0, 32]), ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(matches!(e, TrainError::BadDims { .. }), "{e}");
+    // a scheme the hardware backend has no datapath for
+    let e = TrainSession::try_new(
+        ds(),
+        TrainConfig {
+            scheme: QuantScheme::Dacapo(mxscale::mx::dacapo::DacapoFormat::Mx6),
+            backend: BackendKind::Hardware,
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    match &e {
+        TrainError::UnsupportedScheme { scheme, backend, .. } => {
+            assert_eq!(scheme, "mx6");
+            assert_eq!(*backend, "hw");
+        }
+        other => panic!("expected UnsupportedScheme, got {other}"),
+    }
+    // zero batch
+    let e = TrainSession::try_new(ds(), TrainConfig { batch_size: 0, ..Default::default() })
+        .unwrap_err();
+    assert!(matches!(e, TrainError::BadConfig { .. }), "{e}");
+    // errors render through Display for the CLI
+    assert!(!format!("{e}").is_empty());
 }
 
 #[test]
