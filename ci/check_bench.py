@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""CI bench-gate: compare fresh BENCH_*.json results against committed
+baselines and fail on perf regressions.
+
+Usage:
+    check_bench.py --results rust/results --baselines rust/benches/baselines \
+                   [--tolerance 0.25] [--require-headline-speedup 2.0]
+
+Rules:
+  * Every numeric metric whose key ends in ``_ns_op``/``ns_per_...`` or
+    equals a ``schemes/...`` ns value is lower-is-better: the fresh
+    value may exceed baseline * (1 + tolerance) only at the cost of a
+    failure.  ``speedup`` metrics are higher-is-better: failure below
+    baseline * (1 - tolerance).
+  * ``BENCH_packed.json`` must always carry
+    ``schemes.int8.headline_speedup >= --require-headline-speedup``
+    (the acceptance criterion: the packed SWAR path is at least 2x the
+    fake-quant GeMM path for mxint8 at the bench shapes), baseline or
+    not.
+  * A missing baseline file is a bootstrap, not a failure: the fresh
+    JSON is reported so it can be committed as the first baseline.
+  * A baseline with a different ``schema_version`` is skipped with a
+    notice (incomparable layouts must not produce phantom regressions).
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def flatten(obj, prefix=""):
+    """Yield (dotted_path, value) for every numeric leaf."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            yield from flatten(v, f"{prefix}{k}.")
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        yield prefix.rstrip("."), float(obj)
+
+
+def metric_kind(path):
+    """'lower' | 'higher' | None (not gated)."""
+    leaf = path.rsplit(".", 1)[-1]
+    if leaf.endswith("_ns_op") or leaf.startswith("ns_per_") or leaf.endswith("_ms"):
+        return "lower"
+    if "speedup" in leaf:
+        return "higher"
+    # bench_quantize stores per-scheme ns/elem directly under schemes.*
+    if path.startswith("schemes.") and path.count(".") == 1 and "/" in leaf:
+        return "lower"
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", required=True, type=pathlib.Path)
+    ap.add_argument("--baselines", required=True, type=pathlib.Path)
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--require-headline-speedup", type=float, default=2.0)
+    args = ap.parse_args()
+
+    failures = []
+    fresh_files = sorted(args.results.glob("BENCH_*.json"))
+    if not fresh_files:
+        print(f"ERROR: no BENCH_*.json under {args.results}", file=sys.stderr)
+        return 1
+
+    for fresh_path in fresh_files:
+        fresh = json.loads(fresh_path.read_text())
+        name = fresh_path.name
+
+        if name == "BENCH_packed.json":
+            headline = (
+                fresh.get("schemes", {}).get("int8", {}).get("headline_speedup")
+            )
+            if headline is None:
+                failures.append(f"{name}: schemes.int8.headline_speedup missing")
+            elif headline < args.require_headline_speedup:
+                failures.append(
+                    f"{name}: mxint8 packed speedup {headline:.2f}x is below the "
+                    f"required {args.require_headline_speedup:.2f}x floor"
+                )
+            else:
+                print(
+                    f"{name}: mxint8 packed speedup {headline:.2f}x "
+                    f"(floor {args.require_headline_speedup:.2f}x) OK"
+                )
+
+        base_path = args.baselines / name
+        if not base_path.exists():
+            print(f"{name}: no committed baseline yet — bootstrap run, not gated.")
+            print(f"  (commit the uploaded artifact to {base_path} to arm the gate)")
+            continue
+        base = json.loads(base_path.read_text())
+        if base.get("schema_version") != fresh.get("schema_version"):
+            print(
+                f"{name}: baseline schema v{base.get('schema_version')} != "
+                f"fresh v{fresh.get('schema_version')} — skipping diff "
+                "(re-baseline to re-arm the gate)"
+            )
+            continue
+        if base.get("threads") != fresh.get("threads"):
+            # wall-clock and serial/parallel-speedup metrics scale with
+            # the worker count; a runner-class change must not read as a
+            # perf regression of the code under test
+            print(
+                f"{name}: baseline ran with threads={base.get('threads')}, "
+                f"fresh with threads={fresh.get('threads')} — skipping diff "
+                "(re-baseline on the current runner class to re-arm the gate)"
+            )
+            continue
+
+        base_metrics = dict(flatten(base))
+        compared = 0
+        for path, value in flatten(fresh):
+            kind = metric_kind(path)
+            if kind is None or path not in base_metrics:
+                continue
+            ref = base_metrics[path]
+            if ref <= 0:
+                continue
+            compared += 1
+            if kind == "lower" and value > ref * (1 + args.tolerance):
+                failures.append(
+                    f"{name}: {path} regressed {ref:.4g} -> {value:.4g} "
+                    f"(+{(value / ref - 1) * 100:.1f}% > {args.tolerance * 100:.0f}%) "
+                    f"[baseline {base.get('git_sha', '?')[:12]} vs "
+                    f"{fresh.get('git_sha', '?')[:12]}]"
+                )
+            elif kind == "higher" and value < ref * (1 - args.tolerance):
+                failures.append(
+                    f"{name}: {path} regressed {ref:.4g} -> {value:.4g} "
+                    f"(-{(1 - value / ref) * 100:.1f}% > {args.tolerance * 100:.0f}%)"
+                )
+        print(f"{name}: {compared} metric(s) compared against committed baseline.")
+
+    if failures:
+        print("\nbench-gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nbench-gate passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

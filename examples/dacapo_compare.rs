@@ -11,7 +11,10 @@
 //! `--scheme` takes any square MX format (`int8` ... `e2m1`; vector
 //! schemes like `mxvec-int8` work on the fast backend); `--backend hw`
 //! additionally runs a short measured session through the GemmCore
-//! simulation and prints its cost report next to the analytic numbers.
+//! simulation and prints its cost report next to the analytic numbers;
+//! `--backend packed` races the sub-word SWAR kernels against the
+//! fake-quant path on identical sessions (bit-identical losses) and
+//! saves the measured speedup to results/dacapo_packed_speedup.json.
 
 use mxscale::backend::BackendKind;
 use mxscale::coordinator::cli::Args;
@@ -48,7 +51,7 @@ fn main() {
     }
     let backend = match args.get("backend") {
         Some(b) => BackendKind::parse(b).unwrap_or_else(|| {
-            eprintln!("unknown backend: {b} (use fast|hw)");
+            eprintln!("unknown backend: {b} (use fast|hw|packed)");
             std::process::exit(1);
         }),
         None => BackendKind::Fast,
@@ -109,6 +112,28 @@ fn main() {
             last.steps,
             last.val_loss
         );
+    }
+
+    if backend == BackendKind::Packed {
+        use mxscale::coordinator::experiments::race_fast_vs_packed;
+        use mxscale::coordinator::report::{bench_doc, save_json};
+        println!("\n  measured software execution ({}, 12 steps, batch 32):", scheme.name());
+        let race = race_fast_vs_packed(&ds, scheme, 12).unwrap_or_else(|e| {
+            eprintln!("    {e}");
+            std::process::exit(1);
+        });
+        println!(
+            "    fast {:.3} ms/step | packed {:.3} ms/step | speedup {:.2}x | losses bit-identical: {}",
+            race.fast_ms_step(),
+            race.packed_ms_step(),
+            race.speedup(),
+            race.loss_bit_identical,
+        );
+        let doc = bench_doc("dacapo_packed_speedup").set(scheme.name().as_str(), race.to_json());
+        match save_json(&doc, "dacapo_packed_speedup") {
+            Ok(p) => println!("    [saved {}]", p.display()),
+            Err(e) => println!("    [json save failed: {e}]"),
+        }
     }
 
     if backend == BackendKind::Hardware {

@@ -1,0 +1,123 @@
+//! Bench: the packed SWAR GeMM path vs the fake-quant GeMM path — the
+//! training hot path's two software executions of the same bit-exact
+//! values. Hand-rolled harness (criterion unavailable offline; run with
+//! `cargo bench --bench bench_packed`, vary RAYON_NUM_THREADS).
+//!
+//! Per element format it times one forward-cut GeMM the way each
+//! backend actually executes it:
+//!
+//! * **fake** — `fake_quant_mat_fast(A)` + `fake_quant_mat_fast(W)` +
+//!   `Mat::matmul_blocked` (the `FakeQuantBackend` work per cut);
+//! * **packed** — `PackedTensor::quantize_pack(A)` + `quantize_pack(W)`
+//!   + `packed_gemm` (the `PackedBackend` work per cut).
+//!
+//! Both produce bit-identical outputs (asserted here before timing), so
+//! the ratio is a pure execution-speed comparison. Writes
+//! `results/BENCH_packed.json` (schema-versioned, git-SHA-stamped) with
+//! ns/op per format and the fake→packed speedup; the CI bench-gate job
+//! enforces the mxint8 speedup floor (≥ 2x) and the ±25% ns/op
+//! trajectory against the committed baseline.
+
+use mxscale::coordinator::report::{bench_doc, save_json};
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::packed::{packed_gemm, PackedTensor};
+use mxscale::mx::tensor::{fake_quant_mat_fast, Layout};
+use mxscale::util::json::Json;
+use mxscale::util::mat::Mat;
+use mxscale::util::par;
+use mxscale::util::rng::Pcg64;
+use std::time::Instant;
+
+/// Best-of-3 seconds per call after one warmup call.
+fn time_best<R>(reps: usize, mut f: impl FnMut() -> R) -> f64 {
+    std::hint::black_box(f());
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(f());
+        }
+        best = best.min(t.elapsed().as_secs_f64() / reps as f64);
+    }
+    best
+}
+
+fn main() {
+    let mut rng = Pcg64::new(7);
+    // the bench shapes: one square GeMM in the hidden-layer class and
+    // one pusher-MLP-shaped cut (batch 32, 256x256 hidden weight)
+    let shapes: [(usize, usize, usize, usize); 2] =
+        [(256, 256, 256, 10), (32, 256, 256, 40)];
+    println!(
+        "packed SWAR GeMM vs fake-quant GeMM ({} worker threads; both paths bit-identical)\n",
+        par::threads()
+    );
+    let mut schemes = Json::obj();
+    for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
+        let mut per_shape = Json::obj();
+        let mut int8_speedup_256 = None;
+        for &(m, k, n, reps) in &shapes {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.5, &mut rng);
+            // sanity: the two paths are the same function (theorem)
+            let dense = {
+                let aq = fake_quant_mat_fast(&a, fmt, Layout::Square8x8);
+                let wq = fake_quant_mat_fast(&w, fmt, Layout::Square8x8);
+                aq.matmul_blocked(&wq, 8)
+            };
+            let swar = packed_gemm(
+                &PackedTensor::quantize_pack(&a, fmt),
+                &PackedTensor::quantize_pack(&w, fmt),
+            );
+            assert_eq!(
+                dense.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                swar.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{fmt:?} {m}x{k}x{n}: packed != fake (theorem violated)"
+            );
+
+            let t_fake = time_best(reps, || {
+                let aq = fake_quant_mat_fast(&a, fmt, Layout::Square8x8);
+                let wq = fake_quant_mat_fast(&w, fmt, Layout::Square8x8);
+                aq.matmul_blocked(&wq, 8)
+            });
+            let t_packed = time_best(reps, || {
+                let pa = PackedTensor::quantize_pack(&a, fmt);
+                let pw = PackedTensor::quantize_pack(&w, fmt);
+                packed_gemm(&pa, &pw)
+            });
+            let macs = (m * k * n) as f64;
+            let speedup = t_fake / t_packed;
+            println!(
+                "gemm/{:<6} {:>3}x{}x{}  fake {:8.3} ms  packed {:8.3} ms  speedup {:.2}x  ({:.3} ns/op packed)",
+                fmt.name(),
+                m,
+                k,
+                n,
+                t_fake * 1e3,
+                t_packed * 1e3,
+                speedup,
+                t_packed / macs * 1e9
+            );
+            if fmt == ElementFormat::Int8 && (m, k, n) == (256, 256, 256) {
+                int8_speedup_256 = Some(speedup);
+            }
+            per_shape = per_shape.set(
+                &format!("{m}x{k}x{n}"),
+                Json::obj()
+                    .set("fake_ns_op", t_fake / macs * 1e9)
+                    .set("packed_ns_op", t_packed / macs * 1e9)
+                    .set("speedup", speedup),
+            );
+        }
+        let mut entry = per_shape;
+        if let Some(s) = int8_speedup_256 {
+            entry = entry.set("headline_speedup", s);
+        }
+        schemes = schemes.set(fmt.name(), entry);
+    }
+    let doc = bench_doc("packed").set("unit", "ns/op").set("schemes", schemes);
+    match save_json(&doc, "BENCH_packed") {
+        Ok(p) => println!("\n[saved {}]", p.display()),
+        Err(e) => println!("\n[json save failed: {e}]"),
+    }
+}

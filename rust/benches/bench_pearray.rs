@@ -5,13 +5,12 @@
 //! uploads so the perf trajectory is tracked PR-over-PR.
 
 use mxscale::arith::MacVariant;
-use mxscale::coordinator::report::save_json;
+use mxscale::coordinator::report::{bench_doc, save_json};
 use mxscale::mx::element::ElementFormat;
 use mxscale::mx::tensor::{Layout, MxTensor};
 use mxscale::pearray::PeArray;
 use mxscale::util::json::Json;
 use mxscale::util::mat::Mat;
-use mxscale::util::par;
 use mxscale::util::rng::Pcg64;
 use std::time::Instant;
 
@@ -46,11 +45,7 @@ fn main() {
                 .set("ns_per_mac_op", ns_per_block / 512.0),
         );
     }
-    let doc = Json::obj()
-        .set("bench", "pearray")
-        .set("unit", "ns/op")
-        .set("threads", par::threads())
-        .set("schemes", schemes);
+    let doc = bench_doc("pearray").set("unit", "ns/op").set("schemes", schemes);
     match save_json(&doc, "BENCH_pearray") {
         Ok(p) => println!("[saved {}]", p.display()),
         Err(e) => println!("[json save failed: {e}]"),

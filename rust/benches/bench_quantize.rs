@@ -7,7 +7,7 @@
 //! (ns/op per scheme x layout + parallel speedups) for the CI perf
 //! trajectory.
 
-use mxscale::coordinator::report::save_json;
+use mxscale::coordinator::report::{bench_doc, save_json};
 use mxscale::mx::element::ElementFormat;
 use mxscale::mx::tensor::{
     fake_quant_mat_fast, fake_quant_mat_fast_serial, Layout, MxTensor,
@@ -99,10 +99,8 @@ fn main() {
                 .set("speedup", ts / tp),
         );
     }
-    let doc = Json::obj()
-        .set("bench", "quantize")
+    let doc = bench_doc("quantize")
         .set("unit", "ns/elem")
-        .set("threads", par::threads())
         .set("schemes", schemes)
         .set("parallel", parallel);
     match save_json(&doc, "BENCH_quantize") {

@@ -1,6 +1,6 @@
 //! The fast software backend: buffer-reusing MX fake-quantization.
 
-use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, LayerGrads};
+use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
 use crate::mx::dacapo::DacapoTensor;
 use crate::mx::tensor::{fake_quant_mat_fast_into, Layout};
 use crate::trainer::qat::QuantScheme;
@@ -22,6 +22,10 @@ const NEVER: u64 = u64::MAX;
 /// attributes to them, so their quant calls still allocate.
 pub struct FakeQuantBackend {
     scheme: QuantScheme,
+    /// Dense GeMM kernel defining this scheme's value semantics
+    /// (block-ordered accumulation for square MX — see
+    /// [`GemmKernel::for_scheme`]).
+    kernel: GemmKernel,
     /// Forward-grouping quantized weights, refreshed once per step.
     wq: Vec<Mat>,
     /// Step at which `wq[i]` was refreshed (NEVER = stale).
@@ -37,6 +41,7 @@ impl FakeQuantBackend {
     pub fn new(scheme: QuantScheme) -> Self {
         Self {
             scheme,
+            kernel: GemmKernel::for_scheme(scheme),
             wq: Vec::new(),
             wq_step: Vec::new(),
             wq_t: Vec::new(),
@@ -97,7 +102,7 @@ impl ExecBackend for FakeQuantBackend {
         let aq = self.scheme.quant(a);
         Self::quant_into(self.scheme, w, &mut self.wq[layer]);
         self.wq_step[layer] = self.step;
-        let z = gemm_fwd(&aq, &self.wq[layer]);
+        let z = gemm_fwd(self.kernel, &aq, &self.wq[layer]);
         (aq, z)
     }
 
@@ -121,7 +126,7 @@ impl ExecBackend for FakeQuantBackend {
             (Some(_), false) => Some(&self.wq_t[layer]),
             (None, _) => None,
         };
-        backward_from_quant(&self.eq[layer], aq, wq)
+        backward_from_quant(self.kernel, &self.eq[layer], aq, wq)
     }
 }
 
@@ -135,8 +140,10 @@ mod tests {
     #[test]
     fn backend_matches_hook_path_bitwise_for_every_scheme() {
         // the refactor's no-regression pin: the buffer-reusing backend
-        // must reproduce the hook path (scheme.quant / quant_for_transpose
-        // closures) bit-for-bit for every scheme family.
+        // must reproduce a kernel-matched hook backend (scheme.quant /
+        // quant_for_transpose closures over the scheme's GeMM kernel)
+        // bit-for-bit for every scheme family.
+        use crate::backend::HookBackend;
         use crate::mx::dacapo::DacapoFormat;
         let mut rng = Pcg64::new(0xFA4E);
         let mlp = Mlp::new(&[16, 24, 8], &mut rng);
@@ -149,13 +156,22 @@ mod tests {
             QuantScheme::MxVector(ElementFormat::E4M3),
             QuantScheme::Dacapo(DacapoFormat::Mx9),
         ] {
-            let tape_h = mlp.forward_with(&x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
-            let grads_h = mlp.backward_with(
-                &tape_h,
-                &y,
-                |_, w| scheme.quant_for_transpose(w),
-                |_, e| scheme.quant(e),
+            let mut hooks = HookBackend::for_scheme(
+                scheme,
+                |_, w: &Mat| scheme.quant_for_transpose(w),
+                |_, a: &Mat| scheme.quant(a),
+                |_, e: &Mat| scheme.quant(e),
             );
+            // the hook backend quantizes weights per cut; the forward
+            // cut's weight hook must be the forward grouping
+            let mut fwd_hooks = HookBackend::for_scheme(
+                scheme,
+                |_, w: &Mat| scheme.quant(w),
+                |_, a: &Mat| scheme.quant(a),
+                |_, e: &Mat| scheme.quant(e),
+            );
+            let tape_h = mlp.forward_exec(&x, &mut fwd_hooks);
+            let grads_h = mlp.backward_exec(&tape_h, &y, &mut hooks);
             let mut be = FakeQuantBackend::new(scheme);
             be.begin_step();
             let tape_b = mlp.forward_exec(&x, &mut be);

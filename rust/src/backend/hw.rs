@@ -1,7 +1,7 @@
 //! The hardware backend: bit-exact GemmCore execution + cost ledger.
 
 use crate::backend::cost::HwCostReport;
-use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, LayerGrads};
+use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
 use crate::energy::{calib, EnergyModel};
 use crate::gemmcore::memory::gemm_traffic_bits;
 use crate::gemmcore::schedule::Stage;
@@ -126,7 +126,7 @@ impl ExecBackend for HardwareBackend {
         let aq = qa.dequantize();
         let (z, z_hw) = {
             let (qw, wq_mat) = self.qw[layer].as_ref().expect("just ensured");
-            let z = gemm_fwd(&aq, wq_mat);
+            let z = gemm_fwd(GemmKernel::for_scheme(self.scheme), &aq, wq_mat);
             let z_hw = self.core.gemm_staged(&qa, qw, Stage::Forward);
             (z, z_hw)
         };
@@ -156,7 +156,7 @@ impl ExecBackend for HardwareBackend {
             Some(_) => self.qw[layer].as_ref().map(|(_, d)| d),
             None => None,
         };
-        let grads = backward_from_quant(&eq, aq, wq_ref);
+        let grads = backward_from_quant(GemmKernel::for_scheme(self.scheme), &eq, aq, wq_ref);
         self.observe(&grads.d_w, &dw_hw, aq.cols, aq.rows, eq.cols, Stage::WeightGrad);
         if let (Some(back), Some(back_hw)) = (grads.back.as_ref(), back_hw_opt.as_ref()) {
             // back = Q(E)[batch, dout] @ Wᵀ[dout, din]

@@ -19,13 +19,24 @@
 //!   cycles, datapath events, event-priced energy, memory traffic) so
 //!   training throughput is *measured on the model* rather than taken
 //!   from the analytic schedule alone.
+//! * [`PackedBackend`] — the sub-word-parallel fast path
+//!   (`--backend packed`): element codes stay bit-packed in u64 lanes
+//!   ([`crate::mx::packed`]), dot products run in integer SWAR
+//!   arithmetic, the per-block scale applies once per 8×8 block, and
+//!   one packed weight copy serves forward and both backward GeMMs via
+//!   the free block-permutation transpose — the paper's throughput and
+//!   storage story executed in software.
 //!
-//! **Equivalence contract** (asserted by `tests/backend.rs` for all six
-//! element formats): both backends produce bit-identical training-graph
-//! values. They quantize through the same MX codecs (`fake_quant_mat_*`
-//! is bit-identical to `quantize`→`dequantize`, the square-block
-//! transpose is a pure permutation) and evaluate GeMMs with the shared
-//! kernels below, so switching backend never changes a loss curve — it
+//! **Equivalence contract** (asserted three-way by `tests/backend.rs`
+//! for all six element formats): all backends produce bit-identical
+//! training-graph values. They quantize through the same MX codecs
+//! (`fake_quant_mat_*` is bit-identical to `quantize`→`dequantize`, the
+//! square-block transpose is a pure permutation) and evaluate GeMMs
+//! under one value semantics per scheme (see [`GemmKernel`]): for
+//! square-block MX schemes that is the block-ordered accumulation of
+//! [`Mat::matmul_blocked`], which the packed SWAR kernels reproduce
+//! exactly because fake-quant values are integers times a per-block
+//! power-of-two unit. Switching backend never changes a loss curve — it
 //! only changes what is accounted. The PE datapath output (FP32
 //! accumulated in hardware order, with the L2 alignment window) deviates
 //! from the shared kernel by at most a few ULP per accumulation chain;
@@ -36,11 +47,14 @@
 mod cost;
 mod fake;
 mod hw;
+mod packed;
 
 pub use cost::HwCostReport;
 pub use fake::FakeQuantBackend;
 pub use hw::HardwareBackend;
+pub use packed::PackedBackend;
 
+use crate::mx::tensor::SQ;
 use crate::trainer::qat::QuantScheme;
 use crate::util::mat::Mat;
 
@@ -89,7 +103,7 @@ pub trait ExecBackend {
     }
 }
 
-/// Which [`ExecBackend`] a session runs (CLI: `--backend fast|hw`).
+/// Which [`ExecBackend`] a session runs (CLI: `--backend fast|hw|packed`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum BackendKind {
     /// Software fake-quantization (the default fast path).
@@ -97,6 +111,8 @@ pub enum BackendKind {
     Fast,
     /// Bit-exact GemmCore simulation with cost accounting.
     Hardware,
+    /// Sub-word-parallel packed SWAR kernels (`mx::packed`).
+    Packed,
 }
 
 impl BackendKind {
@@ -104,6 +120,7 @@ impl BackendKind {
         match s {
             "fast" | "sw" | "fake" => Some(BackendKind::Fast),
             "hw" | "hardware" => Some(BackendKind::Hardware),
+            "packed" | "swar" => Some(BackendKind::Packed),
             _ => None,
         }
     }
@@ -112,13 +129,14 @@ impl BackendKind {
         match self {
             BackendKind::Fast => "fast",
             BackendKind::Hardware => "hw",
+            BackendKind::Packed => "packed",
         }
     }
 }
 
-/// Construct a backend for a scheme. The hardware backend only executes
-/// square-block MX schemes (the datapath the paper builds); other
-/// schemes return an error naming the constraint.
+/// Construct a backend for a scheme. The hardware and packed backends
+/// only execute square-block MX schemes (the datapath the paper
+/// builds); other schemes return an error naming the constraint.
 pub fn make_backend(
     kind: BackendKind,
     scheme: QuantScheme,
@@ -126,22 +144,67 @@ pub fn make_backend(
     match kind {
         BackendKind::Fast => Ok(Box::new(FakeQuantBackend::new(scheme))),
         BackendKind::Hardware => Ok(Box::new(HardwareBackend::new(scheme)?)),
+        BackendKind::Packed => Ok(Box::new(PackedBackend::new(scheme)?)),
     }
 }
 
-/// Shared forward GeMM kernel: both backends evaluate the training-graph
-/// value with this exact call, which is what makes them bit-identical.
-pub(crate) fn gemm_fwd(aq: &Mat, wq: &Mat) -> Mat {
-    aq.matmul(wq)
+/// Which dense GeMM kernel computes the training-graph *values* for a
+/// scheme. Square-block MX schemes use the block-ordered accumulation
+/// of [`Mat::matmul_blocked`] (chunk = the 8-wide block edge): within
+/// one block pair the dot is exact, the per-block scale applies once,
+/// and the f32 partials chain across blocks. That is the semantics the
+/// sub-word packed kernels (`mx::packed`) compute natively, which is
+/// what makes `fast`, `hw`, and `packed` bit-identical — a theorem over
+/// exactly-representable fake-quant values, not a tolerance
+/// (`tests/backend.rs` asserts it three-way). Every other scheme keeps
+/// the plain element-ordered f32 kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum GemmKernel {
+    /// Element-ordered f32 accumulation ([`Mat::matmul`] family).
+    #[default]
+    Plain,
+    /// Per-8-block f64-exact partials, f32 chain across blocks.
+    MxBlock8,
+}
+
+impl GemmKernel {
+    /// The kernel a scheme's training-graph values are defined by.
+    pub fn for_scheme(scheme: QuantScheme) -> GemmKernel {
+        match scheme {
+            QuantScheme::MxSquare(_) => GemmKernel::MxBlock8,
+            _ => GemmKernel::Plain,
+        }
+    }
+}
+
+/// Shared forward GeMM kernel: every backend evaluates the training-
+/// graph value with this exact call, which is what makes them
+/// bit-identical.
+pub(crate) fn gemm_fwd(kernel: GemmKernel, aq: &Mat, wq: &Mat) -> Mat {
+    match kernel {
+        GemmKernel::Plain => aq.matmul(wq),
+        GemmKernel::MxBlock8 => aq.matmul_blocked(wq, SQ),
+    }
 }
 
 /// Shared backward kernels over already-quantized operands: weight
 /// gradient `aqᵀ @ eq`, bias gradient, and (optionally) the error
 /// backprop `eq @ wqᵀ` — both transpose-free.
-pub(crate) fn backward_from_quant(eq: &Mat, aq: &Mat, wq: Option<&Mat>) -> LayerGrads {
-    let d_w = aq.matmul_tn(eq);
+pub(crate) fn backward_from_quant(
+    kernel: GemmKernel,
+    eq: &Mat,
+    aq: &Mat,
+    wq: Option<&Mat>,
+) -> LayerGrads {
+    let d_w = match kernel {
+        GemmKernel::Plain => aq.matmul_tn(eq),
+        GemmKernel::MxBlock8 => aq.matmul_blocked_tn(eq, SQ),
+    };
     let d_b = eq.col_sums();
-    let back = wq.map(|w| eq.matmul_nt(w));
+    let back = wq.map(|w| match kernel {
+        GemmKernel::Plain => eq.matmul_nt(w),
+        GemmKernel::MxBlock8 => eq.matmul_blocked_nt(w, SQ),
+    });
     LayerGrads { d_w, d_b, back }
 }
 
@@ -157,6 +220,7 @@ where
     w_hook: W,
     a_hook: A,
     e_hook: E,
+    kernel: GemmKernel,
 }
 
 impl<W, A, E> HookBackend<W, A, E>
@@ -165,8 +229,17 @@ where
     A: FnMut(usize, &Mat) -> Mat,
     E: FnMut(usize, &Mat) -> Mat,
 {
+    /// Hook backend over the plain element-ordered f32 kernels (the
+    /// golden `forward_with`/`backward_with` and eval semantics).
     pub fn new(w_hook: W, a_hook: A, e_hook: E) -> Self {
-        Self { w_hook, a_hook, e_hook }
+        Self { w_hook, a_hook, e_hook, kernel: GemmKernel::Plain }
+    }
+
+    /// Hook backend evaluating GeMMs with the same kernel the real
+    /// backends use for `scheme` — the configuration that is bitwise
+    /// comparable against [`FakeQuantBackend`] et al. in tests.
+    pub fn for_scheme(scheme: QuantScheme, w_hook: W, a_hook: A, e_hook: E) -> Self {
+        Self { w_hook, a_hook, e_hook, kernel: GemmKernel::for_scheme(scheme) }
     }
 }
 
@@ -185,13 +258,13 @@ where
     fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat) {
         let aq = (self.a_hook)(layer, a);
         let wq = (self.w_hook)(layer, w);
-        let z = gemm_fwd(&aq, &wq);
+        let z = gemm_fwd(self.kernel, &aq, &wq);
         (aq, z)
     }
 
     fn backward_layer(&mut self, layer: usize, e: &Mat, aq: &Mat, w: Option<&Mat>) -> LayerGrads {
         let eq = (self.e_hook)(layer, e);
         let wq = w.map(|w| (self.w_hook)(layer, w));
-        backward_from_quant(&eq, aq, wq.as_ref())
+        backward_from_quant(self.kernel, &eq, aq, wq.as_ref())
     }
 }

@@ -1,0 +1,178 @@
+//! The packed backend: sub-word-parallel SWAR execution of the
+//! training hot path (`--backend packed`).
+
+use crate::backend::{ExecBackend, LayerGrads};
+use crate::mx::element::ElementFormat;
+use crate::mx::packed::{packed_gemm, packed_gemm_nt, PackedTensor};
+use crate::trainer::qat::QuantScheme;
+use crate::util::mat::Mat;
+
+/// Epoch tag for "not quantized yet".
+const NEVER: u64 = u64::MAX;
+
+/// Executes every training-graph GeMM on the bit-packed SWAR kernels of
+/// [`crate::mx::packed`].
+///
+/// Weights are packed **once per step per layer** and that single
+/// packed copy serves all three GeMM cut points: the forward GeMM reads
+/// it directly, the error-backprop GeMM consumes it transposed at zero
+/// cost ([`packed_gemm_nt`] — the lanes already are k-major), and the
+/// weight-gradient GeMM consumes the stored packed *activation* through
+/// the free block-permutation transpose. That is the paper's §IV
+/// single-copy storage argument executed on the hot path rather than
+/// merely checkpointed. Element codes never widen past their format
+/// width until an f32 output is due, and per-block scales apply once
+/// per 8×8 block pair instead of once per element.
+///
+/// Bit-identical to [`super::FakeQuantBackend`] and
+/// [`super::HardwareBackend`] on all six square MX formats (the
+/// three-way assertion in `tests/backend.rs`): all backends share the
+/// block-ordered GeMM value semantics ([`super::GemmKernel::MxBlock8`]),
+/// and over exactly-representable fake-quant values the packed integer
+/// block dots equal the dense f64 block partials bit for bit.
+pub struct PackedBackend {
+    scheme: QuantScheme,
+    fmt: ElementFormat,
+    /// Packed weights, one per layer, refreshed once per step.
+    pw: Vec<Option<PackedTensor>>,
+    /// Step at which `pw[i]` was refreshed (NEVER = stale).
+    pw_step: Vec<u64>,
+    /// Packed activations stored by this step's forward pass.
+    pa: Vec<Option<PackedTensor>>,
+    step: u64,
+}
+
+impl PackedBackend {
+    /// The packed kernels run square-block MX schemes only — FP32 and
+    /// the vector-grouped baselines have no single packed copy to run
+    /// on (their transposed grouping requantizes, which is the very
+    /// cost this datapath removes).
+    pub fn new(scheme: QuantScheme) -> Result<Self, String> {
+        let QuantScheme::MxSquare(fmt) = scheme else {
+            return Err(format!(
+                "packed backend executes square-block MX schemes only (mx-int8 ... mx-e2m1); got `{}`",
+                scheme.name()
+            ));
+        };
+        Ok(Self { scheme, fmt, pw: Vec::new(), pw_step: Vec::new(), pa: Vec::new(), step: 0 })
+    }
+
+    pub fn scheme(&self) -> QuantScheme {
+        self.scheme
+    }
+
+    fn ensure(&mut self, layer: usize) {
+        while self.pw.len() <= layer {
+            self.pw.push(None);
+            self.pw_step.push(NEVER);
+            self.pa.push(None);
+        }
+    }
+
+    /// Refresh the packed weight for this step if stale — quantized and
+    /// packed once, consumed by forward and backward alike.
+    fn ensure_pw(&mut self, layer: usize, w: &Mat) {
+        if self.pw_step[layer] != self.step {
+            self.pw[layer] = Some(PackedTensor::quantize_pack(w, self.fmt));
+            self.pw_step[layer] = self.step;
+        }
+    }
+}
+
+impl ExecBackend for PackedBackend {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn begin_step(&mut self) {
+        self.step += 1;
+    }
+
+    fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat) {
+        self.ensure(layer);
+        let pa = PackedTensor::quantize_pack(a, self.fmt);
+        self.ensure_pw(layer, w);
+        // the tape owns a dense copy of Q(A) (the MLP hands it back to
+        // backward_layer); GeMMs run on the packed codes
+        let aq = pa.dequantize();
+        let z = packed_gemm(&pa, self.pw[layer].as_ref().expect("just ensured"));
+        self.pa[layer] = Some(pa);
+        (aq, z)
+    }
+
+    fn backward_layer(&mut self, layer: usize, e: &Mat, _aq: &Mat, w: Option<&Mat>) -> LayerGrads {
+        self.ensure(layer);
+        let pe = PackedTensor::quantize_pack(e, self.fmt);
+        // weight gradient: the stored packed activation, transposed for
+        // free (block permutation), against Q(E)
+        let pa = self.pa[layer].take().expect("forward_layer must precede backward_layer");
+        let d_w = packed_gemm(&pa.transpose(), &pe);
+        let d_b = pe.col_sums();
+        // error backprop: the same packed weight copy, consumed
+        // transposed at zero cost (row lanes are already k-major)
+        let back = w.map(|w| {
+            self.ensure_pw(layer, w);
+            packed_gemm_nt(&pe, self.pw[layer].as_ref().expect("just ensured"))
+        });
+        LayerGrads { d_w, d_b, back }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::FakeQuantBackend;
+    use crate::mx::dacapo::DacapoFormat;
+    use crate::trainer::mlp::Mlp;
+    use crate::trainer::qat::qat_step_with;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn rejects_non_square_schemes() {
+        for scheme in [
+            QuantScheme::Fp32,
+            QuantScheme::MxVector(ElementFormat::Int8),
+            QuantScheme::Dacapo(DacapoFormat::Mx9),
+        ] {
+            let e = PackedBackend::new(scheme).err().unwrap();
+            assert!(e.contains("square-block"), "{e}");
+        }
+    }
+
+    #[test]
+    fn tracks_fake_backend_across_steps() {
+        // the backend-level pin (the exhaustive three-way equivalence
+        // lives in tests/backend.rs): persistent packed state across
+        // steps reproduces the fake-quant trainer bit for bit
+        let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+        let mut rng = Pcg64::new(0x9AC);
+        let mut mlp_p = Mlp::new(&[16, 24, 8], &mut rng);
+        let mut mlp_f = mlp_p.clone();
+        let x = Mat::randn(12, 16, 1.0, &mut rng);
+        let y = Mat::randn(12, 8, 0.5, &mut rng);
+        let mut packed = PackedBackend::new(scheme).unwrap();
+        let mut fake = FakeQuantBackend::new(scheme);
+        for step in 0..3 {
+            let lp = qat_step_with(&mut mlp_p, &x, &y, &mut packed, 2e-3);
+            let lf = qat_step_with(&mut mlp_f, &x, &y, &mut fake, 2e-3);
+            assert_eq!(lp, lf, "step {step}");
+        }
+        let bits = |m: &Mlp| m.flat_params().iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&mlp_p), bits(&mlp_f));
+    }
+
+    #[test]
+    #[should_panic(expected = "forward_layer must precede backward_layer")]
+    fn double_backward_panics() {
+        let scheme = QuantScheme::MxSquare(ElementFormat::E4M3);
+        let mut rng = Pcg64::new(5);
+        let mlp = Mlp::new(&[8, 8], &mut rng);
+        let x = Mat::randn(4, 8, 1.0, &mut rng);
+        let y = Mat::randn(4, 8, 1.0, &mut rng);
+        let mut be = PackedBackend::new(scheme).unwrap();
+        be.begin_step();
+        let tape = mlp.forward_exec(&x, &mut be);
+        let _ = mlp.backward_exec(&tape, &y, &mut be);
+        let _ = mlp.backward_exec(&tape, &y, &mut be); // second consume
+    }
+}

@@ -329,6 +329,133 @@ pub fn throughput(steps: usize) -> Table {
             println!("[json save failed: {e}]");
         }
     }
+    // the software side of the same story: the packed SWAR backend vs
+    // the fake-quant backend, measured wall-clock on identical sessions
+    // (bit-identical losses — only execution speed differs); lands in
+    // results/ next to the analytic hardware numbers above
+    let sw = sw_backend_wallclock(12);
+    print!("{}", sw.render());
+    match save_csv(&sw, "throughput_sw_packed") {
+        Ok(p) => println!("[saved {}]\n", p.display()),
+        Err(e) => println!("[csv save failed: {e}]\n"),
+    }
+    t
+}
+
+/// Outcome of one [`race_fast_vs_packed`] run.
+pub struct BackendRace {
+    /// Wall-clock seconds of the whole `fast` run / the `packed` run.
+    pub fast_s: f64,
+    pub packed_s: f64,
+    /// Final validation losses agreed bit for bit (the equivalence
+    /// contract; anything else is a bug).
+    pub loss_bit_identical: bool,
+    pub steps: usize,
+}
+
+impl BackendRace {
+    pub fn fast_ms_step(&self) -> f64 {
+        self.fast_s / self.steps as f64 * 1e3
+    }
+
+    pub fn packed_ms_step(&self) -> f64 {
+        self.packed_s / self.steps as f64 * 1e3
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.fast_s / self.packed_s
+    }
+
+    /// The JSON fragment both artifact writers publish.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("fast_ms_step", self.fast_ms_step())
+            .set("packed_ms_step", self.packed_ms_step())
+            .set("speedup", self.speedup())
+            .set("loss_bit_identical", self.loss_bit_identical)
+    }
+}
+
+/// Race the `fast` (dense fake-quant) backend against the `packed`
+/// (sub-word SWAR) backend on identical sessions over `ds` — shared by
+/// `repro throughput` and `examples/dacapo_compare.rs` so the two
+/// published speedup artifacts can never drift apart. Errors when the
+/// scheme has no packed datapath (non-square schemes).
+///
+/// The timed window contains training steps only: one warmup step runs
+/// first (it carries the step-0 eval and fills the backends' scratch /
+/// packed-weight state), and the final validation eval — a dense pass
+/// identical on both backends, which would only dilute the ratio —
+/// happens after the clock stops.
+pub fn race_fast_vs_packed(
+    ds: &Dataset,
+    scheme: QuantScheme,
+    steps: usize,
+) -> Result<BackendRace, String> {
+    use std::time::Instant;
+    let steps = steps.max(1);
+    let run = |backend: BackendKind| -> Result<(f64, f64), String> {
+        let mut s = TrainSession::try_new(
+            ds.clone(),
+            TrainConfig {
+                scheme,
+                backend,
+                steps: steps + 1,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        )
+        .map_err(|e| e.to_string())?;
+        s.step_once(); // warmup: step-0 eval + scratch-buffer fill
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            s.step_once();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        Ok((dt, s.val_loss()))
+    };
+    let (fast_s, loss_fast) = run(BackendKind::Fast)?;
+    let (packed_s, loss_packed) = run(BackendKind::Packed)?;
+    Ok(BackendRace {
+        fast_s,
+        packed_s,
+        loss_bit_identical: loss_fast.to_bits() == loss_packed.to_bits(),
+        steps,
+    })
+}
+
+/// Wall-clock of the two software backends on the same pusher sessions:
+/// `fast` (dense fake-quant GeMMs) vs `packed` (sub-word SWAR kernels).
+/// The loss columns must agree bit for bit (the backend equivalence
+/// contract); the speedup is what the packed execution path buys.
+/// Also saves `results/throughput_packed.json` for the perf trajectory.
+pub fn sw_backend_wallclock(steps: usize) -> Table {
+    use crate::coordinator::report::bench_doc;
+    use crate::util::json::Json;
+    let env = by_name("pusher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 6, 60, 0x7410);
+    let mut t = Table::new(
+        "Measured software training throughput (pusher MLP, batch 32): fast vs packed",
+        &["format", "steps", "fast ms/step", "packed ms/step", "speedup", "bit-identical"],
+    );
+    let mut schemes = Json::obj();
+    for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
+        let race = race_fast_vs_packed(&ds, QuantScheme::MxSquare(fmt), steps)
+            .expect("square MX schemes run on both backends");
+        t.row(vec![
+            fmt.name().to_string(),
+            steps.to_string(),
+            f(race.fast_ms_step(), 3),
+            f(race.packed_ms_step(), 3),
+            format!("{:.2}x", race.speedup()),
+            if race.loss_bit_identical { "yes".into() } else { "NO".into() },
+        ]);
+        schemes = schemes.set(fmt.name(), race.to_json());
+    }
+    let doc = bench_doc("throughput_packed").set("steps", steps).set("schemes", schemes);
+    if let Err(e) = crate::coordinator::report::save_json(&doc, "throughput_packed") {
+        println!("[json save failed: {e}]");
+    }
     t
 }
 
@@ -395,5 +522,16 @@ mod tests {
         let (e, a) = fig7();
         assert!(e.rows.len() >= 8);
         assert!(a.rows.len() == 8);
+    }
+
+    #[test]
+    fn sw_wallclock_backends_stay_bit_identical() {
+        // the measured fast-vs-packed table must report identical losses
+        // on every row — speed is the only thing allowed to differ
+        let t = sw_backend_wallclock(2);
+        assert_eq!(t.rows.len(), 3);
+        for r in &t.rows {
+            assert_eq!(r[5], "yes", "{r:?}");
+        }
     }
 }

@@ -109,6 +109,41 @@ pub fn f(v: f64, decimals: usize) -> String {
     format!("{v:.decimals$}")
 }
 
+/// Version of the `results/BENCH_*.json` layout. Bump when a bench
+/// renames or restructures its metrics so the CI bench-gate can refuse
+/// to diff incomparable baselines instead of mis-reading them.
+pub const BENCH_SCHEMA_VERSION: u32 = 1;
+
+/// The git commit the process is running from: `$GITHUB_SHA` in CI,
+/// else `git rev-parse HEAD`, else "unknown" — benches stamp it into
+/// their baselines so a regression report names both commits.
+pub fn git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.trim().is_empty() {
+            return sha.trim().to_string();
+        }
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Start a `BENCH_*.json` document with the shared stamp every bench
+/// carries: bench name, schema version, git SHA, and worker count.
+pub fn bench_doc(bench: &str) -> Json {
+    Json::obj()
+        .set("bench", bench)
+        .set("schema_version", BENCH_SCHEMA_VERSION as f64)
+        .set("git_sha", git_sha())
+        .set("threads", crate::util::par::threads() as f64)
+}
+
 /// Write a file only when the parent dir exists/creatable (test helper).
 pub fn save_text(dir: &Path, name: &str, text: &str) -> std::io::Result<PathBuf> {
     std::fs::create_dir_all(dir)?;
@@ -130,6 +165,16 @@ mod tests {
         assert!(s.contains("== demo =="));
         assert!(s.contains("longer"));
         assert!(s.lines().count() >= 5);
+    }
+
+    #[test]
+    fn bench_doc_carries_schema_and_sha() {
+        let s = bench_doc("demo").to_string();
+        assert!(s.contains("\"bench\":\"demo\""), "{s}");
+        assert!(s.contains("\"schema_version\":1"), "{s}");
+        assert!(s.contains("\"git_sha\":"), "{s}");
+        assert!(s.contains("\"threads\":"), "{s}");
+        assert!(!git_sha().is_empty());
     }
 
     #[test]

@@ -7,8 +7,11 @@
 //!
 //! * [`mx`] — bit-exact codecs for all six OCP MX formats (MXINT8,
 //!   MXFP8 E5M2/E4M3, MXFP6 E3M2/E2M3, MXFP4 E2M1), vector (32-element)
-//!   and square (8x8, 64-element) shared-exponent block quantizers, and
-//!   the Dacapo MX9/MX6/MX4 two-level shared-microexponent baseline.
+//!   and square (8x8, 64-element) shared-exponent block quantizers, the
+//!   Dacapo MX9/MX6/MX4 two-level shared-microexponent baseline, and
+//!   [`mx::packed`] — sub-word-parallel bit-packed tensors with SWAR
+//!   dot-product/GeMM kernels (the paper's sub-word parallelism,
+//!   executed in software).
 //! * [`arith`] — a bit-exact, cycle-annotated model of the paper's
 //!   precision-scalable MAC unit: sixteen 2-bit multipliers, the
 //!   hierarchical L1/L2 adders, FP32 accumulation with a 26(+2)-bit
@@ -38,10 +41,10 @@
 //!   their checkpoint instead of retraining (`mxscale fleet`,
 //!   `results/fleet_report.json`).
 //! * [`backend`] — the pluggable `ExecBackend` seam between the trainer
-//!   and the hardware model: the fast buffer-reusing fake-quant path and
-//!   the bit-exact `GemmCore` path produce bit-identical training-graph
-//!   values, the latter accumulating a per-session `HwCostReport`
-//!   (cycles, events, energy, memory traffic).
+//!   and the hardware model: the fast buffer-reusing fake-quant path,
+//!   the bit-exact `GemmCore` path (accumulating a per-session
+//!   `HwCostReport` — cycles, events, energy, memory traffic), and the
+//!   packed SWAR path all produce bit-identical training-graph values.
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX train/eval
 //!   graphs (`artifacts/*.hlo.txt`); Python never runs at training time.
 //!   Gated behind the `xla` cargo feature (graceful stubs otherwise).

@@ -198,6 +198,21 @@ mod tests {
     }
 
     #[test]
+    fn int8_fast_path_flushes_negative_zero_like_the_codec() {
+        use super::fake_quant_block_fast;
+        // a negative value far below the block's quantization step rounds
+        // to zero; two's-complement INT8 has no signed zero, so the codec
+        // decodes +0.0 there and the fast path must match it bit-exactly
+        // (round_ties_even alone would leave an IEEE -0.0 behind)
+        let vals = [1000.0f32, -0.01];
+        let mut fast = vals;
+        fake_quant_block_fast(&mut fast, ElementFormat::Int8);
+        assert_eq!(fast[1].to_bits(), 0.0f32.to_bits(), "-0.0 leaked");
+        let b = quantize_block(&vals, ElementFormat::Int8);
+        assert_eq!((b.decode(1) as f32).to_bits(), fast[1].to_bits());
+    }
+
+    #[test]
     fn zero_block_quantizes_to_zeros() {
         for fmt in ALL_ELEMENT_FORMATS {
             let b = quantize_block(&[0.0; 16], fmt);
@@ -234,7 +249,11 @@ pub fn fake_quant_block_fast(values: &mut [f32], format: ElementFormat) {
         ElementFormat::Int8 => {
             for v in values.iter_mut() {
                 let q = (*v as f64 * inv * 64.0).round_ties_even().clamp(-127.0, 127.0);
-                *v = (q / 64.0 * scale) as f32;
+                // `+ 0.0` flushes IEEE -0.0 (negative values rounding to
+                // zero) to +0.0: the two's-complement INT8 codec has no
+                // signed zero, so the codec path decodes +0.0 there and
+                // this path must stay bit-identical to it.
+                *v = ((q + 0.0) / 64.0 * scale) as f32;
             }
         }
         _ => {

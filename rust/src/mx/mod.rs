@@ -11,11 +11,13 @@ pub mod ablation;
 pub mod block;
 pub mod dacapo;
 pub mod element;
+pub mod packed;
 pub mod tensor;
 
 pub use block::{quantize_block, ScaledBlock, SCALE_EMIN, SCALE_EMAX};
 pub use dacapo::{DacapoFormat, DacapoTensor};
 pub use element::ElementFormat;
+pub use packed::{packed_dot, packed_gemm, packed_gemm_nt, PackedTensor};
 pub use tensor::{Layout, MxTensor};
 
 /// A complete MX configuration: element format + block grouping.

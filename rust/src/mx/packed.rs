@@ -1,0 +1,953 @@
+//! Sub-word-parallel packed MX tensors and SWAR GeMM kernels.
+//!
+//! The paper's first innovation is an arithmetic unit that exploits
+//! **sub-word parallelism** across all six MX element formats. This
+//! module is that idea executed in software: element codes stay
+//! bit-packed in `u64` lanes (one lane = one 8-element tile row at the
+//! format's natural width — 8/6/4 bits), dot products run over the
+//! packed codes in integer sub-word arithmetic, and the per-block scale
+//! is applied **once per 8×8 square block** instead of once per element
+//! — exactly where MXDOTP-style designs find their throughput.
+//!
+//! ## Lane layout
+//!
+//! A [`PackedTensor`] stores the `Square8x8` block grid of an
+//! [`MxTensor`]: per tile, 8 lanes (`u64`), lane `i` holding row `i`'s
+//! eight codes at bits `j*w .. (j+1)*w` (LSB-first, `w =
+//! ElementFormat::bits()`), plus one `i8` shared-exponent byte. INT8
+//! tiles are therefore 64 bytes + 1 scale byte — the hardware's own
+//! storage density — and the transpose is the block permutation the
+//! paper builds its single-copy training storage on: one packed weight
+//! image serves the forward GeMM and, via [`PackedTensor::transpose`],
+//! both backward GeMMs.
+//!
+//! ## Value semantics and the bit-identity theorem
+//!
+//! Every kernel here computes the **block-ordered accumulation**
+//! semantics of [`crate::util::mat::Mat::matmul_blocked`] with chunk =
+//! 8: per output element, each 8-deep block-pair dot is evaluated
+//! exactly, rounded to f32 once, and the f32 partials chain across
+//! k-blocks. Fake-quantized MX values are integers times a per-block
+//! power-of-two unit, so the in-block dot is computed in *integer*
+//! sub-word arithmetic:
+//!
+//! * **MXINT8** — SWAR sign-extension of the 8 packed bytes into 16-bit
+//!   lanes (borrow-isolated lane subtraction) and an 8-deep i32
+//!   multiply-accumulate; exact, since |Σ| ≤ 8·127² < 2¹⁷.
+//! * **MXFP4 (E2M1)** — a 16×16 nibble-pair product LUT in units of
+//!   2⁻²; the packed nibbles index it directly.
+//! * **MXFP8 E4M3 / MXFP6** — per-code integer mantissa LUTs in units
+//!   of 2^(emin−mb), accumulated in i64 (≤ 2³⁹ dynamic range).
+//! * **MXFP8 E5M2** — its 63-bit in-block product range exceeds exact
+//!   i64 (and f64-chain exactness), so the packed kernel evaluates the
+//!   same f64 chain as the dense kernel over a code-value LUT — equal
+//!   by construction rather than by exactness.
+//!
+//! In every case the block partial is bitwise the one the dense
+//! blocked kernel produces on the dequantized operands (the integer
+//! sums sit well inside f64's 53-bit window, scales are exact powers of
+//! two), so `packed_gemm` == `matmul_blocked` is a **theorem** the
+//! tests assert with `==` on f32 bits — no tolerances anywhere
+//! (`tests/packed.rs`, `tests/backend.rs`).
+
+use crate::mx::block::shared_exponent;
+use crate::mx::element::{exp2i, ElementFormat};
+use crate::mx::tensor::{Layout, MxTensor, SQ, SQ_ELEMS};
+use crate::mx::ALL_ELEMENT_FORMATS;
+use crate::util::mat::Mat;
+use crate::util::par;
+use std::sync::OnceLock;
+
+// ------------------------------------------------------------------ SWAR
+
+/// 16-bit lane masks over a u64 (4 lanes).
+const LANE_LO: u64 = 0x00ff_00ff_00ff_00ff;
+const LANE_BIAS: u64 = 0x0080_0080_0080_0080;
+const LANE_TOP: u64 = 0x8000_8000_8000_8000;
+
+/// Lane-wise 16-bit subtraction with borrow isolation (Hacker's
+/// Delight §2-18): setting each lane's top bit before the full-width
+/// subtract guarantees no borrow crosses a lane boundary; the XOR term
+/// restores the true top bit per lane.
+#[inline(always)]
+fn swar_sub16(x: u64, y: u64) -> u64 {
+    let d = (x | LANE_TOP).wrapping_sub(y & !LANE_TOP);
+    d ^ ((x ^ !y) & LANE_TOP)
+}
+
+/// Sign-extend four packed bytes (at bits 0,16,32,48 of `x & LANE_LO`)
+/// into 16-bit two's-complement lanes, all four in parallel: bias by
+/// 0x80 per lane, then the borrow-isolated lane subtract undoes it with
+/// the sign carried into the upper byte.
+#[inline(always)]
+fn swar_sext_bytes(x: u64) -> u64 {
+    swar_sub16((x & LANE_LO) ^ LANE_BIAS, LANE_BIAS)
+}
+
+#[inline(always)]
+fn lane16(x: u64, sh: u32) -> i32 {
+    (x >> sh) as u16 as i16 as i32
+}
+
+/// Exact 8-deep dot product of two INT8 lanes (8 packed two's-complement
+/// bytes each): SWAR sign-extension into sub-word 16-bit lanes, then
+/// multiply-accumulate. |result| ≤ 8·128² — exact in i32.
+#[inline(always)]
+pub fn dot8_i8(a: u64, b: u64) -> i32 {
+    let (ae, ao) = (swar_sext_bytes(a), swar_sext_bytes(a >> 8));
+    let (be, bo) = (swar_sext_bytes(b), swar_sext_bytes(b >> 8));
+    let mut s = 0i32;
+    for sh in [0u32, 16, 32, 48] {
+        s += lane16(ae, sh) * lane16(be, sh) + lane16(ao, sh) * lane16(bo, sh);
+    }
+    s
+}
+
+/// Scalar reference for [`dot8_i8`] — the oracle the SWAR kernel is
+/// tested against (exhaustive boundary grids in the module tests).
+pub fn dot8_i8_scalar(a: u64, b: u64) -> i32 {
+    let mut s = 0i32;
+    for k in 0..8 {
+        let av = (a >> (8 * k)) as u8 as i8 as i32;
+        let bv = (b >> (8 * k)) as u8 as i8 as i32;
+        s += av * bv;
+    }
+    s
+}
+
+/// In-register 8×8 byte-matrix transpose over 8 u64 row lanes: three
+/// masked block-swap rounds (4×4-byte, 2×2-byte, 1×1-byte corners) —
+/// the classic SWAR transpose, used to turn a packed INT8 tile's rows
+/// into its columns without touching memory.
+pub fn transpose8x8_bytes(t: &mut [u64; 8]) {
+    // round 1: swap the off-diagonal 4x4-byte blocks
+    const M4: u64 = 0x0000_0000_ffff_ffff;
+    for i in 0..4 {
+        let (u, v) = (t[i], t[i + 4]);
+        t[i] = (u & M4) | ((v & M4) << 32);
+        t[i + 4] = ((u >> 32) & M4) | (v & !M4);
+    }
+    // round 2: swap off-diagonal 2x2-byte blocks within each 4-row half
+    const M2: u64 = 0x0000_ffff_0000_ffff;
+    for g in [0usize, 4] {
+        for i in g..g + 2 {
+            let (u, v) = (t[i], t[i + 2]);
+            t[i] = (u & M2) | ((v & M2) << 16);
+            t[i + 2] = ((u >> 16) & M2) | (v & !M2);
+        }
+    }
+    // round 3: swap off-diagonal single bytes within each 2-row pair
+    const M1: u64 = 0x00ff_00ff_00ff_00ff;
+    for g in [0usize, 2, 4, 6] {
+        let (u, v) = (t[g], t[g + 1]);
+        t[g] = (u & M1) | ((v & M1) << 8);
+        t[g + 1] = ((u >> 8) & M1) | (v & !M1);
+    }
+}
+
+// ------------------------------------------------------------------ LUTs
+
+fn fmt_index(fmt: ElementFormat) -> usize {
+    ALL_ELEMENT_FORMATS.iter().position(|f| *f == fmt).expect("one of the six")
+}
+
+static VAL_LUTS: [OnceLock<[f64; 256]>; 6] = [
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+];
+
+/// Per-code decoded value (`ElementFormat::decode`), 256 entries.
+fn val_lut(fmt: ElementFormat) -> &'static [f64; 256] {
+    VAL_LUTS[fmt_index(fmt)].get_or_init(|| {
+        let mut t = [0.0f64; 256];
+        for (c, slot) in t.iter_mut().enumerate().take(fmt.code_count()) {
+            *slot = fmt.decode(c as u8);
+        }
+        t
+    })
+}
+
+static INT_LUTS: [OnceLock<[i32; 256]>; 6] = [
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+    OnceLock::new(),
+];
+
+/// Per-code integer mantissa in units of 2^(emin−mb) — exact, because
+/// every representable value (subnormals included) is an integer
+/// multiple of that unit. Not built for E5M2 (57344·2¹⁶ overflows i32;
+/// that format takes the f64 path) nor INT8 (codes *are* the integers).
+fn int_lut(fmt: ElementFormat) -> &'static [i32; 256] {
+    debug_assert!(!matches!(fmt, ElementFormat::E5M2 | ElementFormat::Int8));
+    INT_LUTS[fmt_index(fmt)].get_or_init(|| {
+        let unit = exp2i(fmt.emin() - fmt.mant_bits() as i32);
+        let mut t = [0i32; 256];
+        for (c, slot) in t.iter_mut().enumerate().take(fmt.code_count()) {
+            *slot = (fmt.decode(c as u8) / unit) as i32;
+        }
+        t
+    })
+}
+
+static E2M1_PAIR: OnceLock<[i32; 256]> = OnceLock::new();
+
+/// 16×16 nibble-pair product LUT for E2M1 in units of 2⁻² — the INT4
+/// sub-word path: a packed nibble pair indexes the product directly.
+fn e2m1_pair_lut() -> &'static [i32; 256] {
+    E2M1_PAIR.get_or_init(|| {
+        let f = ElementFormat::E2M1;
+        let mut t = [0i32; 256];
+        for a in 0..16usize {
+            for b in 0..16usize {
+                t[(a << 4) | b] = (f.decode(a as u8) * f.decode(b as u8) * 4.0) as i32;
+            }
+        }
+        t
+    })
+}
+
+/// Exponent of the per-block-pair product unit: the two operand scales
+/// add to it, and the sum of one tile-pair dot is an exact integer in
+/// this unit (0 marks the f64-path format, which carries no unit).
+fn unit_exp(fmt: ElementFormat) -> i32 {
+    match fmt {
+        ElementFormat::Int8 => -12, // (2^-6)^2
+        ElementFormat::E5M2 => 0,   // f64 chain, values carry their exponents
+        _ => 2 * (fmt.emin() - fmt.mant_bits() as i32),
+    }
+}
+
+#[inline(always)]
+fn lane_code(lane: u64, j: usize, w: u32) -> usize {
+    ((lane >> (j as u32 * w)) & ((1u64 << w) - 1)) as usize
+}
+
+// -------------------------------------------------------- packed tensor
+
+/// Block count below which packing stays serial (mirrors
+/// `mx::tensor`'s fork gate).
+const PAR_MIN_BLOCKS: usize = 256;
+/// Element count below which banded walks stay serial.
+const PAR_MIN_ELEMS: usize = 1 << 15;
+
+fn band_min_chunks(elems: usize, bands: usize) -> usize {
+    if elems >= PAR_MIN_ELEMS {
+        bands
+    } else {
+        usize::MAX
+    }
+}
+
+/// A square-block MX tensor with its element codes bit-packed into u64
+/// lanes — the storage the SWAR GeMM kernels execute on directly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackedTensor {
+    pub rows: usize,
+    pub cols: usize,
+    pub format: ElementFormat,
+    /// 8×8 block grid dims.
+    pub brows: usize,
+    pub bcols: usize,
+    /// Shared exponent per block, row-major block order.
+    pub scales: Vec<i8>,
+    /// 8 lanes per block (lane = tile row, codes at the format width,
+    /// LSB-first), row-major block order.
+    pub lanes: Vec<u64>,
+}
+
+impl PackedTensor {
+    /// Bit-pack an already-quantized square tensor. Errors on vector
+    /// layout (its transposed grouping has no single packed copy — the
+    /// very storage cost the paper's square blocks remove).
+    pub fn pack(q: &MxTensor) -> Result<PackedTensor, String> {
+        if q.layout != Layout::Square8x8 {
+            return Err(format!(
+                "packed kernels run on square 8x8 blocks; got layout `{}`",
+                q.layout.name()
+            ));
+        }
+        let w = q.format.bits();
+        let mut scales = Vec::with_capacity(q.blocks.len());
+        let mut lanes = vec![0u64; q.blocks.len() * SQ];
+        for (t, b) in q.blocks.iter().enumerate() {
+            debug_assert_eq!(b.codes.len(), SQ_ELEMS);
+            scales.push(b.scale_exp as i8);
+            for i in 0..SQ {
+                let mut lane = 0u64;
+                for j in 0..SQ {
+                    lane |= (b.codes[i * SQ + j] as u64) << (j as u32 * w);
+                }
+                lanes[t * SQ + i] = lane;
+            }
+        }
+        Ok(PackedTensor {
+            rows: q.rows,
+            cols: q.cols,
+            format: q.format,
+            brows: q.brows,
+            bcols: q.bcols,
+            scales,
+            lanes,
+        })
+    }
+
+    /// Quantize a dense matrix straight into packed form — bit-identical
+    /// codes and scales to `MxTensor::quantize(m, fmt, Square8x8)`
+    /// followed by [`PackedTensor::pack`] (asserted by
+    /// `tests/packed.rs`), without materializing the intermediate
+    /// per-block `Vec<u8>`s.
+    pub fn quantize_pack(m: &Mat, format: ElementFormat) -> PackedTensor {
+        let brows = m.rows.div_ceil(SQ);
+        let bcols = m.cols.div_ceil(SQ);
+        let w = format.bits();
+        let tiles = par::par_map(brows * bcols, PAR_MIN_BLOCKS, |t| {
+            let (br, bc) = (t / bcols, t % bcols);
+            let mut vals = [0.0f32; SQ_ELEMS];
+            for i in 0..SQ {
+                for j in 0..SQ {
+                    let (r, c) = (br * SQ + i, bc * SQ + j);
+                    if r < m.rows && c < m.cols {
+                        vals[i * SQ + j] = m.at(r, c);
+                    }
+                }
+            }
+            let se = shared_exponent(&vals, format);
+            let inv = exp2i(-se);
+            let mut lanes = [0u64; SQ];
+            for i in 0..SQ {
+                for j in 0..SQ {
+                    let code = format.encode(vals[i * SQ + j] as f64 * inv);
+                    lanes[i] |= (code as u64) << (j as u32 * w);
+                }
+            }
+            (se as i8, lanes)
+        });
+        let mut scales = Vec::with_capacity(tiles.len());
+        let mut lanes = Vec::with_capacity(tiles.len() * SQ);
+        for (se, tl) in tiles {
+            scales.push(se);
+            lanes.extend_from_slice(&tl);
+        }
+        PackedTensor { rows: m.rows, cols: m.cols, format, brows, bcols, scales, lanes }
+    }
+
+    /// The 8 lanes of block (br, bc).
+    #[inline]
+    pub fn tile(&self, br: usize, bc: usize) -> &[u64] {
+        let t = (br * self.bcols + bc) * SQ;
+        &self.lanes[t..t + SQ]
+    }
+
+    /// Shared exponent of block (br, bc).
+    #[inline]
+    pub fn scale_exp(&self, br: usize, bc: usize) -> i32 {
+        self.scales[br * self.bcols + bc] as i32
+    }
+
+    /// Unpack back to the code-per-byte [`MxTensor`] form (bit-exact
+    /// inverse of [`PackedTensor::pack`]).
+    pub fn unpack(&self) -> MxTensor {
+        use crate::mx::block::ScaledBlock;
+        let w = self.format.bits();
+        let mut blocks = Vec::with_capacity(self.brows * self.bcols);
+        for t in 0..self.brows * self.bcols {
+            let mut codes = vec![0u8; SQ_ELEMS];
+            for i in 0..SQ {
+                let lane = self.lanes[t * SQ + i];
+                for j in 0..SQ {
+                    codes[i * SQ + j] = lane_code(lane, j, w) as u8;
+                }
+            }
+            blocks.push(ScaledBlock {
+                scale_exp: self.scales[t] as i32,
+                format: self.format,
+                codes,
+            });
+        }
+        MxTensor {
+            rows: self.rows,
+            cols: self.cols,
+            format: self.format,
+            layout: Layout::Square8x8,
+            blocks,
+            brows: self.brows,
+            bcols: self.bcols,
+        }
+    }
+
+    /// Dequantize to a dense matrix — bit-identical to
+    /// `MxTensor::dequantize` of the unpacked tensor (same decode, same
+    /// f64 scale multiply, same f32 rounding).
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        let (cols, w) = (self.cols, self.format.bits());
+        let vals = val_lut(self.format);
+        let min_chunks = band_min_chunks(self.rows * cols, self.brows);
+        par::par_chunks_mut(&mut m.data, SQ * cols, min_chunks, |br, band| {
+            let band_rows = if cols == 0 { 0 } else { band.len() / cols };
+            for bc in 0..self.bcols {
+                let tile = self.tile(br, bc);
+                let scale = exp2i(self.scale_exp(br, bc));
+                for (i, lane) in tile.iter().enumerate().take(band_rows) {
+                    for j in 0..SQ {
+                        let c = bc * SQ + j;
+                        if c < cols {
+                            band[i * cols + c] = (vals[lane_code(*lane, j, w)] * scale) as f32;
+                        }
+                    }
+                }
+            }
+        });
+        m
+    }
+
+    /// Transpose as a pure block permutation + in-register tile
+    /// transpose — no requantization, no scale change: the paper's
+    /// single-copy storage executed on the packed image. INT8 tiles use
+    /// the SWAR byte-matrix transpose.
+    pub fn transpose(&self) -> PackedTensor {
+        let mut lanes = vec![0u64; self.lanes.len()];
+        let mut scales = vec![0i8; self.scales.len()];
+        for br in 0..self.brows {
+            for bc in 0..self.bcols {
+                let t = tile_transposed(self.tile(br, bc), self.format.bits());
+                let dst = bc * self.brows + br;
+                lanes[dst * SQ..(dst + 1) * SQ].copy_from_slice(&t);
+                scales[dst] = self.scales[br * self.bcols + bc];
+            }
+        }
+        PackedTensor {
+            rows: self.cols,
+            cols: self.rows,
+            format: self.format,
+            brows: self.bcols,
+            bcols: self.brows,
+            scales,
+            lanes,
+        }
+    }
+
+    /// Column sums of the dequantized matrix (bias gradients) without
+    /// materializing it — f32 accumulation in the same (row-major)
+    /// order as `Mat::col_sums`, so the result is bit-identical.
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut s = vec![0.0f32; self.cols];
+        let (w, vals) = (self.format.bits(), val_lut(self.format));
+        for r in 0..self.rows {
+            let (br, i) = (r / SQ, r % SQ);
+            for bc in 0..self.bcols {
+                let lane = self.tile(br, bc)[i];
+                let scale = exp2i(self.scale_exp(br, bc));
+                for j in 0..SQ {
+                    let c = bc * SQ + j;
+                    if c < self.cols {
+                        s[c] += (vals[lane_code(lane, j, w)] * scale) as f32;
+                    }
+                }
+            }
+        }
+        s
+    }
+
+    /// Packed storage footprint in bytes (lanes + scale bytes).
+    pub fn storage_bytes(&self) -> usize {
+        self.lanes.len() * 8 + self.scales.len()
+    }
+}
+
+/// Transpose one tile's lanes (rows become columns). 8-bit codes take
+/// the SWAR byte-matrix path; narrower widths repack through code
+/// extraction.
+fn tile_transposed(tile: &[u64], w: u32) -> [u64; 8] {
+    let mut t = [0u64; SQ];
+    if w == 8 {
+        t.copy_from_slice(tile);
+        transpose8x8_bytes(&mut t);
+    } else {
+        for (i, lane) in tile.iter().enumerate() {
+            for j in 0..SQ {
+                t[j] |= (lane_code(*lane, j, w) as u64) << (i as u32 * w);
+            }
+        }
+    }
+    t
+}
+
+// --------------------------------------------------------- dot kernels
+
+/// One lane-pair (8-deep) dot, scaled to an f32 partial. `scale` is
+/// `2^(sa + sb + unit_exp)` for the integer paths and `2^(sa + sb)` for
+/// the E5M2 f64 path.
+#[inline]
+fn lane_partial(fmt: ElementFormat, a: u64, b: u64, scale: f64) -> f32 {
+    match fmt {
+        ElementFormat::Int8 => (dot8_i8(a, b) as f64 * scale) as f32,
+        ElementFormat::E2M1 => {
+            let pair = e2m1_pair_lut();
+            let mut s = 0i32;
+            for k in 0..SQ {
+                let idx = (lane_code(a, k, 4) << 4) | lane_code(b, k, 4);
+                s += pair[idx];
+            }
+            (s as f64 * scale) as f32
+        }
+        ElementFormat::E5M2 => {
+            let vals = val_lut(fmt);
+            let mut p = 0.0f64;
+            for k in 0..SQ {
+                p += vals[lane_code(a, k, 8)] * vals[lane_code(b, k, 8)];
+            }
+            (p * scale) as f32
+        }
+        _ => {
+            let (lut, w) = (int_lut(fmt), fmt.bits());
+            let mut s = 0i64;
+            for k in 0..SQ {
+                s += lut[lane_code(a, k, w)] as i64 * lut[lane_code(b, k, w)] as i64;
+            }
+            (s as f64 * scale) as f32
+        }
+    }
+}
+
+/// Accumulate one tile-pair's 64 scaled partials into `acc` (row-major
+/// 8×8). `a` holds the left tile's rows; `bk` holds the right tile's
+/// **k-major** lanes (its columns for a plain GeMM, its rows when the
+/// right operand is consumed transposed).
+fn tile_partials(fmt: ElementFormat, a: &[u64], bk: &[u64], scale: f64, acc: &mut [f32; 64]) {
+    match fmt {
+        ElementFormat::Int8 => {
+            for i in 0..SQ {
+                let al = a[i];
+                for j in 0..SQ {
+                    acc[i * SQ + j] += (dot8_i8(al, bk[j]) as f64 * scale) as f32;
+                }
+            }
+        }
+        ElementFormat::E2M1 => {
+            let pair = e2m1_pair_lut();
+            for i in 0..SQ {
+                let al = a[i];
+                for j in 0..SQ {
+                    let bl = bk[j];
+                    let mut s = 0i32;
+                    for k in 0..SQ {
+                        s += pair[(lane_code(al, k, 4) << 4) | lane_code(bl, k, 4)];
+                    }
+                    acc[i * SQ + j] += (s as f64 * scale) as f32;
+                }
+            }
+        }
+        ElementFormat::E5M2 => {
+            let vals = val_lut(fmt);
+            // pre-decode both tiles once; the chain itself must stay in
+            // ascending-k order (f64 rounding order is the contract)
+            let mut ad = [[0.0f64; SQ]; SQ];
+            let mut bd = [[0.0f64; SQ]; SQ];
+            for i in 0..SQ {
+                for k in 0..SQ {
+                    ad[i][k] = vals[lane_code(a[i], k, 8)];
+                    bd[i][k] = vals[lane_code(bk[i], k, 8)];
+                }
+            }
+            for i in 0..SQ {
+                for j in 0..SQ {
+                    let mut p = 0.0f64;
+                    for k in 0..SQ {
+                        p += ad[i][k] * bd[j][k];
+                    }
+                    acc[i * SQ + j] += (p * scale) as f32;
+                }
+            }
+        }
+        _ => {
+            let (lut, w) = (int_lut(fmt), fmt.bits());
+            let mut ad = [[0i64; SQ]; SQ];
+            let mut bd = [[0i64; SQ]; SQ];
+            for i in 0..SQ {
+                for k in 0..SQ {
+                    ad[i][k] = lut[lane_code(a[i], k, w)] as i64;
+                    bd[i][k] = lut[lane_code(bk[i], k, w)] as i64;
+                }
+            }
+            for i in 0..SQ {
+                for j in 0..SQ {
+                    let mut s = 0i64;
+                    for k in 0..SQ {
+                        s += ad[i][k] * bd[j][k];
+                    }
+                    acc[i * SQ + j] += (s as f64 * scale) as f32;
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------- GeMMs
+
+/// `a @ b` over packed operands. The right operand's tiles are
+/// transposed to k-major lanes once up front (O(n²), SWAR for INT8);
+/// the O(n³) inner walk then runs register-tiled 8×8×8 block products
+/// with one scale application per block pair. Parallel over 8-row
+/// output bands, bit-identical to
+/// `a.dequantize().matmul_blocked(&b.dequantize(), 8)`.
+pub fn packed_gemm(a: &PackedTensor, b: &PackedTensor) -> Mat {
+    assert_eq!(a.format, b.format, "format mismatch");
+    assert_eq!(a.cols, b.rows, "inner dims mismatch");
+    let fmt = a.format;
+    let unit = unit_exp(fmt);
+    // pre-transpose b's tiles so the inner loop reads k-major lanes
+    let mut bt = vec![0u64; b.lanes.len()];
+    for t in 0..b.brows * b.bcols {
+        bt[t * SQ..(t + 1) * SQ].copy_from_slice(&tile_transposed(
+            &b.lanes[t * SQ..(t + 1) * SQ],
+            fmt.bits(),
+        ));
+    }
+    let (m, n) = (a.rows, b.cols);
+    let kb_n = a.bcols;
+    debug_assert_eq!(kb_n, b.brows);
+    let mut out = Mat::zeros(m, n);
+    let min_chunks = band_min_chunks(m * n, a.brows);
+    par::par_chunks_mut(&mut out.data, SQ * n, min_chunks, |bi, band| {
+        let band_rows = if n == 0 { 0 } else { band.len() / n };
+        for bj in 0..b.bcols {
+            let mut acc = [0.0f32; SQ_ELEMS];
+            for kb in 0..kb_n {
+                let bk = &bt[(kb * b.bcols + bj) * SQ..(kb * b.bcols + bj + 1) * SQ];
+                let se = a.scale_exp(bi, kb) + b.scale_exp(kb, bj) + unit;
+                tile_partials(fmt, a.tile(bi, kb), bk, exp2i(se), &mut acc);
+            }
+            for i in 0..band_rows {
+                for j in 0..SQ {
+                    let c = bj * SQ + j;
+                    if c < n {
+                        band[i * n + c] = acc[i * SQ + j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `a @ bᵀ` over packed operands — the transposed consumption is
+/// **free**: `b`'s row lanes already are the k-major lanes the tile
+/// kernel wants, so no tile is transposed and no second copy exists
+/// (the paper's backward-pass storage story, executed). Bit-identical
+/// to `a.dequantize().matmul_blocked_nt(&b.dequantize(), 8)`.
+pub fn packed_gemm_nt(a: &PackedTensor, b: &PackedTensor) -> Mat {
+    assert_eq!(a.format, b.format, "format mismatch");
+    assert_eq!(a.cols, b.cols, "inner dims mismatch");
+    let fmt = a.format;
+    let unit = unit_exp(fmt);
+    let (m, n) = (a.rows, b.rows);
+    let kb_n = a.bcols;
+    debug_assert_eq!(kb_n, b.bcols);
+    let mut out = Mat::zeros(m, n);
+    let min_chunks = band_min_chunks(m * n, a.brows);
+    par::par_chunks_mut(&mut out.data, SQ * n, min_chunks, |bi, band| {
+        let band_rows = if n == 0 { 0 } else { band.len() / n };
+        for bj in 0..b.brows {
+            let mut acc = [0.0f32; SQ_ELEMS];
+            for kb in 0..kb_n {
+                let se = a.scale_exp(bi, kb) + b.scale_exp(bj, kb) + unit;
+                tile_partials(fmt, a.tile(bi, kb), b.tile(bj, kb), exp2i(se), &mut acc);
+            }
+            for i in 0..band_rows {
+                for j in 0..SQ {
+                    let c = bj * SQ + j;
+                    if c < n {
+                        band[i * n + c] = acc[i * SQ + j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Single dot product `a[ar, :] · b[br, :]` over packed operands (one
+/// output element of [`packed_gemm_nt`]) — the block-dot primitive,
+/// exposed for tests and spot checks.
+pub fn packed_dot(a: &PackedTensor, ar: usize, b: &PackedTensor, br: usize) -> f32 {
+    assert_eq!(a.format, b.format, "format mismatch");
+    assert_eq!(a.cols, b.cols, "inner dims mismatch");
+    assert!(ar < a.rows && br < b.rows, "row out of range");
+    let fmt = a.format;
+    let unit = unit_exp(fmt);
+    let mut s = 0.0f32;
+    for kb in 0..a.bcols {
+        let al = a.tile(ar / SQ, kb)[ar % SQ];
+        let bl = b.tile(br / SQ, kb)[br % SQ];
+        let se = a.scale_exp(ar / SQ, kb) + b.scale_exp(br / SQ, kb) + unit;
+        s += lane_partial(fmt, al, bl, exp2i(se));
+    }
+    s
+}
+
+impl MxTensor {
+    /// Bit-pack this (square-layout) tensor for the SWAR kernels.
+    pub fn pack(&self) -> Result<PackedTensor, String> {
+        PackedTensor::pack(self)
+    }
+
+    /// `self @ other` through the packed SWAR kernels (convenience:
+    /// packs both operands; the backends hold [`PackedTensor`]s
+    /// directly so packing amortizes over a whole training step).
+    pub fn packed_gemm(&self, other: &MxTensor) -> Result<Mat, String> {
+        Ok(crate::mx::packed::packed_gemm(&self.pack()?, &other.pack()?))
+    }
+
+    /// Row-dot `self[r, :] · other[o, :]` through the packed kernels.
+    pub fn packed_dot(&self, r: usize, other: &MxTensor, o: usize) -> Result<f32, String> {
+        Ok(crate::mx::packed::packed_dot(&self.pack()?, r, &other.pack()?, o))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Boundary byte values for the INT8 oracle grid: sign boundaries,
+    /// lane-carry extremes, and the encoder's saturation points.
+    const I8_BOUNDARY: [i8; 12] = [-128, -127, -65, -64, -63, -1, 0, 1, 63, 64, 126, 127];
+
+    fn lane_of(bytes: [i8; 8]) -> u64 {
+        let mut l = 0u64;
+        for (k, b) in bytes.into_iter().enumerate() {
+            l |= (b as u8 as u64) << (8 * k);
+        }
+        l
+    }
+
+    #[test]
+    fn swar_sub16_isolates_lane_borrows() {
+        // lanes that individually underflow must not borrow from their
+        // neighbors; check every lane against scalar 16-bit arithmetic
+        let cases = [0u16, 1, 0x7f, 0x80, 0xff, 0x100, 0x7fff, 0x8000, 0xffff];
+        for &x0 in &cases {
+            for &y0 in &cases {
+                // place the interesting pair in each lane, surrounded by
+                // maximally-borrowing neighbors
+                for lane in 0..4 {
+                    let mut x = 0u64;
+                    let mut y = 0u64;
+                    for l in 0..4 {
+                        let (xv, yv) = if l == lane { (x0, y0) } else { (0u16, 0xffffu16) };
+                        x |= (xv as u64) << (16 * l);
+                        y |= (yv as u64) << (16 * l);
+                    }
+                    let got = swar_sub16(x, y);
+                    for l in 0..4 {
+                        let xl = (x >> (16 * l)) as u16;
+                        let yl = (y >> (16 * l)) as u16;
+                        let want = xl.wrapping_sub(yl);
+                        assert_eq!(
+                            (got >> (16 * l)) as u16,
+                            want,
+                            "lane {l}: {xl:#x} - {yl:#x}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swar_sign_extension_matches_scalar_for_every_byte() {
+        for v in 0..=255u8 {
+            for k in 0..8usize {
+                // neighbor lanes hold the worst carry generators
+                let mut bytes = [[0x80u8; 8], [0x7f; 8], [0xff; 8]][k % 3];
+                bytes[k] = v;
+                let lane = u64::from_le_bytes(bytes);
+                let (e, o) = (swar_sext_bytes(lane), swar_sext_bytes(lane >> 8));
+                let src = if k % 2 == 0 { e } else { o };
+                let got = lane16(src, 16 * (k as u32 / 2));
+                assert_eq!(got, v as i8 as i32, "byte {v:#x} in lane {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn dot8_i8_matches_scalar_on_boundary_grid() {
+        // every boundary pair, in every lane position, with the other
+        // lanes alternating extreme values (lane-carry isolation)
+        for &a in &I8_BOUNDARY {
+            for &b in &I8_BOUNDARY {
+                for k in 0..8usize {
+                    let mut av = [127i8; 8];
+                    let mut bv = [-128i8; 8];
+                    av[(k + 3) % 8] = -128;
+                    bv[(k + 5) % 8] = 127;
+                    av[k] = a;
+                    bv[k] = b;
+                    let (la, lb) = (lane_of(av), lane_of(bv));
+                    assert_eq!(
+                        dot8_i8(la, lb),
+                        dot8_i8_scalar(la, lb),
+                        "a={a} b={b} lane {k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dot8_i8_matches_scalar_on_random_lanes() {
+        let mut rng = Pcg64::new(0x5A4);
+        for _ in 0..20_000 {
+            let (a, b) = (rng.next_u64(), rng.next_u64());
+            assert_eq!(dot8_i8(a, b), dot8_i8_scalar(a, b), "a={a:#x} b={b:#x}");
+        }
+    }
+
+    #[test]
+    fn dot8_i8_accumulator_extremes_are_exact() {
+        // the most positive and most negative exact sums: no i32
+        // saturation or wraparound anywhere in the SWAR pipeline
+        let all = |v: i8| lane_of([v; 8]);
+        assert_eq!(dot8_i8(all(127), all(127)), 8 * 127 * 127);
+        assert_eq!(dot8_i8(all(-128), all(-128)), 8 * 128 * 128);
+        assert_eq!(dot8_i8(all(-128), all(127)), -8 * 128 * 127);
+        assert_eq!(dot8_i8(all(127), all(-128)), -8 * 128 * 127);
+        assert_eq!(dot8_i8(all(0), all(-128)), 0);
+    }
+
+    #[test]
+    fn e2m1_pair_lut_exhaustive_against_decode_products() {
+        // every INT4×INT4 (nibble) code pair — the full 16×16 table
+        let f = ElementFormat::E2M1;
+        let pair = e2m1_pair_lut();
+        for a in 0..16u8 {
+            for b in 0..16u8 {
+                let want = f.decode(a) * f.decode(b) * 4.0;
+                assert_eq!(pair[((a as usize) << 4) | b as usize] as f64, want, "{a:#x}x{b:#x}");
+                assert_eq!(want.fract(), 0.0, "product not integral in 2^-2 units");
+            }
+        }
+    }
+
+    #[test]
+    fn int_luts_are_exact_code_values() {
+        let luttable = [
+            ElementFormat::E4M3,
+            ElementFormat::E3M2,
+            ElementFormat::E2M3,
+            ElementFormat::E2M1,
+        ];
+        for fmt in luttable {
+            let lut = int_lut(fmt);
+            let unit = exp2i(fmt.emin() - fmt.mant_bits() as i32);
+            for c in 0..fmt.code_count() {
+                if fmt.is_special(c as u8) {
+                    continue; // E4M3 NaN codes: never emitted, not gated
+                }
+                let want = fmt.decode(c as u8);
+                let got = lut[c] as f64 * unit;
+                assert_eq!(got.to_bits(), want.to_bits(), "{fmt:?} code {c:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn val_lut_matches_decode_for_all_formats() {
+        for fmt in ALL_ELEMENT_FORMATS {
+            let lut = val_lut(fmt);
+            for c in 0..fmt.code_count() {
+                let want = fmt.decode(c as u8);
+                let got = lut[c];
+                if want.is_nan() {
+                    assert!(got.is_nan(), "{fmt:?} code {c:#x}");
+                } else {
+                    assert_eq!(got.to_bits(), want.to_bits(), "{fmt:?} code {c:#x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swar_byte_transpose_matches_naive() {
+        let mut rng = Pcg64::new(0x78A);
+        for _ in 0..500 {
+            let mut t = [0u64; 8];
+            for l in t.iter_mut() {
+                *l = rng.next_u64();
+            }
+            let mut got = t;
+            transpose8x8_bytes(&mut got);
+            for i in 0..8 {
+                for j in 0..8 {
+                    let want = (t[i] >> (8 * j)) as u8;
+                    let have = (got[j] >> (8 * i)) as u8;
+                    assert_eq!(have, want, "({i},{j})");
+                }
+            }
+            // involution
+            let mut back = got;
+            transpose8x8_bytes(&mut back);
+            assert_eq!(back, t);
+        }
+    }
+
+    #[test]
+    fn generic_tile_transpose_matches_swar_and_round_trips() {
+        let mut rng = Pcg64::new(0x7A1);
+        for fmt in ALL_ELEMENT_FORMATS {
+            let w = fmt.bits();
+            let mask = (1u64 << w) - 1;
+            for _ in 0..200 {
+                let mut tile = [0u64; 8];
+                for l in tile.iter_mut() {
+                    for j in 0..SQ {
+                        *l |= (rng.next_u64() & mask) << (j as u32 * w);
+                    }
+                }
+                let t = tile_transposed(&tile, w);
+                for i in 0..SQ {
+                    for j in 0..SQ {
+                        assert_eq!(
+                            lane_code(t[j], i, w),
+                            lane_code(tile[i], j, w),
+                            "{fmt:?} ({i},{j})"
+                        );
+                    }
+                }
+                let back = tile_transposed(&t, w);
+                assert_eq!(back, tile, "{fmt:?} involution");
+            }
+        }
+    }
+
+    #[test]
+    fn lane_partial_matches_tile_partials() {
+        // the single-lane primitive and the 8x8 tile kernel must agree
+        // element for element (they share semantics, not code paths)
+        let mut rng = Pcg64::new(0xD07);
+        for fmt in ALL_ELEMENT_FORMATS {
+            let m = Mat::from_fn(8, 8, |_, _| rng.wide_f32().clamp(-1e6, 1e6));
+            let n = Mat::from_fn(8, 8, |_, _| rng.wide_f32().clamp(-1e6, 1e6));
+            let pa = PackedTensor::quantize_pack(&m, fmt);
+            let pb = PackedTensor::quantize_pack(&n, fmt);
+            let unit = unit_exp(fmt);
+            let se = pa.scale_exp(0, 0) + pb.scale_exp(0, 0) + unit;
+            let mut acc = [0.0f32; SQ_ELEMS];
+            tile_partials(fmt, pa.tile(0, 0), pb.tile(0, 0), exp2i(se), &mut acc);
+            for i in 0..SQ {
+                for j in 0..SQ {
+                    let single = lane_partial(fmt, pa.tile(0, 0)[i], pb.tile(0, 0)[j], exp2i(se));
+                    assert_eq!(acc[i * SQ + j].to_bits(), single.to_bits(), "{fmt:?} ({i},{j})");
+                }
+            }
+        }
+    }
+}

@@ -7,12 +7,14 @@
 //! training loop is Python-free.
 //!
 //! The real implementation needs the git-only `xla` crate and compiles
-//! only with the `xla` cargo feature (plus the dependency added to
-//! Cargo.toml — see README.md). The default build gets API-compatible
-//! stubs whose constructors return errors, so every caller can compile
-//! and skip gracefully when the runtime is unavailable.
+//! only with the `xla-sys` cargo feature (plus the dependency added to
+//! Cargo.toml — see README.md). Both the default build and the
+//! dependency-free `xla` plumbing feature (which CI builds and tests)
+//! get API-compatible stubs whose constructors return errors, so every
+//! caller can compile and skip gracefully when the runtime is
+//! unavailable.
 
-#[cfg(feature = "xla")]
+#[cfg(feature = "xla-sys")]
 mod pjrt {
     use std::path::Path;
 
@@ -144,16 +146,26 @@ mod pjrt {
     }
 }
 
-#[cfg(feature = "xla")]
+#[cfg(feature = "xla-sys")]
 pub use pjrt::*;
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "xla-sys"))]
 mod stub {
     use std::path::Path;
 
     use crate::runtime::{err, Result};
     use crate::util::mat::Mat;
 
+    /// The two stub configurations report distinct causes: with the
+    /// `xla` plumbing feature on, only the crate-backed layer is
+    /// missing; without it, the runtime path was never requested. The
+    /// CI feature-matrix leg asserts this split, which keeps the
+    /// dependency-free `xla` feature observable (not inert).
+    #[cfg(feature = "xla")]
+    const UNAVAILABLE: &str = "mxscale was built with the `xla` runtime plumbing but \
+         without the `xla-sys` crate layer (the git-only xla dependency); the PJRT \
+         runtime path is unavailable (see README.md, section 'The PJRT runtime path')";
+    #[cfg(not(feature = "xla"))]
     const UNAVAILABLE: &str = "mxscale was built without the `xla` feature; \
          the PJRT runtime path is unavailable (see README.md, section \
          'The PJRT runtime path')";
@@ -208,11 +220,17 @@ mod stub {
 
         #[test]
         fn stub_client_reports_missing_feature() {
-            let e = cpu_client().unwrap_err();
-            assert!(e.to_string().contains("xla"));
+            let e = cpu_client().unwrap_err().to_string();
+            assert!(e.contains("xla"));
+            // the error names the exact layer this build is missing
+            if cfg!(feature = "xla") {
+                assert!(e.contains("xla-sys"), "{e}");
+            } else {
+                assert!(e.contains("without the `xla` feature"), "{e}");
+            }
         }
     }
 }
 
-#[cfg(not(feature = "xla"))]
+#[cfg(not(feature = "xla-sys"))]
 pub use stub::*;

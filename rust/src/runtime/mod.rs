@@ -7,10 +7,13 @@
 //! training state through repeated executions with zero Python.
 //!
 //! The `xla` crate is git-only and cannot be vendored in the offline
-//! dependency closure, so the executors are gated behind the `xla`
-//! cargo feature: with it, the real PJRT path compiles; without it
-//! (the default), API-compatible stubs return descriptive errors and
-//! every caller — `tests/integration.rs`, `benches/bench_runtime.rs`,
+//! dependency closure, so the executors are gated in two stages: the
+//! dependency-free `xla` feature selects the runtime plumbing (always
+//! buildable — CI exercises `--features xla` build+test), and `xla-sys`
+//! (enabled together with the git dependency in a connected
+//! environment) swaps in the real PJRT path. Without `xla-sys`,
+//! API-compatible stubs return descriptive errors and every caller —
+//! `tests/integration.rs`, `benches/bench_runtime.rs`,
 //! `examples/train_pusher.rs` — skips gracefully. `anyhow` is likewise
 //! replaced by the boxed [`Error`] alias below.
 

@@ -149,9 +149,19 @@ pub fn qat_forward_backward_with(
 }
 
 /// Quantized validation loss (quantized weights + activations, as the
-/// deployed accelerator would run inference).
+/// deployed accelerator would run inference). Evaluates under the
+/// scheme's own GeMM value semantics ([`crate::backend::GemmKernel`]):
+/// square MX schemes use the block-ordered accumulation the packed and
+/// hardware datapaths compute, so eval and training share one
+/// definition of "the value of this GeMM".
 pub fn qat_eval(mlp: &Mlp, x: &Mat, y: &Mat, scheme: QuantScheme) -> f64 {
-    let tape = mlp.forward_with(x, |_, w| scheme.quant(w), |_, a| scheme.quant(a));
+    let mut be = crate::backend::HookBackend::for_scheme(
+        scheme,
+        |_, w: &Mat| scheme.quant(w),
+        |_, a: &Mat| scheme.quant(a),
+        |_, e: &Mat| e.clone(),
+    );
+    let tape = mlp.forward_exec(x, &mut be);
     Mlp::mse_loss(&tape.output, y)
 }
 

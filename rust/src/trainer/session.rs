@@ -323,6 +323,40 @@ mod tests {
     }
 
     #[test]
+    fn packed_backend_rejects_non_square_schemes() {
+        for scheme in [QuantScheme::Fp32, QuantScheme::MxVector(ElementFormat::Int8)] {
+            let r = TrainSession::try_new(
+                quick_dataset("cartpole"),
+                TrainConfig { scheme, backend: BackendKind::Packed, ..Default::default() },
+            );
+            assert!(
+                matches!(r, Err(TrainError::UnsupportedScheme { backend: "packed", .. })),
+                "{}",
+                scheme.name()
+            );
+        }
+    }
+
+    #[test]
+    fn packed_backend_session_learns() {
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+                backend: BackendKind::Packed,
+                dims: Some(vec![32, 48, 48, 32]),
+                steps: 200,
+                lr: 2e-3,
+                ..Default::default()
+            },
+        );
+        let v0 = s.val_loss();
+        s.run();
+        assert!(s.val_loss() < v0 * 0.8, "{v0} -> {}", s.val_loss());
+        assert!(s.hw_report().is_none(), "packed backend accounts no hardware cost");
+    }
+
+    #[test]
     fn bad_dims_and_config_are_structured_errors() {
         let err = |config| TrainSession::try_new(quick_dataset("cartpole"), config).unwrap_err();
         // input width not matching the 32-wide dataset

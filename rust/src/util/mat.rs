@@ -183,6 +183,136 @@ impl Mat {
         out
     }
 
+    /// `self @ other` with **block-ordered accumulation**: the k
+    /// dimension is consumed in `chunk`-element segments, each segment's
+    /// partial dot is accumulated as an f64 chain (products of two f32s
+    /// are exact in f64), rounded to f32 once, and the f32 partials are
+    /// then chained across segments.
+    ///
+    /// This is the value semantics of the MX square-block datapath —
+    /// "apply the per-block scale once per block" — expressed on dense
+    /// operands. When both operands are square-block fake-quantized MX
+    /// tensors and `chunk` equals the block edge (8), every segment
+    /// partial is *exact* (the segment's products are integer multiples
+    /// of one power-of-two unit with < 2^53 dynamic range), which is
+    /// what makes the bit-packed integer SWAR kernels in `mx::packed`
+    /// bit-identical to this kernel — a theorem, not a tolerance
+    /// (asserted across backends by `tests/backend.rs`).
+    ///
+    /// Parallel over output-row bands exactly like [`Mat::matmul`];
+    /// banding never changes a bit because each output element's
+    /// accumulation chain is fully determined by (row, col).
+    pub fn matmul_blocked(&self, other: &Mat, chunk: usize) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims mismatch");
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let (k_len, ocols) = (self.cols, other.cols);
+        let band = par_band_rows(self.rows, self.rows * k_len * ocols);
+        crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, rows| {
+            let r0 = ci * band;
+            let mut acc = vec![0.0f64; ocols];
+            for (dr, dst) in rows.chunks_mut(ocols).enumerate() {
+                let r = r0 + dr;
+                let mut k0 = 0;
+                while k0 < k_len {
+                    let kend = (k0 + chunk).min(k_len);
+                    acc.fill(0.0);
+                    for k in k0..kend {
+                        let a = self.data[r * k_len + k];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let a = a as f64;
+                        let orow = &other.data[k * ocols..(k + 1) * ocols];
+                        for (d, &b) in acc.iter_mut().zip(orow) {
+                            *d += a * b as f64;
+                        }
+                    }
+                    for (d, &p) in dst.iter_mut().zip(acc.iter()) {
+                        *d += p as f32;
+                    }
+                    k0 = kend;
+                }
+            }
+        });
+        out
+    }
+
+    /// `self @ otherᵀ` with block-ordered accumulation (see
+    /// [`Mat::matmul_blocked`]); the transpose is never materialized.
+    pub fn matmul_blocked_nt(&self, other: &Mat, chunk: usize) -> Mat {
+        assert_eq!(self.cols, other.cols, "inner dims mismatch");
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(self.rows, other.rows);
+        let (k_len, ocols) = (self.cols, other.rows);
+        let band = par_band_rows(self.rows, self.rows * k_len * ocols);
+        crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, rows| {
+            let r0 = ci * band;
+            for (dr, dst) in rows.chunks_mut(ocols).enumerate() {
+                let arow = &self.data[(r0 + dr) * k_len..(r0 + dr + 1) * k_len];
+                for (j, d) in dst.iter_mut().enumerate() {
+                    let brow = &other.data[j * k_len..(j + 1) * k_len];
+                    let mut s = 0.0f32;
+                    let mut k0 = 0;
+                    while k0 < k_len {
+                        let kend = (k0 + chunk).min(k_len);
+                        let mut p = 0.0f64;
+                        for k in k0..kend {
+                            let a = arow[k];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            p += a as f64 * brow[k] as f64;
+                        }
+                        s += p as f32;
+                        k0 = kend;
+                    }
+                    *d = s;
+                }
+            }
+        });
+        out
+    }
+
+    /// `selfᵀ @ other` with block-ordered accumulation (see
+    /// [`Mat::matmul_blocked`]); the transpose is never materialized.
+    pub fn matmul_blocked_tn(&self, other: &Mat, chunk: usize) -> Mat {
+        assert_eq!(self.rows, other.rows, "inner dims mismatch");
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let (k_len, ocols) = (self.rows, other.cols);
+        let orows = self.cols;
+        let band = par_band_rows(orows, orows * k_len * ocols);
+        crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, rows| {
+            let r0 = ci * band;
+            let mut acc = vec![0.0f64; ocols];
+            for (dr, dst) in rows.chunks_mut(ocols).enumerate() {
+                let i = r0 + dr; // output row i = column i of self
+                let mut k0 = 0;
+                while k0 < k_len {
+                    let kend = (k0 + chunk).min(k_len);
+                    acc.fill(0.0);
+                    for k in k0..kend {
+                        let a = self.data[k * self.cols + i];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let a = a as f64;
+                        let orow = &other.data[k * ocols..(k + 1) * ocols];
+                        for (d, &b) in acc.iter_mut().zip(orow) {
+                            *d += a * b as f64;
+                        }
+                    }
+                    for (d, &p) in dst.iter_mut().zip(acc.iter()) {
+                        *d += p as f32;
+                    }
+                    k0 = kend;
+                }
+            }
+        });
+        out
+    }
+
     /// Elementwise map.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
         Mat { rows: self.rows, cols: self.cols, data: self.data.iter().map(|&x| f(x)).collect() }
@@ -355,6 +485,71 @@ mod tests {
             let fast = a.matmul_tn(&b);
             let slow = a.transpose().matmul(&b);
             assert_eq!(fast.data, slow.data, "{m}x{k}x{n}");
+        }
+    }
+
+    /// Serial reference of the blocked semantics: per output element,
+    /// k in `chunk`-segments, f64 chain within a segment (left-operand
+    /// zero skip), f32 chain across segment partials.
+    fn blocked_ref(a: &Mat, b: &Mat, chunk: usize) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for r in 0..a.rows {
+            for c in 0..b.cols {
+                let mut s = 0.0f32;
+                let mut k0 = 0;
+                while k0 < a.cols {
+                    let kend = (k0 + chunk).min(a.cols);
+                    let mut p = 0.0f64;
+                    for k in k0..kend {
+                        let av = a.at(r, k);
+                        if av == 0.0 {
+                            continue;
+                        }
+                        p += av as f64 * b.at(k, c) as f64;
+                    }
+                    s += p as f32;
+                    k0 = kend;
+                }
+                *out.at_mut(r, c) = s;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matmul_blocked_matches_serial_reference() {
+        let mut rng = Pcg64::new(21);
+        for (m, k, n) in [(1, 1, 1), (13, 21, 9), (16, 24, 8), (33, 40, 17)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng).map(|v| if v.abs() < 0.3 { 0.0 } else { v });
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            for chunk in [1usize, 8, 1000] {
+                let fast = a.matmul_blocked(&b, chunk);
+                let slow = blocked_ref(&a, &b, chunk);
+                let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&fast), bits(&slow), "{m}x{k}x{n} chunk {chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_nt_tn_match_materialized_transposes() {
+        let mut rng = Pcg64::new(22);
+        for (m, k, n) in [(4, 6, 5), (13, 21, 9), (32, 64, 32)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng).map(|v| if v.abs() < 0.3 { 0.0 } else { v });
+            let bt = Mat::randn(n, k, 1.0, &mut rng);
+            let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits(&a.matmul_blocked_nt(&bt, 8)),
+                bits(&a.matmul_blocked(&bt.transpose(), 8)),
+                "nt {m}x{k}x{n}"
+            );
+            let at = a.transpose(); // k x m
+            let b = Mat::randn(k, n, 1.0, &mut rng);
+            assert_eq!(
+                bits(&at.matmul_blocked_tn(&b, 8)),
+                bits(&a.matmul_blocked(&b, 8)),
+                "tn {m}x{k}x{n}"
+            );
         }
     }
 

@@ -1,14 +1,16 @@
 //! ExecBackend equivalence and hardware cost accounting.
 //!
-//! The contract under test (DESIGN.md §6): `FakeQuantBackend` and
-//! `HardwareBackend` produce **bit-identical** quantized forward and
-//! backward results for all six MX element formats, while the hardware
+//! The contract under test (DESIGN.md §6): `FakeQuantBackend`,
+//! `HardwareBackend`, and `PackedBackend` produce **bit-identical**
+//! quantized forward and backward results for all six MX element
+//! formats — asserted three-way on the tape, the gradients, five full
+//! Adam steps, and whole session loss curves — while the hardware
 //! backend additionally accumulates a nonzero cycle/event/energy/
 //! memory-traffic ledger whose schedule part matches the analytic model
 //! GeMM-for-GeMM. Plus ragged-shape quantization coverage (rectangular
 //! and non-multiple-of-8/32 matrices through both block layouts).
 
-use mxscale::backend::{BackendKind, ExecBackend, FakeQuantBackend, HardwareBackend};
+use mxscale::backend::{BackendKind, ExecBackend, FakeQuantBackend, HardwareBackend, PackedBackend};
 use mxscale::gemmcore::memory::gemm_traffic_bits;
 use mxscale::gemmcore::schedule::{gemm_cycles_staged, CycleCost, Stage};
 use mxscale::mx::dacapo::DacapoFormat;
@@ -43,22 +45,27 @@ fn backends_bit_identical_for_all_six_formats() {
         let (mlp, x, y) = toy_mlp(0xB17 ^ fmt.bits() as u64);
         let mut fake = FakeQuantBackend::new(scheme);
         let mut hw = HardwareBackend::new(scheme).unwrap();
+        let mut packed = PackedBackend::new(scheme).unwrap();
         fake.begin_step();
         hw.begin_step();
+        packed.begin_step();
         let (tf, gf) = qat_forward_backward_with(&mlp, &x, &y, &mut fake);
         let (th, gh) = qat_forward_backward_with(&mlp, &x, &y, &mut hw);
-        assert_eq!(bits(&tf.output), bits(&th.output), "{fmt:?} output");
-        for (i, (a, b)) in tf.activations.iter().zip(&th.activations).enumerate() {
-            assert_eq!(bits(a), bits(b), "{fmt:?} activation {i}");
-        }
-        for (i, (a, b)) in tf.pre_acts.iter().zip(&th.pre_acts).enumerate() {
-            assert_eq!(bits(a), bits(b), "{fmt:?} pre_act {i}");
-        }
-        for (i, (a, b)) in gf.d_weights.iter().zip(&gh.d_weights).enumerate() {
-            assert_eq!(bits(a), bits(b), "{fmt:?} d_w {i}");
-        }
-        for (i, (a, b)) in gf.d_biases.iter().zip(&gh.d_biases).enumerate() {
-            assert_eq!(a, b, "{fmt:?} d_b {i}");
+        let (tp, gp) = qat_forward_backward_with(&mlp, &x, &y, &mut packed);
+        for (other, to, go) in [("hw", &th, &gh), ("packed", &tp, &gp)] {
+            assert_eq!(bits(&tf.output), bits(&to.output), "{fmt:?} {other} output");
+            for (i, (a, b)) in tf.activations.iter().zip(&to.activations).enumerate() {
+                assert_eq!(bits(a), bits(b), "{fmt:?} {other} activation {i}");
+            }
+            for (i, (a, b)) in tf.pre_acts.iter().zip(&to.pre_acts).enumerate() {
+                assert_eq!(bits(a), bits(b), "{fmt:?} {other} pre_act {i}");
+            }
+            for (i, (a, b)) in gf.d_weights.iter().zip(&go.d_weights).enumerate() {
+                assert_eq!(bits(a), bits(b), "{fmt:?} {other} d_w {i}");
+            }
+            for (i, (a, b)) in gf.d_biases.iter().zip(&go.d_biases).enumerate() {
+                assert_eq!(a, b, "{fmt:?} {other} d_b {i}");
+            }
         }
         // the datapath really ran, and stayed within FP32-accumulation
         // distance of the functional kernel
@@ -72,22 +79,26 @@ fn backends_bit_identical_for_all_six_formats() {
 #[test]
 fn backends_stay_bit_identical_across_training_steps() {
     // Adam compounds any divergence; five full steps must end with
-    // bit-identical parameters on both backends.
+    // bit-identical parameters on all three backends.
     for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
         let scheme = QuantScheme::MxSquare(fmt);
         let (mlp0, x, y) = toy_mlp(0x57E9 ^ fmt.bits() as u64);
         let mut mlp_f = mlp0.clone();
-        let mut mlp_h = mlp0;
+        let mut mlp_h = mlp0.clone();
+        let mut mlp_p = mlp0;
         let mut fake = FakeQuantBackend::new(scheme);
         let mut hw = HardwareBackend::new(scheme).unwrap();
+        let mut packed = PackedBackend::new(scheme).unwrap();
         for step in 0..5 {
             let lf = qat_step_with(&mut mlp_f, &x, &y, &mut fake, 2e-3);
             let lh = qat_step_with(&mut mlp_h, &x, &y, &mut hw, 2e-3);
-            assert_eq!(lf, lh, "{fmt:?} step {step} loss");
+            let lp = qat_step_with(&mut mlp_p, &x, &y, &mut packed, 2e-3);
+            assert_eq!(lf, lh, "{fmt:?} step {step} hw loss");
+            assert_eq!(lf, lp, "{fmt:?} step {step} packed loss");
         }
-        let pf: Vec<u32> = mlp_f.flat_params().iter().map(|v| v.to_bits()).collect();
-        let ph: Vec<u32> = mlp_h.flat_params().iter().map(|v| v.to_bits()).collect();
-        assert_eq!(pf, ph, "{fmt:?} params after 5 steps");
+        let pbits = |m: &Mlp| m.flat_params().iter().map(|v| v.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(pbits(&mlp_f), pbits(&mlp_h), "{fmt:?} params after 5 steps (hw)");
+        assert_eq!(pbits(&mlp_f), pbits(&mlp_p), "{fmt:?} params after 5 steps (packed)");
         assert_eq!(hw.cost_report().unwrap().steps, 5);
     }
 }
@@ -160,8 +171,8 @@ fn hw_session_emits_nonzero_cost_report() {
 }
 
 #[test]
-fn fake_and_hw_match_on_training_session_losses() {
-    // same session config, both backends: identical loss curves
+fn all_backends_match_on_training_session_losses() {
+    // same session config, all three backends: identical loss curves
     let env = by_name("cartpole").unwrap();
     let ds = Dataset::collect(env.as_ref(), 4, 40, 0xD6);
     let run = |backend: BackendKind| {
@@ -177,12 +188,43 @@ fn fake_and_hw_match_on_training_session_losses() {
             },
         );
         s.run();
-        (s.val_curve.clone(), s.val_loss())
+        (s.val_curve.clone(), s.val_loss(), s.train_curve.clone())
     };
-    let (curve_f, loss_f) = run(BackendKind::Fast);
-    let (curve_h, loss_h) = run(BackendKind::Hardware);
+    let (curve_f, loss_f, train_f) = run(BackendKind::Fast);
+    let (curve_h, loss_h, train_h) = run(BackendKind::Hardware);
+    let (curve_p, loss_p, train_p) = run(BackendKind::Packed);
     assert_eq!(curve_f, curve_h);
     assert_eq!(loss_f, loss_h);
+    assert_eq!(train_f, train_h);
+    assert_eq!(curve_f, curve_p);
+    assert_eq!(loss_f, loss_p);
+    assert_eq!(train_f, train_p);
+}
+
+#[test]
+fn packed_session_loss_curves_match_fast_for_all_six_formats() {
+    // the acceptance criterion spelled out: --backend packed is
+    // bit-identical to fast on whole session loss curves, per format
+    let env = by_name("reacher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 3, 30, 0xD7);
+    for fmt in ALL_ELEMENT_FORMATS {
+        let run = |backend: BackendKind| {
+            let mut s = TrainSession::new(
+                ds.clone(),
+                TrainConfig {
+                    scheme: QuantScheme::MxSquare(fmt),
+                    backend,
+                    dims: Some(vec![32, 16, 32]),
+                    steps: 6,
+                    eval_every: 2,
+                    ..Default::default()
+                },
+            );
+            s.run();
+            (s.train_curve.clone(), s.val_curve.clone())
+        };
+        assert_eq!(run(BackendKind::Fast), run(BackendKind::Packed), "{fmt:?}");
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -281,12 +323,18 @@ fn backends_agree_on_ragged_batch_sizes() {
     let y = Mat::randn(5, 3, 0.5, &mut rng);
     let mut fake = FakeQuantBackend::new(scheme);
     let mut hw = HardwareBackend::new(scheme).unwrap();
+    let mut packed = PackedBackend::new(scheme).unwrap();
     fake.begin_step();
     hw.begin_step();
+    packed.begin_step();
     let (tf, gf) = qat_forward_backward_with(&mlp, &x, &y, &mut fake);
     let (th, gh) = qat_forward_backward_with(&mlp, &x, &y, &mut hw);
+    let (tp, gp) = qat_forward_backward_with(&mlp, &x, &y, &mut packed);
     assert_eq!(bits(&tf.output), bits(&th.output));
-    for (a, b) in gf.d_weights.iter().zip(&gh.d_weights) {
+    assert_eq!(bits(&tf.output), bits(&tp.output));
+    for ((a, b), c) in gf.d_weights.iter().zip(&gh.d_weights).zip(&gp.d_weights) {
         assert_eq!(bits(a), bits(b));
+        assert_eq!(bits(a), bits(c));
     }
+    assert_eq!(gf.d_biases, gp.d_biases);
 }

@@ -1,7 +1,7 @@
 //! Checkpoint round-trip property tests: save/resume at step k must be
 //! bitwise indistinguishable from an uninterrupted run to step k+m —
-//! tape, Adam moments, and loss curves — for all six MX formats, both
-//! execution backends, and with the serialized byte format in the loop
+//! tape, Adam moments, and loss curves — for all six MX formats, all
+//! three execution backends, and with the serialized byte format in the loop
 //! (every resume below goes through `to_bytes` -> `from_bytes`).
 
 use mxscale::backend::BackendKind;
@@ -77,6 +77,15 @@ fn resume_is_bit_exact_all_six_formats_fast_backend() {
 fn resume_is_bit_exact_all_six_formats_hw_backend() {
     for fmt in ALL_ELEMENT_FORMATS {
         assert_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Hardware, 3, 2);
+    }
+}
+
+#[test]
+fn resume_is_bit_exact_all_six_formats_packed_backend() {
+    // the checkpoint names `packed` as its backend and resumes onto the
+    // SWAR kernels bitwise, like the other two backends
+    for fmt in ALL_ELEMENT_FORMATS {
+        assert_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Packed, 7, 5);
     }
 }
 

@@ -1,0 +1,191 @@
+//! Packed-tensor properties and the SWAR-kernel bit-identity theorem.
+//!
+//! Two families of assertions, both with `==` on bits (no tolerances):
+//!
+//! 1. **Round trips** — `quantize → pack → unpack` reproduces the codec
+//!    tensor code-for-code and scale-for-scale for all six element
+//!    formats on ragged shapes; the fused `quantize_pack` equals
+//!    `pack(quantize(..))`; `dequantize` equals the codec dequantize
+//!    bit for bit; the packed transpose is the same pure block
+//!    permutation the paper's storage claim rests on.
+//! 2. **GeMM identity** — `packed_gemm` / `packed_gemm_nt` /
+//!    `packed_dot` equal the dense block-ordered kernels
+//!    (`Mat::matmul_blocked*`, chunk 8) on the dequantized operands:
+//!    the in-block integer SWAR dots are exactly the f64 block partials
+//!    of the dense kernel, so equality is a theorem over fake-quant
+//!    values, not a tolerance.
+
+use mxscale::mx::packed::{packed_dot, packed_gemm, packed_gemm_nt, PackedTensor};
+use mxscale::mx::tensor::{Layout, MxTensor};
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+
+/// Magnitudes spanning many binades — the adversarial input for
+/// shared-exponent kernels (subnormal codes next to near-max codes).
+fn wide_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    Mat::from_fn(rows, cols, |_, _| rng.wide_f32().clamp(-1e6, 1e6))
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+const RAGGED_SHAPES: [(usize, usize); 7] =
+    [(1, 1), (7, 5), (13, 21), (8, 40), (40, 8), (5, 64), (9, 33)];
+
+#[test]
+fn pack_unpack_round_trips_all_six_codecs_on_ragged_shapes() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        for (rows, cols) in RAGGED_SHAPES {
+            let m = wide_mat(rows, cols, 0xAC4 + rows as u64 * 131 + fmt.bits() as u64);
+            let q = MxTensor::quantize(&m, fmt, Layout::Square8x8);
+            let p = q.pack().unwrap();
+            let back = p.unpack();
+            assert_eq!(back.blocks, q.blocks, "{fmt:?} {rows}x{cols} codes/scales");
+            assert_eq!((back.rows, back.cols), (rows, cols));
+            // the fused quantize_pack is the same packing, bit for bit
+            let fused = PackedTensor::quantize_pack(&m, fmt);
+            assert_eq!(fused, p, "{fmt:?} {rows}x{cols} fused packing");
+            // dequantize through the packed image equals the codec path
+            assert_eq!(bits(&p.dequantize()), bits(&q.dequantize()), "{fmt:?} {rows}x{cols}");
+        }
+    }
+}
+
+#[test]
+fn packed_rejects_vector_layout() {
+    let m = wide_mat(8, 32, 3);
+    let q = MxTensor::quantize(&m, ALL_ELEMENT_FORMATS[0], Layout::Vector32);
+    let e = q.pack().err().unwrap();
+    assert!(e.contains("square"), "{e}");
+}
+
+#[test]
+fn packed_transpose_is_the_block_permutation() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        for (rows, cols) in [(13, 21), (8, 40), (24, 16)] {
+            let m = wide_mat(rows, cols, 0x7A9 + cols as u64 + fmt.bits() as u64 * 997);
+            let q = MxTensor::quantize(&m, fmt, Layout::Square8x8);
+            let via_packed = q.pack().unwrap().transpose();
+            let via_tensor = q.transpose().unwrap().pack().unwrap();
+            assert_eq!(via_packed, via_tensor, "{fmt:?} {rows}x{cols}");
+        }
+    }
+}
+
+#[test]
+fn packed_storage_is_dense() {
+    // 64 codes at the format width in 8 lanes + one scale byte per block
+    let m = wide_mat(16, 16, 9);
+    for fmt in ALL_ELEMENT_FORMATS {
+        let p = PackedTensor::quantize_pack(&m, fmt);
+        assert_eq!(p.lanes.len(), 4 * 8, "{fmt:?}");
+        assert_eq!(p.storage_bytes(), 4 * 8 * 8 + 4, "{fmt:?}");
+        // no code strays outside its lane width
+        let w = fmt.bits();
+        if w < 8 {
+            for lane in &p.lanes {
+                assert_eq!(lane >> (8 * w), 0, "{fmt:?} lane overflow");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- GeMMs
+
+#[test]
+fn packed_gemm_is_bit_identical_to_dense_blocked_kernel() {
+    // THE theorem: sub-word integer block dots == f64 dense block
+    // partials, for every format, on ragged shapes, over wide data
+    for fmt in ALL_ELEMENT_FORMATS {
+        for (m, k, n) in [(12, 16, 24), (13, 21, 9), (8, 40, 7), (1, 1, 1), (9, 33, 17)] {
+            let a = wide_mat(m, k, 0x6E0 + m as u64 * 7 + fmt.bits() as u64);
+            let b = wide_mat(k, n, 0x6E1 + n as u64 * 11 + fmt.bits() as u64);
+            let pa = PackedTensor::quantize_pack(&a, fmt);
+            let pb = PackedTensor::quantize_pack(&b, fmt);
+            let got = packed_gemm(&pa, &pb);
+            let want = pa.dequantize().matmul_blocked(&pb.dequantize(), 8);
+            assert_eq!(bits(&got), bits(&want), "{fmt:?} {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn packed_gemm_nt_consumes_the_transpose_for_free() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        for (m, k, n) in [(12, 16, 24), (13, 21, 9), (5, 64, 8)] {
+            let a = wide_mat(m, k, 0x9E0 + m as u64 + fmt.bits() as u64);
+            let bt = wide_mat(n, k, 0x9E1 + n as u64 + fmt.bits() as u64);
+            let pa = PackedTensor::quantize_pack(&a, fmt);
+            let pbt = PackedTensor::quantize_pack(&bt, fmt);
+            let got = packed_gemm_nt(&pa, &pbt);
+            let want = pa.dequantize().matmul_blocked_nt(&pbt.dequantize(), 8);
+            assert_eq!(bits(&got), bits(&want), "{fmt:?} {m}x{k}x{n}");
+            // and it equals multiplying against the permuted copy — the
+            // single-copy claim: no second packed image is ever needed
+            let via_transpose = packed_gemm(&pa, &pbt.transpose());
+            assert_eq!(bits(&got), bits(&via_transpose), "{fmt:?} {m}x{k}x{n} vs transpose");
+        }
+    }
+}
+
+#[test]
+fn packed_tn_path_matches_dense_tn_kernel() {
+    // the weight-gradient shape: Aᵀ @ E via the free block-permutation
+    // transpose of the stored packed activation
+    for fmt in ALL_ELEMENT_FORMATS {
+        let a = wide_mat(12, 16, 0xAE0 + fmt.bits() as u64); // [batch, din]
+        let e = wide_mat(12, 24, 0xAE1 + fmt.bits() as u64); // [batch, dout]
+        let pa = PackedTensor::quantize_pack(&a, fmt);
+        let pe = PackedTensor::quantize_pack(&e, fmt);
+        let got = packed_gemm(&pa.transpose(), &pe);
+        let want = pa.dequantize().matmul_blocked_tn(&pe.dequantize(), 8);
+        assert_eq!(bits(&got), bits(&want), "{fmt:?}");
+    }
+}
+
+#[test]
+fn packed_dot_matches_gemm_elements() {
+    for fmt in [ALL_ELEMENT_FORMATS[0], ALL_ELEMENT_FORMATS[2], ALL_ELEMENT_FORMATS[5]] {
+        let a = wide_mat(9, 33, 0xBE0 + fmt.bits() as u64);
+        let b = wide_mat(7, 33, 0xBE1 + fmt.bits() as u64);
+        let pa = PackedTensor::quantize_pack(&a, fmt);
+        let pb = PackedTensor::quantize_pack(&b, fmt);
+        let full = packed_gemm_nt(&pa, &pb);
+        for r in [0usize, 4, 8] {
+            for c in [0usize, 3, 6] {
+                let d = packed_dot(&pa, r, &pb, c);
+                assert_eq!(d.to_bits(), full.at(r, c).to_bits(), "{fmt:?} ({r},{c})");
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_col_sums_match_dense_col_sums() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        let m = wide_mat(13, 21, 0xCE0 + fmt.bits() as u64);
+        let p = PackedTensor::quantize_pack(&m, fmt);
+        let want = p.dequantize().col_sums();
+        let got = p.col_sums();
+        let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(b(&got), b(&want), "{fmt:?}");
+    }
+}
+
+#[test]
+fn mxtensor_convenience_layer_works() {
+    let fmt = ALL_ELEMENT_FORMATS[0];
+    let a = wide_mat(16, 16, 0xDE0);
+    let b = wide_mat(16, 16, 0xDE1);
+    let qa = MxTensor::quantize(&a, fmt, Layout::Square8x8);
+    let qb = MxTensor::quantize(&b, fmt, Layout::Square8x8);
+    let got = qa.packed_gemm(&qb).unwrap();
+    let want = qa.dequantize().matmul_blocked(&qb.dequantize(), 8);
+    assert_eq!(bits(&got), bits(&want));
+    let qbt = qb.transpose().unwrap();
+    let d = qa.packed_dot(3, &qbt, 5).unwrap();
+    assert_eq!(d.to_bits(), got.at(3, 5).to_bits());
+}

@@ -198,6 +198,54 @@ fn parallel_matmul_is_bit_identical_to_serial_reference() {
 }
 
 #[test]
+fn parallel_blocked_matmul_is_bit_identical_to_serial_reference() {
+    // the MX-blocked kernel above its fork threshold vs a verbatim
+    // serial replica of its per-element semantics (f64 chain per
+    // 8-chunk, f32 chain across chunks, left-operand zero skip)
+    let a = wide_mat(128, 96, 53).map(|v| if v.abs() < 1.0 { 0.0 } else { v });
+    let b = wide_mat(96, 160, 54);
+    let got = a.matmul_blocked(&b, 8);
+    let mut want = Mat::zeros(a.rows, b.cols);
+    for r in 0..a.rows {
+        for c in 0..b.cols {
+            let mut s = 0.0f32;
+            let mut k0 = 0;
+            while k0 < a.cols {
+                let kend = (k0 + 8).min(a.cols);
+                let mut p = 0.0f64;
+                for k in k0..kend {
+                    let av = a.at(r, k);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    p += av as f64 * b.at(k, c) as f64;
+                }
+                s += p as f32;
+                k0 = kend;
+            }
+            *want.at_mut(r, c) = s;
+        }
+    }
+    assert_eq!(bits(&got), bits(&want));
+}
+
+#[test]
+fn parallel_packed_gemm_is_bit_identical_above_fork_threshold() {
+    // 256x256x256 is far above the packed kernel's banding gate; the
+    // result must still equal the dense blocked kernel bit for bit
+    use mxscale::mx::packed::{packed_gemm, PackedTensor};
+    let a = wide_mat(256, 192, 61);
+    let b = wide_mat(192, 256, 62);
+    for fmt in [ElementFormat::Int8, ElementFormat::E5M2] {
+        let pa = PackedTensor::quantize_pack(&a, fmt);
+        let pb = PackedTensor::quantize_pack(&b, fmt);
+        let got = packed_gemm(&pa, &pb);
+        let want = pa.dequantize().matmul_blocked(&pb.dequantize(), 8);
+        assert_eq!(bits(&got), bits(&want), "{fmt:?}");
+    }
+}
+
+#[test]
 fn batched_sweep_reproduces_sequential_losses() {
     // the end-to-end claim: a concurrent format sweep returns exactly
     // the numbers the one-at-a-time loop produces
