@@ -92,10 +92,19 @@ def main():
             print(f"  (commit the uploaded artifact to {base_path} to arm the gate)")
             continue
         base = json.loads(base_path.read_text())
+        if fresh.get("schema_version") is None:
+            # a fresh result without a schema stamp cannot be gated at
+            # all — fail loudly, naming the offending bench
+            failures.append(
+                f"{name}: fresh result carries no schema_version "
+                "(report::bench_doc must stamp every BENCH_*.json)"
+            )
+            continue
         if base.get("schema_version") != fresh.get("schema_version"):
             print(
-                f"{name}: baseline schema v{base.get('schema_version')} != "
-                f"fresh v{fresh.get('schema_version')} — skipping diff "
+                f"schema mismatch in {name}: baseline schema "
+                f"v{base.get('schema_version')} != fresh "
+                f"v{fresh.get('schema_version')} — skipping diff "
                 "(re-baseline to re-arm the gate)"
             )
             continue

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""CI coverage ratchet: enforce a line-coverage floor on a source subtree.
+
+Usage:
+    check_coverage.py --json coverage.json --path src/mx/ --min-lines 80
+
+Reads the ``cargo llvm-cov report --json --summary-only`` document,
+aggregates line counts over every file whose path contains ``--path``
+(substring match on the normalized path, so absolute runner paths work),
+and fails when covered/total falls below ``--min-lines`` percent.
+
+This is a *ratchet*: the floor should only ever move up. When a change
+legitimately raises coverage well above the floor, bump ``--min-lines``
+in .github/workflows/ci.yml so the gain cannot silently erode.
+
+Matching zero files is a failure too — a moved directory must not turn
+the gate into a no-op.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True, type=pathlib.Path)
+    ap.add_argument("--path", required=True, help="path fragment selecting gated files")
+    ap.add_argument("--min-lines", type=float, default=80.0)
+    args = ap.parse_args()
+
+    doc = json.loads(args.json.read_text())
+    exports = doc.get("data", [])
+    if not exports:
+        print(f"ERROR: {args.json} has no coverage data", file=sys.stderr)
+        return 1
+
+    total = covered = 0
+    rows = []
+    for export in exports:
+        for f in export.get("files", []):
+            name = f.get("filename", "").replace("\\", "/")
+            if args.path not in name:
+                continue
+            lines = f.get("summary", {}).get("lines", {})
+            count = int(lines.get("count", 0))
+            hit = int(lines.get("covered", 0))
+            total += count
+            covered += hit
+            pct = 100.0 * hit / count if count else 100.0
+            rows.append((name, hit, count, pct))
+
+    if not rows:
+        print(
+            f"ERROR: no files matching `{args.path}` in {args.json} — "
+            "did the directory move? The gate must not become a no-op.",
+            file=sys.stderr,
+        )
+        return 1
+
+    rows.sort(key=lambda r: r[3])
+    width = max(len(pathlib.Path(name).name) for name, *_ in rows)
+    for name, hit, count, pct in rows:
+        print(f"  {pathlib.Path(name).name:<{width}}  {hit:>5}/{count:<5}  {pct:6.2f}%")
+
+    pct = 100.0 * covered / total if total else 0.0
+    print(f"\n{args.path}: {covered}/{total} lines covered = {pct:.2f}% "
+          f"(floor {args.min_lines:.2f}%)")
+    if pct < args.min_lines:
+        print(
+            f"coverage-gate FAILED: {args.path} line coverage {pct:.2f}% "
+            f"is below the {args.min_lines:.2f}% ratchet floor",
+            file=sys.stderr,
+        )
+        return 1
+    print("coverage-gate passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,69 @@ use crate::gemmcore::schedule::CycleCost;
 use crate::mx::element::ElementFormat;
 use crate::util::json::Json;
 
+/// Cost ledger of one *format segment* of a hardware session: the steps
+/// executed between two precision transitions (or session edges) under
+/// a single element format. A static session has exactly one segment;
+/// a precision-scheduled session closes a segment at every
+/// [`crate::backend::ExecBackend::transition`] so cycles, events,
+/// energy, and traffic stay attributed to the format that incurred them
+/// (the per-format accounting the scheduling subsystem reports on).
+#[derive(Debug, Clone)]
+pub struct HwSegmentCost {
+    /// Scheme name active during this segment (e.g. "mx-e4m3").
+    pub scheme: String,
+    /// Element format of the segment's datapath mode.
+    pub element: ElementFormat,
+    /// Training steps executed in this segment.
+    pub steps: u64,
+    /// GeMMs executed in this segment.
+    pub gemms: u64,
+    /// Grid-pass schedule cost of this segment.
+    pub cost: CycleCost,
+    /// PE-array datapath events of this segment.
+    pub events: Events,
+    /// Output-quantizer events of this segment.
+    pub quant: QuantEvents,
+    /// Segment MAC energy, events priced at this segment's format [pJ].
+    pub mac_energy_pj: f64,
+    /// Interface bits moved during this segment.
+    pub traffic_bits: u64,
+    /// Worst datapath deviation observed in this segment.
+    pub max_rel_err: f64,
+}
+
+impl HwSegmentCost {
+    /// SRAM access energy over this segment's executed OPs [pJ].
+    pub fn sram_energy_pj(&self) -> f64 {
+        crate::energy::calib::SRAM_PJ_PER_OP * self.events.mul_ops as f64
+    }
+
+    /// Total segment energy [pJ].
+    pub fn energy_pj(&self) -> f64 {
+        self.mac_energy_pj + self.sram_energy_pj()
+    }
+
+    /// Segment accelerator wall-clock at `freq_mhz` [us].
+    pub fn micros(&self, freq_mhz: f64) -> f64 {
+        self.cost.micros(freq_mhz)
+    }
+
+    fn to_json(&self, freq_mhz: f64) -> Json {
+        Json::obj()
+            .set("scheme", self.scheme.clone())
+            .set("element", self.element.name())
+            .set("steps", self.steps)
+            .set("gemms", self.gemms)
+            .set("cycles", self.cost.total())
+            .set("us", self.micros(freq_mhz))
+            .set("mac_pj", self.mac_energy_pj)
+            .set("sram_pj", self.sram_energy_pj())
+            .set("uj", self.energy_pj() * 1e-6)
+            .set("traffic_bits", self.traffic_bits)
+            .set("datapath_max_rel_err", self.max_rel_err)
+    }
+}
+
 /// What one training session cost on the simulated accelerator.
 ///
 /// Cycles come from the grid-pass schedule (per-stage, so weight-
@@ -46,6 +109,10 @@ pub struct HwCostReport {
     /// Max per-GeMM deviation of the PE datapath output from the shared
     /// functional kernel, relative to the output's max magnitude.
     pub datapath_max_rel_err: f64,
+    /// Per-format segments (the open segment included last); every
+    /// aggregate above is the sum (or max, for the deviation) over
+    /// these. One entry for a session that never transitioned.
+    pub segments: Vec<HwSegmentCost>,
 }
 
 impl HwCostReport {
@@ -130,6 +197,10 @@ impl HwCostReport {
             .set("blocks", self.quant.blocks)
             .set("encodes", self.quant.encodes)
             .set("max_scans", self.quant.max_scans);
+        let mut segments = Json::arr();
+        for s in &self.segments {
+            segments = segments.push(s.to_json(self.freq_mhz));
+        }
         Json::obj()
             .set("backend", self.backend)
             .set("scheme", self.scheme.clone())
@@ -146,6 +217,7 @@ impl HwCostReport {
             .set("mem", mem)
             .set("events", events)
             .set("quantizer", quant)
+            .set("segments", segments)
             .set("datapath_max_rel_err", self.datapath_max_rel_err)
     }
 }

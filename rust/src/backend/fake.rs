@@ -34,6 +34,11 @@ pub struct FakeQuantBackend {
     wq_t: Vec<Mat>,
     /// Quantized-error scratch, one per layer.
     eq: Vec<Mat>,
+    /// Step at which `layer`'s forward ran without its backward yet —
+    /// the "pending tape" marker the transition guard checks (the fake
+    /// backend stores no activations, so it tracks the step shape
+    /// explicitly where hw/packed can just inspect their stored `qa`).
+    fwd_pending: Vec<u64>,
     step: u64,
 }
 
@@ -46,6 +51,7 @@ impl FakeQuantBackend {
             wq_step: Vec::new(),
             wq_t: Vec::new(),
             eq: Vec::new(),
+            fwd_pending: Vec::new(),
             step: 0,
         }
     }
@@ -60,6 +66,7 @@ impl FakeQuantBackend {
             self.wq_t.push(Mat::zeros(0, 0));
             self.eq.push(Mat::zeros(0, 0));
             self.wq_step.push(NEVER);
+            self.fwd_pending.push(NEVER);
         }
     }
 
@@ -103,11 +110,35 @@ impl ExecBackend for FakeQuantBackend {
         Self::quant_into(self.scheme, w, &mut self.wq[layer]);
         self.wq_step[layer] = self.step;
         let z = gemm_fwd(self.kernel, &aq, &self.wq[layer]);
+        self.fwd_pending[layer] = self.step;
         (aq, z)
+    }
+
+    /// Mid-session scheme switch: the software path handles every
+    /// scheme, so the only refusal is the contract's mid-step guard (a
+    /// pending forward tape would mix formats inside one backward
+    /// pass, same as hw/packed). Otherwise it swaps the scheme and the
+    /// GeMM kernel and invalidates the per-layer scratch so the next
+    /// step requantizes everything from the FP32 masters under the new
+    /// format (never format-to-format).
+    fn transition(&mut self, scheme: QuantScheme) -> Result<(), String> {
+        if self.fwd_pending.iter().any(|&p| p == self.step) {
+            return Err("cannot transition mid-step: a forward tape is pending backward".into());
+        }
+        self.scheme = scheme;
+        self.kernel = GemmKernel::for_scheme(scheme);
+        for step in &mut self.wq_step {
+            *step = NEVER;
+        }
+        for buf in self.wq.iter_mut().chain(&mut self.wq_t).chain(&mut self.eq) {
+            *buf = Mat::zeros(0, 0);
+        }
+        Ok(())
     }
 
     fn backward_layer(&mut self, layer: usize, e: &Mat, aq: &Mat, w: Option<&Mat>) -> LayerGrads {
         self.ensure(layer);
+        self.fwd_pending[layer] = NEVER;
         let scheme = self.scheme;
         Self::quant_into(scheme, e, &mut self.eq[layer]);
         let use_forward_copy = Self::transpose_is_free(scheme);

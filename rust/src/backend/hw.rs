@@ -1,8 +1,10 @@
 //! The hardware backend: bit-exact GemmCore execution + cost ledger.
 
-use crate::backend::cost::HwCostReport;
+use crate::backend::cost::{HwCostReport, HwSegmentCost};
 use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
-use crate::energy::{calib, EnergyModel};
+use crate::energy::EnergyModel;
+use crate::gemmcore::quantizer::QuantEvents;
+use crate::gemmcore::schedule::CycleCost;
 use crate::gemmcore::memory::gemm_traffic_bits;
 use crate::gemmcore::schedule::Stage;
 use crate::gemmcore::GemmCore;
@@ -39,10 +41,16 @@ pub struct HardwareBackend {
     /// Stored quantized activations from this step's forward pass.
     qa: Vec<Option<MxTensor>>,
     step: u64,
+    /// Steps / GeMMs / traffic / deviation of the **current format
+    /// segment** — the core's own cost/event counters are segment-local
+    /// too (the core is rebuilt on every transition). Closed segments
+    /// live in `closed`; `cost_report` sums closed + current.
     steps: u64,
     gemms: u64,
     traffic_bits: u64,
     max_rel_err: f64,
+    /// Ledgers of formats this session already trained under and left.
+    closed: Vec<HwSegmentCost>,
 }
 
 impl HardwareBackend {
@@ -67,11 +75,30 @@ impl HardwareBackend {
             gemms: 0,
             traffic_bits: 0,
             max_rel_err: 0.0,
+            closed: Vec::new(),
         })
     }
 
     pub fn scheme(&self) -> QuantScheme {
         self.scheme
+    }
+
+    /// Snapshot the current (open) format segment's ledger.
+    fn current_segment(&self) -> HwSegmentCost {
+        let events = self.core.events();
+        let model = EnergyModel::new(self.core.variant);
+        HwSegmentCost {
+            scheme: self.scheme.name(),
+            element: self.fmt,
+            steps: self.steps,
+            gemms: self.gemms,
+            cost: self.core.cost,
+            events,
+            quant: self.core.quantizer.events,
+            mac_energy_pj: model.run_pj(self.fmt, &events),
+            traffic_bits: self.traffic_bits,
+            max_rel_err: self.max_rel_err,
+        }
     }
 
     fn ensure(&mut self, layer: usize) {
@@ -165,24 +192,76 @@ impl ExecBackend for HardwareBackend {
         grads
     }
 
+    /// Mid-session scheme switch: the open segment's ledger is closed
+    /// (cycles/events/energy/traffic stay attributed to the format that
+    /// incurred them) and the core is rebuilt for the new format — a
+    /// fresh datapath mode, exactly as the precision-scalable hardware
+    /// would reconfigure. Stored quantized tensors are dropped; the
+    /// next step requantizes from the FP32 masters.
+    fn transition(&mut self, scheme: QuantScheme) -> Result<(), String> {
+        let QuantScheme::MxSquare(fmt) = scheme else {
+            return Err(format!(
+                "hardware backend executes square-block MX schemes only (mx-int8 ... mx-e2m1); got `{}`",
+                scheme.name()
+            ));
+        };
+        if self.qa.iter().any(|q| q.is_some()) {
+            return Err("cannot transition mid-step: a forward tape is pending backward".into());
+        }
+        if self.steps > 0 || self.gemms > 0 {
+            self.closed.push(self.current_segment());
+        }
+        self.scheme = scheme;
+        self.fmt = fmt;
+        self.core = GemmCore::new(fmt);
+        for qw in &mut self.qw {
+            *qw = None;
+        }
+        for step in &mut self.qw_step {
+            *step = NEVER;
+        }
+        self.steps = 0;
+        self.gemms = 0;
+        self.traffic_bits = 0;
+        self.max_rel_err = 0.0;
+        Ok(())
+    }
+
     fn cost_report(&self) -> Option<HwCostReport> {
-        let events = self.core.events();
-        let model = EnergyModel::new(self.core.variant);
+        let mut segments = self.closed.clone();
+        segments.push(self.current_segment());
+        let mut cost = CycleCost::default();
+        let mut events = crate::arith::Events::default();
+        let mut quant = QuantEvents::default();
+        let (mut steps, mut gemms, mut traffic_bits) = (0u64, 0u64, 0u64);
+        let (mut mac_energy_pj, mut sram_energy_pj, mut max_rel_err) = (0.0f64, 0.0f64, 0.0f64);
+        for s in &segments {
+            cost.add(&s.cost);
+            events.add(&s.events);
+            quant.add(&s.quant);
+            steps += s.steps;
+            gemms += s.gemms;
+            traffic_bits += s.traffic_bits;
+            mac_energy_pj += s.mac_energy_pj;
+            sram_energy_pj += s.sram_energy_pj();
+            max_rel_err = max_rel_err.max(s.max_rel_err);
+        }
         Some(HwCostReport {
             backend: self.name(),
             scheme: self.scheme.name(),
             element: self.fmt,
             freq_mhz: self.core.variant.freq_mhz(),
-            steps: self.steps,
-            gemms: self.gemms,
-            cost: self.core.cost,
+            steps,
+            gemms,
+            cost,
             events,
-            quant: self.core.quantizer.events,
-            mac_energy_pj: model.run_pj(self.fmt, &events),
-            sram_energy_pj: calib::SRAM_PJ_PER_OP * events.mul_ops as f64,
-            mem_traffic_bits: self.traffic_bits,
+            quant,
+            mac_energy_pj,
+            sram_energy_pj,
+            mem_traffic_bits: traffic_bits,
             resident_kb: 0.0, // filled by the session (knows shape/batch)
-            datapath_max_rel_err: self.max_rel_err,
+            datapath_max_rel_err: max_rel_err,
+            segments,
         })
     }
 }

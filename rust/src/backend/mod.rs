@@ -49,7 +49,7 @@ mod fake;
 mod hw;
 mod packed;
 
-pub use cost::HwCostReport;
+pub use cost::{HwCostReport, HwSegmentCost};
 pub use fake::FakeQuantBackend;
 pub use hw::HardwareBackend;
 pub use packed::PackedBackend;
@@ -100,6 +100,25 @@ pub trait ExecBackend {
     /// Accumulated hardware cost, if this backend accounts one.
     fn cost_report(&self) -> Option<HwCostReport> {
         None
+    }
+
+    /// Switch the active [`QuantScheme`] at a **training-step boundary**
+    /// (the runtime-precision-scheduling seam — DESIGN.md §8).
+    ///
+    /// Contract: implementations must validate *before* mutating (a
+    /// rejected transition leaves the backend running the old scheme),
+    /// must refuse a mid-step call (a pending forward tape would mix
+    /// formats inside one backward pass), and must drop every per-layer
+    /// cache derived from the old scheme — quantized/packed weight
+    /// copies, scratch buffers, and the GeMM-kernel selection — so the
+    /// next step quantizes fresh from the FP32 masters. Transitions
+    /// never convert format-to-format: there is no persistent quantized
+    /// state to convert, which is what makes a transition bit-identical
+    /// to starting a new session at the new format with the same
+    /// master/Adam state (`tests/backend.rs` asserts this).
+    fn transition(&mut self, scheme: QuantScheme) -> Result<(), String> {
+        let (name, scheme) = (self.name(), scheme.name());
+        Err(format!("the `{name}` backend cannot switch schemes mid-session (to `{scheme}`)"))
     }
 }
 

@@ -100,6 +100,31 @@ impl ExecBackend for PackedBackend {
         (aq, z)
     }
 
+    /// Mid-session scheme switch: validates first (square MX only, and
+    /// never between a forward and its backward), then drops every
+    /// packed weight/activation so the next step re-packs from the FP32
+    /// masters at the new element width.
+    fn transition(&mut self, scheme: QuantScheme) -> Result<(), String> {
+        let QuantScheme::MxSquare(fmt) = scheme else {
+            return Err(format!(
+                "packed backend executes square-block MX schemes only (mx-int8 ... mx-e2m1); got `{}`",
+                scheme.name()
+            ));
+        };
+        if self.pa.iter().any(|p| p.is_some()) {
+            return Err("cannot transition mid-step: a forward tape is pending backward".into());
+        }
+        self.scheme = scheme;
+        self.fmt = fmt;
+        for pw in &mut self.pw {
+            *pw = None;
+        }
+        for step in &mut self.pw_step {
+            *step = NEVER;
+        }
+        Ok(())
+    }
+
     fn backward_layer(&mut self, layer: usize, e: &Mat, _aq: &Mat, w: Option<&Mat>) -> LayerGrads {
         self.ensure(layer);
         let pe = PackedTensor::quantize_pack(e, self.fmt);

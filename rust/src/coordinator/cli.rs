@@ -14,6 +14,7 @@ use crate::coordinator::report::{save_csv, save_hw_report, save_json, Table};
 use crate::fleet::{run_fleet, FleetSpec};
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
+use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainSession};
 use crate::util::mat::Mat;
@@ -66,14 +67,17 @@ const USAGE: &str = "\
 mxscale - precision-scalable MX processing for robotics learning (ISLPED'25 reproduction)
 
 USAGE:
-  mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all>...
-                [--steps N] [--eval-every N] [--hw-steps N]   # ids may be listed together
+  mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|precision-schedule|ablation|all>...
+                [--steps N] [--eval-every N] [--hw-steps N] [--static-steps N]
+                # ids may be listed together; --static-steps sizes the
+                # precision-schedule race's static-INT8 budget
   mxscale train --workload <cartpole|reacher|pusher|halfcheetah>
                 --scheme <fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mxvec-<fmt>|mx9|mx6|mx4>
                 [--backend fast|hw|packed] [--steps N] [--lr F] [--batch N] [--hidden N]
+                [--policy <spec>]                         # runtime precision scheduling
   mxscale fleet [--sessions N] [--steps N] [--quantum N] [--shift-at N]
                 [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
-                [--energy-budget UJ] [--seed N]             # multi-tenant continual learning
+                [--energy-budget UJ] [--policy <spec>] [--seed N]   # continual learning
   mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
   mxscale info                                            # architecture summary
 
@@ -82,6 +86,15 @@ USAGE:
   (results/*_hw_report.json). --backend packed runs the GeMMs on the
   sub-word-parallel SWAR kernels over bit-packed element codes — same
   losses bit for bit, fastest software path. Square MX schemes only.
+
+  --policy schedules the MX format *while training* (DESIGN.md §8):
+  `0:mx-e2m1,200:mx-int8` switches formats at step indices;
+  `adaptive:mx-int8>mx-e2m3>mx-e2m1` runs a Dacapo-style loss watchdog
+  that demotes precision on plateau and promotes it on divergence.
+  Transitions requantize from the FP32 masters — a switch is
+  bit-identical to starting fresh at the new format with the same
+  master/Adam state. `repro precision-schedule` races a scheduled run
+  against static baselines (results/precision_schedule.json).
 
   fleet multiplexes N concurrent training sessions (round-robin step
   quanta over the worker pool) with per-session step/energy budgets and
@@ -148,6 +161,10 @@ fn cmd_repro(args: &Args) -> i32 {
                 &experiments::throughput(args.usize_or("hw-steps", 2)),
                 "throughput_measured",
             ),
+            "precision-schedule" => emit(
+                &experiments::precision_schedule(args.usize_or("static-steps", 160), None),
+                "precision_schedule",
+            ),
             "ablation" => emit(&experiments::ablation(), "ablation_blocksize"),
             "fig8" => emit(
                 &experiments::fig8(
@@ -194,8 +211,17 @@ fn cmd_repro(args: &Args) -> i32 {
     let mut failures: Vec<String> = Vec::new();
     for which in ids {
         if which == "all" {
-            let every =
-                ["table2", "table3", "table4", "fig7", "fig2", "fig8", "throughput", "ablation"];
+            let every = [
+                "table2",
+                "table3",
+                "table4",
+                "fig7",
+                "fig2",
+                "fig8",
+                "throughput",
+                "precision-schedule",
+                "ablation",
+            ];
             for id in every {
                 run(id, &mut failures);
             }
@@ -250,6 +276,15 @@ fn cmd_fleet(args: &Args) -> i32 {
             Some(b) => spec.backend = b,
             None => {
                 eprintln!("unknown backend: {b} (use fast|hw|packed)");
+                return 1;
+            }
+        }
+    }
+    if let Some(p) = args.get("policy") {
+        match PrecisionPolicy::parse(p) {
+            Ok(policy) => spec.policy = Some(policy),
+            Err(e) => {
+                eprintln!("bad --policy: {e}");
                 return 1;
             }
         }
@@ -363,12 +398,39 @@ fn cmd_train(args: &Args) -> i32 {
             return 1;
         }
     };
+    let mut policy = match args.get("policy") {
+        None => PrecisionPolicy::Static,
+        Some(spec) => match PrecisionPolicy::parse(spec) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!("bad --policy: {e}");
+                return 1;
+            }
+        },
+    };
+    // reject a policy this backend can never execute before step 0,
+    // not at the (possibly distant) transition step
+    if let Err(e) = policy.validate(backend) {
+        eprintln!("bad --policy: {e}");
+        return 1;
+    }
     println!(
         "training {workload} under {} on the {} backend for {steps} steps...",
         scheme.name(),
         backend.name()
     );
-    session.run();
+    if let Err(e) = session.run_with_policy(&mut policy) {
+        eprintln!("{e}");
+        return 1;
+    }
+    if session.scheme_history().len() > 1 {
+        let hops: Vec<String> = session
+            .scheme_history()
+            .iter()
+            .map(|(at, s)| format!("{}@{at}", s.name()))
+            .collect();
+        println!("precision schedule ran: {}", hops.join(" -> "));
+    }
     let mut t = Table::new(
         &format!("{workload} / {} / {}", scheme.name(), backend.name()),
         &["step", "val_loss"],
@@ -518,6 +580,33 @@ mod tests {
         // two cheap analytic artefacts in one invocation (the CI
         // repro-smoke shape: `repro table2 table3`)
         assert_eq!(run_cli(&argv("repro table2 table3")), 0);
+    }
+
+    #[test]
+    fn train_policy_reachable_and_validated_from_cli() {
+        // a scheduled run on the packed backend, e2m1 -> int8 at step 2
+        let code = run_cli(&argv(
+            "train --workload cartpole --scheme e2m1 --backend packed --steps 4 \
+             --eval-every 1000000 --hidden 16 --policy 2:mx-int8",
+        ));
+        assert_eq!(code, 0);
+        // malformed spec and a scheme the backend cannot execute
+        assert_eq!(run_cli(&argv("train --steps 2 --policy nope")), 1);
+        let code = run_cli(&argv(
+            "train --workload cartpole --scheme int8 --backend packed --steps 4 \
+             --eval-every 1000000 --hidden 16 --policy 2:fp32",
+        ));
+        assert_eq!(code, 1, "fp32 transition must fail on the packed backend");
+    }
+
+    #[test]
+    fn fleet_policy_flag_parses_and_rejects() {
+        assert_eq!(run_cli(&argv("fleet --policy nope")), 1);
+        let code = run_cli(&argv(
+            "fleet --sessions 2 --steps 6 --quantum 3 --shift-at 0 --hidden 8 --eval-every 3 \
+             --scheme e2m1 --policy 3:mx-int8",
+        ));
+        assert_eq!(code, 0);
     }
 
     #[test]

@@ -30,5 +30,5 @@ pub mod scheduler;
 
 pub use report::{adapt_vs_retrain, run_fleet, AdaptComparison, FleetRun, FleetSpec, SessionSummary};
 pub use scheduler::{
-    DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget, ShiftRecord,
+    DomainShift, FleetScheduler, FleetSession, FleetStats, FormatSpend, SessionBudget, ShiftRecord,
 };

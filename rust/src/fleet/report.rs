@@ -4,6 +4,7 @@ use crate::backend::BackendKind;
 use crate::fleet::scheduler::{DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget};
 use crate::mx::element::ElementFormat;
 use crate::trainer::checkpoint::{grouping_footprint, image_bytes, weight_payload, Checkpoint};
+use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
 use crate::util::json::Json;
@@ -34,6 +35,10 @@ pub struct FleetSpec {
     pub eval_every: usize,
     /// Per-session energy ceiling [uJ] (`INFINITY` = step-bounded only).
     pub energy_budget_uj: f64,
+    /// Precision policy attached to every session (`None` = static) —
+    /// each robot gets its own clone, so adaptive watchdogs judge each
+    /// robot's loss stream independently.
+    pub policy: Option<PrecisionPolicy>,
     pub seed: u64,
 }
 
@@ -56,6 +61,7 @@ impl Default for FleetSpec {
             lr: 1e-3,
             eval_every: 20,
             energy_budget_uj: f64::INFINITY,
+            policy: None,
             seed: 0xF1EE7,
         }
     }
@@ -132,6 +138,8 @@ pub struct SessionSummary {
     pub hw_energy_uj: Option<f64>,
     pub final_val: f64,
     pub shifts: usize,
+    /// Precision transitions the session's policy fired.
+    pub transitions: usize,
     /// MX weight-image bytes of this session's checkpoint.
     pub payload_bytes: usize,
 }
@@ -194,7 +202,11 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         let budget =
             SessionBudget { max_steps: spec.steps, max_energy_uj: spec.energy_budget_uj };
         let id = format!("robot-{i:02}");
-        sched.push(FleetSession::new(id, workload, ds, config, budget, shifts)?);
+        let mut fs = FleetSession::new(id, workload, ds, config, budget, shifts)?;
+        if let Some(policy) = &spec.policy {
+            fs = fs.with_policy(policy.clone())?;
+        }
+        sched.push(fs);
     }
 
     let stats = sched.run();
@@ -235,6 +247,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
                 hw_energy_uj: s.hw_measured_uj(),
                 final_val: s.session().val_loss(),
                 shifts: s.shift_log.len(),
+                transitions: s.session().scheme_history().len() - 1,
                 payload_bytes,
             }
         })
@@ -251,6 +264,10 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         .set("steps", spec.steps)
         .set("shift_at", spec.shift_at)
         .set("backend", spec.backend.name())
+        .set(
+            "policy",
+            spec.policy.as_ref().map(|p| Json::from(p.name())).unwrap_or(Json::Null),
+        )
         .set("workers", par::threads());
     let mut scheme_arr = Json::arr();
     for s in &spec.schemes {
@@ -277,6 +294,19 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
                     .set("val_before", r.val_before),
             );
         }
+        let mut history = Json::arr();
+        for &(at, scheme) in fs.session().scheme_history() {
+            history = history.push(Json::arr().push(at).push(scheme.name()));
+        }
+        let mut spend = Json::arr();
+        for f in &fs.format_spend {
+            spend = spend.push(
+                Json::obj()
+                    .set("scheme", f.scheme.clone())
+                    .set("steps", f.steps)
+                    .set("uj", f.uj),
+            );
+        }
         let mut o = Json::obj()
             .set("id", s.id.clone())
             .set("workload", s.workload.clone())
@@ -286,6 +316,8 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
             .set("energy_uj", s.energy_uj)
             .set("final_val", s.final_val)
             .set("ckpt_payload_bytes", s.payload_bytes)
+            .set("scheme_history", history)
+            .set("format_spend", spend)
             .set("shifts", shifts);
         if let Some(uj) = s.hw_energy_uj {
             o = o.set("hw_measured_uj", uj);
@@ -397,6 +429,32 @@ mod tests {
             "\"eff_steps_per_sec\"",
             "\"square_single_copy_bytes\"",
         ] {
+            assert!(text.contains(key), "missing {key} in report");
+        }
+    }
+
+    #[test]
+    fn run_fleet_with_policy_schedules_every_robot() {
+        let spec = FleetSpec {
+            sessions: 4,
+            schemes: vec![QuantScheme::MxSquare(ElementFormat::E2M1)],
+            steps: 16,
+            quantum: 5,
+            shift_at: 0,
+            hidden: Some(16),
+            episodes: 3,
+            horizon: 30,
+            eval_every: 8,
+            policy: Some(PrecisionPolicy::parse("8:mx-int8").unwrap()),
+            ..Default::default()
+        };
+        let run = run_fleet(&spec).unwrap();
+        for s in &run.sessions {
+            assert_eq!(s.transitions, 1, "{}", s.id);
+            assert_eq!(s.scheme, "mx-int8", "{}: final scheme must be the scheduled one", s.id);
+        }
+        let text = run.report.pretty();
+        for key in ["\"policy\"", "\"scheme_history\"", "\"format_spend\"", "\"mx-e2m1\""] {
             assert!(text.contains(key), "missing {key} in report");
         }
     }

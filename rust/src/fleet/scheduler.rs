@@ -2,6 +2,8 @@
 
 use crate::trainer::budget::step_cost_for;
 use crate::trainer::checkpoint::Checkpoint;
+use crate::trainer::policy::PrecisionPolicy;
+use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
 use crate::util::par;
 use crate::workloads::Dataset;
@@ -50,7 +52,20 @@ pub struct ShiftRecord {
     pub checkpoint: Checkpoint,
 }
 
-/// One robot: a training session plus its budget and shift schedule.
+/// Analytic energy/steps attributed to one scheme a session ran under
+/// (the per-format-segment accounting of a precision-scheduled robot).
+#[derive(Debug, Clone)]
+pub struct FormatSpend {
+    /// Scheme name (e.g. "mx-e2m1").
+    pub scheme: String,
+    /// Steps executed under this scheme.
+    pub steps: usize,
+    /// Analytic energy those steps cost [uJ].
+    pub uj: f64,
+}
+
+/// One robot: a training session plus its budget, shift schedule, and
+/// (optionally) a per-robot precision policy.
 pub struct FleetSession {
     pub id: String,
     pub workload: String,
@@ -58,10 +73,17 @@ pub struct FleetSession {
     pub budget: SessionBudget,
     /// Pending shifts, ascending by `at_step`.
     shifts: Vec<DomainShift>,
+    /// Per-robot precision policy (static by default).
+    policy: PrecisionPolicy,
     /// Analytic energy consumed so far [uJ].
     pub energy_uj: f64,
-    /// Per-step energy price under this session's scheme [uJ].
+    /// Per-step energy price under this session's **active** scheme
+    /// [uJ] — repriced whenever the policy transitions.
     pub step_uj: f64,
+    /// Scheme the current `step_uj` was priced for.
+    priced_scheme: QuantScheme,
+    /// Analytic energy/steps per scheme the session has run under.
+    pub format_spend: Vec<FormatSpend>,
     pub shift_log: Vec<ShiftRecord>,
     /// Measured hw-backend energy of completed (pre-shift) segments
     /// [uJ] — the checkpoint does not carry the cost ledger, so the
@@ -103,18 +125,36 @@ impl FleetSession {
                 });
             }
         }
+        let priced_scheme = session.config.scheme;
         Ok(Self {
             id: id.into(),
             workload: workload.into(),
             session,
             budget,
             shifts,
+            policy: PrecisionPolicy::Static,
             energy_uj: 0.0,
             step_uj,
+            priced_scheme,
+            format_spend: Vec::new(),
             shift_log: Vec::new(),
             hw_uj_carried: 0.0,
             last_ran: 0,
         })
+    }
+
+    /// Attach a per-robot precision policy. Every scheme the policy can
+    /// reach is validated against the session's backend now, so a
+    /// mismatch is a structured construction error instead of a panic
+    /// mid-quantum.
+    pub fn with_policy(mut self, policy: PrecisionPolicy) -> Result<Self, TrainError> {
+        let backend = self.session.config.backend;
+        policy.validate(backend).map_err(|reason| TrainError::BadConfig { reason })?;
+        policy
+            .validate_start(self.session.config.scheme)
+            .map_err(|reason| TrainError::BadConfig { reason })?;
+        self.policy = policy;
+        Ok(self)
     }
 
     /// The wrapped session (read access for reports).
@@ -163,8 +203,10 @@ impl FleetSession {
         self.session = resumed;
     }
 
-    /// Run up to `quantum` training steps, honoring budgets and firing
-    /// due shifts. Returns the steps actually executed.
+    /// Run up to `quantum` training steps, honoring budgets, firing due
+    /// shifts, and letting the per-robot policy transition precision.
+    /// Every step is priced (and its energy attributed) under the
+    /// scheme it actually ran at. Returns the steps executed.
     pub fn run_quantum(&mut self, quantum: usize) -> usize {
         let mut ran = 0;
         while ran < quantum && !self.done() {
@@ -173,8 +215,29 @@ impl FleetSession {
                 self.fire_shift(shift);
                 continue;
             }
-            self.session.step_once();
+            self.session
+                .step_with_policy(&mut self.policy)
+                .expect("policy schemes were validated against this backend at attach time");
+            // the step ran under the (possibly just-transitioned)
+            // active scheme: reprice if it changed, then attribute
+            let scheme = self.session.config.scheme;
+            if scheme != self.priced_scheme {
+                self.step_uj =
+                    step_cost_for(scheme, self.session.config.batch_size, self.session.dims())
+                        .microjoules;
+                self.priced_scheme = scheme;
+            }
             self.energy_uj += self.step_uj;
+            let name = scheme.name();
+            match self.format_spend.iter_mut().find(|f| f.scheme == name) {
+                Some(f) => {
+                    f.steps += 1;
+                    f.uj += self.step_uj;
+                }
+                None => {
+                    self.format_spend.push(FormatSpend { scheme: name, steps: 1, uj: self.step_uj })
+                }
+            }
             ran += 1;
         }
         self.last_ran = ran;
@@ -394,6 +457,59 @@ mod tests {
         assert!(s.session().train_curve.iter().any(|&(step, _)| step >= 20));
         // fast backend measures nothing
         assert!(s.hw_measured_uj().is_none());
+    }
+
+    #[test]
+    fn policy_repriced_steps_attribute_energy_per_format() {
+        // a scheduled robot: e2m1 for steps 0..10, int8 after — energy
+        // must be priced per segment and attributed to each format
+        let scheme = QuantScheme::MxSquare(ElementFormat::E2M1);
+        let mut s = FleetSession::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 5),
+            quick_config(scheme, 20),
+            SessionBudget::steps(20),
+            Vec::new(),
+        )
+        .unwrap()
+        .with_policy(PrecisionPolicy::parse("10:mx-int8").unwrap())
+        .unwrap();
+        while s.run_quantum(7) > 0 {}
+        assert_eq!(s.steps_done(), 20);
+        assert_eq!(s.session().scheme_history().len(), 2);
+        assert_eq!(s.format_spend.len(), 2);
+        let e2m1 = &s.format_spend[0];
+        let int8 = &s.format_spend[1];
+        assert_eq!((e2m1.scheme.as_str(), e2m1.steps), ("mx-e2m1", 10));
+        assert_eq!((int8.scheme.as_str(), int8.steps), ("mx-int8", 10));
+        // int8 steps are analytically dearer than e2m1 steps (8 vs 1
+        // cycles/block), and the total must be the sum of the segments
+        assert!(int8.uj > e2m1.uj, "int8 {} vs e2m1 {}", int8.uj, e2m1.uj);
+        let total: f64 = s.format_spend.iter().map(|f| f.uj).sum();
+        assert!((total - s.energy_uj).abs() < 1e-9 * total.max(1.0));
+    }
+
+    #[test]
+    fn policy_backend_mismatch_is_rejected_at_attach() {
+        let s = FleetSession::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 6),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+                backend: BackendKind::Packed,
+                dims: Some(vec![32, 24, 32]),
+                steps: 10,
+                eval_every: 10,
+                ..Default::default()
+            },
+            SessionBudget::steps(10),
+            Vec::new(),
+        )
+        .unwrap();
+        let r = s.with_policy(PrecisionPolicy::parse("5:mxvec-int8").unwrap());
+        assert!(matches!(r, Err(TrainError::BadConfig { .. })));
     }
 
     #[test]

@@ -20,6 +20,16 @@ pub struct QuantEvents {
     pub blocks: u64,
 }
 
+impl QuantEvents {
+    /// Accumulate another counter set (every field — keep this in sync
+    /// when adding counters, like [`crate::arith::Events::add`]).
+    pub fn add(&mut self, o: &QuantEvents) {
+        self.max_scans += o.max_scans;
+        self.encodes += o.encodes;
+        self.blocks += o.blocks;
+    }
+}
+
 /// The requantization unit.
 #[derive(Debug, Default)]
 pub struct Quantizer {

@@ -39,8 +39,14 @@ use crate::util::mat::Mat;
 use std::path::Path;
 
 /// File magic ("MXCK") + format version.
+///
+/// v2 added the precision-segment log (`scheme_log`): the step-indexed
+/// history of formats a precision-scheduled session trained under, so
+/// resuming mid-schedule restores both the *active* format (which also
+/// governs the weight image and `config.scheme`) and the trajectory
+/// that led there.
 const MAGIC: [u8; 4] = *b"MXCK";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
 
 /// Serialized training state of one [`crate::trainer::TrainSession`].
 #[derive(Debug, Clone)]
@@ -60,6 +66,11 @@ pub struct Checkpoint {
     pub params: Vec<f32>,
     /// Adam moments ([`crate::trainer::Mlp::flat_opt_state`]).
     pub opt: Vec<f32>,
+    /// Precision segments `(start_step, scheme name)`, ascending — the
+    /// session's format trajectory up to this checkpoint. The last
+    /// entry must name `config.scheme` (the active format); resume
+    /// rejects an inconsistent log.
+    pub scheme_log: Vec<(usize, String)>,
     /// The MX weight image: square schemes one tensor per layer,
     /// vector schemes two (both groupings), FP32/Dacapo none.
     pub payload: Vec<MxTensor>,
@@ -172,6 +183,11 @@ impl Checkpoint {
         write_curve(&mut w, &self.val_curve);
         w.put_f32s(&self.params);
         w.put_f32s(&self.opt);
+        w.put_u32(self.scheme_log.len() as u32);
+        for (at, name) in &self.scheme_log {
+            w.put_u64(*at as u64);
+            w.put_str(name);
+        }
         w.put_u32(self.payload.len() as u32);
         for t in &self.payload {
             t.write_bytes(&mut w);
@@ -187,8 +203,8 @@ impl Checkpoint {
             return Err("not an mxscale checkpoint (bad magic)".into());
         }
         let version = r.get_u32()?;
-        if version != VERSION {
-            return Err(format!("unsupported checkpoint version {version} (expected {VERSION})"));
+        if !(1..=VERSION).contains(&version) {
+            return Err(format!("unsupported checkpoint version {version} (expected <= {VERSION})"));
         }
         let scheme_name = r.get_str()?;
         let scheme = QuantScheme::parse(&scheme_name)
@@ -235,6 +251,27 @@ impl Checkpoint {
                 2 * expected
             ));
         }
+        let scheme_log = if version >= 2 {
+            let n_segments = r.get_u32()? as usize;
+            if n_segments > 65536 {
+                return Err(format!("implausible precision-segment count {n_segments}"));
+            }
+            let mut log = Vec::with_capacity(n_segments);
+            for _ in 0..n_segments {
+                let at = r.get_u64()? as usize;
+                let name = r.get_str()?;
+                if QuantScheme::parse(&name).is_none() {
+                    return Err(format!("scheme log names unknown scheme `{name}`"));
+                }
+                log.push((at, name));
+            }
+            log
+        } else {
+            // v1 predates precision scheduling: the session ran one
+            // scheme for its whole life — exactly what save_checkpoint
+            // writes for a never-transitioned session today
+            vec![(0, scheme_name.clone())]
+        };
         let n_tensors = r.get_u32()? as usize;
         if n_tensors > 4096 {
             return Err(format!("implausible payload tensor count {n_tensors}"));
@@ -264,6 +301,7 @@ impl Checkpoint {
             val_curve,
             params,
             opt,
+            scheme_log,
             payload,
         })
     }
@@ -319,6 +357,50 @@ mod tests {
                 "{fmt:?}: square {square} vector {vector} -> reduction {reduction}"
             );
         }
+    }
+
+    #[test]
+    fn v1_checkpoints_without_a_scheme_log_still_parse() {
+        // a pre-scheduling (v1) file has no scheme_log section; it must
+        // load with a synthesized single-segment log (the session ran
+        // one scheme for its whole life) instead of being rejected
+        let mut rng = Pcg64::new(9);
+        let dims = vec![32usize, 16, 32];
+        let mlp = crate::trainer::mlp::Mlp::new(&dims, &mut rng);
+        let scheme = QuantScheme::MxSquare(ElementFormat::E4M3);
+        let mut w = ByteWriter::new();
+        for b in MAGIC {
+            w.put_u8(b);
+        }
+        w.put_u32(1); // version 1
+        w.put_str("mx-e4m3");
+        w.put_str("fast");
+        w.put_u32(dims.len() as u32);
+        for &d in &dims {
+            w.put_u32(d as u32);
+        }
+        w.put_u32(32); // batch_size
+        w.put_f32(1e-3); // lr
+        w.put_u64(20); // eval_every
+        w.put_u64(0); // steps
+        w.put_u64(0xC0FFEE); // seed
+        w.put_u64(3); // step
+        w.put_u64(3); // adam_step
+        write_curve(&mut w, &[]);
+        write_curve(&mut w, &[]);
+        w.put_f32s(&mlp.flat_params());
+        w.put_f32s(&mlp.flat_opt_state());
+        let payload = weight_payload(&mlp.weights, scheme);
+        w.put_u32(payload.len() as u32);
+        for t in &payload {
+            t.write_bytes(&mut w);
+        }
+        let ck = Checkpoint::from_bytes(&w.into_bytes()).unwrap();
+        assert_eq!(ck.config.scheme, scheme);
+        assert_eq!(ck.scheme_log, vec![(0, "mx-e4m3".to_string())]);
+        assert_eq!(ck.step, 3);
+        // and it reserializes forward as v2
+        assert!(Checkpoint::from_bytes(&ck.to_bytes()).is_ok());
     }
 
     #[test]

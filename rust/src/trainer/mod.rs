@@ -24,17 +24,27 @@
 //! master/optimizer sidecar, so a resumed session is indistinguishable
 //! from one that never paused — the substrate of the continual-learning
 //! fleet layer ([`crate::fleet`]).
+//!
+//! Sessions are also **precision-schedulable** ([`policy`]): a
+//! [`PrecisionPolicy`] (step schedule or Dacapo-style loss watchdog)
+//! can switch the active MX format at any step boundary via
+//! [`TrainSession::transition_scheme`]. Transitions requantize from the
+//! FP32 masters — never format-to-format — so every segment is
+//! bit-identical to a fresh session at that format with the same
+//! master/Adam state (DESIGN.md §8, `tests/backend.rs`).
 
 pub mod batched;
 pub mod budget;
 pub mod checkpoint;
 pub mod mlp;
+pub mod policy;
 pub mod qat;
 pub mod session;
 
 pub use batched::{BatchedTrainer, TrainOutcome};
 pub use checkpoint::Checkpoint;
 pub use mlp::{Mlp, MlpGrads};
+pub use policy::{PrecisionPolicy, Watchdog};
 pub use qat::QuantScheme;
 pub use session::{TrainConfig, TrainError, TrainSession};
 

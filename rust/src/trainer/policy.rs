@@ -1,0 +1,463 @@
+//! Runtime precision scheduling: *when* a session changes MX format.
+//!
+//! The paper builds precision-*scalable* hardware — all six MX element
+//! formats on one datapath — but scalability only pays off if the
+//! trainer actually changes precision while learning, the way Dacapo
+//! progressively adapts precision during continual learning. A
+//! [`PrecisionPolicy`] is that decision logic, factored out of the
+//! session: it inspects the step index and the live loss stream and
+//! says which [`QuantScheme`] the next step should run under. The
+//! session applies the decision through
+//! [`crate::trainer::TrainSession::transition_scheme`], which drives
+//! [`crate::backend::ExecBackend::transition`] — every transition
+//! requantizes from the FP32 masters (never format-to-format), so a
+//! transition is bit-identical to starting fresh at the new format with
+//! the same master/Adam state (DESIGN.md §8, `tests/backend.rs`).
+//!
+//! Three policy families:
+//!
+//! * [`PrecisionPolicy::Static`] — never transitions (the pre-policy
+//!   behavior; `TrainSession::run` is this policy).
+//! * [`PrecisionPolicy::Schedule`] — step-indexed transitions, e.g.
+//!   "e2m1 until step 200, int8 after": the *planned* curriculum, cheap
+//!   coarse steps early, fine steps late. Stateless: the decision is a
+//!   pure function of the step index, which is what makes a
+//!   checkpoint-resumed session re-join its schedule bitwise.
+//! * [`PrecisionPolicy::Adaptive`] — a Dacapo-style [`Watchdog`] over
+//!   the training-loss stream: *demotes* precision (coarser format,
+//!   cheaper steps) while training is stable, *promotes* it (finer
+//!   format) when the loss spikes or diverges.
+
+use crate::backend::BackendKind;
+use crate::trainer::qat::QuantScheme;
+
+/// A step-indexed schedule entry: from `at_step` on, run `scheme`.
+pub type ScheduleEntry = (usize, QuantScheme);
+
+/// Decides which scheme each training step runs under.
+#[derive(Debug, Clone, Default)]
+pub enum PrecisionPolicy {
+    /// Keep the session's configured scheme forever.
+    #[default]
+    Static,
+    /// Step-indexed transitions, ascending by step. The entry with the
+    /// largest `at_step <= step` is active; before the first entry the
+    /// session's configured scheme runs.
+    Schedule(Vec<ScheduleEntry>),
+    /// Loss-watchdog adaptation over a precision ladder.
+    Adaptive(Watchdog),
+}
+
+impl PrecisionPolicy {
+    /// Build a validated step schedule (entries sorted, none empty,
+    /// step indices unique — a duplicate would silently shadow the
+    /// earlier entry while `name()` still advertised both).
+    pub fn schedule(mut entries: Vec<ScheduleEntry>) -> Result<PrecisionPolicy, String> {
+        if entries.is_empty() {
+            return Err("a precision schedule needs at least one step:scheme entry".into());
+        }
+        entries.sort_by_key(|&(step, _)| step);
+        if let Some(w) = entries.windows(2).find(|w| w[0].0 == w[1].0) {
+            return Err(format!(
+                "duplicate schedule step {}: `{}` and `{}` cannot both start there",
+                w[0].0,
+                w[0].1.name(),
+                w[1].1.name()
+            ));
+        }
+        Ok(PrecisionPolicy::Schedule(entries))
+    }
+
+    /// Parse a CLI policy spec:
+    ///
+    /// * `static` — no transitions;
+    /// * `<step>:<scheme>[,<step>:<scheme>...]` — a step schedule, e.g.
+    ///   `0:mx-e2m1,200:mx-int8` (scheme names as in `--scheme`);
+    /// * `adaptive:<scheme>><scheme>[>...]` — a watchdog over the given
+    ///   ladder, highest precision first, e.g.
+    ///   `adaptive:mx-int8>mx-e2m3>mx-e2m1` (default knobs).
+    pub fn parse(spec: &str) -> Result<PrecisionPolicy, String> {
+        let spec = spec.trim();
+        if spec == "static" {
+            return Ok(PrecisionPolicy::Static);
+        }
+        if let Some(ladder_spec) = spec.strip_prefix("adaptive:") {
+            let mut ladder = Vec::new();
+            for name in ladder_spec.split('>') {
+                let name = name.trim();
+                let scheme = QuantScheme::parse(name)
+                    .ok_or_else(|| format!("unknown scheme `{name}` in policy `{spec}`"))?;
+                ladder.push(scheme);
+            }
+            return Ok(PrecisionPolicy::Adaptive(Watchdog::new(ladder)?));
+        }
+        let mut entries = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (step, name) = part
+                .split_once(':')
+                .ok_or_else(|| format!("policy entry `{part}` is not <step>:<scheme>"))?;
+            let step: usize = step
+                .trim()
+                .parse()
+                .map_err(|_| format!("bad step index in policy entry `{part}`"))?;
+            let scheme = QuantScheme::parse(name.trim())
+                .ok_or_else(|| format!("unknown scheme `{name}` in policy entry `{part}`"))?;
+            entries.push((step, scheme));
+        }
+        PrecisionPolicy::schedule(entries)
+    }
+
+    /// Every scheme this policy can ever select (for up-front backend
+    /// validation — a fleet rejects a policy its backend can't run
+    /// instead of panicking mid-quantum).
+    pub fn schemes(&self) -> Vec<QuantScheme> {
+        match self {
+            PrecisionPolicy::Static => Vec::new(),
+            PrecisionPolicy::Schedule(entries) => entries.iter().map(|&(_, s)| s).collect(),
+            PrecisionPolicy::Adaptive(w) => w.ladder.clone(),
+        }
+    }
+
+    /// Check every reachable scheme against a backend kind.
+    pub fn validate(&self, backend: BackendKind) -> Result<(), String> {
+        for scheme in self.schemes() {
+            if let Err(reason) = crate::backend::make_backend(backend, scheme) {
+                let (s, b) = (scheme.name(), backend.name());
+                return Err(format!("policy scheme `{s}` unsupported on `{b}`: {reason}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Check the scheme a session will *start* under. An adaptive
+    /// ladder must contain the start scheme: "demote"/"promote" are
+    /// rungs relative to the current format, which is undefined for a
+    /// format the ladder doesn't name (the watchdog would park forever
+    /// — make that a loud configuration error instead). Static and
+    /// step-scheduled policies accept any start scheme.
+    pub fn validate_start(&self, start: QuantScheme) -> Result<(), String> {
+        match self {
+            PrecisionPolicy::Adaptive(w) if !w.ladder.contains(&start) => Err(format!(
+                "adaptive ladder `{}` does not contain the session's start scheme `{}`",
+                self.name(),
+                start.name()
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    /// Which scheme the step about to run (`step`) should use, or
+    /// `None` to keep `current`. Called **before** the step executes.
+    pub fn decide(&mut self, step: usize, current: QuantScheme) -> Option<QuantScheme> {
+        match self {
+            PrecisionPolicy::Static => None,
+            PrecisionPolicy::Schedule(entries) => entries
+                .iter()
+                .rev()
+                .find(|&&(at, _)| at <= step)
+                .map(|&(_, scheme)| scheme)
+                .filter(|&scheme| scheme != current),
+            PrecisionPolicy::Adaptive(w) => w.decide(current),
+        }
+    }
+
+    /// Feed the training loss of the step that just ran (the adaptive
+    /// watchdog's signal; a no-op for the stateless policies).
+    pub fn observe(&mut self, loss: f64) {
+        if let PrecisionPolicy::Adaptive(w) = self {
+            w.observe(loss);
+        }
+    }
+
+    /// Short display name for tables and reports.
+    pub fn name(&self) -> String {
+        match self {
+            PrecisionPolicy::Static => "static".into(),
+            PrecisionPolicy::Schedule(entries) => {
+                let parts: Vec<String> =
+                    entries.iter().map(|(s, sch)| format!("{s}:{}", sch.name())).collect();
+                parts.join(",")
+            }
+            PrecisionPolicy::Adaptive(w) => {
+                let parts: Vec<String> = w.ladder.iter().map(|s| s.name()).collect();
+                format!("adaptive:{}", parts.join(">"))
+            }
+        }
+    }
+}
+
+/// Dacapo-style loss watchdog over a precision ladder.
+///
+/// The ladder is ordered **highest precision first** (index 0). After
+/// every step the watchdog records the training loss; once it has two
+/// full windows at the current rung it compares the mean loss of the
+/// older window against the newer one:
+///
+/// * **spike** — the newer window is `spike_tol` worse: training is
+///   diverging at this precision; *promote* (move one rung up, toward
+///   finer formats).
+/// * **plateau** — the newer window improved by less than
+///   `plateau_tol`: training is stable; *demote* (one rung down, toward
+///   coarser/cheaper formats) and bank the throughput.
+///
+/// After any rung change the loss history is cleared and a `cooldown`
+/// of steps must pass before the next decision, so the watchdog judges
+/// each format on losses produced *under that format*.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    /// Precision ladder, highest precision first.
+    pub ladder: Vec<QuantScheme>,
+    /// Window length (steps) for the plateau/spike comparison.
+    pub window: usize,
+    /// Relative improvement below which the window pair is a plateau.
+    pub plateau_tol: f64,
+    /// Relative worsening above which the window pair is a spike.
+    pub spike_tol: f64,
+    /// Steps to hold after a transition before judging again.
+    pub cooldown: usize,
+    rung: usize,
+    since_change: usize,
+    losses: Vec<f64>,
+}
+
+impl Watchdog {
+    /// Watchdog with default knobs (window 32, plateau 2%, spike 20%,
+    /// cooldown one window). The ladder must name at least two rungs.
+    pub fn new(ladder: Vec<QuantScheme>) -> Result<Watchdog, String> {
+        if ladder.len() < 2 {
+            return Err("an adaptive ladder needs at least two schemes (high>low)".into());
+        }
+        // a duplicate rung would let the demote branch land on a
+        // *higher*-precision format (e.g. int8>e2m1>int8) — the exact
+        // inversion the rung logic exists to prevent
+        for (i, s) in ladder.iter().enumerate() {
+            if ladder[..i].contains(s) {
+                return Err(format!("scheme `{}` appears twice in the adaptive ladder", s.name()));
+            }
+        }
+        Ok(Watchdog {
+            ladder,
+            window: 32,
+            plateau_tol: 0.02,
+            spike_tol: 0.2,
+            cooldown: 32,
+            rung: 0,
+            since_change: 0,
+            losses: Vec::new(),
+        })
+    }
+
+    /// Current rung index (0 = highest precision).
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    fn observe(&mut self, loss: f64) {
+        self.since_change += 1;
+        self.losses.push(loss);
+        let cap = 2 * self.window;
+        if self.losses.len() > cap {
+            let drop = self.losses.len() - cap;
+            self.losses.drain(..drop);
+        }
+    }
+
+    fn mean(xs: &[f64]) -> f64 {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    fn decide(&mut self, current: QuantScheme) -> Option<QuantScheme> {
+        // sync the rung to the scheme the session is actually running:
+        // a session may start (or resume) at any rung of the ladder,
+        // and "demote"/"promote" are relative to the *current* rung —
+        // otherwise a plateau at the bottom rung could fire a
+        // precision *increase* out of the demotion branch. A format the
+        // ladder doesn't name has no rung: park rather than act on a
+        // stale index (`validate_start` rejects that setup up front).
+        if self.ladder.get(self.rung) != Some(&current) {
+            match self.ladder.iter().position(|&s| s == current) {
+                Some(pos) => self.rung = pos,
+                None => return None,
+            }
+        }
+        if self.since_change < self.cooldown || self.losses.len() < 2 * self.window {
+            return None;
+        }
+        let split = self.losses.len() - self.window;
+        let older = Self::mean(&self.losses[split - self.window..split]);
+        let newer = Self::mean(&self.losses[split..]);
+        if !older.is_finite() || !newer.is_finite() || older <= 0.0 {
+            return None;
+        }
+        let next_rung = if newer > older * (1.0 + self.spike_tol) {
+            // diverging: promote toward precision (if any rung is left)
+            self.rung.saturating_sub(1)
+        } else if newer > older * (1.0 - self.plateau_tol) {
+            // plateaued: demote toward cheap formats
+            (self.rung + 1).min(self.ladder.len() - 1)
+        } else {
+            return None; // still improving at a healthy rate
+        };
+        if next_rung == self.rung && self.ladder[next_rung] == current {
+            // at the end of the ladder already; re-judge after a window
+            self.losses.clear();
+            self.since_change = 0;
+            return None;
+        }
+        self.rung = next_rung;
+        self.losses.clear();
+        self.since_change = 0;
+        let target = self.ladder[self.rung];
+        if target == current {
+            None
+        } else {
+            Some(target)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::element::ElementFormat;
+
+    fn sq(f: ElementFormat) -> QuantScheme {
+        QuantScheme::MxSquare(f)
+    }
+
+    #[test]
+    fn parse_round_trips_the_three_families() {
+        assert!(matches!(PrecisionPolicy::parse("static").unwrap(), PrecisionPolicy::Static));
+        let p = PrecisionPolicy::parse("0:mx-e2m1,200:mx-int8").unwrap();
+        match &p {
+            PrecisionPolicy::Schedule(e) => {
+                assert_eq!(e.len(), 2);
+                assert_eq!(e[0], (0, sq(ElementFormat::E2M1)));
+                assert_eq!(e[1], (200, sq(ElementFormat::Int8)));
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(PrecisionPolicy::parse(&p.name()).unwrap().name(), p.name());
+        let a = PrecisionPolicy::parse("adaptive:mx-int8>mx-e2m3>mx-e2m1").unwrap();
+        match &a {
+            PrecisionPolicy::Adaptive(w) => assert_eq!(w.ladder.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(PrecisionPolicy::parse(&a.name()).unwrap().name(), a.name());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "0:nope",
+            "x:int8",
+            "0=int8",
+            "adaptive:int8",
+            "adaptive:int8>nope",
+            "100:mx-int8,100:mx-e2m1",          // duplicate step would silently shadow
+            "adaptive:mx-int8>mx-e2m1>mx-int8", // duplicate rung inverts demote
+        ] {
+            assert!(PrecisionPolicy::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn adaptive_start_must_be_on_the_ladder() {
+        let p = PrecisionPolicy::parse("adaptive:mx-int8>mx-e2m1").unwrap();
+        assert!(p.validate_start(sq(ElementFormat::Int8)).is_ok());
+        assert!(p.validate_start(sq(ElementFormat::E2M1)).is_ok());
+        let e = p.validate_start(sq(ElementFormat::E4M3)).unwrap_err();
+        assert!(e.contains("mx-e4m3"), "{e}");
+        // the stateless policies accept any start scheme
+        assert!(PrecisionPolicy::Static.validate_start(sq(ElementFormat::E4M3)).is_ok());
+        let s = PrecisionPolicy::parse("5:mx-int8").unwrap();
+        assert!(s.validate_start(sq(ElementFormat::E4M3)).is_ok());
+    }
+
+    #[test]
+    fn schedule_decides_by_step_and_is_resumable() {
+        let mut p = PrecisionPolicy::parse("10:mx-int8,20:mx-e2m1").unwrap();
+        let start = sq(ElementFormat::E4M3);
+        assert_eq!(p.decide(0, start), None, "before the first entry");
+        assert_eq!(p.decide(9, start), None);
+        assert_eq!(p.decide(10, start), Some(sq(ElementFormat::Int8)));
+        // stateless: a resumed session mid-schedule gets the same answer
+        let mut q = PrecisionPolicy::parse("10:mx-int8,20:mx-e2m1").unwrap();
+        assert_eq!(q.decide(15, sq(ElementFormat::Int8)), None, "already active");
+        assert_eq!(q.decide(25, sq(ElementFormat::Int8)), Some(sq(ElementFormat::E2M1)));
+    }
+
+    #[test]
+    fn watchdog_demotes_on_plateau_and_promotes_on_spike() {
+        let ladder = vec![sq(ElementFormat::Int8), sq(ElementFormat::E2M1)];
+        let mut w = Watchdog::new(ladder).unwrap();
+        w.window = 4;
+        w.cooldown = 4;
+        let mut p = PrecisionPolicy::Adaptive(w);
+        let current = sq(ElementFormat::Int8);
+        // flat loss stream -> plateau -> demote to the coarse rung
+        let mut demoted = None;
+        for step in 0..32 {
+            if let Some(next) = p.decide(step, current) {
+                demoted = Some(next);
+                break;
+            }
+            p.observe(1.0);
+        }
+        assert_eq!(demoted, Some(sq(ElementFormat::E2M1)), "plateau must demote");
+        // now a diverging stream at the coarse rung -> promote back
+        let current = sq(ElementFormat::E2M1);
+        let mut promoted = None;
+        for step in 0..64 {
+            if let Some(next) = p.decide(step, current) {
+                promoted = Some(next);
+                break;
+            }
+            p.observe(1.0 + step as f64 * 0.5);
+        }
+        assert_eq!(promoted, Some(sq(ElementFormat::Int8)), "spike must promote");
+    }
+
+    #[test]
+    fn watchdog_syncs_its_rung_to_the_running_scheme() {
+        // session starts at the *bottom* rung: a plateau must park
+        // there, not fire the demotion branch relative to a stale
+        // rung-0 index (which would raise precision and cost)
+        let ladder = vec![sq(ElementFormat::Int8), sq(ElementFormat::E2M1)];
+        let mut w = Watchdog::new(ladder).unwrap();
+        w.window = 4;
+        w.cooldown = 4;
+        let mut p = PrecisionPolicy::Adaptive(w);
+        let current = sq(ElementFormat::E2M1);
+        for step in 0..32 {
+            assert_eq!(p.decide(step, current), None, "step {step}: plateau at bottom rung");
+            p.observe(1.0);
+        }
+    }
+
+    #[test]
+    fn watchdog_keeps_quiet_while_improving() {
+        let ladder = vec![sq(ElementFormat::Int8), sq(ElementFormat::E2M1)];
+        let mut w = Watchdog::new(ladder).unwrap();
+        w.window = 4;
+        w.cooldown = 4;
+        let mut p = PrecisionPolicy::Adaptive(w);
+        let current = sq(ElementFormat::Int8);
+        for step in 0..40 {
+            assert_eq!(p.decide(step, current), None, "step {step}");
+            p.observe(100.0 / (step + 1) as f64); // healthy descent
+        }
+    }
+
+    #[test]
+    fn validate_catches_backend_mismatches() {
+        let p = PrecisionPolicy::parse("0:mx-e2m1,10:mxvec-int8").unwrap();
+        assert!(p.validate(BackendKind::Fast).is_ok());
+        let e = p.validate(BackendKind::Packed).unwrap_err();
+        assert!(e.contains("mxvec-int8"), "{e}");
+        assert!(p.validate(BackendKind::Hardware).is_err());
+        assert!(PrecisionPolicy::Static.validate(BackendKind::Packed).is_ok());
+    }
+}

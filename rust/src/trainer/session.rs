@@ -5,6 +5,7 @@ use crate::backend::{make_backend, BackendKind, ExecBackend, HwCostReport};
 use crate::gemmcore::memory::{footprint_ours, MlpShape};
 use crate::trainer::checkpoint::{weight_payload, Checkpoint};
 use crate::trainer::mlp::{Mlp, MLP_DIMS};
+use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::{qat_eval, qat_step_with, QuantScheme};
 use crate::util::rng::Pcg64;
 use crate::workloads::Dataset;
@@ -85,6 +86,10 @@ pub struct TrainSession {
     backend: Box<dyn ExecBackend + Send>,
     dims: Vec<usize>,
     step: usize,
+    /// Precision segments: `(start_step, scheme)`, ascending; entry 0
+    /// is the configured scheme at step 0, and every
+    /// [`TrainSession::transition_scheme`] appends one.
+    scheme_log: Vec<(usize, QuantScheme)>,
 }
 
 impl TrainSession {
@@ -128,6 +133,7 @@ impl TrainSession {
         })?;
         let mut rng = Pcg64::with_stream(config.seed, 0x11F);
         let mlp = Mlp::new(&dims, &mut rng);
+        let scheme_log = vec![(0, config.scheme)];
         Ok(Self {
             config,
             mlp,
@@ -137,6 +143,7 @@ impl TrainSession {
             backend,
             dims,
             step: 0,
+            scheme_log,
         })
     }
 
@@ -153,6 +160,66 @@ impl TrainSession {
     /// MLP layer dims this session trains.
     pub fn dims(&self) -> &[usize] {
         &self.dims
+    }
+
+    /// Precision segments so far: `(start_step, scheme)`, ascending.
+    /// Always non-empty; the last entry is the active scheme.
+    pub fn scheme_history(&self) -> &[(usize, QuantScheme)] {
+        &self.scheme_log
+    }
+
+    /// Switch the active [`QuantScheme`] at the current step boundary
+    /// (the runtime-precision-scheduling seam, DESIGN.md §8).
+    ///
+    /// The live weights are *not* converted format-to-format — they are
+    /// FP32 masters, and the backend drops every quantized cache, so
+    /// from the next step on the session is bit-identical to one that
+    /// started fresh at the new format with this master/Adam state
+    /// (`tests/backend.rs` asserts this for all three backends).
+    /// Evaluation ([`TrainSession::val_loss`]) follows the new scheme
+    /// immediately. A same-scheme transition is a no-op; a scheme the
+    /// backend cannot execute is a structured error and the session
+    /// keeps training under the old scheme.
+    pub fn transition_scheme(&mut self, scheme: QuantScheme) -> Result<(), TrainError> {
+        if scheme == self.config.scheme {
+            return Ok(());
+        }
+        self.backend.transition(scheme).map_err(|reason| TrainError::UnsupportedScheme {
+            scheme: scheme.name(),
+            backend: self.config.backend.name(),
+            reason,
+        })?;
+        self.config.scheme = scheme;
+        self.scheme_log.push((self.step, scheme));
+        Ok(())
+    }
+
+    /// One training step under a [`PrecisionPolicy`]: the policy is
+    /// consulted *before* the step (so a decision at step `k` makes
+    /// step `k` the first step of the new segment) and fed the step's
+    /// training loss afterwards (the adaptive watchdog's signal).
+    pub fn step_with_policy(&mut self, policy: &mut PrecisionPolicy) -> Result<f64, TrainError> {
+        if let Some(next) = policy.decide(self.step, self.config.scheme) {
+            self.transition_scheme(next)?;
+        }
+        let loss = self.step_once();
+        policy.observe(loss);
+        Ok(loss)
+    }
+
+    /// Run to the configured step budget under a precision policy. An
+    /// adaptive policy whose ladder does not contain the active scheme
+    /// is a configuration error (its rung semantics would be undefined).
+    pub fn run_with_policy(&mut self, policy: &mut PrecisionPolicy) -> Result<(), TrainError> {
+        policy
+            .validate_start(self.config.scheme)
+            .map_err(|reason| TrainError::BadConfig { reason })?;
+        while self.step < self.config.steps {
+            self.step_with_policy(policy)?;
+        }
+        let v = self.val_loss();
+        self.val_curve.push((self.step, v));
+        Ok(())
     }
 
     /// Run one training step; returns the train loss.
@@ -173,13 +240,10 @@ impl TrainSession {
         loss
     }
 
-    /// Run to the configured step budget.
+    /// Run to the configured step budget (no precision transitions).
     pub fn run(&mut self) {
-        while self.step < self.config.steps {
-            self.step_once();
-        }
-        let v = self.val_loss();
-        self.val_curve.push((self.step, v));
+        self.run_with_policy(&mut PrecisionPolicy::Static)
+            .expect("the static policy never transitions, so it can never fail");
     }
 
     /// Quantized validation loss over the held-out split. Evaluation
@@ -200,8 +264,10 @@ impl TrainSession {
 
     /// Snapshot the complete training state as an MX-native
     /// [`Checkpoint`]: the quantized weight image under this session's
-    /// scheme (square groups stored single-copy) plus the bit-exact FP32
-    /// master/optimizer sidecar and the loss curves.
+    /// **active** scheme (square groups stored single-copy) plus the
+    /// bit-exact FP32 master/optimizer sidecar, the loss curves, and
+    /// the precision-segment log — so a precision-scheduled session
+    /// resumes mid-schedule at the format it was actually running.
     pub fn save_checkpoint(&self) -> Checkpoint {
         Checkpoint {
             config: TrainConfig { dims: Some(self.dims.clone()), ..self.config.clone() },
@@ -211,6 +277,7 @@ impl TrainSession {
             val_curve: self.val_curve.clone(),
             params: self.mlp.flat_params(),
             opt: self.mlp.flat_opt_state(),
+            scheme_log: self.scheme_log.iter().map(|&(s, sch)| (s, sch.name())).collect(),
             payload: weight_payload(&self.mlp.weights, self.config.scheme),
         }
     }
@@ -239,6 +306,21 @@ impl TrainSession {
         s.step = ck.step;
         s.train_curve = ck.train_curve.clone();
         s.val_curve = ck.val_curve.clone();
+        if !ck.scheme_log.is_empty() {
+            let mut log = Vec::with_capacity(ck.scheme_log.len());
+            for (at, name) in &ck.scheme_log {
+                let scheme = QuantScheme::parse(name).ok_or_else(|| TrainError::BadCheckpoint {
+                    reason: format!("scheme log names unknown scheme `{name}`"),
+                })?;
+                log.push((*at, scheme));
+            }
+            if log.last().map(|&(_, sch)| sch) != Some(ck.config.scheme) {
+                return Err(TrainError::BadCheckpoint {
+                    reason: "scheme log does not end at the active scheme".into(),
+                });
+            }
+            s.scheme_log = log;
+        }
         Ok(s)
     }
 
@@ -445,6 +527,116 @@ mod tests {
         .save_checkpoint();
         ck.params.pop();
         let e = TrainSession::resume(quick_dataset("cartpole"), &ck).unwrap_err();
+        assert!(matches!(e, TrainError::BadCheckpoint { .. }), "{e}");
+    }
+
+    #[test]
+    fn transition_scheme_switches_eval_and_logs_history() {
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::E4M3),
+                dims: Some(vec![32, 16, 32]),
+                steps: 0,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        for _ in 0..3 {
+            s.step_once();
+        }
+        let v_e4m3 = s.val_loss();
+        // same-scheme transition is a no-op (no new segment)
+        s.transition_scheme(QuantScheme::MxSquare(ElementFormat::E4M3)).unwrap();
+        assert_eq!(s.scheme_history().len(), 1);
+        s.transition_scheme(QuantScheme::MxSquare(ElementFormat::E2M1)).unwrap();
+        assert_eq!(s.config.scheme, QuantScheme::MxSquare(ElementFormat::E2M1));
+        let want = [
+            (0, QuantScheme::MxSquare(ElementFormat::E4M3)),
+            (3, QuantScheme::MxSquare(ElementFormat::E2M1)),
+        ];
+        assert_eq!(s.scheme_history(), &want);
+        // eval follows the active scheme immediately (coarser -> worse)
+        let v_e2m1 = s.val_loss();
+        assert_ne!(v_e4m3, v_e2m1, "eval must requantize under the new scheme");
+        for _ in 0..3 {
+            s.step_once();
+        }
+        assert_eq!(s.step_count(), 6);
+    }
+
+    #[test]
+    fn rejected_transition_leaves_the_session_running() {
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+                backend: BackendKind::Packed,
+                dims: Some(vec![32, 16, 32]),
+                steps: 0,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        s.step_once();
+        let e = s.transition_scheme(QuantScheme::Fp32).unwrap_err();
+        assert!(matches!(e, TrainError::UnsupportedScheme { backend: "packed", .. }), "{e}");
+        assert_eq!(s.config.scheme, QuantScheme::MxSquare(ElementFormat::Int8));
+        assert_eq!(s.scheme_history().len(), 1);
+        s.step_once(); // still trains under the old scheme
+        assert_eq!(s.step_count(), 2);
+    }
+
+    #[test]
+    fn scheduled_policy_drives_transitions_at_the_right_steps() {
+        use crate::trainer::policy::PrecisionPolicy;
+        let mut s = TrainSession::new(
+            quick_dataset("cartpole"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::E2M1),
+                dims: Some(vec![32, 16, 32]),
+                steps: 12,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        let mut policy = PrecisionPolicy::parse("6:mx-int8").unwrap();
+        s.run_with_policy(&mut policy).unwrap();
+        assert_eq!(s.step_count(), 12);
+        let want = [
+            (0, QuantScheme::MxSquare(ElementFormat::E2M1)),
+            (6, QuantScheme::MxSquare(ElementFormat::Int8)),
+        ];
+        assert_eq!(s.scheme_history(), &want);
+        assert_eq!(s.config.scheme, QuantScheme::MxSquare(ElementFormat::Int8));
+    }
+
+    #[test]
+    fn checkpoint_carries_the_scheme_log() {
+        let mut s = TrainSession::new(
+            quick_dataset("reacher"),
+            TrainConfig {
+                scheme: QuantScheme::MxSquare(ElementFormat::E4M3),
+                dims: Some(vec![32, 16, 32]),
+                steps: 0,
+                eval_every: usize::MAX,
+                ..Default::default()
+            },
+        );
+        for _ in 0..4 {
+            s.step_once();
+        }
+        s.transition_scheme(QuantScheme::MxSquare(ElementFormat::Int8)).unwrap();
+        s.step_once();
+        let ck = s.save_checkpoint();
+        assert_eq!(ck.config.scheme, QuantScheme::MxSquare(ElementFormat::Int8));
+        assert_eq!(ck.scheme_log, vec![(0, "mx-e4m3".to_string()), (4, "mx-int8".to_string())]);
+        let resumed = TrainSession::resume(quick_dataset("reacher"), &ck).unwrap();
+        assert_eq!(resumed.scheme_history(), s.scheme_history());
+        // a log that does not end at the active scheme is rejected
+        let mut bad = ck.clone();
+        bad.scheme_log.pop();
+        let e = TrainSession::resume(quick_dataset("reacher"), &bad).unwrap_err();
         assert!(matches!(e, TrainError::BadCheckpoint { .. }), "{e}");
     }
 

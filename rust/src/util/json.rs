@@ -1,8 +1,11 @@
-//! Minimal JSON emission (no serde offline).
+//! Minimal JSON emission and parsing (no serde offline).
 //!
-//! Only what the report writers need: objects, arrays, numbers, strings.
-//! Produces deterministic key order (insertion order) so experiment
-//! outputs diff cleanly between runs.
+//! Emission covers what the report writers need: objects, arrays,
+//! numbers, strings, deterministic key order (insertion order) so
+//! experiment outputs diff cleanly between runs. [`Json::parse`] is the
+//! inverse — a small recursive-descent reader used by the conformance
+//! suite to load committed golden-vector files and by tests that
+//! inspect report documents structurally instead of by substring.
 
 use std::fmt::Write as _;
 
@@ -42,6 +45,69 @@ impl Json {
             _ => panic!("push() on non-array"),
         }
         self
+    }
+
+    /// Object field lookup (None on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(kv) => kv.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Array elements (None on non-arrays).
+    pub fn items(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
+    }
+
+    /// Object entries in document order (None on non-objects).
+    pub fn entries(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(kv) => Some(kv),
+            _ => None,
+        }
+    }
+
+    /// Numeric value (None on non-numbers).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// String value (None on non-strings).
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Boolean value (None on non-booleans).
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Parse a JSON document (the inverse of [`Json::to_string`] /
+    /// [`Json::pretty`]). Strict enough for round-trips and committed
+    /// test vectors: rejects trailing garbage, unterminated strings,
+    /// bad escapes, and malformed numbers with a byte offset.
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing characters at byte {}", p.pos));
+        }
+        Ok(v)
     }
 
     /// Serialize compactly.
@@ -135,6 +201,195 @@ impl Json {
     }
 }
 
+/// Recursive-descent JSON reader over raw bytes.
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("bad literal at byte {}", self.pos))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(b'-' | b'0'..=b'9') => self.number(),
+            Some(b) => Err(format!("unexpected `{}` at byte {}", b as char, self.pos)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut kv = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(kv));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.eat(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            kv.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(kv));
+                }
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(b) = self.peek() else {
+                return Err("unterminated string".into());
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(esc) = self.peek() else {
+                        return Err("unterminated escape".into());
+                    };
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err("truncated \\u escape".into());
+                            }
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                .map_err(|_| "non-utf8 \\u escape".to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| format!("bad \\u escape `{hex}`"))?;
+                            // BMP only — the emitter never writes surrogate pairs
+                            let ch = char::from_u32(code)
+                                .ok_or_else(|| format!("invalid codepoint \\u{hex}"))?;
+                            out.push(ch);
+                            self.pos += 4;
+                        }
+                        other => return Err(format!("bad escape `\\{}`", other as char)),
+                    }
+                }
+                _ => {
+                    // consume the full UTF-8 sequence starting here
+                    let start = self.pos - 1;
+                    let len = utf8_len(b);
+                    let end = start + len;
+                    if len == 0 || end > self.bytes.len() {
+                        return Err(format!("invalid utf-8 at byte {start}"));
+                    }
+                    let s = std::str::from_utf8(&self.bytes[start..end])
+                        .map_err(|_| format!("invalid utf-8 at byte {start}"))?;
+                    out.push_str(s);
+                    self.pos = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos]).expect("ascii digits");
+        tok.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{tok}` at byte {start}"))
+    }
+}
+
+/// Byte length of the UTF-8 sequence that starts with `b` (0 = invalid
+/// start byte).
+fn utf8_len(b: u8) -> usize {
+    match b {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        0xf0..=0xf7 => 4,
+        _ => 0,
+    }
+}
+
 impl From<f64> for Json {
     fn from(x: f64) -> Json {
         Json::Num(x)
@@ -219,5 +474,54 @@ mod tests {
         let p = j.pretty();
         assert!(p.contains("\n"));
         assert!(p.contains("\"xs\""));
+    }
+
+    #[test]
+    fn parse_inverts_emission() {
+        let j = Json::obj()
+            .set("name", "mx-e4m3")
+            .set("n", -12i64)
+            .set("x", 0.001953125f64)
+            .set("big", 5.7344e4f64)
+            .set("flag", true)
+            .set("none", Json::Null)
+            .set("xs", Json::arr().push(1i64).push(Json::arr().push("a\"b\\c\nd")))
+            .set("o", Json::obj().set("k", 2i64));
+        for text in [j.to_string(), j.pretty()] {
+            let p = Json::parse(&text).unwrap();
+            assert_eq!(p.to_string(), j.to_string(), "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_accessors_walk_documents() {
+        let p = Json::parse(r#"{"a": {"b": [1, 2.5, "x", true]}, "z": null}"#).unwrap();
+        let xs = p.get("a").and_then(|a| a.get("b")).and_then(|b| b.items()).unwrap();
+        assert_eq!(xs.len(), 4);
+        assert_eq!(xs[0].as_f64(), Some(1.0));
+        assert_eq!(xs[1].as_f64(), Some(2.5));
+        assert_eq!(xs[2].as_str(), Some("x"));
+        assert_eq!(xs[3].as_bool(), Some(true));
+        assert!(matches!(p.get("z"), Some(Json::Null)));
+        assert_eq!(p.get("missing").map(|_| ()), None);
+        assert_eq!(p.entries().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parse_handles_numbers_and_escapes() {
+        assert_eq!(Json::parse("-1.5e-3").unwrap().as_f64(), Some(-0.0015));
+        assert_eq!(Json::parse("1e-40").unwrap().as_f64(), Some(1e-40));
+        assert_eq!(Json::parse(r#""A\t""#).unwrap().as_str(), Some("A\t"));
+        assert_eq!(Json::parse("\"caf\u{e9}\"").unwrap().as_str(), Some("caf\u{e9}"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in [
+            "", "{", "[1,", "{\"a\"}", "{\"a\":}", "tru", "1 2", "\"unterminated",
+            "\"bad\\q\"", "nope", "[1]]",
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad:?}");
+        }
     }
 }

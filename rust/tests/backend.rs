@@ -10,7 +10,10 @@
 //! GeMM-for-GeMM. Plus ragged-shape quantization coverage (rectangular
 //! and non-multiple-of-8/32 matrices through both block layouts).
 
-use mxscale::backend::{BackendKind, ExecBackend, FakeQuantBackend, HardwareBackend, PackedBackend};
+use mxscale::backend::{
+    make_backend, BackendKind, ExecBackend, FakeQuantBackend, HardwareBackend, PackedBackend,
+};
+use mxscale::trainer::policy::PrecisionPolicy;
 use mxscale::gemmcore::memory::gemm_traffic_bits;
 use mxscale::gemmcore::schedule::{gemm_cycles_staged, CycleCost, Stage};
 use mxscale::mx::dacapo::DacapoFormat;
@@ -224,6 +227,234 @@ fn packed_session_loss_curves_match_fast_for_all_six_formats() {
             (s.train_curve.clone(), s.val_curve.clone())
         };
         assert_eq!(run(BackendKind::Fast), run(BackendKind::Packed), "{fmt:?}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Transition oracles: a mid-session MX format switch is bit-identical
+// (a) to starting fresh at the new format with the same master/Adam
+// state, (b) across all three backends, and (c) to checkpoint→resume
+// across the transition boundary — for all six formats. This is the
+// contract that makes runtime precision scheduling *safe*: a schedule
+// changes throughput and quantization error, never the semantics of
+// the training graph (DESIGN.md §8).
+// ---------------------------------------------------------------------
+
+const ALL_BACKENDS: [BackendKind; 3] =
+    [BackendKind::Fast, BackendKind::Hardware, BackendKind::Packed];
+
+fn pbits(m: &Mlp) -> Vec<u32> {
+    m.flat_params().iter().map(|v| v.to_bits()).collect()
+}
+
+/// A start format different from `target`, so the transition is real.
+fn other_fmt(target: ElementFormat) -> ElementFormat {
+    if target == ElementFormat::E4M3 {
+        ElementFormat::Int8
+    } else {
+        ElementFormat::E4M3
+    }
+}
+
+#[test]
+fn transition_equals_fresh_start_at_the_new_format() {
+    // session A trains 4 steps at a start format, transitions, and
+    // trains 4 more; session B is built from A's step-4 master/Adam
+    // state as if it had *always* been a target-format session. The
+    // continuation must match bit for bit on every backend × format —
+    // the "requantize from the FP32 master" definition of a transition.
+    let env = by_name("cartpole").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 4, 40, 0x7A1);
+    for backend in ALL_BACKENDS {
+        for fmt in ALL_ELEMENT_FORMATS {
+            let target = QuantScheme::MxSquare(fmt);
+            let start = QuantScheme::MxSquare(other_fmt(fmt));
+            let label = format!("{} {}->{}", backend.name(), start.name(), target.name());
+            let mut a = TrainSession::new(
+                ds.clone(),
+                TrainConfig {
+                    scheme: start,
+                    backend,
+                    dims: Some(vec![32, 16, 32]),
+                    steps: 0,
+                    eval_every: 4,
+                    ..Default::default()
+                },
+            );
+            for _ in 0..4 {
+                a.step_once();
+            }
+            // B: the same master/Adam state, reborn at the target format
+            let mut ck = a.save_checkpoint();
+            ck.config.scheme = target;
+            ck.scheme_log = vec![(0, target.name())];
+            ck.payload = Vec::new();
+            let mut b = TrainSession::resume(ds.clone(), &ck).unwrap();
+            a.transition_scheme(target).unwrap_or_else(|e| panic!("{label}: {e}"));
+            for _ in 0..4 {
+                a.step_once();
+                b.step_once();
+            }
+            assert_eq!(pbits(&a.mlp), pbits(&b.mlp), "{label} params");
+            assert_eq!(a.train_curve, b.train_curve, "{label} train curve");
+            assert_eq!(a.val_curve, b.val_curve, "{label} val curve");
+            assert_eq!(a.val_loss().to_bits(), b.val_loss().to_bits(), "{label} final val");
+            assert_eq!(a.scheme_history().len(), 2, "{label} history");
+        }
+    }
+}
+
+#[test]
+fn transition_stays_three_way_bit_identical_across_backends() {
+    // mid-session switch with live per-layer caches: fast/hw/packed
+    // must agree bitwise on losses and Adam params through the boundary
+    for fmt in ALL_ELEMENT_FORMATS {
+        let target = QuantScheme::MxSquare(fmt);
+        let start = QuantScheme::MxSquare(other_fmt(fmt));
+        let (mlp0, x, y) = toy_mlp(0x7A2 ^ fmt.bits() as u64);
+        let mut outcomes: Vec<(Vec<u64>, Vec<u32>)> = Vec::new();
+        for kind in ALL_BACKENDS {
+            let mut be = make_backend(kind, start).unwrap();
+            let mut mlp = mlp0.clone();
+            let mut losses = Vec::new();
+            for _ in 0..3 {
+                losses.push(qat_step_with(&mut mlp, &x, &y, be.as_mut(), 2e-3).to_bits());
+            }
+            be.transition(target).unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+            for _ in 0..3 {
+                losses.push(qat_step_with(&mut mlp, &x, &y, be.as_mut(), 2e-3).to_bits());
+            }
+            outcomes.push((losses, pbits(&mlp)));
+        }
+        for (kind, o) in ALL_BACKENDS.iter().zip(&outcomes).skip(1) {
+            assert_eq!(o.0, outcomes[0].0, "{fmt:?} {} losses", kind.name());
+            assert_eq!(o.1, outcomes[0].1, "{fmt:?} {} params", kind.name());
+        }
+    }
+}
+
+#[test]
+fn hw_transition_attributes_cost_per_format_segment() {
+    // the precision-scheduled hw session must keep its ledger split by
+    // format: cycles/energy/traffic of each segment stay attributed to
+    // the format that incurred them, and the totals are their sums
+    let (mlp0, x, y) = toy_mlp(0x7A3);
+    let start = QuantScheme::MxSquare(ElementFormat::Int8);
+    let target = QuantScheme::MxSquare(ElementFormat::E2M1);
+    let mut hw = HardwareBackend::new(start).unwrap();
+    let mut mlp = mlp0;
+    for _ in 0..2 {
+        qat_step_with(&mut mlp, &x, &y, &mut hw, 1e-3);
+    }
+    hw.transition(target).unwrap();
+    for _ in 0..3 {
+        qat_step_with(&mut mlp, &x, &y, &mut hw, 1e-3);
+    }
+    let r = hw.cost_report().unwrap();
+    assert_eq!(r.steps, 5);
+    assert_eq!(r.segments.len(), 2);
+    let (s0, s1) = (&r.segments[0], &r.segments[1]);
+    assert_eq!((s0.scheme.as_str(), s0.steps), ("mx-int8", 2));
+    assert_eq!((s1.scheme.as_str(), s1.steps), ("mx-e2m1", 3));
+    assert!(s0.cost.total() > 0 && s1.cost.total() > 0);
+    assert_eq!(s0.cost.total() + s1.cost.total(), r.cost.total());
+    assert_eq!(s0.traffic_bits + s1.traffic_bits, r.mem_traffic_bits);
+    assert!((s0.energy_pj() + s1.energy_pj() - r.energy_pj()).abs() < 1e-6);
+    // INT8 mode runs 8 cycles/block vs FP4's 1: per-step cycles of the
+    // int8 segment must dominate
+    assert!(
+        s0.cost.total() / s0.steps > s1.cost.total() / s1.steps,
+        "int8 {} vs e2m1 {}",
+        s0.cost.total(),
+        s1.cost.total()
+    );
+    let json = r.to_json().to_string();
+    assert!(json.contains("\"segments\""), "{json}");
+    assert!(json.contains("\"mx-e2m1\""), "{json}");
+}
+
+#[test]
+fn all_backends_refuse_a_mid_step_transition() {
+    // the trait contract: a pending forward tape (forward ran, backward
+    // has not) must refuse to switch formats — a transition there would
+    // mix formats inside one backward pass
+    let (mlp, x, y) = toy_mlp(0x7A5);
+    for kind in ALL_BACKENDS {
+        let start = QuantScheme::MxSquare(ElementFormat::E4M3);
+        let mut be = make_backend(kind, start).unwrap();
+        be.begin_step();
+        let tape = mlp.forward_exec(&x, be.as_mut());
+        let e = be
+            .transition(QuantScheme::MxSquare(ElementFormat::Int8))
+            .expect_err(&format!("{}: mid-step transition must refuse", kind.name()));
+        assert!(e.contains("mid-step"), "{}: {e}", kind.name());
+        // draining the tape re-arms the transition
+        let _ = mlp.backward_exec(&tape, &y, be.as_mut());
+        be.transition(QuantScheme::MxSquare(ElementFormat::Int8))
+            .unwrap_or_else(|e| panic!("{}: post-step transition: {e}", kind.name()));
+    }
+}
+
+#[test]
+fn checkpoint_resume_across_a_transition_boundary_is_bit_identical() {
+    // a scheduled session checkpointed either side of its transition
+    // and resumed must reproduce the uninterrupted run exactly — the
+    // "resume mid-schedule" contract, for all six formats × backends
+    let env = by_name("reacher").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 3, 30, 0x7A4);
+    for backend in ALL_BACKENDS {
+        for fmt in ALL_ELEMENT_FORMATS {
+            let target = QuantScheme::MxSquare(fmt);
+            let start = QuantScheme::MxSquare(other_fmt(fmt));
+            let label = format!("{} ->{}", backend.name(), target.name());
+            let cfg = TrainConfig {
+                scheme: start,
+                backend,
+                dims: Some(vec![32, 16, 32]),
+                steps: 8,
+                eval_every: 3,
+                ..Default::default()
+            };
+            let spec = format!("4:{}", target.name());
+            let run_to = |session: &mut TrainSession, to: usize| {
+                let mut policy = PrecisionPolicy::parse(&spec).unwrap();
+                while session.step_count() < to {
+                    session.step_with_policy(&mut policy).unwrap();
+                }
+            };
+            // uninterrupted reference
+            let mut full = TrainSession::new(ds.clone(), cfg.clone());
+            run_to(&mut full, 8);
+            // checkpoint *before* the boundary (step 2): the resumed
+            // session re-joins the schedule and transitions on time
+            let mut pre = TrainSession::new(ds.clone(), cfg.clone());
+            run_to(&mut pre, 2);
+            let mut pre = TrainSession::resume(ds.clone(), &pre.save_checkpoint()).unwrap();
+            run_to(&mut pre, 8);
+            // checkpoint *after* the boundary (step 6): the checkpoint
+            // itself carries the mid-schedule format
+            let mut post = TrainSession::new(ds.clone(), cfg.clone());
+            run_to(&mut post, 6);
+            let ck = post.save_checkpoint();
+            assert_eq!(ck.config.scheme, target, "{label}: active format in the image");
+            assert_eq!(ck.scheme_log.len(), 2, "{label}");
+            // through the v2 binary format: the segment log survives disk
+            let ck = mxscale::trainer::checkpoint::Checkpoint::from_bytes(&ck.to_bytes())
+                .unwrap_or_else(|e| panic!("{label}: {e}"));
+            assert_eq!(ck.scheme_log.len(), 2, "{label}: serialized log");
+            let mut post = TrainSession::resume(ds.clone(), &ck).unwrap();
+            run_to(&mut post, 8);
+            for (other, s) in [("pre", &pre), ("post", &post)] {
+                assert_eq!(pbits(&full.mlp), pbits(&s.mlp), "{label} {other} params");
+                assert_eq!(full.train_curve, s.train_curve, "{label} {other} train curve");
+                assert_eq!(full.val_curve, s.val_curve, "{label} {other} val curve");
+                assert_eq!(
+                    full.scheme_history(),
+                    s.scheme_history(),
+                    "{label} {other} history"
+                );
+            }
+        }
     }
 }
 

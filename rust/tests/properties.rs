@@ -1,0 +1,260 @@
+//! Deterministic-PRNG property suite over all six MX codecs.
+//!
+//! Each property pins an invariant the training stack leans on:
+//!
+//! * **Idempotence** — `fq(fq(x)) == fq(x)` bitwise, both layouts,
+//!   both the codec path and the fast QAT path. This is why a
+//!   precision *transition* that requantizes from the FP32 master is
+//!   exact: quantized values are fixpoints of their own format.
+//! * **Monotonicity / sign preservation** within a block — fake
+//!   quantization never reorders values sharing a scale and never
+//!   flips a sign (gradients keep their direction).
+//! * **Scale-byte bounds** — every shared exponent stays in the E8M0
+//!   clamp range and fits the one `i8` byte the checkpoint/packed
+//!   formats store.
+//! * **Edge handling** — zeros, −0.0, subnormals, ±Inf, NaN behave as
+//!   specified (and *as implemented*: the fast matrix path flushes
+//!   −0.0 and zeroes non-finite blocks; the element codecs saturate
+//!   ±Inf and never emit specials).
+//! * **Pack fixpoint** — `pack → unpack → pack` is the identity on
+//!   [`PackedTensor`], and `quantize_pack` equals `quantize` + `pack`.
+
+use mxscale::mx::block::{fake_quant_block_fast, quantize_block, shared_exponent};
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::packed::PackedTensor;
+use mxscale::mx::tensor::{fake_quant_mat_fast, Layout, MxTensor};
+use mxscale::mx::{ALL_ELEMENT_FORMATS, SCALE_EMAX, SCALE_EMIN};
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use mxscale::util::testing::forall;
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// A ragged matrix of finite wide-dynamic-range values.
+fn gen_mat(r: &mut Pcg64) -> (ElementFormat, Mat) {
+    let fmt = ALL_ELEMENT_FORMATS[r.below(6) as usize];
+    let rows = 1 + r.below(33) as usize;
+    let cols = 1 + r.below(33) as usize;
+    let m = Mat::from_fn(rows, cols, |_, _| r.wide_f32().clamp(-1e30, 1e30));
+    (fmt, m)
+}
+
+#[test]
+fn fast_fake_quant_is_idempotent_bitwise() {
+    forall(0x1DE0, 96, gen_mat, |(fmt, m)| {
+        for layout in [Layout::Square8x8, Layout::Vector32] {
+            let once = fake_quant_mat_fast(m, *fmt, layout);
+            let twice = fake_quant_mat_fast(&once, *fmt, layout);
+            if bits(&once) != bits(&twice) {
+                let i = once.data.iter().zip(&twice.data).position(|(a, b)| a != b).unwrap();
+                return Err(format!(
+                    "{fmt:?} {layout:?} elem {i}: {} requantized to {} (input {})",
+                    once.data[i], twice.data[i], m.data[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn codec_fake_quant_is_idempotent_bitwise() {
+    forall(0x1DE1, 64, gen_mat, |(fmt, m)| {
+        for layout in [Layout::Square8x8, Layout::Vector32] {
+            let once = MxTensor::fake_quant(m, *fmt, layout);
+            let twice = MxTensor::fake_quant(&once, *fmt, layout);
+            if bits(&once) != bits(&twice) {
+                return Err(format!("{fmt:?} {layout:?}: codec path not idempotent"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn block_fake_quant_is_weakly_monotone_and_sign_preserving() {
+    forall(
+        0x3070,
+        128,
+        |r| {
+            let fmt = ALL_ELEMENT_FORMATS[r.below(6) as usize];
+            let mut v = [0.0f32; 64];
+            for x in v.iter_mut() {
+                *x = r.wide_f32().clamp(-1e30, 1e30);
+            }
+            (fmt, v)
+        },
+        |(fmt, v)| {
+            let mut q = *v;
+            fake_quant_block_fast(&mut q, *fmt);
+            for i in 0..v.len() {
+                // no sign flip (−0.0 flushing to +0.0 is ±0, allowed)
+                if (q[i] as f64) * (v[i] as f64) < 0.0 {
+                    return Err(format!("{fmt:?}: sign flip {} -> {}", v[i], q[i]));
+                }
+                for j in 0..v.len() {
+                    if v[i] <= v[j] && q[i] > q[j] {
+                        return Err(format!(
+                            "{fmt:?}: order broken: fq({}) = {} > fq({}) = {}",
+                            v[i], q[i], v[j], q[j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn shared_exponents_stay_in_the_e8m0_clamp_and_fit_one_byte() {
+    forall(
+        0x5CA1E,
+        256,
+        |r| {
+            let fmt = ALL_ELEMENT_FORMATS[r.below(6) as usize];
+            let n = 1 + r.below(64) as usize;
+            let mut v = vec![0.0f32; n];
+            for x in v.iter_mut() {
+                // span the entire finite f32 range, subnormals included
+                *x = match r.below(5) {
+                    0 => 0.0,
+                    1 => f32::MAX * r.range_f32(-1.0, 1.0),
+                    2 => f32::MIN_POSITIVE * r.range_f32(-0.5, 0.5), // f32 subnormals
+                    _ => r.wide_f32(),
+                };
+            }
+            (fmt, v)
+        },
+        |(fmt, v)| {
+            let se = shared_exponent(v, *fmt);
+            if !(SCALE_EMIN..=SCALE_EMAX).contains(&se) {
+                return Err(format!("{fmt:?}: scale exponent {se} out of E8M0 range"));
+            }
+            if i8::try_from(se).is_err() {
+                return Err(format!("{fmt:?}: scale exponent {se} does not fit i8"));
+            }
+            let b = quantize_block(v, *fmt);
+            if b.scale_exp != se {
+                return Err(format!("{fmt:?}: quantize_block scale {} != {se}", b.scale_exp));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zero_blocks_and_negative_zero_quantize_to_positive_zero_on_the_fast_path() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        // an all-zero block (signed zeros included) quantizes to +0.0
+        let m = Mat::from_fn(8, 8, |r, c| if (r + c) % 2 == 0 { 0.0 } else { -0.0 });
+        for layout in [Layout::Square8x8, Layout::Vector32] {
+            let q = fake_quant_mat_fast(&m, fmt, layout);
+            for (i, v) in q.data.iter().enumerate() {
+                assert_eq!(v.to_bits(), 0.0f32.to_bits(), "{fmt:?} {layout:?} elem {i}");
+            }
+        }
+        // −0.0 among finite values still flushes to +0.0 on the fast
+        // matrix path (INT8: two's complement has no signed zero; FP:
+        // the in-place kernel flushes — pinned so drift fails loudly)
+        let m = Mat::from_fn(1, 8, |_, c| if c == 3 { -0.0 } else { 1.0 + c as f32 });
+        let q = fake_quant_mat_fast(&m, fmt, Layout::Square8x8);
+        assert_eq!(q.data[3].to_bits(), 0.0f32.to_bits(), "{fmt:?} -0.0 must flush");
+    }
+}
+
+#[test]
+fn non_finite_blocks_zero_out_on_the_fast_path() {
+    // the training path never produces non-finite values; the fast
+    // kernel's defined degradation is to zero the whole block rather
+    // than poison the scale derivation — pinned here
+    for fmt in ALL_ELEMENT_FORMATS {
+        for bad in [f32::INFINITY, f32::NEG_INFINITY] {
+            let mut v = [1.0f32; 64];
+            v[17] = bad;
+            fake_quant_block_fast(&mut v, fmt);
+            assert!(v.iter().all(|&x| x == 0.0), "{fmt:?} {bad} block must zero");
+        }
+        let mut v = [f32::NAN; 64];
+        fake_quant_block_fast(&mut v, fmt);
+        assert!(v.iter().all(|&x| x == 0.0), "{fmt:?} all-NaN block must zero");
+    }
+}
+
+#[test]
+fn element_codecs_saturate_infinities_and_never_emit_specials() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        let max = fmt.max_value();
+        assert_eq!(fmt.fake_quant(f64::INFINITY), max, "{fmt:?} +inf");
+        assert_eq!(fmt.fake_quant(f64::NEG_INFINITY), -max, "{fmt:?} -inf");
+        assert!(!fmt.is_special(fmt.encode(f64::INFINITY)), "{fmt:?} inf code");
+        // NaN: INT8 encodes the zero code; FP formats map to the max
+        // magnitude (the saturating datapath has no NaN to hand back)
+        let nan_q = fmt.fake_quant(f64::NAN);
+        if fmt == ElementFormat::Int8 {
+            assert_eq!(nan_q, 0.0, "{fmt:?} NaN");
+        } else {
+            assert_eq!(nan_q.abs(), max, "{fmt:?} NaN");
+        }
+        assert!(!fmt.is_special(fmt.encode(f64::NAN)), "{fmt:?} NaN code");
+        // subnormal edge: the smallest subnormal is a fixpoint, half of
+        // it flushes to zero
+        let eps = fmt.min_subnormal();
+        assert_eq!(fmt.fake_quant(eps), eps, "{fmt:?} min subnormal");
+        assert_eq!(fmt.fake_quant(eps * 0.499), 0.0, "{fmt:?} sub-half flush");
+        assert_eq!(fmt.fake_quant(-eps), -eps, "{fmt:?} -min subnormal");
+    }
+}
+
+#[test]
+fn negative_zero_through_the_element_codecs_is_pinned() {
+    // INT8 is two's complement: no signed zero, −0.0 encodes to code 0
+    // and decodes +0.0. The FP codecs keep the sign bit (a signed-zero
+    // code exists), so their −0.0 round-trips with the sign intact.
+    assert_eq!(ElementFormat::Int8.encode(-0.0), 0);
+    assert!(!ElementFormat::Int8.fake_quant(-0.0).is_sign_negative());
+    for fmt in ALL_ELEMENT_FORMATS {
+        if fmt == ElementFormat::Int8 {
+            continue;
+        }
+        let q = fmt.fake_quant(-0.0);
+        assert_eq!(q, 0.0, "{fmt:?}");
+        assert!(q.is_sign_negative(), "{fmt:?}: FP codec keeps the zero sign");
+    }
+}
+
+#[test]
+fn pack_unpack_pack_is_a_fixpoint() {
+    forall(0xF1A7, 96, gen_mat, |(fmt, m)| {
+        let q = MxTensor::quantize(m, *fmt, Layout::Square8x8);
+        let p = PackedTensor::pack(&q).expect("square layout packs");
+        let u = p.unpack();
+        if u.blocks != q.blocks {
+            return Err(format!("{fmt:?}: unpack(pack(q)) != q"));
+        }
+        if (u.rows, u.cols, u.brows, u.bcols) != (q.rows, q.cols, q.brows, q.bcols) {
+            return Err(format!("{fmt:?}: unpack changed the shape"));
+        }
+        let p2 = PackedTensor::pack(&u).expect("square layout packs");
+        if p2 != p {
+            return Err(format!("{fmt:?}: pack -> unpack -> pack moved bits"));
+        }
+        // the fused quantize_pack is the same object, and packed scales
+        // are exactly the block scale bytes
+        let fused = PackedTensor::quantize_pack(m, *fmt);
+        if fused != p {
+            return Err(format!("{fmt:?}: quantize_pack != quantize + pack"));
+        }
+        for (i, b) in q.blocks.iter().enumerate() {
+            if p.scales[i] as i32 != b.scale_exp {
+                return Err(format!("{fmt:?} block {i}: packed scale byte mismatch"));
+            }
+        }
+        if bits(&p.dequantize()) != bits(&q.dequantize()) {
+            return Err(format!("{fmt:?}: packed dequantize diverged"));
+        }
+        Ok(())
+    });
+}
