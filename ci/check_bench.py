@@ -5,6 +5,7 @@ baselines and fail on perf regressions.
 Usage:
     check_bench.py --results rust/results --baselines rust/benches/baselines \
                    [--tolerance 0.25] [--require-headline-speedup 2.0]
+    check_bench.py --mxlint-report rust/mxlint_report.json
 
 Rules:
   * Every numeric metric whose key ends in ``_ns_op``/``ns_per_...`` or
@@ -21,6 +22,12 @@ Rules:
     JSON is reported so it can be committed as the first baseline.
   * A baseline with a different ``schema_version`` is skipped with a
     notice (incomparable layouts must not produce phantom regressions).
+  * ``--mxlint-report`` switches to a separate mode that validates the
+    shape of an ``mxlint --json`` report (tool/schema_version header,
+    findings records, self-consistent counts) so the CI lint job fails
+    loudly if the report format drifts out from under downstream
+    tooling. It does NOT gate on the findings themselves — the mxlint
+    exit code does that.
 """
 
 import argparse
@@ -51,13 +58,72 @@ def metric_kind(path):
     return None
 
 
+def validate_mxlint_report(path):
+    """Validate an ``mxlint --json`` report (schema_version 1)."""
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        print(f"ERROR: cannot read mxlint report {path}: {e}", file=sys.stderr)
+        return 1
+
+    errors = []
+    if doc.get("tool") != "mxlint":
+        errors.append(f"tool is {doc.get('tool')!r}, expected 'mxlint'")
+    if doc.get("schema_version") != 1:
+        errors.append(f"schema_version is {doc.get('schema_version')!r}, expected 1")
+    findings = doc.get("findings")
+    if not isinstance(findings, list):
+        errors.append("findings is not a list")
+        findings = []
+    for i, f in enumerate(findings):
+        if not isinstance(f, dict):
+            errors.append(f"findings[{i}] is not an object")
+            continue
+        for key, typ in (("rule", str), ("file", str), ("message", str)):
+            if not isinstance(f.get(key), typ):
+                errors.append(f"findings[{i}].{key} is not a {typ.__name__}")
+        line = f.get("line")
+        if isinstance(line, bool) or not isinstance(line, int) or line < 1:
+            errors.append(f"findings[{i}].line is not a positive integer")
+    counts = doc.get("counts")
+    if not isinstance(counts, dict):
+        errors.append("counts is not an object")
+    else:
+        tally = {}
+        for f in findings:
+            if isinstance(f, dict) and isinstance(f.get("rule"), str):
+                tally[f["rule"]] = tally.get(f["rule"], 0) + 1
+        if counts.get("total") != len(findings):
+            errors.append(
+                f"counts.total = {counts.get('total')!r} but there are "
+                f"{len(findings)} findings"
+            )
+        for rule, n in tally.items():
+            if counts.get(rule) != n:
+                errors.append(f"counts.{rule} = {counts.get(rule)!r}, tallied {n}")
+
+    if errors:
+        print(f"mxlint report {path} is malformed:", file=sys.stderr)
+        for e in errors:
+            print(f"  - {e}", file=sys.stderr)
+        return 1
+    print(f"mxlint report {path} OK: {len(findings)} finding(s), schema v1.")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--results", required=True, type=pathlib.Path)
-    ap.add_argument("--baselines", required=True, type=pathlib.Path)
+    ap.add_argument("--results", type=pathlib.Path)
+    ap.add_argument("--baselines", type=pathlib.Path)
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument("--require-headline-speedup", type=float, default=2.0)
+    ap.add_argument("--mxlint-report", type=pathlib.Path, default=None)
     args = ap.parse_args()
+
+    if args.mxlint_report is not None:
+        return validate_mxlint_report(args.mxlint_report)
+    if args.results is None or args.baselines is None:
+        ap.error("--results and --baselines are required unless --mxlint-report is given")
 
     failures = []
     fresh_files = sorted(args.results.glob("BENCH_*.json"))

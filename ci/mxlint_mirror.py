@@ -1,0 +1,944 @@
+#!/usr/bin/env python3
+"""Toolchain-free mirror of the `mxlint` invariant checker.
+
+This is a line-for-line Python port of `rust/src/lint/{lex,rules,mod}.rs`
+so the committed `rust/lint.manifest` can be regenerated — and the tree
+linted — on machines without a Rust toolchain. The Rust side is the
+source of truth; when the lexer or a rule changes there, change it here
+in the same commit. `rust/tests/lint.rs` cross-checks the two
+implementations by pinning rule behavior on shared fixture snippets.
+
+Usage:
+    python3 ci/mxlint_mirror.py [--root PATH] [--json] [--update-manifest]
+
+Exit codes match the Rust binary: 0 clean, 1 findings, 2 error.
+"""
+
+import json
+import os
+import sys
+
+# --------------------------------------------------------------- lexer
+# Port of rust/src/lint/lex.rs. Tokens are (kind, text, line) tuples;
+# kinds are the strings below. Operates on bytes, like the Rust side.
+
+IDENT, INT, FLOAT, STR, CHAR, LIFETIME, PUNCT = (
+    "Ident", "Int", "Float", "Str", "Char", "Lifetime", "Punct",
+)
+
+INT_SUFFIXES = [
+    "usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32",
+    "u16", "i16", "u8", "i8",
+]
+
+
+def _is_ident_start(b):
+    return (0x41 <= b <= 0x5A) or (0x61 <= b <= 0x7A) or b == 0x5F or b >= 0x80
+
+
+def _is_ident_cont(b):
+    return _is_ident_start(b) or (0x30 <= b <= 0x39)
+
+
+def _is_digit(b):
+    return 0x30 <= b <= 0x39
+
+
+def _is_alnum(b):
+    return _is_digit(b) or (0x41 <= b <= 0x5A) or (0x61 <= b <= 0x7A)
+
+
+def _starts_with_radix(text):
+    return len(text) >= 2 and text[0:1] == b"0" and text[1:2] in (
+        b"x", b"X", b"b", b"B", b"o", b"O",
+    )
+
+
+def classify_number(text):
+    b = text.encode("utf-8", "replace")
+    if _starts_with_radix(b):
+        return INT
+    if "." in text:
+        return FLOAT
+    for suf in INT_SUFFIXES:
+        if text.endswith(suf):
+            core = text[: -len(suf)]
+            if core and all(c.isdigit() or c == "_" for c in core):
+                return INT
+    if text.endswith("f32") or text.endswith("f64"):
+        return FLOAT
+    if "e" in text or "E" in text:
+        return FLOAT
+    return INT
+
+
+def _contains_safety(bs):
+    return b"SAFETY:" in bs
+
+
+def _scan_string(b, i):
+    n = len(b)
+    nl = 0
+    while i < n:
+        c = b[i]
+        if c == 0x5C:  # backslash
+            i += 2
+        elif c == 0x22:  # quote
+            return i + 1, nl
+        elif c == 0x0A:
+            nl += 1
+            i += 1
+        else:
+            i += 1
+    return n, nl
+
+
+def _scan_raw_string(b, i):
+    n = len(b)
+    hashes = 0
+    while i < n and b[i] == 0x23:  # '#'
+        hashes += 1
+        i += 1
+    if i >= n or b[i] != 0x22:
+        return None
+    i += 1
+    nl = 0
+    while i < n:
+        if b[i] == 0x0A:
+            nl += 1
+            i += 1
+            continue
+        if b[i] == 0x22:
+            j = i + 1
+            h = 0
+            while j < n and h < hashes and b[j] == 0x23:
+                h += 1
+                j += 1
+            if h == hashes:
+                return j, nl
+        i += 1
+    return n, nl
+
+
+def _scan_char_or_lifetime(b, i):
+    n = len(b)
+    if i >= n:
+        return n, CHAR
+    if b[i] == 0x5C:  # backslash escape
+        j = i + 1
+        if j < n:
+            esc = b[j]
+            j += 1
+            if esc == 0x75 and j < n and b[j] == 0x7B:  # u{
+                while j < n and b[j] != 0x7D:
+                    j += 1
+                j += 1
+        if j < n and b[j] == 0x27:
+            j += 1
+        return j, CHAR
+    if _is_ident_start(b[i]):
+        j = i
+        while j < n and _is_ident_cont(b[j]):
+            j += 1
+        if j < n and b[j] == 0x27:
+            return j + 1, CHAR
+        return j, LIFETIME
+    j = i + 1
+    while j < n and b[j] != 0x27 and b[j] != 0x0A:
+        j += 1
+    if j < n and b[j] == 0x27:
+        j += 1
+    return j, CHAR
+
+
+def lex(src):
+    """Lex bytes -> (toks, safety_lines). toks are (kind, text, line)."""
+    b = src
+    n = len(b)
+    i = 0
+    line = 1
+    toks = []
+    safety_lines = []
+
+    def push(kind, bs, ln):
+        toks.append((kind, bs.decode("utf-8", "replace"), ln))
+
+    while i < n:
+        c = b[i]
+        if c == 0x0A:  # newline
+            line += 1
+            i += 1
+            continue
+        if c in (0x09, 0x0C, 0x0D, 0x20):  # Rust u8::is_ascii_whitespace (no VT)
+            i += 1
+            continue
+        if c == 0x2F and i + 1 < n and b[i + 1] == 0x2F:  # //
+            start = i
+            while i < n and b[i] != 0x0A:
+                i += 1
+            if _contains_safety(b[start:i]):
+                safety_lines.append(line)
+            continue
+        if c == 0x2F and i + 1 < n and b[i + 1] == 0x2A:  # /*
+            start = i
+            start_line = line
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == 0x0A:
+                    line += 1
+                    i += 1
+                elif b[i] == 0x2F and i + 1 < n and b[i + 1] == 0x2A:
+                    depth += 1
+                    i += 2
+                elif b[i] == 0x2A and i + 1 < n and b[i + 1] == 0x2F:
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            if _contains_safety(b[start:i]):
+                safety_lines.append(start_line)
+            continue
+        if c == 0x72 and i + 1 < n and b[i + 1] in (0x22, 0x23):  # r" r#
+            r = _scan_raw_string(b, i + 1)
+            if r is not None:
+                end, nl = r
+                push(STR, b[i:end], line)
+                line += nl
+                i = end
+                continue
+        if c == 0x62 and i + 1 < n:  # b" b' br
+            if b[i + 1] == 0x22:
+                end, nl = _scan_string(b, i + 2)
+                push(STR, b[i:end], line)
+                line += nl
+                i = end
+                continue
+            if b[i + 1] == 0x27:
+                end, kind = _scan_char_or_lifetime(b, i + 2)
+                push(kind, b[i:end], line)
+                i = end
+                continue
+            if b[i + 1] == 0x72 and i + 2 < n and b[i + 2] in (0x22, 0x23):
+                r = _scan_raw_string(b, i + 2)
+                if r is not None:
+                    end, nl = r
+                    push(STR, b[i:end], line)
+                    line += nl
+                    i = end
+                    continue
+        if c == 0x22:  # "
+            end, nl = _scan_string(b, i + 1)
+            push(STR, b[i:end], line)
+            line += nl
+            i = end
+            continue
+        if c == 0x27:  # '
+            end, kind = _scan_char_or_lifetime(b, i + 1)
+            push(kind, b[i:end], line)
+            i = end
+            continue
+        if _is_ident_start(c):
+            start = i
+            while i < n and _is_ident_cont(b[i]):
+                i += 1
+            push(IDENT, b[start:i], line)
+            continue
+        if _is_digit(c):
+            start = i
+            has_dot = False
+            i += 1
+            while i < n:
+                d = b[i]
+                if _is_alnum(d) or d == 0x5F:
+                    i += 1
+                    continue
+                if d == 0x2E and not has_dot and i + 1 < n and _is_digit(b[i + 1]):
+                    has_dot = True
+                    i += 1
+                    continue
+                if (
+                    d in (0x2B, 0x2D)
+                    and b[i - 1] in (0x65, 0x45)
+                    and not _starts_with_radix(b[start:i])
+                    and i + 1 < n
+                    and _is_digit(b[i + 1])
+                ):
+                    i += 1
+                    continue
+                break
+            text = b[start:i]
+            push(classify_number(text.decode("utf-8", "replace")), text, line)
+            continue
+        push(PUNCT, b[i : i + 1], line)
+        i += 1
+    return toks, safety_lines
+
+
+def token_hash(toks):
+    """FNV-1a 64 over token texts with \\n separators (lex.rs token_hash)."""
+    h = 0xCBF29CE484222325
+    prime = 0x100000001B3
+    mask = 0xFFFFFFFFFFFFFFFF
+    for _, text, _ in toks:
+        for byte in text.encode("utf-8", "replace"):
+            h = ((h ^ byte) * prime) & mask
+        h = ((h ^ 0x0A) * prime) & mask
+    return h
+
+
+# --------------------------------------------------------------- rules
+# Port of rust/src/lint/rules.rs. SourceFile = (rel, toks, safety_lines);
+# Finding = dict(rule=, file=, line=, message=).
+
+
+def _is_p(t, s):
+    return t[0] == PUNCT and t[1] == s
+
+
+def _is_i(t, s):
+    return t[0] == IDENT and t[1] == s
+
+
+def allowed(allow, rule, key):
+    return any(k == key for k, _ in allow.get(rule, []))
+
+
+def under_src(rel):
+    return rel[len("rust/src/"):] if rel.startswith("rust/src/") else None
+
+
+def brace_match(toks, open_idx):
+    depth = 0
+    i = open_idx
+    while i < len(toks):
+        if _is_p(toks[i], "{"):
+            depth += 1
+        elif _is_p(toks[i], "}"):
+            depth -= 1
+            if depth == 0:
+                return i
+        i += 1
+    return len(toks)
+
+
+def functions(toks):
+    """-> list of dict(name, is_pub, line, kw, body=(open, close)|None)."""
+    out = []
+    i = 0
+    while i + 1 < len(toks):
+        if _is_i(toks[i], "fn") and toks[i + 1][0] == IDENT:
+            name = toks[i + 1][1]
+            is_pub = False
+            for j in range(i - 1, max(i - 6, 0) - 1, -1):
+                if _is_p(toks[j], ";") or _is_p(toks[j], "}") or _is_p(toks[j], "{"):
+                    break
+                if _is_i(toks[j], "pub"):
+                    is_pub = True
+                    break
+            depth = 0
+            j = i + 2
+            body = None
+            while j < len(toks):
+                t = toks[j]
+                if t[0] == PUNCT:
+                    if t[1] in ("(", "["):
+                        depth += 1
+                    elif t[1] in (")", "]"):
+                        depth -= 1
+                    elif t[1] == "{" and depth == 0:
+                        body = (j, brace_match(toks, j))
+                        break
+                    elif t[1] == ";" and depth == 0:
+                        break
+                j += 1
+            out.append(
+                {"name": name, "is_pub": is_pub, "line": toks[i + 1][2], "kw": i, "body": body}
+            )
+            i += 2
+        else:
+            i += 1
+    return out
+
+
+def test_regions(toks):
+    out = []
+    i = 0
+    while i < len(toks):
+        cfg_test = (
+            i + 6 < len(toks)
+            and _is_p(toks[i], "#")
+            and _is_p(toks[i + 1], "[")
+            and _is_i(toks[i + 2], "cfg")
+            and _is_p(toks[i + 3], "(")
+            and _is_i(toks[i + 4], "test")
+            and _is_p(toks[i + 5], ")")
+            and _is_p(toks[i + 6], "]")
+        )
+        test_attr = (
+            i + 3 < len(toks)
+            and _is_p(toks[i], "#")
+            and _is_p(toks[i + 1], "[")
+            and _is_i(toks[i + 2], "test")
+            and _is_p(toks[i + 3], "]")
+        )
+        if cfg_test or test_attr:
+            after = i + 7 if cfg_test else i + 4
+            for j in range(after, min(after + 40, len(toks))):
+                if _is_p(toks[j], ";"):
+                    break
+                if _is_p(toks[j], "{"):
+                    out.append((i, brace_match(toks, j)))
+                    break
+        i += 1
+    return out
+
+
+def const_regions(toks):
+    out = []
+    i = 0
+    while i < len(toks):
+        if (_is_i(toks[i], "const") or _is_i(toks[i], "static")) and not (
+            i + 1 < len(toks) and _is_i(toks[i + 1], "fn")
+        ):
+            if i + 1 < len(toks) and _is_p(toks[i + 1], "{"):
+                close = brace_match(toks, i + 1)
+                out.append((i, close))
+                i = close + 1
+                continue
+            depth = 0
+            j = i + 1
+            while j < len(toks):
+                t = toks[j]
+                if t[0] == PUNCT:
+                    if t[1] in ("(", "[", "{"):
+                        depth += 1
+                    elif t[1] in (")", "]", "}"):
+                        depth -= 1
+                    elif t[1] == ";" and depth <= 0:
+                        break
+                j += 1
+            out.append((i, j))
+            i = j + 1
+            continue
+        i += 1
+    return out
+
+
+def in_regions(regions, idx):
+    return any(a <= idx <= b for a, b in regions)
+
+
+def finding(rule, file, line, message):
+    return {"rule": rule, "file": file, "line": line, "message": message}
+
+
+L1_FILES = [
+    "rust/src/util/par.rs",
+    "rust/src/util/mat.rs",
+    "rust/src/mx/tensor.rs",
+    "rust/src/pearray/array.rs",
+    "rust/src/gemmcore/core.rs",
+]
+L1_PAR_IDENTS = ["par_map", "par_chunks_mut", "spawn"]
+
+
+def l1(src, tests, allow):
+    out = []
+    test_idents = set()
+    for _, toks, _ in tests:
+        for t in toks:
+            if t[0] == IDENT:
+                test_idents.add(t[1])
+    for rel, toks, _ in src:
+        if rel not in L1_FILES:
+            continue
+        fns = functions(toks)
+        tregions = test_regions(toks)
+        names = {fi["name"] for fi in fns}
+        for fi in fns:
+            if not fi["is_pub"] or in_regions(tregions, fi["kw"]):
+                continue
+            if fi["body"] is None:
+                continue
+            open_idx, close = fi["body"]
+            if fi["name"].endswith("_serial"):
+                if fi["name"] not in test_idents and not allowed(allow, "L1", fi["name"]):
+                    out.append(finding(
+                        "L1", rel, fi["line"],
+                        "serial twin `%s` is not referenced from any identity test "
+                        "in rust/tests/" % fi["name"],
+                    ))
+                continue
+            body = toks[open_idx + 1 : min(close, len(toks))]
+            has_par = any(t[0] == IDENT and t[1] in L1_PAR_IDENTS for t in body)
+            if not has_par or allowed(allow, "L1", fi["name"]):
+                continue
+            twin = fi["name"] + "_serial"
+            if twin not in names:
+                out.append(finding(
+                    "L1", rel, fi["line"],
+                    "parallel kernel `%s` has no `%s` twin" % (fi["name"], twin),
+                ))
+    return out
+
+
+L2_BANNED = ["log2", "ln", "powf"]
+
+
+def l2(src, allow):
+    out = []
+    for rel, toks, _ in src:
+        if not rel.startswith("rust/src/mx/"):
+            continue
+        tregions = test_regions(toks)
+        for i in range(max(len(toks) - 1, 0)):
+            if (
+                toks[i][0] == IDENT
+                and toks[i][1] in L2_BANNED
+                and _is_p(toks[i + 1], "(")
+                and not in_regions(tregions, i)
+                and not allowed(allow, "L2", under_src(rel) or rel)
+            ):
+                out.append(finding(
+                    "L2", rel, toks[i][2],
+                    "`%s(` in MX exponent code — use element::floor_log2 instead"
+                    % toks[i][1],
+                ))
+    return out
+
+
+def int_value(text):
+    """-> (value, hex_digit_count) or None (rules.rs int_value)."""
+    t = text.replace("_", "")
+    for suf in INT_SUFFIXES:
+        if t.endswith(suf) and len(t) > len(suf):
+            t = t[: -len(suf)]
+            break
+    try:
+        if t[:2] in ("0x", "0X"):
+            return int(t[2:], 16), len(t) - 2
+        if t[:2] in ("0b", "0B"):
+            return int(t[2:], 2), 0
+        if t[:2] in ("0o", "0O"):
+            return int(t[2:], 8), 0
+        return int(t, 10), 0
+    except ValueError:
+        return None
+
+
+def l3(src, allow):
+    out = []
+    for rel, toks, _ in src:
+        if rel != "rust/src/mx/packed.rs":
+            continue
+        fns = functions(toks)
+        tregions = test_regions(toks)
+        cregions = const_regions(toks)
+        for i, t in enumerate(toks):
+            if t[0] != INT or in_regions(tregions, i) or in_regions(cregions, i):
+                continue
+            parsed = int_value(t[1])
+            if parsed is None:
+                continue
+            v, hex_digits = parsed
+            if not (v in (4, 6, 8) or hex_digits >= 8):
+                continue
+            in_allowed_fn = False
+            for fi in fns:
+                end = fi["body"][1] if fi["body"] else fi["kw"]
+                if fi["kw"] <= i <= end and allowed(allow, "L3", fi["name"]):
+                    in_allowed_fn = True
+                    break
+            if in_allowed_fn:
+                continue
+            out.append(finding(
+                "L3", rel, t[2],
+                "magic bit-width literal `%s` outside a scheme-constant table — "
+                "derive from ElementFormat::bits()/scheme constants" % t[1],
+            ))
+    return out
+
+
+L4_DIRS = [
+    "rust/src/fleet/",
+    "rust/src/trainer/",
+    "rust/src/backend/",
+    "rust/src/coordinator/",
+]
+
+
+def l4(src, allow):
+    out = []
+    for rel, toks, _ in src:
+        if not any(rel.startswith(d) for d in L4_DIRS):
+            continue
+        key = under_src(rel) or rel
+        if allowed(allow, "L4", key):
+            continue
+        tregions = test_regions(toks)
+        for i in range(1, max(len(toks) - 1, 1)):
+            if (
+                toks[i][0] == IDENT
+                and toks[i][1] in ("unwrap", "expect")
+                and _is_p(toks[i - 1], ".")
+                and _is_p(toks[i + 1], "(")
+                and not in_regions(tregions, i)
+            ):
+                out.append(finding(
+                    "L4", rel, toks[i][2],
+                    "`.%s(` in library code — propagate a structured TrainError "
+                    "instead" % toks[i][1],
+                ))
+    return out
+
+
+L5_NAMES = ["write_bytes", "read_bytes", "to_bytes", "from_bytes"]
+
+
+def checkpoint_version(src):
+    for rel, toks, _ in src:
+        if rel != "rust/src/trainer/checkpoint.rs":
+            continue
+        for i in range(max(len(toks) - 1, 0)):
+            if _is_i(toks[i], "const") and _is_i(toks[i + 1], "VERSION"):
+                for t in toks[i + 2 : min(i + 10, len(toks))]:
+                    if t[0] == INT:
+                        parsed = int_value(t[1])
+                        if parsed is not None:
+                            return parsed[0] & 0xFFFFFFFF
+    return 0
+
+
+def layout_hashes(src):
+    """-> list of (key, hash, line, rel), keyed path-under-src::name."""
+    seen = {}
+    out = []
+    for rel, toks, _ in src:
+        if not rel.startswith("rust/src/"):
+            continue
+        tregions = test_regions(toks)
+        for fi in functions(toks):
+            if fi["name"] not in L5_NAMES or in_regions(tregions, fi["kw"]):
+                continue
+            if fi["body"] is None:
+                continue
+            open_idx, close = fi["body"]
+            base = "%s::%s" % (under_src(rel) or rel, fi["name"])
+            n = seen.get(base, 0) + 1
+            seen[base] = n
+            key = base if n == 1 else "%s#%d" % (base, n)
+            h = token_hash(toks[open_idx + 1 : min(close, len(toks))])
+            out.append((key, h, fi["line"], rel))
+    return out
+
+
+def l5(src, manifest):
+    out = []
+    version = checkpoint_version(src)
+    if version != manifest["version"]:
+        out.append(finding(
+            "L5", "rust/src/trainer/checkpoint.rs", 1,
+            "rust/lint.manifest records VERSION %d but checkpoint.rs has VERSION %d "
+            "— run `mxlint --update-manifest` and commit the result"
+            % (manifest["version"], version),
+        ))
+        return out
+    current = layout_hashes(src)
+    recorded = dict(manifest["entries"])
+    for key, h, line, rel in current:
+        if key in recorded:
+            want = recorded[key]
+            if want != h:
+                out.append(finding(
+                    "L5", rel, line,
+                    "byte-layout of `%s` changed (%016x != manifest %016x) without "
+                    "a VERSION bump (still %d) — bump VERSION in "
+                    "trainer/checkpoint.rs and run `mxlint --update-manifest`"
+                    % (key, h, want, version),
+                ))
+        else:
+            out.append(finding(
+                "L5", rel, line,
+                "byte-layout function `%s` has no entry in rust/lint.manifest — "
+                "run `mxlint --update-manifest`" % key,
+            ))
+    current_keys = {k for k, _, _, _ in current}
+    for key, _ in manifest["entries"]:
+        if key not in current_keys:
+            out.append(finding(
+                "L5", "rust/lint.manifest", 1,
+                "manifest entry `%s` has no matching function — "
+                "run `mxlint --update-manifest`" % key,
+            ))
+    return out
+
+
+def l6(src, allow):
+    out = []
+    for rel, toks, _ in src:
+        if not rel.startswith("rust/src/"):
+            continue
+        tregions = test_regions(toks)
+        for fi in functions(toks):
+            if in_regions(tregions, fi["kw"]) or fi["body"] is None:
+                continue
+            open_idx, close = fi["body"]
+            body = toks[open_idx + 1 : min(close, len(toks))]
+            calls_save = any(
+                body[i][0] == IDENT and body[i][1] == "save_json" and _is_p(body[i + 1], "(")
+                for i in range(max(len(body) - 1, 0))
+            )
+            if not calls_save:
+                continue
+            stamped = any(
+                t[0] == IDENT and t[1] in ("bench_doc", "stamped_doc") for t in body
+            )
+            key = "%s::%s" % (under_src(rel) or rel, fi["name"])
+            if not stamped and not allowed(allow, "L6", key):
+                out.append(finding(
+                    "L6", rel, fi["line"],
+                    "`%s` writes results JSON without bench_doc/stamped_doc schema "
+                    "stamping" % fi["name"],
+                ))
+    return out
+
+
+def l7(src, allow):
+    out = []
+    for rel, toks, safety_lines in src:
+        if not rel.startswith("rust/src/"):
+            continue
+        name = rel.rsplit("/", 1)[-1]
+        if name in ("lib.rs", "main.rs", "mod.rs") or "/bin/" in rel:
+            continue
+        key = under_src(rel) or rel
+        if allowed(allow, "L7", key):
+            continue
+        unsafe_toks = [t for t in toks if t[0] == IDENT and t[1] == "unsafe"]
+        if not unsafe_toks:
+            has_forbid = any(
+                _is_p(toks[i], "#")
+                and _is_p(toks[i + 1], "!")
+                and _is_p(toks[i + 2], "[")
+                and _is_i(toks[i + 3], "forbid")
+                and _is_p(toks[i + 4], "(")
+                and _is_i(toks[i + 5], "unsafe_code")
+                and _is_p(toks[i + 6], ")")
+                and _is_p(toks[i + 7], "]")
+                for i in range(max(len(toks) - 7, 0))
+            )
+            if not has_forbid:
+                out.append(finding(
+                    "L7", rel, 1,
+                    "file has no unsafe code — add #![forbid(unsafe_code)] so "
+                    "future unsafe must opt in explicitly",
+                ))
+        else:
+            for t in unsafe_toks:
+                covered = any(max(t[2] - 3, 0) <= s <= t[2] for s in safety_lines)
+                if not covered:
+                    out.append(finding(
+                        "L7", rel, t[2],
+                        "`unsafe` without a `// SAFETY:` comment within the 3 "
+                        "lines above it",
+                    ))
+    return out
+
+
+def run_all(src, tests, allow, manifest):
+    out = []
+    out.extend(l1(src, tests, allow))
+    out.extend(l2(src, allow))
+    out.extend(l3(src, allow))
+    out.extend(l4(src, allow))
+    out.extend(l5(src, manifest))
+    out.extend(l6(src, allow))
+    out.extend(l7(src, allow))
+    out.sort(key=lambda f: (f["file"], f["line"], f["rule"]))
+    return out
+
+
+# ------------------------------------------------------- config / walk
+# Port of rust/src/lint/mod.rs.
+
+
+def parse_config(text):
+    allow = {}
+    section = None
+    for idx, raw in enumerate(text.splitlines()):
+        ln = idx + 1
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("["):
+            inner = line[1:]
+            if not inner.endswith("]"):
+                raise ValueError("line %d: unclosed section" % ln)
+            inner = inner[:-1]
+            if not inner.startswith("allow."):
+                raise ValueError("line %d: unknown section `[%s]`" % (ln, inner))
+            section = inner[len("allow."):]
+            allow.setdefault(section, [])
+            continue
+        if section is None:
+            raise ValueError("line %d: entry outside an [allow.*] section" % ln)
+        key, rest = _parse_quoted(line, ln)
+        rest = rest.lstrip()
+        if not rest.startswith("="):
+            raise ValueError("line %d: expected `=`" % ln)
+        reason, tail = _parse_quoted(rest[1:].lstrip(), ln)
+        tail = tail.strip()
+        if tail and not tail.startswith("#"):
+            raise ValueError("line %d: trailing garbage `%s`" % (ln, tail))
+        if not reason.strip():
+            raise ValueError(
+                "line %d: allowlist entry `%s` needs a non-empty reason" % (ln, key)
+            )
+        allow[section].append((key, reason))
+    return allow
+
+
+def _parse_quoted(s, ln):
+    if not s.startswith('"'):
+        raise ValueError('line %d: expected "..." string' % ln)
+    end = s.find('"', 1)
+    if end < 0:
+        raise ValueError('line %d: unterminated string' % ln)
+    return s[1:end], s[end + 1:]
+
+
+def parse_manifest(text):
+    m = {"version": 0, "entries": []}
+    saw_version = False
+    for idx, raw in enumerate(text.splitlines()):
+        ln = idx + 1
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("version "):
+            m["version"] = int(line[len("version "):].strip())
+            saw_version = True
+            continue
+        if line.startswith("fn "):
+            parts = line[3:].split()
+            if len(parts) < 2:
+                raise ValueError("line %d: missing key or hash" % ln)
+            m["entries"].append((parts[0], int(parts[1], 16)))
+            continue
+        raise ValueError("line %d: unrecognized `%s`" % (ln, line))
+    if not saw_version:
+        raise ValueError("manifest has no `version` line")
+    return m
+
+
+def render_manifest(m):
+    out = [
+        "# Byte-layout manifest for mxlint rule L5. Regenerate with",
+        "#   cargo run --release --bin mxlint -- --update-manifest",
+        "# (or `python3 ci/mxlint_mirror.py --update-manifest` without a toolchain).",
+        "version %d" % m["version"],
+    ]
+    for k, h in sorted(m["entries"]):
+        out.append("fn %s %016x" % (k, h))
+    return "\n".join(out) + "\n"
+
+
+def current_manifest(src):
+    return {
+        "version": checkpoint_version(src),
+        "entries": [(k, h) for k, h, _, _ in layout_hashes(src)],
+    }
+
+
+def _walk_rs(d, root, out):
+    names = sorted(os.listdir(d))
+    for name in names:
+        path = os.path.join(d, name)
+        if os.path.isdir(path):
+            _walk_rs(path, root, out)
+        elif name.endswith(".rs"):
+            rel = os.path.relpath(path, root).replace(os.sep, "/")
+            with open(path, "rb") as f:
+                toks, safety = lex(f.read())
+            out.append((rel, toks, safety))
+
+
+def collect_sources(root):
+    src, tests = [], []
+    _walk_rs(os.path.join(root, "rust", "src"), root, src)
+    tdir = os.path.join(root, "rust", "tests")
+    if os.path.isdir(tdir):
+        _walk_rs(tdir, root, tests)
+    return src, tests
+
+
+def render_json(findings):
+    counts = {}
+    for f in findings:
+        counts[f["rule"]] = counts.get(f["rule"], 0) + 1
+    doc = {
+        "tool": "mxlint",
+        "schema_version": 1,
+        "findings": findings,
+        "counts": dict(sorted(counts.items()), total=len(findings)),
+    }
+    return json.dumps(doc, indent=2, ensure_ascii=False)
+
+
+def main(argv):
+    root = None
+    emit_json = False
+    update = False
+    i = 0
+    while i < len(argv):
+        a = argv[i]
+        if a == "--root":
+            i += 1
+            root = argv[i]
+        elif a == "--json":
+            emit_json = True
+        elif a == "--update-manifest":
+            update = True
+        elif a in ("-h", "--help"):
+            print(__doc__)
+            return 0
+        else:
+            print("mxlint_mirror: unknown argument `%s`" % a, file=sys.stderr)
+            return 2
+        i += 1
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    src, tests = collect_sources(root)
+    manifest_path = os.path.join(root, "rust", "lint.manifest")
+    if update:
+        m = current_manifest(src)
+        with open(manifest_path, "w") as f:
+            f.write(render_manifest(m))
+        print(
+            "mxlint_mirror: wrote %s (%d entries, version %d)"
+            % (manifest_path, len(m["entries"]), m["version"]),
+            file=sys.stderr,
+        )
+        return 0
+
+    with open(os.path.join(root, "rust", "lint.toml")) as f:
+        allow = parse_config(f.read())
+    with open(manifest_path) as f:
+        manifest = parse_manifest(f.read())
+    findings = run_all(src, tests, allow, manifest)
+    if emit_json:
+        print(render_json(findings))
+    else:
+        for f in findings:
+            print("%s:%d: [%s] %s" % (f["file"], f["line"], f["rule"], f["message"]))
+        if not findings:
+            print("mxlint_mirror: clean (%d source files)" % len(src), file=sys.stderr)
+        else:
+            print("mxlint_mirror: %d finding(s)" % len(findings), file=sys.stderr)
+    return 0 if not findings else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -13,6 +13,8 @@
 //! terms arrive pre-aligned (single exponent) and **bypass** the alignment
 //! stage — the paper's critical-path balancing optimization.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::Events;
 
 /// Mantissa window of the L2 alignment datapath: 26-bit adder + 2-bit

@@ -7,6 +7,8 @@
 //! into an FP32 register. Numerics are bit-faithful to the datapath;
 //! every micro-op increments [`Events`] for the energy model.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::adders::{l1_fp4_shift_sum, l1_sum_partials, l2_add, L2Path};
 use crate::arith::mult2::mul_mag;
 use crate::arith::{Events, Mode};

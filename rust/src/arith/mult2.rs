@@ -6,6 +6,8 @@
 //! FP4 mantissa product uses one. The decomposition here is bit-exact by
 //! construction and verified exhaustively against native multiplication.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::Events;
 
 /// One elementary 2-bit x 2-bit multiplication (result fits in 4 bits).

@@ -1,5 +1,7 @@
 //! Per-session hardware cost ledger of the [`super::HardwareBackend`].
 
+#![forbid(unsafe_code)]
+
 use crate::arith::Events;
 use crate::gemmcore::quantizer::QuantEvents;
 use crate::gemmcore::schedule::CycleCost;

@@ -1,5 +1,7 @@
 //! The fast software backend: buffer-reusing MX fake-quantization.
 
+#![forbid(unsafe_code)]
+
 use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
 use crate::mx::dacapo::DacapoTensor;
 use crate::mx::tensor::{fake_quant_mat_fast_into, Layout};

@@ -1,5 +1,7 @@
 //! The hardware backend: bit-exact GemmCore execution + cost ledger.
 
+#![forbid(unsafe_code)]
+
 use crate::backend::cost::{HwCostReport, HwSegmentCost};
 use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
 use crate::energy::EnergyModel;

@@ -1,6 +1,8 @@
 //! The packed backend: sub-word-parallel SWAR execution of the
 //! training hot path (`--backend packed`).
 
+#![forbid(unsafe_code)]
+
 use crate::backend::{ExecBackend, LayerGrads};
 use crate::mx::element::ElementFormat;
 use crate::mx::packed::{packed_gemm, packed_gemm_nt, PackedTensor};

@@ -1,0 +1,144 @@
+//! `mxlint` — the repo's invariant checker (DESIGN.md §9).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mxscale::lint;
+
+const USAGE: &str = "\
+mxlint: static-analysis gate for the mxscale bit-identity contracts
+
+USAGE:
+    mxlint [--root PATH] [--config PATH] [--manifest PATH]
+           [--json] [--diff REV] [--update-manifest]
+
+OPTIONS:
+    --root PATH        repo root (default: ascend from cwd to rust/src/lib.rs)
+    --config PATH      allowlist config (default: <root>/rust/lint.toml)
+    --manifest PATH    byte-layout manifest (default: <root>/rust/lint.manifest)
+    --json             emit the machine-readable report on stdout
+    --diff REV         only report findings on lines changed since REV
+    --update-manifest  rewrite the manifest from current sources and exit
+    -h, --help         show this help
+";
+
+struct Args {
+    root: Option<PathBuf>,
+    config: Option<PathBuf>,
+    manifest: Option<PathBuf>,
+    json: bool,
+    diff: Option<String>,
+    update_manifest: bool,
+}
+
+fn parse_args() -> Result<Args, String> {
+    let mut args = Args {
+        root: None,
+        config: None,
+        manifest: None,
+        json: false,
+        diff: None,
+        update_manifest: false,
+    };
+    let mut it = std::env::args().skip(1);
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => args.root = Some(it.next().ok_or("--root needs a value")?.into()),
+            "--config" => args.config = Some(it.next().ok_or("--config needs a value")?.into()),
+            "--manifest" => {
+                args.manifest = Some(it.next().ok_or("--manifest needs a value")?.into())
+            }
+            "--json" => args.json = true,
+            "--diff" => args.diff = Some(it.next().ok_or("--diff needs a revision")?),
+            "--update-manifest" => args.update_manifest = true,
+            "-h" | "--help" => {
+                print!("{USAGE}");
+                std::process::exit(0);
+            }
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(args)
+}
+
+/// Ascend from the current directory until `rust/src/lib.rs` exists.
+fn find_root() -> Result<PathBuf, String> {
+    let mut dir = std::env::current_dir().map_err(|e| format!("cwd: {e}"))?;
+    loop {
+        if dir.join("rust/src/lib.rs").is_file() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            return Err("could not find repo root (no rust/src/lib.rs above cwd); \
+                        pass --root"
+                .into());
+        }
+    }
+}
+
+fn run() -> Result<bool, String> {
+    let args = parse_args()?;
+    let root = match args.root {
+        Some(r) => r,
+        None => find_root()?,
+    };
+    let (src, tests) =
+        lint::collect_sources(&root).map_err(|e| format!("reading sources: {e}"))?;
+
+    let manifest_path = args.manifest.unwrap_or_else(|| root.join("rust/lint.manifest"));
+    if args.update_manifest {
+        let m = lint::current_manifest(&src);
+        std::fs::write(&manifest_path, lint::render_manifest(&m))
+            .map_err(|e| format!("writing {}: {e}", manifest_path.display()))?;
+        eprintln!(
+            "mxlint: wrote {} ({} entries, version {})",
+            manifest_path.display(),
+            m.entries.len(),
+            m.version
+        );
+        return Ok(true);
+    }
+
+    let config_path = args.config.unwrap_or_else(|| root.join("rust/lint.toml"));
+    let cfg_text = std::fs::read_to_string(&config_path)
+        .map_err(|e| format!("reading {}: {e}", config_path.display()))?;
+    let cfg = lint::parse_config(&cfg_text)
+        .map_err(|e| format!("{}: {e}", config_path.display()))?;
+    let manifest_text = std::fs::read_to_string(&manifest_path)
+        .map_err(|e| format!("reading {}: {e}", manifest_path.display()))?;
+    let manifest = lint::parse_manifest(&manifest_text)
+        .map_err(|e| format!("{}: {e}", manifest_path.display()))?;
+
+    let mut findings = lint::lint(&src, &tests, &cfg, &manifest);
+    if let Some(rev) = &args.diff {
+        let changed = lint::changed_lines(&root, rev)?;
+        findings = lint::filter_to_changed(findings, &changed);
+    }
+
+    if args.json {
+        println!("{}", lint::render_json(&findings));
+    } else {
+        for f in &findings {
+            println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+        }
+        if findings.is_empty() {
+            eprintln!("mxlint: clean ({} source files)", src.len());
+        } else {
+            eprintln!("mxlint: {} finding(s)", findings.len());
+        }
+    }
+    Ok(findings.is_empty())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("mxlint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

@@ -8,6 +8,8 @@
 //! mxscale info
 //! ```
 
+#![forbid(unsafe_code)]
+
 use crate::backend::BackendKind;
 use crate::coordinator::experiments;
 use crate::coordinator::report::{save_csv, save_hw_report, save_json, Table};
@@ -146,7 +148,8 @@ fn parse_hidden(args: &Args) -> Result<Option<usize>, String> {
 fn cmd_repro(args: &Args) -> i32 {
     let steps = args.usize_or("steps", 300);
     let eval_every = args.usize_or("eval-every", 25);
-    let run_inner = |id: &str| -> bool {
+    let run_inner = |id: &str| -> Result<(), String> {
+        let err = |e: crate::trainer::session::TrainError| e.to_string();
         match id {
             "table2" => emit(&experiments::table2(), "table2"),
             "table3" => emit(&experiments::table3(), "table3"),
@@ -156,29 +159,28 @@ fn cmd_repro(args: &Args) -> i32 {
                 emit(&e, "fig7_energy");
                 emit(&a, "fig7_area");
             }
-            "fig2" => emit(&experiments::fig2(steps, eval_every), "fig2_final"),
+            "fig2" => emit(&experiments::fig2(steps, eval_every).map_err(err)?, "fig2_final"),
             "throughput" => emit(
-                &experiments::throughput(args.usize_or("hw-steps", 2)),
+                &experiments::throughput(args.usize_or("hw-steps", 2)).map_err(err)?,
                 "throughput_measured",
             ),
             "precision-schedule" => emit(
-                &experiments::precision_schedule(args.usize_or("static-steps", 160), None),
+                &experiments::precision_schedule(args.usize_or("static-steps", 160), None)
+                    .map_err(err)?,
                 "precision_schedule",
             ),
-            "ablation" => emit(&experiments::ablation(), "ablation_blocksize"),
+            "ablation" => emit(&experiments::ablation().map_err(err)?, "ablation_blocksize"),
             "fig8" => emit(
                 &experiments::fig8(
                     args.f64_or("time-budget", 1000.0),
                     args.f64_or("energy-budget", 120.0),
-                ),
+                )
+                .map_err(err)?,
                 "fig8_final",
             ),
-            other => {
-                eprintln!("unknown experiment: {other}");
-                return false;
-            }
+            other => return Err(format!("unknown experiment: {other}")),
         }
-        true
+        Ok(())
     };
     // A failing id must not abort the ids that follow: CI's repro-smoke
     // job lists several experiments in one invocation, and an early
@@ -188,8 +190,11 @@ fn cmd_repro(args: &Args) -> i32 {
     let run = |id: &str, failures: &mut Vec<String>| {
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_inner(id)));
         match outcome {
-            Ok(true) => {}
-            Ok(false) => failures.push(format!("{id} (unknown id)")),
+            Ok(Ok(())) => {}
+            Ok(Err(msg)) => {
+                eprintln!("experiment {id} failed: {msg}");
+                failures.push(format!("{id} ({msg})"));
+            }
             Err(payload) => {
                 let msg = payload
                     .downcast_ref::<String>()

@@ -4,6 +4,8 @@
 //! section, prints it in the paper's row/column layout alongside the
 //! published values, and saves a CSV under `results/`.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::MacVariant;
 use crate::backend::BackendKind;
 use crate::coordinator::report::{f, save_csv, save_hw_report, save_json, Table};
@@ -18,11 +20,17 @@ use crate::trainer::batched::sweep_schemes;
 use crate::trainer::budget::{step_cost, step_cost_for, train_with_budget, Budget};
 use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
-use crate::trainer::session::{TrainConfig, TrainSession};
+use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
 use crate::util::mat::Mat;
 use crate::util::par;
 use crate::util::rng::Pcg64;
-use crate::workloads::{by_name, Dataset, ALL_WORKLOADS};
+use crate::workloads::{by_name, Dataset, Env, ALL_WORKLOADS};
+
+/// [`by_name`] as a structured error (for the `Result`-shaped harnesses).
+fn workload(name: &str) -> Result<Box<dyn Env>, TrainError> {
+    by_name(name)
+        .ok_or_else(|| TrainError::BadConfig { reason: format!("unknown workload `{name}`") })
+}
 
 /// Paper's Table II values for side-by-side display.
 const TABLE2_PAPER: [(&str, f64, f64, [f64; 6]); 3] = [
@@ -158,7 +166,7 @@ pub fn fig7() -> (Table, Table) {
         let mut cells = vec![comp.to_string()];
         for (fmt, _) in &measured {
             let b = model.pe_energy_breakdown(*fmt);
-            let v = b.components.iter().find(|(n, _)| n == comp).unwrap().1;
+            let v = b.components.iter().find(|(n, _)| n == comp).map_or(f64::NAN, |(_, v)| *v);
             cells.push(f(v, 3));
         }
         e.row(cells);
@@ -188,7 +196,7 @@ pub fn fig7() -> (Table, Table) {
 /// batched engine — the sweep is embarrassingly parallel and the
 /// results are bit-identical to the sequential loop (each session is
 /// seeded independently and the parallel kernels are exact).
-pub fn fig2(steps: usize, eval_every: usize) -> Table {
+pub fn fig2(steps: usize, eval_every: usize) -> Result<Table, TrainError> {
     let schemes: Vec<QuantScheme> = std::iter::once(QuantScheme::Fp32)
         .chain(ALL_ELEMENT_FORMATS.into_iter().map(QuantScheme::MxSquare))
         .collect();
@@ -197,7 +205,7 @@ pub fn fig2(steps: usize, eval_every: usize) -> Table {
         &["workload", "fp32", "int8", "e5m2", "e4m3", "e3m2", "e2m3", "e2m1", "best-mx"],
     );
     for wl in ALL_WORKLOADS {
-        let env = by_name(wl).unwrap();
+        let env = workload(wl)?;
         let ds = Dataset::collect(env.as_ref(), 30, 100, 0xF16_2);
         let base = TrainConfig { steps, eval_every, lr: 1e-3, ..Default::default() };
         let outcomes = sweep_schemes(&ds, &schemes, &base);
@@ -221,13 +229,13 @@ pub fn fig2(steps: usize, eval_every: usize) -> Table {
         t.row(cells);
         let _ = save_csv(&curves, &format!("fig2_{wl}"));
     }
-    t
+    Ok(t)
 }
 
 /// Fig. 8 — pusher validation loss under a 1000 us time budget and a
 /// 120 uJ-class energy budget, ours (MXINT8/MXFP8) vs Dacapo (MX9/MX6).
-pub fn fig8(time_budget_us: f64, energy_budget_uj: f64) -> Table {
-    let env = by_name("pusher").unwrap();
+pub fn fig8(time_budget_us: f64, energy_budget_uj: f64) -> Result<Table, TrainError> {
+    let env = workload("pusher")?;
     let ds = Dataset::collect(env.as_ref(), 30, 100, 0xF16_8);
     let contenders = [
         QuantScheme::MxSquare(ElementFormat::Int8),
@@ -267,8 +275,11 @@ pub fn fig8(time_budget_us: f64, energy_budget_uj: f64) -> Table {
         for p in ec {
             curves.row(vec![scheme.name(), "energy".into(), f(p.consumed, 2), p.steps.to_string(), format!("{:.6}", p.val_loss)]);
         }
-        let lt = tc.last().unwrap();
-        let le = ec.last().unwrap();
+        let (Some(lt), Some(le)) = (tc.last(), ec.last()) else {
+            // train_with_budget always samples at least once; an empty
+            // curve would mean the budget priced to zero steps
+            continue;
+        };
         t.row(vec![
             scheme.name(),
             f(cost.micros, 2),
@@ -280,7 +291,7 @@ pub fn fig8(time_budget_us: f64, energy_budget_uj: f64) -> Table {
         ]);
     }
     let _ = save_csv(&curves, "fig8_curves");
-    t
+    Ok(t)
 }
 
 /// Measured-on-model training throughput: drive real QAT steps through
@@ -290,8 +301,8 @@ pub fn fig8(time_budget_us: f64, energy_budget_uj: f64) -> Table {
 /// graph skips layer 0's error-backprop GeMM (nothing upstream), so the
 /// measured step is slightly cheaper — that gap is the point of
 /// measuring on the model instead of trusting the closed form.
-pub fn throughput(steps: usize) -> Table {
-    let env = by_name("pusher").unwrap();
+pub fn throughput(steps: usize) -> Result<Table, TrainError> {
+    let env = workload("pusher")?;
     let ds = Dataset::collect(env.as_ref(), 6, 60, 0x7409);
     let mut t = Table::new(
         "Measured training cost on the hardware backend (pusher MLP, batch 32)",
@@ -312,7 +323,9 @@ pub fn throughput(steps: usize) -> Table {
             },
         );
         s.run();
-        let r = s.hw_report().expect("hardware backend accounts cost");
+        let r = s.hw_report().ok_or_else(|| TrainError::BadConfig {
+            reason: "hardware backend produced no cost report".into(),
+        })?;
         let analytic = train_step_cycles(32, &PUSHER_DIMS, fmt).micros(500.0);
         t.row(vec![
             fmt.name().to_string(),
@@ -334,13 +347,13 @@ pub fn throughput(steps: usize) -> Table {
     // the fake-quant backend, measured wall-clock on identical sessions
     // (bit-identical losses — only execution speed differs); lands in
     // results/ next to the analytic hardware numbers above
-    let sw = sw_backend_wallclock(12);
+    let sw = sw_backend_wallclock(12)?;
     print!("{}", sw.render());
     match save_csv(&sw, "throughput_sw_packed") {
         Ok(p) => println!("[saved {}]\n", p.display()),
         Err(e) => println!("[csv save failed: {e}]\n"),
     }
-    t
+    Ok(t)
 }
 
 /// Outcome of one [`race_fast_vs_packed`] run.
@@ -430,10 +443,10 @@ pub fn race_fast_vs_packed(
 /// The loss columns must agree bit for bit (the backend equivalence
 /// contract); the speedup is what the packed execution path buys.
 /// Also saves `results/throughput_packed.json` for the perf trajectory.
-pub fn sw_backend_wallclock(steps: usize) -> Table {
+pub fn sw_backend_wallclock(steps: usize) -> Result<Table, TrainError> {
     use crate::coordinator::report::bench_doc;
     use crate::util::json::Json;
-    let env = by_name("pusher").unwrap();
+    let env = workload("pusher")?;
     let ds = Dataset::collect(env.as_ref(), 6, 60, 0x7410);
     let mut t = Table::new(
         "Measured software training throughput (pusher MLP, batch 32): fast vs packed",
@@ -442,7 +455,7 @@ pub fn sw_backend_wallclock(steps: usize) -> Table {
     let mut schemes = Json::obj();
     for fmt in [ElementFormat::Int8, ElementFormat::E4M3, ElementFormat::E2M1] {
         let race = race_fast_vs_packed(&ds, QuantScheme::MxSquare(fmt), steps)
-            .expect("square MX schemes run on both backends");
+            .map_err(|reason| TrainError::BadConfig { reason })?;
         t.row(vec![
             fmt.name().to_string(),
             steps.to_string(),
@@ -457,7 +470,7 @@ pub fn sw_backend_wallclock(steps: usize) -> Table {
     if let Err(e) = crate::coordinator::report::save_json(&doc, "throughput_packed") {
         println!("[json save failed: {e}]");
     }
-    t
+    Ok(t)
 }
 
 /// Runtime precision scheduling — the paper's precision-*scalable*
@@ -477,11 +490,11 @@ pub fn sw_backend_wallclock(steps: usize) -> Table {
 pub fn precision_schedule_report(
     static_steps: usize,
     dims: Option<Vec<usize>>,
-) -> (Table, crate::util::json::Json) {
+) -> Result<(Table, crate::util::json::Json), TrainError> {
     use crate::util::json::Json;
     use std::time::Instant;
     let static_steps = static_steps.max(8);
-    let env = by_name("cartpole").unwrap();
+    let env = workload("cartpole")?;
     let ds = Dataset::collect(env.as_ref(), 20, 80, 0x5C4ED);
     let dims_vec = dims.clone().unwrap_or_else(|| crate::trainer::mlp::MLP_DIMS.to_vec());
     let batch = 32usize;
@@ -514,7 +527,8 @@ pub fn precision_schedule_report(
         entries.push((at, scheme));
         at += n;
     }
-    let policy = PrecisionPolicy::schedule(entries).expect("ladder is non-empty");
+    let policy = PrecisionPolicy::schedule(entries)
+        .map_err(|reason| TrainError::BadConfig { reason })?;
     let config = |scheme: QuantScheme, steps: usize| TrainConfig {
         scheme,
         backend: BackendKind::Packed,
@@ -545,9 +559,7 @@ pub fn precision_schedule_report(
         boundary += n;
         let t0 = Instant::now();
         while sched.step_count() < boundary {
-            sched
-                .step_with_policy(&mut driver)
-                .expect("square MX schedule runs on the packed backend");
+            sched.step_with_policy(&mut driver)?;
         }
         let wall = t0.elapsed().as_secs_f64();
         seg_rows.push((scheme.name(), n, wall, sched.val_loss()));
@@ -583,11 +595,11 @@ pub fn precision_schedule_report(
         f(sched_wall / total_steps as f64 * 1e3, 3),
         format!("{:.2}x", speedup_analytic),
     ]);
-    for (name, n, wall, val) in &seg_rows {
+    for (&(scheme, _), (name, n, wall, val)) in seg_steps.iter().zip(&seg_rows) {
         t.row(vec![
             format!("  segment {name}"),
             n.to_string(),
-            f(*n as f64 * cost_us(QuantScheme::parse(name).unwrap()), 1),
+            f(*n as f64 * cost_us(scheme), 1),
             f(*val, 4),
             "".into(),
             f(wall / (*n as f64) * 1e3, 3),
@@ -607,7 +619,7 @@ pub fn precision_schedule_report(
                 .set("val_loss_at_end", *val),
         );
     }
-    let doc = Json::obj()
+    let doc = crate::coordinator::report::stamped_doc("precision_schedule")
         .set("workload", "cartpole")
         .set("backend", "packed")
         .set("policy", policy.name())
@@ -642,26 +654,30 @@ pub fn precision_schedule_report(
                 .set("throughput_speedup_wall", speedup_wall)
                 .set("meets_1p5x_floor", speedup_analytic >= 1.5),
         );
-    (t, doc)
+    Ok((t, doc))
 }
 
 /// [`precision_schedule_report`] + `results/precision_schedule.json`
-/// emission (the `mxscale repro precision-schedule` artefact).
-pub fn precision_schedule(static_steps: usize, dims: Option<Vec<usize>>) -> Table {
-    let (t, doc) = precision_schedule_report(static_steps, dims);
+/// emission (the `mxscale repro precision-schedule` artefact). The doc
+/// is already provenance-stamped by `stamped_doc`.
+pub fn precision_schedule(
+    static_steps: usize,
+    dims: Option<Vec<usize>>,
+) -> Result<Table, TrainError> {
+    let (t, doc) = precision_schedule_report(static_steps, dims)?;
     match save_json(&doc, "precision_schedule") {
         Ok(p) => println!("[saved {}]", p.display()),
         Err(e) => println!("[json save failed: {e}]"),
     }
-    t
+    Ok(t)
 }
 
 /// Ablation — square-block granularity (the paper's 8x8 design choice).
 /// Sweeps k x k squares over weight/activation tensors captured from a
 /// trained pusher MLP, reporting error vs storage vs MX compatibility.
-pub fn ablation() -> Table {
+pub fn ablation() -> Result<Table, TrainError> {
     use crate::mx::ablation::ablate;
-    let env = by_name("pusher").unwrap();
+    let env = workload("pusher")?;
     let ds = Dataset::collect(env.as_ref(), 10, 60, 0xAB1);
     // train briefly so the ablated tensors have realistic statistics
     let mut s = TrainSession::new(
@@ -683,7 +699,7 @@ pub fn ablation() -> Table {
             if ok { "yes".into() } else { "no".into() },
         ]);
     }
-    t
+    Ok(t)
 }
 
 #[cfg(test)]
@@ -728,7 +744,7 @@ mod tests {
         // per microsecond of static-MXINT8 (which is both the highest-
         // precision and the analytically slowest mode), and (b) use
         // those extra steps to reach a lower final eval loss
-        let (t, doc) = precision_schedule_report(40, Some(vec![32, 48, 48, 32]));
+        let (t, doc) = precision_schedule_report(40, Some(vec![32, 48, 48, 32])).unwrap();
         assert_eq!(t.rows.len(), 2 + 3, "static + scheduled + 3 segments");
         let race = doc.get("race").expect("race section");
         let speedup = race
@@ -754,7 +770,7 @@ mod tests {
     fn sw_wallclock_backends_stay_bit_identical() {
         // the measured fast-vs-packed table must report identical losses
         // on every row — speed is the only thing allowed to differ
-        let t = sw_backend_wallclock(2);
+        let t = sw_backend_wallclock(2).unwrap();
         assert_eq!(t.rows.len(), 3);
         for r in &t.rows {
             assert_eq!(r[5], "yes", "{r:?}");

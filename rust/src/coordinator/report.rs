@@ -1,6 +1,8 @@
 //! Report writers: aligned-text tables for the terminal, plus CSV/JSON
 //! files under `results/` for downstream plotting.
 
+#![forbid(unsafe_code)]
+
 use crate::util::json::Json;
 use std::fmt::Write as _;
 use std::path::{Path, PathBuf};
@@ -96,12 +98,19 @@ pub fn save_json(value: &Json, name: &str) -> std::io::Result<PathBuf> {
 }
 
 /// Persist a session's hardware cost report as
-/// `results/<prefix>_hw_report.json` (the `--backend hw` artifact).
+/// `results/<prefix>_hw_report.json` (the `--backend hw` artifact),
+/// stamped like every other results document.
 pub fn save_hw_report(
     report: &crate::backend::HwCostReport,
     prefix: &str,
 ) -> std::io::Result<PathBuf> {
-    save_json(&report.to_json(), &format!("{prefix}_hw_report"))
+    let mut doc = stamped_doc("hw_report");
+    if let Some(entries) = report.to_json().entries() {
+        for (k, v) in entries {
+            doc = doc.set(k, v.clone());
+        }
+    }
+    save_json(&doc, &format!("{prefix}_hw_report"))
 }
 
 /// Format a float with fixed decimals.
@@ -144,6 +153,24 @@ pub fn bench_doc(bench: &str) -> Json {
         .set("threads", crate::util::par::threads() as f64)
 }
 
+/// Version of the non-bench `results/*.json` layouts (fleet report,
+/// precision-schedule report, hw report). Bump when any of them renames
+/// or restructures fields.
+pub const REPORT_SCHEMA_VERSION: u32 = 1;
+
+/// Start a non-bench results document with the shared provenance stamp:
+/// document kind, schema version, git SHA, and worker count. Every
+/// `results/*.json` writer routes through this or [`bench_doc`] (the
+/// mxlint L6 invariant), so downstream tooling can always identify a
+/// document and refuse incomparable schema versions.
+pub fn stamped_doc(kind: &str) -> Json {
+    Json::obj()
+        .set("kind", kind)
+        .set("schema_version", REPORT_SCHEMA_VERSION as f64)
+        .set("git_sha", git_sha())
+        .set("threads", crate::util::par::threads() as f64)
+}
+
 /// Write a file only when the parent dir exists/creatable (test helper).
 pub fn save_text(dir: &Path, name: &str, text: &str) -> std::io::Result<PathBuf> {
     std::fs::create_dir_all(dir)?;
@@ -175,6 +202,15 @@ mod tests {
         assert!(s.contains("\"git_sha\":"), "{s}");
         assert!(s.contains("\"threads\":"), "{s}");
         assert!(!git_sha().is_empty());
+    }
+
+    #[test]
+    fn stamped_doc_carries_kind_and_schema() {
+        let s = stamped_doc("fleet_report").to_string();
+        assert!(s.contains("\"kind\":\"fleet_report\""), "{s}");
+        assert!(s.contains("\"schema_version\":1"), "{s}");
+        assert!(s.contains("\"git_sha\":"), "{s}");
+        assert!(s.contains("\"threads\":"), "{s}");
     }
 
     #[test]

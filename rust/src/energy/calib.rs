@@ -31,6 +31,8 @@
 //! paper's qualitative findings (FP accumulation dominates energy; L1+L2
 //! adders dominate area).
 
+#![forbid(unsafe_code)]
+
 use crate::arith::{MacVariant, Mode};
 use crate::mx::dacapo::DacapoFormat;
 use crate::mx::element::ElementFormat;

@@ -1,5 +1,7 @@
 //! The analytical area/energy model over simulator event counts.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::{Events, MacVariant};
 use crate::energy::calib;
 use crate::mx::dacapo::DacapoFormat;

@@ -1,5 +1,7 @@
 //! Fleet experiment runner + `results/fleet_report.json` emission.
 
+#![forbid(unsafe_code)]
+
 use crate::backend::BackendKind;
 use crate::fleet::scheduler::{DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget};
 use crate::mx::element::ElementFormat;
@@ -175,7 +177,9 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
     for i in 0..spec.sessions {
         let workload = ALL_WORKLOADS[i % ALL_WORKLOADS.len()];
         let scheme = spec.schemes[(i / ALL_WORKLOADS.len()) % spec.schemes.len()];
-        let env = by_name(workload).expect("known workload");
+        let env = by_name(workload).ok_or_else(|| TrainError::BadConfig {
+            reason: format!("unknown workload `{workload}`"),
+        })?;
         let ds = Dataset::collect(env.as_ref(), spec.episodes, spec.horizon, spec.seed + i as u64);
         let config = TrainConfig {
             scheme,
@@ -188,7 +192,9 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
             seed: spec.seed ^ ((i as u64 + 1) << 8),
         };
         let shifts = if spec.shift_at > 0 && spec.shift_at < spec.steps {
-            let senv = shifted_by_name(workload).expect("known workload");
+            let senv = shifted_by_name(workload).ok_or_else(|| TrainError::BadConfig {
+                reason: format!("workload `{workload}` has no shifted variant"),
+            })?;
             let shift_seed = spec.seed + 104_729 + i as u64;
             let sds = Dataset::collect(senv.as_ref(), spec.episodes, spec.horizon, shift_seed);
             vec![DomainShift {
@@ -210,6 +216,12 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
     }
 
     let stats = sched.run();
+
+    // a parked-on-error session means the fleet result is partial —
+    // surface the first error instead of reporting incomplete numbers
+    if let Some(e) = sched.sessions().iter().find_map(|s| s.error()) {
+        return Err(e.clone());
+    }
 
     // adaptation-vs-retrain: replay the first shifted session's
     // checkpoint against a scratch run on its shifted dataset
@@ -347,7 +359,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         None => Json::Null,
     };
 
-    let report = Json::obj()
+    let report = crate::coordinator::report::stamped_doc("fleet_report")
         .set("spec", spec_json)
         .set("stats", stats_json)
         .set("sessions", sess_arr)

@@ -1,5 +1,7 @@
 //! Round-robin multiplexing of training sessions over the worker pool.
 
+#![forbid(unsafe_code)]
+
 use crate::trainer::budget::step_cost_for;
 use crate::trainer::checkpoint::Checkpoint;
 use crate::trainer::policy::PrecisionPolicy;
@@ -91,6 +93,11 @@ pub struct FleetSession {
     hw_uj_carried: f64,
     /// Steps executed in the most recent quantum (scheduler bookkeeping).
     last_ran: usize,
+    /// First error this session hit mid-run (a failed shift resume or a
+    /// rejected policy transition). An errored session parks — `done()`
+    /// turns true and further quanta run nothing — instead of panicking
+    /// the whole fleet round.
+    error: Option<TrainError>,
 }
 
 impl FleetSession {
@@ -114,7 +121,8 @@ impl FleetSession {
         .microjoules;
         // shift datasets must fit the session's IO widths — reject now
         // instead of panicking when the shift fires mid-run
-        let (din, dout) = (session.dims()[0], *session.dims().last().unwrap());
+        let dims = session.dims();
+        let (din, dout) = (dims[0], dims[dims.len() - 1]);
         for s in &shifts {
             if s.dataset.train_x.cols != din || s.dataset.train_y.cols != dout {
                 return Err(TrainError::BadConfig {
@@ -140,6 +148,7 @@ impl FleetSession {
             shift_log: Vec::new(),
             hw_uj_carried: 0.0,
             last_ran: 0,
+            error: None,
         })
     }
 
@@ -167,9 +176,17 @@ impl FleetSession {
         self.session.step_count()
     }
 
-    /// Whether some budget dimension is exhausted (the session parks).
+    /// Whether some budget dimension is exhausted — or the session hit
+    /// a mid-run error ([`FleetSession::error`]) — and the session parks.
     pub fn done(&self) -> bool {
-        self.steps_done() >= self.budget.max_steps || self.energy_uj >= self.budget.max_energy_uj
+        self.error.is_some()
+            || self.steps_done() >= self.budget.max_steps
+            || self.energy_uj >= self.budget.max_energy_uj
+    }
+
+    /// The error that parked this session, if any.
+    pub fn error(&self) -> Option<&TrainError> {
+        self.error.as_ref()
     }
 
     /// Measured accelerator energy across every segment of this session
@@ -182,15 +199,14 @@ impl FleetSession {
 
     /// Fire a pending shift scheduled at (or before) the current step:
     /// checkpoint, swap the dataset, resume from the checkpoint.
-    fn fire_shift(&mut self, shift: DomainShift) {
+    fn fire_shift(&mut self, shift: DomainShift) -> Result<(), TrainError> {
         // bank the finished segment's measured ledger before the
         // resumed session starts a fresh one
         if let Some(r) = self.session.hw_report() {
             self.hw_uj_carried += r.uj_total();
         }
         let ck = self.session.save_checkpoint();
-        let resumed = TrainSession::resume(shift.dataset, &ck)
-            .expect("checkpoint was taken from a valid session");
+        let resumed = TrainSession::resume(shift.dataset, &ck)?;
         let val_before = resumed.val_loss();
         self.shift_log.push(ShiftRecord {
             at_step: shift.at_step,
@@ -201,6 +217,7 @@ impl FleetSession {
             checkpoint: ck,
         });
         self.session = resumed;
+        Ok(())
     }
 
     /// Run up to `quantum` training steps, honoring budgets, firing due
@@ -212,12 +229,19 @@ impl FleetSession {
         while ran < quantum && !self.done() {
             if self.shifts.first().is_some_and(|s| self.steps_done() >= s.at_step) {
                 let shift = self.shifts.remove(0);
-                self.fire_shift(shift);
+                if let Err(e) = self.fire_shift(shift) {
+                    self.error = Some(e);
+                    break;
+                }
                 continue;
             }
-            self.session
-                .step_with_policy(&mut self.policy)
-                .expect("policy schemes were validated against this backend at attach time");
+            // policy schemes were validated against this backend at
+            // attach time, so this only fails on a logic error — park
+            // the session and surface it instead of panicking the round
+            if let Err(e) = self.session.step_with_policy(&mut self.policy) {
+                self.error = Some(e);
+                break;
+            }
             // the step ran under the (possibly just-transitioned)
             // active scheme: reprice if it changed, then attribute
             let scheme = self.session.config.scheme;

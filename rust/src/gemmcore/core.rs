@@ -6,6 +6,8 @@
 //! comes from the grid-pass schedule in [`schedule`] and the *energy*
 //! from the aggregated event counts.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::{Events, MacVariant};
 use crate::gemmcore::quantizer::Quantizer;
 use crate::gemmcore::schedule::{self, CycleCost};

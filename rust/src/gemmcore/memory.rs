@@ -15,6 +15,8 @@
 //!   buffer needs no second grouping. Inference buffers stream (0 KB
 //!   resident beyond W), matching the paper's accounting convention.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::dacapo::DacapoFormat;
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::Layout;

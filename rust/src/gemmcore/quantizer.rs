@@ -5,6 +5,8 @@
 //! (activations feeding the next layer, or errors feeding backprop).
 //! Event counts (max-scan + encode per element) feed the energy model.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
 use crate::util::mat::Mat;

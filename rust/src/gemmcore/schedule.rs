@@ -18,6 +18,8 @@
 //!    dimension (K = 32 -> 4 block-steps), so writebacks are frequent and
 //!    utilization collapses — the paper's §IV-B observation.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::Mode;
 use crate::gemmcore::{BW_BITS_PER_CYCLE, GRID_COLS, GRID_ROWS};
 use crate::mx::element::ElementFormat;

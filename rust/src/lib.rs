@@ -50,6 +50,10 @@
 //!   Gated behind the `xla` cargo feature (graceful stubs otherwise).
 //! * [`coordinator`] — experiment configs, the CLI, and the per-table /
 //!   per-figure reproduction harnesses.
+//! * [`lint`] — `mxlint`, the dependency-free static-analysis pass
+//!   enforcing the contracts above (serial twins, exact exponent math,
+//!   checkpoint layout versioning, schema-stamped reports; DESIGN.md §9)
+//!   as a CI gate via the `mxlint` binary.
 //!
 //! The hot path — block quantization, the PE-array walk, the QAT sweep —
 //! runs on a batched parallel engine ([`util::par`], rayon-style
@@ -68,6 +72,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod fleet;
 pub mod gemmcore;
+pub mod lint;
 pub mod mx;
 pub mod pearray;
 pub mod runtime;

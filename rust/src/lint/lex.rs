@@ -1,0 +1,471 @@
+//! A minimal Rust lexer for `mxlint`.
+//!
+//! This is not a general-purpose Rust front end: it produces exactly the
+//! token stream the lint rules in [`crate::lint::rules`] need — idents,
+//! number/string/char literals, lifetimes, and single-character
+//! punctuation — while stripping comments (but recording the lines of
+//! `SAFETY:` comments for rule L7). The token *text* is preserved
+//! verbatim so rule L5 can hash a function body as a whitespace- and
+//! comment-insensitive fingerprint.
+//!
+//! The lexer is intentionally simple and deterministic: it operates on
+//! bytes, treats every punctuation byte as its own token (`::` is two
+//! `:` tokens), and never errors — unexpected bytes become `Punct`
+//! tokens. `ci/mxlint_mirror.py` ports this file byte-for-byte so the
+//! committed `lint.manifest` can be regenerated without a Rust
+//! toolchain; keep the two in lockstep.
+
+#![forbid(unsafe_code)]
+
+/// Kind of a lexed token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `par_map`, ...).
+    Ident,
+    /// Integer literal (`8`, `0xFF`, `64usize`).
+    Int,
+    /// Float literal (`1.5`, `1e-3`, `2.0f32`).
+    Float,
+    /// String literal, including raw and byte strings.
+    Str,
+    /// Char or byte-char literal (`'a'`, `b'\n'`).
+    Char,
+    /// Lifetime (`'a`, `'static`).
+    Lifetime,
+    /// Single punctuation byte (`{`, `.`, `:`, ...).
+    Punct,
+}
+
+/// One token: kind, verbatim text, and 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+/// Result of lexing one file.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// Lines (1-based) of comments containing `SAFETY:`.
+    pub safety_lines: Vec<u32>,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+fn starts_with_radix(text: &[u8]) -> bool {
+    text.len() >= 2
+        && text[0] == b'0'
+        && matches!(text[1], b'x' | b'X' | b'b' | b'B' | b'o' | b'O')
+}
+
+/// Classify a lexed number body as `Int` or `Float`.
+///
+/// Rust-specific wrinkle: integer suffixes contain letters (`8usize`
+/// contains an `e`), so suffix stripping must run before the
+/// exponent-letter check.
+fn classify_number(text: &str) -> TokKind {
+    let b = text.as_bytes();
+    if starts_with_radix(b) {
+        return TokKind::Int;
+    }
+    if text.contains('.') {
+        return TokKind::Float;
+    }
+    const INT_SUFFIXES: [&str; 12] = [
+        "usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8",
+    ];
+    for suf in INT_SUFFIXES {
+        if let Some(core) = text.strip_suffix(suf) {
+            if !core.is_empty() && core.bytes().all(|c| c.is_ascii_digit() || c == b'_') {
+                return TokKind::Int;
+            }
+        }
+    }
+    if text.ends_with("f32") || text.ends_with("f64") {
+        return TokKind::Float;
+    }
+    if text.contains('e') || text.contains('E') {
+        return TokKind::Float;
+    }
+    TokKind::Int
+}
+
+/// Lex `src` into tokens plus `SAFETY:` comment lines.
+pub fn lex(src: &[u8]) -> Lexed {
+    let b = src;
+    let n = b.len();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    let mut out = Lexed::default();
+
+    let push = |out: &mut Lexed, kind: TokKind, text: &[u8], line: u32| {
+        out.toks.push(Tok { kind, text: String::from_utf8_lossy(text).into_owned(), line });
+    };
+
+    while i < n {
+        let c = b[i];
+        // -------- whitespace
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_ascii_whitespace() {
+            i += 1;
+            continue;
+        }
+        // -------- comments
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let start = i;
+            while i < n && b[i] != b'\n' {
+                i += 1;
+            }
+            if contains_safety(&b[start..i]) {
+                out.safety_lines.push(line);
+            }
+            continue;
+        }
+        if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < n && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < n && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            if contains_safety(&b[start..i]) {
+                out.safety_lines.push(start_line);
+            }
+            continue;
+        }
+        // -------- raw strings: r"..." / r#"..."# (and br variants below)
+        if c == b'r' && i + 1 < n && (b[i + 1] == b'"' || b[i + 1] == b'#') {
+            if let Some((end, nl)) = scan_raw_string(b, i + 1) {
+                push(&mut out, TokKind::Str, &b[i..end], line);
+                line += nl;
+                i = end;
+                continue;
+            }
+            // `r#foo` raw identifier or stray `r#`: fall through to ident.
+        }
+        // -------- byte strings / byte chars
+        if c == b'b' && i + 1 < n {
+            if b[i + 1] == b'"' {
+                let (end, nl) = scan_string(b, i + 2);
+                push(&mut out, TokKind::Str, &b[i..end], line);
+                line += nl;
+                i = end;
+                continue;
+            }
+            if b[i + 1] == b'\'' {
+                let (end, kind) = scan_char_or_lifetime(b, i + 2);
+                push(&mut out, kind, &b[i..end], line);
+                i = end;
+                continue;
+            }
+            if b[i + 1] == b'r' && i + 2 < n && (b[i + 2] == b'"' || b[i + 2] == b'#') {
+                if let Some((end, nl)) = scan_raw_string(b, i + 2) {
+                    push(&mut out, TokKind::Str, &b[i..end], line);
+                    line += nl;
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        // -------- plain strings
+        if c == b'"' {
+            let (end, nl) = scan_string(b, i + 1);
+            push(&mut out, TokKind::Str, &b[i..end], line);
+            line += nl;
+            i = end;
+            continue;
+        }
+        // -------- char literal vs lifetime
+        if c == b'\'' {
+            let (end, kind) = scan_char_or_lifetime(b, i + 1);
+            push(&mut out, kind, &b[i..end], line);
+            i = end;
+            continue;
+        }
+        // -------- identifiers / keywords
+        if is_ident_start(c) {
+            let start = i;
+            while i < n && is_ident_cont(b[i]) {
+                i += 1;
+            }
+            push(&mut out, TokKind::Ident, &b[start..i], line);
+            continue;
+        }
+        // -------- numbers
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut has_dot = false;
+            i += 1;
+            while i < n {
+                let d = b[i];
+                if d.is_ascii_alphanumeric() || d == b'_' {
+                    i += 1;
+                    continue;
+                }
+                if d == b'.'
+                    && !has_dot
+                    && i + 1 < n
+                    && b[i + 1].is_ascii_digit()
+                {
+                    has_dot = true;
+                    i += 1;
+                    continue;
+                }
+                if (d == b'+' || d == b'-')
+                    && matches!(b[i - 1], b'e' | b'E')
+                    && !starts_with_radix(&b[start..i])
+                    && i + 1 < n
+                    && b[i + 1].is_ascii_digit()
+                {
+                    i += 1;
+                    continue;
+                }
+                break;
+            }
+            let text = &b[start..i];
+            let kind = classify_number(&String::from_utf8_lossy(text));
+            push(&mut out, kind, text, line);
+            continue;
+        }
+        // -------- punctuation (single byte)
+        push(&mut out, TokKind::Punct, &b[i..i + 1], line);
+        i += 1;
+    }
+    out
+}
+
+fn contains_safety(bytes: &[u8]) -> bool {
+    bytes.windows(7).any(|w| w == b"SAFETY:")
+}
+
+/// Scan a non-raw string body starting just after the opening quote.
+/// Returns (index just past closing quote, newline count inside).
+fn scan_string(b: &[u8], mut i: usize) -> (usize, u32) {
+    let n = b.len();
+    let mut nl = 0u32;
+    while i < n {
+        match b[i] {
+            b'\\' => i += 2,
+            b'"' => return (i + 1, nl),
+            b'\n' => {
+                nl += 1;
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    (n, nl)
+}
+
+/// Scan a raw string starting at the `#`s-or-quote position (just after
+/// the `r`). Returns `Some((index past closing delimiter, newlines))`
+/// or `None` if this is not actually a raw string (`r#ident`).
+fn scan_raw_string(b: &[u8], mut i: usize) -> Option<(usize, u32)> {
+    let n = b.len();
+    let mut hashes = 0usize;
+    while i < n && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    if i >= n || b[i] != b'"' {
+        return None;
+    }
+    i += 1;
+    let mut nl = 0u32;
+    while i < n {
+        if b[i] == b'\n' {
+            nl += 1;
+            i += 1;
+            continue;
+        }
+        if b[i] == b'"' {
+            let mut j = i + 1;
+            let mut h = 0usize;
+            while j < n && h < hashes && b[j] == b'#' {
+                h += 1;
+                j += 1;
+            }
+            if h == hashes {
+                return Some((j, nl));
+            }
+        }
+        i += 1;
+    }
+    Some((n, nl))
+}
+
+/// Disambiguate `'a'` (char) from `'a` (lifetime), starting just after
+/// the opening quote. Returns (index past token, kind).
+fn scan_char_or_lifetime(b: &[u8], i: usize) -> (usize, TokKind) {
+    let n = b.len();
+    if i >= n {
+        return (n, TokKind::Char);
+    }
+    if b[i] == b'\\' {
+        // escape: '\n', '\u{1F600}', '\'', ...
+        let mut j = i + 1;
+        if j < n {
+            let esc = b[j];
+            j += 1;
+            if esc == b'u' && j < n && b[j] == b'{' {
+                while j < n && b[j] != b'}' {
+                    j += 1;
+                }
+                j += 1;
+            }
+        }
+        if j < n && b[j] == b'\'' {
+            j += 1;
+        }
+        return (j, TokKind::Char);
+    }
+    if is_ident_start(b[i]) {
+        let mut j = i;
+        while j < n && is_ident_cont(b[j]) {
+            j += 1;
+        }
+        if j < n && b[j] == b'\'' {
+            return (j + 1, TokKind::Char);
+        }
+        return (j, TokKind::Lifetime);
+    }
+    // non-ident char like ' ', '0' handled above (digits are ident_cont
+    // but not ident_start), '"', '.' ...
+    let mut j = i + 1;
+    while j < n && b[j] != b'\'' && b[j] != b'\n' {
+        j += 1;
+    }
+    if j < n && b[j] == b'\'' {
+        j += 1;
+    }
+    (j, TokKind::Char)
+}
+
+/// FNV-1a 64-bit over each token's text bytes with a `\n` separator —
+/// the whitespace/comment-insensitive body fingerprint rule L5 records
+/// in `lint.manifest`.
+pub fn token_hash(toks: &[Tok]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    for t in toks {
+        for &byte in t.text.as_bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+        h ^= b'\n' as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src.as_bytes()).toks.into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_and_puncts() {
+        let toks = kinds("fn foo(x: u8) -> u8 { x }");
+        assert_eq!(toks[0], (TokKind::Ident, "fn".into()));
+        assert_eq!(toks[1], (TokKind::Ident, "foo".into()));
+        assert_eq!(toks[2], (TokKind::Punct, "(".into()));
+    }
+
+    #[test]
+    fn double_colon_is_two_tokens() {
+        let toks = kinds("a::b");
+        assert_eq!(toks.len(), 4);
+        assert_eq!(toks[1], (TokKind::Punct, ":".into()));
+        assert_eq!(toks[2], (TokKind::Punct, ":".into()));
+    }
+
+    #[test]
+    fn number_classification() {
+        assert_eq!(classify_number("8"), TokKind::Int);
+        assert_eq!(classify_number("8usize"), TokKind::Int);
+        assert_eq!(classify_number("0xFF"), TokKind::Int);
+        assert_eq!(classify_number("0x1b3"), TokKind::Int);
+        assert_eq!(classify_number("1e-3"), TokKind::Float);
+        assert_eq!(classify_number("2.0"), TokKind::Float);
+        assert_eq!(classify_number("1f32"), TokKind::Float);
+        assert_eq!(classify_number("123i64"), TokKind::Int);
+    }
+
+    #[test]
+    fn exponent_sign_is_absorbed() {
+        let toks = kinds("let x = 1e-3;");
+        assert!(toks.iter().any(|t| t.1 == "1e-3" && t.0 == TokKind::Float));
+    }
+
+    #[test]
+    fn range_dots_not_absorbed() {
+        let toks = kinds("for i in 0..8 {}");
+        assert!(toks.iter().any(|t| t.1 == "0" && t.0 == TokKind::Int));
+        assert!(toks.iter().any(|t| t.1 == "8" && t.0 == TokKind::Int));
+        assert_eq!(toks.iter().filter(|t| t.1 == "." && t.0 == TokKind::Punct).count(), 2);
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("let c = 'a'; fn f<'a>(x: &'a u8) {} let s = ' ';");
+        assert!(toks.iter().any(|t| t.1 == "'a'" && t.0 == TokKind::Char));
+        assert!(toks.iter().any(|t| t.1 == "'a" && t.0 == TokKind::Lifetime));
+        assert!(toks.iter().any(|t| t.1 == "' '" && t.0 == TokKind::Char));
+    }
+
+    #[test]
+    fn strings_and_raw_strings() {
+        let toks = kinds(r##"let a = "hi \" there"; let b = r#"raw "quoted""#;"##);
+        assert_eq!(toks.iter().filter(|t| t.0 == TokKind::Str).count(), 2);
+    }
+
+    #[test]
+    fn comments_stripped_and_safety_recorded() {
+        let lexed = lex(b"// SAFETY: fine\nlet x = 1; /* SAFETY: also */\n");
+        assert_eq!(lexed.safety_lines, vec![1, 2]);
+        assert!(lexed.toks.iter().all(|t| !t.text.contains("SAFETY")));
+    }
+
+    #[test]
+    fn lines_tracked_across_strings() {
+        let lexed = lex(b"let a = \"x\ny\";\nlet b = 1;");
+        let b_tok = lexed.toks.iter().find(|t| t.text == "b").unwrap();
+        assert_eq!(b_tok.line, 3);
+    }
+
+    #[test]
+    fn token_hash_ignores_whitespace_and_comments() {
+        let a = lex(b"fn f() { x + 1 }");
+        let b = lex(b"fn f()   { // comment\n  x + 1 }");
+        assert_eq!(token_hash(&a.toks), token_hash(&b.toks));
+        let c = lex(b"fn f() { x + 2 }");
+        assert_ne!(token_hash(&a.toks), token_hash(&c.toks));
+    }
+}

@@ -1,0 +1,344 @@
+//! `mxlint`: a dependency-free static-analysis pass over this crate's
+//! own sources, enforcing the bit-identity contracts the test suite can
+//! only probe pointwise (see DESIGN.md §9 for the invariant catalog).
+//!
+//! The pipeline is: [`collect_sources`] walks `rust/src` and
+//! `rust/tests`, [`lex::lex`] turns each file into a token stream, and
+//! [`rules::run_all`] evaluates rules L1–L7 against them, honoring the
+//! committed allowlist (`rust/lint.toml`) and byte-layout manifest
+//! (`rust/lint.manifest`). The `mxlint` binary (`src/bin/mxlint.rs`)
+//! adds `--json`, `--diff <rev>`, and `--update-manifest` on top.
+//!
+//! Everything here is deliberately `std`-only and deterministic:
+//! sorted directory walks, sorted findings, insertion-ordered JSON —
+//! so CI output diffs cleanly. `ci/mxlint_mirror.py` is a line-for-line
+//! Python port of the lexer and rules used to regenerate the manifest
+//! where no Rust toolchain exists; keep it in sync with this module.
+
+pub mod lex;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+pub use rules::{Allow, Finding, Manifest, SourceFile};
+
+/// Parsed `lint.toml`: per-rule allowlists with review reasons.
+#[derive(Debug, Default)]
+pub struct Config {
+    pub allow: Allow,
+}
+
+/// Parse the `lint.toml` subset: `# comments`, `[allow.LX]` sections,
+/// and `"key" = "reason"` entries.
+pub fn parse_config(text: &str) -> Result<Config, String> {
+    let mut allow = Allow::new();
+    let mut section: Option<String> = None;
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest.strip_suffix(']').ok_or(format!("line {ln}: unclosed section"))?;
+            let rule = inner
+                .strip_prefix("allow.")
+                .ok_or(format!("line {ln}: unknown section `[{inner}]`"))?;
+            section = Some(rule.to_string());
+            allow.entry(rule.to_string()).or_default();
+            continue;
+        }
+        let Some(rule) = &section else {
+            return Err(format!("line {ln}: entry outside an [allow.*] section"));
+        };
+        let (key, rest) = parse_quoted(line).ok_or(format!("line {ln}: expected \"key\""))?;
+        let rest = rest.trim_start();
+        let rest = rest.strip_prefix('=').ok_or(format!("line {ln}: expected `=`"))?;
+        let (reason, tail) =
+            parse_quoted(rest.trim_start()).ok_or(format!("line {ln}: expected \"reason\""))?;
+        let tail = tail.trim();
+        if !tail.is_empty() && !tail.starts_with('#') {
+            return Err(format!("line {ln}: trailing garbage `{tail}`"));
+        }
+        if reason.trim().is_empty() {
+            return Err(format!("line {ln}: allowlist entry `{key}` needs a non-empty reason"));
+        }
+        allow.get_mut(rule).expect("section exists").push((key, reason));
+    }
+    Ok(Config { allow })
+}
+
+/// Parse a leading double-quoted string; returns (content, rest).
+fn parse_quoted(s: &str) -> Option<(String, &str)> {
+    let rest = s.strip_prefix('"')?;
+    let end = rest.find('"')?;
+    Some((rest[..end].to_string(), &rest[end + 1..]))
+}
+
+/// Parse `lint.manifest`: `version <n>` then `fn <key> <hex16>` lines.
+pub fn parse_manifest(text: &str) -> Result<Manifest, String> {
+    let mut m = Manifest::default();
+    let mut saw_version = false;
+    for (idx, raw) in text.lines().enumerate() {
+        let ln = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("version ") {
+            m.version =
+                v.trim().parse().map_err(|_| format!("line {ln}: bad version `{v}`"))?;
+            saw_version = true;
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("fn ") {
+            let mut parts = rest.split_whitespace();
+            let key = parts.next().ok_or(format!("line {ln}: missing key"))?;
+            let hex = parts.next().ok_or(format!("line {ln}: missing hash"))?;
+            let hash = u64::from_str_radix(hex, 16)
+                .map_err(|_| format!("line {ln}: bad hash `{hex}`"))?;
+            m.entries.push((key.to_string(), hash));
+            continue;
+        }
+        return Err(format!("line {ln}: unrecognized `{line}`"));
+    }
+    if !saw_version {
+        return Err("manifest has no `version` line".into());
+    }
+    Ok(m)
+}
+
+/// Render a manifest in the committed format (sorted keys).
+pub fn render_manifest(m: &Manifest) -> String {
+    let mut entries = m.entries.clone();
+    entries.sort();
+    let mut out = String::new();
+    out.push_str("# Byte-layout manifest for mxlint rule L5. Regenerate with\n");
+    out.push_str("#   cargo run --release --bin mxlint -- --update-manifest\n");
+    out.push_str("# (or `python3 ci/mxlint_mirror.py --update-manifest` without a toolchain).\n");
+    out.push_str(&format!("version {}\n", m.version));
+    for (k, h) in &entries {
+        out.push_str(&format!("fn {k} {h:016x}\n"));
+    }
+    out
+}
+
+/// Build the current manifest from sources (for `--update-manifest`).
+pub fn current_manifest(src: &[SourceFile]) -> Manifest {
+    Manifest {
+        version: rules::checkpoint_version(src),
+        entries: rules::layout_hashes(src).into_iter().map(|(k, h, _, _)| (k, h)).collect(),
+    }
+}
+
+fn walk_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    let mut names: Vec<PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    names.sort();
+    for path in names {
+        if path.is_dir() {
+            walk_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            let bytes = std::fs::read(&path)?;
+            out.push(SourceFile { rel, lexed: lex::lex(&bytes) });
+        }
+    }
+    Ok(())
+}
+
+/// Lex every `.rs` file under `rust/src` and `rust/tests` of `root`
+/// (the repo root), in sorted order.
+pub fn collect_sources(root: &Path) -> std::io::Result<(Vec<SourceFile>, Vec<SourceFile>)> {
+    let mut src = Vec::new();
+    let mut tests = Vec::new();
+    walk_rs(&root.join("rust/src"), root, &mut src)?;
+    let tdir = root.join("rust/tests");
+    if tdir.is_dir() {
+        walk_rs(&tdir, root, &mut tests)?;
+    }
+    Ok((src, tests))
+}
+
+/// Run all rules over in-memory sources — the library entry point the
+/// binary and the self-run tests share.
+pub fn lint(
+    src: &[SourceFile],
+    tests: &[SourceFile],
+    cfg: &Config,
+    manifest: &Manifest,
+) -> Vec<Finding> {
+    rules::run_all(src, tests, &cfg.allow, manifest)
+}
+
+/// Render findings as the `{"tool":"mxlint",...}` report consumed by
+/// `ci/check_bench.py --mxlint-report`.
+pub fn render_json(findings: &[Finding]) -> String {
+    let mut arr = Json::arr();
+    for f in findings {
+        arr = arr.push(
+            Json::obj()
+                .set("rule", f.rule)
+                .set("file", f.file.as_str())
+                .set("line", f.line as u64)
+                .set("message", f.message.as_str()),
+        );
+    }
+    let mut counts: BTreeMap<&str, u64> = BTreeMap::new();
+    for f in findings {
+        *counts.entry(f.rule).or_insert(0) += 1;
+    }
+    let mut cobj = Json::obj();
+    for (rule, n) in counts {
+        cobj = cobj.set(rule, n);
+    }
+    cobj = cobj.set("total", findings.len() as u64);
+    Json::obj()
+        .set("tool", "mxlint")
+        .set("schema_version", 1u64)
+        .set("findings", arr)
+        .set("counts", cobj)
+        .pretty()
+}
+
+/// Changed-line sets per repo-relative file, from `git diff -U0 <rev>`.
+/// Used by `mxlint --diff <rev>` to report findings only on new code.
+pub fn changed_lines(root: &Path, rev: &str) -> Result<BTreeMap<String, BTreeSet<u32>>, String> {
+    let out = std::process::Command::new("git")
+        .arg("-C")
+        .arg(root)
+        .args(["diff", "-U0", "--no-color", rev, "--", "*.rs"])
+        .output()
+        .map_err(|e| format!("running git diff: {e}"))?;
+    if !out.status.success() {
+        return Err(format!(
+            "git diff {rev} failed: {}",
+            String::from_utf8_lossy(&out.stderr).trim()
+        ));
+    }
+    let text = String::from_utf8_lossy(&out.stdout);
+    let mut map: BTreeMap<String, BTreeSet<u32>> = BTreeMap::new();
+    let mut file: Option<String> = None;
+    for line in text.lines() {
+        if let Some(path) = line.strip_prefix("+++ b/") {
+            file = Some(path.to_string());
+        } else if let Some(rest) = line.strip_prefix("@@ ") {
+            let Some(file) = &file else { continue };
+            // hunk header: `-a,b +c,d @@`
+            let Some(plus) = rest.split_whitespace().find(|p| p.starts_with('+')) else {
+                continue;
+            };
+            let nums = &plus[1..];
+            let (start, count) = match nums.split_once(',') {
+                Some((s, c)) => (s.parse().unwrap_or(0u32), c.parse().unwrap_or(0u32)),
+                None => (nums.parse().unwrap_or(0u32), 1u32),
+            };
+            let set = map.entry(file.clone()).or_default();
+            for l in start..start + count {
+                set.insert(l);
+            }
+        }
+    }
+    Ok(map)
+}
+
+/// Keep only findings whose (file, line) is in the changed-line sets.
+/// Repo-level findings (e.g. a stale manifest) are always kept.
+pub fn filter_to_changed(
+    findings: Vec<Finding>,
+    changed: &BTreeMap<String, BTreeSet<u32>>,
+) -> Vec<Finding> {
+    findings
+        .into_iter()
+        .filter(|f| {
+            if f.file == "rust/lint.manifest" {
+                return true;
+            }
+            changed.get(&f.file).is_some_and(|lines| lines.contains(&f.line))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_round_trip() {
+        let cfg = parse_config(
+            "# header\n[allow.L3]\n\"dot8_i8\" = \"odd-byte extraction\" # trailing\n\n\
+             [allow.L4]\n\"backend/hw.rs\" = \"sequencing-contract panics\"\n",
+        )
+        .unwrap();
+        assert!(rules::allowed(&cfg.allow, "L3", "dot8_i8"));
+        assert!(rules::allowed(&cfg.allow, "L4", "backend/hw.rs"));
+        assert!(!rules::allowed(&cfg.allow, "L4", "backend/packed.rs"));
+    }
+
+    #[test]
+    fn config_rejects_bad_lines() {
+        assert!(parse_config("\"orphan\" = \"x\"\n").is_err());
+        assert!(parse_config("[allow.L1]\n\"k\" =\n").is_err());
+        assert!(parse_config("[allow.L1]\n\"k\" = \"\"\n").is_err());
+        assert!(parse_config("[deny.L1]\n").is_err());
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = Manifest {
+            version: 2,
+            entries: vec![("mx/tensor.rs::to_bytes".into(), 0xdead_beef_0123_4567)],
+        };
+        let text = render_manifest(&m);
+        let back = parse_manifest(&text).unwrap();
+        assert_eq!(back.version, 2);
+        assert_eq!(back.entries, m.entries);
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("fn a 00\n").is_err()); // no version
+        assert!(parse_manifest("version x\n").is_err());
+        assert!(parse_manifest("version 1\nwhat\n").is_err());
+        assert!(parse_manifest("version 1\nfn key zz\n").is_err());
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let findings = vec![Finding {
+            rule: "L4",
+            file: "rust/src/fleet/scheduler.rs".into(),
+            line: 7,
+            message: "msg".into(),
+        }];
+        let doc = Json::parse(&render_json(&findings)).unwrap();
+        assert_eq!(doc.get("tool").and_then(Json::as_str), Some("mxlint"));
+        assert_eq!(doc.get("schema_version").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(doc.get("findings").and_then(Json::items).map(<[Json]>::len), Some(1));
+        let counts = doc.get("counts").unwrap();
+        assert_eq!(counts.get("L4").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(counts.get("total").and_then(Json::as_f64), Some(1.0));
+    }
+
+    #[test]
+    fn filter_to_changed_keeps_manifest_findings() {
+        let mut changed = BTreeMap::new();
+        changed.insert("a.rs".to_string(), BTreeSet::from([3u32]));
+        let fs = vec![
+            Finding { rule: "L4", file: "a.rs".into(), line: 3, message: String::new() },
+            Finding { rule: "L4", file: "a.rs".into(), line: 9, message: String::new() },
+            Finding { rule: "L5", file: "rust/lint.manifest".into(), line: 1, message: String::new() },
+        ];
+        let kept = filter_to_changed(fs, &changed);
+        assert_eq!(kept.len(), 2);
+    }
+}

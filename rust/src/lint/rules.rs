@@ -1,0 +1,659 @@
+//! The mxlint rule engine: invariant checks L1–L7 over lexed sources.
+//!
+//! Each rule is a pure function from token streams to [`Finding`]s, so
+//! the fixture tests in `rust/tests/lint.rs` can drive them with
+//! in-memory snippets and the self-run test can drive them with the
+//! real tree. DESIGN.md §9 is the human-readable catalog; the rule
+//! constants here are the machine-readable one. `ci/mxlint_mirror.py`
+//! ports this file byte-for-byte — keep them in lockstep.
+
+#![forbid(unsafe_code)]
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lex::{token_hash, Lexed, Tok, TokKind};
+
+/// One lexed source file with its repo-relative, `/`-separated path
+/// (e.g. `rust/src/mx/packed.rs`).
+pub struct SourceFile {
+    pub rel: String,
+    pub lexed: Lexed,
+}
+
+/// One rule violation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// Per-rule allowlist: rule name -> (key, reason) entries from lint.toml.
+pub type Allow = BTreeMap<String, Vec<(String, String)>>;
+
+pub(crate) fn allowed(allow: &Allow, rule: &str, key: &str) -> bool {
+    allow.get(rule).is_some_and(|v| v.iter().any(|(k, _)| k == key))
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+/// Path under `rust/src/`, or `None` for files outside it.
+pub(crate) fn under_src(rel: &str) -> Option<&str> {
+    rel.strip_prefix("rust/src/")
+}
+
+/// Index of the `}` matching the `{` at `open`, or `toks.len()` if the
+/// stream is unbalanced.
+pub(crate) fn brace_match(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if is_punct(&toks[i], "{") {
+            depth += 1;
+        } else if is_punct(&toks[i], "}") {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+/// A discovered `fn` item.
+pub(crate) struct FnInfo {
+    pub name: String,
+    pub is_pub: bool,
+    pub line: u32,
+    /// Token index of the `fn` keyword.
+    pub kw: usize,
+    /// `(open_brace_idx, close_brace_idx)`; `None` for bodyless decls.
+    pub body: Option<(usize, usize)>,
+}
+
+/// Discover every `fn` item (including nested ones) in a token stream.
+pub(crate) fn functions(toks: &[Tok]) -> Vec<FnInfo> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if is_ident(&toks[i], "fn") && toks[i + 1].kind == TokKind::Ident {
+            let name = toks[i + 1].text.clone();
+            let mut is_pub = false;
+            for j in (i.saturating_sub(6)..i).rev() {
+                if is_punct(&toks[j], ";") || is_punct(&toks[j], "}") || is_punct(&toks[j], "{") {
+                    break;
+                }
+                if is_ident(&toks[j], "pub") {
+                    is_pub = true;
+                    break;
+                }
+            }
+            // Find the body `{`, tracking paren/bracket depth so a `;`
+            // inside an array type (`&mut [u64; 8]`) does not read as a
+            // bodyless declaration.
+            let mut depth = 0i32;
+            let mut j = i + 2;
+            let mut body = None;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" if depth == 0 => {
+                            body = Some((j, brace_match(toks, j)));
+                            break;
+                        }
+                        ";" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            out.push(FnInfo { name, is_pub, line: toks[i + 1].line, kw: i, body });
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Token-index ranges covered by `#[cfg(test)]` items or `#[test]` fns.
+pub(crate) fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let cfg_test = i + 6 < toks.len()
+            && is_punct(&toks[i], "#")
+            && is_punct(&toks[i + 1], "[")
+            && is_ident(&toks[i + 2], "cfg")
+            && is_punct(&toks[i + 3], "(")
+            && is_ident(&toks[i + 4], "test")
+            && is_punct(&toks[i + 5], ")")
+            && is_punct(&toks[i + 6], "]");
+        let test_attr = i + 3 < toks.len()
+            && is_punct(&toks[i], "#")
+            && is_punct(&toks[i + 1], "[")
+            && is_ident(&toks[i + 2], "test")
+            && is_punct(&toks[i + 3], "]");
+        if cfg_test || test_attr {
+            let after = if cfg_test { i + 7 } else { i + 4 };
+            for j in after..(after + 40).min(toks.len()) {
+                if is_punct(&toks[j], ";") {
+                    break; // `#[cfg(test)] use ...;` — no region
+                }
+                if is_punct(&toks[j], "{") {
+                    out.push((i, brace_match(toks, j)));
+                    break;
+                }
+            }
+        }
+        i += 1;
+    }
+    out
+}
+
+/// Token-index ranges of `const`/`static` items (scheme-constant
+/// tables), including inline `const { ... }` blocks. `const fn` items
+/// are *not* const regions.
+pub(crate) fn const_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if (is_ident(&toks[i], "const") || is_ident(&toks[i], "static"))
+            && !(i + 1 < toks.len() && is_ident(&toks[i + 1], "fn"))
+        {
+            if i + 1 < toks.len() && is_punct(&toks[i + 1], "{") {
+                let close = brace_match(toks, i + 1);
+                out.push((i, close));
+                i = close + 1;
+                continue;
+            }
+            let mut depth = 0i32;
+            let mut j = i + 1;
+            while j < toks.len() {
+                let t = &toks[j];
+                if t.kind == TokKind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        ";" if depth <= 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            out.push((i, j));
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+pub(crate) fn in_regions(regions: &[(usize, usize)], idx: usize) -> bool {
+    regions.iter().any(|&(a, b)| idx >= a && idx <= b)
+}
+
+// ------------------------------------------------------------------ L1
+
+const L1_FILES: [&str; 5] = [
+    "rust/src/util/par.rs",
+    "rust/src/util/mat.rs",
+    "rust/src/mx/tensor.rs",
+    "rust/src/pearray/array.rs",
+    "rust/src/gemmcore/core.rs",
+];
+const L1_PAR_IDENTS: [&str; 3] = ["par_map", "par_chunks_mut", "spawn"];
+
+/// L1: every parallel kernel in the scoped files has a `_serial` twin,
+/// and every public `_serial` twin is exercised by `rust/tests/`.
+pub fn l1(src: &[SourceFile], tests: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut test_idents: BTreeSet<&str> = BTreeSet::new();
+    for t in tests {
+        for tok in &t.lexed.toks {
+            if tok.kind == TokKind::Ident {
+                test_idents.insert(tok.text.as_str());
+            }
+        }
+    }
+    for f in src.iter().filter(|f| L1_FILES.contains(&f.rel.as_str())) {
+        let toks = &f.lexed.toks;
+        let fns = functions(toks);
+        let tregions = test_regions(toks);
+        let names: BTreeSet<&str> = fns.iter().map(|fi| fi.name.as_str()).collect();
+        for fi in &fns {
+            if !fi.is_pub || in_regions(&tregions, fi.kw) {
+                continue;
+            }
+            let Some((open, close)) = fi.body else { continue };
+            if fi.name.ends_with("_serial") {
+                if !test_idents.contains(fi.name.as_str()) && !allowed(allow, "L1", &fi.name) {
+                    out.push(Finding {
+                        rule: "L1",
+                        file: f.rel.clone(),
+                        line: fi.line,
+                        message: format!(
+                            "serial twin `{}` is not referenced from any identity test in rust/tests/",
+                            fi.name
+                        ),
+                    });
+                }
+                continue;
+            }
+            let has_par = toks[open + 1..close.min(toks.len())]
+                .iter()
+                .any(|t| t.kind == TokKind::Ident && L1_PAR_IDENTS.contains(&t.text.as_str()));
+            if !has_par || allowed(allow, "L1", &fi.name) {
+                continue;
+            }
+            let twin = format!("{}_serial", fi.name);
+            if !names.contains(twin.as_str()) {
+                out.push(Finding {
+                    rule: "L1",
+                    file: f.rel.clone(),
+                    line: fi.line,
+                    message: format!("parallel kernel `{}` has no `{twin}` twin", fi.name),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ L2
+
+const L2_BANNED: [&str; 3] = ["log2", "ln", "powf"];
+
+/// L2: no float `log2(`/`ln(`/`powf(` under `rust/src/mx/` — shared
+/// exponents must come from `element::floor_log2` (exact on the f64
+/// exponent field; PR 1 fixed the `log2().floor()` misround).
+pub fn l2(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/mx/")) {
+        let toks = &f.lexed.toks;
+        let tregions = test_regions(toks);
+        for i in 0..toks.len().saturating_sub(1) {
+            if toks[i].kind == TokKind::Ident
+                && L2_BANNED.contains(&toks[i].text.as_str())
+                && is_punct(&toks[i + 1], "(")
+                && !in_regions(&tregions, i)
+                && !allowed(allow, "L2", under_src(&f.rel).unwrap_or(&f.rel))
+            {
+                out.push(Finding {
+                    rule: "L2",
+                    file: f.rel.clone(),
+                    line: toks[i].line,
+                    message: format!(
+                        "`{}(` in MX exponent code — use element::floor_log2 instead",
+                        toks[i].text
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ L3
+
+/// Parse an integer literal's value plus its hex-digit count (0 for
+/// non-hex literals).
+fn int_value(text: &str) -> Option<(u128, usize)> {
+    let mut t = text.replace('_', "");
+    const INT_SUFFIXES: [&str; 12] = [
+        "usize", "isize", "u128", "i128", "u64", "i64", "u32", "i32", "u16", "i16", "u8", "i8",
+    ];
+    for suf in INT_SUFFIXES {
+        if let Some(core) = t.strip_suffix(suf) {
+            if !core.is_empty() {
+                t = core.to_string();
+                break;
+            }
+        }
+    }
+    if let Some(hex) = t.strip_prefix("0x").or_else(|| t.strip_prefix("0X")) {
+        return u128::from_str_radix(hex, 16).ok().map(|v| (v, hex.len()));
+    }
+    if let Some(bin) = t.strip_prefix("0b").or_else(|| t.strip_prefix("0B")) {
+        return u128::from_str_radix(bin, 2).ok().map(|v| (v, 0));
+    }
+    if let Some(oct) = t.strip_prefix("0o").or_else(|| t.strip_prefix("0O")) {
+        return u128::from_str_radix(oct, 8).ok().map(|v| (v, 0));
+    }
+    t.parse::<u128>().ok().map(|v| (v, 0))
+}
+
+/// L3: no magic bit-width literals (4/6/8, or >=8-hex-digit lane masks)
+/// in `mx/packed.rs` outside const tables, tests, and allowlisted fns.
+pub fn l3(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| f.rel == "rust/src/mx/packed.rs") {
+        let toks = &f.lexed.toks;
+        let fns = functions(toks);
+        let tregions = test_regions(toks);
+        let cregions = const_regions(toks);
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != TokKind::Int || in_regions(&tregions, i) || in_regions(&cregions, i) {
+                continue;
+            }
+            let Some((v, hex_digits)) = int_value(&t.text) else { continue };
+            let magic = matches!(v, 4 | 6 | 8) || hex_digits >= 8;
+            if !magic {
+                continue;
+            }
+            let in_allowed_fn = fns.iter().any(|fi| {
+                let end = fi.body.map(|(_, c)| c).unwrap_or(fi.kw);
+                i >= fi.kw && i <= end && allowed(allow, "L3", &fi.name)
+            });
+            if in_allowed_fn {
+                continue;
+            }
+            out.push(Finding {
+                rule: "L3",
+                file: f.rel.clone(),
+                line: t.line,
+                message: format!(
+                    "magic bit-width literal `{}` outside a scheme-constant table — \
+                     derive from ElementFormat::bits()/scheme constants",
+                    t.text
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ L4
+
+const L4_DIRS: [&str; 4] = [
+    "rust/src/fleet/",
+    "rust/src/trainer/",
+    "rust/src/backend/",
+    "rust/src/coordinator/",
+];
+
+/// L4: `.unwrap()`/`.expect(` banned in library code under the training
+/// stack — errors propagate as structured `TrainError`.
+pub fn l4(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| L4_DIRS.iter().any(|d| f.rel.starts_with(d))) {
+        let key = under_src(&f.rel).unwrap_or(&f.rel).to_string();
+        if allowed(allow, "L4", &key) {
+            continue;
+        }
+        let toks = &f.lexed.toks;
+        let tregions = test_regions(toks);
+        for i in 1..toks.len().saturating_sub(1) {
+            if toks[i].kind == TokKind::Ident
+                && (toks[i].text == "unwrap" || toks[i].text == "expect")
+                && is_punct(&toks[i - 1], ".")
+                && is_punct(&toks[i + 1], "(")
+                && !in_regions(&tregions, i)
+            {
+                out.push(Finding {
+                    rule: "L4",
+                    file: f.rel.clone(),
+                    line: toks[i].line,
+                    message: format!(
+                        "`.{}(` in library code — propagate a structured TrainError instead",
+                        toks[i].text
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ L5
+
+const L5_NAMES: [&str; 4] = ["write_bytes", "read_bytes", "to_bytes", "from_bytes"];
+
+/// The committed byte-layout manifest (`rust/lint.manifest`).
+#[derive(Debug, Default, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub entries: Vec<(String, u64)>,
+}
+
+/// Parse `const VERSION: ... = <int>` from `trainer/checkpoint.rs`.
+pub fn checkpoint_version(src: &[SourceFile]) -> u32 {
+    for f in src.iter().filter(|f| f.rel == "rust/src/trainer/checkpoint.rs") {
+        let toks = &f.lexed.toks;
+        for i in 0..toks.len().saturating_sub(1) {
+            if is_ident(&toks[i], "const") && is_ident(&toks[i + 1], "VERSION") {
+                for t in &toks[i + 2..(i + 10).min(toks.len())] {
+                    if t.kind == TokKind::Int {
+                        if let Some((v, _)) = int_value(&t.text) {
+                            return v as u32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    0
+}
+
+/// Discover every byte-layout function and its body token hash, keyed
+/// `path-under-src::name` (duplicate keys get `#2`, `#3`, ... suffixes).
+pub fn layout_hashes(src: &[SourceFile]) -> Vec<(String, u64, u32, String)> {
+    let mut seen: BTreeMap<String, usize> = BTreeMap::new();
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        let toks = &f.lexed.toks;
+        let tregions = test_regions(toks);
+        for fi in functions(toks) {
+            if !L5_NAMES.contains(&fi.name.as_str()) || in_regions(&tregions, fi.kw) {
+                continue;
+            }
+            let Some((open, close)) = fi.body else { continue };
+            let base = format!("{}::{}", under_src(&f.rel).unwrap_or(&f.rel), fi.name);
+            let n = seen.entry(base.clone()).or_insert(0);
+            *n += 1;
+            let key = if *n == 1 { base } else { format!("{base}#{n}") };
+            let hash = token_hash(&toks[open + 1..close.min(toks.len())]);
+            out.push((key, hash, fi.line, f.rel.clone()));
+        }
+    }
+    out
+}
+
+/// L5: fail when a byte-layout body hash drifts from the committed
+/// manifest while the `.mxckpt` `VERSION` constant stays put.
+pub fn l5(src: &[SourceFile], manifest: &Manifest) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let version = checkpoint_version(src);
+    if version != manifest.version {
+        out.push(Finding {
+            rule: "L5",
+            file: "rust/src/trainer/checkpoint.rs".into(),
+            line: 1,
+            message: format!(
+                "rust/lint.manifest records VERSION {} but checkpoint.rs has VERSION {version} — \
+                 run `mxlint --update-manifest` and commit the result",
+                manifest.version
+            ),
+        });
+        return out;
+    }
+    let current = layout_hashes(src);
+    let recorded: BTreeMap<&str, u64> =
+        manifest.entries.iter().map(|(k, h)| (k.as_str(), *h)).collect();
+    for (key, hash, line, rel) in &current {
+        match recorded.get(key.as_str()) {
+            Some(&want) if want != *hash => out.push(Finding {
+                rule: "L5",
+                file: rel.clone(),
+                line: *line,
+                message: format!(
+                    "byte-layout of `{key}` changed ({hash:016x} != manifest {want:016x}) \
+                     without a VERSION bump (still {version}) — bump VERSION in \
+                     trainer/checkpoint.rs and run `mxlint --update-manifest`"
+                ),
+            }),
+            Some(_) => {}
+            None => out.push(Finding {
+                rule: "L5",
+                file: rel.clone(),
+                line: *line,
+                message: format!(
+                    "byte-layout function `{key}` has no entry in rust/lint.manifest — \
+                     run `mxlint --update-manifest`"
+                ),
+            }),
+        }
+    }
+    let current_keys: BTreeSet<&str> = current.iter().map(|(k, ..)| k.as_str()).collect();
+    for (key, _) in &manifest.entries {
+        if !current_keys.contains(key.as_str()) {
+            out.push(Finding {
+                rule: "L5",
+                file: "rust/lint.manifest".into(),
+                line: 1,
+                message: format!(
+                    "manifest entry `{key}` has no matching function — \
+                     run `mxlint --update-manifest`"
+                ),
+            });
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ L6
+
+/// L6: every `results/*.json` writer (a fn calling `save_json`) must
+/// stamp its doc via `bench_doc`/`stamped_doc`.
+pub fn l6(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        let toks = &f.lexed.toks;
+        let tregions = test_regions(toks);
+        for fi in functions(toks) {
+            if in_regions(&tregions, fi.kw) {
+                continue;
+            }
+            let Some((open, close)) = fi.body else { continue };
+            let body = &toks[open + 1..close.min(toks.len())];
+            let calls_save = body.windows(2).any(|w| {
+                w[0].kind == TokKind::Ident && w[0].text == "save_json" && is_punct(&w[1], "(")
+            });
+            if !calls_save {
+                continue;
+            }
+            let stamped = body.iter().any(|t| {
+                t.kind == TokKind::Ident && (t.text == "bench_doc" || t.text == "stamped_doc")
+            });
+            let key = format!("{}::{}", under_src(&f.rel).unwrap_or(&f.rel), fi.name);
+            if !stamped && !allowed(allow, "L6", &key) {
+                out.push(Finding {
+                    rule: "L6",
+                    file: f.rel.clone(),
+                    line: fi.line,
+                    message: format!(
+                        "`{}` writes results JSON without bench_doc/stamped_doc schema stamping",
+                        fi.name
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ L7
+
+/// L7: `unsafe` requires an adjacent `// SAFETY:` comment; files with no
+/// unsafe at all must carry `#![forbid(unsafe_code)]` so future
+/// `std::arch` work opts in explicitly.
+pub fn l7(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        let name = f.rel.rsplit('/').next().unwrap_or(&f.rel);
+        if name == "lib.rs" || name == "main.rs" || name == "mod.rs" || f.rel.contains("/bin/") {
+            continue;
+        }
+        let key = under_src(&f.rel).unwrap_or(&f.rel).to_string();
+        if allowed(allow, "L7", &key) {
+            continue;
+        }
+        let toks = &f.lexed.toks;
+        let unsafe_toks: Vec<&Tok> =
+            toks.iter().filter(|t| t.kind == TokKind::Ident && t.text == "unsafe").collect();
+        if unsafe_toks.is_empty() {
+            let has_forbid = toks.windows(8).any(|w| {
+                is_punct(&w[0], "#")
+                    && is_punct(&w[1], "!")
+                    && is_punct(&w[2], "[")
+                    && is_ident(&w[3], "forbid")
+                    && is_punct(&w[4], "(")
+                    && is_ident(&w[5], "unsafe_code")
+                    && is_punct(&w[6], ")")
+                    && is_punct(&w[7], "]")
+            });
+            if !has_forbid {
+                out.push(Finding {
+                    rule: "L7",
+                    file: f.rel.clone(),
+                    line: 1,
+                    message: "file has no unsafe code — add #![forbid(unsafe_code)] so future \
+                              unsafe must opt in explicitly"
+                        .into(),
+                });
+            }
+        } else {
+            for t in unsafe_toks {
+                let covered = f
+                    .lexed
+                    .safety_lines
+                    .iter()
+                    .any(|&s| s >= t.line.saturating_sub(3) && s <= t.line);
+                if !covered {
+                    out.push(Finding {
+                        rule: "L7",
+                        file: f.rel.clone(),
+                        line: t.line,
+                        message: "`unsafe` without a `// SAFETY:` comment within the 3 lines \
+                                  above it"
+                            .into(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Run every rule and return findings sorted by (file, line, rule).
+pub fn run_all(
+    src: &[SourceFile],
+    tests: &[SourceFile],
+    allow: &Allow,
+    manifest: &Manifest,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(l1(src, tests, allow));
+    out.extend(l2(src, allow));
+    out.extend(l3(src, allow));
+    out.extend(l4(src, allow));
+    out.extend(l5(src, manifest));
+    out.extend(l6(src, allow));
+    out.extend(l7(src, allow));
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
+}

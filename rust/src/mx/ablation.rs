@@ -8,6 +8,8 @@
 //! range better (lower error) but pay more shared-exponent storage and
 //! break MX-standard compatibility below 32 elements.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::block::fake_quant_block_fast;
 use crate::mx::element::ElementFormat;
 use crate::util::mat::Mat;

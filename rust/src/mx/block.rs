@@ -6,6 +6,8 @@
 //! largest power of two representable in the element format — clamped to
 //! E8M0's range. Elements are then encoded as `encode(v / X)`.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::element::{exp2i, floor_log2, ElementFormat};
 
 /// E8M0 scale exponent range. (Code 0xFF is NaN in the spec; we clamp.)

@@ -15,6 +15,8 @@
 //! `E` is the block's shared exponent and `D_i ∈ {0,1}` its subgroup's
 //! micro-exponent.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::block::{SCALE_EMAX, SCALE_EMIN};
 use crate::mx::element::{exp2i, floor_log2, rne};
 use crate::util::mat::Mat;

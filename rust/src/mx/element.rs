@@ -11,6 +11,8 @@
 //! INT8 (the OCP MXINT8 element: implied scale 2^-6, i.e. 1 sign bit,
 //! 1 integer bit, 6 fraction bits).
 
+#![forbid(unsafe_code)]
+
 /// One of the six MX element formats from the paper's Table I.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ElementFormat {

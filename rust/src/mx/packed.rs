@@ -50,6 +50,8 @@
 //! tests assert with `==` on f32 bits — no tolerances anywhere
 //! (`tests/packed.rs`, `tests/backend.rs`).
 
+#![forbid(unsafe_code)]
+
 use crate::mx::block::shared_exponent;
 use crate::mx::element::{exp2i, ElementFormat};
 use crate::mx::tensor::{Layout, MxTensor, SQ, SQ_ELEMS};
@@ -106,11 +108,10 @@ pub fn dot8_i8(a: u64, b: u64) -> i32 {
 /// Scalar reference for [`dot8_i8`] — the oracle the SWAR kernel is
 /// tested against (exhaustive boundary grids in the module tests).
 pub fn dot8_i8_scalar(a: u64, b: u64) -> i32 {
+    let (ab, bb) = (a.to_le_bytes(), b.to_le_bytes());
     let mut s = 0i32;
-    for k in 0..8 {
-        let av = (a >> (8 * k)) as u8 as i8 as i32;
-        let bv = (b >> (8 * k)) as u8 as i8 as i32;
-        s += av * bv;
+    for k in 0..SQ {
+        s += (ab[k] as i8 as i32) * (bb[k] as i8 as i32);
     }
     s
 }
@@ -458,16 +459,16 @@ impl PackedTensor {
 
     /// Packed storage footprint in bytes (lanes + scale bytes).
     pub fn storage_bytes(&self) -> usize {
-        self.lanes.len() * 8 + self.scales.len()
+        self.lanes.len() * std::mem::size_of::<u64>() + self.scales.len()
     }
 }
 
 /// Transpose one tile's lanes (rows become columns). 8-bit codes take
 /// the SWAR byte-matrix path; narrower widths repack through code
 /// extraction.
-fn tile_transposed(tile: &[u64], w: u32) -> [u64; 8] {
+fn tile_transposed(tile: &[u64], w: u32) -> [u64; SQ] {
     let mut t = [0u64; SQ];
-    if w == 8 {
+    if w == u8::BITS {
         t.copy_from_slice(tile);
         transpose8x8_bytes(&mut t);
     } else {
@@ -490,19 +491,19 @@ fn lane_partial(fmt: ElementFormat, a: u64, b: u64, scale: f64) -> f32 {
     match fmt {
         ElementFormat::Int8 => (dot8_i8(a, b) as f64 * scale) as f32,
         ElementFormat::E2M1 => {
-            let pair = e2m1_pair_lut();
+            let (pair, w) = (e2m1_pair_lut(), fmt.bits());
             let mut s = 0i32;
             for k in 0..SQ {
-                let idx = (lane_code(a, k, 4) << 4) | lane_code(b, k, 4);
+                let idx = (lane_code(a, k, w) << w) | lane_code(b, k, w);
                 s += pair[idx];
             }
             (s as f64 * scale) as f32
         }
         ElementFormat::E5M2 => {
-            let vals = val_lut(fmt);
+            let (vals, w) = (val_lut(fmt), fmt.bits());
             let mut p = 0.0f64;
             for k in 0..SQ {
-                p += vals[lane_code(a, k, 8)] * vals[lane_code(b, k, 8)];
+                p += vals[lane_code(a, k, w)] * vals[lane_code(b, k, w)];
             }
             (p * scale) as f32
         }
@@ -532,29 +533,29 @@ fn tile_partials(fmt: ElementFormat, a: &[u64], bk: &[u64], scale: f64, acc: &mu
             }
         }
         ElementFormat::E2M1 => {
-            let pair = e2m1_pair_lut();
+            let (pair, w) = (e2m1_pair_lut(), fmt.bits());
             for i in 0..SQ {
                 let al = a[i];
                 for j in 0..SQ {
                     let bl = bk[j];
                     let mut s = 0i32;
                     for k in 0..SQ {
-                        s += pair[(lane_code(al, k, 4) << 4) | lane_code(bl, k, 4)];
+                        s += pair[(lane_code(al, k, w) << w) | lane_code(bl, k, w)];
                     }
                     acc[i * SQ + j] += (s as f64 * scale) as f32;
                 }
             }
         }
         ElementFormat::E5M2 => {
-            let vals = val_lut(fmt);
+            let (vals, w) = (val_lut(fmt), fmt.bits());
             // pre-decode both tiles once; the chain itself must stay in
             // ascending-k order (f64 rounding order is the contract)
             let mut ad = [[0.0f64; SQ]; SQ];
             let mut bd = [[0.0f64; SQ]; SQ];
             for i in 0..SQ {
                 for k in 0..SQ {
-                    ad[i][k] = vals[lane_code(a[i], k, 8)];
-                    bd[i][k] = vals[lane_code(bk[i], k, 8)];
+                    ad[i][k] = vals[lane_code(a[i], k, w)];
+                    bd[i][k] = vals[lane_code(bk[i], k, w)];
                 }
             }
             for i in 0..SQ {

@@ -9,6 +9,8 @@
 //! passes bit-identically. `MxTensor::transpose` implements exactly that,
 //! and the test suite asserts the bit-identity claim.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::block::{quantize_block, ScaledBlock};
 use crate::mx::element::ElementFormat;
 use crate::util::bytes::{ByteReader, ByteWriter};

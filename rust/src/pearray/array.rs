@@ -8,6 +8,8 @@
 //! exponents are combined at PE level and applied inside each MAC's
 //! accumulation step, exactly as the paper describes.
 
+#![forbid(unsafe_code)]
+
 use crate::arith::{Events, MacUnit, MacVariant, Mode};
 use crate::mx::block::ScaledBlock;
 use crate::mx::element::ElementFormat;

@@ -13,6 +13,8 @@
 //! fake-quantization (Fig. 8); this module provides the cycle/energy
 //! side. Calibration notes live in `crate::energy::calib`.
 
+#![forbid(unsafe_code)]
+
 use crate::mx::dacapo::DacapoFormat;
 
 /// Weight-stationary systolic array geometry.

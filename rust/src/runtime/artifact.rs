@@ -1,5 +1,7 @@
 //! Artifact locations and the build manifest.
 
+#![forbid(unsafe_code)]
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

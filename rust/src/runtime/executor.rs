@@ -14,6 +14,8 @@
 //! caller can compile and skip gracefully when the runtime is
 //! unavailable.
 
+#![forbid(unsafe_code)]
+
 #[cfg(feature = "xla-sys")]
 mod pjrt {
     use std::path::Path;

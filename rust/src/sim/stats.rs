@@ -1,5 +1,7 @@
 //! Simple running statistics (mean/min/max) for benchmark harnesses.
 
+#![forbid(unsafe_code)]
+
 /// Online mean/min/max/count accumulator.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Stats {

@@ -23,11 +23,12 @@
 //! owns its backend (and cost ledger), and the equivalence contract
 //! guarantees the losses don't depend on the choice.
 
+#![forbid(unsafe_code)]
+
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainSession};
 use crate::util::par;
 use crate::workloads::Dataset;
-use std::sync::Mutex;
 
 /// One unit of batched work: a labelled training run.
 #[derive(Debug, Clone)]
@@ -70,10 +71,9 @@ impl BatchedTrainer {
     /// Run every queued job to its configured step budget, one worker
     /// per core, returning outcomes in submission order.
     pub fn run(self) -> Vec<TrainOutcome> {
-        let slots: Vec<Mutex<Option<TrainJob>>> =
-            self.jobs.into_iter().map(|j| Mutex::new(Some(j))).collect();
-        par::par_map(slots.len(), 1, |i| {
-            let job = slots[i].lock().unwrap().take().expect("each job runs exactly once");
+        let jobs = self.jobs;
+        par::par_map(jobs.len(), 1, |i| {
+            let job = jobs[i].clone();
             let mut session = TrainSession::new(job.dataset, job.config);
             session.run();
             TrainOutcome { label: job.label, session }

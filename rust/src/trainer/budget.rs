@@ -8,6 +8,8 @@
 //! Fig. 8 (left) effect. Under an energy budget the two are comparable —
 //! Fig. 8 (right).
 
+#![forbid(unsafe_code)]
+
 use crate::energy::EnergyModel;
 use crate::gemmcore::schedule::{train_step_cycles, PUSHER_DIMS};
 use crate::pearray::SystolicArray;

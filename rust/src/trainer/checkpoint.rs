@@ -29,6 +29,8 @@
 //! account energy across resumes carry the ledger themselves, as
 //! [`crate::fleet::FleetSession::hw_measured_uj`] does.
 
+#![forbid(unsafe_code)]
+
 use crate::backend::BackendKind;
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
@@ -146,9 +148,11 @@ fn read_curve(r: &mut ByteReader<'_>) -> Result<Vec<(usize, f64)>, String> {
 }
 
 impl Checkpoint {
-    /// Layer dims of the checkpointed MLP.
+    /// Layer dims of the checkpointed MLP. `save_checkpoint` always
+    /// stores concrete dims; a hand-built checkpoint with `dims: None`
+    /// serializes an empty dims list, which `from_bytes` rejects.
     pub fn dims(&self) -> &[usize] {
-        self.config.dims.as_deref().expect("checkpoint always stores concrete dims")
+        self.config.dims.as_deref().unwrap_or(&[])
     }
 
     /// Bytes of the MX weight image alone (scale bytes + packed element

@@ -4,6 +4,8 @@
 //! output width 32, hidden width 256, ReLU activations, MSE loss on
 //! normalized delta-state targets.
 
+#![forbid(unsafe_code)]
+
 use crate::backend::{ExecBackend, HookBackend};
 use crate::util::mat::Mat;
 use crate::util::rng::Pcg64;
@@ -95,7 +97,8 @@ impl Mlp {
             activations.push(aq);
             pre_acts.push(z);
         }
-        Tape { output: pre_acts.last().unwrap().clone(), activations, pre_acts }
+        let output = pre_acts.last().cloned().unwrap_or_else(|| x.clone());
+        Tape { output, activations, pre_acts }
     }
 
     /// Forward pass through possibly-transformed weights/activations.

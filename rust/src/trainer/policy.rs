@@ -28,6 +28,8 @@
 //!   cheaper steps) while training is stable, *promotes* it (finer
 //!   format) when the loss spikes or diverges.
 
+#![forbid(unsafe_code)]
+
 use crate::backend::BackendKind;
 use crate::trainer::qat::QuantScheme;
 

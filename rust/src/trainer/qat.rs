@@ -7,6 +7,8 @@
 //! activations entering each GeMM, and backprop errors entering the
 //! error/weight-gradient GeMMs — with FP32 master weights (standard QAT).
 
+#![forbid(unsafe_code)]
+
 use crate::backend::{ExecBackend, FakeQuantBackend};
 use crate::mx::dacapo::{DacapoFormat, DacapoTensor};
 use crate::mx::element::ElementFormat;

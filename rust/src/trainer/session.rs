@@ -1,6 +1,8 @@
 //! Training sessions: dataset + model + scheme + backend -> loss curves
 //! (and, on the hardware backend, a per-session cost report).
 
+#![forbid(unsafe_code)]
+
 use crate::backend::{make_backend, BackendKind, ExecBackend, HwCostReport};
 use crate::gemmcore::memory::{footprint_ours, MlpShape};
 use crate::trainer::checkpoint::{weight_payload, Checkpoint};
@@ -116,7 +118,7 @@ impl TrainSession {
         if dims.contains(&0) {
             return Err(TrainError::BadDims { dims, reason: "zero-width layer".into() });
         }
-        let (din, dout) = (dims[0], *dims.last().unwrap());
+        let (din, dout) = (dims[0], dims[dims.len() - 1]);
         if din != dataset.train_x.cols || dout != dataset.train_y.cols {
             let reason = format!(
                 "dataset `{}` feeds {}-wide inputs and {}-wide targets",
@@ -241,9 +243,14 @@ impl TrainSession {
     }
 
     /// Run to the configured step budget (no precision transitions).
+    /// Equivalent to `run_with_policy(Static)`, inlined so the
+    /// infallible path stays infallible.
     pub fn run(&mut self) {
-        self.run_with_policy(&mut PrecisionPolicy::Static)
-            .expect("the static policy never transitions, so it can never fail");
+        while self.step < self.config.steps {
+            self.step_once();
+        }
+        let v = self.val_loss();
+        self.val_curve.push((self.step, v));
     }
 
     /// Quantized validation loss over the held-out split. Evaluation

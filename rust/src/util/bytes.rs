@@ -13,6 +13,8 @@
 //! what makes save/resume training indistinguishable from an
 //! uninterrupted run (asserted by `tests/checkpoint.rs`).
 
+#![forbid(unsafe_code)]
+
 /// Append-only little-endian byte buffer.
 #[derive(Debug, Default)]
 pub struct ByteWriter {

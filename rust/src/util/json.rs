@@ -7,6 +7,8 @@
 //! suite to load committed golden-vector files and by tests that
 //! inspect report documents structurally instead of by substring.
 
+#![forbid(unsafe_code)]
+
 use std::fmt::Write as _;
 
 /// A JSON value builder.
@@ -100,7 +102,7 @@ impl Json {
     /// test vectors: rejects trailing garbage, unterminated strings,
     /// bad escapes, and malformed numbers with a byte offset.
     pub fn parse(text: &str) -> Result<Json, String> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -201,13 +203,32 @@ impl Json {
     }
 }
 
+/// Maximum array/object nesting depth [`Json::parse`] accepts. The
+/// reader recurses once per level, so without a cap a pathological
+/// `[[[[...` golden/report file overflows the thread stack; 128 levels
+/// is far beyond any document this crate emits.
+const MAX_DEPTH: usize = 128;
+
 /// Recursive-descent JSON reader over raw bytes.
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl Parser<'_> {
+    fn enter(&mut self) -> Result<(), String> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(format!("nesting depth {MAX_DEPTH} exceeded at byte {}", self.pos));
+        }
+        Ok(())
+    }
+
+    fn leave(&mut self) {
+        self.depth -= 1;
+    }
+
     fn skip_ws(&mut self) {
         while let Some(&b) = self.bytes.get(self.pos) {
             if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
@@ -256,10 +277,12 @@ impl Parser<'_> {
 
     fn array(&mut self) -> Result<Json, String> {
         self.eat(b'[')?;
+        self.enter()?;
         let mut xs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.leave();
             return Ok(Json::Arr(xs));
         }
         loop {
@@ -270,6 +293,7 @@ impl Parser<'_> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.leave();
                     return Ok(Json::Arr(xs));
                 }
                 _ => return Err(format!("expected `,` or `]` at byte {}", self.pos)),
@@ -279,10 +303,12 @@ impl Parser<'_> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.eat(b'{')?;
+        self.enter()?;
         let mut kv = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.leave();
             return Ok(Json::Obj(kv));
         }
         loop {
@@ -295,11 +321,12 @@ impl Parser<'_> {
             kv.push((key, val));
             self.skip_ws();
             match self.peek() {
-                Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.leave();
                     return Ok(Json::Obj(kv));
                 }
+                Some(b',') => self.pos += 1,
                 _ => return Err(format!("expected `,` or `}}` at byte {}", self.pos)),
             }
         }
@@ -513,6 +540,20 @@ mod tests {
         assert_eq!(Json::parse("1e-40").unwrap().as_f64(), Some(1e-40));
         assert_eq!(Json::parse(r#""A\t""#).unwrap().as_str(), Some("A\t"));
         assert_eq!(Json::parse("\"caf\u{e9}\"").unwrap().as_str(), Some("caf\u{e9}"));
+    }
+
+    #[test]
+    fn parse_caps_nesting_depth() {
+        // far past the limit: must be a structured error, not a stack
+        // overflow
+        let deep = "[".repeat(4000) + &"]".repeat(4000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting depth"), "{err}");
+        let hostile = format!("{{\"a\": {}1{}}}", "[".repeat(4000), "]".repeat(4000));
+        assert!(Json::parse(&hostile).unwrap_err().contains("nesting depth"));
+        // well-formed documents inside the limit still parse
+        let ok = "[".repeat(64) + &"]".repeat(64);
+        assert!(Json::parse(&ok).is_ok());
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! trainer, the MX quantizers, and the hardware simulators. Deliberately
 //! minimal — just what GeMM-shaped training needs.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Pcg64;
 
 /// Output-row band size for the parallel GeMM kernels: fork over
@@ -284,6 +286,198 @@ impl Mat {
         let orows = self.cols;
         let band = par_band_rows(orows, orows * k_len * ocols);
         crate::util::par::par_chunks_mut(&mut out.data, band * ocols, 2, |ci, rows| {
+            let r0 = ci * band;
+            let mut acc = vec![0.0f64; ocols];
+            for (dr, dst) in rows.chunks_mut(ocols).enumerate() {
+                let i = r0 + dr; // output row i = column i of self
+                let mut k0 = 0;
+                while k0 < k_len {
+                    let kend = (k0 + chunk).min(k_len);
+                    acc.fill(0.0);
+                    for k in k0..kend {
+                        let a = self.data[k * self.cols + i];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let a = a as f64;
+                        let orow = &other.data[k * ocols..(k + 1) * ocols];
+                        for (d, &b) in acc.iter_mut().zip(orow) {
+                            *d += a * b as f64;
+                        }
+                    }
+                    for (d, &p) in dst.iter_mut().zip(acc.iter()) {
+                        *d += p as f32;
+                    }
+                    k0 = kend;
+                }
+            }
+        });
+        out
+    }
+
+    /// Serial twin of [`Mat::matmul`]: same setup, same per-band loop
+    /// body, run through [`crate::util::par::par_chunks_mut_serial`] —
+    /// bit-identical by construction (`tests/parallel.rs`).
+    pub fn matmul_serial(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let (cols, ocols) = (self.cols, other.cols);
+        let band = par_band_rows(self.rows, self.rows * cols * ocols);
+        crate::util::par::par_chunks_mut_serial(&mut out.data, band * ocols, |ci, chunk| {
+            let r0 = ci * band;
+            for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
+                let r = r0 + dr;
+                for k in 0..cols {
+                    let a = self.data[r * cols + k];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &other.data[k * ocols..(k + 1) * ocols];
+                    for (d, &b) in dst.iter_mut().zip(orow) {
+                        *d += a * b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Serial twin of [`Mat::matmul_nt`] (see [`Mat::matmul_serial`]).
+    pub fn matmul_nt_serial(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "inner dims mismatch");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        let (k_len, ocols) = (self.cols, other.rows);
+        let band = par_band_rows(self.rows, self.rows * k_len * ocols);
+        crate::util::par::par_chunks_mut_serial(&mut out.data, band * ocols, |ci, chunk| {
+            let r0 = ci * band;
+            for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
+                let arow = &self.data[(r0 + dr) * k_len..(r0 + dr + 1) * k_len];
+                for (j, d) in dst.iter_mut().enumerate() {
+                    let brow = &other.data[j * k_len..(j + 1) * k_len];
+                    let mut s = 0.0f32;
+                    for (k, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        s += a * brow[k];
+                    }
+                    *d = s;
+                }
+            }
+        });
+        out
+    }
+
+    /// Serial twin of [`Mat::matmul_tn`] (see [`Mat::matmul_serial`]).
+    pub fn matmul_tn_serial(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "inner dims mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let (k_len, ocols) = (self.rows, other.cols);
+        let orows = self.cols;
+        let band = par_band_rows(orows, orows * k_len * ocols);
+        crate::util::par::par_chunks_mut_serial(&mut out.data, band * ocols, |ci, chunk| {
+            let r0 = ci * band;
+            for (dr, dst) in chunk.chunks_mut(ocols).enumerate() {
+                let i = r0 + dr; // output row i = column i of self
+                for k in 0..k_len {
+                    let a = self.data[k * self.cols + i];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let orow = &other.data[k * ocols..(k + 1) * ocols];
+                    for (d, &b) in dst.iter_mut().zip(orow) {
+                        *d += a * b;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// Serial twin of [`Mat::matmul_blocked`] (see
+    /// [`Mat::matmul_serial`]).
+    pub fn matmul_blocked_serial(&self, other: &Mat, chunk: usize) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims mismatch");
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let (k_len, ocols) = (self.cols, other.cols);
+        let band = par_band_rows(self.rows, self.rows * k_len * ocols);
+        crate::util::par::par_chunks_mut_serial(&mut out.data, band * ocols, |ci, rows| {
+            let r0 = ci * band;
+            let mut acc = vec![0.0f64; ocols];
+            for (dr, dst) in rows.chunks_mut(ocols).enumerate() {
+                let r = r0 + dr;
+                let mut k0 = 0;
+                while k0 < k_len {
+                    let kend = (k0 + chunk).min(k_len);
+                    acc.fill(0.0);
+                    for k in k0..kend {
+                        let a = self.data[r * k_len + k];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let a = a as f64;
+                        let orow = &other.data[k * ocols..(k + 1) * ocols];
+                        for (d, &b) in acc.iter_mut().zip(orow) {
+                            *d += a * b as f64;
+                        }
+                    }
+                    for (d, &p) in dst.iter_mut().zip(acc.iter()) {
+                        *d += p as f32;
+                    }
+                    k0 = kend;
+                }
+            }
+        });
+        out
+    }
+
+    /// Serial twin of [`Mat::matmul_blocked_nt`] (see
+    /// [`Mat::matmul_serial`]).
+    pub fn matmul_blocked_nt_serial(&self, other: &Mat, chunk: usize) -> Mat {
+        assert_eq!(self.cols, other.cols, "inner dims mismatch");
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(self.rows, other.rows);
+        let (k_len, ocols) = (self.cols, other.rows);
+        let band = par_band_rows(self.rows, self.rows * k_len * ocols);
+        crate::util::par::par_chunks_mut_serial(&mut out.data, band * ocols, |ci, rows| {
+            let r0 = ci * band;
+            for (dr, dst) in rows.chunks_mut(ocols).enumerate() {
+                let arow = &self.data[(r0 + dr) * k_len..(r0 + dr + 1) * k_len];
+                for (j, d) in dst.iter_mut().enumerate() {
+                    let brow = &other.data[j * k_len..(j + 1) * k_len];
+                    let mut s = 0.0f32;
+                    let mut k0 = 0;
+                    while k0 < k_len {
+                        let kend = (k0 + chunk).min(k_len);
+                        let mut p = 0.0f64;
+                        for k in k0..kend {
+                            let a = arow[k];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            p += a as f64 * brow[k] as f64;
+                        }
+                        s += p as f32;
+                        k0 = kend;
+                    }
+                    *d = s;
+                }
+            }
+        });
+        out
+    }
+
+    /// Serial twin of [`Mat::matmul_blocked_tn`] (see
+    /// [`Mat::matmul_serial`]).
+    pub fn matmul_blocked_tn_serial(&self, other: &Mat, chunk: usize) -> Mat {
+        assert_eq!(self.rows, other.rows, "inner dims mismatch");
+        let chunk = chunk.max(1);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let (k_len, ocols) = (self.rows, other.cols);
+        let orows = self.cols;
+        let band = par_band_rows(orows, orows * k_len * ocols);
+        crate::util::par::par_chunks_mut_serial(&mut out.data, band * ocols, |ci, rows| {
             let r0 = ci * band;
             let mut acc = vec![0.0f64; ocols];
             for (dr, dst) in rows.chunks_mut(ocols).enumerate() {

@@ -26,6 +26,8 @@
 //! [`crate::trainer::batched::BatchedTrainer`]) composes with
 //! block-level parallelism without oversubscribing the machine.
 
+#![forbid(unsafe_code)]
+
 use std::cell::Cell;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -65,6 +67,13 @@ fn enter_pool() {
     IN_POOL.with(|c| c.set(true));
 }
 
+/// The serial reference for [`par_map`]: a plain in-order map. The
+/// parallel path degrades to exactly this loop, so the two are
+/// bit-identical by construction (`tests/parallel.rs` asserts it).
+pub fn par_map_serial<T>(n: usize, f: impl Fn(usize) -> T) -> Vec<T> {
+    (0..n).map(f).collect()
+}
+
 /// Map `f` over `0..n`, returning results in index order.
 ///
 /// Runs serially when `n < min_par`, when only one worker thread is
@@ -82,7 +91,7 @@ where
     }
     let nt = threads();
     if nt <= 1 || n < min_par.max(2) || in_parallel_region() {
-        return (0..n).map(f).collect();
+        return par_map_serial(n, f);
     }
     let workers = nt.min(n);
     // ~4 chunks per worker: coarse enough to amortize the grab, fine
@@ -140,9 +149,7 @@ where
     let n_chunks = data.len().div_ceil(chunk_len);
     let nt = threads();
     if nt <= 1 || n_chunks < min_par_chunks.max(2) || in_parallel_region() {
-        for (i, c) in data.chunks_mut(chunk_len).enumerate() {
-            f(i, c);
-        }
+        par_chunks_mut_serial(data, chunk_len, f);
         return;
     }
     let workers = nt.min(n_chunks);
@@ -168,6 +175,16 @@ where
             }
         }
     });
+}
+
+/// The serial reference for [`par_chunks_mut`]: in-order chunk
+/// processing on the calling thread — exactly the loop the parallel
+/// path degrades to, so the twins are bit-identical by construction.
+pub fn par_chunks_mut_serial<T>(data: &mut [T], chunk_len: usize, f: impl Fn(usize, &mut [T])) {
+    let chunk_len = chunk_len.max(1);
+    for (i, c) in data.chunks_mut(chunk_len).enumerate() {
+        f(i, c);
+    }
 }
 
 #[cfg(test)]

@@ -6,6 +6,8 @@
 //! 128/64 variant (O'Neill 2014), the same generator `rand_pcg::Pcg64`
 //! uses, without depending on the `rand` ecosystem (unavailable offline).
 
+#![forbid(unsafe_code)]
+
 /// PCG XSL-RR 128/64 generator.
 #[derive(Debug, Clone)]
 pub struct Pcg64 {

@@ -4,6 +4,8 @@
 //! action), integrated with semi-implicit Euler substeps. State:
 //! `[x, x_dot, theta, theta_dot]`, action: horizontal force.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Pcg64;
 use crate::workloads::env::{substep, Env};
 

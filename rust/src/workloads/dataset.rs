@@ -5,6 +5,8 @@
 //! normalizes and packs them into the 32-wide input / 32-wide output
 //! layout of the paper's 4-layer MLP (extra dimensions zero-padded).
 
+#![forbid(unsafe_code)]
+
 use crate::util::mat::Mat;
 use crate::util::rng::Pcg64;
 use crate::workloads::env::Env;

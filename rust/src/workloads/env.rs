@@ -1,5 +1,7 @@
 //! The dynamics-environment trait.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Pcg64;
 
 /// A continuous-control environment whose dynamics an MLP learns to

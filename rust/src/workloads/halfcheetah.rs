@@ -9,6 +9,8 @@
 //! coupled — the property that makes halfcheetah the heaviest of the four
 //! fits. Substitution documented in DESIGN.md §2.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Pcg64;
 use crate::workloads::env::{substep, Env};
 

@@ -8,6 +8,8 @@
 //! hardest of the four dynamics to fit — mirroring the paper's finding
 //! that pusher benefits from FP precision (MXFP8 E4M3 wins on it).
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Pcg64;
 use crate::workloads::env::{substep, Env};
 use crate::workloads::reacher::Reacher;

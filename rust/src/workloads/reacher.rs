@@ -6,6 +6,8 @@
 //! decoupled-inertia model with centripetal coupling — smooth, nonlinear,
 //! and representative of the paper's reacher dynamics-learning task.
 
+#![forbid(unsafe_code)]
+
 use crate::util::rng::Pcg64;
 use crate::workloads::env::{substep, Env};
 

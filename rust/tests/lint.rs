@@ -1,0 +1,295 @@
+//! mxlint fixture and self-run tests (DESIGN.md §9).
+//!
+//! Each rule L1–L7 gets a known-bad snippet from `lint_fixtures/` that
+//! must fire, plus a negative case that must not. The self-run tests
+//! then hold the real tree to the same standard: HEAD lints clean, the
+//! committed byte-layout manifest is current (which also cross-checks
+//! the Rust lexer against the `ci/mxlint_mirror.py` port that generated
+//! it), and the allowlist contains exactly the reviewed entries.
+
+use std::path::PathBuf;
+
+use mxscale::lint::{self, lex, rules, Allow, Manifest, SourceFile};
+
+fn sf(rel: &str, text: &str) -> SourceFile {
+    SourceFile { rel: rel.to_string(), lexed: lex::lex(text.as_bytes()) }
+}
+
+fn no_allow() -> Allow {
+    Allow::new()
+}
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).parent().expect("crate has a parent dir").into()
+}
+
+fn read(path: PathBuf) -> String {
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("reading {}: {e}", path.display()))
+}
+
+// ---------------------------------------------------------------- L1
+
+#[test]
+fn l1_flags_kernel_without_serial_twin() {
+    let src = [sf("rust/src/util/mat.rs", include_str!("lint_fixtures/l1_no_serial_twin.rs"))];
+    let f = rules::l1(&src, &[], &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L1", 5));
+    assert!(f[0].message.contains("has no `scaled_sum_serial` twin"), "{}", f[0].message);
+}
+
+#[test]
+fn l1_flags_serial_twin_unreferenced_by_tests() {
+    let src =
+        [sf("rust/src/util/mat.rs", include_str!("lint_fixtures/l1_unreferenced_serial.rs"))];
+    let f = rules::l1(&src, &[], &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L1", 4));
+    assert!(
+        f[0].message.contains("is not referenced from any identity test"),
+        "{}",
+        f[0].message
+    );
+}
+
+#[test]
+fn l1_accepts_referenced_serial_twin() {
+    let src =
+        [sf("rust/src/util/mat.rs", include_str!("lint_fixtures/l1_unreferenced_serial.rs"))];
+    let tests = [sf("rust/tests/parallel.rs", "fn t() { orphan_kernel_serial(3); }")];
+    assert!(rules::l1(&src, &tests, &no_allow()).is_empty());
+}
+
+#[test]
+fn l1_ignores_files_outside_scope() {
+    let src = [sf("rust/src/energy/model.rs", include_str!("lint_fixtures/l1_no_serial_twin.rs"))];
+    assert!(rules::l1(&src, &[], &no_allow()).is_empty());
+}
+
+// ---------------------------------------------------------------- L2
+
+#[test]
+fn l2_flags_float_log_in_mx_code() {
+    let src = [sf("rust/src/mx/block.rs", include_str!("lint_fixtures/l2_float_log.rs"))];
+    let f = rules::l2(&src, &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L2", 6));
+    assert!(f[0].message.contains("`log2(`"), "{}", f[0].message);
+    assert!(f[0].message.contains("floor_log2"), "{}", f[0].message);
+}
+
+#[test]
+fn l2_scope_is_mx_only() {
+    let src = [sf("rust/src/trainer/mlp.rs", include_str!("lint_fixtures/l2_float_log.rs"))];
+    assert!(rules::l2(&src, &no_allow()).is_empty());
+}
+
+// ---------------------------------------------------------------- L3
+
+#[test]
+fn l3_flags_magic_widths_and_lane_masks() {
+    let src = [sf("rust/src/mx/packed.rs", include_str!("lint_fixtures/l3_magic_width.rs"))];
+    let f = rules::l3(&src, &no_allow());
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L3", 6));
+    assert!(f[0].message.contains("magic bit-width literal `4`"), "{}", f[0].message);
+    assert_eq!(f[1].line, 7);
+    assert!(f[1].message.contains("0x0101_0101_0101_0101"), "{}", f[1].message);
+}
+
+#[test]
+fn l3_exempts_const_tables() {
+    let src = [sf("rust/src/mx/packed.rs", "const LANES: usize = 8;\n")];
+    assert!(rules::l3(&src, &no_allow()).is_empty());
+}
+
+// ---------------------------------------------------------------- L4
+
+#[test]
+fn l4_flags_unwrap_in_library_code() {
+    let src = [sf("rust/src/trainer/session.rs", include_str!("lint_fixtures/l4_unwrap.rs"))];
+    let f = rules::l4(&src, &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L4", 5));
+    assert!(f[0].message.contains("`.unwrap(`"), "{}", f[0].message);
+    assert!(f[0].message.contains("TrainError"), "{}", f[0].message);
+}
+
+#[test]
+fn l4_exempts_test_modules() {
+    let snippet = "#[cfg(test)]\nmod tests {\n    fn f() {\n        g().unwrap();\n    }\n}\n";
+    let src = [sf("rust/src/trainer/session.rs", snippet)];
+    assert!(rules::l4(&src, &no_allow()).is_empty());
+}
+
+// ---------------------------------------------------------------- L5
+
+fn l5_fixture_src() -> Vec<SourceFile> {
+    vec![sf("rust/src/trainer/checkpoint.rs", include_str!("lint_fixtures/l5_layout.rs"))]
+}
+
+#[test]
+fn l5_flags_layout_drift_without_version_bump() {
+    let src = l5_fixture_src();
+    let m = Manifest {
+        version: 2,
+        entries: vec![("trainer/checkpoint.rs::to_bytes".into(), 0xdead)],
+    };
+    let f = rules::l5(&src, &m);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "L5");
+    assert!(f[0].message.contains("without a VERSION bump (still 2)"), "{}", f[0].message);
+}
+
+#[test]
+fn l5_flags_stale_manifest_version() {
+    let f = rules::l5(&l5_fixture_src(), &Manifest { version: 3, entries: vec![] });
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(
+        f[0].message.contains("records VERSION 3 but checkpoint.rs has VERSION 2"),
+        "{}",
+        f[0].message
+    );
+}
+
+#[test]
+fn l5_accepts_matching_hash_and_version() {
+    let src = l5_fixture_src();
+    let m = lint::current_manifest(&src);
+    assert!(rules::l5(&src, &m).is_empty());
+}
+
+/// The acceptance check for the whole rule: seed a body edit into the
+/// *real* `trainer/checkpoint.rs` without bumping `VERSION` and assert
+/// the committed manifest catches it.
+#[test]
+fn l5_catches_seeded_drift_in_real_checkpoint() {
+    let root = repo_root();
+    let text = read(root.join("rust/src/trainer/checkpoint.rs"));
+    let marker = "pub fn to_bytes(&self) -> Vec<u8> {";
+    let seeded = text.replacen(marker, "pub fn to_bytes(&self) -> Vec<u8> { let _seeded = 1;", 1);
+    assert_ne!(seeded, text, "to_bytes marker not found; update this test");
+    let (mut src, _tests) = lint::collect_sources(&root).expect("collect sources");
+    for f in &mut src {
+        if f.rel == "rust/src/trainer/checkpoint.rs" {
+            *f = sf("rust/src/trainer/checkpoint.rs", &seeded);
+        }
+    }
+    let manifest = lint::parse_manifest(&read(root.join("rust/lint.manifest"))).expect("manifest");
+    let f = rules::l5(&src, &manifest);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("trainer/checkpoint.rs::to_bytes"), "{}", f[0].message);
+    assert!(f[0].message.contains("without a VERSION bump"), "{}", f[0].message);
+}
+
+// ---------------------------------------------------------------- L6
+
+#[test]
+fn l6_flags_unstamped_results_writer() {
+    let fixture = include_str!("lint_fixtures/l6_unstamped_writer.rs");
+    let src = [sf("rust/src/coordinator/report.rs", fixture)];
+    let f = rules::l6(&src, &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L6", 5));
+    assert!(f[0].message.contains("`save_run` writes results JSON"), "{}", f[0].message);
+}
+
+#[test]
+fn l6_accepts_stamped_writer() {
+    let snippet = "pub fn save_run() {\n    let doc = stamped_doc(\"run\");\n    \
+                   save_json(&doc, \"run\");\n}\n";
+    let src = [sf("rust/src/coordinator/report.rs", snippet)];
+    assert!(rules::l6(&src, &no_allow()).is_empty());
+}
+
+// ---------------------------------------------------------------- L7
+
+#[test]
+fn l7_flags_missing_forbid() {
+    let src = [sf("rust/src/mx/block.rs", include_str!("lint_fixtures/l7_missing_forbid.rs"))];
+    let f = rules::l7(&src, &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L7", 1));
+    assert!(f[0].message.contains("#![forbid(unsafe_code)]"), "{}", f[0].message);
+}
+
+#[test]
+fn l7_flags_unsafe_without_safety_comment() {
+    let src = [sf("rust/src/mx/block.rs", include_str!("lint_fixtures/l7_unsafe_no_safety.rs"))];
+    let f = rules::l7(&src, &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L7", 6));
+    assert!(f[0].message.contains("SAFETY"), "{}", f[0].message);
+}
+
+#[test]
+fn l7_accepts_unsafe_with_adjacent_safety_comment() {
+    let snippet = "pub fn first(v: &[u8]) -> u8 {\n    // SAFETY: caller guarantees non-empty\n    \
+                   unsafe { *v.get_unchecked(0) }\n}\n";
+    let src = [sf("rust/src/mx/block.rs", snippet)];
+    assert!(rules::l7(&src, &no_allow()).is_empty());
+}
+
+// ------------------------------------------------------------ self-run
+
+/// HEAD must lint clean under the committed allowlist and manifest —
+/// the same invariant the CI `lint` job enforces with the binary.
+#[test]
+fn self_run_is_clean_on_head() {
+    let root = repo_root();
+    let (src, tests) = lint::collect_sources(&root).expect("collect sources");
+    let cfg = lint::parse_config(&read(root.join("rust/lint.toml"))).expect("lint.toml");
+    let manifest = lint::parse_manifest(&read(root.join("rust/lint.manifest"))).expect("manifest");
+    let findings = lint::lint(&src, &tests, &cfg, &manifest);
+    let rendered: Vec<String> = findings
+        .iter()
+        .map(|f| format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message))
+        .collect();
+    assert!(findings.is_empty(), "mxlint findings on HEAD:\n{}", rendered.join("\n"));
+}
+
+/// The committed manifest must match what the Rust lexer computes from
+/// the tree. Because `rust/lint.manifest` is (re)generated by the
+/// Python mirror on toolchain-free machines, this doubles as a
+/// conformance test between the two lexer implementations.
+#[test]
+fn committed_manifest_is_current() {
+    let root = repo_root();
+    let (src, _tests) = lint::collect_sources(&root).expect("collect sources");
+    let want = lint::render_manifest(&lint::current_manifest(&src));
+    let got = read(root.join("rust/lint.manifest"));
+    assert_eq!(got, want, "rust/lint.manifest is stale — run `mxlint --update-manifest`");
+}
+
+/// Pin the allowlist to exactly the reviewed entries so additions (and
+/// stale leftovers) show up as a test diff, not a silent waiver.
+#[test]
+fn allowlist_is_exactly_the_reviewed_set() {
+    let root = repo_root();
+    let cfg = lint::parse_config(&read(root.join("rust/lint.toml"))).expect("lint.toml");
+    let got: Vec<(String, Vec<String>)> = cfg
+        .allow
+        .iter()
+        .map(|(rule, v)| (rule.clone(), v.iter().map(|(k, _)| k.clone()).collect()))
+        .collect();
+    let want = vec![
+        ("L1".to_string(), vec!["fake_quant_mat_fast_into".to_string()]),
+        (
+            "L3".to_string(),
+            vec![
+                "dot8_i8".to_string(),
+                "transpose8x8_bytes".to_string(),
+                "e2m1_pair_lut".to_string(),
+            ],
+        ),
+        ("L4".to_string(), vec!["backend/hw.rs".to_string(), "backend/packed.rs".to_string()]),
+        (
+            "L6".to_string(),
+            vec![
+                "coordinator/cli.rs::cmd_fleet".to_string(),
+                "coordinator/experiments.rs::precision_schedule".to_string(),
+            ],
+        ),
+    ];
+    assert_eq!(got, want);
+}

@@ -1,0 +1,8 @@
+// mxlint fixture: L1 — public parallel kernel with no `_serial` twin.
+// Lexed under a fake `rust/src/util/mat.rs` path by rust/tests/lint.rs;
+// never compiled.
+
+pub fn scaled_sum(out: &mut [f64], n: usize) {
+    let parts = par_map(n, 1, |i| i as f64);
+    out[0] = parts.iter().sum();
+}

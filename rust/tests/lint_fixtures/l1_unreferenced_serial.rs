@@ -1,0 +1,6 @@
+// mxlint fixture: L1 — a `_serial` twin no identity test references.
+// Lexed under a fake `rust/src/util/mat.rs` path; never compiled.
+
+pub fn orphan_kernel_serial(n: usize) -> usize {
+    n * 2
+}

@@ -1,0 +1,7 @@
+// mxlint fixture: L2 — float log in shared-exponent code. The
+// `log2().floor()` idiom misrounds near powers of two (PR 1); exponents
+// must come from element::floor_log2. Never compiled.
+
+pub fn shared_exponent(max_abs: f64) -> i32 {
+    max_abs.log2().floor() as i32
+}

@@ -1,0 +1,8 @@
+// mxlint fixture: L3 — magic bit-width literals in packed-kernel code.
+// Lexed under a fake `rust/src/mx/packed.rs` path; never compiled.
+// Line 6 fires on the `4`, line 7 on the 16-hex-digit lane mask.
+
+pub fn lane_extract(word: u64) -> u64 {
+    let hi = word >> 4;
+    hi & 0x0101_0101_0101_0101
+}

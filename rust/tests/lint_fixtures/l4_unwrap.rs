@@ -1,0 +1,6 @@
+// mxlint fixture: L4 — `.unwrap()` in training-stack library code.
+// Lexed under a fake `rust/src/trainer/session.rs` path; never compiled.
+
+pub fn load_weights(path: &str) -> Vec<u8> {
+    std::fs::read(path).unwrap()
+}

@@ -1,0 +1,10 @@
+// mxlint fixture: L5 — a minimal checkpoint module whose byte-layout
+// function is hashed against a synthetic manifest by rust/tests/lint.rs.
+// Lexed under a fake `rust/src/trainer/checkpoint.rs` path; never
+// compiled.
+
+pub const VERSION: u32 = 2;
+
+pub fn to_bytes(x: u32) -> Vec<u8> {
+    x.to_le_bytes().to_vec()
+}

@@ -1,0 +1,8 @@
+// mxlint fixture: L6 — a results-JSON writer that skips the
+// bench_doc/stamped_doc schema stamp. Lexed under a fake
+// `rust/src/coordinator/report.rs` path; never compiled.
+
+pub fn save_run(doc: &Json) -> std::io::Result<()> {
+    save_json(doc, "fixture_run")?;
+    Ok(())
+}

@@ -1,0 +1,7 @@
+// mxlint fixture: L7 — a leaf module with no unsafe code and no
+// `#![forbid(unsafe_code)]`. Lexed under a fake `rust/src/mx/block.rs`
+// path; never compiled.
+
+pub fn identity(x: u32) -> u32 {
+    x
+}

@@ -1,0 +1,7 @@
+// mxlint fixture: L7 — `unsafe` with no `// SAFETY:` comment in the
+// three lines above it. Lexed under a fake `rust/src/mx/block.rs`
+// path; never compiled.
+
+pub fn first_unchecked(v: &[u8]) -> u8 {
+    unsafe { *v.get_unchecked(0) }
+}

@@ -173,6 +173,57 @@ fn gemmcore_parallel_matches_serial_cost() {
     assert_eq!(core_p.pe_cycles(), core_s.pe_cycles());
 }
 
+// ------------------------------------------------- engine primitives
+
+#[test]
+fn par_map_matches_its_serial_twin() {
+    use mxscale::util::par::{par_map, par_map_serial};
+    let got = par_map(1000, 2, |i| (i as f32).sin().to_bits());
+    let want = par_map_serial(1000, |i| (i as f32).sin().to_bits());
+    assert_eq!(got, want);
+}
+
+#[test]
+fn par_chunks_mut_matches_its_serial_twin() {
+    use mxscale::util::par::{par_chunks_mut, par_chunks_mut_serial};
+    let f = |i: usize, chunk: &mut [f32]| {
+        for (j, v) in chunk.iter_mut().enumerate() {
+            *v = (*v + i as f32) * (j as f32 + 0.5);
+        }
+    };
+    let mut a: Vec<f32> = (0..10_007).map(|i| i as f32 * 0.25).collect();
+    let mut b = a.clone();
+    par_chunks_mut(&mut a, 97, 2, f);
+    par_chunks_mut_serial(&mut b, 97, f);
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a), bits(&b));
+}
+
+#[test]
+fn matmul_kernels_match_their_serial_twins() {
+    // all six GeMM kernels, above the fork threshold, against the
+    // `_serial` twins that share their exact loop bodies
+    let a = wide_mat(128, 96, 71);
+    let b = wide_mat(96, 160, 72);
+    assert_eq!(bits(&a.matmul(&b)), bits(&a.matmul_serial(&b)));
+    assert_eq!(
+        bits(&a.matmul_blocked(&b, 8)),
+        bits(&a.matmul_blocked_serial(&b, 8))
+    );
+    let bt = wide_mat(160, 96, 73); // for the nt kernels: out = a @ btᵀ
+    assert_eq!(bits(&a.matmul_nt(&bt)), bits(&a.matmul_nt_serial(&bt)));
+    assert_eq!(
+        bits(&a.matmul_blocked_nt(&bt, 8)),
+        bits(&a.matmul_blocked_nt_serial(&bt, 8))
+    );
+    let at = wide_mat(96, 128, 74); // for the tn kernels: out = atᵀ @ b
+    assert_eq!(bits(&at.matmul_tn(&b)), bits(&at.matmul_tn_serial(&b)));
+    assert_eq!(
+        bits(&at.matmul_blocked_tn(&b, 8)),
+        bits(&at.matmul_blocked_tn_serial(&b, 8))
+    );
+}
+
 // ------------------------------------------------- golden-path identity
 
 #[test]
