@@ -4,7 +4,8 @@ baselines and fail on perf regressions.
 
 Usage:
     check_bench.py --results rust/results --baselines rust/benches/baselines \
-                   [--tolerance 0.25] [--require-headline-speedup 2.0]
+                   [--tolerance 0.25] [--require-headline-speedup 2.0] \
+                   [--require-simd-speedup 2.0]
     check_bench.py --mxlint-report rust/mxlint_report.json
 
 Rules:
@@ -18,8 +19,18 @@ Rules:
     (the acceptance criterion: the packed SWAR path is at least 2x the
     fake-quant GeMM path for mxint8 at the bench shapes), baseline or
     not.
+  * When ``BENCH_packed.json`` carries
+    ``schemes.int8.avx2_vs_swar_speedup`` (emitted only on AVX2 hosts),
+    it must be ``>= --require-simd-speedup`` (the arch-native AVX2
+    kernel is at least 2x the SWAR kernel on the 256^3 mxint8 GeMM).
+    On hosts without AVX2 the key is absent and the floor passes with a
+    notice — the bit-identity tests still ran, only the perf floor is
+    unmeasurable there.
   * A missing baseline file is a bootstrap, not a failure: the fresh
     JSON is reported so it can be committed as the first baseline.
+  * A baseline stamped with a different ``kernel_path`` (or none) is
+    skipped with a notice: ns/op measured on different kernel paths are
+    not comparable, exactly like a runner-class (thread-count) change.
   * A baseline with a different ``schema_version`` is skipped with a
     notice (incomparable layouts must not produce phantom regressions).
   * ``--mxlint-report`` switches to a separate mode that validates the
@@ -117,6 +128,7 @@ def main():
     ap.add_argument("--baselines", type=pathlib.Path)
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument("--require-headline-speedup", type=float, default=2.0)
+    ap.add_argument("--require-simd-speedup", type=float, default=2.0)
     ap.add_argument("--mxlint-report", type=pathlib.Path, default=None)
     args = ap.parse_args()
 
@@ -151,6 +163,24 @@ def main():
                     f"{name}: mxint8 packed speedup {headline:.2f}x "
                     f"(floor {args.require_headline_speedup:.2f}x) OK"
                 )
+            simd = (
+                fresh.get("schemes", {}).get("int8", {}).get("avx2_vs_swar_speedup")
+            )
+            if simd is None:
+                print(
+                    f"{name}: no avx2_vs_swar_speedup (host without AVX2) — "
+                    "SIMD floor not measurable here, passing with notice."
+                )
+            elif simd < args.require_simd_speedup:
+                failures.append(
+                    f"{name}: mxint8 avx2-over-swar speedup {simd:.2f}x is below "
+                    f"the required {args.require_simd_speedup:.2f}x floor"
+                )
+            else:
+                print(
+                    f"{name}: mxint8 avx2-over-swar speedup {simd:.2f}x "
+                    f"(floor {args.require_simd_speedup:.2f}x) OK"
+                )
 
         base_path = args.baselines / name
         if not base_path.exists():
@@ -182,6 +212,15 @@ def main():
                 f"{name}: baseline ran with threads={base.get('threads')}, "
                 f"fresh with threads={fresh.get('threads')} — skipping diff "
                 "(re-baseline on the current runner class to re-arm the gate)"
+            )
+            continue
+        if base.get("kernel_path") != fresh.get("kernel_path"):
+            # ns/op measured on different kernel paths (or on a baseline
+            # predating kernel-path provenance) are not comparable
+            print(
+                f"{name}: baseline kernel_path={base.get('kernel_path')!r}, "
+                f"fresh kernel_path={fresh.get('kernel_path')!r} — skipping diff "
+                "(re-baseline on the current kernel path to re-arm the gate)"
             )
             continue
 

@@ -746,6 +746,96 @@ def l7(src, allow):
     return out
 
 
+L8_DIR = "rust/src/mx/simd/"
+L8_SUFFIXES = ["_avx2", "_sse41", "_neon"]
+
+
+def _has_arch_gate(toks):
+    return any(
+        _is_p(toks[i], "#")
+        and _is_p(toks[i + 1], "!")
+        and _is_p(toks[i + 2], "[")
+        and _is_i(toks[i + 3], "cfg")
+        and _is_p(toks[i + 4], "(")
+        and _is_i(toks[i + 5], "target_arch")
+        for i in range(max(len(toks) - 5, 0))
+    )
+
+
+def l8(src, tests, allow):
+    out = []
+    src_fns = set()
+    for rel, toks, _ in src:
+        if not rel.startswith("rust/src/"):
+            continue
+        for fi in functions(toks):
+            src_fns.add(fi["name"])
+    test_idents = set()
+    for _, toks, _ in tests:
+        for t in toks:
+            if t[0] == IDENT:
+                test_idents.add(t[1])
+    for rel, toks, _ in src:
+        if not rel.startswith("rust/src/"):
+            continue
+        arch_gated = _has_arch_gate(toks)
+        for i in range(max(len(toks) - 2, 0)):
+            if not (
+                _is_p(toks[i], "#")
+                and _is_p(toks[i + 1], "[")
+                and _is_i(toks[i + 2], "target_feature")
+            ):
+                continue
+            found = None
+            for j in range(i + 3, min(i + 40, max(len(toks) - 1, 0))):
+                if _is_i(toks[j], "fn") and toks[j + 1][0] == IDENT:
+                    found = (toks[j + 1][1], toks[j + 1][2])
+                    break
+            if found is None:
+                continue
+            name, line = found
+            if allowed(allow, "L8", name):
+                continue
+            if not rel.startswith(L8_DIR):
+                out.append(finding(
+                    "L8", rel, line,
+                    "#[target_feature] fn `%s` outside %s — arch kernels live in "
+                    "the simd module behind the dispatcher" % (name, L8_DIR),
+                ))
+                continue
+            if not arch_gated:
+                out.append(finding(
+                    "L8", rel, line,
+                    "#[target_feature] fn `%s` in a module without an inner "
+                    "`#![cfg(target_arch = ...)]` gate" % name,
+                ))
+            base = None
+            for suf in L8_SUFFIXES:
+                if name.endswith(suf):
+                    base = name[: -len(suf)]
+                    break
+            if base is None:
+                out.append(finding(
+                    "L8", rel, line,
+                    "#[target_feature] fn `%s` is not named for its vector path "
+                    "(*_avx2 / *_sse41 / *_neon)" % name,
+                ))
+                continue
+            twin = base + "_swar"
+            if twin not in src_fns:
+                out.append(finding(
+                    "L8", rel, line,
+                    "vector kernel `%s` has no `%s` scalar twin" % (name, twin),
+                ))
+            elif twin not in test_idents:
+                out.append(finding(
+                    "L8", rel, line,
+                    "scalar twin `%s` of `%s` is not referenced from any "
+                    "bit-identity test in rust/tests/" % (twin, name),
+                ))
+    return out
+
+
 def run_all(src, tests, allow, manifest):
     out = []
     out.extend(l1(src, tests, allow))
@@ -755,6 +845,7 @@ def run_all(src, tests, allow, manifest):
     out.extend(l5(src, manifest))
     out.extend(l6(src, allow))
     out.extend(l7(src, allow))
+    out.extend(l8(src, tests, allow))
     out.sort(key=lambda f: (f["file"], f["line"], f["rule"]))
     return out
 

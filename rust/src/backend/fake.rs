@@ -2,7 +2,9 @@
 
 #![forbid(unsafe_code)]
 
-use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
+use crate::backend::{
+    backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, KernelRegistry, LayerGrads,
+};
 use crate::mx::dacapo::DacapoTensor;
 use crate::mx::tensor::{fake_quant_mat_fast_into, Layout};
 use crate::trainer::qat::QuantScheme;
@@ -26,7 +28,7 @@ pub struct FakeQuantBackend {
     scheme: QuantScheme,
     /// Dense GeMM kernel defining this scheme's value semantics
     /// (block-ordered accumulation for square MX — see
-    /// [`GemmKernel::for_scheme`]).
+    /// [`KernelRegistry::dense_kernel`]).
     kernel: GemmKernel,
     /// Forward-grouping quantized weights, refreshed once per step.
     wq: Vec<Mat>,
@@ -48,7 +50,7 @@ impl FakeQuantBackend {
     pub fn new(scheme: QuantScheme) -> Self {
         Self {
             scheme,
-            kernel: GemmKernel::for_scheme(scheme),
+            kernel: KernelRegistry::dense_kernel(scheme),
             wq: Vec::new(),
             wq_step: Vec::new(),
             wq_t: Vec::new(),
@@ -128,7 +130,7 @@ impl ExecBackend for FakeQuantBackend {
             return Err("cannot transition mid-step: a forward tape is pending backward".into());
         }
         self.scheme = scheme;
-        self.kernel = GemmKernel::for_scheme(scheme);
+        self.kernel = KernelRegistry::dense_kernel(scheme);
         for step in &mut self.wq_step {
             *step = NEVER;
         }

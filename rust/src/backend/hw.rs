@@ -3,7 +3,7 @@
 #![forbid(unsafe_code)]
 
 use crate::backend::cost::{HwCostReport, HwSegmentCost};
-use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, GemmKernel, LayerGrads};
+use crate::backend::{backward_from_quant, gemm_fwd, ExecBackend, KernelRegistry, LayerGrads};
 use crate::energy::EnergyModel;
 use crate::gemmcore::quantizer::QuantEvents;
 use crate::gemmcore::schedule::CycleCost;
@@ -155,7 +155,7 @@ impl ExecBackend for HardwareBackend {
         let aq = qa.dequantize();
         let (z, z_hw) = {
             let (qw, wq_mat) = self.qw[layer].as_ref().expect("just ensured");
-            let z = gemm_fwd(GemmKernel::for_scheme(self.scheme), &aq, wq_mat);
+            let z = gemm_fwd(KernelRegistry::dense_kernel(self.scheme), &aq, wq_mat);
             let z_hw = self.core.gemm_staged(&qa, qw, Stage::Forward);
             (z, z_hw)
         };
@@ -185,7 +185,7 @@ impl ExecBackend for HardwareBackend {
             Some(_) => self.qw[layer].as_ref().map(|(_, d)| d),
             None => None,
         };
-        let grads = backward_from_quant(GemmKernel::for_scheme(self.scheme), &eq, aq, wq_ref);
+        let grads = backward_from_quant(KernelRegistry::dense_kernel(self.scheme), &eq, aq, wq_ref);
         self.observe(&grads.d_w, &dw_hw, aq.cols, aq.rows, eq.cols, Stage::WeightGrad);
         if let (Some(back), Some(back_hw)) = (grads.back.as_ref(), back_hw_opt.as_ref()) {
             // back = Q(E)[batch, dout] @ Wᵀ[dout, din]

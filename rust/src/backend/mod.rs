@@ -48,11 +48,13 @@ mod cost;
 mod fake;
 mod hw;
 mod packed;
+mod registry;
 
 pub use cost::{HwCostReport, HwSegmentCost};
 pub use fake::FakeQuantBackend;
 pub use hw::HardwareBackend;
 pub use packed::PackedBackend;
+pub use registry::{force_kernel_path, KernelRegistry, KERNEL_ENV};
 
 use crate::mx::tensor::SQ;
 use crate::trainer::qat::QuantScheme;
@@ -186,16 +188,6 @@ pub enum GemmKernel {
     MxBlock8,
 }
 
-impl GemmKernel {
-    /// The kernel a scheme's training-graph values are defined by.
-    pub fn for_scheme(scheme: QuantScheme) -> GemmKernel {
-        match scheme {
-            QuantScheme::MxSquare(_) => GemmKernel::MxBlock8,
-            _ => GemmKernel::Plain,
-        }
-    }
-}
-
 /// Shared forward GeMM kernel: every backend evaluates the training-
 /// graph value with this exact call, which is what makes them
 /// bit-identical.
@@ -258,7 +250,7 @@ where
     /// backends use for `scheme` — the configuration that is bitwise
     /// comparable against [`FakeQuantBackend`] et al. in tests.
     pub fn for_scheme(scheme: QuantScheme, w_hook: W, a_hook: A, e_hook: E) -> Self {
-        Self { w_hook, a_hook, e_hook, kernel: GemmKernel::for_scheme(scheme) }
+        Self { w_hook, a_hook, e_hook, kernel: KernelRegistry::dense_kernel(scheme) }
     }
 }
 

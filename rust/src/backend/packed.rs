@@ -3,9 +3,9 @@
 
 #![forbid(unsafe_code)]
 
-use crate::backend::{ExecBackend, LayerGrads};
+use crate::backend::{ExecBackend, KernelRegistry, LayerGrads};
 use crate::mx::element::ElementFormat;
-use crate::mx::packed::{packed_gemm, packed_gemm_nt, PackedTensor};
+use crate::mx::packed::PackedTensor;
 use crate::trainer::qat::QuantScheme;
 use crate::util::mat::Mat;
 
@@ -18,7 +18,8 @@ const NEVER: u64 = u64::MAX;
 /// Weights are packed **once per step per layer** and that single
 /// packed copy serves all three GeMM cut points: the forward GeMM reads
 /// it directly, the error-backprop GeMM consumes it transposed at zero
-/// cost ([`packed_gemm_nt`] — the lanes already are k-major), and the
+/// cost ([`crate::mx::packed::packed_gemm_nt`] — the lanes already are
+/// k-major), and the
 /// weight-gradient GeMM consumes the stored packed *activation* through
 /// the free block-permutation transpose. That is the paper's §IV
 /// single-copy storage argument executed on the hot path rather than
@@ -35,6 +36,9 @@ const NEVER: u64 = u64::MAX;
 pub struct PackedBackend {
     scheme: QuantScheme,
     fmt: ElementFormat,
+    /// Kernel-path resolver (CPU features + any `--kernel` /
+    /// `MXSCALE_KERNEL` forcing, validated at construction).
+    registry: KernelRegistry,
     /// Packed weights, one per layer, refreshed once per step.
     pw: Vec<Option<PackedTensor>>,
     /// Step at which `pw[i]` was refreshed (NEVER = stale).
@@ -56,7 +60,16 @@ impl PackedBackend {
                 scheme.name()
             ));
         };
-        Ok(Self { scheme, fmt, pw: Vec::new(), pw_step: Vec::new(), pa: Vec::new(), step: 0 })
+        let registry = KernelRegistry::from_env()?;
+        Ok(Self {
+            scheme,
+            fmt,
+            registry,
+            pw: Vec::new(),
+            pw_step: Vec::new(),
+            pa: Vec::new(),
+            step: 0,
+        })
     }
 
     pub fn scheme(&self) -> QuantScheme {
@@ -75,7 +88,7 @@ impl PackedBackend {
     /// packed once, consumed by forward and backward alike.
     fn ensure_pw(&mut self, layer: usize, w: &Mat) {
         if self.pw_step[layer] != self.step {
-            self.pw[layer] = Some(PackedTensor::quantize_pack(w, self.fmt));
+            self.pw[layer] = Some(self.registry.quantize_pack(w, self.fmt));
             self.pw_step[layer] = self.step;
         }
     }
@@ -92,12 +105,12 @@ impl ExecBackend for PackedBackend {
 
     fn forward_layer(&mut self, layer: usize, a: &Mat, w: &Mat) -> (Mat, Mat) {
         self.ensure(layer);
-        let pa = PackedTensor::quantize_pack(a, self.fmt);
+        let pa = self.registry.quantize_pack(a, self.fmt);
         self.ensure_pw(layer, w);
         // the tape owns a dense copy of Q(A) (the MLP hands it back to
         // backward_layer); GeMMs run on the packed codes
         let aq = pa.dequantize();
-        let z = packed_gemm(&pa, self.pw[layer].as_ref().expect("just ensured"));
+        let z = self.registry.gemm(&pa, self.pw[layer].as_ref().expect("just ensured"));
         self.pa[layer] = Some(pa);
         (aq, z)
     }
@@ -129,17 +142,17 @@ impl ExecBackend for PackedBackend {
 
     fn backward_layer(&mut self, layer: usize, e: &Mat, _aq: &Mat, w: Option<&Mat>) -> LayerGrads {
         self.ensure(layer);
-        let pe = PackedTensor::quantize_pack(e, self.fmt);
+        let pe = self.registry.quantize_pack(e, self.fmt);
         // weight gradient: the stored packed activation, transposed for
         // free (block permutation), against Q(E)
         let pa = self.pa[layer].take().expect("forward_layer must precede backward_layer");
-        let d_w = packed_gemm(&pa.transpose(), &pe);
+        let d_w = self.registry.gemm(&pa.transpose(), &pe);
         let d_b = pe.col_sums();
         // error backprop: the same packed weight copy, consumed
         // transposed at zero cost (row lanes are already k-major)
         let back = w.map(|w| {
             self.ensure_pw(layer, w);
-            packed_gemm_nt(&pe, self.pw[layer].as_ref().expect("just ensured"))
+            self.registry.gemm_nt(&pe, self.pw[layer].as_ref().expect("just ensured"))
         });
         LayerGrads { d_w, d_b, back }
     }

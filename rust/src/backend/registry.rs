@@ -1,0 +1,287 @@
+//! The kernel registry: (format × CPU features × shape) → kernel path.
+//!
+//! Replaces the ad-hoc per-scheme kernel match with an explicit
+//! registration table. Resolution order (DESIGN.md §10):
+//!
+//! 1. **Forced path** (CLI `--kernel` > `MXSCALE_KERNEL` env var) —
+//!    validated once at registry construction: forcing a path the CPU
+//!    cannot run is a structured error, not a panic and not a silent
+//!    fallback. A *forced* path skips the shape gate (you asked for
+//!    it, you get it on every call) but still respects the per-format
+//!    support table — formats without a SIMD leg run SWAR under any
+//!    forcing, preserving bit-identity trivially.
+//! 2. **Priority scan** of [`REGISTRATIONS`]: first entry whose path
+//!    is available on the detected features, whose format table
+//!    contains the operand format, and whose `min_macs` shape floor
+//!    the call clears. Tiny GeMMs stay on SWAR — below a few thousand
+//!    MACs the decode/dispatch overhead outweighs the vector win.
+//! 3. **SWAR** — the terminal entry matches every format at any
+//!    shape, so resolution always succeeds.
+//!
+//! Every path is bit-identical for every format (the `mx::simd`
+//! contract), so resolution is a pure performance policy: it can
+//! never change a training-graph value.
+
+#![forbid(unsafe_code)]
+
+use crate::mx::element::ElementFormat;
+use crate::mx::packed::PackedTensor;
+use crate::mx::simd::detect::{features, CpuFeatures};
+use crate::mx::simd::{self, KernelPath, SIMD_FORMATS};
+use crate::mx::ALL_ELEMENT_FORMATS;
+use crate::trainer::qat::QuantScheme;
+use crate::util::mat::Mat;
+use std::sync::Mutex;
+
+/// Environment variable forcing a kernel path (`swar|sse41|avx2|neon`).
+pub const KERNEL_ENV: &str = "MXSCALE_KERNEL";
+
+/// Process-wide CLI override (`mxscale train --kernel ...`). Takes
+/// precedence over [`KERNEL_ENV`]; latest call wins.
+static CLI_FORCE: Mutex<Option<KernelPath>> = Mutex::new(None);
+
+/// Install (or clear, with `None`) the CLI kernel-path override.
+pub fn force_kernel_path(path: Option<KernelPath>) {
+    *CLI_FORCE.lock().unwrap_or_else(|e| e.into_inner()) = path;
+}
+
+fn cli_forced() -> Option<KernelPath> {
+    *CLI_FORCE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One registry entry: a path, the formats it has dedicated legs for,
+/// and the MAC-count floor below which it declines in favor of SWAR.
+struct Registration {
+    path: KernelPath,
+    formats: &'static [ElementFormat],
+    min_macs: usize,
+}
+
+/// Shape floor for the vector paths: an 8×8×8 tile pair is 512 MACs;
+/// below 4096 (one 16×16×16 problem) per-call overhead dominates.
+const SIMD_MIN_MACS: usize = 4096;
+
+/// Priority-ordered registrations — widest vectors first, SWAR last
+/// (the always-matching terminal entry).
+const REGISTRATIONS: [Registration; 4] = [
+    Registration { path: KernelPath::Avx2, formats: &SIMD_FORMATS, min_macs: SIMD_MIN_MACS },
+    Registration { path: KernelPath::Neon, formats: &SIMD_FORMATS, min_macs: SIMD_MIN_MACS },
+    Registration { path: KernelPath::Sse41, formats: &SIMD_FORMATS, min_macs: SIMD_MIN_MACS },
+    Registration { path: KernelPath::Swar, formats: &ALL_ELEMENT_FORMATS, min_macs: 0 },
+];
+
+/// Resolves (format, shape) → [`KernelPath`] against a CPU-feature
+/// snapshot, and runs the packed kernels through the resolved path.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelRegistry {
+    features: CpuFeatures,
+    forced: Option<KernelPath>,
+}
+
+impl KernelRegistry {
+    /// Registry over an explicit feature snapshot and optional forced
+    /// path. Errors (structured, no panic) when the forced path cannot
+    /// run on the given features.
+    pub fn with(
+        features: CpuFeatures,
+        forced: Option<KernelPath>,
+    ) -> Result<KernelRegistry, String> {
+        if let Some(p) = forced {
+            if !p.available(features) {
+                return Err(format!(
+                    "kernel path `{}` was forced but is unavailable on this CPU \
+                     (detected features: {}); use `swar` or drop the override",
+                    p.name(),
+                    features.describe()
+                ));
+            }
+        }
+        Ok(KernelRegistry { features, forced })
+    }
+
+    /// Registry for the running CPU, honoring the CLI override first
+    /// and the [`KERNEL_ENV`] variable second. Unknown names and
+    /// unavailable forced paths are structured errors.
+    pub fn from_env() -> Result<KernelRegistry, String> {
+        let forced = match cli_forced() {
+            Some(p) => Some(p),
+            None => match std::env::var(KERNEL_ENV) {
+                Ok(s) if !s.trim().is_empty() => {
+                    Some(KernelPath::parse(&s).map_err(|e| format!("{KERNEL_ENV}: {e}"))?)
+                }
+                _ => None,
+            },
+        };
+        Self::with(features(), forced)
+    }
+
+    /// Registry for the running CPU with no forcing (bench provenance,
+    /// fallback when overrides are absent).
+    pub fn auto() -> KernelRegistry {
+        KernelRegistry { features: features(), forced: None }
+    }
+
+    /// The forced path, if any.
+    pub fn forced(&self) -> Option<KernelPath> {
+        self.forced
+    }
+
+    /// Resolve the kernel path for one call: `format` is the operand
+    /// element format, `macs` the problem size (M·K·N for a GeMM,
+    /// element count for a quantize).
+    pub fn resolve(&self, format: ElementFormat, macs: usize) -> KernelPath {
+        if let Some(p) = self.forced {
+            // forcing skips the shape gate, not the format table
+            if p == KernelPath::Swar || SIMD_FORMATS.contains(&format) {
+                return p;
+            }
+            return KernelPath::Swar;
+        }
+        for reg in &REGISTRATIONS {
+            if reg.path.available(self.features)
+                && reg.formats.contains(&format)
+                && macs >= reg.min_macs
+            {
+                return reg.path;
+            }
+        }
+        KernelPath::Swar
+    }
+
+    /// The path an unbounded INT8 GeMM resolves to — the headline
+    /// answer to "which kernels is this process running", stamped into
+    /// bench provenance.
+    pub fn default_path(&self) -> KernelPath {
+        self.resolve(ElementFormat::Int8, usize::MAX)
+    }
+
+    /// `a @ b` through the resolved path (bit-identical to
+    /// [`crate::mx::packed::packed_gemm`] on every path).
+    pub fn gemm(&self, a: &PackedTensor, b: &PackedTensor) -> Mat {
+        let path = self.resolve(a.format, a.rows * a.cols * b.cols);
+        simd::gemm(path, a, b)
+    }
+
+    /// `a @ bᵀ` through the resolved path (bit-identical to
+    /// [`crate::mx::packed::packed_gemm_nt`] on every path).
+    pub fn gemm_nt(&self, a: &PackedTensor, b: &PackedTensor) -> Mat {
+        let path = self.resolve(a.format, a.rows * a.cols * b.rows);
+        simd::gemm_nt(path, a, b)
+    }
+
+    /// Quantize-and-pack through the resolved path (bit-identical to
+    /// [`PackedTensor::quantize_pack`] on every path).
+    pub fn quantize_pack(&self, m: &Mat, format: ElementFormat) -> PackedTensor {
+        let path = self.resolve(format, m.rows * m.cols);
+        simd::quantize_pack(path, m, format)
+    }
+
+    /// Which dense GeMM kernel computes the training-graph *values*
+    /// for a scheme (the value-semantics half the old
+    /// `GemmKernel::for_scheme` match carried; lives here so every
+    /// kernel-selection decision has one home).
+    pub fn dense_kernel(scheme: QuantScheme) -> super::GemmKernel {
+        match scheme {
+            QuantScheme::MxSquare(_) => super::GemmKernel::MxBlock8,
+            _ => super::GemmKernel::Plain,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::GemmKernel;
+
+    const AVX2_CPU: CpuFeatures = CpuFeatures { sse41: true, avx2: true, neon: false };
+    const SSE_CPU: CpuFeatures = CpuFeatures { sse41: true, avx2: false, neon: false };
+    const NEON_CPU: CpuFeatures = CpuFeatures { sse41: false, avx2: false, neon: true };
+
+    fn reg(f: CpuFeatures, forced: Option<KernelPath>) -> KernelRegistry {
+        match KernelRegistry::with(f, forced) {
+            Ok(r) => r,
+            Err(e) => panic!("registry construction failed: {e}"),
+        }
+    }
+
+    #[test]
+    fn bare_cpu_resolves_swar_for_everything() {
+        let r = reg(CpuFeatures::NONE, None);
+        for fmt in ALL_ELEMENT_FORMATS {
+            for macs in [0, SIMD_MIN_MACS, usize::MAX] {
+                assert_eq!(r.resolve(fmt, macs), KernelPath::Swar, "{fmt:?} {macs}");
+            }
+        }
+    }
+
+    #[test]
+    fn priority_prefers_widest_available_vectors() {
+        let big = 1 << 24;
+        assert_eq!(reg(AVX2_CPU, None).resolve(ElementFormat::Int8, big), KernelPath::Avx2);
+        assert_eq!(reg(SSE_CPU, None).resolve(ElementFormat::Int8, big), KernelPath::Sse41);
+        assert_eq!(reg(NEON_CPU, None).resolve(ElementFormat::E2M1, big), KernelPath::Neon);
+    }
+
+    #[test]
+    fn shape_floor_keeps_small_problems_on_swar() {
+        let r = reg(AVX2_CPU, None);
+        assert_eq!(r.resolve(ElementFormat::Int8, SIMD_MIN_MACS - 1), KernelPath::Swar);
+        assert_eq!(r.resolve(ElementFormat::Int8, SIMD_MIN_MACS), KernelPath::Avx2);
+    }
+
+    #[test]
+    fn formats_without_simd_legs_resolve_swar() {
+        let r = reg(AVX2_CPU, None);
+        for fmt in [
+            ElementFormat::E5M2,
+            ElementFormat::E4M3,
+            ElementFormat::E3M2,
+            ElementFormat::E2M3,
+        ] {
+            assert_eq!(r.resolve(fmt, usize::MAX), KernelPath::Swar, "{fmt:?}");
+        }
+    }
+
+    #[test]
+    fn forcing_skips_the_shape_gate_but_not_the_format_table() {
+        let r = reg(AVX2_CPU, Some(KernelPath::Avx2));
+        // tiny problem: forced path still wins
+        assert_eq!(r.resolve(ElementFormat::Int8, 1), KernelPath::Avx2);
+        // format without a SIMD leg: SWAR regardless of forcing
+        assert_eq!(r.resolve(ElementFormat::E4M3, usize::MAX), KernelPath::Swar);
+    }
+
+    #[test]
+    fn forcing_an_unavailable_path_is_a_structured_error() {
+        for p in [KernelPath::Sse41, KernelPath::Avx2, KernelPath::Neon] {
+            let err = match KernelRegistry::with(CpuFeatures::NONE, Some(p)) {
+                Err(e) => e,
+                Ok(_) => panic!("{p:?} forced on a bare CPU must not construct"),
+            };
+            assert!(err.contains(p.name()), "error names the path: {err}");
+            assert!(err.contains("swar"), "error suggests the fallback: {err}");
+        }
+        // swar itself is always forceable
+        assert!(KernelRegistry::with(CpuFeatures::NONE, Some(KernelPath::Swar)).is_ok());
+    }
+
+    #[test]
+    fn default_path_reports_the_unbounded_int8_resolution() {
+        assert_eq!(reg(AVX2_CPU, None).default_path(), KernelPath::Avx2);
+        assert_eq!(reg(CpuFeatures::NONE, None).default_path(), KernelPath::Swar);
+        assert_eq!(reg(AVX2_CPU, Some(KernelPath::Swar)).default_path(), KernelPath::Swar);
+    }
+
+    #[test]
+    fn dense_kernel_keeps_the_scheme_value_semantics() {
+        assert_eq!(
+            KernelRegistry::dense_kernel(QuantScheme::MxSquare(ElementFormat::Int8)),
+            GemmKernel::MxBlock8
+        );
+        assert_eq!(KernelRegistry::dense_kernel(QuantScheme::Fp32), GemmKernel::Plain);
+        assert_eq!(
+            KernelRegistry::dense_kernel(QuantScheme::MxVector(ElementFormat::E4M3)),
+            GemmKernel::Plain
+        );
+    }
+}

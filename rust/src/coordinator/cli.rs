@@ -77,6 +77,7 @@ USAGE:
                 --scheme <fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mxvec-<fmt>|mx9|mx6|mx4>
                 [--backend fast|hw|packed] [--steps N] [--lr F] [--batch N] [--hidden N]
                 [--policy <spec>]                         # runtime precision scheduling
+                [--kernel swar|sse41|avx2|neon]           # force a packed kernel path
   mxscale fleet [--sessions N] [--steps N] [--quantum N] [--shift-at N]
                 [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
                 [--energy-budget UJ] [--policy <spec>] [--seed N]   # continual learning
@@ -86,8 +87,11 @@ USAGE:
   --backend hw runs every training GeMM through the bit-exact GemmCore
   simulation and saves a per-session cycle/energy/memory-traffic report
   (results/*_hw_report.json). --backend packed runs the GeMMs on the
-  sub-word-parallel SWAR kernels over bit-packed element codes — same
-  losses bit for bit, fastest software path. Square MX schemes only.
+  sub-word-parallel kernels over bit-packed element codes — same losses
+  bit for bit, fastest software path. Square MX schemes only. The
+  kernel registry picks the widest vector path the CPU supports (avx2 >
+  neon > sse41 > swar, bit-identical by construction); --kernel or
+  MXSCALE_KERNEL forces one, erroring if the CPU can't run it.
 
   --policy schedules the MX format *while training* (DESIGN.md §8):
   `0:mx-e2m1,200:mx-int8` switches formats at step indices;
@@ -370,6 +374,18 @@ fn cmd_train(args: &Args) -> i32 {
         eprintln!("unknown backend: {backend_name} (use fast|hw|packed)");
         return 1;
     };
+    if let Some(k) = args.get("kernel") {
+        match crate::mx::simd::KernelPath::parse(k) {
+            Ok(p) => {
+                crate::backend::force_kernel_path(Some(p));
+                println!("kernel path forced: {}", p.name());
+            }
+            Err(e) => {
+                eprintln!("bad --kernel: {e}");
+                return 1;
+            }
+        }
+    }
     let Some(env) = by_name(workload) else {
         eprintln!("unknown workload: {workload}");
         return 1;
@@ -550,6 +566,20 @@ mod tests {
         let code = run_cli(&argv(
             "train --workload cartpole --scheme int8 --backend packed --steps 3 --eval-every 1000000 --hidden 16",
         ));
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn train_kernel_flag_forces_and_rejects() {
+        // bogus path name: structured error, exit 1
+        assert_eq!(run_cli(&argv("train --kernel warp9")), 1);
+        // forcing swar is always available and bit-identical, so the
+        // tiny training run must succeed on any host
+        let code = run_cli(&argv(
+            "train --workload cartpole --scheme int8 --backend packed --steps 3 \
+             --eval-every 1000000 --hidden 16 --kernel swar",
+        ));
+        crate::backend::force_kernel_path(None);
         assert_eq!(code, 0);
     }
 

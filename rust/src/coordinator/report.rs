@@ -144,13 +144,20 @@ pub fn git_sha() -> String {
 }
 
 /// Start a `BENCH_*.json` document with the shared stamp every bench
-/// carries: bench name, schema version, git SHA, and worker count.
+/// carries: bench name, schema version, git SHA, worker count, the
+/// detected CPU features, and the kernel path an unbounded GeMM would
+/// resolve to — the provenance `ci/check_bench.py` keys on so an AVX2
+/// runner never diffs a SWAR baseline (or vice versa).
 pub fn bench_doc(bench: &str) -> Json {
+    let registry = crate::backend::KernelRegistry::from_env()
+        .unwrap_or_else(|_| crate::backend::KernelRegistry::auto());
     Json::obj()
         .set("bench", bench)
         .set("schema_version", BENCH_SCHEMA_VERSION as f64)
         .set("git_sha", git_sha())
         .set("threads", crate::util::par::threads() as f64)
+        .set("cpu_features", crate::mx::simd::detect::features().describe())
+        .set("kernel_path", registry.default_path().name())
 }
 
 /// Version of the non-bench `results/*.json` layouts (fleet report,
@@ -201,6 +208,8 @@ mod tests {
         assert!(s.contains("\"schema_version\":1"), "{s}");
         assert!(s.contains("\"git_sha\":"), "{s}");
         assert!(s.contains("\"threads\":"), "{s}");
+        assert!(s.contains("\"cpu_features\":"), "{s}");
+        assert!(s.contains("\"kernel_path\":"), "{s}");
         assert!(!git_sha().is_empty());
     }
 

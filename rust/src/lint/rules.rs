@@ -1,4 +1,4 @@
-//! The mxlint rule engine: invariant checks L1–L7 over lexed sources.
+//! The mxlint rule engine: invariant checks L1–L8 over lexed sources.
 //!
 //! Each rule is a pure function from token streams to [`Finding`]s, so
 //! the fixture tests in `rust/tests/lint.rs` can drive them with
@@ -637,6 +637,107 @@ pub fn l7(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
     out
 }
 
+// ------------------------------------------------------------------ L8
+
+const L8_DIR: &str = "rust/src/mx/simd/";
+const L8_SUFFIXES: [&str; 3] = ["_avx2", "_sse41", "_neon"];
+
+/// Does the file carry an inner `#![cfg(target_arch = ...)]` gate?
+fn has_arch_gate(toks: &[Tok]) -> bool {
+    toks.windows(6).any(|w| {
+        is_punct(&w[0], "#")
+            && is_punct(&w[1], "!")
+            && is_punct(&w[2], "[")
+            && is_ident(&w[3], "cfg")
+            && is_punct(&w[4], "(")
+            && is_ident(&w[5], "target_arch")
+    })
+}
+
+/// L8: every `#[target_feature]` kernel lives under `rust/src/mx/simd/`
+/// in a module gated by `#![cfg(target_arch = ...)]`, is named for its
+/// vector path (`*_avx2` / `*_sse41` / `*_neon`), and has a `*_swar`
+/// scalar twin that is defined in the library and referenced from
+/// `rust/tests/` (the bit-identity oracle L1 demands of parallel
+/// kernels, extended to the vector ISA legs). Adjacent `// SAFETY:`
+/// coverage of the `unsafe fn` itself is L7's job.
+pub fn l8(src: &[SourceFile], tests: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut src_fns: BTreeSet<String> = BTreeSet::new();
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        for fi in functions(&f.lexed.toks) {
+            src_fns.insert(fi.name);
+        }
+    }
+    let mut test_idents: BTreeSet<&str> = BTreeSet::new();
+    for t in tests {
+        for tok in &t.lexed.toks {
+            if tok.kind == TokKind::Ident {
+                test_idents.insert(tok.text.as_str());
+            }
+        }
+    }
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        let toks = &f.lexed.toks;
+        let arch_gated = has_arch_gate(toks);
+        for i in 0..toks.len().saturating_sub(2) {
+            if !(is_punct(&toks[i], "#")
+                && is_punct(&toks[i + 1], "[")
+                && is_ident(&toks[i + 2], "target_feature"))
+            {
+                continue;
+            }
+            // the attributed item: next `fn <name>` within a short window
+            let mut found: Option<(String, u32)> = None;
+            for j in i + 3..(i + 40).min(toks.len().saturating_sub(1)) {
+                if is_ident(&toks[j], "fn") && toks[j + 1].kind == TokKind::Ident {
+                    found = Some((toks[j + 1].text.clone(), toks[j + 1].line));
+                    break;
+                }
+            }
+            let Some((name, line)) = found else { continue };
+            if allowed(allow, "L8", &name) {
+                continue;
+            }
+            let mut fail = |message: String| {
+                out.push(Finding { rule: "L8", file: f.rel.clone(), line, message });
+            };
+            if !f.rel.starts_with(L8_DIR) {
+                fail(format!(
+                    "#[target_feature] fn `{name}` outside {L8_DIR} — arch kernels live in the \
+                     simd module behind the dispatcher"
+                ));
+                continue;
+            }
+            if !arch_gated {
+                fail(format!(
+                    "#[target_feature] fn `{name}` in a module without an inner \
+                     `#![cfg(target_arch = ...)]` gate"
+                ));
+            }
+            let Some(base) =
+                L8_SUFFIXES.iter().find_map(|s| name.strip_suffix(s).map(str::to_string))
+            else {
+                fail(format!(
+                    "#[target_feature] fn `{name}` is not named for its vector path \
+                     (*_avx2 / *_sse41 / *_neon)"
+                ));
+                continue;
+            };
+            let twin = format!("{base}_swar");
+            if !src_fns.contains(&twin) {
+                fail(format!("vector kernel `{name}` has no `{twin}` scalar twin"));
+            } else if !test_idents.contains(twin.as_str()) {
+                fail(format!(
+                    "scalar twin `{twin}` of `{name}` is not referenced from any bit-identity \
+                     test in rust/tests/"
+                ));
+            }
+        }
+    }
+    out
+}
+
 /// Run every rule and return findings sorted by (file, line, rule).
 pub fn run_all(
     src: &[SourceFile],
@@ -652,6 +753,7 @@ pub fn run_all(
     out.extend(l5(src, manifest));
     out.extend(l6(src, allow));
     out.extend(l7(src, allow));
+    out.extend(l8(src, tests, allow));
     out.sort_by(|a, b| {
         (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
     });

@@ -53,6 +53,15 @@ impl ScaledBlock {
 /// to E8M0 range; all-zero blocks take the minimum scale.
 pub fn shared_exponent(values: &[f32], format: ElementFormat) -> i32 {
     let max_abs = values.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    shared_exponent_from_max(max_abs, format)
+}
+
+/// The exponent-derivation half of [`shared_exponent`], factored out so
+/// the SIMD quantizers ([`crate::mx::simd`]) can reduce the block max
+/// in vector lanes and still share the exact exponent logic (the fold
+/// above and a lane-wise max produce the same non-NaN maximum, so the
+/// two paths stay bit-identical).
+pub fn shared_exponent_from_max(max_abs: f32, format: ElementFormat) -> i32 {
     if max_abs == 0.0 || !max_abs.is_finite() {
         return SCALE_EMIN;
     }

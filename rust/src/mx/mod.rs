@@ -12,6 +12,7 @@ pub mod block;
 pub mod dacapo;
 pub mod element;
 pub mod packed;
+pub mod simd;
 pub mod tensor;
 
 pub use block::{quantize_block, ScaledBlock, SCALE_EMIN, SCALE_EMAX};

@@ -214,10 +214,30 @@ fn e2m1_pair_lut() -> &'static [i32; 256] {
     })
 }
 
+static E2M1_MANT: OnceLock<[i8; 16]> = OnceLock::new();
+
+/// Per-code E2M1 integer mantissa in units of 2⁻¹ (`decode * 2` — every
+/// E2M1 value is an integer multiple of one half, max |mantissa| 12).
+/// A product of two such mantissas lands in units of 2⁻² — the same
+/// unit [`e2m1_pair_lut`] uses — so a byte dot over these mantissas
+/// equals the pair-LUT sum exactly. This is the 16-entry table the SIMD
+/// nibble-shuffle kernels (`crate::mx::simd`) load into a vector
+/// register; deriving it from `decode` keeps one source of truth.
+pub(crate) fn e2m1_mant_lut16() -> &'static [i8; 16] {
+    E2M1_MANT.get_or_init(|| {
+        let f = ElementFormat::E2M1;
+        let mut t = [0i8; 16];
+        for (c, slot) in t.iter_mut().enumerate() {
+            *slot = (f.decode(c as u8) * 2.0) as i8;
+        }
+        t
+    })
+}
+
 /// Exponent of the per-block-pair product unit: the two operand scales
 /// add to it, and the sum of one tile-pair dot is an exact integer in
 /// this unit (0 marks the f64-path format, which carries no unit).
-fn unit_exp(fmt: ElementFormat) -> i32 {
+pub(crate) fn unit_exp(fmt: ElementFormat) -> i32 {
     match fmt {
         ElementFormat::Int8 => -12, // (2^-6)^2
         ElementFormat::E5M2 => 0,   // f64 chain, values carry their exponents
@@ -226,7 +246,7 @@ fn unit_exp(fmt: ElementFormat) -> i32 {
 }
 
 #[inline(always)]
-fn lane_code(lane: u64, j: usize, w: u32) -> usize {
+pub(crate) fn lane_code(lane: u64, j: usize, w: u32) -> usize {
     ((lane >> (j as u32 * w)) & ((1u64 << w) - 1)) as usize
 }
 
@@ -234,11 +254,11 @@ fn lane_code(lane: u64, j: usize, w: u32) -> usize {
 
 /// Block count below which packing stays serial (mirrors
 /// `mx::tensor`'s fork gate).
-const PAR_MIN_BLOCKS: usize = 256;
+pub(crate) const PAR_MIN_BLOCKS: usize = 256;
 /// Element count below which banded walks stay serial.
 const PAR_MIN_ELEMS: usize = 1 << 15;
 
-fn band_min_chunks(elems: usize, bands: usize) -> usize {
+pub(crate) fn band_min_chunks(elems: usize, bands: usize) -> usize {
     if elems >= PAR_MIN_ELEMS {
         bands
     } else {
@@ -466,7 +486,7 @@ impl PackedTensor {
 /// Transpose one tile's lanes (rows become columns). 8-bit codes take
 /// the SWAR byte-matrix path; narrower widths repack through code
 /// extraction.
-fn tile_transposed(tile: &[u64], w: u32) -> [u64; SQ] {
+pub(crate) fn tile_transposed(tile: &[u64], w: u32) -> [u64; SQ] {
     let mut t = [0u64; SQ];
     if w == u8::BITS {
         t.copy_from_slice(tile);

@@ -1,0 +1,108 @@
+//! One-time runtime CPU-feature detection for the SIMD kernel paths.
+//!
+//! Detection runs once per process (cached in a `OnceLock`) via
+//! `is_x86_feature_detected!` / `is_aarch64_feature_detected!`; every
+//! dispatch site reads the cached snapshot. Under miri the snapshot is
+//! all-false, so the interpreter only ever sees the portable SWAR twins
+//! (`std::arch` intrinsics are outside its supported surface).
+
+#![forbid(unsafe_code)]
+
+use std::sync::OnceLock;
+
+/// The CPU features the kernel registry dispatches on. Constructed by
+/// [`features`] for the running CPU, or literally by tests that need to
+/// model a CPU without a feature (forced-fallback coverage).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CpuFeatures {
+    /// x86-64 SSE4.1 (implies the SSSE3 byte shuffles the LUT dots use).
+    pub sse41: bool,
+    /// x86-64 AVX2 (256-bit integer lanes).
+    pub avx2: bool,
+    /// AArch64 Advanced SIMD.
+    pub neon: bool,
+}
+
+impl CpuFeatures {
+    /// A snapshot with nothing available — resolves every kernel to SWAR.
+    pub const NONE: CpuFeatures = CpuFeatures { sse41: false, avx2: false, neon: false };
+
+    /// Human-readable feature list ("avx2,sse4.1" / "neon" / "none") —
+    /// the string stamped into `BENCH_*.json` provenance.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.avx2 {
+            parts.push("avx2");
+        }
+        if self.sse41 {
+            parts.push("sse4.1");
+        }
+        if self.neon {
+            parts.push("neon");
+        }
+        if parts.is_empty() {
+            "none".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+}
+
+static FEATURES: OnceLock<CpuFeatures> = OnceLock::new();
+
+/// The running CPU's feature snapshot (detected once, then cached).
+pub fn features() -> CpuFeatures {
+    *FEATURES.get_or_init(detect_now)
+}
+
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+fn detect_now() -> CpuFeatures {
+    CpuFeatures {
+        sse41: std::arch::is_x86_feature_detected!("sse4.1"),
+        avx2: std::arch::is_x86_feature_detected!("avx2"),
+        neon: false,
+    }
+}
+
+#[cfg(all(target_arch = "aarch64", not(miri)))]
+fn detect_now() -> CpuFeatures {
+    CpuFeatures {
+        sse41: false,
+        avx2: false,
+        neon: std::arch::is_aarch64_feature_detected!("neon"),
+    }
+}
+
+#[cfg(any(not(any(target_arch = "x86_64", target_arch = "aarch64")), miri))]
+fn detect_now() -> CpuFeatures {
+    CpuFeatures::NONE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detection_is_stable_across_calls() {
+        assert_eq!(features(), features());
+    }
+
+    #[test]
+    fn describe_names_every_flag() {
+        assert_eq!(CpuFeatures::NONE.describe(), "none");
+        let all = CpuFeatures { sse41: true, avx2: true, neon: true };
+        assert_eq!(all.describe(), "avx2,sse4.1,neon");
+        let sse = CpuFeatures { sse41: true, ..CpuFeatures::NONE };
+        assert_eq!(sse.describe(), "sse4.1");
+    }
+
+    #[test]
+    fn x86_feature_implication_holds() {
+        // AVX2 CPUs always have SSE4.1; a detection snapshot violating
+        // that would mean the cache was populated inconsistently
+        let f = features();
+        if f.avx2 {
+            assert!(f.sse41, "avx2 detected without sse4.1");
+        }
+    }
+}

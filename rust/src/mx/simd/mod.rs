@@ -1,0 +1,661 @@
+//! Arch-native SIMD kernel paths for the packed MX pipeline.
+//!
+//! The packed SWAR kernels ([`crate::mx::packed`]) are the portable,
+//! `forbid(unsafe_code)` oracle. This module lifts the three hot
+//! primitives — the 8×8×8 tile dot, the E2M1 nibble-LUT decode, and
+//! the INT8 tile quantizer — onto `std::arch` AVX2 / SSE4.1 (x86-64)
+//! and NEON (aarch64) vectors, under three invariants:
+//!
+//! 1. **Bit-identity.** Every SIMD leg produces the same bits as its
+//!    SWAR twin (`<name>_swar` in this file): the integer tile dots
+//!    are exact in both worlds, and the drivers below chain the scaled
+//!    f32 partials in the *same block order* as `packed_gemm`, so the
+//!    bit-identity theorem of `mx::packed` extends unchanged.
+//! 2. **Dispatch safety.** `#[target_feature]` functions are reached
+//!    only through the guard arms here, which re-check the one-time
+//!    runtime snapshot ([`detect::features`]) immediately before each
+//!    `unsafe` call. A path that is unavailable at runtime silently
+//!    degrades to the SWAR twin — the registry
+//!    ([`crate::backend::KernelRegistry`]) additionally refuses to
+//!    *construct* with a forced-unavailable path, so the degradation
+//!    arm is defense in depth, not a reachable policy.
+//! 3. **Scope.** SIMD legs exist for the formats where sub-word
+//!    parallelism pays ([`SIMD_FORMATS`]: INT8 and E2M1 — the 8-bit
+//!    and 4-bit ends of Table I); the four mid-width float formats
+//!    take the SWAR path under every [`KernelPath`].
+
+use crate::mx::block::shared_exponent_from_max;
+use crate::mx::element::{exp2i, ElementFormat};
+use crate::mx::packed::{
+    band_min_chunks, e2m1_mant_lut16, lane_code, packed_gemm, packed_gemm_nt, unit_exp,
+    PackedTensor, PAR_MIN_BLOCKS,
+};
+use crate::mx::tensor::{SQ, SQ_ELEMS};
+use crate::util::mat::Mat;
+use crate::util::par;
+
+pub mod detect;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use detect::CpuFeatures;
+
+/// The formats with dedicated SIMD decode/dot legs. Everything else
+/// resolves to SWAR regardless of path.
+pub const SIMD_FORMATS: [ElementFormat; 2] = [ElementFormat::Int8, ElementFormat::E2M1];
+
+/// One resolvable kernel implementation family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Portable u64 sub-word kernels — always available, the oracle.
+    Swar,
+    /// x86-64 SSE4.1 (128-bit lanes).
+    Sse41,
+    /// x86-64 AVX2 (256-bit lanes).
+    Avx2,
+    /// AArch64 Advanced SIMD.
+    Neon,
+}
+
+impl KernelPath {
+    /// Every path, fallback first.
+    pub const ALL: [KernelPath; 4] =
+        [KernelPath::Swar, KernelPath::Sse41, KernelPath::Avx2, KernelPath::Neon];
+
+    /// Canonical lowercase name (the `MXSCALE_KERNEL` / `--kernel`
+    /// vocabulary, and the string stamped into bench provenance).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelPath::Swar => "swar",
+            KernelPath::Sse41 => "sse41",
+            KernelPath::Avx2 => "avx2",
+            KernelPath::Neon => "neon",
+        }
+    }
+
+    /// Parse a user-supplied path name.
+    pub fn parse(s: &str) -> Result<KernelPath, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "swar" => Ok(KernelPath::Swar),
+            "sse41" | "sse4.1" => Ok(KernelPath::Sse41),
+            "avx2" => Ok(KernelPath::Avx2),
+            "neon" => Ok(KernelPath::Neon),
+            other => Err(format!(
+                "unknown kernel path `{other}` (expected one of: swar, sse41, avx2, neon)"
+            )),
+        }
+    }
+
+    /// Whether this path can run on a CPU with the given features.
+    pub fn available(&self, f: CpuFeatures) -> bool {
+        match self {
+            KernelPath::Swar => true,
+            KernelPath::Sse41 => f.sse41,
+            KernelPath::Avx2 => f.avx2,
+            KernelPath::Neon => f.neon,
+        }
+    }
+}
+
+// ------------------------------------------------------------ SWAR twins
+//
+// The scalar/SWAR twins of every SIMD kernel, in the exact operand
+// convention the vector legs use. These are the oracles `tests/simd.rs`
+// pins each leg against (lint rule L8 requires the reference), and the
+// bodies every dispatcher falls back to.
+
+/// 8×8×8 i8 tile dot, scalar: `dots[i*8+j] = Σₖ a_dec[i*8+k] ·
+/// b_dec[k*8+j]` — `a_dec` row-major, `b_dec` k-major. Exact in i32.
+pub fn tile_dots_i8_swar(
+    a_dec: &[i8; SQ_ELEMS],
+    b_dec: &[i8; SQ_ELEMS],
+    dots: &mut [i32; SQ_ELEMS],
+) {
+    for i in 0..SQ {
+        for j in 0..SQ {
+            let mut s = 0i32;
+            for k in 0..SQ {
+                s += a_dec[i * SQ + k] as i32 * b_dec[k * SQ + j] as i32;
+            }
+            dots[i * SQ + j] = s;
+        }
+    }
+}
+
+/// E2M1 tile decode, scalar: packed nibbles → integer mantissas in
+/// units of 2⁻¹ ([`e2m1_mant_lut16`]), row-major.
+pub fn decode_tile_e2m1_swar(lanes: &[u64; SQ], out: &mut [i8; SQ_ELEMS]) {
+    let lut = e2m1_mant_lut16();
+    for (i, lane) in lanes.iter().enumerate() {
+        for j in 0..SQ {
+            out[i * SQ + j] = lut[lane_code(*lane, j, 4)];
+        }
+    }
+}
+
+/// 8×8 i8 transpose, scalar.
+pub fn transpose8x8_i8_swar(x: &[i8; SQ_ELEMS], out: &mut [i8; SQ_ELEMS]) {
+    for i in 0..SQ {
+        for j in 0..SQ {
+            out[j * SQ + i] = x[i * SQ + j];
+        }
+    }
+}
+
+/// Max-|v| over a gathered tile, scalar — the exact fold
+/// `shared_exponent` performs (NaN entries are skipped, the
+/// accumulator is never NaN).
+pub fn max_abs_swar(vals: &[f32; SQ_ELEMS]) -> f32 {
+    vals.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// INT8 tile quantizer, scalar: the same `encode` loop
+/// `PackedTensor::quantize_pack` runs, over one gathered tile.
+pub fn quantize_tile_int8_swar(vals: &[f32; SQ_ELEMS], se: i32, lanes: &mut [u64; SQ]) {
+    let inv = exp2i(-se);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        *lane = 0;
+        for j in 0..SQ {
+            let code = ElementFormat::Int8.encode(vals[i * SQ + j] as f64 * inv);
+            *lane |= (code as u64) << (j as u32 * 8);
+        }
+    }
+}
+
+// ----------------------------------------------------------- dispatchers
+//
+// Each dispatcher re-checks the runtime feature snapshot in its guard
+// before entering the `unsafe` call — the availability check and the
+// call are adjacent by construction, which is the entire dispatch-
+// safety argument (DESIGN.md §10). Unavailable or foreign-arch paths
+// fall through to the SWAR twin.
+
+pub(crate) fn tile_dots_i8(
+    path: KernelPath,
+    a_dec: &[i8; SQ_ELEMS],
+    b_dec: &[i8; SQ_ELEMS],
+    dots: &mut [i32; SQ_ELEMS],
+) {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 if detect::features().avx2 => {
+            // SAFETY: AVX2 presence confirmed from the runtime snapshot
+            // in the guard on the line above.
+            unsafe { x86::tile_dots_i8_avx2(a_dec, b_dec, dots) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Sse41 if detect::features().sse41 => {
+            // SAFETY: SSE4.1 presence confirmed from the runtime
+            // snapshot in the guard on the line above.
+            unsafe { x86::tile_dots_i8_sse41(a_dec, b_dec, dots) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon if detect::features().neon => {
+            // SAFETY: NEON presence confirmed from the runtime snapshot
+            // in the guard on the line above.
+            unsafe { neon::tile_dots_i8_neon(a_dec, b_dec, dots) }
+        }
+        _ => tile_dots_i8_swar(a_dec, b_dec, dots),
+    }
+}
+
+pub(crate) fn decode_tile_e2m1(path: KernelPath, lanes: &[u64; SQ], out: &mut [i8; SQ_ELEMS]) {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 if detect::features().avx2 => {
+            // SAFETY: AVX2 presence confirmed from the runtime snapshot
+            // in the guard on the line above.
+            unsafe { x86::decode_tile_e2m1_avx2(lanes, out) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Sse41 if detect::features().sse41 => {
+            // SAFETY: SSE4.1 presence confirmed from the runtime
+            // snapshot in the guard on the line above.
+            unsafe { x86::decode_tile_e2m1_sse41(lanes, out) }
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelPath::Neon if detect::features().neon => {
+            // SAFETY: NEON presence confirmed from the runtime snapshot
+            // in the guard on the line above.
+            unsafe { neon::decode_tile_e2m1_neon(lanes, out) }
+        }
+        _ => decode_tile_e2m1_swar(lanes, out),
+    }
+}
+
+pub(crate) fn transpose8x8_i8(path: KernelPath, x: &[i8; SQ_ELEMS], out: &mut [i8; SQ_ELEMS]) {
+    match path {
+        // SSE2 is x86-64 baseline: any vector path may use it, no gate
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 | KernelPath::Sse41 => x86::transpose8x8_i8_sse2(x, out),
+        _ => transpose8x8_i8_swar(x, out),
+    }
+}
+
+pub(crate) fn max_abs(path: KernelPath, vals: &[f32; SQ_ELEMS]) -> f32 {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 if detect::features().avx2 => {
+            // SAFETY: AVX2 presence confirmed from the runtime snapshot
+            // in the guard on the line above.
+            unsafe { x86::max_abs_avx2(vals) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Sse41 if detect::features().sse41 => {
+            // SAFETY: SSE4.1 presence confirmed from the runtime
+            // snapshot in the guard on the line above.
+            unsafe { x86::max_abs_sse41(vals) }
+        }
+        _ => max_abs_swar(vals),
+    }
+}
+
+pub(crate) fn quantize_tile_int8(
+    path: KernelPath,
+    vals: &[f32; SQ_ELEMS],
+    se: i32,
+    lanes: &mut [u64; SQ],
+) {
+    match path {
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Avx2 if detect::features().avx2 => {
+            // SAFETY: AVX2 presence confirmed from the runtime snapshot
+            // in the guard on the line above.
+            unsafe { x86::quantize_tile_int8_avx2(vals, se, lanes) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        KernelPath::Sse41 if detect::features().sse41 => {
+            // SAFETY: SSE4.1 presence confirmed from the runtime
+            // snapshot in the guard on the line above.
+            unsafe { x86::quantize_tile_int8_sse41(vals, se, lanes) }
+        }
+        _ => quantize_tile_int8_swar(vals, se, lanes),
+    }
+}
+
+// --------------------------------------------------------------- drivers
+
+/// Decode one packed tile to row-major i8 mantissas for the i8 tile
+/// dot: INT8 codes are copied (lane bytes *are* the two's-complement
+/// values), E2M1 nibbles go through the mantissa LUT. Only called for
+/// [`SIMD_FORMATS`].
+fn decode_tile(path: KernelPath, fmt: ElementFormat, tile: &[u64], out: &mut [i8; SQ_ELEMS]) {
+    match fmt {
+        ElementFormat::Int8 => {
+            for (i, lane) in tile.iter().enumerate() {
+                for (j, byte) in lane.to_le_bytes().iter().enumerate() {
+                    out[i * SQ + j] = *byte as i8;
+                }
+            }
+        }
+        _ => {
+            debug_assert_eq!(fmt, ElementFormat::E2M1);
+            let mut lt = [0u64; SQ];
+            lt.copy_from_slice(tile);
+            decode_tile_e2m1(path, &lt, out);
+        }
+    }
+}
+
+/// `a @ b` on the given kernel path — bit-identical to
+/// [`packed_gemm`] (which it delegates to for SWAR and the non-SIMD
+/// formats). The right operand's natural row lanes already are the
+/// k-major layout the tile dot consumes, so unlike the SWAR kernel no
+/// tile transpose happens here: decode replaces it.
+pub fn gemm(path: KernelPath, a: &PackedTensor, b: &PackedTensor) -> Mat {
+    if path == KernelPath::Swar || !SIMD_FORMATS.contains(&a.format) {
+        return packed_gemm(a, b);
+    }
+    assert_eq!(a.format, b.format, "format mismatch");
+    assert_eq!(a.cols, b.rows, "inner dims mismatch");
+    let fmt = a.format;
+    let unit = unit_exp(fmt);
+    // pre-decode every b tile once (k-major: natural packed rows)
+    let mut bdec = vec![[0i8; SQ_ELEMS]; b.brows * b.bcols];
+    for (t, dt) in bdec.iter_mut().enumerate() {
+        decode_tile(path, fmt, &b.lanes[t * SQ..(t + 1) * SQ], dt);
+    }
+    let (m, n) = (a.rows, b.cols);
+    let kb_n = a.bcols;
+    debug_assert_eq!(kb_n, b.brows);
+    let mut out = Mat::zeros(m, n);
+    let min_chunks = band_min_chunks(m * n, a.brows);
+    par::par_chunks_mut(&mut out.data, SQ * n, min_chunks, |bi, band| {
+        let band_rows = if n == 0 { 0 } else { band.len() / n };
+        let mut adec = vec![[0i8; SQ_ELEMS]; kb_n];
+        for (kb, dt) in adec.iter_mut().enumerate() {
+            decode_tile(path, fmt, a.tile(bi, kb), dt);
+        }
+        let mut dots = [0i32; SQ_ELEMS];
+        for bj in 0..b.bcols {
+            let mut acc = [0.0f32; SQ_ELEMS];
+            for kb in 0..kb_n {
+                let se = a.scale_exp(bi, kb) + b.scale_exp(kb, bj) + unit;
+                let scale = exp2i(se);
+                tile_dots_i8(path, &adec[kb], &bdec[kb * b.bcols + bj], &mut dots);
+                // row-major accumulation — the same per-element f32
+                // chain order as the SWAR tile_partials
+                for (s, d) in acc.iter_mut().zip(dots.iter()) {
+                    *s += (*d as f64 * scale) as f32;
+                }
+            }
+            for i in 0..band_rows {
+                for j in 0..SQ {
+                    let c = bj * SQ + j;
+                    if c < n {
+                        band[i * n + c] = acc[i * SQ + j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `a @ bᵀ` on the given kernel path — bit-identical to
+/// [`packed_gemm_nt`]. Here the decode *does* transpose each right
+/// tile (8×8 i8 unpack ladder) to recover k-major order, mirroring
+/// how the SWAR nt-kernel gets its transposed consumption for free.
+pub fn gemm_nt(path: KernelPath, a: &PackedTensor, b: &PackedTensor) -> Mat {
+    if path == KernelPath::Swar || !SIMD_FORMATS.contains(&a.format) {
+        return packed_gemm_nt(a, b);
+    }
+    assert_eq!(a.format, b.format, "format mismatch");
+    assert_eq!(a.cols, b.cols, "inner dims mismatch");
+    let fmt = a.format;
+    let unit = unit_exp(fmt);
+    // decode + transpose every b tile once (row-major -> k-major)
+    let mut bdec = vec![[0i8; SQ_ELEMS]; b.brows * b.bcols];
+    let mut tmp = [0i8; SQ_ELEMS];
+    for (t, dt) in bdec.iter_mut().enumerate() {
+        decode_tile(path, fmt, &b.lanes[t * SQ..(t + 1) * SQ], &mut tmp);
+        transpose8x8_i8(path, &tmp, dt);
+    }
+    let (m, n) = (a.rows, b.rows);
+    let kb_n = a.bcols;
+    debug_assert_eq!(kb_n, b.bcols);
+    let mut out = Mat::zeros(m, n);
+    let min_chunks = band_min_chunks(m * n, a.brows);
+    par::par_chunks_mut(&mut out.data, SQ * n, min_chunks, |bi, band| {
+        let band_rows = if n == 0 { 0 } else { band.len() / n };
+        let mut adec = vec![[0i8; SQ_ELEMS]; kb_n];
+        for (kb, dt) in adec.iter_mut().enumerate() {
+            decode_tile(path, fmt, a.tile(bi, kb), dt);
+        }
+        let mut dots = [0i32; SQ_ELEMS];
+        for bj in 0..b.brows {
+            let mut acc = [0.0f32; SQ_ELEMS];
+            for kb in 0..kb_n {
+                let se = a.scale_exp(bi, kb) + b.scale_exp(bj, kb) + unit;
+                let scale = exp2i(se);
+                tile_dots_i8(path, &adec[kb], &bdec[bj * b.bcols + kb], &mut dots);
+                for (s, d) in acc.iter_mut().zip(dots.iter()) {
+                    *s += (*d as f64 * scale) as f32;
+                }
+            }
+            for i in 0..band_rows {
+                for j in 0..SQ {
+                    let c = bj * SQ + j;
+                    if c < n {
+                        band[i * n + c] = acc[i * SQ + j];
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// Quantize a dense matrix straight to packed form on the given
+/// kernel path — bit-identical to [`PackedTensor::quantize_pack`]
+/// (codes *and* scales): the lane-wise max reduction feeds the exact
+/// same exponent derivation ([`shared_exponent_from_max`]), and the
+/// INT8 vector quantizer reproduces the scalar encode rounding.
+pub fn quantize_pack(path: KernelPath, m: &Mat, format: ElementFormat) -> PackedTensor {
+    if path == KernelPath::Swar || !SIMD_FORMATS.contains(&format) {
+        return PackedTensor::quantize_pack(m, format);
+    }
+    let brows = m.rows.div_ceil(SQ);
+    let bcols = m.cols.div_ceil(SQ);
+    let w = format.bits();
+    let tiles = par::par_map(brows * bcols, PAR_MIN_BLOCKS, |t| {
+        let (br, bc) = (t / bcols, t % bcols);
+        let mut vals = [0.0f32; SQ_ELEMS];
+        for i in 0..SQ {
+            for j in 0..SQ {
+                let (r, c) = (br * SQ + i, bc * SQ + j);
+                if r < m.rows && c < m.cols {
+                    vals[i * SQ + j] = m.at(r, c);
+                }
+            }
+        }
+        let se = shared_exponent_from_max(max_abs(path, &vals), format);
+        let mut lanes = [0u64; SQ];
+        match format {
+            ElementFormat::Int8 => quantize_tile_int8(path, &vals, se, &mut lanes),
+            _ => {
+                // E2M1: vectorized max reduction above, scalar encode
+                // for the 4-bit pack (16 codes — encode is a handful
+                // of compares, not the bottleneck)
+                let inv = exp2i(-se);
+                for (i, lane) in lanes.iter_mut().enumerate() {
+                    for j in 0..SQ {
+                        let code = format.encode(vals[i * SQ + j] as f64 * inv);
+                        *lane |= (code as u64) << (j as u32 * w);
+                    }
+                }
+            }
+        }
+        (se as i8, lanes)
+    });
+    let mut scales = Vec::with_capacity(tiles.len());
+    let mut lanes = Vec::with_capacity(tiles.len() * SQ);
+    for (se, tl) in tiles {
+        scales.push(se);
+        lanes.extend_from_slice(&tl);
+    }
+    PackedTensor { rows: m.rows, cols: m.cols, format, brows, bcols, scales, lanes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::packed::dot8_i8_scalar;
+    use crate::util::rng::Pcg64;
+
+    /// Every path whose guard can actually fire on this machine.
+    fn live_paths() -> Vec<KernelPath> {
+        let f = detect::features();
+        KernelPath::ALL.iter().copied().filter(|p| p.available(f)).collect()
+    }
+
+    fn rand_dec(rng: &mut Pcg64) -> [i8; SQ_ELEMS] {
+        let mut d = [0i8; SQ_ELEMS];
+        for v in d.iter_mut() {
+            *v = (rng.next_u64() as u8 as i8).clamp(-127, 127);
+        }
+        d
+    }
+
+    #[test]
+    fn swar_tile_dot_matches_lane_oracle() {
+        // the twin must agree with the packed module's scalar lane dot
+        let mut rng = Pcg64::new(0x51D0);
+        for _ in 0..200 {
+            let a = rand_dec(&mut rng);
+            let b = rand_dec(&mut rng);
+            let mut dots = [0i32; SQ_ELEMS];
+            tile_dots_i8_swar(&a, &b, &mut dots);
+            for i in 0..SQ {
+                let mut al = [0i8; SQ];
+                al.copy_from_slice(&a[i * SQ..(i + 1) * SQ]);
+                for j in 0..SQ {
+                    let mut bl = [0i8; SQ];
+                    for (k, slot) in bl.iter_mut().enumerate() {
+                        *slot = b[k * SQ + j];
+                    }
+                    let la = u64::from_le_bytes(al.map(|v| v as u8));
+                    let lb = u64::from_le_bytes(bl.map(|v| v as u8));
+                    assert_eq!(dots[i * SQ + j], dot8_i8_scalar(la, lb), "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_live_path_tile_dot_matches_swar() {
+        let mut rng = Pcg64::new(0xD1D0);
+        for path in live_paths() {
+            for _ in 0..100 {
+                let a = rand_dec(&mut rng);
+                let b = rand_dec(&mut rng);
+                let mut want = [0i32; SQ_ELEMS];
+                let mut got = [0i32; SQ_ELEMS];
+                tile_dots_i8_swar(&a, &b, &mut want);
+                tile_dots_i8(path, &a, &b, &mut got);
+                assert_eq!(got, want, "{path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_live_path_e2m1_decode_matches_swar() {
+        let mut rng = Pcg64::new(0xE2E1);
+        for path in live_paths() {
+            for _ in 0..100 {
+                let mut lanes = [0u64; SQ];
+                for l in lanes.iter_mut() {
+                    *l = rng.next_u64() & 0xffff_ffff;
+                }
+                let mut want = [0i8; SQ_ELEMS];
+                let mut got = [0i8; SQ_ELEMS];
+                decode_tile_e2m1_swar(&lanes, &mut want);
+                decode_tile_e2m1(path, &lanes, &mut got);
+                assert_eq!(got, want, "{path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_live_path_transpose_matches_swar() {
+        let mut rng = Pcg64::new(0x7870);
+        for path in live_paths() {
+            for _ in 0..100 {
+                let x = rand_dec(&mut rng);
+                let mut want = [0i8; SQ_ELEMS];
+                let mut got = [0i8; SQ_ELEMS];
+                transpose8x8_i8_swar(&x, &mut want);
+                transpose8x8_i8(path, &x, &mut got);
+                assert_eq!(got, want, "{path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_live_path_max_abs_matches_swar() {
+        let mut rng = Pcg64::new(0x3A8);
+        for path in live_paths() {
+            for round in 0..200 {
+                let mut vals = [0.0f32; SQ_ELEMS];
+                for v in vals.iter_mut() {
+                    *v = rng.wide_f32();
+                }
+                // seed pathological entries: NaN, ±inf, -0.0
+                if round % 4 == 0 {
+                    vals[round % SQ_ELEMS] = f32::NAN;
+                    vals[(round + 7) % SQ_ELEMS] = f32::NEG_INFINITY;
+                    vals[(round + 13) % SQ_ELEMS] = -0.0;
+                }
+                let want = max_abs_swar(&vals);
+                let got = max_abs(path, &vals);
+                assert_eq!(got.to_bits(), want.to_bits(), "{path:?} round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn every_live_path_int8_quantize_matches_swar() {
+        let mut rng = Pcg64::new(0x0148);
+        for path in live_paths() {
+            for round in 0..200 {
+                let mut vals = [0.0f32; SQ_ELEMS];
+                for v in vals.iter_mut() {
+                    *v = rng.wide_f32();
+                }
+                if round % 5 == 0 {
+                    vals[round % SQ_ELEMS] = f32::NAN;
+                    vals[(round + 3) % SQ_ELEMS] = -0.0;
+                    vals[(round + 9) % SQ_ELEMS] = f32::INFINITY;
+                }
+                let se = shared_exponent_from_max(max_abs_swar(&vals), ElementFormat::Int8);
+                let mut want = [0u64; SQ];
+                let mut got = [0u64; SQ];
+                quantize_tile_int8_swar(&vals, se, &mut want);
+                quantize_tile_int8(path, &vals, se, &mut got);
+                assert_eq!(got, want, "{path:?} round {round} se {se}");
+            }
+        }
+    }
+
+    #[test]
+    fn swar_quantize_twin_matches_quantize_pack() {
+        // the twin is defined as "the same loop quantize_pack runs";
+        // pin that on a full 8x8 block
+        let mut rng = Pcg64::new(0x9A57);
+        for _ in 0..50 {
+            let m = Mat::from_fn(SQ, SQ, |_, _| rng.wide_f32());
+            let p = PackedTensor::quantize_pack(&m, ElementFormat::Int8);
+            let mut vals = [0.0f32; SQ_ELEMS];
+            for i in 0..SQ {
+                for j in 0..SQ {
+                    vals[i * SQ + j] = m.at(i, j);
+                }
+            }
+            let se = shared_exponent_from_max(max_abs_swar(&vals), ElementFormat::Int8);
+            assert_eq!(se, p.scale_exp(0, 0));
+            let mut lanes = [0u64; SQ];
+            quantize_tile_int8_swar(&vals, se, &mut lanes);
+            assert_eq!(&lanes[..], p.tile(0, 0));
+        }
+    }
+
+    #[test]
+    fn driver_gemm_matches_packed_on_live_paths() {
+        let bits = |m: &Mat| m.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let mut rng = Pcg64::new(0x6E33);
+        for fmt in SIMD_FORMATS {
+            for (m, k, n) in [(8, 8, 8), (16, 24, 16), (13, 9, 17)] {
+                let am = Mat::from_fn(m, k, |_, _| rng.wide_f32().clamp(-1e6, 1e6));
+                let bm = Mat::from_fn(k, n, |_, _| rng.wide_f32().clamp(-1e6, 1e6));
+                let pa = PackedTensor::quantize_pack(&am, fmt);
+                let pb = PackedTensor::quantize_pack(&bm, fmt);
+                let pbt = PackedTensor::quantize_pack(&bm.transpose(), fmt);
+                let want = packed_gemm(&pa, &pb);
+                let want_nt = packed_gemm_nt(&pa, &pbt);
+                for path in live_paths() {
+                    let got = gemm(path, &pa, &pb);
+                    assert_eq!(bits(&got), bits(&want), "{fmt:?} {path:?} gemm");
+                    let got_nt = gemm_nt(path, &pa, &pbt);
+                    assert_eq!(bits(&got_nt), bits(&want_nt), "{fmt:?} {path:?} nt");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn driver_quantize_pack_matches_scalar_on_live_paths() {
+        let mut rng = Pcg64::new(0x9B17);
+        for fmt in SIMD_FORMATS {
+            for (r, c) in [(8, 8), (13, 21), (64, 64)] {
+                let m = Mat::from_fn(r, c, |_, _| rng.wide_f32());
+                let want = PackedTensor::quantize_pack(&m, fmt);
+                for path in live_paths() {
+                    let got = quantize_pack(path, &m, fmt);
+                    assert_eq!(got, want, "{fmt:?} {path:?} {r}x{c}");
+                }
+            }
+        }
+    }
+}

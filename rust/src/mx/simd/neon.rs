@@ -1,0 +1,79 @@
+//! AArch64 NEON kernels — the i8 tile dot and the E2M1 nibble-LUT
+//! decode, mirroring the x86 legs. Max-abs, transpose, and the INT8
+//! quantizer fall back to the SWAR twins on this architecture (the
+//! GeMM hot loop is the dot; the others are O(n²) prep), which keeps
+//! the bit-identity contract trivially: fewer legs, same oracle.
+//!
+//! Operand conventions are identical to [`super::x86`]: `a_dec`
+//! row-major, `b_dec` k-major, `dots[i*8+j] = Σₖ a·b` exact in i32.
+
+#![cfg(target_arch = "aarch64")]
+
+use crate::mx::packed::e2m1_mant_lut16;
+use crate::mx::tensor::{SQ, SQ_ELEMS};
+use std::arch::aarch64::*;
+
+/// NEON 8×8×8 i8 tile dot: widen the eight k-major `b` rows to i16
+/// once, then per output row broadcast each `a` element and
+/// multiply-accumulate into two i32 quad accumulators (`vmlal_s16`).
+/// Products ≤ 127² fit i16 exactly; sums fit i32 — no saturation.
+///
+/// # Safety
+/// Requires NEON. Callers must have confirmed `neon` in the runtime
+/// feature snapshot (the dispatcher in `mx::simd` does).
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn tile_dots_i8_neon(
+    a_dec: &[i8; SQ_ELEMS],
+    b_dec: &[i8; SQ_ELEMS],
+    dots: &mut [i32; SQ_ELEMS],
+) {
+    let mut bw = [vdupq_n_s16(0); SQ];
+    for (k, slot) in bw.iter_mut().enumerate() {
+        *slot = vmovl_s8(vld1_s8(b_dec.as_ptr().add(SQ * k)));
+    }
+    for i in 0..SQ {
+        let mut acc_lo = vdupq_n_s32(0);
+        let mut acc_hi = vdupq_n_s32(0);
+        for (k, bk) in bw.iter().enumerate() {
+            let av = vdup_n_s16(a_dec[SQ * i + k] as i16);
+            acc_lo = vmlal_s16(acc_lo, vget_low_s16(*bk), av);
+            acc_hi = vmlal_s16(acc_hi, vget_high_s16(*bk), av);
+        }
+        vst1q_s32(dots.as_mut_ptr().add(SQ * i), acc_lo);
+        vst1q_s32(dots.as_mut_ptr().add(SQ * i + 4), acc_hi);
+    }
+}
+
+/// NEON E2M1 tile decode: nibble split + `vqtbl1q_s8` 16-entry LUT
+/// ([`e2m1_mant_lut16`]), two passes of four lanes. Output matches the
+/// SWAR twin byte for byte.
+///
+/// # Safety
+/// Requires NEON. Callers must have confirmed `neon` in the runtime
+/// feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn decode_tile_e2m1_neon(lanes: &[u64; SQ], out: &mut [i8; SQ_ELEMS]) {
+    let lut = vld1q_s8(e2m1_mant_lut16().as_ptr());
+    let mask = vdupq_n_u8(0x0f);
+    for half in 0..2 {
+        let l = 4 * half;
+        // four lanes' low u32s = 16 packed-nibble bytes
+        let mut buf = [0u8; 16];
+        for (q, lane) in lanes[l..l + 4].iter().enumerate() {
+            buf[4 * q..4 * q + 4].copy_from_slice(&(*lane as u32).to_le_bytes());
+        }
+        let x = vld1q_u8(buf.as_ptr());
+        let lo = vandq_u8(x, mask);
+        let hi = vandq_u8(vshrq_n_u8::<4>(x), mask);
+        // interleave even/odd nibbles back into code order j = 0..8
+        let idx01 = vzip1q_u8(lo, hi); // rows l, l+1
+        let idx23 = vzip2q_u8(lo, hi); // rows l+2, l+3
+        let op = out.as_mut_ptr().add(32 * half);
+        vst1q_s8(op, vqtbl1q_s8(lut, idx01));
+        vst1q_s8(op.add(16), vqtbl1q_s8(lut, idx23));
+    }
+}

@@ -1,0 +1,350 @@
+//! x86-64 `std::arch` kernels (AVX2 + SSE4.1 legs).
+//!
+//! Every `#[target_feature]` function here is dispatched through
+//! [`crate::mx::simd`]'s guard arms, which check the one-time runtime
+//! feature snapshot ([`crate::mx::simd::detect::features`]) immediately
+//! before the `unsafe` call — the dispatch-safety argument DESIGN.md
+//! §10 spells out. Each kernel has a SWAR twin in the parent module
+//! and is bit-identical to it (asserted with `==` on bits by the unit
+//! tests there and the forced-path matrix in `tests/simd.rs`); lint
+//! rule L8 enforces the twin/naming/cfg contract mechanically.
+//!
+//! Operand conventions match the twins exactly:
+//! * `a_dec` — left tile decoded row-major: `a_dec[i*8 + k] = A[i][k]`.
+//! * `b_dec` — right tile decoded k-major: `b_dec[k*8 + j] = B[k][j]`.
+//! * `dots[i*8 + j] = Σₖ a_dec[i*8+k] · b_dec[k*8+j]`, exact in i32
+//!   (|values| ≤ 127, so |Σ| ≤ 8·127² < 2¹⁷ — no saturation anywhere).
+
+#![cfg(target_arch = "x86_64")]
+
+use crate::mx::element::exp2i;
+use crate::mx::packed::e2m1_mant_lut16;
+use crate::mx::tensor::{SQ, SQ_ELEMS};
+use std::arch::x86_64::*;
+
+// ----------------------------------------------------------- i8 tile dot
+
+/// AVX2 8×8×8 i8 tile dot (see module doc for the operand contract).
+///
+/// The eight k-major `b` rows are widened once into four 256-bit i16
+/// vectors, each interleaving two adjacent k-rows per 32-bit group;
+/// `_mm256_madd_epi16` then computes `a[i][2kp]·B[2kp][j] +
+/// a[i][2kp+1]·B[2kp+1][j]` for all eight `j` at once. No intermediate
+/// saturates: products ≤ 127² fit i16·i16→i32 madd exactly.
+///
+/// # Safety
+/// Requires AVX2. Callers must have confirmed `avx2` in the runtime
+/// feature snapshot (the dispatcher in `mx::simd` does).
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn tile_dots_i8_avx2(
+    a_dec: &[i8; SQ_ELEMS],
+    b_dec: &[i8; SQ_ELEMS],
+    dots: &mut [i32; SQ_ELEMS],
+) {
+    // widen b row pairs: bk16[kp] holds i16 lanes (2j) = B[2kp][j] and
+    // (2j+1) = B[2kp+1][j] for j = 0..8
+    let bp = b_dec.as_ptr();
+    let mut bk16 = [_mm256_setzero_si256(); 4];
+    for (kp, slot) in bk16.iter_mut().enumerate() {
+        let r0 = _mm_loadl_epi64(bp.add(16 * kp) as *const __m128i);
+        let r1 = _mm_loadl_epi64(bp.add(16 * kp + 8) as *const __m128i);
+        let inter = _mm_unpacklo_epi8(r0, r1);
+        *slot = _mm256_cvtepi8_epi16(inter);
+    }
+    for i in 0..SQ {
+        let mut acc = _mm256_setzero_si256();
+        for (kp, bk) in bk16.iter().enumerate() {
+            let lo = a_dec[SQ * i + 2 * kp] as i16 as u16 as u32;
+            let hi = a_dec[SQ * i + 2 * kp + 1] as i16 as u16 as u32;
+            let av = _mm256_set1_epi32((lo | (hi << 16)) as i32);
+            acc = _mm256_add_epi32(acc, _mm256_madd_epi16(av, *bk));
+        }
+        _mm256_storeu_si256(dots.as_mut_ptr().add(SQ * i) as *mut __m256i, acc);
+    }
+}
+
+/// SSE4.1 leg of [`tile_dots_i8_avx2`]: same pairing trick over two
+/// 128-bit halves (columns 0..4 and 4..8).
+///
+/// # Safety
+/// Requires SSE4.1 (`_mm_cvtepi8_epi16`). Callers must have confirmed
+/// `sse4.1` in the runtime feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn tile_dots_i8_sse41(
+    a_dec: &[i8; SQ_ELEMS],
+    b_dec: &[i8; SQ_ELEMS],
+    dots: &mut [i32; SQ_ELEMS],
+) {
+    let bp = b_dec.as_ptr();
+    let mut blo = [_mm_setzero_si128(); 4];
+    let mut bhi = [_mm_setzero_si128(); 4];
+    for kp in 0..4 {
+        let r0 = _mm_loadl_epi64(bp.add(16 * kp) as *const __m128i);
+        let r1 = _mm_loadl_epi64(bp.add(16 * kp + 8) as *const __m128i);
+        let inter = _mm_unpacklo_epi8(r0, r1);
+        blo[kp] = _mm_cvtepi8_epi16(inter);
+        bhi[kp] = _mm_cvtepi8_epi16(_mm_srli_si128::<8>(inter));
+    }
+    for i in 0..SQ {
+        let mut acc_lo = _mm_setzero_si128();
+        let mut acc_hi = _mm_setzero_si128();
+        for kp in 0..4 {
+            let lo = a_dec[SQ * i + 2 * kp] as i16 as u16 as u32;
+            let hi = a_dec[SQ * i + 2 * kp + 1] as i16 as u16 as u32;
+            let pair = _mm_set1_epi32((lo | (hi << 16)) as i32);
+            acc_lo = _mm_add_epi32(acc_lo, _mm_madd_epi16(pair, blo[kp]));
+            acc_hi = _mm_add_epi32(acc_hi, _mm_madd_epi16(pair, bhi[kp]));
+        }
+        _mm_storeu_si128(dots.as_mut_ptr().add(SQ * i) as *mut __m128i, acc_lo);
+        _mm_storeu_si128(dots.as_mut_ptr().add(SQ * i + 4) as *mut __m128i, acc_hi);
+    }
+}
+
+// ---------------------------------------------------------- E2M1 decode
+
+/// AVX2 E2M1 tile decode: all 64 nibble codes of one packed tile →
+/// integer mantissas (units of 2⁻¹, [`e2m1_mant_lut16`]) via one
+/// 16-entry `_mm256_shuffle_epi8` LUT. Output is row-major i8, ready
+/// for the i8 tile-dot kernels (products land in 2⁻² units — the same
+/// unit the SWAR pair LUT uses, so sums agree exactly).
+///
+/// # Safety
+/// Requires AVX2. Callers must have confirmed `avx2` in the runtime
+/// feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn decode_tile_e2m1_avx2(lanes: &[u64; SQ], out: &mut [i8; SQ_ELEMS]) {
+    // each lane's 8 nibbles live in its low u32; gather all 8 lanes'
+    // low words into one 256-bit register (lane l -> 32-bit group l)
+    let x = _mm256_set_epi32(
+        lanes[7] as u32 as i32,
+        lanes[6] as u32 as i32,
+        lanes[5] as u32 as i32,
+        lanes[4] as u32 as i32,
+        lanes[3] as u32 as i32,
+        lanes[2] as u32 as i32,
+        lanes[1] as u32 as i32,
+        lanes[0] as u32 as i32,
+    );
+    let lut128 = _mm_loadu_si128(e2m1_mant_lut16().as_ptr() as *const __m128i);
+    let lut256 = _mm256_broadcastsi128_si256(lut128);
+    let mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(x, mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(x), mask);
+    // interleave even/odd nibbles back into code order j = 0..8
+    let idx01 = _mm256_unpacklo_epi8(lo, hi); // rows 0,1 | rows 4,5
+    let idx23 = _mm256_unpackhi_epi8(lo, hi); // rows 2,3 | rows 6,7
+    let d01 = _mm256_shuffle_epi8(lut256, idx01);
+    let d23 = _mm256_shuffle_epi8(lut256, idx23);
+    let op = out.as_mut_ptr();
+    _mm_storeu_si128(op as *mut __m128i, _mm256_castsi256_si128(d01));
+    _mm_storeu_si128(op.add(16) as *mut __m128i, _mm256_castsi256_si128(d23));
+    _mm_storeu_si128(op.add(32) as *mut __m128i, _mm256_extracti128_si256::<1>(d01));
+    _mm_storeu_si128(op.add(48) as *mut __m128i, _mm256_extracti128_si256::<1>(d23));
+}
+
+/// SSE4.1 leg of [`decode_tile_e2m1_avx2`]: two 128-bit passes of four
+/// lanes each (`pshufb` is SSSE3, implied by SSE4.1).
+///
+/// # Safety
+/// Requires SSE4.1. Callers must have confirmed `sse4.1` in the
+/// runtime feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn decode_tile_e2m1_sse41(lanes: &[u64; SQ], out: &mut [i8; SQ_ELEMS]) {
+    let lut = _mm_loadu_si128(e2m1_mant_lut16().as_ptr() as *const __m128i);
+    let mask = _mm_set1_epi8(0x0f);
+    for half in 0..2 {
+        let l = 4 * half;
+        let x = _mm_set_epi32(
+            lanes[l + 3] as u32 as i32,
+            lanes[l + 2] as u32 as i32,
+            lanes[l + 1] as u32 as i32,
+            lanes[l] as u32 as i32,
+        );
+        let lo = _mm_and_si128(x, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(x), mask);
+        let idx01 = _mm_unpacklo_epi8(lo, hi); // rows l, l+1
+        let idx23 = _mm_unpackhi_epi8(lo, hi); // rows l+2, l+3
+        let op = out.as_mut_ptr().add(32 * half);
+        _mm_storeu_si128(op as *mut __m128i, _mm_shuffle_epi8(lut, idx01));
+        _mm_storeu_si128(op.add(16) as *mut __m128i, _mm_shuffle_epi8(lut, idx23));
+    }
+}
+
+// ------------------------------------------------------- 8×8 transpose
+
+/// 8×8 i8 matrix transpose through the SSE2 unpack ladder (bytes →
+/// 16-bit pairs → 32-bit quads → 64-bit columns). SSE2 is x86-64
+/// baseline, so this is a **safe** function with an internal unsafe
+/// block — no `#[target_feature]`, no runtime gate needed.
+pub(crate) fn transpose8x8_i8_sse2(x: &[i8; SQ_ELEMS], out: &mut [i8; SQ_ELEMS]) {
+    // SAFETY: SSE2 intrinsics are unconditionally available on x86-64
+    // (baseline ISA); loads/stores stay inside the 64-byte arrays.
+    unsafe {
+        let p = x.as_ptr();
+        let r01 = _mm_loadu_si128(p as *const __m128i);
+        let r23 = _mm_loadu_si128(p.add(16) as *const __m128i);
+        let r45 = _mm_loadu_si128(p.add(32) as *const __m128i);
+        let r67 = _mm_loadu_si128(p.add(48) as *const __m128i);
+        // interleave row pairs byte-wise: a0 = r0⊗r1, a1 = r2⊗r3, ...
+        let a0 = _mm_unpacklo_epi8(r01, _mm_srli_si128::<8>(r01));
+        let a1 = _mm_unpacklo_epi8(r23, _mm_srli_si128::<8>(r23));
+        let a2 = _mm_unpacklo_epi8(r45, _mm_srli_si128::<8>(r45));
+        let a3 = _mm_unpacklo_epi8(r67, _mm_srli_si128::<8>(r67));
+        // 16-bit interleave: quads of rows
+        let b0 = _mm_unpacklo_epi16(a0, a1);
+        let b1 = _mm_unpackhi_epi16(a0, a1);
+        let b2 = _mm_unpacklo_epi16(a2, a3);
+        let b3 = _mm_unpackhi_epi16(a2, a3);
+        // 32-bit interleave: full 8-byte columns, two per register
+        let c0 = _mm_unpacklo_epi32(b0, b2); // cols 0,1
+        let c1 = _mm_unpackhi_epi32(b0, b2); // cols 2,3
+        let c2 = _mm_unpacklo_epi32(b1, b3); // cols 4,5
+        let c3 = _mm_unpackhi_epi32(b1, b3); // cols 6,7
+        let op = out.as_mut_ptr();
+        _mm_storeu_si128(op as *mut __m128i, c0);
+        _mm_storeu_si128(op.add(16) as *mut __m128i, c1);
+        _mm_storeu_si128(op.add(32) as *mut __m128i, c2);
+        _mm_storeu_si128(op.add(48) as *mut __m128i, c3);
+    }
+}
+
+// ------------------------------------------------------------- max-abs
+
+/// AVX2 max-|v| reduction over one gathered 64-element tile. `|v|`
+/// is the **first** `maxps` operand: `maxps` returns its second
+/// operand when the first is NaN, which reproduces the scalar
+/// `fold(0.0, m.max(v.abs()))` NaN-skipping semantics bit for bit
+/// (the accumulator is never NaN).
+///
+/// # Safety
+/// Requires AVX2. Callers must have confirmed `avx2` in the runtime
+/// feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument array.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn max_abs_avx2(vals: &[f32; SQ_ELEMS]) -> f32 {
+    let sign = _mm256_castsi256_ps(_mm256_set1_epi32(0x7fff_ffff));
+    let mut acc = _mm256_setzero_ps();
+    for chunk in 0..8 {
+        let v = _mm256_loadu_ps(vals.as_ptr().add(8 * chunk));
+        acc = _mm256_max_ps(_mm256_and_ps(v, sign), acc);
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    lanes.iter().fold(0.0f32, |m, &v| m.max(v))
+}
+
+/// SSE4.1 leg of [`max_abs_avx2`] (128-bit lanes).
+///
+/// # Safety
+/// Requires SSE4.1 (kernel family gate; the ops are SSE baseline).
+/// Callers must have confirmed `sse4.1` in the runtime snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument array.
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn max_abs_sse41(vals: &[f32; SQ_ELEMS]) -> f32 {
+    let sign = _mm_castsi128_ps(_mm_set1_epi32(0x7fff_ffff));
+    let mut acc = _mm_setzero_ps();
+    for chunk in 0..16 {
+        let v = _mm_loadu_ps(vals.as_ptr().add(4 * chunk));
+        acc = _mm_max_ps(_mm_and_ps(v, sign), acc);
+    }
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    lanes.iter().fold(0.0f32, |m, &v| m.max(v))
+}
+
+// ----------------------------------------------------- INT8 quantize
+
+/// AVX2 INT8 tile quantizer: 64 gathered f32s → 8 packed u64 lanes,
+/// bit-identical to the scalar `encode` loop. The scalar path computes
+/// `rne(v·2⁻ˢᵉ·64).clamp(±127)` in f64; here the two power-of-two
+/// factors fuse into one exact f64 multiplier (2^(6−se), |exponent| ≤
+/// 133 — no over/underflow), `roundpd` supplies round-ties-even, and a
+/// compare-ordered mask zeroes NaNs **before** the clamp (matching the
+/// scalar `as i32` NaN→0 collapse).
+///
+/// # Safety
+/// Requires AVX2. Callers must have confirmed `avx2` in the runtime
+/// feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn quantize_tile_int8_avx2(
+    vals: &[f32; SQ_ELEMS],
+    se: i32,
+    lanes: &mut [u64; SQ],
+) {
+    let mul = _mm256_set1_pd(exp2i(6 - se));
+    let lo_c = _mm256_set1_pd(-127.0);
+    let hi_c = _mm256_set1_pd(127.0);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        let mut q8 = [_mm_setzero_si128(); 2];
+        for (h, qs) in q8.iter_mut().enumerate() {
+            let v = _mm_loadu_ps(vals.as_ptr().add(SQ * i + 4 * h));
+            let mut x = _mm256_cvtps_pd(v);
+            let ord = _mm256_cmp_pd::<_CMP_ORD_Q>(x, x);
+            x = _mm256_and_pd(x, ord);
+            x = _mm256_mul_pd(x, mul);
+            x = _mm256_round_pd::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x);
+            x = _mm256_max_pd(x, lo_c);
+            x = _mm256_min_pd(x, hi_c);
+            *qs = _mm256_cvtpd_epi32(x);
+        }
+        // 8 i32 codes in [-127,127] -> 8 bytes, no saturation possible
+        let q16 = _mm_packs_epi32(q8[0], q8[1]);
+        let q = _mm_packs_epi16(q16, _mm_setzero_si128());
+        *lane = _mm_cvtsi128_si64(q) as u64;
+    }
+}
+
+/// SSE4.1 leg of [`quantize_tile_int8_avx2`]: two f32s at a time
+/// through `cvtps_pd` (the 8-byte `loadl_epi64` keeps the final
+/// row-chunk load inside the array).
+///
+/// # Safety
+/// Requires SSE4.1 (`roundpd`). Callers must have confirmed `sse4.1`
+/// in the runtime feature snapshot.
+// SAFETY: `unsafe fn` solely for `#[target_feature]`; all pointer
+// accesses below stay inside the fixed-size argument arrays.
+#[target_feature(enable = "sse4.1")]
+pub(crate) unsafe fn quantize_tile_int8_sse41(
+    vals: &[f32; SQ_ELEMS],
+    se: i32,
+    lanes: &mut [u64; SQ],
+) {
+    let mul = _mm_set1_pd(exp2i(6 - se));
+    let lo_c = _mm_set1_pd(-127.0);
+    let hi_c = _mm_set1_pd(127.0);
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        let mut qs = [_mm_setzero_si128(); 4];
+        for (h, q) in qs.iter_mut().enumerate() {
+            // exactly 8 bytes: a full f32 load at i=7,h=3 would run
+            // off the end of the 256-byte array
+            let v = _mm_castsi128_ps(_mm_loadl_epi64(
+                vals.as_ptr().add(SQ * i + 2 * h) as *const __m128i
+            ));
+            let mut x = _mm_cvtps_pd(v);
+            let ord = _mm_cmpord_pd(x, x);
+            x = _mm_and_pd(x, ord);
+            x = _mm_mul_pd(x, mul);
+            x = _mm_round_pd::<{ _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC }>(x);
+            x = _mm_max_pd(x, lo_c);
+            x = _mm_min_pd(x, hi_c);
+            *q = _mm_cvtpd_epi32(x);
+        }
+        let p01 = _mm_unpacklo_epi64(qs[0], qs[1]);
+        let p23 = _mm_unpacklo_epi64(qs[2], qs[3]);
+        let q16 = _mm_packs_epi32(p01, p23);
+        let q = _mm_packs_epi16(q16, _mm_setzero_si128());
+        *lane = _mm_cvtsi128_si64(q) as u64;
+    }
+}

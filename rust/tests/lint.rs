@@ -1,6 +1,6 @@
 //! mxlint fixture and self-run tests (DESIGN.md §9).
 //!
-//! Each rule L1–L7 gets a known-bad snippet from `lint_fixtures/` that
+//! Each rule L1–L8 gets a known-bad snippet from `lint_fixtures/` that
 //! must fire, plus a negative case that must not. The self-run tests
 //! then hold the real tree to the same standard: HEAD lints clean, the
 //! committed byte-layout manifest is current (which also cross-checks
@@ -228,6 +228,51 @@ fn l7_accepts_unsafe_with_adjacent_safety_comment() {
                    unsafe { *v.get_unchecked(0) }\n}\n";
     let src = [sf("rust/src/mx/block.rs", snippet)];
     assert!(rules::l7(&src, &no_allow()).is_empty());
+}
+
+// ---------------------------------------------------------------- L8
+
+#[test]
+fn l8_flags_ungated_unsuffixed_untwinned_kernels() {
+    let src = [sf("rust/src/mx/simd/x86.rs", include_str!("lint_fixtures/l8_firing.rs"))];
+    let f = rules::l8(&src, &[], &no_allow());
+    assert_eq!(f.len(), 4, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L8", 5));
+    assert!(f[0].message.contains("without an inner"), "{}", f[0].message);
+    assert_eq!(f[1].line, 5);
+    assert!(f[1].message.contains("has no `tile_sum_swar` scalar twin"), "{}", f[1].message);
+    assert_eq!(f[2].line, 10);
+    assert!(f[2].message.contains("without an inner"), "{}", f[2].message);
+    assert_eq!(f[3].line, 10);
+    assert!(f[3].message.contains("not named for its vector path"), "{}", f[3].message);
+}
+
+#[test]
+fn l8_flags_target_feature_outside_the_simd_module() {
+    let src = [sf("rust/src/mx/packed.rs", include_str!("lint_fixtures/l8_firing.rs"))];
+    let f = rules::l8(&src, &[], &no_allow());
+    assert_eq!(f.len(), 2, "{f:?}");
+    assert!(f[0].message.contains("outside rust/src/mx/simd/"), "{}", f[0].message);
+    assert!(f[1].message.contains("outside rust/src/mx/simd/"), "{}", f[1].message);
+}
+
+#[test]
+fn l8_flags_twin_unreferenced_by_tests() {
+    let src = [sf("rust/src/mx/simd/x86.rs", include_str!("lint_fixtures/l8_clean.rs"))];
+    let f = rules::l8(&src, &[], &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(
+        f[0].message.contains("`tile_sum_swar` of `tile_sum_avx2` is not referenced"),
+        "{}",
+        f[0].message
+    );
+}
+
+#[test]
+fn l8_accepts_gated_suffixed_kernel_with_tested_twin() {
+    let src = [sf("rust/src/mx/simd/x86.rs", include_str!("lint_fixtures/l8_clean.rs"))];
+    let tests = [sf("rust/tests/simd.rs", "fn t() { tile_sum_swar(&[0; 64]); }")];
+    assert!(rules::l8(&src, &tests, &no_allow()).is_empty());
 }
 
 // ------------------------------------------------------------ self-run

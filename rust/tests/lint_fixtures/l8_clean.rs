@@ -1,0 +1,13 @@
+//! L8 fixture: a compliant arch-gated kernel with a SWAR twin.
+
+#![cfg(target_arch = "x86_64")]
+
+pub fn tile_sum_swar(x: &[i8; 64]) -> i32 {
+    x.iter().map(|&v| v as i32).sum()
+}
+
+// SAFETY: caller checked avx2 at runtime (dispatcher guard).
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_sum_avx2(x: &[i8; 64]) -> i32 {
+    tile_sum_swar(x)
+}

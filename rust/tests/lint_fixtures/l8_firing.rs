@@ -1,0 +1,12 @@
+//! L8 fixture: arch kernels missing the `#![cfg(target_arch = ...)]`
+//! gate, the vector-path naming suffix, and a SWAR twin.
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn tile_sum_avx2(x: &[i8; 64]) -> i32 {
+    x.iter().map(|&v| v as i32).sum()
+}
+
+#[target_feature(enable = "avx2")]
+pub unsafe fn dot8_fast(x: &[i8; 8]) -> i32 {
+    x.iter().map(|&v| v as i32).sum()
+}

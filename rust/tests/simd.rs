@@ -1,0 +1,262 @@
+//! SIMD kernel conformance: every dispatchable kernel path is
+//! bit-identical to the SWAR twin (which is itself pinned to the dense
+//! fake-quant oracle), forced-unavailable paths are structured errors,
+//! and the `MXSCALE_KERNEL` / `--kernel` overrides resolve as
+//! documented. The twin-oracle tests below reference every `*_swar`
+//! scalar twin by name — lint rule L8 requires exactly that.
+
+use mxscale::backend::{force_kernel_path, KernelRegistry, KERNEL_ENV};
+use mxscale::mx::block::shared_exponent_from_max;
+use mxscale::mx::element::ElementFormat;
+use mxscale::mx::packed::{packed_gemm, packed_gemm_nt, PackedTensor};
+use mxscale::mx::simd::detect::{self, CpuFeatures};
+use mxscale::mx::simd::{
+    decode_tile_e2m1_swar, gemm, gemm_nt, max_abs_swar, quantize_pack, quantize_tile_int8_swar,
+    tile_dots_i8_swar, transpose8x8_i8_swar, KernelPath,
+};
+use mxscale::mx::tensor::{fake_quant_mat_fast, Layout};
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+
+/// The kernel paths this host can actually execute.
+fn live_paths() -> Vec<KernelPath> {
+    let feats = detect::features();
+    KernelPath::ALL.into_iter().filter(|p| p.available(feats)).collect()
+}
+
+fn bits(m: &Mat) -> Vec<u32> {
+    m.data.iter().map(|v| v.to_bits()).collect()
+}
+
+// ------------------------------------------------- forced-path identity
+
+/// The headline invariant: on every path this CPU offers, every format,
+/// and ragged shapes, the SIMD GeMM drivers return the same f32 bits as
+/// the SWAR kernels *and* the dense fake-quant oracle (both cuts).
+#[test]
+fn every_live_path_is_bit_identical_across_formats_and_shapes() {
+    let mut rng = Pcg64::new(0x51D0);
+    for fmt in ALL_ELEMENT_FORMATS {
+        for (m, k, n) in [(8, 8, 8), (16, 24, 16), (13, 9, 17)] {
+            let a = Mat::randn(m, k, 1.0, &mut rng);
+            let w = Mat::randn(k, n, 0.5, &mut rng);
+            let bt = Mat::randn(n, k, 0.5, &mut rng);
+            let pa = PackedTensor::quantize_pack(&a, fmt);
+            let pw = PackedTensor::quantize_pack(&w, fmt);
+            let pbt = PackedTensor::quantize_pack(&bt, fmt);
+            let dense = {
+                let aq = fake_quant_mat_fast(&a, fmt, Layout::Square8x8);
+                let wq = fake_quant_mat_fast(&w, fmt, Layout::Square8x8);
+                aq.matmul_blocked(&wq, 8)
+            };
+            let swar = packed_gemm(&pa, &pw);
+            let swar_nt = packed_gemm_nt(&pa, &pbt);
+            assert_eq!(bits(&dense), bits(&swar), "{fmt:?} {m}x{k}x{n}: swar != dense");
+            for path in live_paths() {
+                let g = gemm(path, &pa, &pw);
+                assert_eq!(
+                    bits(&g),
+                    bits(&swar),
+                    "{fmt:?} {m}x{k}x{n}: gemm path {} != swar",
+                    path.name()
+                );
+                let gnt = gemm_nt(path, &pa, &pbt);
+                assert_eq!(
+                    bits(&gnt),
+                    bits(&swar_nt),
+                    "{fmt:?} {m}x{k}x{n}: gemm_nt path {} != swar",
+                    path.name()
+                );
+            }
+        }
+    }
+}
+
+/// Vectorized quantize-pack produces the exact packed tensor the scalar
+/// path produces — codes, lanes, and scales — on SIMD formats and on
+/// formats that fall back to SWAR alike.
+#[test]
+fn quantize_pack_matches_scalar_on_every_live_path() {
+    let mut rng = Pcg64::new(0xACE5);
+    for fmt in [ElementFormat::Int8, ElementFormat::E2M1, ElementFormat::E4M3] {
+        for (r, c) in [(8, 8), (13, 21), (64, 64)] {
+            let m = Mat::randn(r, c, 1.5, &mut rng);
+            let want = PackedTensor::quantize_pack(&m, fmt);
+            for path in live_paths() {
+                let got = quantize_pack(path, &m, fmt);
+                assert_eq!(got, want, "{fmt:?} {r}x{c}: quantize path {}", path.name());
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------- registry behavior
+
+/// Forcing a path the CPU cannot run is a structured error naming the
+/// path and the always-available fallback — not a panic, and never a
+/// silent downgrade.
+#[test]
+fn forcing_an_unavailable_path_errors_structurally() {
+    for path in [KernelPath::Sse41, KernelPath::Avx2, KernelPath::Neon] {
+        let err = match KernelRegistry::with(CpuFeatures::NONE, Some(path)) {
+            Ok(_) => panic!("forcing {} on a featureless CPU must fail", path.name()),
+            Err(e) => e,
+        };
+        assert!(err.contains(path.name()), "{err}");
+        assert!(err.contains("swar"), "{err}");
+    }
+    // swar is always forceable, and a featureless CPU resolves to it
+    let reg = match KernelRegistry::with(CpuFeatures::NONE, Some(KernelPath::Swar)) {
+        Ok(r) => r,
+        Err(e) => panic!("swar must always be forceable: {e}"),
+    };
+    assert_eq!(reg.default_path(), KernelPath::Swar);
+    let auto = match KernelRegistry::with(CpuFeatures::NONE, None) {
+        Ok(r) => r,
+        Err(e) => panic!("auto on a featureless CPU must succeed: {e}"),
+    };
+    assert_eq!(auto.default_path(), KernelPath::Swar);
+}
+
+#[test]
+fn parse_accepts_the_documented_vocabulary() {
+    assert_eq!(KernelPath::parse("swar"), Ok(KernelPath::Swar));
+    assert_eq!(KernelPath::parse("sse41"), Ok(KernelPath::Sse41));
+    assert_eq!(KernelPath::parse("sse4.1"), Ok(KernelPath::Sse41));
+    assert_eq!(KernelPath::parse("avx2"), Ok(KernelPath::Avx2));
+    assert_eq!(KernelPath::parse("neon"), Ok(KernelPath::Neon));
+    let err = match KernelPath::parse("warp9") {
+        Ok(p) => panic!("bogus path parsed as {}", p.name()),
+        Err(e) => e,
+    };
+    assert!(err.contains("avx2"), "error should name the vocabulary: {err}");
+}
+
+/// `MXSCALE_KERNEL` and the CLI `--kernel` override share process-global
+/// state, so every case runs in this ONE test (the test harness runs
+/// sibling tests in parallel threads).
+#[test]
+fn env_and_cli_overrides_resolve_in_priority_order() {
+    std::env::set_var(KERNEL_ENV, "swar");
+    let r = match KernelRegistry::from_env() {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
+    };
+    assert_eq!(r.forced(), Some(KernelPath::Swar));
+    std::env::set_var(KERNEL_ENV, "warp9");
+    let err = match KernelRegistry::from_env() {
+        Ok(_) => panic!("bogus MXSCALE_KERNEL must fail"),
+        Err(e) => e,
+    };
+    assert!(err.contains(KERNEL_ENV), "{err}");
+    // the CLI force outranks the (still bogus) env var
+    force_kernel_path(Some(KernelPath::Swar));
+    let r = match KernelRegistry::from_env() {
+        Ok(r) => r,
+        Err(e) => panic!("CLI force should outrank the env var: {e}"),
+    };
+    assert_eq!(r.forced(), Some(KernelPath::Swar));
+    force_kernel_path(None);
+    std::env::remove_var(KERNEL_ENV);
+    let r = match KernelRegistry::from_env() {
+        Ok(r) => r,
+        Err(e) => panic!("{e}"),
+    };
+    assert_eq!(r.forced(), None);
+}
+
+// ------------------------------------------------------- twin oracles
+//
+// Each `*_swar` twin is pinned against an independent reference here;
+// the vector legs are pinned against the twins by the identity tests
+// above (and by the in-module per-kernel tests). L8 requires every
+// twin to be referenced from rust/tests/ — this is that reference.
+
+#[test]
+fn tile_dots_swar_twin_matches_an_f64_reference() {
+    let mut rng = Pcg64::new(0x7D07);
+    let mut a = [0i8; 64];
+    let mut b = [0i8; 64];
+    for v in a.iter_mut() {
+        *v = (rng.next_u64() % 255) as i8;
+    }
+    for v in b.iter_mut() {
+        *v = (rng.next_u64() % 255) as i8;
+    }
+    let mut dots = [0i32; 64];
+    tile_dots_i8_swar(&a, &b, &mut dots);
+    for i in 0..8 {
+        for j in 0..8 {
+            let mut want = 0.0f64;
+            for k in 0..8 {
+                want += a[i * 8 + k] as f64 * b[k * 8 + j] as f64;
+            }
+            assert_eq!(dots[i * 8 + j] as f64, want, "({i},{j})");
+        }
+    }
+}
+
+#[test]
+fn decode_e2m1_swar_twin_is_twice_the_format_decode() {
+    let mut lanes = [0u64; 8];
+    for (i, lane) in lanes.iter_mut().enumerate() {
+        for j in 0..8 {
+            let code = ((i * 8 + j) % 16) as u64;
+            *lane |= code << (j * 4);
+        }
+    }
+    let mut out = [0i8; 64];
+    decode_tile_e2m1_swar(&lanes, &mut out);
+    for i in 0..8 {
+        for j in 0..8 {
+            let code = ((i * 8 + j) % 16) as u8;
+            let want = 2.0 * ElementFormat::E2M1.decode(code);
+            assert_eq!(out[i * 8 + j] as f64, want, "code {code}");
+        }
+    }
+}
+
+#[test]
+fn transpose_swar_twin_roundtrips_and_places_elements() {
+    let mut x = [0i8; 64];
+    for (i, v) in x.iter_mut().enumerate() {
+        *v = i as i8;
+    }
+    let mut t = [0i8; 64];
+    let mut back = [0i8; 64];
+    transpose8x8_i8_swar(&x, &mut t);
+    transpose8x8_i8_swar(&t, &mut back);
+    assert_eq!(x, back);
+    for i in 0..8 {
+        for j in 0..8 {
+            assert_eq!(t[j * 8 + i], x[i * 8 + j]);
+        }
+    }
+}
+
+#[test]
+fn max_abs_swar_twin_skips_nan_and_ignores_sign() {
+    let mut vals = [0.0f32; 64];
+    vals[0] = f32::NAN;
+    vals[1] = -3.5;
+    vals[2] = 2.0;
+    vals[3] = -0.0;
+    assert_eq!(max_abs_swar(&vals), 3.5);
+    let zeros = [0.0f32; 64];
+    assert_eq!(max_abs_swar(&zeros), 0.0);
+}
+
+#[test]
+fn quantize_tile_int8_swar_twin_matches_quantize_pack_lanes() {
+    let mut rng = Pcg64::new(0x1A7E);
+    let m = Mat::randn(8, 8, 2.0, &mut rng);
+    let p = PackedTensor::quantize_pack(&m, ElementFormat::Int8);
+    let mut vals = [0.0f32; 64];
+    vals.copy_from_slice(&m.data);
+    let se = shared_exponent_from_max(max_abs_swar(&vals), ElementFormat::Int8);
+    assert_eq!(se as i8, p.scales[0]);
+    let mut lanes = [0u64; 8];
+    quantize_tile_int8_swar(&vals, se, &mut lanes);
+    assert_eq!(&lanes[..], &p.lanes[..8]);
+}
