@@ -5,7 +5,8 @@ baselines and fail on perf regressions.
 Usage:
     check_bench.py --results rust/results --baselines rust/benches/baselines \
                    [--tolerance 0.25] [--require-headline-speedup 2.0] \
-                   [--require-simd-speedup 2.0]
+                   [--require-simd-speedup 2.0] \
+                   [--require-store-max-files 8] [--require-store-advantage 5.0]
     check_bench.py --mxlint-report rust/mxlint_report.json
 
 Rules:
@@ -26,6 +27,13 @@ Rules:
     On hosts without AVX2 the key is absent and the floor passes with a
     notice — the bit-identity tests still ran, only the perf floor is
     unmeasurable there.
+  * ``BENCH_store.json`` must always carry
+    ``sharded.files_per_1k_robots <= --require-store-max-files`` (the
+    sharding container actually consolidates a 1000-robot fleet) and
+    ``partial_read_advantage >= --require-store-advantage`` (a single
+    resume reads at most 1/5th of the shard store; the measured value
+    is trailer + index + own chunks over the CountingStore wrapper),
+    baseline or not.
   * A missing baseline file is a bootstrap, not a failure: the fresh
     JSON is reported so it can be committed as the first baseline.
   * A baseline stamped with a different ``kernel_path`` (or none) is
@@ -129,6 +137,8 @@ def main():
     ap.add_argument("--tolerance", type=float, default=0.25)
     ap.add_argument("--require-headline-speedup", type=float, default=2.0)
     ap.add_argument("--require-simd-speedup", type=float, default=2.0)
+    ap.add_argument("--require-store-max-files", type=float, default=8.0)
+    ap.add_argument("--require-store-advantage", type=float, default=5.0)
     ap.add_argument("--mxlint-report", type=pathlib.Path, default=None)
     args = ap.parse_args()
 
@@ -180,6 +190,35 @@ def main():
                 print(
                     f"{name}: mxint8 avx2-over-swar speedup {simd:.2f}x "
                     f"(floor {args.require_simd_speedup:.2f}x) OK"
+                )
+
+        if name == "BENCH_store.json":
+            files = fresh.get("sharded", {}).get("files_per_1k_robots")
+            if files is None:
+                failures.append(f"{name}: sharded.files_per_1k_robots missing")
+            elif files > args.require_store_max_files:
+                failures.append(
+                    f"{name}: {files:.0f} shard files per 1k robots exceeds the "
+                    f"{args.require_store_max_files:.0f}-file ceiling"
+                )
+            else:
+                print(
+                    f"{name}: {files:.0f} shard files per 1k robots "
+                    f"(ceiling {args.require_store_max_files:.0f}) OK"
+                )
+            advantage = fresh.get("partial_read_advantage")
+            if advantage is None:
+                failures.append(f"{name}: partial_read_advantage missing")
+            elif advantage < args.require_store_advantage:
+                failures.append(
+                    f"{name}: partial-read advantage {advantage:.2f}x is below "
+                    f"the required {args.require_store_advantage:.2f}x floor "
+                    "(a resume is reading too much of the shard store)"
+                )
+            else:
+                print(
+                    f"{name}: partial-read advantage {advantage:.2f}x "
+                    f"(floor {args.require_store_advantage:.2f}x) OK"
                 )
 
         base_path = args.baselines / name

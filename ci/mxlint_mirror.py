@@ -565,6 +565,7 @@ L4_DIRS = [
     "rust/src/trainer/",
     "rust/src/backend/",
     "rust/src/coordinator/",
+    "rust/src/store/",
 ]
 
 
@@ -610,6 +611,21 @@ def checkpoint_version(src):
     return 0
 
 
+def store_version(src):
+    """`const VERSION` from store/mod.rs; 0 when the store layer is absent."""
+    for rel, toks, _ in src:
+        if rel != "rust/src/store/mod.rs":
+            continue
+        for i in range(max(len(toks) - 1, 0)):
+            if _is_i(toks[i], "const") and _is_i(toks[i + 1], "VERSION"):
+                for t in toks[i + 2 : min(i + 10, len(toks))]:
+                    if t[0] == INT:
+                        parsed = int_value(t[1])
+                        if parsed is not None:
+                            return parsed[0] & 0xFFFFFFFF
+    return 0
+
+
 def layout_hashes(src):
     """-> list of (key, hash, line, rel), keyed path-under-src::name."""
     seen = {}
@@ -644,19 +660,36 @@ def l5(src, manifest):
             % (manifest["version"], version),
         ))
         return out
+    sversion = store_version(src)
+    if sversion != manifest.get("store_version", 0):
+        out.append(finding(
+            "L5", "rust/src/store/mod.rs", 1,
+            "rust/lint.manifest records store VERSION %d but store/mod.rs has "
+            "VERSION %d — run `mxlint --update-manifest` and commit the result"
+            % (manifest.get("store_version", 0), sversion),
+        ))
+        return out
     current = layout_hashes(src)
     recorded = dict(manifest["entries"])
     for key, h, line, rel in current:
         if key in recorded:
             want = recorded[key]
             if want != h:
-                out.append(finding(
-                    "L5", rel, line,
-                    "byte-layout of `%s` changed (%016x != manifest %016x) without "
-                    "a VERSION bump (still %d) — bump VERSION in "
-                    "trainer/checkpoint.rs and run `mxlint --update-manifest`"
-                    % (key, h, want, version),
-                ))
+                if key.startswith("store/"):
+                    msg = (
+                        "byte-layout of `%s` changed (%016x != manifest %016x) "
+                        "without a store VERSION bump (still %d) — bump VERSION "
+                        "in store/mod.rs and run `mxlint --update-manifest`"
+                        % (key, h, want, sversion)
+                    )
+                else:
+                    msg = (
+                        "byte-layout of `%s` changed (%016x != manifest %016x) without "
+                        "a VERSION bump (still %d) — bump VERSION in "
+                        "trainer/checkpoint.rs and run `mxlint --update-manifest`"
+                        % (key, h, want, version)
+                    )
+                out.append(finding("L5", rel, line, msg))
         else:
             out.append(finding(
                 "L5", rel, line,
@@ -900,12 +933,15 @@ def _parse_quoted(s, ln):
 
 
 def parse_manifest(text):
-    m = {"version": 0, "entries": []}
+    m = {"version": 0, "store_version": 0, "entries": []}
     saw_version = False
     for idx, raw in enumerate(text.splitlines()):
         ln = idx + 1
         line = raw.strip()
         if not line or line.startswith("#"):
+            continue
+        if line.startswith("store_version "):
+            m["store_version"] = int(line[len("store_version "):].strip())
             continue
         if line.startswith("version "):
             m["version"] = int(line[len("version "):].strip())
@@ -929,6 +965,7 @@ def render_manifest(m):
         "#   cargo run --release --bin mxlint -- --update-manifest",
         "# (or `python3 ci/mxlint_mirror.py --update-manifest` without a toolchain).",
         "version %d" % m["version"],
+        "store_version %d" % m.get("store_version", 0),
     ]
     for k, h in sorted(m["entries"]):
         out.append("fn %s %016x" % (k, h))
@@ -938,6 +975,7 @@ def render_manifest(m):
 def current_manifest(src):
     return {
         "version": checkpoint_version(src),
+        "store_version": store_version(src),
         "entries": [(k, h) for k, h, _, _ in layout_hashes(src)],
     }
 

@@ -1,0 +1,171 @@
+//! Bench: the sharded checkpoint store vs 1000 monolithic `.mxckpt`
+//! files — the fleet-persistence trade the store layer exists to win.
+//! Hand-rolled harness (criterion unavailable offline; run with
+//! `cargo bench --bench bench_store`).
+//!
+//! A 1000-robot fleet is persisted twice:
+//!
+//! * **monolithic** — one `.mxckpt` object per robot (the pre-store
+//!   layout): 1000 files, and a resume reads one whole file;
+//! * **sharded** — `CheckpointStore` with the default 8 shards: a
+//!   handful of files, and a resume reads the shard trailer + live
+//!   index + that robot's chunks, metered through `CountingStore`
+//!   (measured, not assumed).
+//!
+//! Writes `results/BENCH_store.json` (schema-versioned, git-SHA
+//! stamped) with `files_per_1k_robots` and `bytes_read_per_resume` for
+//! both layouts plus `partial_read_advantage` — the fraction of the
+//! store a single resume does *not* have to read — which the CI
+//! bench-gate holds to ≥ 5x (and the file count to ≤ 8).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mxscale::backend::BackendKind;
+use mxscale::coordinator::report::{bench_doc, save_json};
+use mxscale::mx::ElementFormat;
+use mxscale::store::{CheckpointStore, CountingStore, FilesystemStore, Storage, StoreLayout};
+use mxscale::trainer::checkpoint::{weight_payload, Checkpoint};
+use mxscale::trainer::mlp::Mlp;
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::TrainConfig;
+use mxscale::util::json::Json;
+use mxscale::util::rng::Pcg64;
+
+const ROBOTS: u64 = 1000;
+const SAMPLE_RESUMES: usize = 50;
+
+fn robot_id(i: u64) -> String {
+    format!("robot-{i:04}")
+}
+
+/// One robot's checkpoint: a reacher-class MLP with an MX weight image
+/// (the shape the fleet scheduler actually persists), no training loop.
+fn robot_checkpoint(i: u64) -> Checkpoint {
+    let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+    let mut rng = Pcg64::new(0x57011E ^ i);
+    let dims = vec![32usize, 16, 32];
+    let mlp = Mlp::new(&dims, &mut rng);
+    let config = TrainConfig {
+        scheme,
+        backend: BackendKind::parse("fast").expect("fast backend"),
+        dims: Some(dims),
+        batch_size: 8,
+        lr: 1e-3,
+        steps: 100,
+        eval_every: 10,
+        seed: i,
+    };
+    Checkpoint {
+        config,
+        step: 40 + (i as usize % 13),
+        adam_step: 40 + (i % 13),
+        train_curve: vec![(0, 1.5), (20, 0.8), (40, 0.4)],
+        val_curve: vec![(0, 1.6), (40, 0.5)],
+        params: mlp.flat_params(),
+        opt: mlp.flat_opt_state(),
+        scheme_log: vec![(0, scheme.name())],
+        payload: weight_payload(&mlp.weights, scheme),
+    }
+}
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("mxscale-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let fleet: Vec<(String, Checkpoint)> =
+        (0..ROBOTS).map(|i| (robot_id(i), robot_checkpoint(i))).collect();
+    println!("persisting a {ROBOTS}-robot fleet, monolithic vs sharded ({})\n", root.display());
+
+    // ------------------------------------------------ monolithic layout
+    let mono = FilesystemStore::open(&root.join("mono")).expect("open mono store");
+    let t = Instant::now();
+    for (id, ck) in &fleet {
+        mono.put(&format!("{id}.mxckpt"), &ck.to_bytes()).expect("monolithic put");
+    }
+    let mono_save_ms = t.elapsed().as_secs_f64() * 1e3;
+    let mono_files = mono.list("").expect("list mono").len();
+    let mono_total: u64 =
+        fleet.iter().map(|(id, _)| mono.size(&format!("{id}.mxckpt")).expect("size")).sum();
+
+    let t = Instant::now();
+    let mut mono_read: u64 = 0;
+    for k in 0..SAMPLE_RESUMES {
+        let id = robot_id((k as u64 * 97) % ROBOTS);
+        let bytes = mono.get(&format!("{id}.mxckpt")).expect("monolithic get");
+        mono_read += bytes.len() as u64;
+        std::hint::black_box(Checkpoint::from_bytes(&bytes).expect("monolithic parse"));
+    }
+    let mono_resume_ms = t.elapsed().as_secs_f64() * 1e3 / SAMPLE_RESUMES as f64;
+    let mono_bytes_per_resume = mono_read / SAMPLE_RESUMES as u64;
+
+    // --------------------------------------------------- sharded layout
+    let counting = Arc::new(CountingStore::new(Arc::new(
+        FilesystemStore::open(&root.join("sharded")).expect("open sharded store"),
+    )));
+    let cs = CheckpointStore::new(counting.clone(), StoreLayout::Sharded { shards: 8 });
+    let refs: Vec<(String, &Checkpoint)> = fleet.iter().map(|(id, ck)| (id.clone(), ck)).collect();
+    let t = Instant::now();
+    cs.save_many(&refs).expect("sharded save_many");
+    let shard_save_ms = t.elapsed().as_secs_f64() * 1e3;
+    let shard_files = cs.shard_files().expect("shard files");
+    let shard_total: u64 =
+        shard_files.iter().map(|s| counting.size(s).expect("shard size")).sum();
+
+    counting.reset();
+    let t = Instant::now();
+    for k in 0..SAMPLE_RESUMES {
+        let id = robot_id((k as u64 * 97) % ROBOTS);
+        std::hint::black_box(cs.load(&id).expect("sharded load"));
+    }
+    let shard_resume_ms = t.elapsed().as_secs_f64() * 1e3 / SAMPLE_RESUMES as f64;
+    let shard_bytes_per_resume = counting.bytes_read() / SAMPLE_RESUMES as u64;
+
+    // how much of the store one resume did NOT have to read
+    let partial_read_advantage = shard_total as f64 / shard_bytes_per_resume.max(1) as f64;
+
+    println!(
+        "monolithic  {mono_files:>5} files  {mono_total:>9} B total  save {mono_save_ms:8.1} ms  \
+         resume {mono_resume_ms:6.3} ms ({mono_bytes_per_resume} B read)"
+    );
+    println!(
+        "sharded     {:>5} files  {shard_total:>9} B total  save {shard_save_ms:8.1} ms  \
+         resume {shard_resume_ms:6.3} ms ({shard_bytes_per_resume} B read)",
+        shard_files.len()
+    );
+    println!(
+        "\nfiles per 1k robots: {mono_files} -> {}; partial-read advantage {:.1}x \
+         (one resume touches 1/{:.0} of the store)",
+        shard_files.len(),
+        partial_read_advantage,
+        partial_read_advantage
+    );
+
+    let doc = bench_doc("store")
+        .set("unit", "bytes")
+        .set("robots", ROBOTS)
+        .set("sample_resumes", SAMPLE_RESUMES as u64)
+        .set(
+            "monolithic",
+            Json::obj()
+                .set("files_per_1k_robots", mono_files as u64)
+                .set("store_bytes", mono_total)
+                .set("bytes_read_per_resume", mono_bytes_per_resume)
+                .set("save_ms", mono_save_ms)
+                .set("resume_ms", mono_resume_ms),
+        )
+        .set(
+            "sharded",
+            Json::obj()
+                .set("files_per_1k_robots", shard_files.len() as u64)
+                .set("store_bytes", shard_total)
+                .set("bytes_read_per_resume", shard_bytes_per_resume)
+                .set("save_ms", shard_save_ms)
+                .set("resume_ms", shard_resume_ms),
+        )
+        .set("partial_read_advantage", partial_read_advantage);
+    match save_json(&doc, "BENCH_store") {
+        Ok(p) => println!("\n[saved {}]", p.display()),
+        Err(e) => println!("\n[json save failed: {e}]"),
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -13,9 +13,10 @@
 use crate::backend::BackendKind;
 use crate::coordinator::experiments;
 use crate::coordinator::report::{save_csv, save_hw_report, save_json, Table};
-use crate::fleet::{run_fleet, FleetSpec};
+use crate::fleet::{run_fleet, FleetSpec, StoreSpec};
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
+use crate::store::StoreLayout;
 use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainSession};
@@ -81,6 +82,7 @@ USAGE:
   mxscale fleet [--sessions N] [--steps N] [--quantum N] [--shift-at N]
                 [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
                 [--energy-budget UJ] [--policy <spec>] [--seed N]   # continual learning
+                [--store plain|sharded|sharded:N] [--store-dir DIR] # checkpoint store
   mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
   mxscale info                                            # architecture summary
 
@@ -109,6 +111,13 @@ USAGE:
   on its perturbed environment. Writes results/fleet_report.json with
   effective throughput, checkpoint bytes (square vs vector grouping),
   and the adaptation-vs-retrain loss curves.
+
+  --store persists every robot's checkpoints through the chunked store
+  (DESIGN.md §11): `plain` writes one object per chunk, `sharded[:N]`
+  packs the whole fleet into N shard files (default 8) with trailing
+  indexes, so resuming one robot reads only the index plus its own
+  chunks. --store-dir picks the root (default results/fleet_store).
+  Legacy monolithic .mxckpt files in that directory stay readable.
 ";
 
 /// Entry point used by `main.rs`. Returns a process exit code.
@@ -298,6 +307,18 @@ fn cmd_fleet(args: &Args) -> i32 {
             }
         }
     }
+    if let Some(layout) = args.get("store") {
+        match StoreLayout::parse(layout) {
+            Some(layout) => {
+                let dir = args.get("store-dir").unwrap_or("results/fleet_store");
+                spec.store = Some(StoreSpec { dir: dir.into(), layout });
+            }
+            None => {
+                eprintln!("bad --store: {layout} (use plain|sharded|sharded:N, N in 1..=4096)");
+                return 1;
+            }
+        }
+    }
     println!(
         "fleet: {} sessions x {} steps (quantum {}, shift at {}) on the {} backend...",
         spec.sessions,
@@ -350,6 +371,14 @@ fn cmd_fleet(args: &Args) -> i32 {
             a.target_loss,
             reached,
             if a.adapt_beats_scratch { "adaptation wins" } else { "no win" },
+        );
+    }
+    if let Some(ss) = &spec.store {
+        println!(
+            "store: {} checkpoints persisted under {} ({})",
+            run.sessions.len(),
+            ss.dir.display(),
+            ss.layout.name()
         );
     }
     match save_json(&run.report, "fleet_report") {
@@ -657,5 +686,30 @@ mod tests {
         assert_eq!(run_cli(&argv("fleet --scheme nope")), 1);
         assert_eq!(run_cli(&argv("fleet --backend warp")), 1);
         assert_eq!(run_cli(&argv("fleet --hidden 0")), 1);
+        assert_eq!(run_cli(&argv("fleet --store monolith")), 1);
+        assert_eq!(run_cli(&argv("fleet --store sharded:0")), 1);
+    }
+
+    #[test]
+    fn fleet_store_flag_persists_checkpoints() {
+        let dir = std::env::temp_dir().join(format!("mxscale-cli-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cmd = format!(
+            "fleet --sessions 2 --steps 8 --quantum 3 --shift-at 4 --hidden 8 --eval-every 4 \
+             --store sharded:2 --store-dir {}",
+            dir.display()
+        );
+        assert_eq!(run_cli(&argv(&cmd)), 0);
+        let store = crate::store::CheckpointStore::open_dir(
+            &dir,
+            StoreLayout::Sharded { shards: 2 },
+        )
+        .unwrap();
+        let ids = store.sessions().unwrap();
+        assert_eq!(ids.len(), 2, "{ids:?}");
+        for id in &ids {
+            assert!(store.load(id).is_ok(), "{id}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -16,6 +16,12 @@
 //! instead of retraining from scratch, which [`report::adapt_vs_retrain`]
 //! quantifies head-to-head.
 //!
+//! Persistence: with a [`StoreSpec`] attached (`mxscale fleet --store`),
+//! shift checkpoints round-trip through the sharded
+//! [`crate::store::CheckpointStore`] — save, partial read-back, resume,
+//! bit-exact — and every robot's final state is batch-persisted into a
+//! handful of shard files at the end of the run.
+//!
 //! Determinism: sessions are mutually independent and internally seeded,
 //! so a fleet run is bit-identical to running its sessions one at a time
 //! (asserted by `scheduler::tests`), and block-level parallelism inside
@@ -28,7 +34,9 @@
 pub mod report;
 pub mod scheduler;
 
-pub use report::{adapt_vs_retrain, run_fleet, AdaptComparison, FleetRun, FleetSpec, SessionSummary};
+pub use report::{
+    adapt_vs_retrain, run_fleet, AdaptComparison, FleetRun, FleetSpec, SessionSummary, StoreSpec,
+};
 pub use scheduler::{
     DomainShift, FleetScheduler, FleetSession, FleetStats, FormatSpend, SessionBudget, ShiftRecord,
 };

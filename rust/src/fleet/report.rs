@@ -5,6 +5,7 @@
 use crate::backend::BackendKind;
 use crate::fleet::scheduler::{DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget};
 use crate::mx::element::ElementFormat;
+use crate::store::{CheckpointStore, StoreLayout};
 use crate::trainer::checkpoint::{grouping_footprint, image_bytes, weight_payload, Checkpoint};
 use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
@@ -12,6 +13,18 @@ use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
 use crate::util::json::Json;
 use crate::util::par;
 use crate::workloads::{by_name, shifted_by_name, Dataset, ALL_WORKLOADS};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Where (and how) a fleet run persists its checkpoints
+/// (`mxscale fleet --store <layout> --store-dir <dir>`).
+#[derive(Debug, Clone)]
+pub struct StoreSpec {
+    /// Root directory of the `FilesystemStore`.
+    pub dir: PathBuf,
+    /// Chunk layout: one object per chunk, or packed shards.
+    pub layout: StoreLayout,
+}
 
 /// Parameters of one fleet run (CLI defaults in [`Default`]).
 #[derive(Debug, Clone)]
@@ -41,6 +54,11 @@ pub struct FleetSpec {
     /// each robot gets its own clone, so adaptive watchdogs judge each
     /// robot's loss stream independently.
     pub policy: Option<PrecisionPolicy>,
+    /// Checkpoint persistence (`None` = in-memory only). When set,
+    /// every domain-shift checkpoint round-trips through the store and
+    /// every session's final checkpoint is persisted at the end of the
+    /// run (one shard append per shard under a sharded layout).
+    pub store: Option<StoreSpec>,
     pub seed: u64,
 }
 
@@ -64,6 +82,7 @@ impl Default for FleetSpec {
             eval_every: 20,
             energy_budget_uj: f64::INFINITY,
             policy: None,
+            store: None,
             seed: 0xF1EE7,
         }
     }
@@ -173,6 +192,10 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         });
     }
     let dims = spec.hidden.map(crate::trainer::mlp::hidden_dims);
+    let store = match &spec.store {
+        Some(ss) => Some(Arc::new(CheckpointStore::open_dir(&ss.dir, ss.layout)?)),
+        None => None,
+    };
     let mut sched = FleetScheduler::new(spec.quantum);
     for i in 0..spec.sessions {
         let workload = ALL_WORKLOADS[i % ALL_WORKLOADS.len()];
@@ -212,6 +235,9 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         if let Some(policy) = &spec.policy {
             fs = fs.with_policy(policy.clone())?;
         }
+        if let Some(store) = &store {
+            fs = fs.with_store(store.clone());
+        }
         sched.push(fs);
     }
 
@@ -221,6 +247,19 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
     // surface the first error instead of reporting incomplete numbers
     if let Some(e) = sched.sessions().iter().find_map(|s| s.error()) {
         return Err(e.clone());
+    }
+
+    // persist every session's final state — batched, so the sharded
+    // layout locks and re-indexes each shard exactly once
+    if let Some(store) = &store {
+        let finals: Vec<(String, Checkpoint)> = sched
+            .sessions()
+            .iter()
+            .map(|s| (s.id.clone(), s.session().save_checkpoint()))
+            .collect();
+        let refs: Vec<(String, &Checkpoint)> =
+            finals.iter().map(|(id, ck)| (id.clone(), ck)).collect();
+        store.save_many(&refs)?;
     }
 
     // adaptation-vs-retrain: replay the first shifted session's
@@ -359,12 +398,26 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         None => Json::Null,
     };
 
+    let store_json = match (&spec.store, &store) {
+        (Some(ss), Some(store)) => {
+            let shard_files = store.shard_files()?;
+            let stored = store.sessions()?;
+            Json::obj()
+                .set("layout", ss.layout.name())
+                .set("dir", ss.dir.display().to_string())
+                .set("sessions_stored", stored.len())
+                .set("shard_files", shard_files.len())
+        }
+        _ => Json::Null,
+    };
+
     let report = crate::coordinator::report::stamped_doc("fleet_report")
         .set("spec", spec_json)
         .set("stats", stats_json)
         .set("sessions", sess_arr)
         .set("checkpoint_footprint", ckpt_json)
-        .set("adaptation", adapt_json);
+        .set("adaptation", adapt_json)
+        .set("store", store_json);
 
     Ok(FleetRun { stats, sessions, adapt, report })
 }
@@ -469,6 +522,44 @@ mod tests {
         for key in ["\"policy\"", "\"scheme_history\"", "\"format_spend\"", "\"mx-e2m1\""] {
             assert!(text.contains(key), "missing {key} in report");
         }
+    }
+
+    #[test]
+    fn run_fleet_persists_through_a_sharded_store() {
+        let dir = std::env::temp_dir()
+            .join(format!("mxscale-fleet-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = FleetSpec {
+            sessions: 4,
+            steps: 20,
+            quantum: 6,
+            shift_at: 10,
+            hidden: Some(16),
+            episodes: 3,
+            horizon: 30,
+            eval_every: 10,
+            store: Some(StoreSpec {
+                dir: dir.clone(),
+                layout: StoreLayout::Sharded { shards: 2 },
+            }),
+            ..Default::default()
+        };
+        let run = run_fleet(&spec).unwrap();
+        assert_eq!(run.sessions.len(), 4);
+        // every robot's final checkpoint is readable back from the store
+        let store = CheckpointStore::open_dir(&dir, StoreLayout::Sharded { shards: 2 }).unwrap();
+        let ids = store.sessions().unwrap();
+        assert_eq!(ids.len(), 4, "{ids:?}");
+        for id in &ids {
+            let ck = store.load(id).unwrap();
+            assert_eq!(ck.step, 20, "{id}");
+        }
+        assert!(store.shard_files().unwrap().len() <= 2);
+        let text = run.report.pretty();
+        for key in ["\"store\"", "\"shard_files\"", "\"sessions_stored\"", "sharded:2"] {
+            assert!(text.contains(key), "missing {key} in report");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 #![forbid(unsafe_code)]
 
+use crate::store::CheckpointStore;
 use crate::trainer::budget::step_cost_for;
 use crate::trainer::checkpoint::Checkpoint;
 use crate::trainer::policy::PrecisionPolicy;
@@ -9,6 +10,7 @@ use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
 use crate::util::par;
 use crate::workloads::Dataset;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// What a fleet session is allowed to consume before it parks.
@@ -91,6 +93,12 @@ pub struct FleetSession {
     /// [uJ] — the checkpoint does not carry the cost ledger, so the
     /// scheduler accumulates it across resumes itself.
     hw_uj_carried: f64,
+    /// Checkpoint store this robot persists through. When attached, a
+    /// domain shift saves the checkpoint *into the store* and resumes
+    /// from a store read-back (partial read under a sharded layout), so
+    /// the fleet's save→resume cycle exercises the real persistence
+    /// path; `None` keeps the in-memory handoff.
+    store: Option<Arc<CheckpointStore>>,
     /// Steps executed in the most recent quantum (scheduler bookkeeping).
     last_ran: usize,
     /// First error this session hit mid-run (a failed shift resume or a
@@ -147,6 +155,7 @@ impl FleetSession {
             format_spend: Vec::new(),
             shift_log: Vec::new(),
             hw_uj_carried: 0.0,
+            store: None,
             last_ran: 0,
             error: None,
         })
@@ -164,6 +173,14 @@ impl FleetSession {
             .map_err(|reason| TrainError::BadConfig { reason })?;
         self.policy = policy;
         Ok(self)
+    }
+
+    /// Persist this robot's shift checkpoints through `store` (shared
+    /// across the fleet — [`CheckpointStore`] is cheap to clone and its
+    /// backend is `Send + Sync`).
+    pub fn with_store(mut self, store: Arc<CheckpointStore>) -> Self {
+        self.store = Some(store);
+        self
     }
 
     /// The wrapped session (read access for reports).
@@ -206,7 +223,17 @@ impl FleetSession {
             self.hw_uj_carried += r.uj_total();
         }
         let ck = self.session.save_checkpoint();
-        let resumed = TrainSession::resume(shift.dataset, &ck)?;
+        // through the store when attached: persist, read back (a
+        // partial read under a sharded layout), resume from the bytes
+        // that actually hit storage — bit-exact by the store contract
+        let resumed = match &self.store {
+            Some(store) => {
+                store.save(&self.id, &ck)?;
+                let reread = store.load(&self.id)?;
+                TrainSession::resume(shift.dataset, &reread)?
+            }
+            None => TrainSession::resume(shift.dataset, &ck)?,
+        };
         let val_before = resumed.val_loss();
         self.shift_log.push(ShiftRecord {
             at_step: shift.at_step,
@@ -512,6 +539,44 @@ mod tests {
         assert!(int8.uj > e2m1.uj, "int8 {} vs e2m1 {}", int8.uj, e2m1.uj);
         let total: f64 = s.format_spend.iter().map(|f| f.uj).sum();
         assert!((total - s.energy_uj).abs() < 1e-9 * total.max(1.0));
+    }
+
+    #[test]
+    fn store_attached_shift_is_bit_identical_to_in_memory_handoff() {
+        use crate::store::{CheckpointStore, MemoryStore, StoreLayout};
+        let build = |store: Option<Arc<CheckpointStore>>| {
+            let shifted_env = shifted_by_name("cartpole").unwrap();
+            let shifted = Dataset::collect(shifted_env.as_ref(), 4, 40, 9);
+            let mut s = FleetSession::new(
+                "r0",
+                "cartpole",
+                quick_dataset("cartpole", 9),
+                quick_config(QuantScheme::MxSquare(ElementFormat::E2M1), 30),
+                SessionBudget::steps(30),
+                vec![DomainShift { at_step: 15, label: "shift".into(), dataset: shifted }],
+            )
+            .unwrap();
+            if let Some(store) = store {
+                s = s.with_store(store);
+            }
+            while s.run_quantum(7) > 0 {}
+            assert!(s.error().is_none(), "{:?}", s.error());
+            s
+        };
+        let reference = build(None);
+        let store = Arc::new(CheckpointStore::new(
+            Arc::new(MemoryStore::new()),
+            StoreLayout::Sharded { shards: 2 },
+        ));
+        let through_store = build(Some(store.clone()));
+        assert_eq!(reference.session().val_loss(), through_store.session().val_loss());
+        assert_eq!(
+            reference.session().train_curve,
+            through_store.session().train_curve,
+            "resume through the store must be bitwise indistinguishable"
+        );
+        // the shift checkpoint is now readable from the store too
+        assert_eq!(store.load("r0").unwrap().step, 15);
     }
 
     #[test]

@@ -48,6 +48,14 @@
 //! * [`runtime`] — PJRT/XLA execution of AOT-compiled JAX train/eval
 //!   graphs (`artifacts/*.hlo.txt`); Python never runs at training time.
 //!   Gated behind the `xla` cargo feature (graceful stubs otherwise).
+//! * [`store`] — the sharded, partially-readable checkpoint store: a
+//!   dependency-free `Storage` trait (filesystem now, object-store
+//!   pluggable later), per-section/per-tensor chunking of each
+//!   checkpoint, and a sharding container packing thousands of robots
+//!   into a few shard files with trailing indexes — a resume reads the
+//!   index plus one session's chunks, bit-exactly, with legacy
+//!   `.mxckpt` files still readable through a compat shim (`mxscale
+//!   fleet --store`, DESIGN.md §11).
 //! * [`coordinator`] — experiment configs, the CLI, and the per-table /
 //!   per-figure reproduction harnesses.
 //! * [`lint`] — `mxlint`, the dependency-free static-analysis pass
@@ -77,6 +85,7 @@ pub mod mx;
 pub mod pearray;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod trainer;
 pub mod util;
 pub mod workloads;

@@ -77,7 +77,9 @@ fn parse_quoted(s: &str) -> Option<(String, &str)> {
     Some((rest[..end].to_string(), &rest[end + 1..]))
 }
 
-/// Parse `lint.manifest`: `version <n>` then `fn <key> <hex16>` lines.
+/// Parse `lint.manifest`: `version <n>`, an optional `store_version <n>`
+/// (0 when absent — manifests predating the store layer), then
+/// `fn <key> <hex16>` lines.
 pub fn parse_manifest(text: &str) -> Result<Manifest, String> {
     let mut m = Manifest::default();
     let mut saw_version = false;
@@ -85,6 +87,11 @@ pub fn parse_manifest(text: &str) -> Result<Manifest, String> {
         let ln = idx + 1;
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(v) = line.strip_prefix("store_version ") {
+            m.store_version =
+                v.trim().parse().map_err(|_| format!("line {ln}: bad store_version `{v}`"))?;
             continue;
         }
         if let Some(v) = line.strip_prefix("version ") {
@@ -119,6 +126,7 @@ pub fn render_manifest(m: &Manifest) -> String {
     out.push_str("#   cargo run --release --bin mxlint -- --update-manifest\n");
     out.push_str("# (or `python3 ci/mxlint_mirror.py --update-manifest` without a toolchain).\n");
     out.push_str(&format!("version {}\n", m.version));
+    out.push_str(&format!("store_version {}\n", m.store_version));
     for (k, h) in &entries {
         out.push_str(&format!("fn {k} {h:016x}\n"));
     }
@@ -129,6 +137,7 @@ pub fn render_manifest(m: &Manifest) -> String {
 pub fn current_manifest(src: &[SourceFile]) -> Manifest {
     Manifest {
         version: rules::checkpoint_version(src),
+        store_version: rules::store_version(src),
         entries: rules::layout_hashes(src).into_iter().map(|(k, h, _, _)| (k, h)).collect(),
     }
 }
@@ -296,12 +305,17 @@ mod tests {
     fn manifest_round_trip() {
         let m = Manifest {
             version: 2,
+            store_version: 1,
             entries: vec![("mx/tensor.rs::to_bytes".into(), 0xdead_beef_0123_4567)],
         };
         let text = render_manifest(&m);
         let back = parse_manifest(&text).unwrap();
         assert_eq!(back.version, 2);
+        assert_eq!(back.store_version, 1);
         assert_eq!(back.entries, m.entries);
+        // Pre-store manifests have no store_version line: default to 0.
+        let old = parse_manifest("version 2\nfn a 00ff\n").unwrap();
+        assert_eq!(old.store_version, 0);
     }
 
     #[test]
@@ -310,6 +324,7 @@ mod tests {
         assert!(parse_manifest("version x\n").is_err());
         assert!(parse_manifest("version 1\nwhat\n").is_err());
         assert!(parse_manifest("version 1\nfn key zz\n").is_err());
+        assert!(parse_manifest("version 1\nstore_version x\n").is_err());
     }
 
     #[test]

@@ -377,11 +377,12 @@ pub fn l3(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
 
 // ------------------------------------------------------------------ L4
 
-const L4_DIRS: [&str; 4] = [
+const L4_DIRS: [&str; 5] = [
     "rust/src/fleet/",
     "rust/src/trainer/",
     "rust/src/backend/",
     "rust/src/coordinator/",
+    "rust/src/store/",
 ];
 
 /// L4: `.unwrap()`/`.expect(` banned in library code under the training
@@ -425,12 +426,35 @@ const L5_NAMES: [&str; 4] = ["write_bytes", "read_bytes", "to_bytes", "from_byte
 #[derive(Debug, Default, Clone)]
 pub struct Manifest {
     pub version: u32,
+    /// Store-layer format version (`store/mod.rs` `VERSION`); 0 when
+    /// the manifest predates the store layer.
+    pub store_version: u32,
     pub entries: Vec<(String, u64)>,
 }
 
 /// Parse `const VERSION: ... = <int>` from `trainer/checkpoint.rs`.
 pub fn checkpoint_version(src: &[SourceFile]) -> u32 {
     for f in src.iter().filter(|f| f.rel == "rust/src/trainer/checkpoint.rs") {
+        let toks = &f.lexed.toks;
+        for i in 0..toks.len().saturating_sub(1) {
+            if is_ident(&toks[i], "const") && is_ident(&toks[i + 1], "VERSION") {
+                for t in &toks[i + 2..(i + 10).min(toks.len())] {
+                    if t.kind == TokKind::Int {
+                        if let Some((v, _)) = int_value(&t.text) {
+                            return v as u32;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    0
+}
+
+/// Parse `const VERSION: ... = <int>` from `store/mod.rs` (0 when the
+/// store layer is absent, so pre-store manifests stay valid).
+pub fn store_version(src: &[SourceFile]) -> u32 {
+    for f in src.iter().filter(|f| f.rel == "rust/src/store/mod.rs") {
         let toks = &f.lexed.toks;
         for i in 0..toks.len().saturating_sub(1) {
             if is_ident(&toks[i], "const") && is_ident(&toks[i + 1], "VERSION") {
@@ -472,7 +496,9 @@ pub fn layout_hashes(src: &[SourceFile]) -> Vec<(String, u64, u32, String)> {
 }
 
 /// L5: fail when a byte-layout body hash drifts from the committed
-/// manifest while the `.mxckpt` `VERSION` constant stays put.
+/// manifest while the governing `VERSION` constant stays put —
+/// `trainer/checkpoint.rs` for checkpoint codecs, `store/mod.rs` for
+/// the shard index / chunk codecs (keys under `store/`).
 pub fn l5(src: &[SourceFile], manifest: &Manifest) -> Vec<Finding> {
     let mut out = Vec::new();
     let version = checkpoint_version(src);
@@ -489,6 +515,20 @@ pub fn l5(src: &[SourceFile], manifest: &Manifest) -> Vec<Finding> {
         });
         return out;
     }
+    let sversion = store_version(src);
+    if sversion != manifest.store_version {
+        out.push(Finding {
+            rule: "L5",
+            file: "rust/src/store/mod.rs".into(),
+            line: 1,
+            message: format!(
+                "rust/lint.manifest records store VERSION {} but store/mod.rs has \
+                 VERSION {sversion} — run `mxlint --update-manifest` and commit the result",
+                manifest.store_version
+            ),
+        });
+        return out;
+    }
     let current = layout_hashes(src);
     let recorded: BTreeMap<&str, u64> =
         manifest.entries.iter().map(|(k, h)| (k.as_str(), *h)).collect();
@@ -498,11 +538,19 @@ pub fn l5(src: &[SourceFile], manifest: &Manifest) -> Vec<Finding> {
                 rule: "L5",
                 file: rel.clone(),
                 line: *line,
-                message: format!(
-                    "byte-layout of `{key}` changed ({hash:016x} != manifest {want:016x}) \
-                     without a VERSION bump (still {version}) — bump VERSION in \
-                     trainer/checkpoint.rs and run `mxlint --update-manifest`"
-                ),
+                message: if key.starts_with("store/") {
+                    format!(
+                        "byte-layout of `{key}` changed ({hash:016x} != manifest {want:016x}) \
+                         without a store VERSION bump (still {sversion}) — bump VERSION in \
+                         store/mod.rs and run `mxlint --update-manifest`"
+                    )
+                } else {
+                    format!(
+                        "byte-layout of `{key}` changed ({hash:016x} != manifest {want:016x}) \
+                         without a VERSION bump (still {version}) — bump VERSION in \
+                         trainer/checkpoint.rs and run `mxlint --update-manifest`"
+                    )
+                },
             }),
             Some(_) => {}
             None => out.push(Finding {

@@ -1,0 +1,423 @@
+//! Chunked checkpoint layout: one [`Checkpoint`] split into
+//! independently-addressable chunks, keyed per session as
+//!
+//! ```text
+//! meta         session config + counters + payload arity   (MXCM header)
+//! params       FP32 master parameters (raw bit patterns)
+//! opt          Adam moments (raw bit patterns)
+//! curves       train + val loss curves
+//! scheme_log   precision-segment history
+//! payload/<i>  one MX weight-image tensor (MxTensor::write_bytes)
+//! ```
+//!
+//! Splitting is bitwise lossless: every field of the monolithic
+//! `.mxckpt` v2 body lands in exactly one chunk, so
+//! `assemble(split(ck)).to_bytes() == ck.to_bytes()` — the bit-exact
+//! resume contract survives chunking by construction (asserted in this
+//! module's tests and end-to-end in `tests/store.rs`). A partial
+//! reader can pull a single `payload/<i>` tensor (layer migration) or
+//! skip the payload entirely (the masters alone reconstruct it).
+//!
+//! Reassembly applies the same plausibility validation as
+//! `Checkpoint::from_bytes` — dims bounds, parameter counts against
+//! [`expected_params`], known scheme/backend names — so a corrupt chunk
+//! that slipped past its checksum still cannot smuggle an implausible
+//! checkpoint into the trainer.
+
+#![forbid(unsafe_code)]
+
+use crate::backend::BackendKind;
+use crate::trainer::checkpoint::{expected_params, read_curve, write_curve, Checkpoint};
+use crate::trainer::qat::QuantScheme;
+use crate::trainer::session::TrainConfig;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+use super::{StoreError, VERSION};
+
+/// Chunk-key leaf names within one session.
+pub const META: &str = "meta";
+pub const PARAMS: &str = "params";
+pub const OPT: &str = "opt";
+pub const CURVES: &str = "curves";
+pub const SCHEME_LOG: &str = "scheme_log";
+
+/// Key of the `i`-th MX weight-image tensor chunk.
+pub fn payload_key(i: usize) -> String {
+    format!("payload/{i}")
+}
+
+/// Meta-chunk magic ("MX Chunk Meta").
+pub const META_MAGIC: [u8; 4] = *b"MXCM";
+
+/// The `meta` chunk: everything scalar about a session, plus how many
+/// `payload/<i>` chunks to expect.
+#[derive(Debug, Clone)]
+pub struct MetaChunk {
+    pub config: TrainConfig,
+    pub step: usize,
+    pub adam_step: u64,
+    pub n_payload: usize,
+}
+
+impl MetaChunk {
+    /// Serialize (magic + store VERSION + config + counters).
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        for b in META_MAGIC {
+            w.put_u8(b);
+        }
+        w.put_u32(VERSION);
+        w.put_str(&self.config.scheme.name());
+        w.put_str(self.config.backend.name());
+        let dims = self.config.dims.as_deref().unwrap_or(&[]);
+        w.put_u32(dims.len() as u32);
+        for &d in dims {
+            w.put_u32(d as u32);
+        }
+        w.put_u32(self.config.batch_size as u32);
+        w.put_f32(self.config.lr);
+        w.put_u64(self.config.eval_every as u64);
+        w.put_u64(self.config.steps as u64);
+        w.put_u64(self.config.seed);
+        w.put_u64(self.step as u64);
+        w.put_u64(self.adam_step);
+        w.put_u32(self.n_payload as u32);
+    }
+
+    /// Inverse of [`MetaChunk::write_bytes`], with the same
+    /// plausibility bounds as `Checkpoint::from_bytes`.
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<MetaChunk, String> {
+        let magic = [r.get_u8()?, r.get_u8()?, r.get_u8()?, r.get_u8()?];
+        if magic != META_MAGIC {
+            return Err("not a checkpoint meta chunk (bad magic)".into());
+        }
+        let version = r.get_u32()?;
+        if version == 0 || version > VERSION {
+            return Err(format!(
+                "unsupported store version {version} (this build reads ≤ {VERSION})"
+            ));
+        }
+        let scheme_name = r.get_str()?;
+        let scheme = QuantScheme::parse(&scheme_name)
+            .ok_or_else(|| format!("meta chunk names unknown scheme `{scheme_name}`"))?;
+        let backend_name = r.get_str()?;
+        let backend = BackendKind::parse(&backend_name)
+            .ok_or_else(|| format!("meta chunk names unknown backend `{backend_name}`"))?;
+        let ndims = r.get_u32()? as usize;
+        if !(2..=64).contains(&ndims) {
+            return Err(format!("implausible layer count {ndims}"));
+        }
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            let d = r.get_u32()? as usize;
+            if d == 0 || d > (1 << 20) {
+                return Err(format!("implausible layer width {d}"));
+            }
+            dims.push(d);
+        }
+        let batch_size = r.get_u32()? as usize;
+        let lr = r.get_f32()?;
+        let eval_every = r.get_u64()? as usize;
+        let steps = r.get_u64()? as usize;
+        let seed = r.get_u64()?;
+        let step = r.get_u64()? as usize;
+        let adam_step = r.get_u64()?;
+        let n_payload = r.get_u32()? as usize;
+        if n_payload > 4096 {
+            return Err(format!("implausible payload tensor count {n_payload}"));
+        }
+        let config = TrainConfig {
+            scheme,
+            backend,
+            dims: Some(dims),
+            batch_size,
+            lr,
+            steps,
+            eval_every,
+            seed,
+        };
+        Ok(MetaChunk { config, step, adam_step, n_payload })
+    }
+}
+
+/// The `curves` chunk: train + val loss histories.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurvesChunk {
+    pub train: Vec<(usize, f64)>,
+    pub val: Vec<(usize, f64)>,
+}
+
+impl CurvesChunk {
+    /// Serialize both curves (same wire format as the monolithic file).
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        write_curve(w, &self.train);
+        write_curve(w, &self.val);
+    }
+
+    /// Inverse of [`CurvesChunk::write_bytes`].
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<CurvesChunk, String> {
+        let train = read_curve(r)?;
+        let val = read_curve(r)?;
+        Ok(CurvesChunk { train, val })
+    }
+}
+
+/// The `scheme_log` chunk: precision segments `(start_step, scheme)`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchemeLogChunk {
+    pub segments: Vec<(usize, String)>,
+}
+
+impl SchemeLogChunk {
+    /// Serialize the segment list.
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        w.put_u32(self.segments.len() as u32);
+        for (at, name) in &self.segments {
+            w.put_u64(*at as u64);
+            w.put_str(name);
+        }
+    }
+
+    /// Inverse of [`SchemeLogChunk::write_bytes`], validating scheme
+    /// names and the segment-count bound.
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<SchemeLogChunk, String> {
+        let n = r.get_u32()? as usize;
+        if n > 65536 {
+            return Err(format!("implausible precision-segment count {n}"));
+        }
+        let mut segments = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = r.get_u64()? as usize;
+            let name = r.get_str()?;
+            if QuantScheme::parse(&name).is_none() {
+                return Err(format!("scheme log names unknown scheme `{name}`"));
+            }
+            segments.push((at, name));
+        }
+        Ok(SchemeLogChunk { segments })
+    }
+}
+
+fn decode_err(key: &str, reason: impl Into<String>) -> StoreError {
+    StoreError::BadIndex { key: key.to_string(), reason: reason.into() }
+}
+
+/// Encode one chunk through a closure over a fresh writer, checking
+/// that nothing is left over on the read side at decode time instead.
+fn encode(f: impl FnOnce(&mut ByteWriter)) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    f(&mut w);
+    w.into_bytes()
+}
+
+/// Split a checkpoint into its `(relative key, bytes)` chunks. The
+/// inverse is [`assemble_checkpoint`]; round-tripping is bitwise
+/// lossless.
+pub fn split_checkpoint(ck: &Checkpoint) -> Vec<(String, Vec<u8>)> {
+    let meta = MetaChunk {
+        config: ck.config.clone(),
+        step: ck.step,
+        adam_step: ck.adam_step,
+        n_payload: ck.payload.len(),
+    };
+    let curves = CurvesChunk { train: ck.train_curve.clone(), val: ck.val_curve.clone() };
+    let log = SchemeLogChunk { segments: ck.scheme_log.clone() };
+    let mut chunks = vec![
+        (META.to_string(), encode(|w| meta.write_bytes(w))),
+        (PARAMS.to_string(), encode(|w| w.put_f32s(&ck.params))),
+        (OPT.to_string(), encode(|w| w.put_f32s(&ck.opt))),
+        (CURVES.to_string(), encode(|w| curves.write_bytes(w))),
+        (SCHEME_LOG.to_string(), encode(|w| log.write_bytes(w))),
+    ];
+    for (i, t) in ck.payload.iter().enumerate() {
+        chunks.push((payload_key(i), encode(|w| t.write_bytes(w))));
+    }
+    chunks
+}
+
+/// Decode one whole chunk, requiring the decoder to consume every byte.
+fn decode_all<T>(
+    key: &str,
+    bytes: &[u8],
+    f: impl FnOnce(&mut ByteReader<'_>) -> Result<T, String>,
+) -> Result<T, StoreError> {
+    let mut r = ByteReader::new(bytes);
+    let v = f(&mut r).map_err(|e| decode_err(key, e))?;
+    if r.remaining() != 0 {
+        return Err(decode_err(key, format!("{} trailing bytes after chunk body", r.remaining())));
+    }
+    Ok(v)
+}
+
+/// Reassemble a checkpoint by fetching chunks on demand. `fetch`
+/// receives *relative* keys ([`META`], [`PARAMS`], …, `payload/<i>`);
+/// the caller scopes them to a session and a backing store. Only the
+/// chunks a full checkpoint needs are requested — nothing else in the
+/// shard is touched, which is what makes resume reads proportional to
+/// one session, not the fleet.
+pub fn assemble_checkpoint(
+    mut fetch: impl FnMut(&str) -> Result<Vec<u8>, StoreError>,
+) -> Result<Checkpoint, StoreError> {
+    let meta = decode_all(META, &fetch(META)?, MetaChunk::read_bytes)?;
+    let params = decode_all(PARAMS, &fetch(PARAMS)?, |r| r.get_f32s())?;
+    let opt = decode_all(OPT, &fetch(OPT)?, |r| r.get_f32s())?;
+    let curves = decode_all(CURVES, &fetch(CURVES)?, CurvesChunk::read_bytes)?;
+    let log = decode_all(SCHEME_LOG, &fetch(SCHEME_LOG)?, SchemeLogChunk::read_bytes)?;
+
+    let dims = meta.config.dims.as_deref().unwrap_or(&[]);
+    let expected =
+        expected_params(dims).ok_or_else(|| decode_err(META, "parameter count overflow"))?;
+    if params.len() != expected {
+        return Err(decode_err(
+            PARAMS,
+            format!(
+                "parameter chunk holds {} values, dims {:?} imply {}",
+                params.len(),
+                dims,
+                expected
+            ),
+        ));
+    }
+    if opt.len() != 2 * expected {
+        return Err(decode_err(
+            OPT,
+            format!("optimizer chunk holds {} values, expected {}", opt.len(), 2 * expected),
+        ));
+    }
+
+    let mut payload = Vec::with_capacity(meta.n_payload);
+    for i in 0..meta.n_payload {
+        let key = payload_key(i);
+        payload.push(decode_all(&key, &fetch(&key)?, |r| {
+            crate::mx::tensor::MxTensor::read_bytes(r)
+        })?);
+    }
+
+    Ok(Checkpoint {
+        config: meta.config,
+        step: meta.step,
+        adam_step: meta.adam_step,
+        train_curve: curves.train,
+        val_curve: curves.val,
+        params,
+        opt,
+        scheme_log: log.segments,
+        payload,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::element::ElementFormat;
+    use crate::trainer::checkpoint::weight_payload;
+    use crate::util::rng::Pcg64;
+    use std::collections::BTreeMap;
+
+    fn sample_checkpoint(scheme: QuantScheme) -> Checkpoint {
+        let mut rng = Pcg64::new(11);
+        let dims = vec![32usize, 16, 32];
+        let mlp = crate::trainer::mlp::Mlp::new(&dims, &mut rng);
+        let config = TrainConfig {
+            scheme,
+            backend: BackendKind::parse("fast").expect("fast backend"),
+            dims: Some(dims),
+            batch_size: 16,
+            lr: 1e-3,
+            steps: 40,
+            eval_every: 10,
+            seed: 0xBEEF,
+        };
+        Checkpoint {
+            config,
+            step: 7,
+            adam_step: 7,
+            train_curve: vec![(0, 1.25), (5, 0.5)],
+            val_curve: vec![(0, 1.5)],
+            params: mlp.flat_params(),
+            opt: mlp.flat_opt_state(),
+            scheme_log: vec![(0, scheme.name())],
+            payload: weight_payload(&mlp.weights, scheme),
+        }
+    }
+
+    fn as_map(chunks: Vec<(String, Vec<u8>)>) -> BTreeMap<String, Vec<u8>> {
+        chunks.into_iter().collect()
+    }
+
+    #[test]
+    fn split_then_assemble_is_bitwise_lossless() {
+        for scheme in [
+            QuantScheme::MxSquare(ElementFormat::E4M3),
+            QuantScheme::MxVector(ElementFormat::Int8),
+            QuantScheme::Fp32,
+        ] {
+            let ck = sample_checkpoint(scheme);
+            let map = as_map(split_checkpoint(&ck));
+            let back = assemble_checkpoint(|k| {
+                map.get(k).cloned().ok_or(StoreError::MissingChunk { key: k.to_string() })
+            })
+            .unwrap();
+            assert_eq!(back.to_bytes(), ck.to_bytes(), "{scheme:?}");
+        }
+    }
+
+    #[test]
+    fn payload_tensors_chunk_per_layer() {
+        let ck = sample_checkpoint(QuantScheme::MxSquare(ElementFormat::E2M1));
+        let map = as_map(split_checkpoint(&ck));
+        assert_eq!(ck.payload.len(), 2, "two layers, square single-copy");
+        assert!(map.contains_key("payload/0") && map.contains_key("payload/1"));
+        // one tensor is independently decodable — the partial-read unit
+        let t = decode_all("payload/1", &map["payload/1"], |r| {
+            crate::mx::tensor::MxTensor::read_bytes(r)
+        })
+        .unwrap();
+        assert_eq!(encode(|w| t.write_bytes(w)), map["payload/1"]);
+    }
+
+    #[test]
+    fn missing_and_corrupt_chunks_surface_structured_errors() {
+        let ck = sample_checkpoint(QuantScheme::MxSquare(ElementFormat::E5M2));
+        let mut map = as_map(split_checkpoint(&ck));
+        map.remove(OPT);
+        let err = assemble_checkpoint(|k| {
+            map.get(k).cloned().ok_or(StoreError::MissingChunk { key: k.to_string() })
+        })
+        .unwrap_err();
+        assert!(matches!(err, StoreError::MissingChunk { ref key } if key == OPT), "{err}");
+
+        let mut map = as_map(split_checkpoint(&ck));
+        map.get_mut(META).map(|b| b.truncate(10));
+        let err = assemble_checkpoint(|k| {
+            map.get(k).cloned().ok_or(StoreError::MissingChunk { key: k.to_string() })
+        })
+        .unwrap_err();
+        assert!(matches!(err, StoreError::BadIndex { .. }), "{err}");
+
+        // params chunk whose length contradicts the dims
+        let mut map = as_map(split_checkpoint(&ck));
+        map.insert(PARAMS.into(), encode(|w| w.put_f32s(&[1.0, 2.0])));
+        let err = assemble_checkpoint(|k| {
+            map.get(k).cloned().ok_or(StoreError::MissingChunk { key: k.to_string() })
+        })
+        .unwrap_err();
+        assert!(matches!(err, StoreError::BadIndex { ref key, .. } if key == PARAMS), "{err}");
+    }
+
+    #[test]
+    fn meta_chunk_rejects_future_store_versions() {
+        let ck = sample_checkpoint(QuantScheme::Fp32);
+        let mut bytes = encode(|w| {
+            MetaChunk {
+                config: ck.config.clone(),
+                step: ck.step,
+                adam_step: ck.adam_step,
+                n_payload: 0,
+            }
+            .write_bytes(w)
+        });
+        bytes[4] = 0xFF; // version field LE low byte
+        let err = MetaChunk::read_bytes(&mut ByteReader::new(&bytes)).unwrap_err();
+        assert!(err.contains("unsupported store version"), "{err}");
+    }
+}

@@ -1,0 +1,514 @@
+//! [`CheckpointStore`]: the one facade every checkpoint entry point
+//! goes through.
+//!
+//! The trainer (`Checkpoint::save`/`load`), the fleet scheduler's
+//! domain-shift save→resume cycle, and the `mxscale fleet --store` CLI
+//! all address sessions by id through this type; none of them touch
+//! `std::fs` or shard internals directly. Two layouts:
+//!
+//! * **Plain** — one object per chunk under `sessions/<id>/…`. Simple,
+//!   debuggable, `O(chunks)` files per robot.
+//! * **Sharded** — chunks packed into `shards` large
+//!   `shard-NNNN.mxshard` objects (session → shard by FNV-1a of the
+//!   id), each with a trailing index. A 1000-robot fleet persists into
+//!   a handful of files, and resuming one robot reads the index plus
+//!   that robot's chunks only.
+//!
+//! **Compat shim:** a legacy monolithic `.mxckpt` file dropped into the
+//! store root as `<id>.mxckpt` (v1 or v2) is found by [`CheckpointStore::load`]
+//! when no chunked session exists — the monolithic format is just the
+//! single-chunk case. Loading goes through `Checkpoint::from_bytes`
+//! unchanged, so both legacy versions keep their exact semantics.
+
+#![forbid(unsafe_code)]
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::trainer::checkpoint::Checkpoint;
+use crate::trainer::session::{TrainError, TrainSession};
+use crate::util::bytes::{fnv1a64, ByteReader};
+use crate::workloads::Dataset;
+
+use super::chunk::{self, payload_key};
+use super::fs::FilesystemStore;
+use super::shard::{self, IndexEntry, KEY_BYTES};
+use super::{Storage, StoreError};
+
+/// How sessions map onto storage objects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreLayout {
+    /// One object per chunk under `sessions/<id>/`.
+    Plain,
+    /// Chunks packed into `shards` shard objects with trailing indexes.
+    Sharded { shards: u32 },
+}
+
+/// Default shard count — 1000 robots into 8 files (ISSUE 8 acceptance).
+pub const DEFAULT_SHARDS: u32 = 8;
+
+impl StoreLayout {
+    /// Parse a CLI spelling: `plain`, `sharded`, or `sharded:N`.
+    pub fn parse(s: &str) -> Option<StoreLayout> {
+        match s {
+            "plain" => Some(StoreLayout::Plain),
+            "sharded" => Some(StoreLayout::Sharded { shards: DEFAULT_SHARDS }),
+            _ => {
+                let n = s.strip_prefix("sharded:")?.parse::<u32>().ok()?;
+                if (1..=4096).contains(&n) {
+                    Some(StoreLayout::Sharded { shards: n })
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// The canonical spelling `parse` accepts.
+    pub fn name(&self) -> String {
+        match self {
+            StoreLayout::Plain => "plain".into(),
+            StoreLayout::Sharded { shards } => format!("sharded:{shards}"),
+        }
+    }
+}
+
+/// Session ids become chunk-key components; bound them so every
+/// `<id>/payload/<i>` fits the shard index's fixed key field.
+const MAX_SESSION_ID: usize = KEY_BYTES - "/payload/4096".len();
+
+fn validate_session_id(id: &str) -> Result<(), StoreError> {
+    let ok = !id.is_empty()
+        && id.len() <= MAX_SESSION_ID
+        && id.bytes().all(|b| b.is_ascii_alphanumeric() || b"._-".contains(&b))
+        && id != "."
+        && id != "..";
+    if ok {
+        Ok(())
+    } else {
+        Err(StoreError::Io {
+            op: "session id",
+            key: id.to_string(),
+            reason: format!("must be 1..={MAX_SESSION_ID} chars of [A-Za-z0-9._-]"),
+        })
+    }
+}
+
+/// The unified checkpoint facade over any [`Storage`].
+#[derive(Clone)]
+pub struct CheckpointStore {
+    store: Arc<dyn Storage>,
+    layout: StoreLayout,
+    lock_timeout: Duration,
+}
+
+impl CheckpointStore {
+    /// Wrap an existing storage backend.
+    pub fn new(store: Arc<dyn Storage>, layout: StoreLayout) -> Self {
+        Self { store, layout, lock_timeout: Duration::from_secs(10) }
+    }
+
+    /// Filesystem sugar: a store rooted at `dir`.
+    pub fn open_dir(dir: &Path, layout: StoreLayout) -> Result<Self, StoreError> {
+        Ok(Self::new(Arc::new(FilesystemStore::open(dir)?), layout))
+    }
+
+    /// Override the advisory-lock acquisition timeout (tests use tiny
+    /// values to observe [`StoreError::LockHeld`] without waiting).
+    pub fn with_lock_timeout(mut self, timeout: Duration) -> Self {
+        self.lock_timeout = timeout;
+        self
+    }
+
+    /// The backing storage (e.g. to wrap in a `CountingStore`).
+    pub fn storage(&self) -> Arc<dyn Storage> {
+        self.store.clone()
+    }
+
+    /// The configured layout.
+    pub fn layout(&self) -> StoreLayout {
+        self.layout
+    }
+
+    fn shard_object(&self, id: &str, shards: u32) -> String {
+        format!("shard-{:04}.mxshard", fnv1a64(id.as_bytes()) % shards.max(1) as u64)
+    }
+
+    fn plain_key(id: &str, chunk: &str) -> String {
+        format!("sessions/{id}/{chunk}")
+    }
+
+    fn legacy_key(id: &str) -> String {
+        format!("{id}.mxckpt")
+    }
+
+    /// Persist one session's checkpoint (chunked).
+    pub fn save(&self, id: &str, ck: &Checkpoint) -> Result<(), StoreError> {
+        self.save_many(&[(id.to_string(), ck)])
+    }
+
+    /// Persist many sessions in one pass. Under the sharded layout the
+    /// batch is grouped by destination shard so each shard is locked
+    /// and its index rewritten **once** — the fleet's end-of-round
+    /// persist does one append per shard, not per robot.
+    pub fn save_many(&self, sessions: &[(String, &Checkpoint)]) -> Result<(), StoreError> {
+        for (id, _) in sessions {
+            validate_session_id(id)?;
+        }
+        match self.layout {
+            StoreLayout::Plain => {
+                for (id, ck) in sessions {
+                    for (leaf, bytes) in chunk::split_checkpoint(ck) {
+                        self.store.put(&Self::plain_key(id, &leaf), &bytes)?;
+                    }
+                }
+                Ok(())
+            }
+            StoreLayout::Sharded { shards } => {
+                // group by shard, preserving per-session chunk order
+                let mut by_shard: Vec<(String, Vec<(String, Vec<u8>)>)> = Vec::new();
+                for (id, ck) in sessions {
+                    let shard = self.shard_object(id, shards);
+                    let chunks: Vec<(String, Vec<u8>)> = chunk::split_checkpoint(ck)
+                        .into_iter()
+                        .map(|(leaf, bytes)| (format!("{id}/{leaf}"), bytes))
+                        .collect();
+                    match by_shard.iter_mut().find(|(s, _)| *s == shard) {
+                        Some((_, acc)) => acc.extend(chunks),
+                        None => by_shard.push((shard, chunks)),
+                    }
+                }
+                for (shard, chunks) in &by_shard {
+                    shard::append_chunks(&self.store, shard, chunks, self.lock_timeout)?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Fetch the shard index entries for one session (sharded layout).
+    fn session_entries(&self, id: &str, shards: u32) -> Result<Vec<IndexEntry>, StoreError> {
+        let shard = self.shard_object(id, shards);
+        let prefix = format!("{id}/");
+        let entries = shard::read_index(self.store.as_ref(), &shard)?;
+        Ok(entries.into_iter().filter(|e| e.key.starts_with(&prefix)).collect())
+    }
+
+    /// The `(chunk key, length)` manifest of one stored session — what
+    /// a partial reader *would* fetch. Tests use this to bound the
+    /// bytes a resume is allowed to read.
+    pub fn chunk_manifest(&self, id: &str) -> Result<Vec<(String, u64)>, StoreError> {
+        validate_session_id(id)?;
+        match self.layout {
+            StoreLayout::Plain => {
+                let prefix = Self::plain_key(id, "");
+                let mut out = Vec::new();
+                for key in self.store.list(&prefix)? {
+                    let len = self.store.size(&key)?;
+                    out.push((key, len));
+                }
+                if out.is_empty() {
+                    return Err(StoreError::MissingChunk { key: Self::plain_key(id, chunk::META) });
+                }
+                Ok(out)
+            }
+            StoreLayout::Sharded { shards } => {
+                let entries = self.session_entries(id, shards)?;
+                if entries.is_empty() {
+                    return Err(StoreError::MissingChunk { key: format!("{id}/{}", chunk::META) });
+                }
+                Ok(entries.into_iter().map(|e| (e.key, e.len)).collect())
+            }
+        }
+    }
+
+    /// Load a session's checkpoint: chunked layout first, then the
+    /// legacy monolithic `<id>.mxckpt` compat shim.
+    pub fn load(&self, id: &str) -> Result<Checkpoint, StoreError> {
+        validate_session_id(id)?;
+        match self.load_chunked(id) {
+            Ok(ck) => Ok(ck),
+            Err(StoreError::MissingChunk { .. }) => self.load_legacy(id),
+            Err(e) => Err(e),
+        }
+    }
+
+    fn load_chunked(&self, id: &str) -> Result<Checkpoint, StoreError> {
+        match self.layout {
+            StoreLayout::Plain => {
+                chunk::assemble_checkpoint(|leaf| self.store.get(&Self::plain_key(id, leaf)))
+            }
+            StoreLayout::Sharded { shards } => {
+                let shard = self.shard_object(id, shards);
+                let entries = self.session_entries(id, shards)?;
+                if entries.is_empty() {
+                    return Err(StoreError::MissingChunk { key: format!("{id}/{}", chunk::META) });
+                }
+                chunk::assemble_checkpoint(|leaf| {
+                    let key = format!("{id}/{leaf}");
+                    let entry = entries
+                        .iter()
+                        .find(|e| e.key == key)
+                        .ok_or(StoreError::MissingChunk { key })?;
+                    shard::read_chunk(self.store.as_ref(), &shard, entry)
+                })
+            }
+        }
+    }
+
+    fn load_legacy(&self, id: &str) -> Result<Checkpoint, StoreError> {
+        let key = Self::legacy_key(id);
+        let bytes = self.store.get(&key)?;
+        Checkpoint::from_bytes(&bytes)
+            .map_err(|reason| StoreError::BadIndex { key, reason })
+    }
+
+    /// Load a single MX weight-image tensor without touching the rest
+    /// of the checkpoint — the per-layer partial read.
+    pub fn load_payload_tensor(
+        &self,
+        id: &str,
+        i: usize,
+    ) -> Result<crate::mx::tensor::MxTensor, StoreError> {
+        validate_session_id(id)?;
+        let leaf = payload_key(i);
+        let bytes = match self.layout {
+            StoreLayout::Plain => self.store.get(&Self::plain_key(id, &leaf))?,
+            StoreLayout::Sharded { shards } => {
+                let shard = self.shard_object(id, shards);
+                let key = format!("{id}/{leaf}");
+                let entries = self.session_entries(id, shards)?;
+                let entry = entries
+                    .iter()
+                    .find(|e| e.key == key)
+                    .ok_or(StoreError::MissingChunk { key })?;
+                shard::read_chunk(self.store.as_ref(), &shard, entry)?
+            }
+        };
+        let mut r = ByteReader::new(&bytes);
+        let t = crate::mx::tensor::MxTensor::read_bytes(&mut r)
+            .map_err(|e| StoreError::BadIndex { key: format!("{id}/{leaf}"), reason: e })?;
+        if r.remaining() != 0 {
+            return Err(StoreError::BadIndex {
+                key: format!("{id}/{leaf}"),
+                reason: format!("{} trailing bytes after tensor", r.remaining()),
+            });
+        }
+        Ok(t)
+    }
+
+    /// Resume a training session from the store — the single
+    /// checkpoint-restore entry point (partial read under the sharded
+    /// layout, monolithic via the compat shim, bit-exact either way).
+    pub fn resume(&self, id: &str, dataset: Dataset) -> Result<TrainSession, TrainError> {
+        let ck = self.load(id)?;
+        TrainSession::resume(dataset, &ck)
+    }
+
+    /// Ids of every session visible in the store (chunked and legacy).
+    pub fn sessions(&self) -> Result<Vec<String>, StoreError> {
+        let mut ids: Vec<String> = Vec::new();
+        match self.layout {
+            StoreLayout::Plain => {
+                for key in self.store.list("sessions/")? {
+                    if let Some(rest) = key.strip_prefix("sessions/") {
+                        if let Some((id, leaf)) = rest.split_once('/') {
+                            if leaf == chunk::META {
+                                ids.push(id.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+            StoreLayout::Sharded { .. } => {
+                for shard in self.shard_files()? {
+                    for e in shard::read_index(self.store.as_ref(), &shard)? {
+                        if let Some((id, leaf)) = e.key.split_once('/') {
+                            if leaf == chunk::META {
+                                ids.push(id.to_string());
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for key in self.store.list("")? {
+            if let Some(id) = key.strip_suffix(".mxckpt") {
+                if !key.contains('/') {
+                    ids.push(id.to_string());
+                }
+            }
+        }
+        ids.sort();
+        ids.dedup();
+        Ok(ids)
+    }
+
+    /// The shard objects currently present (empty under `Plain`).
+    pub fn shard_files(&self) -> Result<Vec<String>, StoreError> {
+        let mut out: Vec<String> = self
+            .store
+            .list("")?
+            .into_iter()
+            .filter(|k| k.starts_with("shard-") && k.ends_with(".mxshard"))
+            .collect();
+        out.sort();
+        Ok(out)
+    }
+
+    /// Remove a session's chunks (plain layout) or its legacy file.
+    /// Sharded chunks are log-structured: erasing drops the legacy
+    /// object only — shard space is reclaimed by rewriting shards,
+    /// which is an offline compaction concern, not a hot-path one.
+    pub fn erase(&self, id: &str) -> Result<(), StoreError> {
+        validate_session_id(id)?;
+        if let StoreLayout::Plain = self.layout {
+            for key in self.store.list(&Self::plain_key(id, ""))? {
+                self.store.erase(&key)?;
+            }
+        }
+        self.store.erase(&Self::legacy_key(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::element::ElementFormat;
+    use crate::store::MemoryStore;
+    use crate::trainer::checkpoint::weight_payload;
+    use crate::trainer::qat::QuantScheme;
+    use crate::trainer::session::TrainConfig;
+    use crate::util::rng::Pcg64;
+
+    fn sample_checkpoint(seed: u64) -> Checkpoint {
+        let mut rng = Pcg64::new(seed);
+        let dims = vec![32usize, 16, 32];
+        let mlp = crate::trainer::mlp::Mlp::new(&dims, &mut rng);
+        let scheme = QuantScheme::MxSquare(ElementFormat::E4M3);
+        let config = TrainConfig {
+            scheme,
+            backend: crate::backend::BackendKind::parse("fast").expect("fast backend"),
+            dims: Some(dims),
+            batch_size: 16,
+            lr: 1e-3,
+            steps: 40,
+            eval_every: 10,
+            seed,
+        };
+        Checkpoint {
+            config,
+            step: 5,
+            adam_step: 5,
+            train_curve: vec![(0, 1.0)],
+            val_curve: vec![],
+            params: mlp.flat_params(),
+            opt: mlp.flat_opt_state(),
+            scheme_log: vec![(0, scheme.name())],
+            payload: weight_payload(&mlp.weights, scheme),
+        }
+    }
+
+    fn mem_store(layout: StoreLayout) -> CheckpointStore {
+        CheckpointStore::new(Arc::new(MemoryStore::new()), layout)
+    }
+
+    #[test]
+    fn layout_parse_round_trips_and_rejects_garbage() {
+        assert_eq!(StoreLayout::parse("plain"), Some(StoreLayout::Plain));
+        assert_eq!(StoreLayout::parse("sharded"), Some(StoreLayout::Sharded { shards: 8 }));
+        assert_eq!(StoreLayout::parse("sharded:3"), Some(StoreLayout::Sharded { shards: 3 }));
+        for bad in ["", "shard", "sharded:0", "sharded:9999", "sharded:x"] {
+            assert_eq!(StoreLayout::parse(bad), None, "{bad}");
+        }
+        let name = StoreLayout::Sharded { shards: 3 }.name();
+        assert_eq!(StoreLayout::parse(&name).unwrap().name(), "sharded:3");
+    }
+
+    #[test]
+    fn both_layouts_round_trip_bitwise() {
+        for layout in [StoreLayout::Plain, StoreLayout::Sharded { shards: 2 }] {
+            let cs = mem_store(layout);
+            let ck = sample_checkpoint(1);
+            cs.save("robot-00", &ck).unwrap();
+            let back = cs.load("robot-00").unwrap();
+            assert_eq!(back.to_bytes(), ck.to_bytes(), "{layout:?}");
+            assert_eq!(cs.sessions().unwrap(), vec!["robot-00".to_string()]);
+        }
+    }
+
+    #[test]
+    fn resave_overwrites_and_newest_wins() {
+        let cs = mem_store(StoreLayout::Sharded { shards: 1 });
+        let ck1 = sample_checkpoint(1);
+        let mut ck2 = sample_checkpoint(1);
+        ck2.step = 99;
+        cs.save("r", &ck1).unwrap();
+        cs.save("r", &ck2).unwrap();
+        assert_eq!(cs.load("r").unwrap().step, 99);
+        assert_eq!(cs.sessions().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn legacy_monolithic_file_loads_through_the_compat_shim() {
+        let cs = mem_store(StoreLayout::Sharded { shards: 4 });
+        let ck = sample_checkpoint(2);
+        cs.storage().put("old-robot.mxckpt", &ck.to_bytes()).unwrap();
+        let back = cs.load("old-robot").unwrap();
+        assert_eq!(back.to_bytes(), ck.to_bytes());
+        assert!(cs.sessions().unwrap().contains(&"old-robot".to_string()));
+        // and a corrupt legacy file is a structured error
+        cs.storage().put("bad.mxckpt", b"MXCKgarbage").unwrap();
+        assert!(matches!(cs.load("bad"), Err(StoreError::BadIndex { .. })));
+    }
+
+    #[test]
+    fn save_many_packs_one_append_per_shard() {
+        let cs = mem_store(StoreLayout::Sharded { shards: 2 });
+        let cks: Vec<(String, Checkpoint)> =
+            (0..6).map(|i| (format!("robot-{i:02}"), sample_checkpoint(i as u64))).collect();
+        let refs: Vec<(String, &Checkpoint)> =
+            cks.iter().map(|(id, ck)| (id.clone(), ck)).collect();
+        cs.save_many(&refs).unwrap();
+        assert!(cs.shard_files().unwrap().len() <= 2);
+        for (id, ck) in &cks {
+            assert_eq!(cs.load(id).unwrap().to_bytes(), ck.to_bytes(), "{id}");
+        }
+        let manifest = cs.chunk_manifest("robot-03").unwrap();
+        assert!(manifest.iter().any(|(k, _)| k == "robot-03/meta"));
+        assert!(manifest.iter().all(|(k, _)| k.starts_with("robot-03/")));
+    }
+
+    #[test]
+    fn payload_tensor_partial_read_matches_full_load() {
+        for layout in [StoreLayout::Plain, StoreLayout::Sharded { shards: 1 }] {
+            let cs = mem_store(layout);
+            let ck = sample_checkpoint(3);
+            cs.save("r", &ck).unwrap();
+            let t = cs.load_payload_tensor("r", 1).unwrap();
+            let full = cs.load("r").unwrap();
+            let bytes = |t: &crate::mx::tensor::MxTensor| {
+                let mut w = crate::util::bytes::ByteWriter::new();
+                t.write_bytes(&mut w);
+                w.into_bytes()
+            };
+            assert_eq!(bytes(&t), bytes(&full.payload[1]), "{layout:?}");
+            assert!(matches!(
+                cs.load_payload_tensor("r", 9),
+                Err(StoreError::MissingChunk { .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn bad_session_ids_are_rejected() {
+        let cs = mem_store(StoreLayout::Plain);
+        let ck = sample_checkpoint(4);
+        let too_long = "i".repeat(MAX_SESSION_ID + 1);
+        for bad in ["", "a/b", "..", "x y", too_long.as_str()] {
+            assert!(cs.save(bad, &ck).is_err(), "{bad}");
+            assert!(cs.load(bad).is_err(), "{bad}");
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! [`FilesystemStore`]: the [`Storage`] trait over `std::fs`.
+//!
+//! Keys map to paths under a root directory. Whole-object `put` is
+//! write-to-temp-then-rename, so a concurrent reader never observes a
+//! half-written object; `append` relies on the caller holding the
+//! per-shard [`crate::store::StoreLock`] (which is what makes the
+//! returned start offset trustworthy); `try_create` is `O_EXCL`
+//! (`OpenOptions::create_new`), atomic across both threads and
+//! processes — the primitive the advisory lock is built on.
+
+#![forbid(unsafe_code)]
+
+use std::fs::{self, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::{validate_key, Storage, StoreError};
+
+/// Directory-rooted byte-object store.
+#[derive(Debug, Clone)]
+pub struct FilesystemStore {
+    root: PathBuf,
+}
+
+impl FilesystemStore {
+    /// Open (creating the root directory if needed).
+    pub fn open(root: &Path) -> Result<Self, StoreError> {
+        fs::create_dir_all(root).map_err(|e| StoreError::Io {
+            op: "create root",
+            key: root.display().to_string(),
+            reason: e.to_string(),
+        })?;
+        Ok(Self { root: root.to_path_buf() })
+    }
+
+    /// The root directory this store is anchored at.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, key: &str) -> Result<PathBuf, StoreError> {
+        validate_key(key)?;
+        let mut p = self.root.clone();
+        for comp in key.split('/') {
+            p.push(comp);
+        }
+        Ok(p)
+    }
+
+    fn io(op: &'static str, key: &str, e: std::io::Error) -> StoreError {
+        if e.kind() == std::io::ErrorKind::NotFound {
+            StoreError::MissingChunk { key: key.to_string() }
+        } else {
+            StoreError::Io { op, key: key.to_string(), reason: e.to_string() }
+        }
+    }
+
+    fn ensure_parent(&self, path: &Path, key: &str) -> Result<(), StoreError> {
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent).map_err(|e| StoreError::Io {
+                op: "create dir",
+                key: key.to_string(),
+                reason: e.to_string(),
+            })?;
+        }
+        Ok(())
+    }
+
+    fn collect(
+        &self,
+        dir: &Path,
+        rel: &mut Vec<String>,
+        out: &mut Vec<String>,
+    ) -> std::io::Result<()> {
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            let path = entry.path();
+            rel.push(name);
+            if path.is_dir() {
+                self.collect(&path, rel, out)?;
+            } else {
+                out.push(rel.join("/"));
+            }
+            rel.pop();
+        }
+        Ok(())
+    }
+}
+
+impl Storage for FilesystemStore {
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        let path = self.path_for(key)?;
+        fs::read(&path).map_err(|e| Self::io("get", key, e))
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError> {
+        let path = self.path_for(key)?;
+        let mut f = fs::File::open(&path).map_err(|e| Self::io("get_range", key, e))?;
+        f.seek(SeekFrom::Start(offset)).map_err(|e| Self::io("get_range", key, e))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf).map_err(|e| StoreError::Io {
+            op: "get_range",
+            key: key.to_string(),
+            reason: format!("short read of {len} bytes at {offset}: {e}"),
+        })?;
+        Ok(buf)
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        let path = self.path_for(key)?;
+        let meta = fs::metadata(&path).map_err(|e| Self::io("size", key, e))?;
+        if meta.is_dir() {
+            return Err(StoreError::MissingChunk { key: key.to_string() });
+        }
+        Ok(meta.len())
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError> {
+        let path = self.path_for(key)?;
+        self.ensure_parent(&path, key)?;
+        // Temp file beside the target so the rename stays on one mount.
+        let tmp = path.with_extension("tmp-put");
+        fs::write(&tmp, bytes).map_err(|e| Self::io("put", key, e))?;
+        fs::rename(&tmp, &path).map_err(|e| Self::io("put", key, e))
+    }
+
+    fn append(&self, key: &str, bytes: &[u8]) -> Result<u64, StoreError> {
+        let path = self.path_for(key)?;
+        self.ensure_parent(&path, key)?;
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| Self::io("append", key, e))?;
+        let at = f.metadata().map_err(|e| Self::io("append", key, e))?.len();
+        f.write_all(bytes).map_err(|e| Self::io("append", key, e))?;
+        Ok(at)
+    }
+
+    fn try_create(&self, key: &str, bytes: &[u8]) -> Result<bool, StoreError> {
+        let path = self.path_for(key)?;
+        self.ensure_parent(&path, key)?;
+        match OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                f.write_all(bytes).map_err(|e| Self::io("try_create", key, e))?;
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => Ok(false),
+            Err(e) => Err(StoreError::Io {
+                op: "try_create",
+                key: key.to_string(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        let mut out = Vec::new();
+        let mut rel = Vec::new();
+        if self.root.is_dir() {
+            self.collect(&self.root, &mut rel, &mut out).map_err(|e| StoreError::Io {
+                op: "list",
+                key: prefix.to_string(),
+                reason: e.to_string(),
+            })?;
+        }
+        out.retain(|k| k.starts_with(prefix));
+        out.sort();
+        Ok(out)
+    }
+
+    fn erase(&self, key: &str) -> Result<(), StoreError> {
+        let path = self.path_for(key)?;
+        match fs::remove_file(&path) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => {
+                Err(StoreError::Io { op: "erase", key: key.to_string(), reason: e.to_string() })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mxscale-store-fs-{name}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn filesystem_store_round_trips_nested_keys() {
+        let dir = scratch("roundtrip");
+        let s = FilesystemStore::open(&dir).unwrap();
+        s.put("sessions/r1/meta", b"abc").unwrap();
+        s.put("sessions/r1/params", b"defgh").unwrap();
+        assert_eq!(s.get("sessions/r1/meta").unwrap(), b"abc");
+        assert_eq!(s.size("sessions/r1/params").unwrap(), 5);
+        assert_eq!(s.get_range("sessions/r1/params", 1, 3).unwrap(), b"efg");
+        assert!(s.get_range("sessions/r1/params", 3, 3).is_err());
+        assert_eq!(
+            s.list("sessions/").unwrap(),
+            vec!["sessions/r1/meta".to_string(), "sessions/r1/params".to_string()]
+        );
+        assert!(matches!(s.get("nope"), Err(StoreError::MissingChunk { .. })));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn append_returns_start_offsets_and_try_create_is_exclusive() {
+        let dir = scratch("append");
+        let s = FilesystemStore::open(&dir).unwrap();
+        assert_eq!(s.append("shard.mxshard", b"aaaa").unwrap(), 0);
+        assert_eq!(s.append("shard.mxshard", b"bb").unwrap(), 4);
+        assert_eq!(s.get("shard.mxshard").unwrap(), b"aaaabb");
+        assert!(s.try_create("shard.mxshard.lock", b"w1").unwrap());
+        assert!(!s.try_create("shard.mxshard.lock", b"w2").unwrap());
+        assert_eq!(s.get("shard.mxshard.lock").unwrap(), b"w1");
+        s.erase("shard.mxshard.lock").unwrap();
+        s.erase("shard.mxshard.lock").unwrap(); // idempotent
+        assert!(s.try_create("shard.mxshard.lock", b"w3").unwrap());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

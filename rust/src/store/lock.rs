@@ -1,0 +1,103 @@
+//! Store-level advisory locking.
+//!
+//! A [`StoreLock`] is an RAII guard over a lock *object* created with
+//! [`crate::store::Storage::try_create`] (atomic create-if-absent, so
+//! it excludes across threads and processes alike). Shard appends take
+//! the shard's lock for the duration of one read-index → append →
+//! rewrite-index cycle; writers targeting *different* shards never
+//! touch each other's lock, which is what keeps a fleet of concurrent
+//! writers from serializing behind a single mutex.
+//!
+//! Acquisition spins with exponential backoff (1 ms → 16 ms) up to a
+//! caller-chosen timeout, then fails with
+//! [`crate::store::StoreError::LockHeld`] — a structured error the
+//! fleet can surface or retry on, never a deadlock.
+
+#![forbid(unsafe_code)]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::{Storage, StoreError};
+
+/// RAII advisory lock over a [`Storage`] object. Dropping the guard
+/// releases the lock (best-effort; [`StoreLock::release`] reports the
+/// error for callers who care).
+pub struct StoreLock {
+    store: Arc<dyn Storage>,
+    key: String,
+    held: bool,
+}
+
+impl StoreLock {
+    /// Acquire `key` within `timeout`, spinning with backoff.
+    pub fn acquire(
+        store: Arc<dyn Storage>,
+        key: &str,
+        timeout: Duration,
+    ) -> Result<Self, StoreError> {
+        let start = Instant::now();
+        let mut backoff = Duration::from_millis(1);
+        loop {
+            if store.try_create(key, b"mxscale-store-lock")? {
+                return Ok(Self { store, key: key.to_string(), held: true });
+            }
+            if start.elapsed() >= timeout {
+                return Err(StoreError::LockHeld { key: key.to_string() });
+            }
+            std::thread::sleep(backoff.min(timeout.saturating_sub(start.elapsed())));
+            backoff = (backoff * 2).min(Duration::from_millis(16));
+        }
+    }
+
+    /// The lock object's key.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Release explicitly, surfacing any erase error (Drop swallows it).
+    pub fn release(mut self) -> Result<(), StoreError> {
+        self.held = false;
+        self.store.erase(&self.key)
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        if self.held {
+            let _ = self.store.erase(&self.key);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemoryStore;
+
+    #[test]
+    fn lock_excludes_until_released_and_drop_releases() {
+        let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+        let lock = StoreLock::acquire(store.clone(), "s.lock", Duration::from_millis(50)).unwrap();
+        let contender = StoreLock::acquire(store.clone(), "s.lock", Duration::from_millis(20));
+        assert!(matches!(contender, Err(StoreError::LockHeld { .. })));
+        drop(lock);
+        let relock =
+            StoreLock::acquire(store.clone(), "s.lock", Duration::from_millis(50)).unwrap();
+        relock.release().unwrap();
+        assert!(!store.exists("s.lock").unwrap());
+    }
+
+    #[test]
+    fn waiting_acquire_succeeds_once_holder_drops() {
+        let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+        let lock = StoreLock::acquire(store.clone(), "w.lock", Duration::from_millis(50)).unwrap();
+        let store2 = store.clone();
+        let waiter = std::thread::spawn(move || {
+            StoreLock::acquire(store2, "w.lock", Duration::from_secs(5)).map(|l| l.release())
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        drop(lock);
+        waiter.join().expect("waiter thread").expect("acquire after drop").unwrap();
+    }
+}

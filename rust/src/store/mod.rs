@@ -1,0 +1,423 @@
+//! The checkpoint store: a dependency-free object-storage layer for
+//! fleet-scale training state (DESIGN.md §11).
+//!
+//! Three layers, bottom up:
+//!
+//! 1. **[`Storage`]** — a minimal byte-object trait (get / byte-range
+//!    get / put / append / list / erase, plus `try_create` as the
+//!    advisory-lock primitive). [`FilesystemStore`] implements it over
+//!    `std::fs`; [`MemoryStore`] over a `BTreeMap` (tests, and the
+//!    proof that an object store can slot in later); [`CountingStore`]
+//!    wraps any of them and meters bytes moved — how the partial-read
+//!    guarantee is *asserted*, not just claimed.
+//! 2. **Chunked checkpoint layout** ([`chunk`]) — one
+//!    [`crate::trainer::checkpoint::Checkpoint`] splits into per-section,
+//!    per-tensor chunks addressed by key: `meta`, `params` (FP32
+//!    masters), `opt` (Adam moments), `curves`, `scheme_log`, and one
+//!    `payload/<i>` per MX weight-image tensor. Reassembly is bitwise
+//!    lossless: `assemble(split(ck))` reproduces `ck.to_bytes()`
+//!    exactly, so the bit-exact resume contract survives chunking.
+//! 3. **Sharding container** ([`shard`]) — thousands of robots' chunks
+//!    pack into a few large `shard-*.mxshard` objects, each ending in a
+//!    fixed-size index (chunk key → offset/len/FNV-1a checksum) plus a
+//!    fixed-size trailer. A resume reads the trailer, the index, and
+//!    only the chunks it needs — never the other robots' state.
+//!    Appends are log-structured (old index regions become dead bytes;
+//!    the trailer at EOF always names the live index) and serialized
+//!    per shard by a [`lock::StoreLock`], so concurrent fleet writers
+//!    to different shards never contend.
+//!
+//! [`CheckpointStore`] is the facade every checkpoint entry point goes
+//! through (trainer save/load, fleet domain shifts, `mxscale fleet
+//! --store`); the legacy monolithic `.mxckpt` file is just the
+//! single-chunk `FilesystemStore` case read through its compat shim.
+//!
+//! Everything returns structured [`StoreError`]s — no stringly errors,
+//! no panics on corrupt input — and the trainer boundary folds them
+//! into `TrainError::BadCheckpoint`.
+
+#![forbid(unsafe_code)]
+
+pub mod chunk;
+pub mod ckpt;
+pub mod fs;
+pub mod lock;
+pub mod shard;
+
+pub use ckpt::{CheckpointStore, StoreLayout};
+pub use fs::FilesystemStore;
+pub use lock::StoreLock;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// On-disk format version of the store layer (chunk codecs + shard
+/// index/trailer). mxlint rule L5 pins every `write_bytes`/`read_bytes`
+/// body under `store/` against this constant: the layout can only
+/// change together with a bump here.
+///
+/// v1: chunked checkpoint sections (`MXCM` meta) + sharded container
+/// (`MXSH` trailer, 88-byte index entries, FNV-1a checksums).
+const VERSION: u32 = 1;
+
+/// The store-format version (see [`VERSION`]).
+pub fn store_version() -> u32 {
+    VERSION
+}
+
+/// Structured store failure. `MissingChunk` doubles as "missing
+/// object" for whole-object gets, so callers can distinguish
+/// not-found (try the compat shim, report a clean error) from
+/// corruption (`BadIndex`/`ChecksumMismatch` — never silently retried).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StoreError {
+    /// The addressed chunk/object does not exist.
+    MissingChunk { key: String },
+    /// A shard trailer/index (or a chunk's framing) failed validation.
+    BadIndex { key: String, reason: String },
+    /// Stored bytes do not match their recorded FNV-1a checksum.
+    ChecksumMismatch { key: String },
+    /// The advisory lock could not be acquired within the timeout.
+    LockHeld { key: String },
+    /// An underlying storage operation failed.
+    Io { op: &'static str, key: String, reason: String },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::MissingChunk { key } => write!(f, "missing chunk `{key}`"),
+            StoreError::BadIndex { key, reason } => {
+                write!(f, "bad shard index in `{key}`: {reason}")
+            }
+            StoreError::ChecksumMismatch { key } => {
+                write!(f, "checksum mismatch reading chunk `{key}` (corrupt store?)")
+            }
+            StoreError::LockHeld { key } => {
+                write!(f, "store lock `{key}` is held by another writer")
+            }
+            StoreError::Io { op, key, reason } => write!(f, "store {op} `{key}`: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// The trainer boundary: every store failure surfaces as a structured
+/// checkpoint error, so `?` works across the seam.
+impl From<StoreError> for crate::trainer::session::TrainError {
+    fn from(e: StoreError) -> Self {
+        crate::trainer::session::TrainError::BadCheckpoint { reason: e.to_string() }
+    }
+}
+
+/// Reject keys that could escape the store root or break the shard
+/// index framing. Keys are `/`-separated relative paths of
+/// `[A-Za-z0-9._-]` components (no empty components, no `.`/`..`).
+pub fn validate_key(key: &str) -> Result<(), StoreError> {
+    let bad = |reason: &str| {
+        Err(StoreError::Io { op: "validate", key: key.to_string(), reason: reason.to_string() })
+    };
+    if key.is_empty() {
+        return bad("empty key");
+    }
+    for comp in key.split('/') {
+        if comp.is_empty() {
+            return bad("empty path component");
+        }
+        if comp == "." || comp == ".." {
+            return bad("relative path component");
+        }
+        if !comp.bytes().all(|b| b.is_ascii_alphanumeric() || b"._-".contains(&b)) {
+            return bad("component has characters outside [A-Za-z0-9._-]");
+        }
+    }
+    Ok(())
+}
+
+/// A minimal byte-object store. Implementations must be `Send + Sync`:
+/// fleet writers share one handle across worker threads.
+///
+/// Contract notes:
+/// * `get`/`size` on a missing object return [`StoreError::MissingChunk`].
+/// * `get_range` past the object end is an error, never a short read.
+/// * `append` returns the offset the write began at; shard appends call
+///   it under a [`StoreLock`], which is what makes the returned offset
+///   meaningful.
+/// * `try_create` is atomic create-if-absent — the advisory-lock
+///   primitive ([`StoreLock`] is built on nothing else, so any
+///   conforming backend gets locking for free).
+/// * `erase` of a missing object is `Ok` (idempotent — lock release
+///   must not fail a run that already crashed once).
+pub trait Storage: Send + Sync {
+    /// Read a whole object.
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError>;
+    /// Read exactly `len` bytes starting at `offset`.
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError>;
+    /// Object size in bytes.
+    fn size(&self, key: &str) -> Result<u64, StoreError>;
+    /// Create or replace a whole object.
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError>;
+    /// Append to an object (creating it), returning the offset the
+    /// write began at.
+    fn append(&self, key: &str, bytes: &[u8]) -> Result<u64, StoreError>;
+    /// Atomically create the object iff absent; `Ok(false)` when it
+    /// already exists.
+    fn try_create(&self, key: &str, bytes: &[u8]) -> Result<bool, StoreError>;
+    /// Sorted keys under `prefix` ("" lists everything).
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError>;
+    /// Delete an object (idempotent).
+    fn erase(&self, key: &str) -> Result<(), StoreError>;
+
+    /// Whether the object exists (derived from `size`).
+    fn exists(&self, key: &str) -> Result<bool, StoreError> {
+        match self.size(key) {
+            Ok(_) => Ok(true),
+            Err(StoreError::MissingChunk { .. }) => Ok(false),
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// In-memory [`Storage`] — the tests' scratch backend and the proof the
+/// trait carries everything an object-store adapter needs.
+#[derive(Debug, Default)]
+pub struct MemoryStore {
+    objects: Mutex<BTreeMap<String, Vec<u8>>>,
+}
+
+impl MemoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn guard(&self) -> Result<std::sync::MutexGuard<'_, BTreeMap<String, Vec<u8>>>, StoreError> {
+        self.objects.lock().map_err(|_| StoreError::Io {
+            op: "lock",
+            key: String::new(),
+            reason: "memory store mutex poisoned".into(),
+        })
+    }
+}
+
+impl Storage for MemoryStore {
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        validate_key(key)?;
+        self.guard()?
+            .get(key)
+            .cloned()
+            .ok_or_else(|| StoreError::MissingChunk { key: key.to_string() })
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError> {
+        let obj = self.get(key)?;
+        let (start, end) = (offset as usize, (offset + len) as usize);
+        if end > obj.len() || end < start {
+            return Err(StoreError::Io {
+                op: "get_range",
+                key: key.to_string(),
+                reason: format!("range {offset}+{len} exceeds object of {} bytes", obj.len()),
+            });
+        }
+        Ok(obj[start..end].to_vec())
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        validate_key(key)?;
+        self.guard()?
+            .get(key)
+            .map(|b| b.len() as u64)
+            .ok_or_else(|| StoreError::MissingChunk { key: key.to_string() })
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError> {
+        validate_key(key)?;
+        self.guard()?.insert(key.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn append(&self, key: &str, bytes: &[u8]) -> Result<u64, StoreError> {
+        validate_key(key)?;
+        let mut objects = self.guard()?;
+        let obj = objects.entry(key.to_string()).or_default();
+        let at = obj.len() as u64;
+        obj.extend_from_slice(bytes);
+        Ok(at)
+    }
+
+    fn try_create(&self, key: &str, bytes: &[u8]) -> Result<bool, StoreError> {
+        validate_key(key)?;
+        let mut objects = self.guard()?;
+        if objects.contains_key(key) {
+            return Ok(false);
+        }
+        objects.insert(key.to_string(), bytes.to_vec());
+        Ok(true)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        Ok(self.guard()?.keys().filter(|k| k.starts_with(prefix)).cloned().collect())
+    }
+
+    fn erase(&self, key: &str) -> Result<(), StoreError> {
+        validate_key(key)?;
+        self.guard()?.remove(key);
+        Ok(())
+    }
+}
+
+/// Metering wrapper: delegates every operation and counts the bytes
+/// that actually moved. The partial-read acceptance criterion —
+/// "resuming one robot from a 1000-robot shard store reads no more
+/// than the index plus that robot's chunks" — is asserted through this
+/// type in `tests/store.rs` and measured by `benches/bench_store.rs`.
+pub struct CountingStore {
+    inner: Arc<dyn Storage>,
+    read_bytes: AtomicU64,
+    read_calls: AtomicU64,
+    write_bytes: AtomicU64,
+}
+
+impl CountingStore {
+    pub fn new(inner: Arc<dyn Storage>) -> Self {
+        Self {
+            inner,
+            read_bytes: AtomicU64::new(0),
+            read_calls: AtomicU64::new(0),
+            write_bytes: AtomicU64::new(0),
+        }
+    }
+
+    /// Bytes returned by `get`/`get_range` since construction (or the
+    /// last [`CountingStore::reset`]).
+    pub fn bytes_read(&self) -> u64 {
+        self.read_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Number of `get`/`get_range` calls.
+    pub fn read_calls(&self) -> u64 {
+        self.read_calls.load(Ordering::Relaxed)
+    }
+
+    /// Bytes accepted by `put`/`append`/`try_create`.
+    pub fn bytes_written(&self) -> u64 {
+        self.write_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Zero all counters (e.g. after populating, before measuring).
+    pub fn reset(&self) {
+        self.read_bytes.store(0, Ordering::Relaxed);
+        self.read_calls.store(0, Ordering::Relaxed);
+        self.write_bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Storage for CountingStore {
+    fn get(&self, key: &str) -> Result<Vec<u8>, StoreError> {
+        let bytes = self.inner.get(key)?;
+        self.read_calls.fetch_add(1, Ordering::Relaxed);
+        self.read_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    fn get_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>, StoreError> {
+        let bytes = self.inner.get_range(key, offset, len)?;
+        self.read_calls.fetch_add(1, Ordering::Relaxed);
+        self.read_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(bytes)
+    }
+
+    fn size(&self, key: &str) -> Result<u64, StoreError> {
+        self.inner.size(key)
+    }
+
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<(), StoreError> {
+        self.write_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.inner.put(key, bytes)
+    }
+
+    fn append(&self, key: &str, bytes: &[u8]) -> Result<u64, StoreError> {
+        self.write_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.inner.append(key, bytes)
+    }
+
+    fn try_create(&self, key: &str, bytes: &[u8]) -> Result<bool, StoreError> {
+        self.write_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.inner.try_create(key, bytes)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>, StoreError> {
+        self.inner.list(prefix)
+    }
+
+    fn erase(&self, key: &str) -> Result<(), StoreError> {
+        self.inner.erase(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_validation_rejects_escapes_and_accepts_store_keys() {
+        for good in ["a", "robot-07/params", "shard-0003.mxshard", "sessions/r1/payload/2"] {
+            assert!(validate_key(good).is_ok(), "{good}");
+        }
+        for bad in ["", "/abs", "a//b", "../up", "a/./b", "a/..", "sp ace", "uni\u{e9}"] {
+            assert!(validate_key(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn memory_store_round_trips_and_ranges() {
+        let s = MemoryStore::new();
+        s.put("k/v", b"hello world").unwrap();
+        assert_eq!(s.get("k/v").unwrap(), b"hello world");
+        assert_eq!(s.size("k/v").unwrap(), 11);
+        assert_eq!(s.get_range("k/v", 6, 5).unwrap(), b"world");
+        assert!(s.get_range("k/v", 6, 6).is_err(), "over-read must error, not truncate");
+        assert!(matches!(s.get("k/other"), Err(StoreError::MissingChunk { .. })));
+        assert_eq!(s.append("k/v", b"!").unwrap(), 11);
+        assert_eq!(s.size("k/v").unwrap(), 12);
+        assert!(!s.try_create("k/v", b"x").unwrap());
+        assert!(s.try_create("k/new", b"x").unwrap());
+        assert_eq!(s.list("k/").unwrap(), vec!["k/new".to_string(), "k/v".to_string()]);
+        s.erase("k/v").unwrap();
+        s.erase("k/v").unwrap(); // idempotent
+        assert!(!s.exists("k/v").unwrap());
+    }
+
+    #[test]
+    fn counting_store_meters_reads_and_writes() {
+        let inner = Arc::new(MemoryStore::new());
+        let c = CountingStore::new(inner);
+        c.put("obj", &[7u8; 100]).unwrap();
+        assert_eq!(c.bytes_written(), 100);
+        assert_eq!(c.get_range("obj", 10, 25).unwrap().len(), 25);
+        assert_eq!(c.get("obj").unwrap().len(), 100);
+        assert_eq!(c.bytes_read(), 125);
+        assert_eq!(c.read_calls(), 2);
+        c.reset();
+        assert_eq!((c.bytes_read(), c.read_calls(), c.bytes_written()), (0, 0, 0));
+    }
+
+    #[test]
+    fn store_errors_render_their_structure() {
+        let e = StoreError::MissingChunk { key: "r1/meta".into() };
+        assert!(e.to_string().contains("r1/meta"));
+        let e = StoreError::ChecksumMismatch { key: "r1/params".into() };
+        assert!(e.to_string().contains("checksum"));
+        let e = StoreError::LockHeld { key: "shard-0001.mxshard.lock".into() };
+        assert!(e.to_string().contains("lock"));
+        // and the trainer boundary folds into BadCheckpoint
+        let t: crate::trainer::session::TrainError =
+            StoreError::ChecksumMismatch { key: "k".into() }.into();
+        assert!(matches!(
+            t,
+            crate::trainer::session::TrainError::BadCheckpoint { ref reason }
+                if reason.contains("checksum")
+        ));
+    }
+}

@@ -1,0 +1,350 @@
+//! The sharding container: thousands of robots' checkpoint chunks
+//! packed into a few large shard objects, each ending in a fixed-size
+//! index (chunk key → offset/len/FNV-1a checksum) plus a fixed-size
+//! trailer.
+//!
+//! Layout (all little-endian, per `util::bytes`):
+//!
+//! ```text
+//! [chunk bytes …][chunk bytes …] … [index: n × 88-byte entries][trailer: 32 bytes]
+//! entry   = key (64 bytes, zero-padded ASCII) · offset u64 · len u64 · fnv1a64(chunk) u64
+//! trailer = magic "MXSH" · store VERSION u32 · n_entries u64 · index_off u64 · fnv1a64(index) u64
+//! ```
+//!
+//! Appends are **log-structured**: a writer (holding the shard's
+//! [`StoreLock`]) reads the live index, appends its new chunks followed
+//! by a *complete* rewritten index and a fresh trailer at EOF. The old
+//! index region becomes dead bytes; a reader always finds the live
+//! index through the trailer at EOF, so a crash mid-append leaves the
+//! previous generation intact (the trailer is the commit point). Same
+//! key appended twice → the newest entry wins at index-merge time.
+//!
+//! A resume therefore reads: 32 trailer bytes + `n × 88` index bytes +
+//! exactly the chunks it asks for — never another robot's state. That
+//! bound is asserted (not assumed) via `store::CountingStore` in
+//! `tests/store.rs`.
+
+#![forbid(unsafe_code)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::bytes::{fnv1a64, ByteReader, ByteWriter};
+
+use super::lock::StoreLock;
+use super::{Storage, StoreError, VERSION};
+
+/// Shard trailer magic.
+pub const SHARD_MAGIC: [u8; 4] = *b"MXSH";
+/// Fixed key field width inside an index entry.
+pub const KEY_BYTES: usize = 64;
+/// Serialized size of one [`IndexEntry`].
+pub const ENTRY_BYTES: usize = KEY_BYTES + 8 + 8 + 8;
+/// Serialized size of a [`ShardTrailer`].
+pub const TRAILER_BYTES: usize = 4 + 4 + 8 + 8 + 8;
+/// Plausibility cap on entries per shard (1M chunks ≈ 88 MB of index).
+const MAX_ENTRIES: u64 = 1 << 20;
+
+/// One chunk's address within a shard: key → byte range + checksum.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexEntry {
+    pub key: String,
+    pub offset: u64,
+    pub len: u64,
+    pub checksum: u64,
+}
+
+impl IndexEntry {
+    /// Serialize as a fixed 88-byte record (key zero-padded to 64).
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        let kb = self.key.as_bytes();
+        debug_assert!(kb.len() <= KEY_BYTES, "key `{}` overflows index field", self.key);
+        for i in 0..KEY_BYTES {
+            w.put_u8(kb.get(i).copied().unwrap_or(0));
+        }
+        w.put_u64(self.offset);
+        w.put_u64(self.len);
+        w.put_u64(self.checksum);
+    }
+
+    /// Inverse of [`IndexEntry::write_bytes`].
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<IndexEntry, String> {
+        let mut kb = [0u8; KEY_BYTES];
+        for b in kb.iter_mut() {
+            *b = r.get_u8()?;
+        }
+        let end = kb.iter().position(|&b| b == 0).unwrap_or(KEY_BYTES);
+        if kb[end..].iter().any(|&b| b != 0) {
+            return Err("index key has bytes after NUL padding".into());
+        }
+        let key = std::str::from_utf8(&kb[..end])
+            .map_err(|e| format!("index key is not UTF-8: {e}"))?
+            .to_string();
+        if key.is_empty() {
+            return Err("empty index key".into());
+        }
+        let offset = r.get_u64()?;
+        let len = r.get_u64()?;
+        let checksum = r.get_u64()?;
+        Ok(IndexEntry { key, offset, len, checksum })
+    }
+}
+
+/// The 32-byte commit record at a shard's EOF.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardTrailer {
+    pub n_entries: u64,
+    pub index_off: u64,
+    pub index_checksum: u64,
+}
+
+impl ShardTrailer {
+    /// Serialize (magic + store VERSION + counts).
+    pub fn write_bytes(&self, w: &mut ByteWriter) {
+        for b in SHARD_MAGIC {
+            w.put_u8(b);
+        }
+        w.put_u32(VERSION);
+        w.put_u64(self.n_entries);
+        w.put_u64(self.index_off);
+        w.put_u64(self.index_checksum);
+    }
+
+    /// Inverse of [`ShardTrailer::write_bytes`], validating magic and
+    /// version.
+    pub fn read_bytes(r: &mut ByteReader<'_>) -> Result<ShardTrailer, String> {
+        let mut magic = [0u8; 4];
+        for b in magic.iter_mut() {
+            *b = r.get_u8()?;
+        }
+        if magic != SHARD_MAGIC {
+            return Err(format!("bad shard magic {magic:02x?} (want {SHARD_MAGIC:02x?})"));
+        }
+        let version = r.get_u32()?;
+        if version == 0 || version > VERSION {
+            return Err(format!(
+                "unsupported shard version {version} (this build reads ≤ {VERSION})"
+            ));
+        }
+        let n_entries = r.get_u64()?;
+        if n_entries > MAX_ENTRIES {
+            return Err(format!("implausible shard entry count {n_entries}"));
+        }
+        let index_off = r.get_u64()?;
+        let index_checksum = r.get_u64()?;
+        Ok(ShardTrailer { n_entries, index_off, index_checksum })
+    }
+}
+
+fn bad_index(shard: &str, reason: impl Into<String>) -> StoreError {
+    StoreError::BadIndex { key: shard.to_string(), reason: reason.into() }
+}
+
+/// Read a shard's live index: trailer at EOF, then the index region it
+/// names, checksum-verified. A missing shard surfaces as
+/// [`StoreError::MissingChunk`]; any structural damage as `BadIndex`.
+pub fn read_index(store: &dyn Storage, shard: &str) -> Result<Vec<IndexEntry>, StoreError> {
+    let size = store.size(shard)?;
+    if size < TRAILER_BYTES as u64 {
+        return Err(bad_index(shard, format!("shard of {size} bytes is smaller than a trailer")));
+    }
+    let tb = store.get_range(shard, size - TRAILER_BYTES as u64, TRAILER_BYTES as u64)?;
+    let trailer =
+        ShardTrailer::read_bytes(&mut ByteReader::new(&tb)).map_err(|e| bad_index(shard, e))?;
+    let index_len = trailer.n_entries * ENTRY_BYTES as u64;
+    let expect_end = trailer
+        .index_off
+        .checked_add(index_len)
+        .and_then(|v| v.checked_add(TRAILER_BYTES as u64));
+    if expect_end != Some(size) {
+        return Err(bad_index(
+            shard,
+            format!(
+                "trailer names index at {}+{} but shard ends at {} (truncated append?)",
+                trailer.index_off, index_len, size
+            ),
+        ));
+    }
+    let ib = store.get_range(shard, trailer.index_off, index_len)?;
+    if fnv1a64(&ib) != trailer.index_checksum {
+        return Err(bad_index(shard, "index bytes do not match trailer checksum"));
+    }
+    let mut r = ByteReader::new(&ib);
+    let mut entries = Vec::with_capacity(trailer.n_entries as usize);
+    for _ in 0..trailer.n_entries {
+        entries.push(IndexEntry::read_bytes(&mut r).map_err(|e| bad_index(shard, e))?);
+    }
+    Ok(entries)
+}
+
+/// Fetch one chunk by its index entry, verifying its checksum.
+pub fn read_chunk(
+    store: &dyn Storage,
+    shard: &str,
+    entry: &IndexEntry,
+) -> Result<Vec<u8>, StoreError> {
+    let bytes = store.get_range(shard, entry.offset, entry.len)?;
+    if fnv1a64(&bytes) != entry.checksum {
+        return Err(StoreError::ChecksumMismatch { key: entry.key.clone() });
+    }
+    Ok(bytes)
+}
+
+/// Append `chunks` to `shard` under its advisory lock: new chunk bytes,
+/// then the full merged index (newest entry per key wins), then a fresh
+/// trailer — one atomic-at-the-trailer generation per call.
+pub fn append_chunks(
+    store: &Arc<dyn Storage>,
+    shard: &str,
+    chunks: &[(String, Vec<u8>)],
+    lock_timeout: Duration,
+) -> Result<(), StoreError> {
+    for (key, _) in chunks {
+        super::validate_key(key)?;
+        if key.len() > KEY_BYTES {
+            return Err(StoreError::Io {
+                op: "append_chunks",
+                key: key.clone(),
+                reason: format!("chunk key longer than the {KEY_BYTES}-byte index field"),
+            });
+        }
+    }
+    let lock = StoreLock::acquire(store.clone(), &format!("{shard}.lock"), lock_timeout)?;
+    let old = match read_index(store.as_ref(), shard) {
+        Ok(entries) => entries,
+        Err(StoreError::MissingChunk { .. }) => Vec::new(),
+        Err(e) => return Err(e),
+    };
+    let base = match store.size(shard) {
+        Ok(n) => n,
+        Err(StoreError::MissingChunk { .. }) => 0,
+        Err(e) => return Err(e),
+    };
+
+    let mut blob = ByteWriter::new();
+    let mut entries: Vec<IndexEntry> =
+        old.into_iter().filter(|e| !chunks.iter().any(|(k, _)| *k == e.key)).collect();
+    let mut cursor = base;
+    for (key, bytes) in chunks {
+        entries.push(IndexEntry {
+            key: key.clone(),
+            offset: cursor,
+            len: bytes.len() as u64,
+            checksum: fnv1a64(bytes),
+        });
+        for &b in bytes {
+            blob.put_u8(b);
+        }
+        cursor += bytes.len() as u64;
+    }
+    entries.sort_by(|a, b| a.key.cmp(&b.key));
+
+    let mut iw = ByteWriter::new();
+    for e in &entries {
+        e.write_bytes(&mut iw);
+    }
+    let index_bytes = iw.into_bytes();
+    let trailer = ShardTrailer {
+        n_entries: entries.len() as u64,
+        index_off: cursor,
+        index_checksum: fnv1a64(&index_bytes),
+    };
+    let mut tw = ByteWriter::new();
+    trailer.write_bytes(&mut tw);
+
+    let mut out = blob.into_bytes();
+    out.extend_from_slice(&index_bytes);
+    out.extend_from_slice(&tw.into_bytes());
+    store.append(shard, &out)?;
+    lock.release()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::MemoryStore;
+
+    fn mem() -> Arc<dyn Storage> {
+        Arc::new(MemoryStore::new())
+    }
+
+    const T: Duration = Duration::from_secs(2);
+
+    #[test]
+    fn entry_and_trailer_round_trip_at_fixed_widths() {
+        let e = IndexEntry { key: "robot-07/params".into(), offset: 1234, len: 56, checksum: 99 };
+        let mut w = ByteWriter::new();
+        e.write_bytes(&mut w);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), ENTRY_BYTES);
+        assert_eq!(IndexEntry::read_bytes(&mut ByteReader::new(&bytes)).unwrap(), e);
+
+        let t = ShardTrailer { n_entries: 3, index_off: 777, index_checksum: 0xabc };
+        let mut w = ByteWriter::new();
+        t.write_bytes(&mut w);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), TRAILER_BYTES);
+        assert_eq!(ShardTrailer::read_bytes(&mut ByteReader::new(&bytes)).unwrap(), t);
+    }
+
+    #[test]
+    fn appended_chunks_read_back_and_newest_generation_wins() {
+        let store = mem();
+        let gen1 =
+            vec![("r1/meta".to_string(), vec![1u8; 10]), ("r1/params".to_string(), vec![2u8; 30])];
+        append_chunks(&store, "s.mxshard", &gen1, T).unwrap();
+        let gen2 =
+            vec![("r2/meta".to_string(), vec![3u8; 5]), ("r1/params".to_string(), vec![4u8; 8])];
+        append_chunks(&store, "s.mxshard", &gen2, T).unwrap();
+
+        let index = read_index(store.as_ref(), "s.mxshard").unwrap();
+        let keys: Vec<&str> = index.iter().map(|e| e.key.as_str()).collect();
+        assert_eq!(keys, ["r1/meta", "r1/params", "r2/meta"], "sorted, deduped by key");
+        let params = index.iter().find(|e| e.key == "r1/params").unwrap();
+        assert_eq!(read_chunk(store.as_ref(), "s.mxshard", params).unwrap(), vec![4u8; 8]);
+        let meta = index.iter().find(|e| e.key == "r1/meta").unwrap();
+        assert_eq!(read_chunk(store.as_ref(), "s.mxshard", meta).unwrap(), vec![1u8; 10]);
+        assert!(!store.exists("s.mxshard.lock").unwrap(), "lock released");
+    }
+
+    #[test]
+    fn truncation_and_tampering_surface_structured_errors() {
+        let store = mem();
+        let chunks = vec![("r1/meta".to_string(), vec![9u8; 40])];
+        append_chunks(&store, "s.mxshard", &chunks, T).unwrap();
+        let whole = store.get("s.mxshard").unwrap();
+
+        // Truncate at several cut points: always BadIndex, never panic.
+        for cut in [whole.len() - 1, whole.len() - TRAILER_BYTES, 10, 0] {
+            store.put("cut.mxshard", &whole[..cut]).unwrap();
+            let err = read_index(store.as_ref(), "cut.mxshard").unwrap_err();
+            assert!(matches!(err, StoreError::BadIndex { .. }), "cut at {cut}: {err}");
+        }
+
+        // Flip a byte inside the chunk region: index still reads, the
+        // chunk fetch reports the checksum mismatch.
+        let mut flipped = whole.clone();
+        flipped[5] ^= 0x80;
+        store.put("flip.mxshard", &flipped).unwrap();
+        let index = read_index(store.as_ref(), "flip.mxshard").unwrap();
+        let err = read_chunk(store.as_ref(), "flip.mxshard", &index[0]).unwrap_err();
+        assert!(matches!(err, StoreError::ChecksumMismatch { .. }), "{err}");
+
+        // Flip a byte inside the index region: BadIndex at read time.
+        let mut flipped = whole.clone();
+        let idx_pos = whole.len() - TRAILER_BYTES - ENTRY_BYTES + 70; // offset field of the entry
+        flipped[idx_pos] ^= 0x01;
+        store.put("flipidx.mxshard", &flipped).unwrap();
+        let err = read_index(store.as_ref(), "flipidx.mxshard").unwrap_err();
+        assert!(matches!(err, StoreError::BadIndex { .. }), "{err}");
+    }
+
+    #[test]
+    fn oversized_keys_are_rejected_before_touching_the_shard() {
+        let store = mem();
+        let long = "k".repeat(KEY_BYTES + 1);
+        let err = append_chunks(&store, "s.mxshard", &[(long, vec![1])], T).unwrap_err();
+        assert!(matches!(err, StoreError::Io { .. }), "{err}");
+        assert!(!store.exists("s.mxshard").unwrap());
+    }
+}

@@ -34,6 +34,7 @@
 use crate::backend::BackendKind;
 use crate::mx::element::ElementFormat;
 use crate::mx::tensor::{Layout, MxTensor};
+use crate::store::{FilesystemStore, Storage, StoreError};
 use crate::trainer::qat::QuantScheme;
 use crate::trainer::session::TrainConfig;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -118,7 +119,9 @@ pub fn grouping_footprint(weights: &[Mat], fmt: ElementFormat) -> (usize, usize)
 }
 
 /// Parameter count implied by MLP layer dims (weights + biases).
-fn expected_params(dims: &[usize]) -> Option<usize> {
+/// `pub(crate)`: the chunked store (`store::chunk`) applies the same
+/// plausibility check when reassembling from chunks.
+pub(crate) fn expected_params(dims: &[usize]) -> Option<usize> {
     let mut total = 0usize;
     for w in dims.windows(2) {
         total = total.checked_add(w[0].checked_mul(w[1])?.checked_add(w[1])?)?;
@@ -126,7 +129,7 @@ fn expected_params(dims: &[usize]) -> Option<usize> {
     Some(total)
 }
 
-fn write_curve(w: &mut ByteWriter, curve: &[(usize, f64)]) {
+pub(crate) fn write_curve(w: &mut ByteWriter, curve: &[(usize, f64)]) {
     w.put_u64(curve.len() as u64);
     for &(step, loss) in curve {
         w.put_u64(step as u64);
@@ -134,7 +137,7 @@ fn write_curve(w: &mut ByteWriter, curve: &[(usize, f64)]) {
     }
 }
 
-fn read_curve(r: &mut ByteReader<'_>) -> Result<Vec<(usize, f64)>, String> {
+pub(crate) fn read_curve(r: &mut ByteReader<'_>) -> Result<Vec<(usize, f64)>, String> {
     let n = r.get_u64()? as usize;
     if n > r.remaining() / 16 {
         return Err(format!("curve length {n} exceeds remaining bytes"));
@@ -310,19 +313,35 @@ impl Checkpoint {
         })
     }
 
+    /// Split `path` into a store root (parent dir) and an object key
+    /// (file name), so single-file checkpoints go through the same
+    /// [`crate::store::Storage`] seam as everything else.
+    fn path_store(path: &Path) -> Result<(FilesystemStore, String), StoreError> {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok((FilesystemStore::open(parent)?, name))
+    }
+
     /// Write the checkpoint to `path`, creating parent directories.
+    /// This is the legacy monolithic spelling — one `.mxckpt` object
+    /// through the store's `FilesystemStore`; `store::CheckpointStore`
+    /// is the chunked/sharded face of the same seam.
     pub fn save(&self, path: &Path) -> std::io::Result<()> {
-        if let Some(parent) = path.parent() {
-            if !parent.as_os_str().is_empty() {
-                std::fs::create_dir_all(parent)?;
-            }
-        }
-        std::fs::write(path, self.to_bytes())
+        let io_err = |e: StoreError| std::io::Error::new(std::io::ErrorKind::Other, e.to_string());
+        let (store, name) = Self::path_store(path).map_err(io_err)?;
+        store.put(&name, &self.to_bytes()).map_err(io_err)
     }
 
     /// Read a checkpoint back from `path`.
     pub fn load(path: &Path) -> Result<Checkpoint, String> {
-        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        let (store, name) = Self::path_store(path).map_err(|e| e.to_string())?;
+        let bytes = store.get(&name).map_err(|e| format!("read {}: {e}", path.display()))?;
         Self::from_bytes(&bytes)
     }
 }

@@ -15,6 +15,24 @@
 
 #![forbid(unsafe_code)]
 
+/// FNV-1a 64-bit hash — the store layer's chunk/index checksum.
+///
+/// Dependency-free and deterministic across platforms (it walks bytes,
+/// not words). This is a *corruption* detector for shard chunks and
+/// trailing indexes (`store::shard`), not a cryptographic MAC: a
+/// flipped byte or a truncated range is caught with overwhelming
+/// probability, an adversary is out of scope.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
 /// Append-only little-endian byte buffer.
 #[derive(Debug, Default)]
 pub struct ByteWriter {
@@ -66,6 +84,13 @@ impl ByteWriter {
     pub fn put_str(&mut self, s: &str) {
         self.put_u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// u64-length-prefixed raw byte slice (the store layer's embedded
+    /// chunk payloads).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
     }
 
     /// u64-length-prefixed f32 slice (raw bit patterns — lossless).
@@ -159,6 +184,12 @@ impl<'a> ByteReader<'a> {
         String::from_utf8(bytes.to_vec()).map_err(|e| format!("invalid UTF-8 string: {e}"))
     }
 
+    /// Inverse of [`ByteWriter::put_bytes`].
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.get_u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
     pub fn get_f32s(&mut self) -> Result<Vec<f32>, String> {
         let n = self.get_u64()? as usize;
         let bytes = self.take(n.checked_mul(4).ok_or("f32 slice length overflow")?)?;
@@ -239,6 +270,37 @@ mod tests {
             let got = ByteReader::new(&bytes).get_packed(codes.len(), bits).unwrap();
             assert_eq!(got, codes, "{bits}-bit");
         }
+    }
+
+    #[test]
+    fn raw_byte_slices_round_trip() {
+        let payload = vec![0u8, 255, 42, 7];
+        let mut w = ByteWriter::new();
+        w.put_bytes(&payload);
+        w.put_bytes(&[]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_bytes().unwrap(), payload);
+        assert_eq!(r.get_bytes().unwrap(), Vec::<u8>::new());
+        assert_eq!(r.remaining(), 0);
+        // declared length past the buffer end errors
+        let mut w = ByteWriter::new();
+        w.put_u64(1 << 40);
+        let bytes = w.into_bytes();
+        assert!(ByteReader::new(&bytes).get_bytes().is_err());
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors_and_detects_flips() {
+        // published FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        // any single-byte flip must change the digest
+        let base = fnv1a64(b"mxscale shard chunk");
+        let mut tampered = b"mxscale shard chunk".to_vec();
+        tampered[3] ^= 0x01;
+        assert_ne!(base, fnv1a64(&tampered));
     }
 
     #[test]

@@ -133,6 +133,7 @@ fn l5_flags_layout_drift_without_version_bump() {
     let src = l5_fixture_src();
     let m = Manifest {
         version: 2,
+        store_version: 0,
         entries: vec![("trainer/checkpoint.rs::to_bytes".into(), 0xdead)],
     };
     let f = rules::l5(&src, &m);
@@ -143,7 +144,10 @@ fn l5_flags_layout_drift_without_version_bump() {
 
 #[test]
 fn l5_flags_stale_manifest_version() {
-    let f = rules::l5(&l5_fixture_src(), &Manifest { version: 3, entries: vec![] });
+    let f = rules::l5(
+        &l5_fixture_src(),
+        &Manifest { version: 3, store_version: 0, entries: vec![] },
+    );
     assert_eq!(f.len(), 1, "{f:?}");
     assert!(
         f[0].message.contains("records VERSION 3 but checkpoint.rs has VERSION 2"),
@@ -180,6 +184,87 @@ fn l5_catches_seeded_drift_in_real_checkpoint() {
     assert_eq!(f.len(), 1, "{f:?}");
     assert!(f[0].message.contains("trainer/checkpoint.rs::to_bytes"), "{}", f[0].message);
     assert!(f[0].message.contains("without a VERSION bump"), "{}", f[0].message);
+}
+
+// ------------------------------------------------------ L5 store pins
+
+/// Checkpoint + store fixtures together: the dual-versioned manifest
+/// governs `trainer/*` keys with `version` and `store/*` keys with
+/// `store_version`.
+fn l5_store_fixture_src() -> Vec<SourceFile> {
+    vec![
+        sf("rust/src/trainer/checkpoint.rs", include_str!("lint_fixtures/l5_layout.rs")),
+        sf("rust/src/store/mod.rs", include_str!("lint_fixtures/l5_store_layout.rs")),
+    ]
+}
+
+#[test]
+fn l5_flags_store_layout_drift_without_store_version_bump() {
+    let src = l5_store_fixture_src();
+    let mut m = lint::current_manifest(&src);
+    for (key, hash) in &mut m.entries {
+        if key == "store/mod.rs::write_bytes" {
+            *hash ^= 1;
+        }
+    }
+    let f = rules::l5(&src, &m);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].file, "rust/src/store/mod.rs");
+    assert!(
+        f[0].message.contains("without a store VERSION bump (still 1)"),
+        "{}",
+        f[0].message
+    );
+    assert!(f[0].message.contains("bump VERSION in store/mod.rs"), "{}", f[0].message);
+}
+
+#[test]
+fn l5_flags_stale_store_version() {
+    let src = l5_store_fixture_src();
+    let mut m = lint::current_manifest(&src);
+    m.store_version = 9;
+    let f = rules::l5(&src, &m);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(
+        f[0].message.contains("records store VERSION 9 but store/mod.rs has VERSION 1"),
+        "{}",
+        f[0].message
+    );
+}
+
+#[test]
+fn l5_accepts_matching_store_hashes_and_versions() {
+    let src = l5_store_fixture_src();
+    let m = lint::current_manifest(&src);
+    assert_eq!(m.store_version, 1);
+    assert!(m.entries.iter().any(|(k, _)| k == "store/mod.rs::write_bytes"), "{m:?}");
+    assert!(rules::l5(&src, &m).is_empty());
+}
+
+/// Seed a body edit into the *real* shard codec without bumping the
+/// store VERSION and assert the committed manifest catches it.
+#[test]
+fn l5_catches_seeded_drift_in_real_shard_codec() {
+    let root = repo_root();
+    let text = read(root.join("rust/src/store/shard.rs"));
+    let marker = "pub fn write_bytes(&self, w: &mut ByteWriter) {";
+    let seeded = text.replacen(
+        marker,
+        "pub fn write_bytes(&self, w: &mut ByteWriter) { let _seeded = 1;",
+        1,
+    );
+    assert_ne!(seeded, text, "write_bytes marker not found; update this test");
+    let (mut src, _tests) = lint::collect_sources(&root).expect("collect sources");
+    for f in &mut src {
+        if f.rel == "rust/src/store/shard.rs" {
+            *f = sf("rust/src/store/shard.rs", &seeded);
+        }
+    }
+    let manifest = lint::parse_manifest(&read(root.join("rust/lint.manifest"))).expect("manifest");
+    let f = rules::l5(&src, &manifest);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert!(f[0].message.contains("store/shard.rs::write_bytes"), "{}", f[0].message);
+    assert!(f[0].message.contains("without a store VERSION bump"), "{}", f[0].message);
 }
 
 // ---------------------------------------------------------------- L6

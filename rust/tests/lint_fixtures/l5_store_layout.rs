@@ -1,0 +1,12 @@
+// mxlint fixture: L5 store pins — a minimal store module whose
+// byte-layout function is hashed against a synthetic manifest by
+// rust/tests/lint.rs. Lexed under a fake `rust/src/store/mod.rs` path;
+// never compiled.
+
+pub const VERSION: u32 = 1;
+
+pub fn write_bytes(key: &str, offset: u64) -> Vec<u8> {
+    let mut out = key.as_bytes().to_vec();
+    out.extend_from_slice(&offset.to_le_bytes());
+    out
+}

@@ -1,0 +1,384 @@
+//! End-to-end conformance tests for the sharded checkpoint store
+//! (DESIGN.md §11): a resume that goes disk → index → chunks must be
+//! bitwise indistinguishable from one that never touched storage, for
+//! all six MX formats and all three execution backends; partial reads
+//! must be *measured* (via `CountingStore`), not assumed; legacy
+//! monolithic `.mxckpt` files (v1 and v2) must load through the compat
+//! shim; corruption must surface as structured errors, never a panic
+//! and never a silent fallback; and concurrent writers on one shard
+//! must serialize through the advisory lock without losing a robot.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mxscale::backend::BackendKind;
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::store::shard::{read_index, ENTRY_BYTES, TRAILER_BYTES};
+use mxscale::store::{
+    CheckpointStore, CountingStore, MemoryStore, Storage, StoreError, StoreLayout, StoreLock,
+};
+use mxscale::trainer::checkpoint::{weight_payload, Checkpoint};
+use mxscale::trainer::mlp::Mlp;
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::{TrainConfig, TrainError, TrainSession};
+use mxscale::util::bytes::ByteWriter;
+use mxscale::util::rng::Pcg64;
+use mxscale::workloads::{by_name, Dataset};
+
+fn dataset(seed: u64) -> Dataset {
+    let env = by_name("reacher").unwrap();
+    Dataset::collect(env.as_ref(), 5, 40, seed)
+}
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("mxscale-store-test-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A small hand-built checkpoint (no training loop) for store-shape
+/// tests: `scheme` decides the payload arity, `tag` varies the content.
+fn tiny_checkpoint(scheme: QuantScheme, tag: u64) -> Checkpoint {
+    let mut rng = Pcg64::new(tag.wrapping_add(1));
+    let dims = vec![8usize, 4, 8];
+    let mlp = Mlp::new(&dims, &mut rng);
+    let config = TrainConfig {
+        scheme,
+        backend: BackendKind::parse("fast").unwrap(),
+        dims: Some(dims),
+        batch_size: 4,
+        lr: 1e-3,
+        steps: 10,
+        eval_every: 5,
+        seed: tag,
+    };
+    Checkpoint {
+        config,
+        step: tag as usize % 97,
+        adam_step: tag,
+        train_curve: vec![(0, 1.0 + tag as f64)],
+        val_curve: vec![],
+        params: mlp.flat_params(),
+        opt: mlp.flat_opt_state(),
+        scheme_log: vec![(0, scheme.name())],
+        payload: weight_payload(&mlp.weights, scheme),
+    }
+}
+
+/// Exact byte budget for resuming `id`: the shard trailer, the live
+/// index of the one shard holding `id`, and `id`'s own chunks — nothing
+/// else. Computed from the store's actual contents, not the writer's.
+fn expected_resume_bytes(cs: &CheckpointStore, id: &str) -> u64 {
+    let own: u64 = cs.chunk_manifest(id).unwrap().iter().map(|(_, len)| *len).sum();
+    let prefix = format!("{id}/");
+    let storage = cs.storage();
+    for shard in cs.shard_files().unwrap() {
+        let entries = read_index(storage.as_ref(), &shard).unwrap();
+        if entries.iter().any(|e| e.key.starts_with(&prefix)) {
+            return TRAILER_BYTES as u64 + entries.len() as u64 * ENTRY_BYTES as u64 + own;
+        }
+    }
+    panic!("session {id} not found in any shard");
+}
+
+// ------------------------------------------------- bit-exact resume
+
+/// Train to step `k`, persist through a sharded store that also holds
+/// decoy robots, reload (counting every byte), resume, and train `m`
+/// more steps: the result must be bitwise identical to never pausing,
+/// and the reload must read only the index plus the session's chunks.
+fn assert_store_resume_matches(scheme: QuantScheme, backend: BackendKind, k: usize, m: usize) {
+    let label = format!("{}/{}", scheme.name(), backend.name());
+    let config = TrainConfig {
+        scheme,
+        backend,
+        dims: Some(vec![32, 16, 32]),
+        batch_size: 8,
+        steps: 0,
+        eval_every: 3,
+        ..Default::default()
+    };
+    let ds = dataset(0x570E);
+
+    let mut full = TrainSession::try_new(ds.clone(), config.clone()).unwrap();
+    let mut half = TrainSession::try_new(ds.clone(), config).unwrap();
+    for _ in 0..k {
+        full.step_once();
+        half.step_once();
+    }
+    let ck = half.save_checkpoint();
+
+    let counting = Arc::new(CountingStore::new(Arc::new(MemoryStore::new())));
+    let cs = CheckpointStore::new(counting.clone(), StoreLayout::Sharded { shards: 2 });
+    let decoys: Vec<(String, Checkpoint)> =
+        (0..6).map(|i| (format!("decoy-{i}"), tiny_checkpoint(QuantScheme::Fp32, i))).collect();
+    let mut batch: Vec<(String, &Checkpoint)> =
+        decoys.iter().map(|(id, d)| (id.clone(), d)).collect();
+    batch.push(("hero".to_string(), &ck));
+    cs.save_many(&batch).unwrap();
+
+    let budget = expected_resume_bytes(&cs, "hero");
+    counting.reset();
+    let reread = cs.load("hero").unwrap();
+    assert_eq!(counting.bytes_read(), budget, "{label}: resume read more than index + own chunks");
+    assert_eq!(reread.to_bytes(), ck.to_bytes(), "{label}: store round trip");
+
+    let mut resumed = TrainSession::resume(ds.clone(), &reread).unwrap();
+    for _ in 0..m {
+        full.step_once();
+        resumed.step_once();
+    }
+    assert_eq!(resumed.mlp.flat_params(), full.mlp.flat_params(), "{label}: params");
+    assert_eq!(resumed.mlp.flat_opt_state(), full.mlp.flat_opt_state(), "{label}: moments");
+    assert_eq!(resumed.train_curve, full.train_curve, "{label}: train curve");
+    assert_eq!(resumed.val_curve, full.val_curve, "{label}: val curve");
+    assert_eq!(resumed.val_loss(), full.val_loss(), "{label}: val loss");
+}
+
+#[test]
+fn store_resume_is_bit_exact_all_six_formats_fast_backend() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        assert_store_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Fast, 7, 5);
+    }
+}
+
+#[test]
+fn store_resume_is_bit_exact_all_six_formats_hw_backend() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        assert_store_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Hardware, 3, 2);
+    }
+}
+
+#[test]
+fn store_resume_is_bit_exact_all_six_formats_packed_backend() {
+    for fmt in ALL_ELEMENT_FORMATS {
+        assert_store_resume_matches(QuantScheme::MxSquare(fmt), BackendKind::Packed, 7, 5);
+    }
+}
+
+#[test]
+fn store_resume_is_bit_exact_for_baseline_schemes() {
+    for scheme in [
+        QuantScheme::Fp32,
+        QuantScheme::MxVector(mxscale::mx::ElementFormat::E4M3),
+        QuantScheme::Dacapo(mxscale::mx::DacapoFormat::Mx9),
+    ] {
+        assert_store_resume_matches(scheme, BackendKind::Fast, 5, 4);
+    }
+}
+
+// ------------------------------------------------- legacy compat shim
+
+/// Serialize a v1 `.mxckpt` body by hand (v1 predates the scheme log).
+fn v1_bytes(ck: &Checkpoint) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    for b in *b"MXCK" {
+        w.put_u8(b);
+    }
+    w.put_u32(1);
+    w.put_str(&ck.config.scheme.name());
+    w.put_str(ck.config.backend.name());
+    let dims = ck.dims();
+    w.put_u32(dims.len() as u32);
+    for &d in dims {
+        w.put_u32(d as u32);
+    }
+    w.put_u32(ck.config.batch_size as u32);
+    w.put_f32(ck.config.lr);
+    w.put_u64(ck.config.eval_every as u64);
+    w.put_u64(ck.config.steps as u64);
+    w.put_u64(ck.config.seed);
+    w.put_u64(ck.step as u64);
+    w.put_u64(ck.adam_step);
+    for curve in [&ck.train_curve, &ck.val_curve] {
+        w.put_u64(curve.len() as u64);
+        for &(step, loss) in curve.iter() {
+            w.put_u64(step as u64);
+            w.put_f64(loss);
+        }
+    }
+    w.put_f32s(&ck.params);
+    w.put_f32s(&ck.opt);
+    w.put_u32(ck.payload.len() as u32);
+    for t in &ck.payload {
+        t.write_bytes(&mut w);
+    }
+    w.into_bytes()
+}
+
+#[test]
+fn legacy_v1_and_v2_files_load_and_migrate_to_chunks() {
+    let fmt = mxscale::mx::ElementFormat::E3M2;
+    let cs = CheckpointStore::new(
+        Arc::new(MemoryStore::new()),
+        StoreLayout::Sharded { shards: 4 },
+    );
+
+    // v2: today's monolithic bytes dropped in as `<id>.mxckpt`
+    let ck2 = tiny_checkpoint(QuantScheme::MxSquare(fmt), 7);
+    cs.storage().put("legacy-v2.mxckpt", &ck2.to_bytes()).unwrap();
+    assert_eq!(cs.load("legacy-v2").unwrap().to_bytes(), ck2.to_bytes());
+
+    // v1: no scheme-log section; the shim synthesizes a one-segment log
+    let ck1 = tiny_checkpoint(QuantScheme::MxVector(fmt), 8);
+    cs.storage().put("legacy-v1.mxckpt", &v1_bytes(&ck1)).unwrap();
+    let loaded = cs.load("legacy-v1").unwrap();
+    assert_eq!(loaded.scheme_log, vec![(0, ck1.config.scheme.name())]);
+    assert_eq!(loaded.params, ck1.params);
+    assert_eq!(loaded.step, ck1.step);
+
+    // migrate: resave chunked, reload — the chunked copy now wins and
+    // round-trips the same bytes the shim produced
+    cs.save("legacy-v1", &loaded).unwrap();
+    assert_eq!(cs.load("legacy-v1").unwrap().to_bytes(), loaded.to_bytes());
+    assert!(!cs.shard_files().unwrap().is_empty(), "migration wrote chunks");
+    let mut ids = cs.sessions().unwrap();
+    ids.sort();
+    assert_eq!(ids, vec!["legacy-v1".to_string(), "legacy-v2".to_string()]);
+}
+
+// ------------------------------------------------- corruption handling
+
+#[test]
+fn truncated_shards_and_flipped_bytes_are_structured_errors() {
+    let cs = CheckpointStore::new(
+        Arc::new(MemoryStore::new()),
+        StoreLayout::Sharded { shards: 1 },
+    );
+    let ck = tiny_checkpoint(QuantScheme::MxSquare(mxscale::mx::ElementFormat::Int8), 3);
+    cs.save("r", &ck).unwrap();
+    let shard = &cs.shard_files().unwrap()[0];
+    let whole = cs.storage().get(shard).unwrap();
+
+    // truncation anywhere → BadIndex, and the legacy fallback must NOT
+    // mask it as a missing session
+    for cut in [whole.len() - 1, whole.len() - TRAILER_BYTES, whole.len() / 2, 5] {
+        cs.storage().put(shard, &whole[..cut]).unwrap();
+        let err = cs.load("r").unwrap_err();
+        assert!(matches!(err, StoreError::BadIndex { .. }), "cut at {cut}: {err}");
+    }
+
+    // a flipped byte inside a chunk body → ChecksumMismatch naming the
+    // damaged chunk key
+    let mut flipped = whole.clone();
+    flipped[4] ^= 0x40;
+    cs.storage().put(shard, &flipped).unwrap();
+    let err = cs.load("r").unwrap_err();
+    assert!(matches!(err, StoreError::ChecksumMismatch { .. }), "{err}");
+
+    // restore the good bytes: loads work again (the store held no state)
+    cs.storage().put(shard, &whole).unwrap();
+    assert_eq!(cs.load("r").unwrap().to_bytes(), ck.to_bytes());
+
+    // and the structured store error folds into the trainer's error type
+    cs.storage().put(shard, &flipped).unwrap();
+    let err = cs.resume("r", dataset(1)).unwrap_err();
+    assert!(matches!(err, TrainError::BadCheckpoint { .. }), "{err:?}");
+}
+
+// ------------------------------------------------- concurrent writers
+
+#[test]
+fn concurrent_writers_on_one_shard_lose_nothing() {
+    let dir = scratch("concurrent");
+    let cs = Arc::new(
+        CheckpointStore::open_dir(&dir, StoreLayout::Sharded { shards: 1 })
+            .unwrap()
+            .with_lock_timeout(Duration::from_secs(30)),
+    );
+    let n = 8;
+    std::thread::scope(|s| {
+        for i in 0..n {
+            let cs = cs.clone();
+            s.spawn(move || {
+                let ck = tiny_checkpoint(QuantScheme::Fp32, i);
+                cs.save(&format!("robot-{i}"), &ck).unwrap();
+            });
+        }
+    });
+    assert_eq!(cs.shard_files().unwrap().len(), 1, "one shard serializes all writers");
+    assert_eq!(cs.sessions().unwrap().len(), n as usize);
+    for i in 0..n {
+        let want = tiny_checkpoint(QuantScheme::Fp32, i);
+        let got = cs.load(&format!("robot-{i}")).unwrap();
+        assert_eq!(got.to_bytes(), want.to_bytes(), "robot-{i}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_held_lock_times_out_as_lock_held() {
+    let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+    let cs = CheckpointStore::new(store.clone(), StoreLayout::Sharded { shards: 1 })
+        .with_lock_timeout(Duration::from_millis(25));
+    // occupy the single shard's lock out-of-band
+    let lock =
+        StoreLock::acquire(store, "shard-0000.mxshard.lock", Duration::from_secs(1)).unwrap();
+    let ck = tiny_checkpoint(QuantScheme::Fp32, 1);
+    let err = cs.save("r", &ck).unwrap_err();
+    assert!(matches!(err, StoreError::LockHeld { .. }), "{err}");
+    assert!(err.to_string().contains("held by another writer"), "{err}");
+    lock.release().unwrap();
+    cs.save("r", &ck).unwrap();
+}
+
+// ------------------------------------------------- 1000-robot acceptance
+
+#[test]
+fn a_thousand_robots_fit_in_eight_shards_and_resume_reads_stay_small() {
+    let counting = Arc::new(CountingStore::new(Arc::new(MemoryStore::new())));
+    let cs = CheckpointStore::new(counting.clone(), StoreLayout::Sharded { shards: 8 });
+
+    let fleet: Vec<(String, Checkpoint)> = (0..1000)
+        .map(|i| (format!("robot-{i:04}"), tiny_checkpoint(QuantScheme::Fp32, i)))
+        .collect();
+    let refs: Vec<(String, &Checkpoint)> = fleet.iter().map(|(id, ck)| (id.clone(), ck)).collect();
+    cs.save_many(&refs).unwrap();
+
+    // ≤ 8 files for the whole fleet (vs 1000 monolithic `.mxckpt`s)
+    let shards = cs.shard_files().unwrap();
+    assert!(shards.len() <= 8, "{} shard files", shards.len());
+
+    // resuming one robot reads exactly trailer + live index + its own
+    // chunks — and far less than the fleet's total footprint
+    let total: u64 = shards.iter().map(|s| counting.size(s).unwrap()).sum();
+    let budget = expected_resume_bytes(&cs, "robot-0500");
+    counting.reset();
+    let back = cs.load("robot-0500").unwrap();
+    assert_eq!(counting.bytes_read(), budget);
+    assert!(
+        counting.bytes_read() * 4 < total,
+        "partial read {} should be well under the {total}-byte store",
+        counting.bytes_read()
+    );
+    assert_eq!(back.to_bytes(), fleet[500].1.to_bytes());
+    assert_eq!(cs.sessions().unwrap().len(), 1000);
+}
+
+// ------------------------------------------------- per-layer partial read
+
+#[test]
+fn single_payload_tensor_reads_skip_the_rest_of_the_checkpoint() {
+    let counting = Arc::new(CountingStore::new(Arc::new(MemoryStore::new())));
+    let cs = CheckpointStore::new(counting.clone(), StoreLayout::Sharded { shards: 2 });
+    let ck = tiny_checkpoint(QuantScheme::MxSquare(mxscale::mx::ElementFormat::E2M1), 5);
+    cs.save("r", &ck).unwrap();
+
+    let manifest = cs.chunk_manifest("r").unwrap();
+    let tensor_len = manifest.iter().find(|(k, _)| k == "r/payload/0").unwrap().1;
+    let full_len: u64 = manifest.iter().map(|(_, len)| *len).sum();
+
+    counting.reset();
+    let t = cs.load_payload_tensor("r", 0).unwrap();
+    let mut w = ByteWriter::new();
+    t.write_bytes(&mut w);
+    let mut want = ByteWriter::new();
+    ck.payload[0].write_bytes(&mut want);
+    assert_eq!(w.into_bytes(), want.into_bytes());
+
+    // index + one tensor chunk, strictly less than the whole session
+    let index_overhead = counting.bytes_read() - tensor_len;
+    assert!(counting.bytes_read() < index_overhead + full_len, "read the whole session");
+    assert_eq!(counting.read_calls(), 3, "trailer, index, one chunk");
+}
