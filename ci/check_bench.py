@@ -6,7 +6,8 @@ Usage:
     check_bench.py --results rust/results --baselines rust/benches/baselines \
                    [--tolerance 0.25] [--require-headline-speedup 2.0] \
                    [--require-simd-speedup 2.0] \
-                   [--require-store-max-files 8] [--require-store-advantage 5.0]
+                   [--require-store-max-files 8] [--require-store-advantage 5.0] \
+                   [--require-serve-p99-ratio 50.0]
     check_bench.py --mxlint-report rust/mxlint_report.json
 
 Rules:
@@ -34,6 +35,15 @@ Rules:
     resume reads at most 1/5th of the shard store; the measured value
     is trailer + index + own chunks over the CountingStore wrapper),
     baseline or not.
+  * ``BENCH_serve.json`` (the open-stream serving load run) is gated on
+    correctness before performance, baseline or not:
+    ``sessions_lost``, ``sessions_duplicated``, and ``twin_mismatches``
+    must all be present and zero (every offer accounted exactly once,
+    every sampled session bitwise equal to its standalone twin), and
+    tail latency must hold ``p99_step_ms <= --require-serve-p99-ratio *
+    p50_step_ms`` — the admission layer exists to shed load before the
+    tail collapses, so a blown-out p99/p50 ratio is a failure even when
+    the run "completed".
   * A missing baseline file is a bootstrap, not a failure: the fresh
     JSON is reported so it can be committed as the first baseline.
   * A baseline stamped with a different ``kernel_path`` (or none) is
@@ -139,6 +149,7 @@ def main():
     ap.add_argument("--require-simd-speedup", type=float, default=2.0)
     ap.add_argument("--require-store-max-files", type=float, default=8.0)
     ap.add_argument("--require-store-advantage", type=float, default=5.0)
+    ap.add_argument("--require-serve-p99-ratio", type=float, default=50.0)
     ap.add_argument("--mxlint-report", type=pathlib.Path, default=None)
     args = ap.parse_args()
 
@@ -219,6 +230,37 @@ def main():
                 print(
                     f"{name}: partial-read advantage {advantage:.2f}x "
                     f"(floor {args.require_store_advantage:.2f}x) OK"
+                )
+
+        if name == "BENCH_serve.json":
+            # correctness first: every offer accounted exactly once and
+            # every sampled session bitwise equal to its standalone twin
+            for key in ("sessions_lost", "sessions_duplicated", "twin_mismatches"):
+                val = fresh.get(key)
+                if val is None:
+                    failures.append(f"{name}: {key} missing")
+                elif val != 0:
+                    failures.append(f"{name}: {key} = {val:.0f}, must be 0")
+                else:
+                    print(f"{name}: {key} = 0 OK")
+            # tail latency: admission control exists to shed load before
+            # the p99 collapses, so the tail must stay a bounded multiple
+            # of the median
+            p50 = fresh.get("p50_step_ms")
+            p99 = fresh.get("p99_step_ms")
+            if p50 is None or p99 is None:
+                failures.append(f"{name}: p50_step_ms/p99_step_ms missing")
+            elif p50 > 0 and p99 > p50 * args.require_serve_p99_ratio:
+                failures.append(
+                    f"{name}: p99 {p99:.3f} ms/step is {p99 / p50:.1f}x the p50 "
+                    f"{p50:.3f} ms/step (ceiling {args.require_serve_p99_ratio:.0f}x) "
+                    "— step latency collapsed under load"
+                )
+            else:
+                ratio = p99 / p50 if p50 > 0 else 0.0
+                print(
+                    f"{name}: p99/p50 = {ratio:.1f}x "
+                    f"(ceiling {args.require_serve_p99_ratio:.0f}x) OK"
                 )
 
         base_path = args.baselines / name

@@ -565,6 +565,7 @@ L4_DIRS = [
     "rust/src/trainer/",
     "rust/src/backend/",
     "rust/src/coordinator/",
+    "rust/src/serve/",
     "rust/src/store/",
 ]
 

@@ -1,0 +1,90 @@
+//! The headline serving run: 10,000 short-lived tenants arriving on an
+//! open stream, admitted/parked/shed by the budget-aware policy, and
+//! executed by the work-stealing quantum executor against the real
+//! trainer/backends/store stack.
+//!
+//! Arrival pacing is closed-loop (clients wait for a slot) with every
+//! 7th arrival bursting through unpaced, so admission control sees
+//! genuine overload pressure. A deterministic sample of completed
+//! sessions is re-run standalone — their loss curves must be bitwise
+//! identical to the served run despite stealing, parking, and
+//! checkpoint-on-evict (the serve layer's core contract, DESIGN.md
+//! §12). Writes `results/BENCH_serve.json` and exits nonzero if any
+//! session is lost, duplicated, or diverges from its twin.
+//!
+//! ```bash
+//! cargo run --release --example serve_load
+//! ```
+
+use mxscale::coordinator::report::save_json;
+use mxscale::fleet::StoreSpec;
+use mxscale::serve::load::{bench_json, run_load, LoadSpec};
+use mxscale::store::StoreLayout;
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("mxscale-serve-load-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let spec = LoadSpec {
+        // 10k sessions, short leases: most sessions round-trip through
+        // the sharded checkpoint store mid-run and resume bit-exactly
+        lease_quanta: 2,
+        store: Some(StoreSpec {
+            dir: root.clone(),
+            layout: StoreLayout::Sharded { shards: 8 },
+        }),
+        ..Default::default()
+    };
+    println!(
+        "serve_load: {} sessions x {} steps, capacity {} (parking {}), quantum {}, \
+         lease {} quanta, schemes {:?}\n",
+        spec.sessions,
+        spec.steps,
+        spec.capacity,
+        spec.max_parked,
+        spec.quantum,
+        spec.lease_quanta,
+        spec.schemes.iter().map(|s| s.name()).collect::<Vec<_>>(),
+    );
+
+    let out = run_load(&spec).expect("synthetic load spec is valid");
+    let s = &out.stats;
+    println!(
+        "offered {} | admitted {} (+{} re-admissions) | completed {} | shed {} | \
+         refused {} | failed {} | evicted {}",
+        s.offered, s.admitted, s.re_admitted, s.completed, s.shed_overloaded, s.refused,
+        s.failed, s.evicted
+    );
+    println!(
+        "latency p50 {:.3} ms/step, p99 {:.3} ms/step ({} samples) | {:.0} steps/s | \
+         {} steals | parked peak {}",
+        s.p50_step_ms,
+        s.p99_step_ms,
+        s.latency_samples,
+        s.steps_per_sec(),
+        s.steals,
+        s.parked_peak
+    );
+    println!(
+        "accounting: {} lost, {} duplicated | twins {}/{} matched",
+        out.lost,
+        out.duplicated,
+        out.twins_checked - out.twin_mismatches,
+        out.twins_checked
+    );
+    for line in &out.shed_sample {
+        println!("  shed: {line}");
+    }
+
+    match save_json(&bench_json(&spec, &out), "BENCH_serve") {
+        Ok(p) => println!("\n[saved {}]", p.display()),
+        Err(e) => println!("\n[json save failed: {e}]"),
+    }
+    let _ = std::fs::remove_dir_all(&root);
+    if out.lost > 0 || out.duplicated > 0 || out.twin_mismatches > 0 {
+        eprintln!(
+            "serve_load: accounting violated (lost {}, duplicated {}, twin mismatches {})",
+            out.lost, out.duplicated, out.twin_mismatches
+        );
+        std::process::exit(1);
+    }
+}

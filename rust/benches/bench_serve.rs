@@ -1,0 +1,73 @@
+//! Bench: the open-stream serving front-end under sustained churn —
+//! 2000 short-lived tenants arriving on the synthetic load stream, with
+//! short leases so (nearly) every session round-trips through the
+//! checkpoint store mid-run. Hand-rolled harness (criterion unavailable
+//! offline; run with `cargo bench --bench bench_serve`).
+//!
+//! Writes `results/BENCH_serve.json` (schema-versioned, git-SHA
+//! stamped): p50/p99 per-step latency, steps/s, admission/shed/evict
+//! counters, and the accounting the CI bench-gate holds hard —
+//! `sessions_lost == 0`, `sessions_duplicated == 0`,
+//! `twin_mismatches == 0`, and p99 within a sane multiple of p50.
+
+use mxscale::coordinator::report::save_json;
+use mxscale::fleet::StoreSpec;
+use mxscale::serve::load::{bench_json, run_load, LoadSpec};
+use mxscale::store::StoreLayout;
+
+fn main() {
+    let root = std::env::temp_dir().join(format!("mxscale-bench-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let spec = LoadSpec {
+        sessions: 2000,
+        steps: 10,
+        // lease 2 quanta of 4 steps: every 10-step session is evicted
+        // through the store once and re-admitted to finish
+        lease_quanta: 2,
+        twin_every: 101,
+        store: Some(StoreSpec {
+            dir: root.clone(),
+            layout: StoreLayout::Sharded { shards: 4 },
+        }),
+        ..Default::default()
+    };
+    println!(
+        "serving {} sessions x {} steps (quantum {}, capacity {}, lease {} quanta, \
+         store sharded:4)...\n",
+        spec.sessions, spec.steps, spec.quantum, spec.capacity, spec.lease_quanta
+    );
+    let out = run_load(&spec).expect("load run");
+    let s = &out.stats;
+    println!(
+        "offered {} | admitted {} (+{} re-admissions) | completed {} | shed {} | \
+         refused {} | failed {} | evicted {}",
+        s.offered, s.admitted, s.re_admitted, s.completed, s.shed_overloaded, s.refused,
+        s.failed, s.evicted
+    );
+    println!(
+        "latency p50 {:.3} ms/step, p99 {:.3} ms/step ({} samples) | {:.0} steps/s | \
+         {} steals | parked peak {}",
+        s.p50_step_ms,
+        s.p99_step_ms,
+        s.latency_samples,
+        s.steps_per_sec(),
+        s.steals,
+        s.parked_peak
+    );
+    println!(
+        "accounting: {} lost, {} duplicated | twins {}/{} matched",
+        out.lost,
+        out.duplicated,
+        out.twins_checked - out.twin_mismatches,
+        out.twins_checked
+    );
+    assert_eq!(out.lost, 0, "every offer must be accounted");
+    assert_eq!(out.duplicated, 0, "no session may finish twice");
+    assert_eq!(out.twin_mismatches, 0, "served curves must equal standalone twins");
+    assert!(s.evicted > 0, "short leases must exercise the evict path");
+    match save_json(&bench_json(&spec, &out), "BENCH_serve") {
+        Ok(p) => println!("\n[saved {}]", p.display()),
+        Err(e) => println!("\n[json save failed: {e}]"),
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}

@@ -4,9 +4,16 @@
 //! mxscale repro <table2|table3|table4|fig2|fig7|fig8|throughput|ablation|all>... [--steps N]
 //! mxscale train --workload pusher --scheme e4m3 --backend hw [--steps N] [--hidden N]
 //! mxscale fleet --sessions 8 --steps 280 --shift-at 140
+//! mxscale serve --load --sessions 10000 --steps 12
 //! mxscale quantize --format e4m3 [--rows N --cols N]
 //! mxscale info
 //! ```
+//!
+//! Flag values with a domain (`--backend`, `--scheme`, `--policy`,
+//! `--kernel`, `--store`) parse through one [`FromArg`] trait, so
+//! every subcommand rejects a bad value with the same structured
+//! `TrainError::BadConfig` message: flag name, offending value,
+//! accepted values.
 
 #![forbid(unsafe_code)]
 
@@ -15,11 +22,13 @@ use crate::coordinator::experiments;
 use crate::coordinator::report::{save_csv, save_hw_report, save_json, Table};
 use crate::fleet::{run_fleet, FleetSpec, StoreSpec};
 use crate::mx::element::ElementFormat;
+use crate::mx::simd::KernelPath;
 use crate::mx::tensor::{Layout, MxTensor};
+use crate::serve::load::{bench_json, run_load, LoadSpec};
 use crate::store::StoreLayout;
 use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
-use crate::trainer::session::{TrainConfig, TrainSession};
+use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
 use crate::util::mat::Mat;
 use crate::util::rng::Pcg64;
 use crate::workloads::{by_name, Dataset};
@@ -66,6 +75,90 @@ impl Args {
     }
 }
 
+/// A CLI flag value with a closed domain: the flag it rides on, the
+/// accepted values (for the error message), and the parse itself.
+/// `train`, `fleet`, and `serve` all go through [`flag_opt`] /
+/// [`flag_list`], so a bad value fails identically everywhere.
+pub trait FromArg: Sized {
+    /// Flag name, without the leading dashes.
+    const FLAG: &'static str;
+    /// Human-readable accepted values, quoted in errors.
+    const ACCEPTED: &'static str;
+    fn from_arg(s: &str) -> Result<Self, String>;
+}
+
+impl FromArg for BackendKind {
+    const FLAG: &'static str = "backend";
+    const ACCEPTED: &'static str = "fast|hw|packed";
+    fn from_arg(s: &str) -> Result<Self, String> {
+        BackendKind::parse(s).ok_or_else(|| "unrecognized backend".to_string())
+    }
+}
+
+impl FromArg for QuantScheme {
+    const FLAG: &'static str = "scheme";
+    const ACCEPTED: &'static str =
+        "fp32|int8|e5m2|e4m3|e3m2|e2m3|e2m1|mx-<fmt>|mxvec-<fmt>|mx9|mx6|mx4";
+    fn from_arg(s: &str) -> Result<Self, String> {
+        QuantScheme::parse(s).ok_or_else(|| "unrecognized scheme".to_string())
+    }
+}
+
+impl FromArg for PrecisionPolicy {
+    const FLAG: &'static str = "policy";
+    const ACCEPTED: &'static str =
+        "<step:scheme>[,<step:scheme>...] or adaptive:<s>[>s...] (DESIGN.md \u{a7}8)";
+    fn from_arg(s: &str) -> Result<Self, String> {
+        PrecisionPolicy::parse(s)
+    }
+}
+
+impl FromArg for KernelPath {
+    const FLAG: &'static str = "kernel";
+    const ACCEPTED: &'static str = "swar|sse41|avx2|neon";
+    fn from_arg(s: &str) -> Result<Self, String> {
+        KernelPath::parse(s)
+    }
+}
+
+impl FromArg for StoreLayout {
+    const FLAG: &'static str = "store";
+    const ACCEPTED: &'static str = "plain|sharded|sharded:N (N in 1..=4096)";
+    fn from_arg(s: &str) -> Result<Self, String> {
+        StoreLayout::parse(s).ok_or_else(|| "unrecognized layout".to_string())
+    }
+}
+
+/// Parse the optional `--<T::FLAG>` flag into its value type, shaping
+/// failures into the uniform message: flag + offending value +
+/// accepted values.
+fn flag_opt<T: FromArg>(args: &Args) -> Result<Option<T>, TrainError> {
+    match args.get(T::FLAG) {
+        None => Ok(None),
+        Some(v) => T::from_arg(v).map(Some).map_err(|detail| TrainError::BadConfig {
+            reason: format!("--{} {v}: {detail}; accepted: {}", T::FLAG, T::ACCEPTED),
+        }),
+    }
+}
+
+/// Comma-separated variant (e.g. `--scheme int8,e4m3`); any bad
+/// element fails the whole flag with the element named.
+fn flag_list<T: FromArg>(args: &Args) -> Result<Option<Vec<T>>, TrainError> {
+    match args.get(T::FLAG) {
+        None => Ok(None),
+        Some(list) => {
+            let mut out = Vec::new();
+            for v in list.split(',') {
+                let v = v.trim();
+                out.push(T::from_arg(v).map_err(|detail| TrainError::BadConfig {
+                    reason: format!("--{} {v}: {detail}; accepted: {}", T::FLAG, T::ACCEPTED),
+                })?);
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
 const USAGE: &str = "\
 mxscale - precision-scalable MX processing for robotics learning (ISLPED'25 reproduction)
 
@@ -83,6 +176,11 @@ USAGE:
                 [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
                 [--energy-budget UJ] [--policy <spec>] [--seed N]   # continual learning
                 [--store plain|sharded|sharded:N] [--store-dir DIR] # checkpoint store
+  mxscale serve --load [--sessions N] [--steps N] [--quantum N] [--capacity N]
+                [--workers N] [--max-parked N] [--burst-every N] [--twin-every N]
+                [--lease N] [--store plain|sharded|sharded:N] [--store-dir DIR]
+                [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
+                [--seed N]      # open-stream multi-tenant serving (BENCH_serve.json)
   mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
   mxscale info                                            # architecture summary
 
@@ -118,6 +216,19 @@ USAGE:
   indexes, so resuming one robot reads only the index plus its own
   chunks. --store-dir picks the root (default results/fleet_store).
   Legacy monolithic .mxckpt files in that directory stay readable.
+
+  serve is the open-stream front-end over the fleet (DESIGN.md §12):
+  sessions arrive continuously with priorities and budgets, admission
+  control sheds load before step latency collapses (structured
+  Overloaded errors), and a work-stealing executor runs admitted
+  sessions in quanta. --load drives the deterministic synthetic
+  generator (10k sessions by default); --capacity bounds live sessions,
+  --max-parked bounds the parking lot, --lease N evicts a session
+  through the checkpoint store every N quanta (requires --store) and
+  re-admits it bit-identically. Writes results/BENCH_serve.json
+  (p50/p99 step latency, steps/s, shed counts, twin-check results) and
+  exits nonzero if any session is lost, duplicated, or diverges from
+  its standalone twin.
 ";
 
 /// Entry point used by `main.rs`. Returns a process exit code.
@@ -127,6 +238,7 @@ pub fn run_cli(argv: &[String]) -> i32 {
         Some("repro") => cmd_repro(&args),
         Some("train") => cmd_train(&args),
         Some("fleet") => cmd_fleet(&args),
+        Some("serve") => cmd_serve(&args),
         Some("quantize") => cmd_quantize(&args),
         Some("info") => {
             print!("{}", info_text());
@@ -276,48 +388,25 @@ fn cmd_fleet(args: &Args) -> i32 {
             return 1;
         }
     }
-    if let Some(names) = args.get("scheme") {
-        let mut schemes = Vec::new();
-        for name in names.split(',') {
-            match QuantScheme::parse(name.trim()) {
-                Some(s) => schemes.push(s),
-                None => {
-                    eprintln!("unknown scheme: {name}");
-                    return 1;
-                }
-            }
+    let flags = (|| -> Result<(), TrainError> {
+        if let Some(schemes) = flag_list::<QuantScheme>(args)? {
+            spec.schemes = schemes;
         }
-        spec.schemes = schemes;
-    }
-    if let Some(b) = args.get("backend") {
-        match BackendKind::parse(b) {
-            Some(b) => spec.backend = b,
-            None => {
-                eprintln!("unknown backend: {b} (use fast|hw|packed)");
-                return 1;
-            }
+        if let Some(b) = flag_opt::<BackendKind>(args)? {
+            spec.backend = b;
         }
-    }
-    if let Some(p) = args.get("policy") {
-        match PrecisionPolicy::parse(p) {
-            Ok(policy) => spec.policy = Some(policy),
-            Err(e) => {
-                eprintln!("bad --policy: {e}");
-                return 1;
-            }
+        if let Some(p) = flag_opt::<PrecisionPolicy>(args)? {
+            spec.policy = Some(p);
         }
-    }
-    if let Some(layout) = args.get("store") {
-        match StoreLayout::parse(layout) {
-            Some(layout) => {
-                let dir = args.get("store-dir").unwrap_or("results/fleet_store");
-                spec.store = Some(StoreSpec { dir: dir.into(), layout });
-            }
-            None => {
-                eprintln!("bad --store: {layout} (use plain|sharded|sharded:N, N in 1..=4096)");
-                return 1;
-            }
+        if let Some(layout) = flag_opt::<StoreLayout>(args)? {
+            let dir = args.get("store-dir").unwrap_or("results/fleet_store");
+            spec.store = Some(StoreSpec { dir: dir.into(), layout });
         }
+        Ok(())
+    })();
+    if let Err(e) = flags {
+        eprintln!("{e}");
+        return 1;
     }
     println!(
         "fleet: {} sessions x {} steps (quantum {}, shift at {}) on the {} backend...",
@@ -388,32 +477,41 @@ fn cmd_fleet(args: &Args) -> i32 {
             return 1;
         }
     }
+    // A parked session is a failed session: the report above still
+    // covers it (steps so far, the error string), but the process must
+    // not exit as if the fleet ran clean.
+    if run.stats.parked > 0 {
+        for s in run.sessions.iter().filter(|s| s.error.is_some()) {
+            eprintln!(
+                "fleet: session {} parked on error: {}",
+                s.id,
+                s.error.as_deref().unwrap_or("unknown")
+            );
+        }
+        eprintln!("fleet: {} session(s) parked on error", run.stats.parked);
+        return 1;
+    }
     0
 }
 
 fn cmd_train(args: &Args) -> i32 {
     let workload = args.get("workload").unwrap_or("pusher");
-    let scheme_name = args.get("scheme").unwrap_or("fp32");
-    let Some(scheme) = QuantScheme::parse(scheme_name) else {
-        eprintln!("unknown scheme: {scheme_name}");
-        return 1;
-    };
-    let backend_name = args.get("backend").unwrap_or("fast");
-    let Some(backend) = BackendKind::parse(backend_name) else {
-        eprintln!("unknown backend: {backend_name} (use fast|hw|packed)");
-        return 1;
-    };
-    if let Some(k) = args.get("kernel") {
-        match crate::mx::simd::KernelPath::parse(k) {
-            Ok(p) => {
-                crate::backend::force_kernel_path(Some(p));
-                println!("kernel path forced: {}", p.name());
-            }
-            Err(e) => {
-                eprintln!("bad --kernel: {e}");
-                return 1;
-            }
+    let parsed = (|| -> Result<(QuantScheme, BackendKind, Option<KernelPath>), TrainError> {
+        let scheme = flag_opt::<QuantScheme>(args)?.unwrap_or(QuantScheme::Fp32);
+        let backend = flag_opt::<BackendKind>(args)?.unwrap_or_default();
+        let kernel = flag_opt::<KernelPath>(args)?;
+        Ok((scheme, backend, kernel))
+    })();
+    let (scheme, backend, kernel) = match parsed {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
         }
+    };
+    if let Some(p) = kernel {
+        crate::backend::force_kernel_path(Some(p));
+        println!("kernel path forced: {}", p.name());
     }
     let Some(env) = by_name(workload) else {
         eprintln!("unknown workload: {workload}");
@@ -448,15 +546,12 @@ fn cmd_train(args: &Args) -> i32 {
             return 1;
         }
     };
-    let mut policy = match args.get("policy") {
-        None => PrecisionPolicy::Static,
-        Some(spec) => match PrecisionPolicy::parse(spec) {
-            Ok(p) => p,
-            Err(e) => {
-                eprintln!("bad --policy: {e}");
-                return 1;
-            }
-        },
+    let mut policy = match flag_opt::<PrecisionPolicy>(args) {
+        Ok(p) => p.unwrap_or(PrecisionPolicy::Static),
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
     };
     // reject a policy this backend can never execute before step 0,
     // not at the (possibly distant) transition step
@@ -507,6 +602,114 @@ fn cmd_train(args: &Args) -> i32 {
             Ok(p) => println!("[saved {}]\n", p.display()),
             Err(e) => println!("[json save failed: {e}]\n"),
         }
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    if args.get("load").is_none() {
+        eprintln!(
+            "serve: only the synthetic load generator is wired up; pass --load \
+             (open-socket front-ends mount the same executor, DESIGN.md \u{a7}12)"
+        );
+        return 1;
+    }
+    let d = LoadSpec::default();
+    let mut spec = LoadSpec {
+        sessions: args.usize_or("sessions", d.sessions),
+        steps: args.usize_or("steps", d.steps),
+        hidden: args.usize_or("hidden", d.hidden),
+        episodes: args.usize_or("episodes", d.episodes),
+        horizon: args.usize_or("horizon", d.horizon),
+        batch: args.usize_or("batch", d.batch),
+        eval_every: args.usize_or("eval-every", d.eval_every),
+        quantum: args.usize_or("quantum", d.quantum),
+        workers: args.usize_or("workers", d.workers),
+        capacity: args.usize_or("capacity", d.capacity),
+        max_parked: args.usize_or("max-parked", d.max_parked),
+        lease_quanta: args.usize_or("lease", d.lease_quanta),
+        burst_every: args.usize_or("burst-every", d.burst_every),
+        twin_every: args.usize_or("twin-every", d.twin_every),
+        seed: args.usize_or("seed", d.seed as usize) as u64,
+        ..d
+    };
+    let flags = (|| -> Result<(), TrainError> {
+        if let Some(schemes) = flag_list::<QuantScheme>(args)? {
+            spec.schemes = schemes;
+        }
+        if let Some(b) = flag_opt::<BackendKind>(args)? {
+            spec.backend = b;
+        }
+        if let Some(layout) = flag_opt::<StoreLayout>(args)? {
+            let dir = args.get("store-dir").unwrap_or("results/serve_store");
+            spec.store = Some(StoreSpec { dir: dir.into(), layout });
+        }
+        Ok(())
+    })();
+    if let Err(e) = flags {
+        eprintln!("{e}");
+        return 1;
+    }
+    if spec.lease_quanta > 0 && spec.store.is_none() {
+        eprintln!("serve: --lease requires --store (eviction checkpoints through the store)");
+        return 1;
+    }
+    println!(
+        "serve: {} sessions x {} steps (quantum {}, capacity {}, lease {}) on the {} backend...",
+        spec.sessions,
+        spec.steps,
+        spec.quantum,
+        spec.capacity,
+        spec.lease_quanta,
+        spec.backend.name()
+    );
+    let out = match run_load(&spec) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    };
+    let s = &out.stats;
+    println!(
+        "outcome: {} offered | {} admitted ({} re-admitted) | {} completed | {} shed | \
+         {} refused | {} failed | {} evicted",
+        s.offered, s.admitted, s.re_admitted, s.completed, s.shed_overloaded, s.refused,
+        s.failed, s.evicted
+    );
+    println!(
+        "latency: p50 {:.3} ms/step, p99 {:.3} ms/step over {} samples | {:.0} steps/s | \
+         {} steals | parked peak {}",
+        s.p50_step_ms,
+        s.p99_step_ms,
+        s.latency_samples,
+        s.steps_per_sec(),
+        s.steals,
+        s.parked_peak
+    );
+    println!(
+        "accounting: {} lost, {} duplicated | twins: {}/{} matched",
+        out.lost,
+        out.duplicated,
+        out.twins_checked - out.twin_mismatches,
+        out.twins_checked
+    );
+    for line in &out.shed_sample {
+        println!("  shed: {line}");
+    }
+    match save_json(&bench_json(&spec, &out), "BENCH_serve") {
+        Ok(p) => println!("[saved {}]", p.display()),
+        Err(e) => {
+            eprintln!("[json save failed: {e}]");
+            return 1;
+        }
+    }
+    if out.lost > 0 || out.duplicated > 0 || out.twin_mismatches > 0 {
+        eprintln!(
+            "serve: accounting violated (lost {}, duplicated {}, twin mismatches {})",
+            out.lost, out.duplicated, out.twin_mismatches
+        );
+        return 1;
     }
     0
 }
@@ -688,6 +891,29 @@ mod tests {
         assert_eq!(run_cli(&argv("fleet --hidden 0")), 1);
         assert_eq!(run_cli(&argv("fleet --store monolith")), 1);
         assert_eq!(run_cli(&argv("fleet --store sharded:0")), 1);
+    }
+
+    #[test]
+    fn serve_requires_the_load_flag() {
+        assert_eq!(run_cli(&argv("serve")), 1);
+    }
+
+    #[test]
+    fn serve_rejects_bad_flags() {
+        assert_eq!(run_cli(&argv("serve --load --sessions 4 --backend warp")), 1);
+        assert_eq!(run_cli(&argv("serve --load --sessions 4 --scheme nope")), 1);
+        assert_eq!(run_cli(&argv("serve --load --sessions 4 --store monolith")), 1);
+        // lease-based eviction needs somewhere to checkpoint to
+        assert_eq!(run_cli(&argv("serve --load --sessions 4 --lease 2")), 1);
+    }
+
+    #[test]
+    fn serve_small_load_runs_clean() {
+        let code = run_cli(&argv(
+            "serve --load --sessions 6 --steps 4 --quantum 2 --capacity 3 --workers 2 \
+             --twin-every 3 --eval-every 2 --hidden 8 --episodes 1 --horizon 16",
+        ));
+        assert_eq!(code, 0);
     }
 
     #[test]

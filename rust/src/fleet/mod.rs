@@ -27,12 +27,20 @@
 //! (asserted by `scheduler::tests`), and block-level parallelism inside
 //! each session degrades to serial on fleet workers (no nested forks).
 //!
+//! Construction: every [`FleetSession`] is built through the
+//! [`SessionSpec`] builder (`SessionSpec::new(..).policy(..).store(..)
+//! .budget(..).build()?`), which validates the whole bundle once at
+//! `build()`. The open-stream serving layer ([`crate::serve`]) admits
+//! the same specs and evicts sessions back *into* specs
+//! ([`FleetSession::evict`]) for checkpoint-backed re-admission.
+//!
 //! Entry points: `mxscale fleet` (CLI), `examples/fleet_adapt.rs`, and
 //! [`report::run_fleet`] which both share — it writes
 //! `results/fleet_report.json`.
 
 pub mod report;
 pub mod scheduler;
+pub mod spec;
 
 pub use report::{
     adapt_vs_retrain, run_fleet, AdaptComparison, FleetRun, FleetSpec, SessionSummary, StoreSpec,
@@ -40,3 +48,4 @@ pub use report::{
 pub use scheduler::{
     DomainShift, FleetScheduler, FleetSession, FleetStats, FormatSpend, SessionBudget, ShiftRecord,
 };
+pub use spec::SessionSpec;

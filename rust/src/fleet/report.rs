@@ -3,7 +3,8 @@
 #![forbid(unsafe_code)]
 
 use crate::backend::BackendKind;
-use crate::fleet::scheduler::{DomainShift, FleetScheduler, FleetSession, FleetStats, SessionBudget};
+use crate::fleet::scheduler::{DomainShift, FleetScheduler, FleetStats, SessionBudget};
+use crate::fleet::spec::SessionSpec;
 use crate::mx::element::ElementFormat;
 use crate::store::{CheckpointStore, StoreLayout};
 use crate::trainer::checkpoint::{grouping_footprint, image_bytes, weight_payload, Checkpoint};
@@ -163,6 +164,9 @@ pub struct SessionSummary {
     pub transitions: usize,
     /// MX weight-image bytes of this session's checkpoint.
     pub payload_bytes: usize,
+    /// The error that parked this session mid-run, if any — a parked
+    /// session's numbers above are partial.
+    pub error: Option<String>,
 }
 
 /// Everything a fleet run produced.
@@ -231,23 +235,22 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
         let budget =
             SessionBudget { max_steps: spec.steps, max_energy_uj: spec.energy_budget_uj };
         let id = format!("robot-{i:02}");
-        let mut fs = FleetSession::new(id, workload, ds, config, budget, shifts)?;
+        let mut session_spec = SessionSpec::new(id, workload, ds, config)
+            .budget(budget)
+            .shifts(shifts);
         if let Some(policy) = &spec.policy {
-            fs = fs.with_policy(policy.clone())?;
+            session_spec = session_spec.policy(policy.clone());
         }
         if let Some(store) = &store {
-            fs = fs.with_store(store.clone());
+            session_spec = session_spec.store(store.clone());
         }
-        sched.push(fs);
+        sched.push(session_spec.build()?);
     }
 
     let stats = sched.run();
-
-    // a parked-on-error session means the fleet result is partial —
-    // surface the first error instead of reporting incomplete numbers
-    if let Some(e) = sched.sessions().iter().find_map(|s| s.error()) {
-        return Err(e.clone());
-    }
+    // parked-on-error sessions mean the fleet result is partial; the
+    // report still covers every session (each summary carries its
+    // error), `stats.parked` counts them, and the CLI exits nonzero
 
     // persist every session's final state — batched, so the sharded
     // layout locks and re-indexes each shard exactly once
@@ -300,6 +303,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
                 shifts: s.shift_log.len(),
                 transitions: s.session().scheme_history().len() - 1,
                 payload_bytes,
+                error: s.error().map(|e| e.to_string()),
             }
         })
         .collect();
@@ -329,6 +333,7 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
     let stats_json = Json::obj()
         .set("rounds", stats.rounds)
         .set("total_steps", stats.total_steps)
+        .set("parked", stats.parked)
         .set("wall_s", stats.wall_s)
         .set("eff_steps_per_sec", stats.steps_per_sec());
 
@@ -369,7 +374,11 @@ pub fn run_fleet(spec: &FleetSpec) -> Result<FleetRun, TrainError> {
             .set("ckpt_payload_bytes", s.payload_bytes)
             .set("scheme_history", history)
             .set("format_spend", spend)
-            .set("shifts", shifts);
+            .set("shifts", shifts)
+            .set(
+                "error",
+                s.error.as_ref().map(|e| Json::from(e.as_str())).unwrap_or(Json::Null),
+            );
         if let Some(uj) = s.hw_energy_uj {
             o = o.set("hw_measured_uj", uj);
         }

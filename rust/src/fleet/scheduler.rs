@@ -1,13 +1,18 @@
 //! Round-robin multiplexing of training sessions over the worker pool.
+//!
+//! Sessions are constructed through [`crate::fleet::SessionSpec`] (the
+//! single validated builder); this module owns what a session *is* once
+//! built and how a fixed roster of them is multiplexed.
 
 #![forbid(unsafe_code)]
 
+use crate::fleet::spec::SessionSpec;
 use crate::store::CheckpointStore;
 use crate::trainer::budget::step_cost_for;
 use crate::trainer::checkpoint::Checkpoint;
 use crate::trainer::policy::PrecisionPolicy;
 use crate::trainer::qat::QuantScheme;
-use crate::trainer::session::{TrainConfig, TrainError, TrainSession};
+use crate::trainer::session::{TrainError, TrainSession};
 use crate::util::par;
 use crate::workloads::Dataset;
 use std::sync::Arc;
@@ -68,6 +73,20 @@ pub struct FormatSpend {
     pub uj: f64,
 }
 
+/// Fleet-level accounting that survives an eviction. The checkpoint
+/// carries the model/optimizer/curve state; this ledger carries what the
+/// scheduler knows *around* the session — analytic energy spent,
+/// per-format spend, the shift history, and banked hw measurements —
+/// so an evict→re-admit cycle reports identically to an uninterrupted
+/// run. Filled only by [`FleetSession::evict`].
+#[derive(Debug, Clone, Default)]
+pub(crate) struct CarriedLedger {
+    pub(crate) energy_uj: f64,
+    pub(crate) format_spend: Vec<FormatSpend>,
+    pub(crate) shift_log: Vec<ShiftRecord>,
+    pub(crate) hw_uj_carried: f64,
+}
+
 /// One robot: a training session plus its budget, shift schedule, and
 /// (optionally) a per-robot precision policy.
 pub struct FleetSession {
@@ -75,6 +94,10 @@ pub struct FleetSession {
     pub workload: String,
     session: TrainSession,
     pub budget: SessionBudget,
+    /// Serving priority (higher dispatches sooner under contention);
+    /// set through [`SessionSpec::priority`], ignored by the
+    /// round-robin [`FleetScheduler`].
+    pub priority: u8,
     /// Pending shifts, ascending by `at_step`.
     shifts: Vec<DomainShift>,
     /// Per-robot precision policy (static by default).
@@ -109,16 +132,40 @@ pub struct FleetSession {
 }
 
 impl FleetSession {
-    pub fn new(
-        id: impl Into<String>,
-        workload: impl Into<String>,
-        dataset: Dataset,
-        config: TrainConfig,
-        budget: SessionBudget,
-        mut shifts: Vec<DomainShift>,
-    ) -> Result<Self, TrainError> {
+    /// Construct from a validated [`SessionSpec`] — the only entry
+    /// point (reached through [`SessionSpec::build`]). Validates the
+    /// whole bundle at once: session dims, shift dataset widths, and —
+    /// on the fresh path — every scheme the policy can reach against
+    /// the backend, so a mismatch is a structured construction error
+    /// instead of a panic mid-quantum. On the resume path the session
+    /// is rebuilt from the store's checkpoint under this spec's id, and
+    /// policy validation is skipped (it was validated at first build;
+    /// re-checking `validate_start` against a post-transition scheme
+    /// would falsely reject).
+    pub(crate) fn from_spec(spec: SessionSpec) -> Result<Self, TrainError> {
+        let SessionSpec {
+            id,
+            workload,
+            dataset,
+            config,
+            budget,
+            mut shifts,
+            policy,
+            store,
+            priority,
+            resume,
+            carried,
+        } = spec;
         shifts.sort_by_key(|s| s.at_step);
-        let session = TrainSession::try_new(dataset, config)?;
+        let session = if resume {
+            let store_ref = store.as_ref().ok_or_else(|| TrainError::BadConfig {
+                reason: format!("session `{id}` resumes from the store but has none attached"),
+            })?;
+            let ck = store_ref.load(&id)?;
+            TrainSession::resume(dataset, &ck)?
+        } else {
+            TrainSession::try_new(dataset, config)?
+        };
         // price steps for the *actual* MLP shape (dims-aware, so a
         // --hidden override doesn't get billed for the paper MLP)
         let step_uj = step_cost_for(
@@ -141,46 +188,75 @@ impl FleetSession {
                 });
             }
         }
+        let policy = match policy {
+            Some(p) => {
+                if !resume {
+                    p.validate(session.config.backend)
+                        .map_err(|reason| TrainError::BadConfig { reason })?;
+                    p.validate_start(session.config.scheme)
+                        .map_err(|reason| TrainError::BadConfig { reason })?;
+                }
+                p
+            }
+            None => PrecisionPolicy::Static,
+        };
         let priced_scheme = session.config.scheme;
+        let carried = carried.unwrap_or_default();
         Ok(Self {
-            id: id.into(),
-            workload: workload.into(),
+            id,
+            workload,
             session,
             budget,
+            priority,
             shifts,
-            policy: PrecisionPolicy::Static,
-            energy_uj: 0.0,
+            policy,
+            energy_uj: carried.energy_uj,
             step_uj,
             priced_scheme,
-            format_spend: Vec::new(),
-            shift_log: Vec::new(),
-            hw_uj_carried: 0.0,
-            store: None,
+            format_spend: carried.format_spend,
+            shift_log: carried.shift_log,
+            hw_uj_carried: carried.hw_uj_carried,
+            store,
             last_ran: 0,
             error: None,
         })
     }
 
-    /// Attach a per-robot precision policy. Every scheme the policy can
-    /// reach is validated against the session's backend now, so a
-    /// mismatch is a structured construction error instead of a panic
-    /// mid-quantum.
-    pub fn with_policy(mut self, policy: PrecisionPolicy) -> Result<Self, TrainError> {
-        let backend = self.session.config.backend;
-        policy.validate(backend).map_err(|reason| TrainError::BadConfig { reason })?;
-        policy
-            .validate_start(self.session.config.scheme)
-            .map_err(|reason| TrainError::BadConfig { reason })?;
-        self.policy = policy;
-        Ok(self)
-    }
-
-    /// Persist this robot's shift checkpoints through `store` (shared
-    /// across the fleet — [`CheckpointStore`] is cheap to clone and its
-    /// backend is `Send + Sync`).
-    pub fn with_store(mut self, store: Arc<CheckpointStore>) -> Self {
-        self.store = Some(store);
-        self
+    /// Checkpoint this session into `store` and dissolve it back into a
+    /// resumable [`SessionSpec`]. Rebuilding the returned spec (its
+    /// `resume` flag is set and `store` attached) yields a session
+    /// whose curves continue bitwise as if it had never been evicted:
+    /// the checkpoint carries the model/optimizer/curve state (store
+    /// save→resume contract) and the spec carries the fleet ledger,
+    /// remaining shifts, budget, policy, and priority. On a save error
+    /// the session is consumed — callers that must account for it
+    /// (the serving executor) clone the id first.
+    pub fn evict(mut self, store: &Arc<CheckpointStore>) -> Result<SessionSpec, TrainError> {
+        let ck = self.session.save_checkpoint();
+        store.save(&self.id, &ck)?;
+        // bank the live segment's measured hw ledger — resume replaces
+        // the backend, so the next segment starts a fresh one
+        if let Some(r) = self.session.hw_report() {
+            self.hw_uj_carried += r.uj_total();
+        }
+        Ok(SessionSpec {
+            id: self.id,
+            workload: self.workload,
+            dataset: self.session.dataset,
+            config: self.session.config,
+            budget: self.budget,
+            shifts: self.shifts,
+            policy: Some(self.policy),
+            store: Some(store.clone()),
+            priority: self.priority,
+            resume: true,
+            carried: Some(CarriedLedger {
+                energy_uj: self.energy_uj,
+                format_spend: self.format_spend,
+                shift_log: self.shift_log,
+                hw_uj_carried: self.hw_uj_carried,
+            }),
+        })
     }
 
     /// The wrapped session (read access for reports).
@@ -303,6 +379,12 @@ pub struct FleetStats {
     pub rounds: usize,
     /// Training steps executed across all sessions.
     pub total_steps: usize,
+    /// Sessions that ended parked on a mid-run error instead of
+    /// exhausting their budget. A roster where every session parks
+    /// "finishes" just like a healthy one (no further quantum makes
+    /// progress) — this count is how callers tell the two apart, and
+    /// the CLI exits nonzero when it is > 0.
+    pub parked: usize,
     /// Host wall-clock of the run [s].
     pub wall_s: f64,
 }
@@ -371,7 +453,8 @@ impl FleetScheduler {
             rounds += 1;
             total_steps += ran;
         }
-        FleetStats { rounds, total_steps, wall_s: t0.elapsed().as_secs_f64() }
+        let parked = self.sessions.iter().filter(|s| s.error.is_some()).count();
+        FleetStats { rounds, total_steps, parked, wall_s: t0.elapsed().as_secs_f64() }
     }
 }
 
@@ -381,6 +464,7 @@ mod tests {
     use crate::backend::BackendKind;
     use crate::mx::element::ElementFormat;
     use crate::trainer::qat::QuantScheme;
+    use crate::trainer::session::TrainConfig;
     use crate::workloads::{by_name, shifted_by_name};
 
     fn quick_dataset(name: &str, seed: u64) -> Dataset {
@@ -421,20 +505,20 @@ mod tests {
         let mut sched = FleetScheduler::new(4);
         for (i, &scheme) in schemes.iter().enumerate() {
             sched.push(
-                FleetSession::new(
+                SessionSpec::new(
                     format!("robot-{i}"),
                     "cartpole",
                     quick_dataset("cartpole", 7),
                     quick_config(scheme, 30),
-                    SessionBudget::steps(30),
-                    Vec::new(),
                 )
+                .build()
                 .unwrap(),
             );
         }
         let stats = sched.run();
         assert_eq!(stats.total_steps, 90);
         assert_eq!(stats.rounds, 30usize.div_ceil(4));
+        assert_eq!(stats.parked, 0);
         for (s, want) in sched.sessions().iter().zip(&reference) {
             assert_eq!(s.steps_done(), 30);
             assert_eq!(s.session().val_loss(), *want, "{}", s.id);
@@ -450,14 +534,14 @@ mod tests {
             max_steps: 1000,
             max_energy_uj: per_step * 7.5, // room for exactly 8 steps
         };
-        let mut s = FleetSession::new(
+        let mut s = SessionSpec::new(
             "r0",
             "cartpole",
             quick_dataset("cartpole", 1),
             quick_config(scheme, 1000),
-            budget,
-            Vec::new(),
         )
+        .budget(budget)
+        .build()
         .unwrap();
         let ran = s.run_quantum(100);
         assert_eq!(ran, 8, "energy ceiling must stop the quantum");
@@ -469,14 +553,14 @@ mod tests {
     fn mismatched_shift_dataset_is_rejected_at_construction() {
         let mut bad = quick_dataset("cartpole", 3);
         bad.train_y.cols = 16; // deliberately malformed target width
-        let r = FleetSession::new(
+        let r = SessionSpec::new(
             "r0",
             "cartpole",
             quick_dataset("cartpole", 3),
             quick_config(QuantScheme::Fp32, 10),
-            SessionBudget::steps(10),
-            vec![DomainShift { at_step: 5, label: "bad".into(), dataset: bad }],
-        );
+        )
+        .shifts(vec![DomainShift { at_step: 5, label: "bad".into(), dataset: bad }])
+        .build();
         assert!(matches!(r, Err(TrainError::BadConfig { .. })));
     }
 
@@ -484,14 +568,14 @@ mod tests {
     fn domain_shift_checkpoints_and_resumes() {
         let shifted_env = shifted_by_name("cartpole").unwrap();
         let shifted = Dataset::collect(shifted_env.as_ref(), 4, 40, 9);
-        let mut s = FleetSession::new(
+        let mut s = SessionSpec::new(
             "r0",
             "cartpole",
             quick_dataset("cartpole", 9),
             quick_config(QuantScheme::MxSquare(ElementFormat::Int8), 40),
-            SessionBudget::steps(40),
-            vec![DomainShift { at_step: 20, label: "heavier-pole".into(), dataset: shifted }],
         )
+        .shifts(vec![DomainShift { at_step: 20, label: "heavier-pole".into(), dataset: shifted }])
+        .build()
         .unwrap();
         while s.run_quantum(6) > 0 {}
         assert_eq!(s.steps_done(), 40);
@@ -515,16 +599,14 @@ mod tests {
         // a scheduled robot: e2m1 for steps 0..10, int8 after — energy
         // must be priced per segment and attributed to each format
         let scheme = QuantScheme::MxSquare(ElementFormat::E2M1);
-        let mut s = FleetSession::new(
+        let mut s = SessionSpec::new(
             "r0",
             "cartpole",
             quick_dataset("cartpole", 5),
             quick_config(scheme, 20),
-            SessionBudget::steps(20),
-            Vec::new(),
         )
-        .unwrap()
-        .with_policy(PrecisionPolicy::parse("10:mx-int8").unwrap())
+        .policy(PrecisionPolicy::parse("10:mx-int8").unwrap())
+        .build()
         .unwrap();
         while s.run_quantum(7) > 0 {}
         assert_eq!(s.steps_done(), 20);
@@ -547,18 +629,17 @@ mod tests {
         let build = |store: Option<Arc<CheckpointStore>>| {
             let shifted_env = shifted_by_name("cartpole").unwrap();
             let shifted = Dataset::collect(shifted_env.as_ref(), 4, 40, 9);
-            let mut s = FleetSession::new(
+            let mut spec = SessionSpec::new(
                 "r0",
                 "cartpole",
                 quick_dataset("cartpole", 9),
                 quick_config(QuantScheme::MxSquare(ElementFormat::E2M1), 30),
-                SessionBudget::steps(30),
-                vec![DomainShift { at_step: 15, label: "shift".into(), dataset: shifted }],
             )
-            .unwrap();
+            .shifts(vec![DomainShift { at_step: 15, label: "shift".into(), dataset: shifted }]);
             if let Some(store) = store {
-                s = s.with_store(store);
+                spec = spec.store(store);
             }
+            let mut s = spec.build().unwrap();
             while s.run_quantum(7) > 0 {}
             assert!(s.error().is_none(), "{:?}", s.error());
             s
@@ -580,8 +661,8 @@ mod tests {
     }
 
     #[test]
-    fn policy_backend_mismatch_is_rejected_at_attach() {
-        let s = FleetSession::new(
+    fn policy_backend_mismatch_is_rejected_at_build() {
+        let r = SessionSpec::new(
             "r0",
             "cartpole",
             quick_dataset("cartpole", 6),
@@ -593,12 +674,91 @@ mod tests {
                 eval_every: 10,
                 ..Default::default()
             },
-            SessionBudget::steps(10),
-            Vec::new(),
         )
-        .unwrap();
-        let r = s.with_policy(PrecisionPolicy::parse("5:mxvec-int8").unwrap());
+        .policy(PrecisionPolicy::parse("5:mxvec-int8").unwrap())
+        .build();
         assert!(matches!(r, Err(TrainError::BadConfig { .. })));
+    }
+
+    #[test]
+    fn evict_then_resume_continues_bitwise_and_carries_the_ledger() {
+        use crate::store::{CheckpointStore, MemoryStore, StoreLayout};
+        let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+        // uninterrupted reference
+        let mut reference = SessionSpec::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 13),
+            quick_config(scheme, 24),
+        )
+        .build()
+        .unwrap();
+        while reference.run_quantum(5) > 0 {}
+        // same run, evicted to the store at step 10 and re-admitted
+        let store =
+            Arc::new(CheckpointStore::new(Arc::new(MemoryStore::new()), StoreLayout::Plain));
+        let mut first = SessionSpec::new(
+            "r0",
+            "cartpole",
+            quick_dataset("cartpole", 13),
+            quick_config(scheme, 24),
+        )
+        .build()
+        .unwrap();
+        first.run_quantum(10);
+        let energy_at_evict = first.energy_uj;
+        let spec = first.evict(&store).unwrap();
+        let mut resumed = spec.build().unwrap();
+        assert_eq!(resumed.steps_done(), 10);
+        assert_eq!(resumed.energy_uj, energy_at_evict, "ledger must carry");
+        while resumed.run_quantum(5) > 0 {}
+        assert_eq!(resumed.steps_done(), 24);
+        assert_eq!(
+            resumed.session().train_curve,
+            reference.session().train_curve,
+            "evict→re-admit must be bitwise identical to an uninterrupted run"
+        );
+        assert_eq!(resumed.session().val_loss(), reference.session().val_loss());
+        assert_eq!(resumed.energy_uj, reference.energy_uj);
+    }
+
+    #[test]
+    fn all_parked_roster_reports_parked_stats() {
+        use crate::store::{CheckpointStore, MemoryStore, StoreLayout};
+        // a packed-backend session, evicted and re-admitted with a
+        // schedule whose target scheme the backend cannot execute: the
+        // resume path skips policy validation (by design), so the bad
+        // transition surfaces mid-quantum and parks the session
+        let store =
+            Arc::new(CheckpointStore::new(Arc::new(MemoryStore::new()), StoreLayout::Plain));
+        let config = TrainConfig {
+            scheme: QuantScheme::MxSquare(ElementFormat::Int8),
+            backend: BackendKind::Packed,
+            dims: Some(vec![32, 24, 32]),
+            steps: 20,
+            eval_every: 10,
+            ..Default::default()
+        };
+        let mut s =
+            SessionSpec::new("r0", "cartpole", quick_dataset("cartpole", 6), config)
+                .build()
+                .unwrap();
+        s.run_quantum(2);
+        let spec = s.evict(&store).unwrap();
+        let poisoned = SessionSpec {
+            policy: Some(PrecisionPolicy::parse("4:mxvec-int8").unwrap()),
+            ..spec
+        }
+        .build()
+        .unwrap();
+        let mut sched = FleetScheduler::new(4);
+        sched.push(poisoned);
+        let stats = sched.run();
+        assert_eq!(stats.parked, 1, "the errored session must be reported, not dressed as done");
+        assert!(stats.total_steps < 18, "the run must stop at the bad transition");
+        let parked = &sched.sessions()[0];
+        assert!(parked.error().is_some());
+        assert!(parked.done(), "a parked session runs no further quanta");
     }
 
     #[test]
@@ -616,15 +776,11 @@ mod tests {
             eval_every: usize::MAX,
             ..Default::default()
         };
-        let mut s = FleetSession::new(
-            "r0",
-            "cartpole",
-            quick_dataset("cartpole", 11),
-            config,
-            SessionBudget::steps(8),
-            vec![DomainShift { at_step: 4, label: "shift".into(), dataset: shifted }],
-        )
-        .unwrap();
+        let mut s = SessionSpec::new("r0", "cartpole", quick_dataset("cartpole", 11), config)
+            .budget(SessionBudget::steps(8))
+            .shifts(vec![DomainShift { at_step: 4, label: "shift".into(), dataset: shifted }])
+            .build()
+            .unwrap();
         while s.run_quantum(3) > 0 {}
         assert_eq!(s.steps_done(), 8);
         let total = s.hw_measured_uj().unwrap();

@@ -1,0 +1,129 @@
+//! [`SessionSpec`] — the one way to construct a [`FleetSession`].
+//!
+//! The fleet layer used to grow construction surface ad hoc: a
+//! six-positional-argument `FleetSession::new` plus `with_policy` /
+//! `with_store` half-builders, each validating a different slice of the
+//! invariants at a different time. `SessionSpec` replaces all of it
+//! with a single builder that collects *everything* a session is —
+//! identity, dataset, training config, budget, shift schedule,
+//! precision policy, checkpoint store, serving priority — and validates
+//! the whole bundle exactly once at [`SessionSpec::build`]. The
+//! scheduler, the serving front-end (`crate::serve`), the CLI, the
+//! examples, and every test construct sessions through this type.
+//!
+//! Re-admission: [`SessionSpec::resume_from_store`] flips the build
+//! path from `TrainSession::try_new` to a store read-back +
+//! `TrainSession::resume`, which is how the serving layer re-admits a
+//! session it evicted (checkpoint-on-evict) — bit-identical to never
+//! having been evicted, by the store's save→resume contract.
+
+#![forbid(unsafe_code)]
+
+use crate::fleet::scheduler::{CarriedLedger, DomainShift, FleetSession, SessionBudget};
+use crate::store::CheckpointStore;
+use crate::trainer::policy::PrecisionPolicy;
+use crate::trainer::session::{TrainConfig, TrainError};
+use crate::workloads::Dataset;
+use std::sync::Arc;
+
+/// Declarative description of one fleet session, validated at
+/// [`SessionSpec::build`]. The step budget defaults to the config's
+/// `steps`; everything else defaults to "off".
+pub struct SessionSpec {
+    pub(crate) id: String,
+    pub(crate) workload: String,
+    pub(crate) dataset: Dataset,
+    pub(crate) config: TrainConfig,
+    pub(crate) budget: SessionBudget,
+    pub(crate) shifts: Vec<DomainShift>,
+    pub(crate) policy: Option<PrecisionPolicy>,
+    pub(crate) store: Option<Arc<CheckpointStore>>,
+    pub(crate) priority: u8,
+    pub(crate) resume: bool,
+    /// Fleet-level accounting carried across an eviction (energy,
+    /// per-format spend, shift log) — filled by [`FleetSession::evict`],
+    /// never by callers.
+    pub(crate) carried: Option<CarriedLedger>,
+}
+
+impl SessionSpec {
+    /// Start a spec: identity, workload label, dataset, and training
+    /// config. The budget defaults to `config.steps` steps with no
+    /// energy ceiling.
+    pub fn new(
+        id: impl Into<String>,
+        workload: impl Into<String>,
+        dataset: Dataset,
+        config: TrainConfig,
+    ) -> Self {
+        let budget = SessionBudget::steps(config.steps);
+        Self {
+            id: id.into(),
+            workload: workload.into(),
+            dataset,
+            config,
+            budget,
+            shifts: Vec::new(),
+            policy: None,
+            store: None,
+            priority: 0,
+            resume: false,
+            carried: None,
+        }
+    }
+
+    /// Override the step/energy budget.
+    pub fn budget(mut self, budget: SessionBudget) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Attach the domain-shift schedule (sorted by `at_step` at build).
+    pub fn shifts(mut self, shifts: Vec<DomainShift>) -> Self {
+        self.shifts = shifts;
+        self
+    }
+
+    /// Attach a per-robot precision policy (validated against the
+    /// backend at build, not at the first transition mid-quantum).
+    pub fn policy(mut self, policy: PrecisionPolicy) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Persist this session's checkpoints through `store` (shared
+    /// across the fleet; the store's backend is `Send + Sync`).
+    pub fn store(mut self, store: Arc<CheckpointStore>) -> Self {
+        self.store = Some(store);
+        self
+    }
+
+    /// Serving priority (higher runs sooner under contention; clamped
+    /// to [`crate::serve::MAX_PRIORITY`] by the executor). The
+    /// round-robin `FleetScheduler` ignores it.
+    pub fn priority(mut self, priority: u8) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Build by resuming from the attached store instead of training
+    /// from scratch: `build()` reads the checkpoint saved under this
+    /// spec's `id` and continues it on this spec's dataset. Requires
+    /// [`SessionSpec::store`]; the checkpoint's own config supersedes
+    /// the spec's. Policy validation is skipped on this path — the
+    /// policy was validated when the session was first built, and its
+    /// step-indexed state re-joins the schedule bitwise.
+    pub fn resume_from_store(mut self) -> Self {
+        self.resume = true;
+        self
+    }
+
+    /// Validate everything at once and construct the session. Errors
+    /// are structured [`TrainError`]s naming what failed: bad dims, a
+    /// shift dataset that doesn't fit the session's IO widths, a policy
+    /// the backend can't execute, or a missing/unreadable checkpoint on
+    /// the resume path.
+    pub fn build(self) -> Result<FleetSession, TrainError> {
+        FleetSession::from_spec(self)
+    }
+}

@@ -39,7 +39,16 @@
 //!   ("robots") over the worker pool with per-session step/energy
 //!   budgets and mid-run domain-shift events, where sessions adapt from
 //!   their checkpoint instead of retraining (`mxscale fleet`,
-//!   `results/fleet_report.json`).
+//!   `results/fleet_report.json`). Sessions are built through the
+//!   [`fleet::SessionSpec`] builder, validated once at `build()`.
+//! * [`serve`] — the open-stream serving front-end over the fleet:
+//!   sessions arrive continuously with priorities and budgets, an
+//!   [`serve::Admission`] policy admits/parks/sheds them before step
+//!   latency collapses, and a dep-less work-stealing executor
+//!   (per-worker deques + steal over [`util::par::WorkStealQueues`])
+//!   runs them in quanta with checkpoint-on-evict through [`store`] —
+//!   every session bit-identical to a standalone run (`mxscale serve
+//!   --load`, `BENCH_serve.json`, DESIGN.md §12).
 //! * [`backend`] — the pluggable `ExecBackend` seam between the trainer
 //!   and the hardware model: the fast buffer-reusing fake-quant path,
 //!   the bit-exact `GemmCore` path (accumulating a per-session
@@ -84,6 +93,7 @@ pub mod lint;
 pub mod mx;
 pub mod pearray;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod store;
 pub mod trainer;

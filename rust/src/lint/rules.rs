@@ -377,11 +377,12 @@ pub fn l3(src: &[SourceFile], allow: &Allow) -> Vec<Finding> {
 
 // ------------------------------------------------------------------ L4
 
-const L4_DIRS: [&str; 5] = [
+const L4_DIRS: [&str; 6] = [
     "rust/src/fleet/",
     "rust/src/trainer/",
     "rust/src/backend/",
     "rust/src/coordinator/",
+    "rust/src/serve/",
     "rust/src/store/",
 ];
 

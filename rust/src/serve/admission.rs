@@ -1,0 +1,163 @@
+//! Admission control: who gets a core when sessions keep arriving.
+//!
+//! An [`Admission`] policy sees one [`SessionOffer`] (identity,
+//! priority, step budget) and the executor's current [`LoadSnapshot`],
+//! and answers with an [`AdmitDecision`]. Policies are pure — the
+//! executor owns all state — so decisions are deterministic given the
+//! same offer/load pair and trivially unit-testable.
+//!
+//! Two policies ship:
+//!
+//! - [`FixedRoster`] — the old `FleetScheduler` discipline expressed
+//!   behind the trait: everything syntactically valid is admitted, load
+//!   be damned. Useful as the closed-roster baseline and for tests that
+//!   want the executor saturated.
+//! - [`BudgetAware`] — the serving default: refuse invalid offers,
+//!   admit while live sessions fit capacity, park a bounded overflow
+//!   for later, shed the rest with [`crate::serve::ServeError::Overloaded`].
+
+#![forbid(unsafe_code)]
+
+/// One arriving session, as the admission layer sees it. The full
+/// [`crate::fleet::SessionSpec`] rides alongside in the executor's
+/// [`crate::serve::Arrival`]; policies only get the cheap summary so
+/// they cannot depend on model state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionOffer {
+    pub id: String,
+    /// Dispatch priority, clamped to [`crate::serve::MAX_PRIORITY`].
+    pub priority: u8,
+    /// The offer's step budget (`SessionBudget::max_steps`).
+    pub budget_steps: usize,
+}
+
+/// The executor's load at the moment of an admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LoadSnapshot {
+    /// Sessions admitted and not yet completed/evicted/failed.
+    pub live: usize,
+    /// Admitted sessions waiting in dispatch queues (subset of `live`).
+    pub queued: usize,
+    /// Sessions parked by admission, waiting for capacity.
+    pub parked: usize,
+    /// The configured live-session ceiling.
+    pub capacity: usize,
+}
+
+/// What to do with one offer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmitDecision {
+    /// Build the session and queue it for dispatch.
+    Admit,
+    /// Hold the arrival (unbuilt, cheap) until capacity frees up.
+    Park,
+    /// Shed: reject with [`crate::serve::ServeError::Overloaded`].
+    Overloaded,
+    /// Reject the offer itself, independent of load.
+    Refuse { reason: String },
+}
+
+/// Maps offers to decisions under load. `Send + Sync` because the
+/// executor consults it from the serving loop while workers run.
+pub trait Admission: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn admit(&self, offer: &SessionOffer, load: &LoadSnapshot) -> AdmitDecision;
+}
+
+/// The old fixed-roster discipline as one policy behind the trait:
+/// every well-formed offer is admitted regardless of load (the roster
+/// was assembled up-front, so "arrival" pressure did not exist).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FixedRoster;
+
+impl Admission for FixedRoster {
+    fn name(&self) -> &'static str {
+        "fixed-roster"
+    }
+
+    fn admit(&self, offer: &SessionOffer, _load: &LoadSnapshot) -> AdmitDecision {
+        if offer.budget_steps == 0 {
+            return AdmitDecision::Refuse {
+                reason: "zero-step budget: the session could never run".into(),
+            };
+        }
+        AdmitDecision::Admit
+    }
+}
+
+/// Budget-aware shedding: admit while `live < capacity`, park up to
+/// `max_parked` arrivals beyond that, shed the rest. Parking keeps the
+/// *spec* (no model allocated), so a parked session costs bytes, not
+/// cores — the point is to shed before step latency collapses, not to
+/// queue unboundedly and collapse anyway.
+#[derive(Debug, Clone, Copy)]
+pub struct BudgetAware {
+    /// Parking-lot ceiling; 0 sheds immediately at capacity.
+    pub max_parked: usize,
+}
+
+impl Default for BudgetAware {
+    fn default() -> Self {
+        Self { max_parked: 256 }
+    }
+}
+
+impl Admission for BudgetAware {
+    fn name(&self) -> &'static str {
+        "budget-aware"
+    }
+
+    fn admit(&self, offer: &SessionOffer, load: &LoadSnapshot) -> AdmitDecision {
+        if offer.budget_steps == 0 {
+            return AdmitDecision::Refuse {
+                reason: "zero-step budget: the session could never run".into(),
+            };
+        }
+        if load.live < load.capacity {
+            AdmitDecision::Admit
+        } else if load.parked < self.max_parked {
+            AdmitDecision::Park
+        } else {
+            AdmitDecision::Overloaded
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn offer(steps: usize) -> SessionOffer {
+        SessionOffer { id: "t-0".into(), priority: 1, budget_steps: steps }
+    }
+
+    #[test]
+    fn zero_step_budget_is_refused_by_every_policy() {
+        let load = LoadSnapshot { live: 0, queued: 0, parked: 0, capacity: 8 };
+        for policy in [&FixedRoster as &dyn Admission, &BudgetAware::default()] {
+            match policy.admit(&offer(0), &load) {
+                AdmitDecision::Refuse { reason } => {
+                    assert!(reason.contains("zero-step"), "{}: {reason}", policy.name())
+                }
+                other => panic!("{}: expected Refuse, got {other:?}", policy.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn budget_aware_admits_parks_then_sheds() {
+        let p = BudgetAware { max_parked: 2 };
+        let admit = LoadSnapshot { live: 7, queued: 3, parked: 0, capacity: 8 };
+        assert_eq!(p.admit(&offer(10), &admit), AdmitDecision::Admit);
+        let park = LoadSnapshot { live: 8, queued: 4, parked: 1, capacity: 8 };
+        assert_eq!(p.admit(&offer(10), &park), AdmitDecision::Park);
+        let shed = LoadSnapshot { live: 8, queued: 4, parked: 2, capacity: 8 };
+        assert_eq!(p.admit(&offer(10), &shed), AdmitDecision::Overloaded);
+    }
+
+    #[test]
+    fn fixed_roster_ignores_load() {
+        let full = LoadSnapshot { live: 1000, queued: 1000, parked: 1000, capacity: 1 };
+        assert_eq!(FixedRoster.admit(&offer(1), &full), AdmitDecision::Admit);
+    }
+}

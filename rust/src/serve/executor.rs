@@ -1,0 +1,538 @@
+//! The work-stealing serving executor.
+//!
+//! Dep-less by construction: per-worker deques plus steal
+//! ([`crate::util::par::WorkStealQueues`]), a priority injector for
+//! fresh admissions, and plain `std::thread::scope` workers layered on
+//! the [`crate::util::par`] determinism contract (each worker calls
+//! [`crate::util::par::enter_worker`], so block-level parallelism
+//! *inside* a session degrades to serial — no nested forks, same as
+//! the fleet scheduler).
+//!
+//! Scheduling never touches math: a session is owned by exactly one
+//! worker at a time (it moves between deques, it is never aliased), is
+//! internally seeded, and shares nothing with its neighbours, so
+//! stealing and eviction reorder only *when* quanta run. Every
+//! admitted session's curve is therefore bitwise equal to a standalone
+//! run of the same spec — the load generator asserts this per run.
+//!
+//! Lease eviction: with `lease_quanta > 0` and a store attached, a
+//! session that exhausts its lease is checkpointed *into* the store
+//! ([`crate::fleet::FleetSession::evict`]) and handed back to the
+//! serving loop as a resumable spec; re-admission goes through the
+//! same [`Admission`] policy as any arrival. Save→resume is bit-exact
+//! by the store contract, so eviction also preserves curves.
+
+#![forbid(unsafe_code)]
+
+use crate::fleet::scheduler::FleetSession;
+use crate::fleet::spec::SessionSpec;
+use crate::serve::admission::{AdmitDecision, Admission, LoadSnapshot, SessionOffer};
+use crate::serve::{ServeError, MAX_PRIORITY};
+use crate::store::CheckpointStore;
+use crate::util::par;
+use crate::util::par::WorkStealQueues;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// Executor parameters. `Default` is sized for tests; the CLI and the
+/// load generator override everything.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads; 0 = [`par::threads`] (the pool's own sizing).
+    pub workers: usize,
+    /// Steps per dispatch quantum.
+    pub quantum: usize,
+    /// Live-session ceiling the admission policy sees.
+    pub capacity: usize,
+    /// Quanta a session may hold a core before it is evicted through
+    /// the store; 0 = never evict. Requires `store`.
+    pub lease_quanta: usize,
+    /// Checkpoint store for lease eviction / re-admission.
+    pub store: Option<Arc<CheckpointStore>>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: 0, quantum: 8, capacity: 64, lease_quanta: 0, store: None }
+    }
+}
+
+/// One arriving session: the cheap admission summary plus the full
+/// buildable spec. The spec is only built (model allocated, dataset
+/// bound) *after* admission says `Admit` — parked and shed arrivals
+/// never pay construction.
+pub struct Arrival {
+    pub offer: SessionOffer,
+    pub spec: SessionSpec,
+}
+
+/// One poll of an arrival stream.
+pub enum Pull {
+    /// A session arrived.
+    Session(Box<Arrival>),
+    /// Nothing right now — poll again (the stream may be pacing
+    /// itself against the load snapshot).
+    Pending,
+    /// The stream is closed; no further sessions will arrive.
+    Closed,
+}
+
+/// An open stream of arriving sessions. `poll` sees the executor's
+/// current load, so synthetic generators can model closed-loop clients
+/// (back-pressure) as well as open-loop floods.
+pub trait ArrivalStream {
+    fn poll(&mut self, load: &LoadSnapshot) -> Pull;
+}
+
+/// Any iterator of arrivals is a (load-blind) stream that closes when
+/// the iterator ends.
+impl<I: Iterator<Item = Arrival>> ArrivalStream for I {
+    fn poll(&mut self, _load: &LoadSnapshot) -> Pull {
+        match self.next() {
+            Some(a) => Pull::Session(Box::new(a)),
+            None => Pull::Closed,
+        }
+    }
+}
+
+/// Recover a poisoned lock: serving state is a bag of counters and
+/// queues, each consistent on its own, so a panicked worker must not
+/// wedge the whole front-end (L4: no unwrap in lib code).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// A dispatched session plus its lease bookkeeping.
+struct Slot {
+    session: FleetSession,
+    /// Quanta run since admission (or re-admission).
+    quanta: usize,
+}
+
+/// Priority buckets for fresh admissions, with aging: every
+/// `AGE_EVERY`-th dispatch scans lowest-priority-first, which bounds
+/// starvation — a parked-at-the-bottom session waits at most
+/// `AGE_EVERY - 1` dispatches per turn of the wheel.
+struct Injector {
+    buckets: Vec<VecDeque<Slot>>,
+    dispatched: usize,
+}
+
+const AGE_EVERY: usize = 4;
+
+impl Injector {
+    fn new() -> Self {
+        let buckets = (0..=MAX_PRIORITY).map(|_| VecDeque::new()).collect();
+        Self { buckets, dispatched: 0 }
+    }
+
+    fn push(&mut self, slot: Slot) {
+        let p = slot.session.priority.min(MAX_PRIORITY) as usize;
+        self.buckets[p].push_back(slot);
+    }
+
+    fn pop(&mut self) -> Option<Slot> {
+        let n = self.buckets.len();
+        let aged = self.dispatched % AGE_EVERY == AGE_EVERY - 1;
+        for k in 0..n {
+            let p = if aged { k } else { n - 1 - k };
+            if let Some(slot) = self.buckets[p].pop_front() {
+                self.dispatched += 1;
+                return Some(slot);
+            }
+        }
+        None
+    }
+}
+
+/// State shared between the serving loop and the workers.
+struct Shared {
+    injector: Mutex<Injector>,
+    queues: WorkStealQueues<Slot>,
+    /// Admitted, not yet completed/evicted/failed.
+    live: AtomicUsize,
+    /// Slots sitting in the injector or a worker deque.
+    queued: AtomicUsize,
+    /// Set by the serving loop once everything has drained.
+    closed: AtomicBool,
+    completed: Mutex<Vec<FleetSession>>,
+    /// Lease-evicted sessions, as resumable specs, awaiting re-admission.
+    evicted: Mutex<Vec<SessionSpec>>,
+    /// Sessions lost to an eviction-save failure (still accounted).
+    failed: Mutex<Vec<(String, ServeError)>>,
+    steals: AtomicUsize,
+    steps: AtomicUsize,
+}
+
+fn worker_loop(w: usize, shared: &Shared, cfg: &ServeConfig) -> Vec<f64> {
+    // layered executors: in-session block parallelism degrades serial
+    par::enter_worker();
+    let mut samples = Vec::new();
+    loop {
+        let slot = match shared.queues.pop(w) {
+            Some(s) => Some(s),
+            None => match shared.queues.steal(w) {
+                Some(s) => {
+                    shared.steals.fetch_add(1, Ordering::Relaxed);
+                    Some(s)
+                }
+                None => lock(&shared.injector).pop(),
+            },
+        };
+        let Some(mut slot) = slot else {
+            if shared.closed.load(Ordering::Acquire) && shared.live.load(Ordering::Acquire) == 0
+            {
+                break;
+            }
+            std::thread::yield_now();
+            continue;
+        };
+        shared.queued.fetch_sub(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let ran = slot.session.run_quantum(cfg.quantum);
+        if ran > 0 {
+            shared.steps.fetch_add(ran, Ordering::Relaxed);
+            samples.push(t0.elapsed().as_secs_f64() * 1e3 / ran as f64);
+        }
+        slot.quanta += 1;
+        if slot.session.done() {
+            // completed (or parked-on-error — the session carries it):
+            // publish before releasing the live count, so live == 0
+            // implies every outcome is visible
+            lock(&shared.completed).push(slot.session);
+            shared.live.fetch_sub(1, Ordering::Release);
+        } else if cfg.lease_quanta > 0 && slot.quanta >= cfg.lease_quanta {
+            match &cfg.store {
+                Some(store) => {
+                    let id = slot.session.id.clone();
+                    match slot.session.evict(store) {
+                        Ok(spec) => lock(&shared.evicted).push(spec),
+                        Err(e) => lock(&shared.failed)
+                            .push((id.clone(), ServeError::Train { id, source: e })),
+                    }
+                    shared.live.fetch_sub(1, Ordering::Release);
+                }
+                // unreachable — serve() rejects lease-without-store —
+                // but degrade to "keep running" rather than panic
+                None => {
+                    shared.queued.fetch_add(1, Ordering::Relaxed);
+                    shared.queues.push(w, slot);
+                }
+            }
+        } else {
+            shared.queued.fetch_add(1, Ordering::Relaxed);
+            shared.queues.push(w, slot);
+        }
+    }
+    samples
+}
+
+/// Aggregate outcome counters of one serve run. The accounting
+/// identity `offered + re_admitted == completed + shed + evicted`
+/// (with `shed = shed_overloaded + refused + failed`) is what the
+/// zero-lost-sessions CI gate checks.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    /// Sessions the stream offered.
+    pub offered: usize,
+    /// Offers admitted and built.
+    pub admitted: usize,
+    /// Sessions that ran to their budget (including parked-on-error).
+    pub completed: usize,
+    /// Offers shed with [`ServeError::Overloaded`].
+    pub shed_overloaded: usize,
+    /// Offers refused at admission ([`ServeError::BadOffer`]).
+    pub refused: usize,
+    /// Sessions lost to a build/evict failure ([`ServeError::Train`]).
+    pub failed: usize,
+    /// Lease evictions (each produces one re-admission attempt).
+    pub evicted: usize,
+    /// Evicted sessions admitted back in.
+    pub re_admitted: usize,
+    /// Most arrivals parked at once.
+    pub parked_peak: usize,
+    /// Completed sessions that ended parked on a mid-run error.
+    pub parked_errors: usize,
+    /// Training steps executed across all sessions.
+    pub total_steps: usize,
+    /// Successful steals between worker deques.
+    pub steals: usize,
+    /// Host wall-clock of the run [s].
+    pub wall_s: f64,
+    /// Median per-step latency across all quanta [ms].
+    pub p50_step_ms: f64,
+    /// 99th-percentile per-step latency [ms].
+    pub p99_step_ms: f64,
+    /// Per-quantum latency samples behind the percentiles.
+    pub latency_samples: usize,
+}
+
+impl ServeStats {
+    /// Effective throughput [training steps / host second].
+    pub fn steps_per_sec(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.total_steps as f64 / self.wall_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything a serve run produced: the finished sessions (for twin
+/// checks and reports), every shed offer with its structured reason,
+/// and the counters.
+pub struct Served {
+    pub completed: Vec<FleetSession>,
+    pub shed: Vec<(String, ServeError)>,
+    pub stats: ServeStats,
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted.get(idx).copied().unwrap_or(0.0)
+}
+
+/// Run an open stream of sessions to completion under an admission
+/// policy. Returns once the stream has closed and every admitted
+/// session has completed, failed, or been shed — nothing is lost: each
+/// offer is accounted in exactly one of `completed` / `shed`.
+pub fn serve<S: ArrivalStream>(
+    mut stream: S,
+    admission: &dyn Admission,
+    cfg: &ServeConfig,
+) -> Result<Served, ServeError> {
+    if cfg.quantum == 0 {
+        return Err(ServeError::Config { reason: "quantum must be >= 1".into() });
+    }
+    if cfg.capacity == 0 {
+        return Err(ServeError::Config { reason: "capacity must be >= 1".into() });
+    }
+    if cfg.lease_quanta > 0 && cfg.store.is_none() {
+        return Err(ServeError::Config {
+            reason: "lease eviction (lease_quanta > 0) requires a checkpoint store".into(),
+        });
+    }
+    let workers = if cfg.workers == 0 { par::threads() } else { cfg.workers };
+    let shared = Shared {
+        injector: Mutex::new(Injector::new()),
+        queues: WorkStealQueues::new(workers),
+        live: AtomicUsize::new(0),
+        queued: AtomicUsize::new(0),
+        closed: AtomicBool::new(false),
+        completed: Mutex::new(Vec::new()),
+        evicted: Mutex::new(Vec::new()),
+        failed: Mutex::new(Vec::new()),
+        steals: AtomicUsize::new(0),
+        steps: AtomicUsize::new(0),
+    };
+    let t0 = Instant::now();
+    let mut stats = ServeStats::default();
+    let mut shed: Vec<(String, ServeError)> = Vec::new();
+    let mut parked: VecDeque<Arrival> = VecDeque::new();
+
+    let samples = std::thread::scope(|scope| {
+        let shared = &shared;
+        let handles: Vec<_> =
+            (0..workers).map(|w| scope.spawn(move || worker_loop(w, shared, cfg))).collect();
+
+        let snapshot = |parked_now: usize| LoadSnapshot {
+            live: shared.live.load(Ordering::Acquire),
+            queued: shared.queued.load(Ordering::Relaxed),
+            parked: parked_now,
+            capacity: cfg.capacity,
+        };
+        // admit one arrival: build only on Admit, park/shed otherwise
+        let admit_one = |arrival: Arrival,
+                         re_admission: bool,
+                         parked: &mut VecDeque<Arrival>,
+                         shed: &mut Vec<(String, ServeError)>,
+                         stats: &mut ServeStats| {
+            let load = snapshot(parked.len());
+            match admission.admit(&arrival.offer, &load) {
+                AdmitDecision::Admit => match arrival.spec.build() {
+                    Ok(session) => {
+                        shared.live.fetch_add(1, Ordering::Release);
+                        shared.queued.fetch_add(1, Ordering::Relaxed);
+                        lock(&shared.injector).push(Slot { session, quanta: 0 });
+                        if re_admission {
+                            stats.re_admitted += 1;
+                        } else {
+                            stats.admitted += 1;
+                        }
+                    }
+                    Err(e) => {
+                        stats.failed += 1;
+                        let id = arrival.offer.id;
+                        shed.push((id.clone(), ServeError::Train { id, source: e }));
+                    }
+                },
+                AdmitDecision::Park => {
+                    parked.push_back(arrival);
+                    stats.parked_peak = stats.parked_peak.max(parked.len());
+                }
+                AdmitDecision::Overloaded => {
+                    stats.shed_overloaded += 1;
+                    let id = arrival.offer.id;
+                    shed.push((
+                        id.clone(),
+                        ServeError::Overloaded {
+                            id,
+                            live: load.live,
+                            queued: load.queued,
+                            parked: load.parked,
+                            capacity: load.capacity,
+                        },
+                    ));
+                }
+                AdmitDecision::Refuse { reason } => {
+                    stats.refused += 1;
+                    let id = arrival.offer.id;
+                    shed.push((id.clone(), ServeError::BadOffer { id, reason }));
+                }
+            }
+        };
+
+        let mut stream_open = true;
+        loop {
+            // 1. evicted sessions come back as resumable specs and
+            //    re-enter through the same admission policy
+            let evictees: Vec<SessionSpec> = std::mem::take(&mut *lock(&shared.evicted));
+            for spec in evictees {
+                stats.evicted += 1;
+                let offer = SessionOffer {
+                    id: spec.id.clone(),
+                    priority: spec.priority,
+                    budget_steps: spec.budget.max_steps,
+                };
+                admit_one(Arrival { offer, spec }, true, &mut parked, &mut shed, &mut stats);
+            }
+            // 2. parked arrivals drain in FIFO order while capacity lasts
+            while let Some(front) = parked.front() {
+                let load = snapshot(parked.len().saturating_sub(1));
+                if admission.admit(&front.offer, &load) != AdmitDecision::Admit {
+                    break;
+                }
+                if let Some(arrival) = parked.pop_front() {
+                    admit_one(arrival, false, &mut parked, &mut shed, &mut stats);
+                }
+            }
+            // 3. pull from the open stream
+            if stream_open {
+                match stream.poll(&snapshot(parked.len())) {
+                    Pull::Session(arrival) => {
+                        stats.offered += 1;
+                        admit_one(*arrival, false, &mut parked, &mut shed, &mut stats);
+                        continue; // keep pumping while sessions arrive
+                    }
+                    Pull::Pending => std::thread::sleep(Duration::from_micros(50)),
+                    Pull::Closed => stream_open = false,
+                }
+            }
+            // 4. drained? (live read before evicted: live can only
+            //    fall once the stream closes, and each worker publishes
+            //    its outcome before releasing its live count)
+            if !stream_open
+                && parked.is_empty()
+                && shared.live.load(Ordering::Acquire) == 0
+                && lock(&shared.evicted).is_empty()
+            {
+                break;
+            }
+            if !stream_open {
+                std::thread::yield_now();
+            }
+        }
+        shared.closed.store(true, Ordering::Release);
+        let mut samples = Vec::new();
+        for h in handles {
+            if let Ok(s) = h.join() {
+                samples.extend(s);
+            }
+        }
+        samples
+    });
+
+    // evict-save failures were accounted by workers; merge them in
+    for (id, e) in lock(&shared.failed).drain(..) {
+        stats.failed += 1;
+        shed.push((id, e));
+    }
+    let completed = std::mem::take(&mut *lock(&shared.completed));
+    stats.completed = completed.len();
+    stats.parked_errors = completed.iter().filter(|s| s.error().is_some()).count();
+    stats.total_steps = shared.steps.load(Ordering::Relaxed);
+    stats.steals = shared.steals.load(Ordering::Relaxed);
+    stats.wall_s = t0.elapsed().as_secs_f64();
+    let mut sorted = samples;
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    stats.latency_samples = sorted.len();
+    stats.p50_step_ms = percentile(&sorted, 0.50);
+    stats.p99_step_ms = percentile(&sorted, 0.99);
+    Ok(Served { completed, shed, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: &str, priority: u8) -> Slot {
+        use crate::fleet::spec::SessionSpec;
+        use crate::trainer::session::TrainConfig;
+        use crate::workloads::{by_name, Dataset};
+        let env = by_name("cartpole").unwrap();
+        let ds = Dataset::collect(env.as_ref(), 2, 20, 3);
+        let config = TrainConfig {
+            dims: Some(vec![32, 8, 32]),
+            steps: 4,
+            eval_every: usize::MAX,
+            ..Default::default()
+        };
+        let session = SessionSpec::new(id, "cartpole", ds, config)
+            .priority(priority)
+            .build()
+            .unwrap();
+        Slot { session, quanta: 0 }
+    }
+
+    #[test]
+    fn injector_dispatches_by_priority_with_aging() {
+        let mut inj = Injector::new();
+        inj.push(slot("low", 0));
+        for i in 0..6 {
+            inj.push(slot(&format!("hi-{i}"), MAX_PRIORITY));
+        }
+        let order: Vec<String> = std::iter::from_fn(|| inj.pop())
+            .map(|s| s.session.id)
+            .collect();
+        assert_eq!(order.len(), 7);
+        // high priority leads, but the aged 4th dispatch (index 3)
+        // reaches down and rescues the low-priority session
+        assert_eq!(order[0], "hi-0");
+        assert_eq!(order[3], "low", "{order:?}");
+    }
+
+    #[test]
+    fn injector_clamps_out_of_range_priorities() {
+        let mut inj = Injector::new();
+        inj.push(slot("wild", u8::MAX));
+        inj.push(slot("top", MAX_PRIORITY));
+        let first = inj.pop().map(|s| s.session.id);
+        assert_eq!(first.as_deref(), Some("wild"), "clamped into the top bucket, FIFO");
+    }
+
+    #[test]
+    fn serve_rejects_lease_without_store() {
+        let cfg = ServeConfig { lease_quanta: 2, ..Default::default() };
+        let empty: Vec<Arrival> = Vec::new();
+        let r = serve(empty.into_iter(), &crate::serve::BudgetAware::default(), &cfg);
+        assert!(matches!(r, Err(ServeError::Config { .. })));
+    }
+}

@@ -1,0 +1,384 @@
+//! Deterministic synthetic load generator for the serving front-end.
+//!
+//! Drives `sessions` short-lived training sessions (10k+ for the
+//! headline run) through [`crate::serve::serve`] against the real
+//! trainer/backends/store stack. Everything is derived from
+//! [`LoadSpec::seed`]: workload, scheme, per-session RNG seed, and
+//! priority are pure functions of the arrival index, so a run is
+//! reproducible and — crucially — any completed session can be
+//! **rebuilt and re-run standalone** ([`LoadOutcome::twin_mismatches`]
+//! counts curve divergences, which must be zero: the bit-identity
+//! contract extends from the fleet scheduler to the stolen/queued/
+//! evicted execution order).
+//!
+//! Arrival pacing is closed-loop with bursts: the stream holds back
+//! (`Pull::Pending`) while live sessions sit at capacity — modelling
+//! clients that wait for a slot — except every `burst_every`-th
+//! arrival, which pushes through unpaced so admission control sees
+//! genuine overload pressure. Shedding behaviour itself is pinned by
+//! deterministic unit tests; the load run's job is throughput and
+//! accounting (`BENCH_serve.json`, gated in CI).
+
+#![forbid(unsafe_code)]
+
+use crate::backend::BackendKind;
+use crate::fleet::report::StoreSpec;
+use crate::fleet::spec::SessionSpec;
+use crate::mx::element::ElementFormat;
+use crate::serve::admission::{BudgetAware, SessionOffer};
+use crate::serve::executor::{serve, Arrival, ArrivalStream, Pull, ServeConfig, ServeStats};
+use crate::serve::{ServeError, MAX_PRIORITY};
+use crate::store::CheckpointStore;
+use crate::trainer::mlp::hidden_dims;
+use crate::trainer::qat::QuantScheme;
+use crate::trainer::session::TrainConfig;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use crate::workloads::{by_name, Dataset, ALL_WORKLOADS};
+use std::collections::HashSet;
+use std::sync::Arc;
+
+/// Parameters of one synthetic load run (CLI defaults in [`Default`]:
+/// the 10k-session headline shape, small per-session work).
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Sessions the stream offers.
+    pub sessions: usize,
+    /// Steps per session (short-lived tenants).
+    pub steps: usize,
+    /// Hidden width of each session's MLP.
+    pub hidden: usize,
+    /// Dataset size: rollout episodes × horizon (shared per workload).
+    pub episodes: usize,
+    pub horizon: usize,
+    pub batch: usize,
+    pub eval_every: usize,
+    /// Executor dispatch quantum.
+    pub quantum: usize,
+    /// Worker threads (0 = pool sizing).
+    pub workers: usize,
+    /// Live-session ceiling.
+    pub capacity: usize,
+    /// Parking-lot ceiling ([`BudgetAware::max_parked`]).
+    pub max_parked: usize,
+    /// Lease quanta before eviction through the store (0 = never).
+    pub lease_quanta: usize,
+    /// Every n-th arrival ignores back-pressure (0 = fully paced).
+    pub burst_every: usize,
+    /// Session `i` trains scheme `(i / 4) % schemes.len()`.
+    pub schemes: Vec<QuantScheme>,
+    pub backend: BackendKind,
+    /// Twin-check every n-th completed session (0 = skip the check).
+    pub twin_every: usize,
+    /// Checkpoint persistence for lease eviction.
+    pub store: Option<StoreSpec>,
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        Self {
+            sessions: 10_000,
+            steps: 12,
+            hidden: 12,
+            episodes: 2,
+            horizon: 24,
+            batch: 8,
+            eval_every: 6,
+            quantum: 4,
+            workers: 0,
+            capacity: 64,
+            max_parked: 256,
+            lease_quanta: 0,
+            burst_every: 7,
+            schemes: vec![
+                QuantScheme::MxSquare(ElementFormat::Int8),
+                QuantScheme::MxSquare(ElementFormat::E4M3),
+            ],
+            backend: BackendKind::Fast,
+            twin_every: 97,
+            store: None,
+            seed: 0x5EDF00D,
+        }
+    }
+}
+
+/// The spec for arrival `i` — one pure function shared by the stream
+/// and the twin check, so a standalone rebuild is identical by
+/// construction. `store` is attached only on the serving side (the
+/// twin runs uninterrupted and never checkpoints).
+fn arrival_spec(
+    i: usize,
+    spec: &LoadSpec,
+    datasets: &[Dataset],
+    store: Option<Arc<CheckpointStore>>,
+) -> (SessionOffer, SessionSpec) {
+    let w = i % ALL_WORKLOADS.len();
+    let scheme = spec.schemes[(i / ALL_WORKLOADS.len()) % spec.schemes.len()];
+    let id = format!("tenant-{i:05}");
+    let config = TrainConfig {
+        scheme,
+        backend: spec.backend,
+        dims: Some(hidden_dims(spec.hidden)),
+        batch_size: spec.batch,
+        steps: spec.steps,
+        eval_every: spec.eval_every,
+        seed: spec.seed ^ ((i as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+        ..Default::default()
+    };
+    let priority = Pcg64::new(spec.seed ^ (i as u64)).below(MAX_PRIORITY as u64 + 1) as u8;
+    let offer = SessionOffer { id: id.clone(), priority, budget_steps: spec.steps };
+    let mut session_spec = SessionSpec::new(id, ALL_WORKLOADS[w], datasets[w].clone(), config)
+        .priority(priority);
+    if let Some(store) = store {
+        session_spec = session_spec.store(store);
+    }
+    (offer, session_spec)
+}
+
+/// The synthetic arrival stream: closed-loop (holds back at capacity)
+/// with periodic unpaced bursts.
+struct LoadStream<'a> {
+    spec: &'a LoadSpec,
+    datasets: &'a [Dataset],
+    store: Option<Arc<CheckpointStore>>,
+    next: usize,
+}
+
+impl ArrivalStream for LoadStream<'_> {
+    fn poll(&mut self, load: &crate::serve::admission::LoadSnapshot) -> Pull {
+        if self.next >= self.spec.sessions {
+            return Pull::Closed;
+        }
+        let i = self.next;
+        let burst = self.spec.burst_every > 0 && (i + 1) % self.spec.burst_every == 0;
+        if !burst && load.live >= load.capacity {
+            return Pull::Pending;
+        }
+        self.next += 1;
+        let (offer, spec) = arrival_spec(i, self.spec, self.datasets, self.store.clone());
+        Pull::Session(Box::new(Arrival { offer, spec }))
+    }
+}
+
+/// What a load run produced, beyond the executor counters.
+#[derive(Debug, Clone)]
+pub struct LoadOutcome {
+    pub stats: ServeStats,
+    /// Offers unaccounted for (must be 0): offered − completed − shed.
+    pub lost: usize,
+    /// Session ids appearing more than once across outcomes (must be 0).
+    pub duplicated: usize,
+    /// Completed sessions re-run standalone for the bit-identity check.
+    pub twins_checked: usize,
+    /// Twins whose loss curve diverged (must be 0).
+    pub twin_mismatches: usize,
+    /// First few shed reasons, for human-readable summaries.
+    pub shed_sample: Vec<String>,
+}
+
+fn curves_bitwise_equal(a: &[(usize, f64)], b: &[(usize, f64)]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| x.0 == y.0 && x.1.to_bits() == y.1.to_bits())
+}
+
+fn tenant_index(id: &str) -> Option<usize> {
+    id.strip_prefix("tenant-").and_then(|s| s.parse().ok())
+}
+
+/// Run the synthetic load through the serving front-end, then account
+/// every offer and twin-check a deterministic sample of completions.
+pub fn run_load(spec: &LoadSpec) -> Result<LoadOutcome, ServeError> {
+    if spec.sessions == 0 || spec.schemes.is_empty() {
+        return Err(ServeError::Config {
+            reason: "load needs at least one session and one scheme".into(),
+        });
+    }
+    let store = match &spec.store {
+        Some(ss) => Some(Arc::new(
+            CheckpointStore::open_dir(&ss.dir, ss.layout)
+                .map_err(|e| ServeError::Config { reason: e.to_string() })?,
+        )),
+        None => None,
+    };
+    // one dataset per workload, shared by every tenant on it (sessions
+    // clone it; collection cost stays O(workloads), not O(sessions))
+    let mut datasets = Vec::with_capacity(ALL_WORKLOADS.len());
+    for (k, name) in ALL_WORKLOADS.iter().enumerate() {
+        let env = by_name(name).ok_or_else(|| ServeError::Config {
+            reason: format!("unknown workload `{name}`"),
+        })?;
+        datasets.push(Dataset::collect(
+            env.as_ref(),
+            spec.episodes,
+            spec.horizon,
+            spec.seed ^ (k as u64 + 1),
+        ));
+    }
+    let cfg = ServeConfig {
+        workers: spec.workers,
+        quantum: spec.quantum,
+        capacity: spec.capacity,
+        lease_quanta: spec.lease_quanta,
+        store: store.clone(),
+    };
+    let admission = BudgetAware { max_parked: spec.max_parked };
+    let stream = LoadStream { spec, datasets: &datasets, store, next: 0 };
+    let served = serve(stream, &admission, &cfg)?;
+
+    // accounting: every offer ends in exactly one bucket
+    let lost =
+        served.stats.offered.saturating_sub(served.stats.completed + served.shed.len());
+    let mut seen: HashSet<&str> = HashSet::new();
+    let mut duplicated = 0;
+    for id in served
+        .completed
+        .iter()
+        .map(|s| s.id.as_str())
+        .chain(served.shed.iter().map(|(id, _)| id.as_str()))
+    {
+        if !seen.insert(id) {
+            duplicated += 1;
+        }
+    }
+
+    // twin check: rebuild a deterministic sample of completed sessions
+    // from the same pure spec and run them standalone — curves must be
+    // bitwise equal despite stealing, parking, and eviction
+    let mut twins_checked = 0;
+    let mut twin_mismatches = 0;
+    if spec.twin_every > 0 {
+        for s in &served.completed {
+            let Some(i) = tenant_index(&s.id) else { continue };
+            if i % spec.twin_every != 0 {
+                continue;
+            }
+            let (_, twin_spec) = arrival_spec(i, spec, &datasets, None);
+            twins_checked += 1;
+            let mut twin = match twin_spec.build() {
+                Ok(t) => t,
+                Err(_) => {
+                    twin_mismatches += 1;
+                    continue;
+                }
+            };
+            while twin.run_quantum(spec.quantum) > 0 {}
+            let same = curves_bitwise_equal(
+                &twin.session().train_curve,
+                &s.session().train_curve,
+            ) && twin.session().val_loss().to_bits() == s.session().val_loss().to_bits();
+            if !same {
+                twin_mismatches += 1;
+            }
+        }
+    }
+
+    let shed_sample =
+        served.shed.iter().take(5).map(|(_, e)| e.to_string()).collect();
+    Ok(LoadOutcome {
+        stats: served.stats,
+        lost,
+        duplicated,
+        twins_checked,
+        twin_mismatches,
+        shed_sample,
+    })
+}
+
+/// Assemble the schema-versioned `BENCH_serve.json` document
+/// (stamped by [`crate::coordinator::report::bench_doc`]; the caller
+/// saves it, and `ci/check_bench.py` gates it).
+pub fn bench_json(spec: &LoadSpec, out: &LoadOutcome) -> Json {
+    let workers =
+        if spec.workers == 0 { crate::util::par::threads() } else { spec.workers };
+    crate::coordinator::report::bench_doc("serve")
+        .set("sessions_offered", out.stats.offered)
+        .set("sessions_admitted", out.stats.admitted)
+        .set("sessions_completed", out.stats.completed)
+        .set("sessions_shed", out.stats.shed_overloaded)
+        .set("sessions_refused", out.stats.refused)
+        .set("sessions_failed", out.stats.failed)
+        .set("sessions_lost", out.lost)
+        .set("sessions_duplicated", out.duplicated)
+        .set("sessions_evicted", out.stats.evicted)
+        .set("sessions_re_admitted", out.stats.re_admitted)
+        .set("parked_peak", out.stats.parked_peak)
+        .set("parked_errors", out.stats.parked_errors)
+        .set("twins_checked", out.twins_checked)
+        .set("twin_mismatches", out.twin_mismatches)
+        .set("p50_step_ms", out.stats.p50_step_ms)
+        .set("p99_step_ms", out.stats.p99_step_ms)
+        .set("latency_samples", out.stats.latency_samples)
+        .set("steps_total", out.stats.total_steps)
+        .set("steps_per_sec", out.stats.steps_per_sec())
+        .set("steals", out.stats.steals)
+        .set("workers", workers)
+        .set("capacity", spec.capacity)
+        .set("quantum", spec.quantum)
+        .set("lease_quanta", spec.lease_quanta)
+        .set("wall_s", out.stats.wall_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_load_accounts_every_session_and_twins_match() {
+        let spec = LoadSpec {
+            sessions: 40,
+            steps: 6,
+            capacity: 8,
+            max_parked: 8,
+            workers: 2,
+            twin_every: 5,
+            eval_every: 3,
+            ..Default::default()
+        };
+        let out = run_load(&spec).unwrap();
+        assert_eq!(out.stats.offered, 40);
+        assert_eq!(out.lost, 0, "{:?}", out.stats);
+        assert_eq!(out.duplicated, 0);
+        assert!(out.twins_checked > 0, "the sample must hit some completions");
+        assert_eq!(out.twin_mismatches, 0);
+        assert_eq!(
+            out.stats.completed + out.stats.shed_overloaded + out.stats.refused
+                + out.stats.failed,
+            40
+        );
+    }
+
+    #[test]
+    fn bench_json_carries_the_gated_keys() {
+        let spec = LoadSpec {
+            sessions: 12,
+            steps: 4,
+            capacity: 4,
+            workers: 1,
+            twin_every: 6,
+            eval_every: 2,
+            ..Default::default()
+        };
+        let out = run_load(&spec).unwrap();
+        let text = bench_json(&spec, &out).pretty();
+        for key in [
+            "\"bench\"",
+            "\"schema_version\"",
+            "\"sessions_offered\"",
+            "\"sessions_lost\"",
+            "\"sessions_duplicated\"",
+            "\"twin_mismatches\"",
+            "\"p50_step_ms\"",
+            "\"p99_step_ms\"",
+            "\"steps_per_sec\"",
+        ] {
+            assert!(text.contains(key), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn run_load_rejects_empty_spec() {
+        let spec = LoadSpec { sessions: 0, ..Default::default() };
+        assert!(matches!(run_load(&spec), Err(ServeError::Config { .. })));
+    }
+}

@@ -1,0 +1,98 @@
+//! Async multi-tenant serving front-end over the fleet.
+//!
+//! The fleet layer ([`crate::fleet`]) multiplexes a *fixed roster* of
+//! sessions it was handed up-front. This module is the open-stream
+//! counterpart the paper's edge-fleet premise actually needs: sessions
+//! **arrive continuously** (tenants connecting, robots phoning home),
+//! each carrying a priority and a step/energy budget, and the serving
+//! layer decides per arrival whether to admit, park, or shed it —
+//! *before* step latency collapses, not after.
+//!
+//! Three pieces:
+//!
+//! - **Admission** ([`admission`]): the [`Admission`] trait maps one
+//!   [`SessionOffer`] plus the current [`LoadSnapshot`] to an
+//!   [`AdmitDecision`]. The old fixed-roster discipline is one policy
+//!   behind the trait ([`FixedRoster`]); [`BudgetAware`] is the serving
+//!   default — refuse nonsense offers, admit while capacity lasts, park
+//!   a bounded overflow, shed the rest with a structured
+//!   [`ServeError::Overloaded`].
+//! - **Executor** ([`executor`]): a dep-less work-stealing executor —
+//!   per-worker deques plus steal, built on
+//!   [`crate::util::par::WorkStealQueues`] and plain scoped threads —
+//!   runs admitted sessions in quanta and keeps every core saturated
+//!   under churn. Lease expiry evicts a session *through* the
+//!   checkpoint store ([`crate::fleet::FleetSession::evict`]) and
+//!   re-admits it later, bit-identical by the store contract.
+//! - **Load generator** ([`load`]): a deterministic synthetic arrival
+//!   stream (`mxscale serve --load`, `examples/serve_load.rs`) that
+//!   drives 10k+ short-lived sessions against the real
+//!   trainer/backends/store stack and emits the schema-versioned
+//!   `BENCH_serve.json` gated by `ci/check_bench.py`.
+//!
+//! Determinism: admission order, parking, stealing, and eviction decide
+//! only *when* a session runs, never *what* it computes — sessions
+//! share nothing, are internally seeded, and are owned by exactly one
+//! worker at a time, so every admitted session's loss curve is bitwise
+//! equal to a standalone run of the same spec (asserted per run by the
+//! load generator's twin check).
+
+pub mod admission;
+pub mod executor;
+pub mod load;
+
+pub use admission::{AdmitDecision, Admission, BudgetAware, FixedRoster, LoadSnapshot, SessionOffer};
+pub use executor::{serve, Arrival, ArrivalStream, Pull, ServeConfig, ServeStats, Served};
+pub use load::{run_load, LoadOutcome, LoadSpec};
+
+use crate::trainer::session::TrainError;
+
+/// Highest meaningful serving priority; [`SessionOffer::priority`]
+/// values above it are clamped by the executor's dispatch queues.
+pub const MAX_PRIORITY: u8 = 3;
+
+/// Structured serving-layer errors. `Overloaded` is the load-shedding
+/// signal — it carries the load snapshot that justified the shed, so
+/// callers (and the bench report) can tell "capacity was genuinely
+/// full" from a misconfigured ceiling.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Shed: admitting this session would exceed capacity and the
+    /// parking lot is full.
+    Overloaded { id: String, live: usize, queued: usize, parked: usize, capacity: usize },
+    /// Refused at admission: the offer itself is invalid (e.g. a
+    /// zero-step budget), independent of load.
+    BadOffer { id: String, reason: String },
+    /// The session failed to build, evict, or resume.
+    Train { id: String, source: TrainError },
+    /// The serving configuration itself is invalid.
+    Config { reason: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { id, live, queued, parked, capacity } => write!(
+                f,
+                "session `{id}` shed: overloaded ({live} live + {queued} queued, \
+                 {parked} parked, capacity {capacity})"
+            ),
+            ServeError::BadOffer { id, reason } => {
+                write!(f, "session `{id}` refused at admission: {reason}")
+            }
+            ServeError::Train { id, source } => {
+                write!(f, "session `{id}` failed: {source}")
+            }
+            ServeError::Config { reason } => write!(f, "bad serve configuration: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ServeError::Train { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}

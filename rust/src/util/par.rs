@@ -67,6 +67,20 @@ fn enter_pool() {
     IN_POOL.with(|c| c.set(true));
 }
 
+/// Mark the calling thread as a worker of a parallel region for the
+/// rest of its life: nested [`par_map`]/[`par_chunks_mut`] calls made
+/// from it degrade to their serial twins.
+///
+/// Executors layered above the fork-join primitives (the serving
+/// front-end in `crate::serve` runs its own worker threads) call this
+/// once per worker, so the block-level parallelism *inside* a training
+/// session composes with session-level parallelism without
+/// oversubscribing the machine — the same nested-region rule the
+/// pool's own workers follow.
+pub fn enter_worker() {
+    enter_pool();
+}
+
 /// The serial reference for [`par_map`]: a plain in-order map. The
 /// parallel path degrades to exactly this loop, so the two are
 /// bit-identical by construction (`tests/parallel.rs` asserts it).
@@ -187,6 +201,84 @@ pub fn par_chunks_mut_serial<T>(data: &mut [T], chunk_len: usize, f: impl Fn(usi
     }
 }
 
+/// Per-worker work-stealing deques: the scheduling substrate for
+/// executors layered above the fork-join primitives (the serving
+/// front-end keeps cores saturated under session churn with it).
+///
+/// Each worker owns deque `w`: [`WorkStealQueues::push`] and
+/// [`WorkStealQueues::pop`] touch only that deque (LIFO, so a session's
+/// consecutive quanta stay cache-hot on one core), while
+/// [`WorkStealQueues::steal`] scans the *other* deques round-robin from
+/// the thief's index and takes the oldest item (FIFO) — the classic
+/// work-stealing discipline, carried by mutexed `VecDeque`s because the
+/// offline dependency closure has no lock-free deque and contention at
+/// session/quantum granularity is negligible.
+///
+/// Determinism: an item lives in exactly one deque (or is owned by
+/// exactly one worker) at any moment, so whatever interleaving the
+/// steals produce, each item's own processing history is a serial
+/// sequence — the property the fleet bit-identity contract rides on.
+pub struct WorkStealQueues<T> {
+    queues: Vec<Mutex<std::collections::VecDeque<T>>>,
+}
+
+impl<T> WorkStealQueues<T> {
+    /// One deque per worker (at least one).
+    pub fn new(workers: usize) -> Self {
+        let queues =
+            (0..workers.max(1)).map(|_| Mutex::new(std::collections::VecDeque::new())).collect();
+        Self { queues }
+    }
+
+    /// Number of worker deques.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    fn guard(&self, w: usize) -> std::sync::MutexGuard<'_, std::collections::VecDeque<T>> {
+        match self.queues[w % self.queues.len()].lock() {
+            Ok(g) => g,
+            // a poisoned deque only means another worker panicked while
+            // holding the lock; the queue itself is still well-formed
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Push onto worker `w`'s own deque (newest end).
+    pub fn push(&self, w: usize, item: T) {
+        self.guard(w).push_back(item);
+    }
+
+    /// Pop worker `w`'s own newest item (LIFO).
+    pub fn pop(&self, w: usize) -> Option<T> {
+        self.guard(w).pop_back()
+    }
+
+    /// Steal the *oldest* item from another worker's deque, scanning
+    /// round-robin from the thief's index. Returns `None` when every
+    /// other deque is empty.
+    pub fn steal(&self, thief: usize) -> Option<T> {
+        let n = self.queues.len();
+        for k in 1..n {
+            let victim = (thief + k) % n;
+            if let Some(item) = self.guard(victim).pop_front() {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Items currently queued across every deque.
+    pub fn len(&self) -> usize {
+        (0..self.queues.len()).map(|w| self.guard(w).len()).sum()
+    }
+
+    /// True when every deque is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,6 +336,56 @@ mod tests {
         });
         let want: Vec<usize> = (0..8).map(|i| (0..16).map(|j| i * 100 + j).sum()).collect();
         assert_eq!(outer, want);
+    }
+
+    #[test]
+    fn work_steal_queues_own_pop_is_lifo_steal_is_fifo() {
+        let q: WorkStealQueues<u32> = WorkStealQueues::new(2);
+        q.push(0, 1);
+        q.push(0, 2);
+        q.push(0, 3);
+        assert_eq!(q.len(), 3);
+        // the owner pops its newest item; a thief takes the oldest
+        assert_eq!(q.pop(0), Some(3));
+        assert_eq!(q.steal(1), Some(1));
+        assert_eq!(q.pop(0), Some(2));
+        assert_eq!(q.pop(0), None);
+        assert_eq!(q.steal(1), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn work_steal_queues_deliver_every_item_exactly_once() {
+        let q = std::sync::Arc::new(WorkStealQueues::<usize>::new(4));
+        for i in 0..1000 {
+            q.push(i % 4, i);
+        }
+        let seen = std::sync::Mutex::new(vec![0u8; 1000]);
+        std::thread::scope(|s| {
+            for w in 0..4 {
+                let q = &q;
+                let seen = &seen;
+                s.spawn(move || loop {
+                    let item = q.pop(w).or_else(|| q.steal(w));
+                    match item {
+                        Some(i) => seen.lock().unwrap()[i] += 1,
+                        None => break,
+                    }
+                });
+            }
+        });
+        assert!(seen.lock().unwrap().iter().all(|&c| c == 1), "lost or duplicated items");
+    }
+
+    #[test]
+    fn enter_worker_degrades_nested_regions_to_serial() {
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(!in_parallel_region());
+                enter_worker();
+                assert!(in_parallel_region());
+            });
+        });
     }
 
     #[test]

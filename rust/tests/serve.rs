@@ -1,0 +1,174 @@
+//! Integration tests for the open-stream serving front-end: admission
+//! edge cases, drain semantics, priority starvation, and the headline
+//! contract — every admitted session (stolen, parked, lease-evicted,
+//! re-admitted) finishes bitwise identical to a standalone run.
+
+use mxscale::fleet::{SessionBudget, SessionSpec};
+use mxscale::mx::element::ElementFormat;
+use mxscale::serve::{
+    serve, Arrival, BudgetAware, FixedRoster, ServeConfig, ServeError, SessionOffer,
+    MAX_PRIORITY,
+};
+use mxscale::store::{CheckpointStore, MemoryStore, StoreLayout};
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::TrainConfig;
+use mxscale::workloads::{by_name, Dataset};
+use std::sync::Arc;
+
+fn dataset(seed: u64) -> Dataset {
+    let env = by_name("cartpole").unwrap();
+    Dataset::collect(env.as_ref(), 2, 24, seed)
+}
+
+fn config(scheme: QuantScheme, steps: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        dims: Some(vec![32, 8, 32]),
+        steps,
+        batch_size: 8,
+        eval_every: usize::MAX,
+        seed,
+        ..Default::default()
+    }
+}
+
+/// One synthetic arrival; the spec is a pure function of the inputs, so
+/// tests can rebuild an identical standalone twin at will.
+fn arrival(id: &str, priority: u8, steps: usize, seed: u64, ds: &Dataset) -> Arrival {
+    let scheme = QuantScheme::MxSquare(ElementFormat::Int8);
+    let offer = SessionOffer { id: id.into(), priority, budget_steps: steps };
+    let spec =
+        SessionSpec::new(id, "cartpole", ds.clone(), config(scheme, steps, seed)).priority(priority);
+    Arrival { offer, spec }
+}
+
+#[test]
+fn zero_budget_session_is_refused_at_admit() {
+    let ds = dataset(1);
+    let mut bad = arrival("t-zero", 1, 4, 7, &ds);
+    bad.offer.budget_steps = 0;
+    let bad = Arrival { offer: bad.offer, spec: bad.spec.budget(SessionBudget::steps(0)) };
+    let good = arrival("t-good", 1, 4, 8, &ds);
+    let cfg = ServeConfig { workers: 1, quantum: 2, ..Default::default() };
+    let served = serve(vec![bad, good].into_iter(), &FixedRoster, &cfg).unwrap();
+    assert_eq!(served.stats.offered, 2);
+    assert_eq!(served.stats.refused, 1);
+    assert_eq!(served.stats.completed, 1);
+    assert_eq!(served.shed.len(), 1);
+    match &served.shed[0] {
+        (id, ServeError::BadOffer { reason, .. }) => {
+            assert_eq!(id, "t-zero");
+            assert!(reason.contains("zero-step"), "{reason}");
+        }
+        other => panic!("expected BadOffer, got {other:?}"),
+    }
+}
+
+#[test]
+fn overload_sheds_with_structured_errors_and_loses_nothing() {
+    // one core, capacity 1, no parking lot: a back-to-back flood of
+    // arrivals must shed almost everything with the load snapshot that
+    // justified it — and every offer still lands in exactly one bucket
+    let ds = dataset(2);
+    let arrivals: Vec<Arrival> =
+        (0..8).map(|i| arrival(&format!("t-{i}"), 1, 40, 100 + i as u64, &ds)).collect();
+    let cfg = ServeConfig { workers: 1, quantum: 4, capacity: 1, ..Default::default() };
+    let admission = BudgetAware { max_parked: 0 };
+    let served = serve(arrivals.into_iter(), &admission, &cfg).unwrap();
+    assert_eq!(served.stats.offered, 8);
+    assert_eq!(served.stats.completed + served.shed.len(), 8, "nothing lost");
+    assert!(served.stats.shed_overloaded >= 1, "{:?}", served.stats);
+    for (_, e) in &served.shed {
+        match e {
+            ServeError::Overloaded { capacity, live, .. } => {
+                assert_eq!(*capacity, 1);
+                assert!(*live >= 1);
+            }
+            other => panic!("expected Overloaded, got {other}"),
+        }
+    }
+}
+
+#[test]
+fn executor_drains_cleanly_when_the_stream_closes_mid_run() {
+    // the vec stream closes immediately after the third arrival, while
+    // all three sessions are still mid-quantum: serve() must run every
+    // admitted session to its budget and then stop
+    let ds = dataset(3);
+    let steps = 9;
+    let arrivals: Vec<Arrival> =
+        (0..3).map(|i| arrival(&format!("t-{i}"), 1, steps, 200 + i as u64, &ds)).collect();
+    let cfg = ServeConfig { workers: 2, quantum: 2, ..Default::default() };
+    let served = serve(arrivals.into_iter(), &BudgetAware::default(), &cfg).unwrap();
+    assert!(served.shed.is_empty(), "{:?}", served.shed);
+    assert_eq!(served.stats.completed, 3);
+    assert_eq!(served.stats.total_steps, 3 * steps);
+    let mut ids: Vec<&str> = served.completed.iter().map(|s| s.id.as_str()).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, ["t-0", "t-1", "t-2"]);
+    for s in &served.completed {
+        assert!(s.done());
+        assert!(s.error().is_none());
+        assert_eq!(s.steps_done(), steps);
+    }
+}
+
+#[test]
+fn low_priority_session_completes_under_a_high_priority_flood() {
+    // injector aging bounds starvation: the single priority-0 session
+    // must still run to its budget while priority-3 arrivals keep coming
+    let ds = dataset(4);
+    let mut arrivals = vec![arrival("t-low", 0, 6, 300, &ds)];
+    for i in 0..12 {
+        arrivals.push(arrival(&format!("t-hi-{i}"), MAX_PRIORITY, 6, 310 + i as u64, &ds));
+    }
+    let cfg = ServeConfig { workers: 1, quantum: 3, capacity: 16, ..Default::default() };
+    let served = serve(arrivals.into_iter(), &BudgetAware::default(), &cfg).unwrap();
+    assert_eq!(served.stats.completed, 13);
+    let low = served.completed.iter().find(|s| s.id == "t-low").expect("low-priority ran");
+    assert!(low.done() && low.error().is_none());
+    assert_eq!(low.steps_done(), 6);
+}
+
+#[test]
+fn evict_checkpoint_readmit_is_bitwise_identical_to_standalone() {
+    // the headline contract, end to end: short leases force every
+    // session through evict -> checkpoint store -> re-admission while
+    // two workers steal from each other, and every finished curve must
+    // equal its uninterrupted standalone twin bit for bit
+    let ds = dataset(5);
+    let steps = 12;
+    let arrivals: Vec<Arrival> =
+        (0..8).map(|i| arrival(&format!("t-{i}"), (i % 4) as u8, steps, 400 + i as u64, &ds)).collect();
+    let store =
+        Arc::new(CheckpointStore::new(Arc::new(MemoryStore::new()), StoreLayout::Sharded { shards: 2 }));
+    let cfg = ServeConfig {
+        workers: 2,
+        quantum: 3,
+        capacity: 3,
+        lease_quanta: 2,
+        store: Some(store),
+    };
+    let served = serve(arrivals.into_iter(), &BudgetAware::default(), &cfg).unwrap();
+    assert!(served.shed.is_empty(), "{:?}", served.shed);
+    assert_eq!(served.stats.completed, 8);
+    assert!(served.stats.evicted >= 1, "short leases must evict: {:?}", served.stats);
+    assert_eq!(served.stats.evicted, served.stats.re_admitted);
+    for s in &served.completed {
+        let i: u64 = s.id.strip_prefix("t-").unwrap().parse().unwrap();
+        let mut twin = arrival(&s.id, 0, steps, 400 + i, &ds).spec.build().unwrap();
+        while twin.run_quantum(cfg.quantum) > 0 {}
+        let (a, b) = (&twin.session().train_curve, &s.session().train_curve);
+        assert_eq!(a.len(), b.len(), "{}", s.id);
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.0, y.0, "{}", s.id);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{}: curve diverged", s.id);
+        }
+        assert_eq!(
+            twin.session().val_loss().to_bits(),
+            s.session().val_loss().to_bits(),
+            "{}: val loss diverged",
+            s.id
+        );
+    }
+}
