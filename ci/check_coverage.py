@@ -1,20 +1,26 @@
 #!/usr/bin/env python3
-"""CI coverage ratchet: enforce a line-coverage floor on a source subtree.
+"""CI coverage ratchet: enforce line-coverage floors on source subtrees.
 
 Usage:
+    check_coverage.py --json coverage.json --floor src/mx/=80 \\
+                      --floor src/store/=70 [--floor PATH=PCT ...]
     check_coverage.py --json coverage.json --path src/mx/ --min-lines 80
 
-Reads the ``cargo llvm-cov report --json --summary-only`` document,
-aggregates line counts over every file whose path contains ``--path``
-(substring match on the normalized path, so absolute runner paths work),
-and fails when covered/total falls below ``--min-lines`` percent.
+Reads the ``cargo llvm-cov report --json --summary-only`` document and,
+for each floor, aggregates line counts over every file whose path
+contains the floor's path fragment (substring match on the normalized
+path, so absolute runner paths work), failing when covered/total falls
+below the floor's percentage. ``--floor`` is repeatable so one
+invocation gates several subtrees against independent floors; the
+legacy ``--path``/``--min-lines`` pair is kept as a single-floor
+spelling.
 
-This is a *ratchet*: the floor should only ever move up. When a change
-legitimately raises coverage well above the floor, bump ``--min-lines``
-in .github/workflows/ci.yml so the gain cannot silently erode.
+This is a *ratchet*: floors should only ever move up. When a change
+legitimately raises coverage well above a floor, bump it in
+.github/workflows/ci.yml so the gain cannot silently erode.
 
-Matching zero files is a failure too — a moved directory must not turn
-the gate into a no-op.
+A floor matching zero files is a failure too — a moved directory must
+not turn the gate into a no-op.
 """
 
 import argparse
@@ -23,25 +29,26 @@ import pathlib
 import sys
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--json", required=True, type=pathlib.Path)
-    ap.add_argument("--path", required=True, help="path fragment selecting gated files")
-    ap.add_argument("--min-lines", type=float, default=80.0)
-    args = ap.parse_args()
+def parse_floor(spec):
+    path, sep, pct = spec.partition("=")
+    if not sep or not path:
+        raise argparse.ArgumentTypeError(
+            f"bad floor `{spec}` — expected PATH=PCT, e.g. src/mx/=80"
+        )
+    try:
+        return path, float(pct)
+    except ValueError:
+        raise argparse.ArgumentTypeError(f"bad floor percentage in `{spec}`")
 
-    doc = json.loads(args.json.read_text())
-    exports = doc.get("data", [])
-    if not exports:
-        print(f"ERROR: {args.json} has no coverage data", file=sys.stderr)
-        return 1
 
+def check_floor(exports, path, min_lines):
+    """Gate one subtree; returns True when the floor holds."""
     total = covered = 0
     rows = []
     for export in exports:
         for f in export.get("files", []):
             name = f.get("filename", "").replace("\\", "/")
-            if args.path not in name:
+            if path not in name:
                 continue
             lines = f.get("summary", {}).get("lines", {})
             count = int(lines.get("count", 0))
@@ -53,11 +60,11 @@ def main():
 
     if not rows:
         print(
-            f"ERROR: no files matching `{args.path}` in {args.json} — "
+            f"ERROR: no files matching `{path}` in the coverage report — "
             "did the directory move? The gate must not become a no-op.",
             file=sys.stderr,
         )
-        return 1
+        return False
 
     rows.sort(key=lambda r: r[3])
     width = max(len(pathlib.Path(name).name) for name, *_ in rows)
@@ -65,16 +72,52 @@ def main():
         print(f"  {pathlib.Path(name).name:<{width}}  {hit:>5}/{count:<5}  {pct:6.2f}%")
 
     pct = 100.0 * covered / total if total else 0.0
-    print(f"\n{args.path}: {covered}/{total} lines covered = {pct:.2f}% "
-          f"(floor {args.min_lines:.2f}%)")
-    if pct < args.min_lines:
+    print(f"\n{path}: {covered}/{total} lines covered = {pct:.2f}% "
+          f"(floor {min_lines:.2f}%)")
+    if pct < min_lines:
         print(
-            f"coverage-gate FAILED: {args.path} line coverage {pct:.2f}% "
-            f"is below the {args.min_lines:.2f}% ratchet floor",
+            f"coverage-gate FAILED: {path} line coverage {pct:.2f}% "
+            f"is below the {min_lines:.2f}% ratchet floor",
             file=sys.stderr,
         )
+        return False
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", required=True, type=pathlib.Path)
+    ap.add_argument(
+        "--floor",
+        action="append",
+        type=parse_floor,
+        default=[],
+        metavar="PATH=PCT",
+        help="repeatable per-subtree floor, e.g. --floor src/mx/=80",
+    )
+    ap.add_argument("--path", help="legacy single-floor path fragment")
+    ap.add_argument("--min-lines", type=float, default=80.0)
+    args = ap.parse_args()
+
+    floors = list(args.floor)
+    if args.path:
+        floors.append((args.path, args.min_lines))
+    if not floors:
+        print("ERROR: no floors given (use --floor PATH=PCT)", file=sys.stderr)
         return 1
-    print("coverage-gate passed.")
+
+    doc = json.loads(args.json.read_text())
+    exports = doc.get("data", [])
+    if not exports:
+        print(f"ERROR: {args.json} has no coverage data", file=sys.stderr)
+        return 1
+
+    failed = [path for path, pct in floors if not check_floor(exports, path, pct)]
+    print()
+    if failed:
+        print(f"coverage-gate FAILED for: {', '.join(failed)}", file=sys.stderr)
+        return 1
+    print(f"coverage-gate passed ({len(floors)} floor(s)).")
     return 0
 
 

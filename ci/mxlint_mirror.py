@@ -870,6 +870,72 @@ def l8(src, tests, allow):
     return out
 
 
+L9_DIR = "rust/src/chaos/"
+
+
+def _has_cfg_attr(toks, kw):
+    start = max(kw - 40, 0)
+    for i in range(start, max(kw - 3, start)):
+        if (
+            _is_p(toks[i], "#")
+            and _is_p(toks[i + 1], "[")
+            and _is_i(toks[i + 2], "cfg")
+            and _is_p(toks[i + 3], "(")
+        ):
+            return True
+    return False
+
+
+def l9(src, tests, allow):
+    out = []
+    test_idents = set()
+    for _, toks, _ in tests:
+        for t in toks:
+            if t[0] == IDENT:
+                test_idents.add(t[1])
+    for rel, toks, _ in src:
+        if not rel.startswith("rust/src/"):
+            continue
+        in_chaos = rel.startswith(L9_DIR)
+        plan_aware = any(t[0] == IDENT and t[1] == "FaultPlan" for t in toks)
+        declared = set()
+        for fi in functions(toks):
+            name = fi["name"]
+            if not name.startswith("inject_"):
+                continue
+            declared.add(name)
+            if allowed(allow, "L9", name):
+                continue
+            if name not in test_idents:
+                out.append(finding(
+                    "L9", rel, fi["line"],
+                    "chaos seam `%s` is not referenced from any test in "
+                    "rust/tests/ — an undrilled injection seam is unproven risk"
+                    % name,
+                ))
+            if not in_chaos and not _has_cfg_attr(toks, fi["kw"]):
+                out.append(finding(
+                    "L9", rel, fi["line"],
+                    "chaos seam `%s` declared outside %s without a #[cfg(...)] "
+                    "gate — seams live in the plan-gated chaos module"
+                    % (name, L9_DIR),
+                ))
+        if in_chaos:
+            continue
+        for t in toks:
+            if t[0] != IDENT or not t[1].startswith("inject_"):
+                continue
+            if t[1] in declared or allowed(allow, "L9", t[1]):
+                continue
+            if not plan_aware:
+                out.append(finding(
+                    "L9", rel, t[2],
+                    "`%s` referenced without `FaultPlan` anywhere in the file — "
+                    "injection seams fire only behind a fault plan" % t[1],
+                ))
+    return out
+
+
 def run_all(src, tests, allow, manifest):
     out = []
     out.extend(l1(src, tests, allow))
@@ -880,6 +946,7 @@ def run_all(src, tests, allow, manifest):
     out.extend(l6(src, allow))
     out.extend(l7(src, allow))
     out.extend(l8(src, tests, allow))
+    out.extend(l9(src, tests, allow))
     out.sort(key=lambda f: (f["file"], f["line"], f["rule"]))
     return out
 

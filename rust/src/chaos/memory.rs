@@ -1,0 +1,166 @@
+//! Memory-layer chaos: bit flips in live packed MX tensors.
+//!
+//! A [`GuardedTensor`] wraps one layer's [`PackedTensor`] with its
+//! recorded per-block FNV-1a checksums
+//! ([`PackedTensor::block_checksums`]) and the FP32 master it was
+//! quantized from. The injection seams flip exactly one bit in a code
+//! lane or a scale byte — the two places a radiation event (or DMA bug)
+//! hurts an MX tensor, and the scale byte is the nasty one: a single
+//! flipped bit of shared exponent rescales all 64 elements of the
+//! block.
+//!
+//! Detection is [`GuardedTensor::verify`]: O(blocks) checksum sweep
+//! naming the exact `(layer, brow, bcol)` site. Recovery is
+//! [`GuardedTensor::recover`]: re-quantize the afflicted layer from the
+//! FP32 master. Because quantization is deterministic and idempotent
+//! (fq∘fq == fq — `tests/formats.rs` pins it), the rebuilt tensor is
+//! **bitwise identical** to a never-corrupted one, and the returned
+//! [`FaultOutcome::Recovered`] carries the [`prove_bit_identical`]
+//! proof over the full packed byte image to show it.
+
+#![forbid(unsafe_code)]
+
+use crate::mx::element::ElementFormat;
+use crate::mx::packed::{BlockCorruption, PackedTensor};
+use crate::util::mat::Mat;
+
+use super::{prove_bit_identical, ChaosError, FaultOutcome};
+
+/// Serialize a packed tensor's fault-relevant bytes — every code lane
+/// (little-endian) then every scale byte — the image bit-identity
+/// proofs compare.
+pub fn packed_image(p: &PackedTensor) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(p.storage_bytes());
+    for lane in &p.lanes {
+        bytes.extend_from_slice(&lane.to_le_bytes());
+    }
+    bytes.extend(p.scales.iter().map(|s| *s as u8));
+    bytes
+}
+
+/// One layer's packed tensor guarded by recorded block checksums and
+/// backed by its FP32 master for bit-exact recovery.
+#[derive(Debug, Clone)]
+pub struct GuardedTensor {
+    layer: usize,
+    format: ElementFormat,
+    master: Mat,
+    packed: PackedTensor,
+    recorded: Vec<u64>,
+    pristine: Vec<u8>,
+}
+
+impl GuardedTensor {
+    /// Quantize `master` into a guarded packed tensor, recording the
+    /// per-block checksums and the pristine byte image the recovery
+    /// proof will compare against.
+    pub fn quantize(layer: usize, master: &Mat, format: ElementFormat) -> GuardedTensor {
+        let packed = PackedTensor::quantize_pack(master, format);
+        let recorded = packed.block_checksums();
+        let pristine = packed_image(&packed);
+        GuardedTensor { layer, format, master: master.clone(), packed, recorded, pristine }
+    }
+
+    /// The (possibly corrupted) packed tensor.
+    pub fn packed(&self) -> &PackedTensor {
+        &self.packed
+    }
+
+    /// Which layer this tensor belongs to (named in detection errors).
+    pub fn layer(&self) -> usize {
+        self.layer
+    }
+
+    /// Flip one bit of one code lane of block `(brow, bcol)` — a
+    /// corrupted element code. Plan-gated: only chaos drills and tests
+    /// call this.
+    pub fn inject_lane_flip(&mut self, brow: usize, bcol: usize, lane: usize, bit: u32) {
+        let t = (brow * self.packed.bcols + bcol) * crate::mx::tensor::SQ + lane;
+        self.packed.lanes[t] ^= 1u64 << bit;
+    }
+
+    /// Flip one bit of block `(brow, bcol)`'s shared-exponent byte —
+    /// the worst single-bit fault an MX tensor admits, rescaling all 64
+    /// elements at once. Plan-gated like [`Self::inject_lane_flip`].
+    pub fn inject_scale_flip(&mut self, brow: usize, bcol: usize, bit: u32) {
+        let t = brow * self.packed.bcols + bcol;
+        self.packed.scales[t] = (self.packed.scales[t] as u8 ^ (1u8 << bit)) as i8;
+    }
+
+    /// Checksum sweep: `Ok` when every block still matches its recorded
+    /// sum, else [`ChaosError::BlockCorrupt`] naming the exact site.
+    pub fn verify(&self) -> Result<(), ChaosError> {
+        match self.packed.verify_block_checksums(&self.recorded) {
+            Ok(()) => Ok(()),
+            Err(BlockCorruption::Block { brow, bcol }) => {
+                Err(ChaosError::BlockCorrupt { layer: self.layer, brow, bcol })
+            }
+            Err(BlockCorruption::ShapeMismatch { recorded, blocks }) => Err(ChaosError::Plan {
+                reason: format!(
+                    "layer {}: recorded {recorded} checksums for {blocks} blocks",
+                    self.layer
+                ),
+            }),
+        }
+    }
+
+    /// Re-quantize from the FP32 master, verify every block checksum
+    /// reproduces, and prove the rebuilt image bit-identical to the
+    /// pristine one. fq∘fq == fq makes this exact — recovery is a
+    /// *proof*, not a best effort.
+    pub fn recover(&mut self) -> Result<FaultOutcome, ChaosError> {
+        self.packed = PackedTensor::quantize_pack(&self.master, self.format);
+        self.verify()?;
+        let site = format!("layer {} ({:?} packed image)", self.layer, self.format);
+        let proof = prove_bit_identical(&site, &packed_image(&self.packed), &self.pristine)?;
+        Ok(FaultOutcome::Recovered { site, proof })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mx::ALL_ELEMENT_FORMATS;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn flip_detect_recover_is_bit_exact_for_every_format() {
+        let mut rng = Pcg64::new(0x5EED);
+        for (layer, &fmt) in ALL_ELEMENT_FORMATS.iter().enumerate() {
+            let master = Mat::from_fn(17, 11, |_, _| rng.wide_f32());
+            let mut g = GuardedTensor::quantize(layer, &master, fmt);
+            g.verify().expect("pristine tensor verifies");
+
+            let (brow, bcol) = (
+                rng.below(g.packed().brows as u64) as usize,
+                rng.below(g.packed().bcols as u64) as usize,
+            );
+            g.inject_lane_flip(brow, bcol, rng.below(8) as usize, rng.below(63) as u32);
+            assert_eq!(
+                g.verify(),
+                Err(ChaosError::BlockCorrupt { layer, brow, bcol }),
+                "{fmt:?} lane flip must name its exact site"
+            );
+
+            let outcome = g.recover().expect("recovery is bit-exact");
+            assert!(matches!(outcome, FaultOutcome::Recovered { .. }), "{fmt:?}");
+            g.verify().expect("recovered tensor verifies");
+
+            // the scale byte is the high-blast-radius fault: same contract
+            g.inject_scale_flip(brow, bcol, rng.below(8) as u32);
+            assert_eq!(g.verify(), Err(ChaosError::BlockCorrupt { layer, brow, bcol }), "{fmt:?}");
+            let outcome = g.recover().expect("scale recovery is bit-exact");
+            assert_eq!(outcome.site(), format!("layer {layer} ({fmt:?} packed image)"));
+        }
+    }
+
+    #[test]
+    fn packed_image_covers_every_lane_and_scale_byte() {
+        let mut rng = Pcg64::new(9);
+        let master = Mat::from_fn(9, 9, |_, _| rng.wide_f32());
+        let p = PackedTensor::quantize_pack(&master, ElementFormat::E4M3);
+        let img = packed_image(&p);
+        assert_eq!(img.len(), p.storage_bytes());
+        assert_eq!(img.len(), p.lanes.len() * 8 + p.scales.len());
+    }
+}

@@ -1,0 +1,341 @@
+//! Deterministic fault injection: detect, recover, and prove
+//! bit-identity under hostile conditions (DESIGN.md §13).
+//!
+//! The paper's edge-training story assumes robots running unattended in
+//! the field, where flipped bits in packed MX codes, torn shard writes,
+//! and mid-step worker crashes are facts of life — and the
+//! shared-exponent encoding makes a single corrupted E8M0 scale byte
+//! catastrophic for a whole 8×8 block. This module turns the repo's
+//! bit-identity test culture into a resilience story, with seams at
+//! three layers:
+//!
+//! * **memory** ([`memory`]) — bit flips in [`crate::mx::packed::PackedTensor`]
+//!   code lanes and per-block scale bytes, detected by per-block FNV-1a
+//!   checksums ([`crate::mx::packed::PackedTensor::block_checksums`])
+//!   and recovered by re-quantizing the afflicted layer from its FP32
+//!   master — bitwise equal to a never-corrupted run, since fq∘fq == fq.
+//! * **storage** ([`storage`]) — truncated shards, flipped chunk bytes,
+//!   and a crashed lock-holder's stale lock, detected by the store's
+//!   existing `BadIndex`/`ChecksumMismatch` paths and recovered by
+//!   re-reading the previous committed shard generation (appends are
+//!   log-structured — the old index survives as dead bytes) or by the
+//!   staleness takeover in [`crate::store::StoreLock`].
+//! * **executor** — a worker "crash" mid-quantum and a session panic,
+//!   injected by the serving executor's plan-gated seam
+//!   ([`crate::serve::ServeConfig`]), recovered by re-admitting the
+//!   session from its last checkpoint with `ServeStats.recovered`
+//!   accounting.
+//!
+//! **The contract:** every fault class ends in exactly one of two
+//! outcomes — [`FaultOutcome::Detected`] (a structured error naming the
+//! fault site) or [`FaultOutcome::Recovered`] (carrying a
+//! [`BitIdentity`] proof, constructible only through
+//! [`prove_bit_identical`], that the recovered state equals the
+//! fault-free twin byte for byte). There is no third variant: silent
+//! corruption is unrepresentable in the type.
+//!
+//! Determinism: a [`FaultPlan`] is seeded; the same plan injects the
+//! same faults at the same sites, so every chaos test (and the CLI
+//! drill, `mxscale fleet --chaos`) replays exactly. All `inject_*`
+//! seams are plan-gated and exercised from `rust/tests/` — mxlint rule
+//! L9 pins both properties.
+
+#![forbid(unsafe_code)]
+
+pub mod drill;
+pub mod memory;
+pub mod storage;
+
+pub use drill::{run_chaos_drill, DrillRecord};
+pub use memory::GuardedTensor;
+pub use storage::{
+    inject_chunk_flip, inject_shard_truncate, inject_stale_lock, recover_generations,
+    ShardGeneration,
+};
+
+use crate::store::StoreError;
+use crate::util::bytes::fnv1a64;
+
+/// Seed a [`FaultPlan`] uses when the CLI spec names none.
+pub const DEFAULT_CHAOS_SEED: u64 = 0xC0FFEE;
+
+/// The three injection layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultClass {
+    /// Bit flips in live packed MX tensors (code lanes, scale bytes).
+    Memory,
+    /// Torn shard appends, corrupt chunk bytes, stale writer locks.
+    Storage,
+    /// Worker crashes and session panics mid-quantum.
+    Executor,
+}
+
+impl FaultClass {
+    /// Canonical CLI spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultClass::Memory => "mem",
+            FaultClass::Storage => "storage",
+            FaultClass::Executor => "exec",
+        }
+    }
+}
+
+/// Which executor fault a plan assigns to one session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecFault {
+    /// The worker loses the in-memory session mid-quantum (no unwind).
+    WorkerCrash,
+    /// The session panics; the worker catches the unwind.
+    SessionPanic,
+}
+
+/// A seeded, deterministic fault plan: which layers to attack and the
+/// seed every site/trigger choice derives from. The same plan replays
+/// the same faults — chaos runs are as reproducible as everything else
+/// in this repo.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed for every site/trigger decision the plan makes.
+    pub seed: u64,
+    classes: Vec<FaultClass>,
+}
+
+impl FaultPlan {
+    /// A plan covering `classes` (deduplicated, order-insensitive).
+    pub fn new(classes: &[FaultClass], seed: u64) -> FaultPlan {
+        let mut classes = classes.to_vec();
+        classes.sort();
+        classes.dedup();
+        FaultPlan { seed, classes }
+    }
+
+    /// A plan covering every layer.
+    pub fn all(seed: u64) -> FaultPlan {
+        FaultPlan::new(&[FaultClass::Memory, FaultClass::Storage, FaultClass::Executor], seed)
+    }
+
+    /// Parse a CLI spec: comma-separated classes (`mem`, `storage`,
+    /// `exec`, or `all`), optionally `@seed` (decimal or `0x` hex).
+    /// `None` on anything else — the CLI folds that into a structured
+    /// flag error.
+    pub fn parse(spec: &str) -> Option<FaultPlan> {
+        let (classes_part, seed) = match spec.split_once('@') {
+            Some((c, s)) => {
+                let seed = match s.strip_prefix("0x") {
+                    Some(hex) => u64::from_str_radix(hex, 16).ok()?,
+                    None => s.parse::<u64>().ok()?,
+                };
+                (c, seed)
+            }
+            None => (spec, DEFAULT_CHAOS_SEED),
+        };
+        let mut classes = Vec::new();
+        for part in classes_part.split(',') {
+            match part {
+                "mem" | "memory" => classes.push(FaultClass::Memory),
+                "storage" | "store" => classes.push(FaultClass::Storage),
+                "exec" | "executor" => classes.push(FaultClass::Executor),
+                "all" => {
+                    classes.extend([FaultClass::Memory, FaultClass::Storage, FaultClass::Executor])
+                }
+                _ => return None,
+            }
+        }
+        if classes.is_empty() {
+            return None;
+        }
+        Some(FaultPlan::new(&classes, seed))
+    }
+
+    /// Canonical spelling; `FaultPlan::parse(plan.name())` round-trips.
+    pub fn name(&self) -> String {
+        let classes: Vec<&str> = self.classes.iter().map(|c| c.name()).collect();
+        format!("{}@{}", classes.join(","), self.seed)
+    }
+
+    /// Whether this plan attacks `class`.
+    pub fn covers(&self, class: FaultClass) -> bool {
+        self.classes.contains(&class)
+    }
+
+    /// The executor fault (if any) this plan assigns to session `id`.
+    /// Deterministic in (seed, id); roughly half of all ids are spared,
+    /// a quarter crash, a quarter panic.
+    pub fn executor_fault(&self, id: &str) -> Option<ExecFault> {
+        if !self.covers(FaultClass::Executor) {
+            return None;
+        }
+        match (fnv1a64(id.as_bytes()) ^ self.seed) & 3 {
+            0 => Some(ExecFault::WorkerCrash),
+            1 => Some(ExecFault::SessionPanic),
+            _ => None,
+        }
+    }
+}
+
+/// Structured chaos failure: every variant names the exact fault site.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChaosError {
+    /// A packed block failed its checksum (memory-layer detection).
+    BlockCorrupt { layer: usize, brow: usize, bcol: usize },
+    /// A storage operation surfaced a structured store error.
+    Store { object: String, source: StoreError },
+    /// An executor-layer session fault could not be recovered.
+    Session { id: String, reason: String },
+    /// A claimed recovery failed its bit-identity proof — the one
+    /// outcome the chaos contract exists to make loud.
+    NotBitIdentical { site: String, first_diff: usize },
+    /// The plan or drill itself is misconfigured.
+    Plan { reason: String },
+}
+
+impl std::fmt::Display for ChaosError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChaosError::BlockCorrupt { layer, brow, bcol } => {
+                write!(f, "layer {layer} packed block ({brow}, {bcol}) fails its checksum")
+            }
+            ChaosError::Store { object, source } => {
+                write!(f, "storage fault in `{object}`: {source}")
+            }
+            ChaosError::Session { id, reason } => {
+                write!(f, "session `{id}` fault not recovered: {reason}")
+            }
+            ChaosError::NotBitIdentical { site, first_diff } => {
+                write!(f, "recovery at {site} is NOT bit-identical (first diff at byte {first_diff})")
+            }
+            ChaosError::Plan { reason } => write!(f, "bad fault plan: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for ChaosError {}
+
+/// Proof that a recovery reproduced the fault-free bytes exactly. The
+/// field is private: the only way to obtain one is
+/// [`prove_bit_identical`], which compares every byte — a
+/// [`FaultOutcome::Recovered`] therefore cannot be fabricated around a
+/// lossy repair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BitIdentity {
+    bytes: usize,
+}
+
+impl BitIdentity {
+    /// How many bytes the proof compared.
+    pub fn bytes_compared(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// Compare a recovered byte image against its fault-free reference.
+/// Equal → a [`BitIdentity`] proof; any difference (length or content)
+/// → [`ChaosError::NotBitIdentical`] naming the first diverging byte.
+pub fn prove_bit_identical(
+    site: &str,
+    recovered: &[u8],
+    reference: &[u8],
+) -> Result<BitIdentity, ChaosError> {
+    let first_diff = recovered
+        .iter()
+        .zip(reference.iter())
+        .position(|(a, b)| a != b)
+        .or_else(|| (recovered.len() != reference.len()).then(|| recovered.len().min(reference.len())));
+    match first_diff {
+        None => Ok(BitIdentity { bytes: recovered.len() }),
+        Some(at) => Err(ChaosError::NotBitIdentical { site: site.to_string(), first_diff: at }),
+    }
+}
+
+/// How one injected fault ended. Exactly two variants — a structured
+/// detection naming the site, or a proven bit-identical recovery —
+/// so "silently wrong" has no representation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultOutcome {
+    /// The fault was detected and surfaced as a structured error.
+    Detected { site: String, error: String },
+    /// The fault was repaired; `proof` certifies the repaired state
+    /// equals the fault-free twin byte for byte.
+    Recovered { site: String, proof: BitIdentity },
+}
+
+impl FaultOutcome {
+    /// The fault site, whichever way the fault ended.
+    pub fn site(&self) -> &str {
+        match self {
+            FaultOutcome::Detected { site, .. } | FaultOutcome::Recovered { site, .. } => site,
+        }
+    }
+
+    /// One line for the CLI drill / CI grep.
+    pub fn describe(&self) -> String {
+        match self {
+            FaultOutcome::Detected { site, error } => format!("detected at {site}: {error}"),
+            FaultOutcome::Recovered { site, proof } => {
+                format!("recovered at {site} ({} bytes proven identical)", proof.bytes_compared())
+            }
+        }
+    }
+}
+
+/// Plan-gated panic seam: the serving executor calls this (under
+/// `catch_unwind`) only for sessions a [`FaultPlan`] marked
+/// [`ExecFault::SessionPanic`]. Never reached without a plan.
+pub fn inject_panic(id: &str) -> ! {
+    panic!("chaos: injected panic in session `{id}`")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parse_round_trips_and_rejects_garbage() {
+        let p = FaultPlan::parse("mem,exec@42").unwrap();
+        assert_eq!(p.seed, 42);
+        assert!(p.covers(FaultClass::Memory) && p.covers(FaultClass::Executor));
+        assert!(!p.covers(FaultClass::Storage));
+        assert_eq!(FaultPlan::parse(&p.name()), Some(p.clone()));
+
+        let all = FaultPlan::parse("all@0xBEEF").unwrap();
+        assert_eq!(all.seed, 0xBEEF);
+        assert_eq!(all, FaultPlan::all(0xBEEF));
+        assert_eq!(FaultPlan::parse("storage").unwrap().seed, DEFAULT_CHAOS_SEED);
+
+        for bad in ["", "mem,", "disk", "mem@", "mem@0x", "mem@-1", "@7"] {
+            assert_eq!(FaultPlan::parse(bad), None, "{bad}");
+        }
+    }
+
+    #[test]
+    fn executor_faults_are_deterministic_and_gated_by_class() {
+        let plan = FaultPlan::all(7);
+        for i in 0..64 {
+            let id = format!("tenant-{i:05}");
+            assert_eq!(plan.executor_fault(&id), plan.executor_fault(&id), "stable");
+        }
+        let kinds: Vec<_> = (0..64)
+            .filter_map(|i| plan.executor_fault(&format!("tenant-{i:05}")))
+            .collect();
+        assert!(kinds.contains(&ExecFault::WorkerCrash));
+        assert!(kinds.contains(&ExecFault::SessionPanic));
+        assert!(kinds.len() < 64, "some sessions must be spared");
+        let no_exec = FaultPlan::new(&[FaultClass::Memory], 7);
+        assert_eq!(no_exec.executor_fault("tenant-00000"), None);
+    }
+
+    #[test]
+    fn bit_identity_proof_is_exact() {
+        let proof = prove_bit_identical("site", b"abc", b"abc").unwrap();
+        assert_eq!(proof.bytes_compared(), 3);
+        let err = prove_bit_identical("site", b"abc", b"abd").unwrap_err();
+        assert_eq!(err, ChaosError::NotBitIdentical { site: "site".into(), first_diff: 2 });
+        let err = prove_bit_identical("site", b"ab", b"abc").unwrap_err();
+        assert_eq!(err, ChaosError::NotBitIdentical { site: "site".into(), first_diff: 2 });
+        // outcomes always name their site
+        let o = FaultOutcome::Recovered { site: "layer 0".into(), proof };
+        assert_eq!(o.site(), "layer 0");
+        assert!(o.describe().contains("recovered"));
+    }
+}

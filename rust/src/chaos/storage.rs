@@ -1,0 +1,307 @@
+//! Storage-layer chaos: torn appends, corrupt chunks, stale locks —
+//! and generation-level recovery.
+//!
+//! The injection seams forge the three storage faults a crashed or
+//! byte-rotting writer leaves behind:
+//!
+//! * [`inject_shard_truncate`] — a torn append: the writer died after
+//!   some of its bytes landed but before the trailer (the commit point)
+//!   was complete.
+//! * [`inject_chunk_flip`] — bit rot inside an already-committed chunk
+//!   or index region.
+//! * [`inject_stale_lock`] — the writer died *between* `try_create`
+//!   and release, leaving its advisory lock behind with an old birth
+//!   stamp.
+//!
+//! Detection needs nothing new: `read_index` / `read_chunk` already
+//! surface every structural fault as [`StoreError::BadIndex`] /
+//! [`StoreError::ChecksumMismatch`], and the stale lock is broken by
+//! [`crate::store::StoreLock::acquire_with_staleness`].
+//!
+//! Recovery exploits the layout: appends are **log-structured**, so a
+//! shard damaged at its tail still contains every previous generation's
+//! index as dead-but-intact bytes. [`recover_generations`] scans
+//! backward from EOF for valid commit points (trailer parses, index
+//! region sits exactly below it, index checksum matches, every entry's
+//! chunk range is in bounds) and returns them newest-first;
+//! [`assemble_from_generation`] then rebuilds a checkpoint from an
+//! older generation's entries, chunk checksums still enforced — so the
+//! recovered checkpoint is bitwise the one that generation committed,
+//! never a guess.
+
+#![forbid(unsafe_code)]
+
+use std::sync::Arc;
+use std::time::{Duration, SystemTime};
+
+use crate::store::shard::{read_chunk, IndexEntry, ShardTrailer, ENTRY_BYTES, TRAILER_BYTES};
+use crate::store::{Storage, StoreError};
+use crate::trainer::checkpoint::Checkpoint;
+use crate::util::bytes::{fnv1a64, ByteReader};
+
+use super::ChaosError;
+
+fn store_fault(object: &str, source: StoreError) -> ChaosError {
+    ChaosError::Store { object: object.to_string(), source }
+}
+
+/// Tear `shard` down to its first `keep` bytes — the image a writer
+/// that crashed mid-append leaves behind. Plan-gated: only chaos
+/// drills and tests call this.
+pub fn inject_shard_truncate(
+    store: &dyn Storage,
+    shard: &str,
+    keep: usize,
+) -> Result<(), ChaosError> {
+    let whole = store.get(shard).map_err(|e| store_fault(shard, e))?;
+    let keep = keep.min(whole.len());
+    store.put(shard, &whole[..keep]).map_err(|e| store_fault(shard, e))
+}
+
+/// Flip one bit of one byte of `object` — bit rot in a committed
+/// region. Errors (structured, not panicking) when `offset` is out of
+/// bounds. Plan-gated like [`inject_shard_truncate`].
+pub fn inject_chunk_flip(
+    store: &dyn Storage,
+    object: &str,
+    offset: usize,
+    bit: u8,
+) -> Result<(), ChaosError> {
+    let mut bytes = store.get(object).map_err(|e| store_fault(object, e))?;
+    if offset >= bytes.len() {
+        return Err(ChaosError::Plan {
+            reason: format!(
+                "chunk flip at byte {offset} of `{object}` ({} bytes)",
+                bytes.len()
+            ),
+        });
+    }
+    bytes[offset] ^= 1u8 << (bit % u8::BITS as u8);
+    store.put(object, &bytes).map_err(|e| store_fault(object, e))
+}
+
+/// Forge the lock a writer that crashed `age` ago left on `shard` —
+/// birth-stamped in the past so the staleness takeover can prove it
+/// breaks crashed locks without waiting out real wall-clock time.
+pub fn inject_stale_lock(
+    store: &dyn Storage,
+    shard: &str,
+    age: Duration,
+) -> Result<(), ChaosError> {
+    let key = format!("{shard}.lock");
+    let birth = SystemTime::now() - age;
+    store.erase(&key).map_err(|e| store_fault(&key, e))?;
+    let bytes = crate::store::lock::stamped_lock_bytes(birth);
+    if !store.try_create(&key, &bytes).map_err(|e| store_fault(&key, e))? {
+        return Err(ChaosError::Plan { reason: format!("lock `{key}` reappeared mid-injection") });
+    }
+    Ok(())
+}
+
+/// One committed shard generation found by the backward scan: the byte
+/// offset just past its trailer and the index entries it committed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardGeneration {
+    /// End offset (exclusive) of this generation's trailer.
+    pub end: u64,
+    /// The generation's full index (sorted, deduped — as committed).
+    pub entries: Vec<IndexEntry>,
+}
+
+/// Try to parse a committed generation whose trailer ends exactly at
+/// `end` within `bytes`. Every check the live reader makes is repeated
+/// here against the historical region.
+fn generation_at(bytes: &[u8], end: usize) -> Option<ShardGeneration> {
+    if end < TRAILER_BYTES {
+        return None;
+    }
+    let trailer = ShardTrailer::read_bytes(&mut ByteReader::new(&bytes[end - TRAILER_BYTES..end]))
+        .ok()?;
+    let index_len = (trailer.n_entries as usize).checked_mul(ENTRY_BYTES)?;
+    let index_off = usize::try_from(trailer.index_off).ok()?;
+    if index_off.checked_add(index_len)? != end - TRAILER_BYTES {
+        return None;
+    }
+    let index_bytes = &bytes[index_off..index_off + index_len];
+    if fnv1a64(index_bytes) != trailer.index_checksum {
+        return None;
+    }
+    let mut r = ByteReader::new(index_bytes);
+    let mut entries = Vec::with_capacity(trailer.n_entries as usize);
+    for _ in 0..trailer.n_entries {
+        let e = IndexEntry::read_bytes(&mut r).ok()?;
+        // a committed generation's chunks all live below its index
+        let chunk_end = e.offset.checked_add(e.len)?;
+        if chunk_end > trailer.index_off {
+            return None;
+        }
+        entries.push(e);
+    }
+    Some(ShardGeneration { end: end as u64, entries })
+}
+
+/// Scan `shard` backward from EOF for committed generations,
+/// newest-first. The scan walks candidate trailer ends one byte at a
+/// time (a torn append can shear at any offset), validating each
+/// candidate exactly as the live reader would; after a hit it jumps to
+/// that generation's index offset, since anything between belongs to
+/// the generation just found. An empty result means no generation ever
+/// committed (or the damage reached all of them).
+pub fn recover_generations(
+    store: &dyn Storage,
+    shard: &str,
+) -> Result<Vec<ShardGeneration>, ChaosError> {
+    let bytes = store.get(shard).map_err(|e| store_fault(shard, e))?;
+    let mut generations = Vec::new();
+    let mut end = bytes.len();
+    while end >= TRAILER_BYTES {
+        match generation_at(&bytes, end) {
+            Some(generation) => {
+                // anything between this generation's index offset and
+                // its trailer belongs to *this* generation; the previous
+                // trailer ends at or below the index offset (appends
+                // start at the prior EOF), so resume the scan there
+                end -= TRAILER_BYTES + generation.entries.len() * ENTRY_BYTES;
+                generations.push(generation);
+            }
+            None => end -= 1,
+        }
+    }
+    Ok(generations)
+}
+
+/// Rebuild session `id`'s checkpoint from one recovered generation's
+/// entries, chunk checksums still enforced — the result is bitwise the
+/// checkpoint that generation committed. Chunks named by the index but
+/// damaged on disk surface as structured store errors, never as a
+/// silently-wrong checkpoint.
+pub fn assemble_from_generation(
+    store: &dyn Storage,
+    shard: &str,
+    generation: &ShardGeneration,
+    id: &str,
+) -> Result<Checkpoint, ChaosError> {
+    crate::store::chunk::assemble_checkpoint(|leaf| {
+        let key = format!("{id}/{leaf}");
+        let entry = generation
+            .entries
+            .iter()
+            .find(|e| e.key == key)
+            .ok_or(StoreError::MissingChunk { key: key.clone() })?;
+        store.get_range(shard, entry.offset, entry.len).and_then(|bytes| {
+            if fnv1a64(&bytes) != entry.checksum {
+                return Err(StoreError::ChecksumMismatch { key: key.clone() });
+            }
+            Ok(bytes)
+        })
+    })
+    .map_err(|e| store_fault(shard, e))
+}
+
+/// Convenience for drills: read one chunk through the *live* index
+/// path, mapping store errors into the chaos taxonomy.
+pub fn read_live_chunk(
+    store: &dyn Storage,
+    shard: &str,
+    key: &str,
+) -> Result<Vec<u8>, ChaosError> {
+    let index = crate::store::shard::read_index(store, shard).map_err(|e| store_fault(shard, e))?;
+    let entry = index
+        .iter()
+        .find(|e| e.key == key)
+        .ok_or_else(|| store_fault(shard, StoreError::MissingChunk { key: key.to_string() }))?;
+    read_chunk(store, shard, entry).map_err(|e| store_fault(shard, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::shard::append_chunks;
+    use crate::store::MemoryStore;
+
+    fn mem() -> Arc<dyn Storage> {
+        Arc::new(MemoryStore::new())
+    }
+
+    const T: Duration = Duration::from_secs(2);
+
+    fn two_generations(store: &Arc<dyn Storage>) -> (usize, usize) {
+        let gen1 = vec![("r/one".to_string(), vec![1u8; 40]), ("r/two".to_string(), vec![2u8; 9])];
+        append_chunks(store, "s.mxshard", &gen1, T).unwrap();
+        let gen1_end = store.size("s.mxshard").unwrap() as usize;
+        let gen2 = vec![("r/two".to_string(), vec![3u8; 21])];
+        append_chunks(store, "s.mxshard", &gen2, T).unwrap();
+        (gen1_end, store.size("s.mxshard").unwrap() as usize)
+    }
+
+    #[test]
+    fn backward_scan_finds_every_committed_generation() {
+        let store = mem();
+        let (gen1_end, gen2_end) = two_generations(&store);
+        let gens = recover_generations(store.as_ref(), "s.mxshard").unwrap();
+        assert_eq!(gens.len(), 2, "both commit points found");
+        assert_eq!(gens[0].end as usize, gen2_end, "newest first");
+        assert_eq!(gens[1].end as usize, gen1_end);
+        assert_eq!(gens[0].entries.len(), 2, "gen2 merged index");
+        assert_eq!(gens[1].entries.len(), 2);
+        let two2 = gens[0].entries.iter().find(|e| e.key == "r/two").unwrap();
+        let two1 = gens[1].entries.iter().find(|e| e.key == "r/two").unwrap();
+        assert_eq!(two2.len, 21, "newest generation sees the rewrite");
+        assert_eq!(two1.len, 9, "old generation still names the original bytes");
+    }
+
+    #[test]
+    fn torn_append_recovers_the_previous_generation() {
+        let store = mem();
+        let (gen1_end, gen2_end) = two_generations(&store);
+        // shear the second append at every byte between the commits:
+        // the live reader must fail structured, the scan must still
+        // find generation 1, and its chunks must read back bitwise
+        for cut in [gen1_end + 1, (gen1_end + gen2_end) / 2, gen2_end - 1] {
+            store.put("torn.mxshard", &store.get("s.mxshard").unwrap()[..cut]).unwrap();
+            let live = crate::store::shard::read_index(store.as_ref(), "torn.mxshard");
+            assert!(matches!(live, Err(StoreError::BadIndex { .. })), "cut {cut}: {live:?}");
+            let gens = recover_generations(store.as_ref(), "torn.mxshard").unwrap();
+            assert_eq!(gens[0].end as usize, gen1_end, "cut {cut}");
+            let one = gens[0].entries.iter().find(|e| e.key == "r/one").unwrap();
+            let bytes = store.get_range("torn.mxshard", one.offset, one.len).unwrap();
+            assert_eq!(fnv1a64(&bytes), one.checksum, "cut {cut}: gen1 chunk intact");
+        }
+    }
+
+    #[test]
+    fn injection_seams_are_bounded_and_structured() {
+        let store = mem();
+        two_generations(&store);
+        let size = store.size("s.mxshard").unwrap() as usize;
+        let err = inject_chunk_flip(store.as_ref(), "s.mxshard", size, 0).unwrap_err();
+        assert!(matches!(err, ChaosError::Plan { .. }), "{err}");
+        let err = inject_shard_truncate(store.as_ref(), "missing.mxshard", 0).unwrap_err();
+        assert!(matches!(err, ChaosError::Store { .. }), "{err}");
+
+        inject_chunk_flip(store.as_ref(), "s.mxshard", 3, 7).unwrap();
+        let err = read_live_chunk(store.as_ref(), "s.mxshard", "r/one").unwrap_err();
+        assert!(
+            matches!(
+                &err,
+                ChaosError::Store { source: StoreError::ChecksumMismatch { key }, .. }
+                    if key == "r/one"
+            ),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn stale_lock_injection_parks_strict_writers_but_not_takeover() {
+        let store = mem();
+        two_generations(&store);
+        inject_stale_lock(store.as_ref(), "s.mxshard", Duration::from_secs(3600)).unwrap();
+        // a strict append (no takeover) would park; the production path
+        // (append_chunks) uses the staleness-aware acquire and proceeds
+        let gen3 = vec![("r/three".to_string(), vec![7u8; 4])];
+        append_chunks(&store, "s.mxshard", &gen3, Duration::from_millis(200)).unwrap();
+        let index = crate::store::shard::read_index(store.as_ref(), "s.mxshard").unwrap();
+        assert!(index.iter().any(|e| e.key == "r/three"), "append proceeded past the stale lock");
+        assert!(!store.exists("s.mxshard.lock").unwrap(), "fresh lock released");
+    }
+}

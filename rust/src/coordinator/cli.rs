@@ -18,6 +18,7 @@
 #![forbid(unsafe_code)]
 
 use crate::backend::BackendKind;
+use crate::chaos::{FaultClass, FaultOutcome, FaultPlan};
 use crate::coordinator::experiments;
 use crate::coordinator::report::{save_csv, save_hw_report, save_json, Table};
 use crate::fleet::{run_fleet, FleetSpec, StoreSpec};
@@ -129,6 +130,14 @@ impl FromArg for StoreLayout {
     }
 }
 
+impl FromArg for FaultPlan {
+    const FLAG: &'static str = "chaos";
+    const ACCEPTED: &'static str = "<mem|storage|exec|all>[,<class>...][@seed] (DESIGN.md \u{a7}13)";
+    fn from_arg(s: &str) -> Result<Self, String> {
+        FaultPlan::parse(s).ok_or_else(|| "unrecognized fault plan".to_string())
+    }
+}
+
 /// Parse the optional `--<T::FLAG>` flag into its value type, shaping
 /// failures into the uniform message: flag + offending value +
 /// accepted values.
@@ -176,11 +185,12 @@ USAGE:
                 [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
                 [--energy-budget UJ] [--policy <spec>] [--seed N]   # continual learning
                 [--store plain|sharded|sharded:N] [--store-dir DIR] # checkpoint store
+                [--chaos <mem|storage|exec|all>[,...][@seed]]       # fault-injection drill
   mxscale serve --load [--sessions N] [--steps N] [--quantum N] [--capacity N]
                 [--workers N] [--max-parked N] [--burst-every N] [--twin-every N]
                 [--lease N] [--store plain|sharded|sharded:N] [--store-dir DIR]
                 [--scheme <s>[,<s>...]] [--backend fast|hw|packed] [--hidden N]
-                [--seed N]      # open-stream multi-tenant serving (BENCH_serve.json)
+                [--seed N] [--chaos <classes>[@seed]]   # open-stream serving (BENCH_serve.json)
   mxscale quantize --format <fmt> [--rows N] [--cols N]   # quantization demo + stats
   mxscale info                                            # architecture summary
 
@@ -229,6 +239,17 @@ USAGE:
   (p50/p99 step latency, steps/s, shed counts, twin-check results) and
   exits nonzero if any session is lost, duplicated, or diverges from
   its standalone twin.
+
+  --chaos injects deterministic faults (DESIGN.md §13). `fleet --chaos
+  <plan>` runs the self-contained drill: seeded bit flips in packed MX
+  blocks, torn shard appends, chunk bit rot, a crashed writer's stale
+  lock — each printed as a structured detection naming its exact site
+  or a recovery *proven* bit-identical to the fault-free twin. `serve
+  --chaos <plan>` attacks the live serving run: planned sessions are
+  checkpointed at admission, crashed or panicked mid-quantum, then
+  re-admitted from the checkpoint (requires --store for exec faults);
+  the twin check must still come back 100% bitwise. Same plan, same
+  faults — chaos runs replay exactly.
 ";
 
 /// Entry point used by `main.rs`. Returns a process exit code.
@@ -367,7 +388,47 @@ fn cmd_repro(args: &Args) -> i32 {
     }
 }
 
+/// `mxscale fleet --chaos <plan>`: run the deterministic
+/// fault-injection drill — one line per injected fault, each ending in
+/// a structured detection or a proven bit-identical recovery. CI greps
+/// the lines; any third ending exits nonzero.
+fn cmd_chaos_drill(plan: &FaultPlan) -> i32 {
+    println!("chaos drill: plan {} (deterministic; same plan, same faults)...", plan.name());
+    match crate::chaos::run_chaos_drill(plan) {
+        Ok(records) => {
+            for r in &records {
+                println!("{}", r.describe());
+            }
+            let recovered = records
+                .iter()
+                .filter(|r| matches!(r.outcome, FaultOutcome::Recovered { .. }))
+                .count();
+            println!(
+                "chaos drill: {} faults injected, {} detected structured, \
+                 {} recovered bit-identically",
+                records.len(),
+                records.len() - recovered,
+                recovered
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("chaos drill failed: {e}");
+            1
+        }
+    }
+}
+
 fn cmd_fleet(args: &Args) -> i32 {
+    // --chaos short-circuits into the fault-injection drill
+    match flag_opt::<FaultPlan>(args) {
+        Ok(Some(plan)) => return cmd_chaos_drill(&plan),
+        Ok(None) => {}
+        Err(e) => {
+            eprintln!("{e}");
+            return 1;
+        }
+    }
     let d = FleetSpec::default();
     let mut spec = FleetSpec {
         sessions: args.usize_or("sessions", d.sessions),
@@ -644,6 +705,9 @@ fn cmd_serve(args: &Args) -> i32 {
             let dir = args.get("store-dir").unwrap_or("results/serve_store");
             spec.store = Some(StoreSpec { dir: dir.into(), layout });
         }
+        if let Some(plan) = flag_opt::<FaultPlan>(args)? {
+            spec.chaos = Some(plan);
+        }
         Ok(())
     })();
     if let Err(e) = flags {
@@ -652,6 +716,14 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     if spec.lease_quanta > 0 && spec.store.is_none() {
         eprintln!("serve: --lease requires --store (eviction checkpoints through the store)");
+        return 1;
+    }
+    if spec.chaos.as_ref().is_some_and(|p| p.covers(FaultClass::Executor)) && spec.store.is_none()
+    {
+        eprintln!(
+            "serve: --chaos with executor faults requires --store \
+             (recovery resumes from admission checkpoints)"
+        );
         return 1;
     }
     println!(
@@ -673,9 +745,9 @@ fn cmd_serve(args: &Args) -> i32 {
     let s = &out.stats;
     println!(
         "outcome: {} offered | {} admitted ({} re-admitted) | {} completed | {} shed | \
-         {} refused | {} failed | {} evicted",
+         {} refused | {} failed | {} evicted | {} chaos-recovered",
         s.offered, s.admitted, s.re_admitted, s.completed, s.shed_overloaded, s.refused,
-        s.failed, s.evicted
+        s.failed, s.evicted, s.recovered
     );
     println!(
         "latency: p50 {:.3} ms/step, p99 {:.3} ms/step over {} samples | {:.0} steps/s | \
@@ -896,6 +968,37 @@ mod tests {
     #[test]
     fn serve_requires_the_load_flag() {
         assert_eq!(run_cli(&argv("serve")), 1);
+    }
+
+    #[test]
+    fn fleet_chaos_flag_drills_and_rejects_bad_plans() {
+        assert_eq!(run_cli(&argv("fleet --chaos disk")), 1, "unknown fault class");
+        assert_eq!(run_cli(&argv("fleet --chaos mem@nope")), 1, "unparseable seed");
+        // the mem+storage drill is self-contained and fast; every fault
+        // must end detected-structured or recovered-bit-identically
+        assert_eq!(run_cli(&argv("fleet --chaos mem,storage@7")), 0);
+    }
+
+    #[test]
+    fn serve_chaos_requires_a_store_for_executor_faults() {
+        assert_eq!(run_cli(&argv("serve --load --sessions 4 --chaos exec")), 1);
+        assert_eq!(run_cli(&argv("serve --load --sessions 4 --chaos bogus")), 1);
+    }
+
+    #[test]
+    fn serve_chaos_load_recovers_with_clean_twins() {
+        let dir = std::env::temp_dir().join(format!("mxscale-cli-chaos-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        // every completed session twin-checked: injected crashes/panics
+        // must leave curves bitwise equal to the fault-free standalone
+        let cmd = format!(
+            "serve --load --sessions 6 --steps 4 --quantum 2 --capacity 6 --workers 2 \
+             --twin-every 1 --eval-every 2 --hidden 8 --episodes 1 --horizon 16 \
+             --store sharded:2 --store-dir {} --chaos exec@3",
+            dir.display()
+        );
+        assert_eq!(run_cli(&argv(&cmd)), 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -259,6 +259,35 @@ impl FleetSession {
         })
     }
 
+    /// Dissolve a *crashed* session into a resumable [`SessionSpec`]
+    /// **without saving anything**: the in-memory model, optimizer,
+    /// curves, and the live segment's hw ledger are gone — exactly what
+    /// a worker crash or a caught session panic costs. The returned
+    /// spec resumes from whatever checkpoint `store` already holds
+    /// under this id (the chaos admission checkpoint, or the last
+    /// eviction); the deterministic trainer then re-runs the lost steps
+    /// bit-identically, which is what lets the serving layer prove
+    /// recovered curves equal the fault-free twin's. If the store holds
+    /// no checkpoint, rebuilding the spec fails structured at
+    /// `build()` — the session is lost loudly, never silently.
+    pub fn crash_respec(self, store: &Arc<CheckpointStore>) -> SessionSpec {
+        SessionSpec {
+            id: self.id,
+            workload: self.workload,
+            dataset: self.session.dataset,
+            config: self.session.config,
+            budget: self.budget,
+            shifts: self.shifts,
+            policy: Some(self.policy),
+            store: Some(store.clone()),
+            priority: self.priority,
+            resume: true,
+            // the ledger restarts at the checkpoint: a crash loses the
+            // segment's accounting along with its steps
+            carried: None,
+        }
+    }
+
     /// The wrapped session (read access for reports).
     pub fn session(&self) -> &TrainSession {
         &self.session

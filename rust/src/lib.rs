@@ -49,6 +49,13 @@
 //!   runs them in quanta with checkpoint-on-evict through [`store`] —
 //!   every session bit-identical to a standalone run (`mxscale serve
 //!   --load`, `BENCH_serve.json`, DESIGN.md §12).
+//! * [`chaos`] — deterministic fault injection: a seeded [`chaos::FaultPlan`]
+//!   drives bit flips in packed MX blocks, torn shard appends, corrupt
+//!   chunks, stale writer locks, and mid-quantum worker crashes/panics,
+//!   with every fault ending in a [`chaos::FaultOutcome`] — a structured
+//!   error naming the exact site, or a recovery *proven* bit-identical
+//!   to the fault-free twin (`mxscale fleet --chaos`, `mxscale serve
+//!   --chaos`, `tests/chaos.rs`, DESIGN.md §13).
 //! * [`backend`] — the pluggable `ExecBackend` seam between the trainer
 //!   and the hardware model: the fast buffer-reusing fake-quant path,
 //!   the bit-exact `GemmCore` path (accumulating a per-session
@@ -85,6 +92,7 @@
 
 pub mod arith;
 pub mod backend;
+pub mod chaos;
 pub mod coordinator;
 pub mod energy;
 pub mod fleet;

@@ -4,7 +4,7 @@
 //!
 //! The pipeline is: [`collect_sources`] walks `rust/src` and
 //! `rust/tests`, [`lex::lex`] turns each file into a token stream, and
-//! [`rules::run_all`] evaluates rules L1–L8 against them, honoring the
+//! [`rules::run_all`] evaluates rules L1–L9 against them, honoring the
 //! committed allowlist (`rust/lint.toml`) and byte-layout manifest
 //! (`rust/lint.manifest`). The `mxlint` binary (`src/bin/mxlint.rs`)
 //! adds `--json`, `--diff <rev>`, and `--update-manifest` on top.

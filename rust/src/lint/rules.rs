@@ -1,4 +1,4 @@
-//! The mxlint rule engine: invariant checks L1–L8 over lexed sources.
+//! The mxlint rule engine: invariant checks L1–L9 over lexed sources.
 //!
 //! Each rule is a pure function from token streams to [`Finding`]s, so
 //! the fixture tests in `rust/tests/lint.rs` can drive them with
@@ -787,6 +787,105 @@ pub fn l8(src: &[SourceFile], tests: &[SourceFile], allow: &Allow) -> Vec<Findin
     out
 }
 
+// ------------------------------------------------------------------ L9
+
+const L9_DIR: &str = "rust/src/chaos/";
+
+/// Does a `#[cfg(` attribute open within the 40 tokens before `kw`?
+fn has_cfg_attr(toks: &[Tok], kw: usize) -> bool {
+    let start = kw.saturating_sub(40);
+    toks[start..kw].windows(4).any(|w| {
+        is_punct(&w[0], "#")
+            && is_punct(&w[1], "[")
+            && is_ident(&w[2], "cfg")
+            && is_punct(&w[3], "(")
+    })
+}
+
+/// L9: chaos injection seams stay plan-gated and drilled. Every
+/// `fn inject_*` in the library must be referenced by name from
+/// `rust/tests/` — a seam no chaos test ever fires is unproven risk
+/// shipping in production builds — and must either live under
+/// `rust/src/chaos/` (the module that acts only behind a `FaultPlan`)
+/// or carry an explicit `#[cfg(...)]` gate. And any file outside
+/// `rust/src/chaos/` that references an `inject_*` seam must itself
+/// name `FaultPlan`, so no production path can fire a fault
+/// unconditionally (DESIGN.md §13).
+pub fn l9(src: &[SourceFile], tests: &[SourceFile], allow: &Allow) -> Vec<Finding> {
+    let mut test_idents: BTreeSet<&str> = BTreeSet::new();
+    for t in tests {
+        for tok in &t.lexed.toks {
+            if tok.kind == TokKind::Ident {
+                test_idents.insert(tok.text.as_str());
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for f in src.iter().filter(|f| f.rel.starts_with("rust/src/")) {
+        let toks = &f.lexed.toks;
+        let in_chaos = f.rel.starts_with(L9_DIR);
+        let plan_aware = toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "FaultPlan");
+        let mut declared: BTreeSet<String> = BTreeSet::new();
+        for fi in functions(toks) {
+            if !fi.name.starts_with("inject_") {
+                continue;
+            }
+            declared.insert(fi.name.clone());
+            if allowed(allow, "L9", &fi.name) {
+                continue;
+            }
+            if !test_idents.contains(fi.name.as_str()) {
+                out.push(Finding {
+                    rule: "L9",
+                    file: f.rel.clone(),
+                    line: fi.line,
+                    message: format!(
+                        "chaos seam `{}` is not referenced from any test in rust/tests/ — an \
+                         undrilled injection seam is unproven risk",
+                        fi.name
+                    ),
+                });
+            }
+            if !in_chaos && !has_cfg_attr(toks, fi.kw) {
+                out.push(Finding {
+                    rule: "L9",
+                    file: f.rel.clone(),
+                    line: fi.line,
+                    message: format!(
+                        "chaos seam `{}` declared outside {L9_DIR} without a #[cfg(...)] gate — \
+                         seams live in the plan-gated chaos module",
+                        fi.name
+                    ),
+                });
+            }
+        }
+        if in_chaos {
+            continue;
+        }
+        for t in toks.iter().filter(|t| t.kind == TokKind::Ident) {
+            if !t.text.starts_with("inject_")
+                || declared.contains(&t.text)
+                || allowed(allow, "L9", &t.text)
+            {
+                continue;
+            }
+            if !plan_aware {
+                out.push(Finding {
+                    rule: "L9",
+                    file: f.rel.clone(),
+                    line: t.line,
+                    message: format!(
+                        "`{}` referenced without `FaultPlan` anywhere in the file — injection \
+                         seams fire only behind a fault plan",
+                        t.text
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
 /// Run every rule and return findings sorted by (file, line, rule).
 pub fn run_all(
     src: &[SourceFile],
@@ -803,6 +902,7 @@ pub fn run_all(
     out.extend(l6(src, allow));
     out.extend(l7(src, allow));
     out.extend(l8(src, tests, allow));
+    out.extend(l9(src, tests, allow));
     out.sort_by(|a, b| {
         (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
     });

@@ -481,6 +481,80 @@ impl PackedTensor {
     pub fn storage_bytes(&self) -> usize {
         self.lanes.len() * std::mem::size_of::<u64>() + self.scales.len()
     }
+
+    /// FNV-1a checksum of one block: its lanes (little-endian) followed
+    /// by its scale byte, so a single flipped code bit *or* a corrupted
+    /// shared exponent changes the sum. This is the in-memory
+    /// fault-detection substrate of the chaos layer
+    /// ([`crate::chaos`]) — the same FNV-1a the shard index uses for
+    /// at-rest chunks, applied per live block.
+    pub fn block_checksum(&self, br: usize, bc: usize) -> u64 {
+        let mut bytes = Vec::with_capacity(SQ * std::mem::size_of::<u64>() + 1);
+        for lane in self.tile(br, bc) {
+            bytes.extend_from_slice(&lane.to_le_bytes());
+        }
+        bytes.push(self.scales[br * self.bcols + bc] as u8);
+        crate::util::bytes::fnv1a64(&bytes)
+    }
+
+    /// Per-block checksums in row-major block order. Optional and
+    /// in-memory only (never serialized — the at-rest image is already
+    /// covered by the store's chunk checksums); callers that want
+    /// detection record these after quantization and verify before use.
+    pub fn block_checksums(&self) -> Vec<u64> {
+        let mut sums = Vec::with_capacity(self.brows * self.bcols);
+        for br in 0..self.brows {
+            for bc in 0..self.bcols {
+                sums.push(self.block_checksum(br, bc));
+            }
+        }
+        sums
+    }
+
+    /// Verify this tensor against checksums recorded earlier. Returns
+    /// the `(brow, bcol)` of the first mismatching block — the exact
+    /// fault site — or `Err` on a shape mismatch disguised as `(0, 0)`
+    /// never: a recorded-length mismatch is its own error.
+    pub fn verify_block_checksums(&self, recorded: &[u64]) -> Result<(), BlockCorruption> {
+        if recorded.len() != self.brows * self.bcols {
+            return Err(BlockCorruption::ShapeMismatch {
+                recorded: recorded.len(),
+                blocks: self.brows * self.bcols,
+            });
+        }
+        for br in 0..self.brows {
+            for bc in 0..self.bcols {
+                if self.block_checksum(br, bc) != recorded[br * self.bcols + bc] {
+                    return Err(BlockCorruption::Block { brow: br, bcol: bc });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A failed [`PackedTensor::verify_block_checksums`]: either the first
+/// corrupt block's coordinates, or a recorded-checksum list that does
+/// not match the tensor's block grid at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockCorruption {
+    /// Block `(brow, bcol)` no longer matches its recorded checksum.
+    Block { brow: usize, bcol: usize },
+    /// The recorded list covers a different block count than the tensor.
+    ShapeMismatch { recorded: usize, blocks: usize },
+}
+
+impl std::fmt::Display for BlockCorruption {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BlockCorruption::Block { brow, bcol } => {
+                write!(f, "packed block ({brow}, {bcol}) fails its checksum")
+            }
+            BlockCorruption::ShapeMismatch { recorded, blocks } => {
+                write!(f, "{recorded} recorded checksums for {blocks} blocks")
+            }
+        }
+    }
 }
 
 /// Transpose one tile's lanes (rows become columns). 8-bit codes take
@@ -946,6 +1020,42 @@ mod tests {
                 let back = tile_transposed(&t, w);
                 assert_eq!(back, tile, "{fmt:?} involution");
             }
+        }
+    }
+
+    #[test]
+    fn block_checksums_pin_every_lane_bit_and_scale_byte() {
+        let mut rng = Pcg64::new(0xC45);
+        for fmt in ALL_ELEMENT_FORMATS {
+            let m = Mat::from_fn(20, 13, |_, _| rng.wide_f32().clamp(-1e6, 1e6));
+            let p = PackedTensor::quantize_pack(&m, fmt);
+            let sums = p.block_checksums();
+            assert_eq!(sums.len(), p.brows * p.bcols);
+            assert!(p.verify_block_checksums(&sums).is_ok(), "{fmt:?} clean tensor");
+
+            // flip one code bit: exactly that block is named
+            let mut flipped = p.clone();
+            let t = rng.below((flipped.brows * flipped.bcols) as u64) as usize;
+            let lane = t * SQ + rng.below(SQ as u64) as usize;
+            flipped.lanes[lane] ^= 1u64 << rng.below(u64::BITS as u64 - 1);
+            let err = flipped.verify_block_checksums(&sums).unwrap_err();
+            assert_eq!(
+                err,
+                BlockCorruption::Block { brow: t / p.bcols, bcol: t % p.bcols },
+                "{fmt:?}"
+            );
+
+            // flip a scale bit: the shared exponent is covered too
+            let mut scaled = p.clone();
+            scaled.scales[t] ^= 1;
+            let err = scaled.verify_block_checksums(&sums).unwrap_err();
+            assert_eq!(err, BlockCorruption::Block { brow: t / p.bcols, bcol: t % p.bcols });
+
+            // wrong-length recording is a shape error, not a block blame
+            assert!(matches!(
+                p.verify_block_checksums(&sums[1..]),
+                Err(BlockCorruption::ShapeMismatch { .. })
+            ));
         }
     }
 

@@ -24,6 +24,7 @@
 
 #![forbid(unsafe_code)]
 
+use crate::chaos::{ExecFault, FaultClass, FaultPlan};
 use crate::fleet::scheduler::FleetSession;
 use crate::fleet::spec::SessionSpec;
 use crate::serve::admission::{AdmitDecision, Admission, LoadSnapshot, SessionOffer};
@@ -51,11 +52,16 @@ pub struct ServeConfig {
     pub lease_quanta: usize,
     /// Checkpoint store for lease eviction / re-admission.
     pub store: Option<Arc<CheckpointStore>>,
+    /// Deterministic fault plan (chaos runs only). An executor-class
+    /// plan requires `store`: faulted sessions are checkpointed at
+    /// admission and re-admitted from that checkpoint after the
+    /// injected crash/panic. `None` adds zero work anywhere.
+    pub chaos: Option<FaultPlan>,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 0, quantum: 8, capacity: 64, lease_quanta: 0, store: None }
+        Self { workers: 0, quantum: 8, capacity: 64, lease_quanta: 0, store: None, chaos: None }
     }
 }
 
@@ -163,6 +169,11 @@ struct Shared {
     completed: Mutex<Vec<FleetSession>>,
     /// Lease-evicted sessions, as resumable specs, awaiting re-admission.
     evicted: Mutex<Vec<SessionSpec>>,
+    /// Sessions a chaos fault destroyed, as specs resuming from their
+    /// admission checkpoint, awaiting re-admission.
+    recovered: Mutex<Vec<SessionSpec>>,
+    /// Ids whose planned chaos fault already fired (once per session).
+    chaos_hit: Mutex<std::collections::BTreeSet<String>>,
     /// Sessions lost to an eviction-save failure (still accounted).
     failed: Mutex<Vec<(String, ServeError)>>,
     steals: AtomicUsize,
@@ -193,6 +204,30 @@ fn worker_loop(w: usize, shared: &Shared, cfg: &ServeConfig) -> Vec<f64> {
             continue;
         };
         shared.queued.fetch_sub(1, Ordering::Relaxed);
+        // chaos seam: a planned executor fault fires once per session
+        // id, before its quantum (plan-gated — `chaos: None` skips all
+        // of this, the zero-overhead contract `tests/chaos.rs` pins)
+        if let (Some(plan), Some(store)) = (&cfg.chaos, &cfg.store) {
+            if let Some(fault) = plan.executor_fault(&slot.session.id) {
+                if lock(&shared.chaos_hit).insert(slot.session.id.clone()) {
+                    if matches!(fault, ExecFault::SessionPanic) {
+                        // injected and caught right here: the worker
+                        // survives the unwind, the session does not
+                        let id = slot.session.id.clone();
+                        let caught = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| crate::chaos::inject_panic(&id)),
+                        );
+                        debug_assert!(caught.is_err());
+                    }
+                    // crash and panic cost the same: the in-memory
+                    // session is gone; hand back a spec resuming from
+                    // the admission checkpoint for re-admission
+                    lock(&shared.recovered).push(slot.session.crash_respec(store));
+                    shared.live.fetch_sub(1, Ordering::Release);
+                    continue;
+                }
+            }
+        }
         let t0 = Instant::now();
         let ran = slot.session.run_quantum(cfg.quantum);
         if ran > 0 {
@@ -233,8 +268,9 @@ fn worker_loop(w: usize, shared: &Shared, cfg: &ServeConfig) -> Vec<f64> {
 }
 
 /// Aggregate outcome counters of one serve run. The accounting
-/// identity `offered + re_admitted == completed + shed + evicted`
-/// (with `shed = shed_overloaded + refused + failed`) is what the
+/// identity `offered + re_admitted == completed + shed + evicted +
+/// recovered` (with `shed = shed_overloaded + refused + failed`; both
+/// `evicted` and `recovered` feed `re_admitted`) is what the
 /// zero-lost-sessions CI gate checks.
 #[derive(Debug, Clone, Default)]
 pub struct ServeStats {
@@ -252,6 +288,9 @@ pub struct ServeStats {
     pub failed: usize,
     /// Lease evictions (each produces one re-admission attempt).
     pub evicted: usize,
+    /// Sessions destroyed by an injected chaos fault and handed back
+    /// for re-admission from their checkpoint (chaos runs only).
+    pub recovered: usize,
     /// Evicted sessions admitted back in.
     pub re_admitted: usize,
     /// Most arrivals parked at once.
@@ -320,6 +359,13 @@ pub fn serve<S: ArrivalStream>(
             reason: "lease eviction (lease_quanta > 0) requires a checkpoint store".into(),
         });
     }
+    if let Some(plan) = &cfg.chaos {
+        if plan.covers(FaultClass::Executor) && cfg.store.is_none() {
+            return Err(ServeError::Config {
+                reason: "executor-class chaos requires a checkpoint store to recover from".into(),
+            });
+        }
+    }
     let workers = if cfg.workers == 0 { par::threads() } else { cfg.workers };
     let shared = Shared {
         injector: Mutex::new(Injector::new()),
@@ -329,6 +375,8 @@ pub fn serve<S: ArrivalStream>(
         closed: AtomicBool::new(false),
         completed: Mutex::new(Vec::new()),
         evicted: Mutex::new(Vec::new()),
+        recovered: Mutex::new(Vec::new()),
+        chaos_hit: Mutex::new(std::collections::BTreeSet::new()),
         failed: Mutex::new(Vec::new()),
         steals: AtomicUsize::new(0),
         steps: AtomicUsize::new(0),
@@ -359,6 +407,26 @@ pub fn serve<S: ArrivalStream>(
             match admission.admit(&arrival.offer, &load) {
                 AdmitDecision::Admit => match arrival.spec.build() {
                     Ok(session) => {
+                        // chaos admission checkpoint: a session the
+                        // plan will fault needs a recovery base in the
+                        // store *before* its first quantum (`chaos:
+                        // None` never reaches the save)
+                        if !re_admission {
+                            if let (Some(plan), Some(store)) = (&cfg.chaos, &cfg.store) {
+                                if plan.executor_fault(&session.id).is_some() {
+                                    let ck = session.session().save_checkpoint();
+                                    if let Err(e) = store.save(&session.id, &ck) {
+                                        stats.failed += 1;
+                                        let id = session.id.clone();
+                                        shed.push((
+                                            id.clone(),
+                                            ServeError::Train { id, source: e.into() },
+                                        ));
+                                        return;
+                                    }
+                                }
+                            }
+                        }
                         shared.live.fetch_add(1, Ordering::Release);
                         shared.queued.fetch_add(1, Ordering::Relaxed);
                         lock(&shared.injector).push(Slot { session, quanta: 0 });
@@ -414,6 +482,18 @@ pub fn serve<S: ArrivalStream>(
                 };
                 admit_one(Arrival { offer, spec }, true, &mut parked, &mut shed, &mut stats);
             }
+            // 1a. sessions an injected fault destroyed come back as
+            //     specs resuming from their admission checkpoint
+            let crashed: Vec<SessionSpec> = std::mem::take(&mut *lock(&shared.recovered));
+            for spec in crashed {
+                stats.recovered += 1;
+                let offer = SessionOffer {
+                    id: spec.id.clone(),
+                    priority: spec.priority,
+                    budget_steps: spec.budget.max_steps,
+                };
+                admit_one(Arrival { offer, spec }, true, &mut parked, &mut shed, &mut stats);
+            }
             // 2. parked arrivals drain in FIFO order while capacity lasts
             while let Some(front) = parked.front() {
                 let load = snapshot(parked.len().saturating_sub(1));
@@ -443,6 +523,7 @@ pub fn serve<S: ArrivalStream>(
                 && parked.is_empty()
                 && shared.live.load(Ordering::Acquire) == 0
                 && lock(&shared.evicted).is_empty()
+                && lock(&shared.recovered).is_empty()
             {
                 break;
             }

@@ -72,6 +72,10 @@ pub struct LoadSpec {
     pub twin_every: usize,
     /// Checkpoint persistence for lease eviction.
     pub store: Option<StoreSpec>,
+    /// Deterministic fault plan (`mxscale serve --chaos`). Executor
+    /// faults require `store`; the twin check must still come back
+    /// clean — recovery is bit-exact or it is a failure.
+    pub chaos: Option<crate::chaos::FaultPlan>,
     pub seed: u64,
 }
 
@@ -98,6 +102,7 @@ impl Default for LoadSpec {
             backend: BackendKind::Fast,
             twin_every: 97,
             store: None,
+            chaos: None,
             seed: 0x5EDF00D,
         }
     }
@@ -221,6 +226,7 @@ pub fn run_load(spec: &LoadSpec) -> Result<LoadOutcome, ServeError> {
         capacity: spec.capacity,
         lease_quanta: spec.lease_quanta,
         store: store.clone(),
+        chaos: spec.chaos.clone(),
     };
     let admission = BudgetAware { max_parked: spec.max_parked };
     let stream = LoadStream { spec, datasets: &datasets, store, next: 0 };
@@ -301,6 +307,7 @@ pub fn bench_json(spec: &LoadSpec, out: &LoadOutcome) -> Json {
         .set("sessions_lost", out.lost)
         .set("sessions_duplicated", out.duplicated)
         .set("sessions_evicted", out.stats.evicted)
+        .set("sessions_recovered", out.stats.recovered)
         .set("sessions_re_admitted", out.stats.re_admitted)
         .set("parked_peak", out.stats.parked_peak)
         .set("parked_errors", out.stats.parked_errors)

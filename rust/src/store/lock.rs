@@ -12,13 +12,64 @@
 //! caller-chosen timeout, then fails with
 //! [`crate::store::StoreError::LockHeld`] — a structured error the
 //! fleet can surface or retry on, never a deadlock.
+//!
+//! **Staleness takeover:** each lock object records its birth time (a
+//! backend-portable mtime equivalent — the `Storage` trait has no
+//! metadata surface, so the stamp rides in the lock bytes). A writer
+//! that crashes between `try_create` and release leaves its lock
+//! behind, and every later [`StoreLock::acquire`] would park in
+//! `LockHeld` retries forever. [`StoreLock::acquire_with_staleness`]
+//! breaks a lock whose recorded birth is older than `stale_after`
+//! (erase + re-`try_create`; the create is atomic, so exactly one
+//! contender wins the broken lock). Shard appends use it with
+//! [`STALE_LOCK_AFTER`] — far above any real append, so a live writer
+//! is never robbed, only a presumed-crashed one. Legacy or unparseable
+//! lock bytes are never broken (conservative: no stamp, no takeover),
+//! and plain [`StoreLock::acquire`] keeps the strict no-takeover
+//! semantics for callers that prefer an explicit `LockHeld`.
 
 #![forbid(unsafe_code)]
 
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
 use super::{Storage, StoreError};
+
+/// Identifies a lock object (and versions its byte layout: prefix then
+/// a 64-bit little-endian unix-nanos birth stamp).
+const LOCK_PREFIX: &[u8] = b"mxscale-store-lock";
+
+/// How old a lock must be before [`StoreLock::acquire_with_staleness`]
+/// presumes its writer crashed. One shard append holds the lock for
+/// milliseconds; a minute-old lock means the holder died between
+/// `try_create` and release.
+pub const STALE_LOCK_AFTER: Duration = Duration::from_secs(60);
+
+/// Lock-object bytes recording `birth` as the holder's start time.
+/// `pub(crate)` so the chaos layer can forge a crashed writer's lock.
+pub(crate) fn stamped_lock_bytes(birth: SystemTime) -> Vec<u8> {
+    let nanos = birth.duration_since(UNIX_EPOCH).map(|d| d.as_nanos() as u64).unwrap_or(0);
+    let mut bytes = LOCK_PREFIX.to_vec();
+    bytes.extend_from_slice(&nanos.to_le_bytes());
+    bytes
+}
+
+/// Parse a lock object's birth stamp. `None` for legacy/foreign bytes —
+/// those locks are never broken.
+fn lock_birth_nanos(bytes: &[u8]) -> Option<u64> {
+    let stamp = bytes.strip_prefix(LOCK_PREFIX)?;
+    let stamp: [u8; std::mem::size_of::<u64>()] = stamp.try_into().ok()?;
+    Some(u64::from_le_bytes(stamp))
+}
+
+/// Age of the lock described by `bytes` at wall-clock `now`. `None`
+/// when the bytes carry no stamp (or the clock predates the stamp —
+/// skew reads as "not stale", never as instant takeover).
+fn lock_age(bytes: &[u8], now: SystemTime) -> Option<Duration> {
+    let birth = lock_birth_nanos(bytes)?;
+    let now_nanos = now.duration_since(UNIX_EPOCH).map(|d| d.as_nanos() as u64).unwrap_or(0);
+    Some(Duration::from_nanos(now_nanos.checked_sub(birth)?))
+}
 
 /// RAII advisory lock over a [`Storage`] object. Dropping the guard
 /// releases the lock (best-effort; [`StoreLock::release`] reports the
@@ -30,17 +81,63 @@ pub struct StoreLock {
 }
 
 impl StoreLock {
-    /// Acquire `key` within `timeout`, spinning with backoff.
+    /// Acquire `key` within `timeout`, spinning with backoff. Never
+    /// breaks an existing lock — a crashed holder surfaces as
+    /// [`StoreError::LockHeld`] (see
+    /// [`StoreLock::acquire_with_staleness`] for the takeover path).
     pub fn acquire(
         store: Arc<dyn Storage>,
         key: &str,
         timeout: Duration,
     ) -> Result<Self, StoreError> {
+        Self::spin_acquire(store, key, timeout, None)
+    }
+
+    /// Acquire `key` within `timeout`, breaking any existing lock whose
+    /// recorded birth stamp is older than `stale_after` (a crashed
+    /// writer's leftover). The break is erase-then-`try_create`; the
+    /// create is atomic, so concurrent contenders race fairly and
+    /// exactly one wins. This is advisory best-effort: a holder that is
+    /// merely *slower* than `stale_after` can be robbed, which is why
+    /// the shard path uses [`STALE_LOCK_AFTER`] — orders of magnitude
+    /// above a real append.
+    pub fn acquire_with_staleness(
+        store: Arc<dyn Storage>,
+        key: &str,
+        timeout: Duration,
+        stale_after: Duration,
+    ) -> Result<Self, StoreError> {
+        Self::spin_acquire(store, key, timeout, Some(stale_after))
+    }
+
+    fn spin_acquire(
+        store: Arc<dyn Storage>,
+        key: &str,
+        timeout: Duration,
+        stale_after: Option<Duration>,
+    ) -> Result<Self, StoreError> {
         let start = Instant::now();
         let mut backoff = Duration::from_millis(1);
         loop {
-            if store.try_create(key, b"mxscale-store-lock")? {
+            if store.try_create(key, &stamped_lock_bytes(SystemTime::now()))? {
                 return Ok(Self { store, key: key.to_string(), held: true });
+            }
+            if let Some(stale_after) = stale_after {
+                // the holder may release between our try_create and
+                // this read — a vanished lock just means retry
+                let held = match store.get(key) {
+                    Ok(bytes) => Some(bytes),
+                    Err(StoreError::MissingChunk { .. }) => None,
+                    Err(e) => return Err(e),
+                };
+                let stale = held
+                    .as_deref()
+                    .and_then(|b| lock_age(b, SystemTime::now()))
+                    .is_some_and(|age| age > stale_after);
+                if stale {
+                    store.erase(key)?;
+                    continue; // race the other contenders for the create
+                }
             }
             if start.elapsed() >= timeout {
                 return Err(StoreError::LockHeld { key: key.to_string() });
@@ -99,5 +196,67 @@ mod tests {
         std::thread::sleep(Duration::from_millis(10));
         drop(lock);
         waiter.join().expect("waiter thread").expect("acquire after drop").unwrap();
+    }
+
+    /// A writer that crashed an hour ago left this lock behind.
+    fn crashed_writer_lock(store: &dyn Storage, key: &str) {
+        let birth = SystemTime::now() - Duration::from_secs(3600);
+        assert!(store.try_create(key, &stamped_lock_bytes(birth)).unwrap());
+    }
+
+    #[test]
+    fn crash_then_reacquire_breaks_the_stale_lock() {
+        let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+        crashed_writer_lock(store.as_ref(), "c.lock");
+        // strict acquire still parks — the takeover is opt-in
+        let strict = StoreLock::acquire(store.clone(), "c.lock", Duration::from_millis(20));
+        assert!(matches!(strict, Err(StoreError::LockHeld { .. })));
+        // staleness-aware acquire breaks it without waiting out retries
+        let lock = StoreLock::acquire_with_staleness(
+            store.clone(),
+            "c.lock",
+            Duration::from_millis(50),
+            STALE_LOCK_AFTER,
+        )
+        .expect("stale lock must be broken, not parked behind");
+        lock.release().unwrap();
+        assert!(!store.exists("c.lock").unwrap());
+    }
+
+    #[test]
+    fn fresh_and_unparseable_locks_are_never_broken() {
+        let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+        // a *live* holder's lock (fresh stamp) survives the takeover path
+        let holder =
+            StoreLock::acquire(store.clone(), "f.lock", Duration::from_millis(50)).unwrap();
+        let r = StoreLock::acquire_with_staleness(
+            store.clone(),
+            "f.lock",
+            Duration::from_millis(20),
+            STALE_LOCK_AFTER,
+        );
+        assert!(matches!(r, Err(StoreError::LockHeld { .. })), "fresh lock robbed");
+        drop(holder);
+        // legacy bytes (no stamp) are conservative: held, never broken
+        assert!(store.try_create("legacy.lock", b"mxscale-store-lock").unwrap());
+        let r = StoreLock::acquire_with_staleness(
+            store.clone(),
+            "legacy.lock",
+            Duration::from_millis(20),
+            Duration::ZERO,
+        );
+        assert!(matches!(r, Err(StoreError::LockHeld { .. })), "unstamped lock broken");
+    }
+
+    #[test]
+    fn lock_bytes_round_trip_their_birth_stamp() {
+        let birth = UNIX_EPOCH + Duration::from_secs(1_000_000);
+        let bytes = stamped_lock_bytes(birth);
+        let now = birth + Duration::from_secs(90);
+        assert_eq!(lock_age(&bytes, now), Some(Duration::from_secs(90)));
+        assert_eq!(lock_age(b"mxscale-store-lock", now), None, "legacy bytes have no age");
+        assert_eq!(lock_age(b"something-else", now), None);
+        // clock skew (now before birth) reads as not-stale, not as 0-age
+        assert_eq!(lock_age(&bytes, birth - Duration::from_secs(1)), None);
     }
 }

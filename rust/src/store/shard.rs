@@ -209,7 +209,15 @@ pub fn append_chunks(
             });
         }
     }
-    let lock = StoreLock::acquire(store.clone(), &format!("{shard}.lock"), lock_timeout)?;
+    // staleness-aware: a writer that crashed mid-append must not park
+    // every later writer in LockHeld retries forever (chaos class
+    // `StaleLock`); a minute-old lock is presumed crashed and broken
+    let lock = StoreLock::acquire_with_staleness(
+        store.clone(),
+        &format!("{shard}.lock"),
+        lock_timeout,
+        super::lock::STALE_LOCK_AFTER,
+    )?;
     let old = match read_index(store.as_ref(), shard) {
         Ok(entries) => entries,
         Err(StoreError::MissingChunk { .. }) => Vec::new(),

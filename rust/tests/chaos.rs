@@ -1,0 +1,389 @@
+//! Chaos conformance suite (DESIGN.md §13): every injected fault must
+//! end in exactly one of two outcomes — a structured error naming the
+//! fault site, or a recovery proven bitwise identical to the fault-free
+//! twin. A third outcome (silently wrong state) is a test failure.
+//!
+//! Coverage grid:
+//! * memory faults (`inject_lane_flip`, `inject_scale_flip`) × all six
+//!   OCP element formats;
+//! * storage faults (`inject_shard_truncate`, `inject_chunk_flip`,
+//!   `inject_stale_lock`) against checkpoints written by all three
+//!   backends (fast / hw / packed);
+//! * executor faults (`inject_panic`, worker crash) through the serving
+//!   front-end across formats and backends;
+//! * a null test: a plan that attacks nothing changes nothing.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mxscale::backend::BackendKind;
+use mxscale::chaos::memory::packed_image;
+use mxscale::chaos::storage::{assemble_from_generation, read_live_chunk};
+use mxscale::chaos::{
+    inject_chunk_flip, inject_shard_truncate, inject_stale_lock, prove_bit_identical,
+    recover_generations, ChaosError, ExecFault, FaultClass, FaultOutcome, FaultPlan,
+    GuardedTensor,
+};
+use mxscale::fleet::SessionSpec;
+use mxscale::mx::ALL_ELEMENT_FORMATS;
+use mxscale::serve::{serve, Arrival, BudgetAware, ServeConfig, SessionOffer};
+use mxscale::store::shard::{append_chunks, read_index};
+use mxscale::store::{chunk, CheckpointStore, MemoryStore, Storage, StoreError, StoreLayout};
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::{TrainConfig, TrainSession};
+use mxscale::util::mat::Mat;
+use mxscale::util::rng::Pcg64;
+use mxscale::workloads::{by_name, Dataset};
+
+const LOCK_T: Duration = Duration::from_secs(2);
+
+fn dataset(seed: u64) -> Dataset {
+    let env = by_name("cartpole").unwrap();
+    Dataset::collect(env.as_ref(), 2, 20, seed)
+}
+
+fn config(scheme: QuantScheme, backend: BackendKind, steps: usize, seed: u64) -> TrainConfig {
+    TrainConfig {
+        scheme,
+        backend,
+        dims: Some(vec![32, 8, 32]),
+        steps,
+        batch_size: 8,
+        eval_every: usize::MAX,
+        seed,
+        ..Default::default()
+    }
+}
+
+// ---------------------------------------------------------------- memory
+
+#[test]
+fn memory_faults_detect_the_exact_block_for_every_format() {
+    let mut rng = Pcg64::new(0xC4A05);
+    for (layer, &format) in ALL_ELEMENT_FORMATS.iter().enumerate() {
+        let master = Mat::from_fn(19, 13, |_, _| rng.wide_f32());
+        // null: an untouched tensor verifies clean
+        let mut guarded = GuardedTensor::quantize(layer, &master, format);
+        assert!(guarded.verify().is_ok(), "{format:?}: pristine tensor failed verify");
+
+        // lane flip: detection must name this layer and this block
+        guarded.inject_lane_flip(1, 0, 3, 17);
+        match guarded.verify() {
+            Err(ChaosError::BlockCorrupt { layer: l, brow, bcol }) => {
+                assert_eq!((l, brow, bcol), (layer, 1, 0), "{format:?}: wrong site");
+            }
+            other => panic!("{format:?}: lane flip not detected as BlockCorrupt: {other:?}"),
+        }
+
+        // scale flip on a different block: same contract
+        let mut guarded = GuardedTensor::quantize(layer, &master, format);
+        guarded.inject_scale_flip(0, 1, 6);
+        match guarded.verify() {
+            Err(ChaosError::BlockCorrupt { layer: l, brow, bcol }) => {
+                assert_eq!((l, brow, bcol), (layer, 0, 1), "{format:?}: wrong site");
+            }
+            other => panic!("{format:?}: scale flip not detected as BlockCorrupt: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn memory_recovery_is_bit_identical_for_every_format() {
+    let mut rng = Pcg64::new(0x5EED);
+    for (layer, &format) in ALL_ELEMENT_FORMATS.iter().enumerate() {
+        let master = Mat::from_fn(17, 23, |_, _| rng.wide_f32());
+        let mut guarded = GuardedTensor::quantize(layer, &master, format);
+        let pristine = packed_image(guarded.packed());
+        guarded.inject_lane_flip(0, 2, 5, 41);
+        guarded.inject_scale_flip(1, 1, 2);
+        assert!(guarded.verify().is_err(), "{format:?}: double fault not detected");
+        // recovery re-quantizes from the FP32 master; fq∘fq == fq makes
+        // the repaired image equal the never-corrupted one byte for byte
+        match guarded.recover() {
+            Ok(FaultOutcome::Recovered { site, proof }) => {
+                assert!(site.contains(&format!("layer {layer}")), "{format:?}: site `{site}`");
+                assert_eq!(proof.bytes_compared(), pristine.len(), "{format:?}");
+            }
+            other => panic!("{format:?}: recovery failed: {other:?}"),
+        }
+        prove_bit_identical("post-recovery image", &packed_image(guarded.packed()), &pristine)
+            .unwrap_or_else(|e| panic!("{format:?}: {e}"));
+    }
+}
+
+// --------------------------------------------------------------- storage
+
+/// Write two checkpoint generations of one training session into a
+/// fresh in-memory shard; returns (store, shard, id, ck1_bytes,
+/// gen1_end, gen2_end).
+fn two_checkpoint_generations(
+    backend: BackendKind,
+    scheme: QuantScheme,
+    seed: u64,
+) -> (Arc<dyn Storage>, String, String, Vec<u8>, usize, usize) {
+    let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+    let shard = "chaos-0.mxshard".to_string();
+    let id = "t-chaos".to_string();
+    let mut session = TrainSession::try_new(dataset(seed), config(scheme, backend, 8, seed))
+        .expect("session builds");
+    let ck1 = session.save_checkpoint();
+    let chunks1: Vec<(String, Vec<u8>)> = chunk::split_checkpoint(&ck1)
+        .into_iter()
+        .map(|(leaf, bytes)| (format!("{id}/{leaf}"), bytes))
+        .collect();
+    append_chunks(&store, &shard, &chunks1, LOCK_T).unwrap();
+    let gen1_end = store.size(&shard).unwrap() as usize;
+    for _ in 0..3 {
+        session.step_once();
+    }
+    let ck2 = session.save_checkpoint();
+    let chunks2: Vec<(String, Vec<u8>)> = chunk::split_checkpoint(&ck2)
+        .into_iter()
+        .map(|(leaf, bytes)| (format!("{id}/{leaf}"), bytes))
+        .collect();
+    append_chunks(&store, &shard, &chunks2, LOCK_T).unwrap();
+    let gen2_end = store.size(&shard).unwrap() as usize;
+    (store, shard, id, ck1.to_bytes(), gen1_end, gen2_end)
+}
+
+#[test]
+fn torn_append_detects_then_recovers_for_every_backend() {
+    for (i, backend) in [BackendKind::Fast, BackendKind::Hardware, BackendKind::Packed]
+        .into_iter()
+        .enumerate()
+    {
+        let scheme = QuantScheme::MxSquare(ALL_ELEMENT_FORMATS[i % ALL_ELEMENT_FORMATS.len()]);
+        let (store, shard, id, ck1_bytes, gen1_end, gen2_end) =
+            two_checkpoint_generations(backend, scheme, 100 + i as u64);
+        // shear the second append short of its commit point
+        inject_shard_truncate(store.as_ref(), &shard, gen2_end - 5).unwrap();
+        // detection: the live reader fails structured, naming the shard
+        match read_index(store.as_ref(), &shard) {
+            Err(StoreError::BadIndex { key, .. }) => assert_eq!(key, shard, "{backend:?}"),
+            other => panic!("{backend:?}: torn shard read gave {other:?}"),
+        }
+        // recovery: the previous generation's commit point survives as
+        // dead bytes; the rebuilt checkpoint is bitwise checkpoint 1
+        let gens = recover_generations(store.as_ref(), &shard).unwrap();
+        assert_eq!(gens[0].end as usize, gen1_end, "{backend:?}: newest surviving generation");
+        let recovered = assemble_from_generation(store.as_ref(), &shard, &gens[0], &id)
+            .unwrap_or_else(|e| panic!("{backend:?}: {e}"));
+        prove_bit_identical("recovered checkpoint", &recovered.to_bytes(), &ck1_bytes)
+            .unwrap_or_else(|e| panic!("{backend:?}: {e}"));
+        // truncating past every commit point leaves nothing — and says so
+        inject_shard_truncate(store.as_ref(), &shard, 8).unwrap();
+        assert!(recover_generations(store.as_ref(), &shard).unwrap().is_empty(), "{backend:?}");
+    }
+}
+
+#[test]
+fn chunk_bit_rot_detects_with_the_exact_key_then_recovers() {
+    let scheme = QuantScheme::MxSquare(ALL_ELEMENT_FORMATS[0]);
+    let (store, shard, id, ck1_bytes, gen1_end, gen2_end) =
+        two_checkpoint_generations(BackendKind::Fast, scheme, 7);
+    // rot one byte inside generation 2's chunk region
+    let offset = gen1_end + (gen2_end - gen1_end) / 3;
+    inject_chunk_flip(store.as_ref(), &shard, offset, 4).unwrap();
+    // detection: either a chunk checksum trips (rot hit a chunk) or the
+    // index/trailer fails (rot hit the commit structures) — both are
+    // structured and both name their site
+    let index = read_index(store.as_ref(), &shard);
+    match index {
+        Ok(entries) => {
+            let leaves: Vec<&str> =
+                entries.iter().map(|e| e.key.as_str()).filter(|k| k.starts_with(&id)).collect();
+            let hit = leaves.iter().find(|key| {
+                matches!(
+                    read_live_chunk(store.as_ref(), &shard, key),
+                    Err(ChaosError::Store { source: StoreError::ChecksumMismatch { .. }, .. })
+                )
+            });
+            assert!(hit.is_some(), "flipped byte at {offset} went undetected");
+        }
+        Err(StoreError::BadIndex { key, .. }) => assert_eq!(key, shard),
+        Err(other) => panic!("unexpected detection shape: {other:?}"),
+    }
+    // recovery: generation 1 predates the rot entirely
+    let gens = recover_generations(store.as_ref(), &shard).unwrap();
+    let gen1 = gens.iter().find(|g| g.end as usize == gen1_end).expect("gen1 survives rot");
+    let recovered = assemble_from_generation(store.as_ref(), &shard, gen1, &id).unwrap();
+    prove_bit_identical("post-rot rebuild", &recovered.to_bytes(), &ck1_bytes).unwrap();
+}
+
+#[test]
+fn stale_lock_from_a_crashed_writer_is_broken_and_writes_proceed() {
+    let scheme = QuantScheme::MxSquare(ALL_ELEMENT_FORMATS[1]);
+    let (store, shard, id, _, _, _) = two_checkpoint_generations(BackendKind::Fast, scheme, 11);
+    // the crashed writer died an hour ago, lock still on disk
+    inject_stale_lock(store.as_ref(), &shard, Duration::from_secs(3600)).unwrap();
+    let probe = vec![(format!("{id}/probe"), b"written past a corpse".to_vec())];
+    append_chunks(&store, &shard, &probe, Duration::from_millis(300))
+        .expect("staleness takeover breaks the dead writer's lock");
+    let read_back = read_live_chunk(store.as_ref(), &shard, &probe[0].0).unwrap();
+    prove_bit_identical("post-takeover chunk", &read_back, &probe[0].1).unwrap();
+    assert!(!store.exists(&format!("{shard}.lock")).unwrap(), "takeover lock released");
+}
+
+// -------------------------------------------------------------- executor
+
+#[test]
+fn injected_panic_is_catchable_and_names_the_session() {
+    let caught =
+        std::panic::catch_unwind(|| mxscale::chaos::inject_panic("t-blast-radius")).unwrap_err();
+    let message = caught.downcast_ref::<String>().expect("panic payload is a formatted string");
+    assert!(message.contains("t-blast-radius"), "payload `{message}` must name the session");
+}
+
+/// Pick session ids the plan faults / spares, deterministically.
+fn ids_for(plan: &FaultPlan, crashes: usize, panics: usize, spared: usize) -> Vec<String> {
+    let mut ids = Vec::new();
+    let (mut c, mut p, mut s) = (0usize, 0usize, 0usize);
+    for i in 0.. {
+        let id = format!("t-{i:03}");
+        match plan.executor_fault(&id) {
+            Some(ExecFault::WorkerCrash) if c < crashes => c += 1,
+            Some(ExecFault::SessionPanic) if p < panics => p += 1,
+            None if s < spared => s += 1,
+            _ => continue,
+        }
+        ids.push(id);
+        if c == crashes && p == panics && s == spared {
+            return ids;
+        }
+    }
+    unreachable!()
+}
+
+/// Arrival whose spec is a pure function of (id, scheme, backend, seed),
+/// so a bitwise-identical standalone twin can be rebuilt at will.
+fn arrival(id: &str, scheme: QuantScheme, backend: BackendKind, ds: &Dataset) -> Arrival {
+    let seed = 0xFEED ^ id.len() as u64 ^ (id.as_bytes()[id.len() - 1] as u64);
+    Arrival {
+        offer: SessionOffer { id: id.into(), priority: 1, budget_steps: 6 },
+        spec: SessionSpec::new(id, "cartpole", ds.clone(), config(scheme, backend, 6, seed)),
+    }
+}
+
+#[test]
+fn executor_faults_recover_bit_identically_across_formats_and_backends() {
+    let plan = FaultPlan::new(&[FaultClass::Executor], 0xABAD1DEA);
+    let ds = dataset(21);
+    // 2 crashes + 2 panics + 2 bystanders, cycling through all six
+    // element formats; fast and packed backends interleaved (hardware is
+    // exercised by the torn-append grid — here it would dominate runtime)
+    let ids = ids_for(&plan, 2, 2, 2);
+    let arrivals: Vec<Arrival> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let scheme = QuantScheme::MxSquare(ALL_ELEMENT_FORMATS[i % ALL_ELEMENT_FORMATS.len()]);
+            let backend = if i % 2 == 0 { BackendKind::Fast } else { BackendKind::Packed };
+            arrival(id, scheme, backend, &ds)
+        })
+        .collect();
+    let store =
+        Arc::new(CheckpointStore::new(Arc::new(MemoryStore::new()), StoreLayout::Sharded {
+            shards: 2,
+        }));
+    let cfg = ServeConfig {
+        workers: 2,
+        quantum: 2,
+        store: Some(store),
+        chaos: Some(plan.clone()),
+        ..Default::default()
+    };
+    let twins: Vec<Arrival> = ids
+        .iter()
+        .enumerate()
+        .map(|(i, id)| {
+            let scheme = QuantScheme::MxSquare(ALL_ELEMENT_FORMATS[i % ALL_ELEMENT_FORMATS.len()]);
+            let backend = if i % 2 == 0 { BackendKind::Fast } else { BackendKind::Packed };
+            arrival(id, scheme, backend, &ds)
+        })
+        .collect();
+    let served = serve(arrivals.into_iter(), &BudgetAware::default(), &cfg).unwrap();
+    assert_eq!(served.stats.offered, 6);
+    assert_eq!(served.stats.recovered, 4, "both crashes and both panics recovered");
+    assert_eq!(served.stats.re_admitted, 4, "every recovery came back through admission");
+    assert_eq!(served.stats.completed, 6, "every session finished: {:?}", served.stats);
+    assert!(served.shed.is_empty(), "{:?}", served.shed);
+    // the accounting identity holds with the recovery term
+    assert_eq!(
+        served.stats.offered + served.stats.re_admitted,
+        served.stats.completed + served.shed.len() + served.stats.evicted + served.stats.recovered,
+    );
+    for (twin_arrival, id) in twins.into_iter().zip(&ids) {
+        let done = served.completed.iter().find(|s| &s.id == id).expect("completed");
+        assert!(done.error().is_none(), "{id}: {:?}", done.error());
+        let mut twin = twin_arrival.spec.build().unwrap();
+        while twin.run_quantum(cfg.quantum) > 0 {}
+        let (a, b) = (&done.session().train_curve, &twin.session().train_curve);
+        assert_eq!(a.len(), b.len(), "{id}: curve length");
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.0, y.0, "{id}: curve step");
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "{id}: curve diverged after recovery");
+        }
+        assert_eq!(
+            done.session().val_loss().to_bits(),
+            twin.session().val_loss().to_bits(),
+            "{id}: val loss diverged"
+        );
+    }
+}
+
+// ------------------------------------------------------------------ null
+
+#[test]
+fn inert_plan_changes_nothing_and_costs_nothing() {
+    // a memory-only plan gives the executor nothing to do: no admission
+    // checkpoints, no recovery — the run must be bitwise the chaos-free
+    // run, and the store must stay untouched
+    let ds = dataset(33);
+    let ids = ["t-null-a", "t-null-b", "t-null-c"];
+    let build = |_with_chaos: bool| -> Vec<Arrival> {
+        ids.iter()
+            .enumerate()
+            .map(|(i, id)| {
+                let scheme = QuantScheme::MxSquare(ALL_ELEMENT_FORMATS[i]);
+                arrival(id, scheme, BackendKind::Fast, &ds)
+            })
+            .collect()
+    };
+    let store =
+        Arc::new(CheckpointStore::new(Arc::new(MemoryStore::new()), StoreLayout::Plain));
+    let quiet = ServeConfig { workers: 2, quantum: 2, ..Default::default() };
+    let inert = ServeConfig {
+        workers: 2,
+        quantum: 2,
+        store: Some(store.clone()),
+        chaos: Some(FaultPlan::new(&[FaultClass::Memory], 9)),
+        ..Default::default()
+    };
+    let a = serve(build(false).into_iter(), &BudgetAware::default(), &quiet).unwrap();
+    let b = serve(build(true).into_iter(), &BudgetAware::default(), &inert).unwrap();
+    // every discrete counter identical (wall-clock fields excepted)
+    for (name, x, y) in [
+        ("offered", a.stats.offered, b.stats.offered),
+        ("admitted", a.stats.admitted, b.stats.admitted),
+        ("completed", a.stats.completed, b.stats.completed),
+        ("refused", a.stats.refused, b.stats.refused),
+        ("failed", a.stats.failed, b.stats.failed),
+        ("evicted", a.stats.evicted, b.stats.evicted),
+        ("recovered", a.stats.recovered, b.stats.recovered),
+        ("re_admitted", a.stats.re_admitted, b.stats.re_admitted),
+        ("total_steps", a.stats.total_steps, b.stats.total_steps),
+    ] {
+        assert_eq!(x, y, "inert plan perturbed `{name}`");
+    }
+    assert_eq!(b.stats.recovered, 0);
+    assert!(store.sessions().unwrap().is_empty(), "inert plan wrote admission checkpoints");
+    for id in &ids {
+        let x = a.completed.iter().find(|s| &s.id == id).unwrap();
+        let y = b.completed.iter().find(|s| &s.id == id).unwrap();
+        let (cx, cy) = (&x.session().train_curve, &y.session().train_curve);
+        assert_eq!(cx.len(), cy.len(), "{id}");
+        for (p, q) in cx.iter().zip(cy.iter()) {
+            assert_eq!((p.0, p.1.to_bits()), (q.0, q.1.to_bits()), "{id}: curve diverged");
+        }
+    }
+}

@@ -1,0 +1,202 @@
+//! Dependency-free deterministic fuzz harness for the decode surfaces
+//! (DESIGN.md §13): seeded [`Pcg64`] mutations — truncations, bit
+//! flips, byte splices — of shard images and monolithic `.mxckpt`
+//! checkpoint bytes. The contract under mutation:
+//!
+//! * **never panic** — every decoder failure is a structured
+//!   [`StoreError`] or an `Err(String)` from `Checkpoint::from_bytes`;
+//! * **never silently wrong** — when a mutated shard still reads clean,
+//!   every chunk that comes back must be bitwise a value some committed
+//!   generation actually wrote (the mutation landed in dead bytes, or
+//!   sheared the log exactly at an older commit point).
+//!
+//! Each case runs a fixed seed, so a failure here reproduces exactly.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mxscale::chaos::recover_generations;
+use mxscale::store::shard::{append_chunks, read_chunk, read_index};
+use mxscale::store::{MemoryStore, Storage, StoreError};
+use mxscale::trainer::checkpoint::Checkpoint;
+use mxscale::trainer::qat::QuantScheme;
+use mxscale::trainer::session::{TrainConfig, TrainSession};
+use mxscale::util::rng::Pcg64;
+use mxscale::workloads::{by_name, Dataset};
+
+const LOCK_T: Duration = Duration::from_secs(2);
+
+/// One seeded mutation of `bytes`: truncate, flip a few bits, or
+/// overwrite one byte. Returns the mutated copy.
+fn mutate(rng: &mut Pcg64, bytes: &[u8]) -> Vec<u8> {
+    let mut out = bytes.to_vec();
+    match rng.below(3) {
+        0 => {
+            out.truncate(rng.below(bytes.len() as u64 + 1) as usize);
+        }
+        1 => {
+            for _ in 0..=rng.below(4) {
+                let at = rng.below(bytes.len() as u64) as usize;
+                out[at] ^= 1u8 << rng.below(8);
+            }
+        }
+        _ => {
+            let at = rng.below(bytes.len() as u64) as usize;
+            out[at] = rng.below(256) as u8;
+        }
+    }
+    out
+}
+
+fn training_checkpoints(seed: u64) -> (Checkpoint, Checkpoint) {
+    let env = by_name("cartpole").unwrap();
+    let ds = Dataset::collect(env.as_ref(), 2, 20, seed);
+    let config = TrainConfig {
+        scheme: QuantScheme::MxSquare(mxscale::mx::ALL_ELEMENT_FORMATS[0]),
+        dims: Some(vec![32, 8, 32]),
+        batch_size: 8,
+        steps: 6,
+        eval_every: usize::MAX,
+        seed,
+        ..Default::default()
+    };
+    let mut session = TrainSession::try_new(ds, config).unwrap();
+    let ck1 = session.save_checkpoint();
+    for _ in 0..2 {
+        session.step_once();
+    }
+    (ck1, session.save_checkpoint())
+}
+
+#[test]
+fn mutated_shards_read_structured_or_bitwise_committed() {
+    let (ck1, ck2) = training_checkpoints(0xF522);
+    let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+    let gen1: Vec<(String, Vec<u8>)> = mxscale::store::chunk::split_checkpoint(&ck1)
+        .into_iter()
+        .map(|(leaf, bytes)| (format!("t-fuzz/{leaf}"), bytes))
+        .collect();
+    append_chunks(&store, "base.mxshard", &gen1, LOCK_T).unwrap();
+    let gen2: Vec<(String, Vec<u8>)> = mxscale::store::chunk::split_checkpoint(&ck2)
+        .into_iter()
+        .map(|(leaf, bytes)| (format!("t-fuzz/{leaf}"), bytes))
+        .collect();
+    append_chunks(&store, "base.mxshard", &gen2, LOCK_T).unwrap();
+    let pristine = store.get("base.mxshard").unwrap();
+    // every byte string any generation ever committed under each key —
+    // a clean read may legitimately surface an older generation's value
+    // (the mutation sheared the log at an old commit point), but never
+    // bytes nobody wrote
+    let mut committed: BTreeMap<&str, Vec<&[u8]>> = BTreeMap::new();
+    for (key, bytes) in gen1.iter().chain(gen2.iter()) {
+        committed.entry(key).or_default().push(bytes);
+    }
+
+    let mut rng = Pcg64::new(0xDECODE);
+    let (mut clean, mut rejected) = (0usize, 0usize);
+    for case in 0..300u64 {
+        let mutated = mutate(&mut rng, &pristine);
+        store.put("fuzz.mxshard", &mutated).unwrap();
+        // backward recovery scan must also survive arbitrary bytes
+        let generations = recover_generations(store.as_ref(), "fuzz.mxshard").unwrap();
+        assert!(generations.len() <= 2, "case {case}: phantom generation");
+        match read_index(store.as_ref(), "fuzz.mxshard") {
+            Err(StoreError::BadIndex { .. }) => rejected += 1,
+            Err(other) => panic!("case {case}: unstructured index failure {other:?}"),
+            Ok(entries) => {
+                for entry in &entries {
+                    match read_chunk(store.as_ref(), "fuzz.mxshard", entry) {
+                        Err(
+                            StoreError::ChecksumMismatch { .. } | StoreError::BadIndex { .. },
+                        ) => rejected += 1,
+                        Err(other) => {
+                            panic!("case {case}/{}: unstructured {other:?}", entry.key)
+                        }
+                        Ok(bytes) => {
+                            clean += 1;
+                            let wrote = committed.get(entry.key.as_str()).unwrap_or_else(|| {
+                                panic!("case {case}: key `{}` nobody wrote", entry.key)
+                            });
+                            assert!(
+                                wrote.iter().any(|w| *w == bytes.as_slice()),
+                                "case {case}: `{}` read bytes no generation committed",
+                                entry.key
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+    // the corpus must actually exercise both sides of the contract
+    assert!(clean > 0, "no mutation ever left a readable shard");
+    assert!(rejected > 0, "no mutation was ever detected");
+}
+
+#[test]
+fn mutated_checkpoints_parse_structured_or_reencode_canonically() {
+    let (_, ck) = training_checkpoints(0xC0DE);
+    let pristine = ck.to_bytes();
+    assert!(Checkpoint::from_bytes(&pristine).is_ok(), "pristine image parses");
+
+    let mut rng = Pcg64::new(0xF00D);
+    let (mut accepted, mut rejected) = (0usize, 0usize);
+    for case in 0..300u64 {
+        let mutated = mutate(&mut rng, &pristine);
+        // the only acceptable outcomes: a structured Err(String), or a
+        // checkpoint whose canonical re-encode parses again — never a
+        // panic, never a value that can't survive its own round trip
+        match Checkpoint::from_bytes(&mutated) {
+            Err(reason) => {
+                rejected += 1;
+                assert!(!reason.is_empty(), "case {case}: empty decode error");
+            }
+            Ok(decoded) => {
+                accepted += 1;
+                let reencoded = decoded.to_bytes();
+                let twice = Checkpoint::from_bytes(&reencoded)
+                    .unwrap_or_else(|e| panic!("case {case}: re-encode unparseable: {e}"));
+                assert_eq!(
+                    twice.to_bytes(),
+                    reencoded,
+                    "case {case}: decode/encode not idempotent"
+                );
+            }
+        }
+    }
+    assert_eq!(accepted + rejected, 300);
+    // flips inside f32 payload regions legitimately decode (different
+    // params, still structurally valid) — but structural damage must
+    // show up in the corpus, and so must at least one acceptance
+    assert!(rejected >= 20, "mutations barely ever rejected ({rejected}/300)");
+    assert!(accepted >= 1, "no mutation ever decoded ({accepted}/300)");
+}
+
+#[test]
+fn degenerate_inputs_never_panic() {
+    // the classic fuzz corpus floor: empty, tiny, saturated, random
+    let mut rng = Pcg64::new(7);
+    let mut corpus: Vec<Vec<u8>> = vec![
+        Vec::new(),
+        vec![0u8],
+        b"MXCK".to_vec(),
+        b"MXSH".to_vec(),
+        vec![0u8; 64],
+        vec![0xFF; 256],
+    ];
+    corpus.push((0..512).map(|_| rng.below(256) as u8).collect());
+    let store: Arc<dyn Storage> = Arc::new(MemoryStore::new());
+    for (i, bytes) in corpus.iter().enumerate() {
+        assert!(Checkpoint::from_bytes(bytes).is_err(), "corpus {i} parsed as a checkpoint");
+        store.put("junk.mxshard", bytes).unwrap();
+        match read_index(store.as_ref(), "junk.mxshard") {
+            Err(StoreError::BadIndex { .. }) => {}
+            other => panic!("corpus {i}: {other:?}"),
+        }
+        assert!(
+            recover_generations(store.as_ref(), "junk.mxshard").unwrap().is_empty(),
+            "corpus {i}: generation recovered from junk"
+        );
+    }
+}

@@ -1,6 +1,6 @@
 //! mxlint fixture and self-run tests (DESIGN.md §9).
 //!
-//! Each rule L1–L8 gets a known-bad snippet from `lint_fixtures/` that
+//! Each rule L1–L9 gets a known-bad snippet from `lint_fixtures/` that
 //! must fire, plus a negative case that must not. The self-run tests
 //! then hold the real tree to the same standard: HEAD lints clean, the
 //! committed byte-layout manifest is current (which also cross-checks
@@ -360,6 +360,54 @@ fn l8_accepts_gated_suffixed_kernel_with_tested_twin() {
     assert!(rules::l8(&src, &tests, &no_allow()).is_empty());
 }
 
+// ---------------------------------------------------------------- L9
+
+#[test]
+fn l9_flags_undrilled_ungated_and_planless_seams() {
+    let src = [sf("rust/src/serve/executor.rs", include_str!("lint_fixtures/l9_firing.rs"))];
+    let f = rules::l9(&src, &[], &no_allow());
+    assert_eq!(f.len(), 3, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L9", 4));
+    assert!(
+        f[0].message.contains("`inject_orphan_seam` is not referenced from any test"),
+        "{}",
+        f[0].message
+    );
+    assert_eq!(f[1].line, 4);
+    assert!(f[1].message.contains("outside rust/src/chaos/"), "{}", f[1].message);
+    assert_eq!(f[2].line, 9);
+    assert!(
+        f[2].message.contains("`inject_remote_seam` referenced without `FaultPlan`"),
+        "{}",
+        f[2].message
+    );
+}
+
+#[test]
+fn l9_scopes_the_gating_requirements_to_files_outside_chaos() {
+    let src = [sf("rust/src/chaos/memory.rs", include_str!("lint_fixtures/l9_firing.rs"))];
+    let f = rules::l9(&src, &[], &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L9", 4));
+    assert!(f[0].message.contains("not referenced from any test"), "{}", f[0].message);
+}
+
+#[test]
+fn l9_still_requires_a_drill_for_gated_plan_aware_seams() {
+    let src = [sf("rust/src/serve/executor.rs", include_str!("lint_fixtures/l9_clean.rs"))];
+    let f = rules::l9(&src, &[], &no_allow());
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!((f[0].rule, f[0].line), ("L9", 7));
+    assert!(f[0].message.contains("not referenced from any test"), "{}", f[0].message);
+}
+
+#[test]
+fn l9_accepts_gated_plan_aware_drilled_seams() {
+    let src = [sf("rust/src/serve/executor.rs", include_str!("lint_fixtures/l9_clean.rs"))];
+    let tests = [sf("rust/tests/chaos.rs", "fn t() { inject_gated_seam(1); }")];
+    assert!(rules::l9(&src, &tests, &no_allow()).is_empty());
+}
+
 // ------------------------------------------------------------ self-run
 
 /// HEAD must lint clean under the committed allowlist and manifest —
@@ -417,6 +465,7 @@ fn allowlist_is_exactly_the_reviewed_set() {
             "L6".to_string(),
             vec![
                 "coordinator/cli.rs::cmd_fleet".to_string(),
+                "coordinator/cli.rs::cmd_serve".to_string(),
                 "coordinator/experiments.rs::precision_schedule".to_string(),
             ],
         ),

@@ -1,0 +1,14 @@
+//! L9 fixture: a cfg-gated seam outside the chaos module, in a file
+//! that consults a FaultPlan before firing anything.
+
+pub struct FaultPlan;
+
+#[cfg(any(test, debug_assertions))]
+pub fn inject_gated_seam(x: u64) -> u64 {
+    x ^ 1
+}
+
+pub fn quantum(plan: &FaultPlan, x: u64) -> u64 {
+    let _ = plan;
+    inject_gated_seam(x)
+}

@@ -1,0 +1,10 @@
+//! L9 fixture: an undrilled injection seam outside the chaos module,
+//! plus a seam call in a file that never names a FaultPlan.
+
+pub fn inject_orphan_seam(x: u64) -> u64 {
+    x ^ 1
+}
+
+pub fn quantum(x: u64) -> u64 {
+    inject_remote_seam(x)
+}
